@@ -1,0 +1,140 @@
+//! End-to-end driver: proves all three layers compose on a real
+//! workload (the EXPERIMENTS.md §E2E record).
+//!
+//!     cargo run --release --example e2e_pipeline
+//!
+//! Pipeline exercised:
+//!   1. L3 substrate — generate a web-like instance, compute stats.
+//!   2. L3 coarsening — one SCLaP contraction shrinks it to coarse scale.
+//!   3. L1/L2 via PJRT — the *coarse* graph is clustered by the
+//!      AOT-compiled Pallas/JAX `lpa_round` artifact (the request path
+//!      never touches python), reconciled on the host.
+//!   4. L3 coordinator — the coarse clustering is contracted again and
+//!      the full multilevel partitioner finishes the job; the service
+//!      runs the 10-repetition protocol and reports the paper metrics.
+//!
+//! The run fails loudly if any layer is missing (e.g. artifacts not
+//! built), making it a true integration gate.
+
+use sclap::clustering::label_propagation::{size_constrained_lpa, LpaConfig};
+use sclap::coarsening::contract::contract;
+use sclap::coarsening::hierarchy::l_max;
+use sclap::coordinator::service::{default_seeds, Coordinator};
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::runtime::dense_lpa::offload_sclap;
+use sclap::runtime::pjrt::Runtime;
+use sclap::util::rng::Rng;
+use sclap::util::timer::Timer;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let total = Timer::start();
+    println!("=== sclap end-to-end pipeline ===\n");
+
+    // ---- 1. substrate: a web-like instance ----
+    let mut rng = Rng::new(99);
+    // LFR-style web-crawl stand-in: power-law degrees + strong locality
+    // (mu = 0.08) — see rust/src/generators/lfr.rs for why pure R-MAT
+    // would not exercise the paper's claims.
+    let g = sclap::graph::subgraph::largest_component(
+        &sclap::generators::lfr::lfr_like(60_000, 14.0, 0.08, &mut rng).0,
+    );
+    let stats = sclap::graph::stats::compute_stats(&g, &mut rng);
+    println!("[1] instance: n={} m={} gini={:.2} diam≈{}",
+        stats.n, stats.m, stats.degree_gini, stats.approx_diameter);
+
+    // ---- 2. L3 coarsening: one cluster contraction ----
+    let k = 16;
+    let lmax = l_max(g.total_node_weight(), k, 0.03, g.max_node_weight());
+    let u_coarse = ((lmax as f64) / (18.0 * k as f64)).max(1.0) as i64;
+    let t = Timer::start();
+    let (clustering, _) = size_constrained_lpa(
+        &g,
+        u_coarse.max(g.max_node_weight()),
+        &LpaConfig::default(),
+        None,
+        None,
+        &mut rng,
+    );
+    let level1 = contract(&g, &clustering);
+    println!(
+        "[2] cluster contraction: {} -> {} nodes ({:.0}x) in {:.2}s",
+        g.n(),
+        level1.coarse.n(),
+        g.n() as f64 / level1.coarse.n() as f64,
+        t.elapsed_s()
+    );
+
+    // Keep contracting with the sequential path until the graph fits the
+    // largest AOT artifact (1024 nodes).
+    let mut coarse = level1.coarse.clone();
+    let mut rounds = 0;
+    while coarse.n() > 1024 && rounds < 20 {
+        rounds += 1;
+        let u = (coarse.total_node_weight() / 256).max(coarse.max_node_weight());
+        let (c, _) = size_constrained_lpa(&coarse, u, &LpaConfig::default(), None, None, &mut rng);
+        if c.num_clusters as f64 > 0.98 * coarse.n() as f64 {
+            // stalled: loosen the bound
+            let u2 = u * 4;
+            let (c2, _) =
+                size_constrained_lpa(&coarse, u2, &LpaConfig::default(), None, None, &mut rng);
+            coarse = contract(&coarse, &c2).coarse;
+        } else {
+            coarse = contract(&coarse, &c).coarse;
+        }
+    }
+    println!("    further contracted to n={} m={}", coarse.n(), coarse.m());
+
+    // ---- 3. the PJRT / Pallas layer on the coarse graph ----
+    let mut runtime = Runtime::from_env()
+        .map_err(|e| anyhow::anyhow!("artifacts missing — run `make artifacts` ({e})"))?;
+    println!("[3] PJRT runtime up: platform={}, artifacts to N={}",
+        runtime.platform(), runtime.max_n());
+    let u_dev = (coarse.total_node_weight() / 64).max(coarse.max_node_weight());
+    let t = Timer::start();
+    let (dev_clustering, stats) = offload_sclap(&coarse, u_dev, 10, &mut runtime)?
+        .ok_or_else(|| anyhow::anyhow!("coarse graph larger than artifact capacity"))?;
+    println!(
+        "    offloaded SCLaP: {} clusters, cut {}, {} rounds, {} moves, bound ok: {} ({:.2}s)",
+        dev_clustering.num_clusters,
+        dev_clustering.cut(&coarse),
+        stats.rounds,
+        stats.applied,
+        dev_clustering.respects_bound(u_dev),
+        t.elapsed_s()
+    );
+    assert!(dev_clustering.respects_bound(u_dev), "invariant 7 violated");
+
+    // ---- 4. full system through the coordinator service ----
+    let coordinator = Coordinator::new(0);
+    println!("[4] coordinator: {} workers, 10-repetition protocol", coordinator.worker_count());
+    let shared = Arc::new(g);
+    let t = Timer::start();
+    let agg = coordinator.partition_repeated(
+        shared.clone(),
+        &PartitionConfig::preset(Preset::UFast, k),
+        &default_seeds(10),
+    );
+    let kmetis = coordinator.partition_repeated(
+        shared.clone(),
+        &PartitionConfig::preset(Preset::KMetisLike, k),
+        &default_seeds(10),
+    );
+    println!(
+        "    UFast       : avg cut {:>10.0}  best {:>9}  avg t {:.2}s",
+        agg.avg_cut, agg.best_cut, agg.avg_seconds
+    );
+    println!(
+        "    kMetis-like : avg cut {:>10.0}  best {:>9}  avg t {:.2}s",
+        kmetis.avg_cut, kmetis.best_cut, kmetis.avg_seconds
+    );
+    println!(
+        "    headline    : {:.2}x fewer edges cut (paper uk-2007: 2.6x), wall {:.1}s",
+        kmetis.avg_cut / agg.avg_cut,
+        t.elapsed_s()
+    );
+    assert!(agg.avg_cut < kmetis.avg_cut, "cluster coarsening must win on web graphs");
+
+    println!("\nALL LAYERS COMPOSED OK in {:.1}s", total.elapsed_s());
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: partition a graph with the public API in ~20 lines.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Loads a named benchmark instance (or any METIS/edge-list file via
+//! `sclap::graph::io`), picks a preset, partitions, prints metrics.
+
+use sclap::prelude::*;
+
+fn main() {
+    // 1. Get a graph: a named instance here; `graph::io::load_path` for
+    //    your own files; `GraphBuilder` for programmatic construction.
+    let graph = sclap::generators::instances::by_name("tiny-rmat")
+        .expect("bundled instance")
+        .build();
+    println!("graph: n={} m={}", graph.n(), graph.m());
+
+    // 2. Pick a configuration. Presets mirror the paper's §5.1 ladder:
+    //    UFast = fastest, UEcoV/B ≈ hMetis quality at 10x speed,
+    //    UStrong = best quality.
+    let config = PartitionConfig::preset(Preset::UFast, 8);
+
+    // 3. Partition (seed ⇒ deterministic).
+    let result = MultilevelPartitioner::new(config).partition(&graph, 42);
+
+    println!("cut          : {}", result.metrics.cut);
+    println!("imbalance    : {:.3}", result.metrics.imbalance);
+    println!("feasible     : {}", result.metrics.feasible);
+    println!("levels       : {}", result.levels);
+    println!("coarsest n   : {}", result.coarsest_n);
+    println!("time         : {:.3}s", result.seconds);
+
+    // 4. The partition itself: block id per node.
+    let blocks = &result.partition.blocks;
+    println!("node 0 -> block {}", blocks[0]);
+
+    // 5. Ten-repetition protocol (paper §5) via the coordinator service.
+    let coordinator = sclap::coordinator::Coordinator::new(0);
+    let agg = coordinator.partition_repeated(
+        std::sync::Arc::new(graph),
+        &PartitionConfig::preset(Preset::UFast, 8),
+        &sclap::coordinator::default_seeds(10),
+    );
+    println!(
+        "10 reps: avg cut {:.1}, best cut {}, avg time {:.3}s",
+        agg.avg_cut, agg.best_cut, agg.avg_seconds
+    );
+}

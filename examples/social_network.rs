@@ -1,0 +1,93 @@
+//! Social-network partitioning scenario (the paper's §1 motivation:
+//! distribute a social graph over k processing elements with few
+//! cross-PE friendships).
+//!
+//!     cargo run --release --example social_network [-- --full]
+//!
+//! Builds BA/WS social-network stand-ins, partitions them for a PE grid,
+//! and reports per-block communication volume — including the
+//! comparison the paper draws: cluster coarsening vs matching coarsening
+//! on exactly this graph class.
+
+use sclap::coordinator::service::{default_seeds, Coordinator};
+use sclap::graph::csr::Graph;
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::partitioning::metrics::evaluate;
+use sclap::partitioning::partition::Partition;
+use sclap::util::rng::Rng;
+use std::sync::Arc;
+
+fn communication_volume(g: &Graph, p: &Partition) -> Vec<i64> {
+    // per-block: total weight of edges leaving the block
+    let mut vol = vec![0i64; p.k];
+    for (u, v, w) in g.edges() {
+        let (bu, bv) = (p.block_of(u), p.block_of(v));
+        if bu != bv {
+            vol[bu as usize] += w;
+            vol[bv as usize] += w;
+        }
+    }
+    vol
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let mut rng = Rng::new(2024);
+    let n = if full { 200_000 } else { 20_000 };
+
+    println!("=== scenario: friendship graph (Barabási–Albert, n={n}) ===");
+    let friends = sclap::generators::barabasi_albert(n, 5, &mut rng);
+    println!("n={} m={}", friends.n(), friends.m());
+
+    let coordinator = Coordinator::new(0);
+    let g = Arc::new(friends);
+    let k = 16;
+
+    for preset in [Preset::UFast, Preset::UEcoVB, Preset::KMetisLike, Preset::KaffpaEco] {
+        let agg = coordinator.partition_repeated(
+            g.clone(),
+            &PartitionConfig::preset(preset, k),
+            &default_seeds(3),
+        );
+        let p = Partition::from_blocks(&g, k, agg.best_blocks.clone());
+        let m = evaluate(&g, &p, 0.03);
+        let vol = communication_volume(&g, &p);
+        println!(
+            "{:<12} avg cut {:>9.0}  best {:>8}  time {:>6.2}s  max-PE-traffic {:>7}  imbalance {:.3}",
+            preset.name(),
+            agg.avg_cut,
+            agg.best_cut,
+            agg.avg_seconds,
+            vol.iter().max().unwrap(),
+            m.imbalance,
+        );
+    }
+
+    println!();
+    println!("=== scenario: community structure recovery (planted partition) ===");
+    let (sbm, truth) = sclap::generators::planted_partition(8, if full { 400 } else { 120 }, 0.2, 0.002, &mut rng);
+    println!("n={} m={} (8 planted communities)", sbm.n(), sbm.m());
+    let g = Arc::new(sbm);
+    let agg = coordinator.partition_repeated(
+        g.clone(),
+        &PartitionConfig::preset(Preset::UEcoVB, 8),
+        &default_seeds(3),
+    );
+    // agreement: fraction of node pairs the partition classifies like the truth
+    let p = &agg.best_blocks;
+    let mut rng2 = Rng::new(7);
+    let mut agree = 0usize;
+    let samples = 20_000;
+    for _ in 0..samples {
+        let a = rng2.below(g.n());
+        let b = rng2.below(g.n());
+        if (truth[a] == truth[b]) == (p[a] == p[b]) {
+            agree += 1;
+        }
+    }
+    println!(
+        "best cut {} | pairwise agreement with planted communities: {:.1}%",
+        agg.best_cut,
+        100.0 * agree as f64 / samples as f64
+    );
+}

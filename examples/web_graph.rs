@@ -1,0 +1,65 @@
+//! Huge-web-graph scenario — the paper's §5.2 headline experiment at
+//! container scale (the uk-2007 protocol: k = 16, three LP iterations
+//! during coarsening, UFast vs the kMetis-like baseline).
+//!
+//!     cargo run --release --example web_graph [-- --full]
+//!
+//! `--full` uses the biggest webgraph-sim instance (~10⁷ edges); default
+//! is a 1-minute-scale run. Reports the paper's §5.2 observables: cut
+//! vs kMetis, shrink factor of the first contraction, and whether the
+//! initial partition alone already beats the baseline's final result.
+
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::partitioning::multilevel::MultilevelPartitioner;
+use sclap::util::rng::Rng;
+use sclap::util::timer::Timer;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (n, deg) = if full { (1_000_000, 14.0) } else { (150_000, 12.0) };
+
+    println!("generating webgraph-sim (LFR-style, n={n}, avg deg {deg}, mu=0.06)...");
+    let t = Timer::start();
+    let mut rng = Rng::new(301);
+    let g = sclap::graph::subgraph::largest_component(
+        &sclap::generators::lfr::lfr_like(n, deg, 0.06, &mut rng).0,
+    );
+    println!("n={} m={} (generated in {:.1}s)", g.n(), g.m(), t.elapsed_s());
+
+    let k = 16;
+    // §5.2 protocol: only 3 LP iterations during coarsening on huge graphs.
+    let mut ufast = PartitionConfig::preset(Preset::UFast, k);
+    ufast.lpa_iterations = 3;
+    let mut ufast_v = PartitionConfig::preset(Preset::UFastV, k);
+    ufast_v.lpa_iterations = 3;
+    let kmetis = PartitionConfig::preset(Preset::KMetisLike, k);
+
+    println!("\n{:<12} {:>12} {:>10} {:>8} {:>10} {:>12}", "algorithm", "cut", "t[s]", "levels", "shrink1", "initial cut");
+    let mut rows = Vec::new();
+    for (name, config) in [("UFast", ufast), ("UFastV", ufast_v), ("kMetis-like", kmetis)] {
+        let r = MultilevelPartitioner::new(config).partition(&g, 1);
+        println!(
+            "{name:<12} {:>12} {:>10.2} {:>8} {:>10.1} {:>12}",
+            r.metrics.cut, r.seconds, r.levels, r.first_shrink, r.initial_cut
+        );
+        rows.push((name, r));
+    }
+
+    let ufast_cut = rows[0].1.metrics.cut as f64;
+    let kmetis_cut = rows[2].1.metrics.cut as f64;
+    println!("\npaper §5.2 observables:");
+    println!(
+        "  UFast/kMetis cut ratio : {:.2}x fewer edges cut (paper: ~2.4x on uk-2007)",
+        kmetis_cut / ufast_cut
+    );
+    println!(
+        "  first contraction      : {:.0}x fewer nodes (paper: ~100x)",
+        rows[0].1.first_shrink
+    );
+    println!(
+        "  initial partition already beats kMetis final: {} ({} vs {})",
+        rows[0].1.initial_cut < rows[2].1.metrics.cut,
+        rows[0].1.initial_cut,
+        rows[2].1.metrics.cut
+    );
+}

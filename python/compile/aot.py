@@ -1,0 +1,76 @@
+"""AOT export: lower the L2 model to HLO text for the rust PJRT runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:   cd python && python -m compile.aot --out ../artifacts
+
+Writes one `lpa_r{N}x{C}.hlo.txt` per exported shape plus `manifest.txt`
+(`name n c filename` per line) which the rust artifact registry parses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import lpa_round, lpa_round_spec
+
+# Exported shapes: padded power-of-two rounds for coarse graphs. The
+# rust runtime picks the smallest N >= graph size. C == N because during
+# coarsening every node is a potential cluster.
+SHAPES = [(128, 128), (256, 256), (512, 512), (1024, 1024)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_shape(n: int, c: int, out_dir: str) -> str:
+    lowered = jax.jit(lpa_round).lower(*lpa_round_spec(n, c))
+    text = to_hlo_text(lowered)
+    name = f"lpa_r{n}x{c}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return name
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--shapes",
+        default=None,
+        help="comma-separated NxC list (default: %s)" % SHAPES,
+    )
+    args = parser.parse_args()
+    shapes = SHAPES
+    if args.shapes:
+        shapes = [tuple(map(int, s.split("x"))) for s in args.shapes.split(",")]
+
+    os.makedirs(args.out, exist_ok=True)
+    lines = []
+    for n, c in shapes:
+        name = export_shape(n, c, args.out)
+        lines.append(f"{name} {n} {c} {name}.hlo.txt")
+        print(f"exported {name}")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("# sclap AOT artifact manifest: name n c file\n")
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote manifest with {len(lines)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

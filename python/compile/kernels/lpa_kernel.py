@@ -1,0 +1,143 @@
+"""L1 — Pallas scoring kernel for the dense synchronous SCLaP round.
+
+The hot spot of one label-propagation round over a graph with adjacency
+``A`` (N×N, f32, zero-padded) and one-hot labels ``L`` (N×C) is the
+cluster-connection score matrix
+
+    S = A @ L            # S[v, c] = total edge weight from v into cluster c
+
+which is exactly an MXU-shaped matmul. The paper's CPU implementation
+does this with per-node hash scans; the TPU re-think (DESIGN.md
+§Hardware-Adaptation) tiles A and L into VMEM-resident blocks with
+BlockSpec and accumulates partial products over the K grid axis.
+
+The kernel MUST be lowered with ``interpret=True`` here: the container's
+CPU PJRT cannot execute Mosaic custom-calls. Block shapes are chosen for
+the TPU MXU (128×128 systolic tiles); the §Perf section of
+EXPERIMENTS.md estimates VMEM footprint and MXU utilization from these
+shapes rather than from interpret-mode wallclock.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile edge. All artifact shapes are multiples of 128 (padding
+# is the caller's job); tests exercise smaller odd shapes through the
+# same code path with clamped block sizes.
+DEFAULT_BLOCK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o[i,j] (+)= a[i,k] @ b[k,j].
+
+    The K axis is the innermost sequential grid dimension; the output
+    block is revisited for every k, so we zero it on the first visit and
+    accumulate in place (the classic Pallas reduction pattern — on TPU
+    the block stays resident in VMEM across the K loop).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def scoring_matmul(
+    adj: jax.Array,
+    onehot: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK,
+    block_c: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked S = adj @ onehot via Pallas.
+
+    adj:    f32[N, K]   (square N==K for a full LPA round)
+    onehot: f32[K, C]
+    returns f32[N, C]
+
+    N, K, C need not be multiples of the block sizes; blocks are clamped
+    (Pallas masks the ragged edge in interpret mode and on TPU).
+    """
+    n, k_dim = adj.shape
+    k2, c = onehot.shape
+    assert k_dim == k2, f"inner dims mismatch: {adj.shape} @ {onehot.shape}"
+    bn = min(block_n, n)
+    bc = min(block_c, c)
+    bk = min(block_k, k_dim)
+
+    # Zero-pad ragged shapes up to block multiples: Pallas pads
+    # out-of-bounds *input* tiles with undefined values (NaN in interpret
+    # mode), and padded K-columns would otherwise poison valid outputs
+    # through the accumulation. Explicit zero padding keeps the kernel
+    # branch-free (no masks on the MXU path); artifact shapes are already
+    # multiples so this is a no-op on the AOT path.
+    np_ = -n % bn
+    cp = -c % bc
+    kp = -k_dim % bk
+    a = jnp.pad(adj, ((0, np_), (0, kp))) if (np_ or kp) else adj
+    b = jnp.pad(onehot, ((0, kp), (0, cp))) if (kp or cp) else onehot
+    pn, pk = n + np_, k_dim + kp
+    pc = c + cp
+    grid = (pl.cdiv(pn, bn), pl.cdiv(pc, bc), pl.cdiv(pk, bk))
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bc), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bc), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pn, pc), adj.dtype),
+        interpret=interpret,
+    )(a, b)
+    return out[:n, :c] if (np_ or cp) else out
+
+
+def vmem_footprint_bytes(
+    block_n: int = DEFAULT_BLOCK,
+    block_c: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+    dtype_bytes: int = 4,
+) -> int:
+    """Resident VMEM bytes for one grid step (A-tile + B-tile + O-tile).
+
+    Used by the §Perf analysis: with the default 128³ f32 blocking this
+    is 3 · 128 · 128 · 4 = 192 KiB, far below the ~16 MiB VMEM of a TPU
+    core, leaving room for double buffering (2× the A/B tiles).
+    """
+    return dtype_bytes * (block_n * block_k + block_k * block_c + block_n * block_c)
+
+
+def mxu_utilization_estimate(
+    n: int,
+    c: int,
+    block_n: int = DEFAULT_BLOCK,
+    block_c: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+) -> float:
+    """Fraction of MXU-issue slots doing useful work for an N×N×C score
+    matmul under the given blocking (1.0 = every 128×128×128 MXU pass is
+    full). Ragged edges waste (block - n % block) lanes; for the
+    power-of-two artifact shapes this returns 1.0.
+    """
+    import math
+
+    full = n * n * c
+    padded = (
+        math.ceil(n / block_n) * block_n
+        * math.ceil(n / block_k) * block_k
+        * math.ceil(c / block_c) * block_c
+    )
+    return full / padded

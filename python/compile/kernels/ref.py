@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the Pallas scoring kernel and the LPA round.
+
+Everything here is deliberately naive (no tiling, no fusion tricks): it
+defines *correct* semantics that python/tests/ checks the optimized
+kernel and the AOT-exported model against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def scoring_ref(adj: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    """Reference score matrix: plain jnp matmul."""
+    return jnp.dot(adj, onehot)
+
+
+def lpa_round_ref(adj, labels, sizes, node_w, upper):
+    """Reference dense synchronous SCLaP round (see model.lpa_round).
+
+    Returns (best, gain): for each node the strongest *eligible* cluster
+    (its own cluster always eligible; ties -> lowest cluster id, matching
+    jnp.argmax) and the connection-strength gain vs. staying.
+    """
+    c = sizes.shape[0]
+    onehot = jnp.eye(c, dtype=adj.dtype)[labels]
+    scores = scoring_ref(adj, onehot)
+    eligible = (sizes[None, :] + node_w[:, None]) <= upper
+    eligible = eligible | (onehot > 0)
+    neg = jnp.asarray(jnp.finfo(adj.dtype).min / 2, adj.dtype)
+    masked = jnp.where(eligible, scores, neg)
+    best = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    stay = jnp.take_along_axis(scores, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+    gain = jnp.max(masked, axis=1) - stay
+    return best, gain
+
+
+def lpa_round_numpy(adj, labels, sizes, node_w, upper):
+    """Second, independent oracle in numpy with explicit loops — guards
+    against a systematic mistake shared by the two jnp implementations."""
+    n, _ = adj.shape
+    c = sizes.shape[0]
+    best = np.zeros(n, dtype=np.int32)
+    gain = np.zeros(n, dtype=adj.dtype)
+    for v in range(n):
+        conn = np.zeros(c, dtype=np.float64)
+        for u in range(n):
+            if adj[v, u] != 0.0:
+                conn[labels[u]] += float(adj[v, u])
+        stay = conn[labels[v]]
+        best_c, best_s = None, -np.inf
+        for cc in range(c):
+            ok = cc == labels[v] or (sizes[cc] + node_w[v]) <= upper
+            if not ok:
+                continue
+            if conn[cc] > best_s:
+                best_s, best_c = conn[cc], cc
+        best[v] = best_c
+        gain[v] = best_s - stay
+    return best, gain

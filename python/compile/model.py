@@ -1,0 +1,66 @@
+"""L2 — the dense synchronous SCLaP round as a JAX compute graph.
+
+Composes the L1 Pallas scoring kernel with the eligibility masking +
+argmax of the paper's move rule (§3.1):
+
+    move v to the eligible cluster with the strongest connection,
+
+where *eligible* means the target stays within the size bound U (a
+node's own cluster is always eligible — staying is legal). The
+sequential-vs-synchronous adaptation and host-side reconciliation are
+documented in DESIGN.md §Hardware-Adaptation; the rust side applies the
+returned proposals in descending-gain order against a live size table.
+
+This module is build-time only: `aot.py` lowers `lpa_round` to HLO text
+once; rust executes the artifact via PJRT. Python never runs at request
+time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.lpa_kernel import scoring_matmul
+
+
+def lpa_round(adj, labels, sizes, node_w, upper):
+    """One synchronous size-constrained LPA round.
+
+    adj:    f32[N, N] symmetric weighted adjacency (0-padded)
+    labels: i32[N]    current cluster per node, in [0, C)
+    sizes:  f32[C]    current cluster weights (snapshot)
+    node_w: f32[N]    node weights
+    upper:  f32[]     size bound U
+
+    Returns (best i32[N], gain f32[N]): the strongest eligible cluster
+    per node and the connection gain vs. staying. gain <= 0 means "no
+    improving move" (the host only applies strictly positive gains).
+    """
+    c = sizes.shape[0]
+    onehot = jax.nn.one_hot(labels, c, dtype=adj.dtype)
+    scores = scoring_matmul(adj, onehot)  # L1 Pallas kernel
+    # Eligibility (paper §3.1): target must not overflow U; own cluster
+    # always allowed. Note the snapshot semantics: sizes do not include
+    # v's own pending departure — identical to the paper's rule of
+    # checking the *target* bound only.
+    eligible = (sizes[None, :] + node_w[:, None]) <= upper
+    eligible = eligible | (onehot > 0)
+    neg = jnp.asarray(jnp.finfo(adj.dtype).min / 2, adj.dtype)
+    masked = jnp.where(eligible, scores, neg)
+    best = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    stay = jnp.take_along_axis(scores, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+    gain = jnp.max(masked, axis=1) - stay
+    return best, gain
+
+
+def lpa_round_spec(n: int, c: int):
+    """ShapeDtypeStructs for lowering `lpa_round` at shape (N, C)."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, n), f32),  # adj
+        jax.ShapeDtypeStruct((n,), jnp.int32),  # labels
+        jax.ShapeDtypeStruct((c,), f32),  # sizes
+        jax.ShapeDtypeStruct((n,), f32),  # node_w
+        jax.ShapeDtypeStruct((), f32),  # upper
+    )

@@ -1,0 +1,123 @@
+"""L1 correctness: Pallas scoring kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including ragged non-multiple-of-block sizes)
+and dtypes; assert_allclose against ref.scoring_ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lpa_kernel import (
+    mxu_utilization_estimate,
+    scoring_matmul,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import scoring_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_problem(rng, n, c, density=0.3, dtype=np.float32):
+    adj = (rng.random((n, n)) < density).astype(dtype)
+    adj = np.triu(adj, 1)
+    adj = adj + adj.T  # symmetric, zero diagonal
+    labels = rng.integers(0, c, size=n).astype(np.int32)
+    onehot = np.eye(c, dtype=dtype)[labels]
+    return adj, onehot
+
+
+@pytest.mark.parametrize("n,c", [(8, 8), (16, 4), (64, 64), (128, 128), (256, 256)])
+def test_matches_ref_square_and_tall(n, c):
+    rng = np.random.default_rng(n * 1000 + c)
+    adj, onehot = random_problem(rng, n, c)
+    out = scoring_matmul(jnp.asarray(adj), jnp.asarray(onehot))
+    expected = scoring_ref(jnp.asarray(adj), jnp.asarray(onehot))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=160),
+    c=st.integers(min_value=1, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_ragged_shapes(n, c, seed):
+    """Shapes that are NOT multiples of the block size must still agree."""
+    rng = np.random.default_rng(seed)
+    adj, onehot = random_problem(rng, n, c, density=0.4)
+    out = scoring_matmul(jnp.asarray(adj), jnp.asarray(onehot), block_n=32, block_c=32, block_k=32)
+    expected = scoring_ref(jnp.asarray(adj), jnp.asarray(onehot))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bn=st.sampled_from([8, 16, 32, 128]),
+    bc=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+)
+def test_hypothesis_block_shapes(bn, bc, bk):
+    """Result must be invariant to the blocking schedule."""
+    rng = np.random.default_rng(7)
+    adj, onehot = random_problem(rng, 48, 48)
+    out = scoring_matmul(
+        jnp.asarray(adj), jnp.asarray(onehot), block_n=bn, block_c=bc, block_k=bk
+    )
+    expected = scoring_ref(jnp.asarray(adj), jnp.asarray(onehot))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=1e-6)
+
+
+def test_weighted_edges():
+    rng = np.random.default_rng(11)
+    n, c = 32, 32
+    adj = rng.random((n, n)).astype(np.float32) * 5
+    adj = np.triu(adj, 1)
+    adj = adj + adj.T
+    labels = rng.integers(0, c, size=n).astype(np.int32)
+    onehot = np.eye(c, dtype=np.float32)[labels]
+    out = scoring_matmul(jnp.asarray(adj), jnp.asarray(onehot))
+    np.testing.assert_allclose(
+        np.asarray(out), adj @ onehot, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_float64_dtype():
+    rng = np.random.default_rng(13)
+    adj, onehot = random_problem(rng, 24, 24, dtype=np.float32)
+    # jax default f32; exercise explicit f32 (f64 needs jax_enable_x64,
+    # not part of the AOT contract) — check dtype propagation instead.
+    out = scoring_matmul(jnp.asarray(adj), jnp.asarray(onehot))
+    assert out.dtype == jnp.float32
+
+
+def test_zero_adjacency():
+    n = 16
+    adj = jnp.zeros((n, n), jnp.float32)
+    onehot = jnp.eye(n, dtype=jnp.float32)
+    out = scoring_matmul(adj, onehot)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_jit_compatible():
+    """The kernel must lower inside jit (the AOT path requires it)."""
+    rng = np.random.default_rng(17)
+    adj, onehot = random_problem(rng, 64, 64)
+    f = jax.jit(lambda a, b: scoring_matmul(a, b))
+    out = f(jnp.asarray(adj), jnp.asarray(onehot))
+    np.testing.assert_allclose(np.asarray(out), adj @ onehot, rtol=1e-6)
+
+
+def test_vmem_footprint_default_blocks():
+    # 3 tiles of 128x128 f32 = 192 KiB << 16 MiB VMEM.
+    assert vmem_footprint_bytes() == 3 * 128 * 128 * 4
+    assert vmem_footprint_bytes() < 16 * 2**20 // 8
+
+
+def test_mxu_utilization_power_of_two_is_full():
+    assert mxu_utilization_estimate(512, 512) == 1.0
+    assert mxu_utilization_estimate(1024, 1024) == 1.0
+    # ragged shapes waste lanes
+    assert mxu_utilization_estimate(130, 130) < 0.6

@@ -1,0 +1,159 @@
+"""L2 correctness: the dense synchronous SCLaP round.
+
+Checks the jnp model against (a) the jnp reference and (b) an
+independent loop-based numpy oracle, plus the semantic properties the
+rust reconciliation relies on (eligibility, own-cluster always legal,
+gain sign).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import lpa_round_numpy, lpa_round_ref
+from compile.model import lpa_round
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_instance(seed, n, c=None, density=0.3):
+    rng = np.random.default_rng(seed)
+    c = c or n
+    adj = (rng.random((n, n)) < density).astype(np.float32)
+    adj = np.triu(adj, 1)
+    adj = adj + adj.T
+    labels = rng.integers(0, c, size=n).astype(np.int32)
+    node_w = rng.integers(1, 4, size=n).astype(np.float32)
+    sizes = np.zeros(c, dtype=np.float32)
+    for v in range(n):
+        sizes[labels[v]] += node_w[v]
+    upper = np.float32(max(node_w.max(), sizes.max() * 0.8))
+    return adj, labels, sizes, node_w, upper
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32, 64])
+def test_model_matches_jnp_ref(n):
+    adj, labels, sizes, node_w, upper = random_instance(n, n)
+    got = lpa_round(*map(jnp.asarray, (adj, labels, sizes, node_w, upper)))
+    want = lpa_round_ref(*map(jnp.asarray, (adj, labels, sizes, node_w, upper)))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_model_matches_numpy_oracle(n, seed):
+    adj, labels, sizes, node_w, upper = random_instance(seed, n)
+    best, gain = lpa_round(*map(jnp.asarray, (adj, labels, sizes, node_w, upper)))
+    nb, ng = lpa_round_numpy(adj, labels, sizes, node_w, upper)
+    np.testing.assert_array_equal(np.asarray(best), nb)
+    np.testing.assert_allclose(np.asarray(gain), ng, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_proposed_targets_are_eligible(seed):
+    """Every proposed move with positive gain targets a cluster that has
+    room — the invariant the rust host-side reconciliation starts from."""
+    adj, labels, sizes, node_w, upper = random_instance(seed, 20)
+    best, gain = map(
+        np.asarray, lpa_round(*map(jnp.asarray, (adj, labels, sizes, node_w, upper)))
+    )
+    for v in range(20):
+        if gain[v] > 0:
+            assert best[v] != labels[v]
+            assert sizes[best[v]] + node_w[v] <= upper + 1e-6
+
+
+def test_own_cluster_always_allowed():
+    """A node whose every neighbor cluster is full must stay (gain 0)."""
+    n = 4
+    adj = np.zeros((n, n), np.float32)
+    adj[0, 1] = adj[1, 0] = 5.0
+    labels = np.array([0, 1, 2, 3], np.int32)
+    node_w = np.ones(n, np.float32)
+    sizes = np.array([1, 1, 1, 1], np.float32)
+    upper = np.float32(1.0)  # nothing has room
+    best, gain = map(
+        np.asarray,
+        lpa_round(*map(jnp.asarray, (adj, labels, sizes, node_w, upper))),
+    )
+    assert best[0] == 0
+    assert gain[0] <= 0
+
+
+def test_strongest_cluster_wins():
+    """Node 0 connects with weight 1 to cluster 1 and weight 3 to
+    cluster 2: the proposal must be cluster 2."""
+    n = 4
+    adj = np.zeros((n, n), np.float32)
+    adj[0, 1] = adj[1, 0] = 1.0
+    adj[0, 2] = adj[2, 0] = 3.0
+    labels = np.array([0, 1, 2, 2], np.int32)
+    node_w = np.ones(n, np.float32)
+    sizes = np.array([1, 1, 2, 0], np.float32)
+    upper = np.float32(10.0)
+    best, gain = map(
+        np.asarray,
+        lpa_round(*map(jnp.asarray, (adj, labels, sizes, node_w, upper))),
+    )
+    assert best[0] == 2
+    assert gain[0] == 3.0  # stay-score is 0 (no neighbor in cluster 0)
+
+
+def test_size_constraint_blocks_strongest():
+    """The strongest cluster is full: the proposal falls back to the
+    next-best eligible one."""
+    n = 4
+    adj = np.zeros((n, n), np.float32)
+    adj[0, 1] = adj[1, 0] = 1.0
+    adj[0, 2] = adj[2, 0] = 3.0
+    labels = np.array([0, 1, 2, 2], np.int32)
+    node_w = np.ones(n, np.float32)
+    sizes = np.array([1, 1, 2, 0], np.float32)
+    upper = np.float32(2.0)  # cluster 2 (size 2) has no room for w=1
+    best, gain = map(
+        np.asarray,
+        lpa_round(*map(jnp.asarray, (adj, labels, sizes, node_w, upper))),
+    )
+    assert best[0] == 1
+    assert gain[0] == 1.0
+
+
+def test_isolated_node_never_moves():
+    n = 3
+    adj = np.zeros((n, n), np.float32)
+    labels = np.array([0, 1, 2], np.int32)
+    node_w = np.ones(n, np.float32)
+    sizes = np.ones(3, np.float32)
+    upper = np.float32(10.0)
+    best, gain = map(
+        np.asarray,
+        lpa_round(*map(jnp.asarray, (adj, labels, sizes, node_w, upper))),
+    )
+    assert (gain <= 0).all()
+
+
+def test_padding_rows_inert():
+    """Zero-padded rows (the runtime pads graphs to the artifact shape)
+    must produce non-positive gain so the host never applies them."""
+    n, real = 16, 5
+    rng = np.random.default_rng(3)
+    adj = np.zeros((n, n), np.float32)
+    block = (rng.random((real, real)) < 0.6).astype(np.float32)
+    block = np.triu(block, 1)
+    adj[:real, :real] = block + block.T
+    labels = np.arange(n, dtype=np.int32)
+    node_w = np.ones(n, np.float32)
+    sizes = np.ones(n, np.float32)
+    upper = np.float32(4.0)
+    best, gain = map(
+        np.asarray,
+        lpa_round(*map(jnp.asarray, (adj, labels, sizes, node_w, upper))),
+    )
+    assert (gain[real:] <= 0).all()

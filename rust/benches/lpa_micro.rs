@@ -1,0 +1,106 @@
+//! Microbenchmarks of the L3 hot path: SCLaP round throughput (edges/s),
+//! orderings, active nodes, contraction, and the parallel variant.
+//! These feed EXPERIMENTS.md §Perf (target: ≥50M edges/s traversal).
+//!
+//!     cargo bench --bench lpa_micro [-- --full]
+
+use sclap::clustering::label_propagation::{
+    size_constrained_lpa, LpaConfig, NodeOrdering,
+};
+use sclap::clustering::parallel_lpa::parallel_sclap;
+use sclap::coarsening::contract::contract;
+use sclap::graph::csr::Graph;
+use sclap::util::rng::Rng;
+use sclap::util::timer::Timer;
+
+fn bench<F: FnMut() -> u64>(label: &str, edges: usize, iters: usize, mut f: F) {
+    // warmup
+    let mut sink = f();
+    let t = Timer::start();
+    for _ in 0..iters {
+        sink = sink.wrapping_add(f());
+    }
+    let secs = t.elapsed_s() / iters as f64;
+    println!(
+        "{label:<44} {:>8.1} ms   {:>7.1} M edges/s   (sink {sink})",
+        secs * 1e3,
+        edges as f64 / secs / 1e6,
+    );
+}
+
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let (scale, m) = if quick { (15, 500_000) } else { (18, 4_000_000) };
+    let iters = if quick { 3 } else { 5 };
+
+    let mut rng = Rng::new(1);
+    println!("building R-MAT scale {scale}, {m} edges...");
+    let g: Graph = sclap::graph::subgraph::largest_component(&sclap::generators::rmat(
+        scale, m, 0.57, 0.19, 0.19, &mut rng,
+    ));
+    println!("n={} m={}\n", g.n(), g.m());
+    let upper = (g.total_node_weight() / 64).max(g.max_node_weight());
+
+    // one full SCLaP invocation (ℓ=3 rounds max) per measurement
+    for (label, ordering, active) in [
+        ("sclap l=3 random order", NodeOrdering::Random, false),
+        ("sclap l=3 degree order", NodeOrdering::Degree, false),
+        ("sclap l=3 degree order + active nodes", NodeOrdering::Degree, true),
+    ] {
+        let mut cfg = LpaConfig::clustering(3, ordering);
+        cfg.active_nodes = active;
+        let mut seed = 0u64;
+        bench(label, 3 * g.m(), iters, || {
+            seed += 1;
+            let mut r = Rng::new(seed);
+            let (c, rounds) = size_constrained_lpa(&g, upper, &cfg, None, None, &mut r);
+            c.num_clusters as u64 + rounds as u64
+        });
+    }
+
+    // parallel rounds (paper §6 future work)
+    for threads in [1usize, 2, 4, 8] {
+        let mut seed = 100u64;
+        bench(
+            &format!("parallel sclap l=3 ({threads} threads)"),
+            3 * g.m(),
+            iters,
+            || {
+                seed += 1;
+                let mut r = Rng::new(seed);
+                let c = parallel_sclap(&g, upper, 3, threads, &mut r);
+                c.num_clusters as u64
+            },
+        );
+    }
+
+    // contraction throughput
+    {
+        let mut r = Rng::new(7);
+        let (clustering, _) = size_constrained_lpa(
+            &g,
+            upper,
+            &LpaConfig::clustering(3, NodeOrdering::Degree),
+            None,
+            None,
+            &mut r,
+        );
+        bench("cluster contraction", g.m(), iters, || {
+            contract(&g, &clustering).coarse.n() as u64
+        });
+    }
+
+    // matching baseline for contrast
+    {
+        let mut seed = 200u64;
+        bench("heavy-edge matching (+2hop)", g.m(), iters, || {
+            seed += 1;
+            let mut r = Rng::new(seed);
+            let c = sclap::coarsening::matching::heavy_edge_matching(&g, upper, true, &mut r);
+            c.num_clusters as u64
+        });
+    }
+
+    println!("\ntarget (EXPERIMENTS.md §Perf): >=50M edges/s for the sequential");
+    println!("sclap round on this class of hardware (paper-era machine ~25M).");
+}

@@ -1,0 +1,60 @@
+//! Table 1 reproduction: basic properties of the benchmark instance
+//! suite (our generated stand-ins for the paper's collection — each row
+//! names the paper instance it models; see DESIGN.md §3).
+//!
+//!     cargo bench --bench table1 [-- --full for the full protocol]
+
+use sclap::bench::harness::{BenchOpts, TableWriter};
+use sclap::generators::instances::{huge_suite, large_suite, tiny_suite};
+use sclap::util::rng::Rng;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    println!("== Table 1: instance suite properties ==");
+    println!("(stand-ins for the paper's SNAP/LAW/DIMACS graphs; `models` = original)\n");
+
+    let table = TableWriter::new(&[
+        ("instance", 16),
+        ("models", 26),
+        ("n", 10),
+        ("m", 11),
+        ("maxdeg", 7),
+        ("gini", 6),
+        ("diam≈", 6),
+        ("cc", 6),
+    ]);
+    table.header();
+
+    let suite = if opts.quick { tiny_suite() } else { large_suite() };
+    for spec in suite {
+        let g = spec.build();
+        let mut rng = Rng::new(1);
+        let s = sclap::graph::stats::compute_stats(&g, &mut rng);
+        table.row(&[
+            spec.name.into(),
+            spec.models.chars().take(26).collect(),
+            s.n.to_string(),
+            s.m.to_string(),
+            s.max_degree.to_string(),
+            format!("{:.2}", s.degree_gini),
+            s.approx_diameter.to_string(),
+            format!("{:.2}", s.clustering_coeff),
+        ]);
+    }
+
+    if !opts.quick {
+        println!("\n-- huge suite (Table 3/4 stand-ins; built lazily by table3) --");
+        let table = TableWriter::new(&[("instance", 16), ("models", 26), ("gen", 30)]);
+        table.header();
+        for spec in huge_suite() {
+            table.row(&[
+                spec.name.into(),
+                spec.models.into(),
+                format!("seed {}", spec.seed),
+            ]);
+        }
+    }
+    println!("\nexpectation (paper): web/social instances show high degree gini");
+    println!("(scale-free) and small diameter (small-world); the mesh contrast");
+    println!("instance shows gini≈0 and large diameter.");
+}

@@ -1,0 +1,94 @@
+//! Table 2 reproduction: avg cut / best cut / time for every
+//! configuration of §5.1, geometric-mean aggregated across the instance
+//! suite and the paper's k sweep {2,4,8,16,32,64}, ε = 3%.
+//!
+//!     cargo bench --bench table2           # quick (default)
+//!     cargo bench --bench table2 -- --full       # full protocol (hours)
+//!     cargo bench --bench table2 -- --reps 5 --k 4,16
+//!
+//! Expected shape (paper Table 2): CStrong/UStrong best quality;
+//! UEcoV/B ≈ hMetis-like quality at ~10x less time; Fast family fastest
+//! among ours; Scotch-like worst quality; kMetis-like fastest overall
+//! but cutting more than the Fast family.
+
+use sclap::bench::harness::{fmt, geomean_row, BenchOpts, TableWriter};
+use sclap::coordinator::service::{default_seeds, Coordinator};
+use sclap::generators::instances::{large_suite, tiny_suite};
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use std::sync::Arc;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let suite = if opts.quick { tiny_suite() } else { large_suite() };
+    let ks = opts.k_sweep();
+    let reps = opts.reps;
+
+    println!("== Table 2: configuration comparison ==");
+    println!(
+        "instances={} k={ks:?} reps={reps} (geomean across instance x k cells)\n",
+        suite.len()
+    );
+
+    // Build instances once.
+    let graphs: Vec<(String, Arc<sclap::graph::csr::Graph>)> = suite
+        .iter()
+        .map(|s| (s.name.to_string(), Arc::new(s.build())))
+        .collect();
+
+    let coordinator = Coordinator::new(0);
+    let table = TableWriter::new(&[
+        ("Algorithm", 14),
+        ("avg cut", 10),
+        ("best cut", 10),
+        ("t [s]", 8),
+    ]);
+    table.header();
+
+    // In quick mode skip the slowest configurations so the bench stays
+    // CI-sized; the full run covers all 22 (paper order).
+    let presets: Vec<Preset> = Preset::ALL
+        .into_iter()
+        .filter(|p| {
+            !opts.quick
+                || !matches!(
+                    p,
+                    Preset::CStrong
+                        | Preset::UStrong
+                        | Preset::KaffpaStrong
+                        | Preset::HMetisLike
+                )
+        })
+        .collect();
+
+    for preset in presets {
+        let mut cells = Vec::new();
+        for (_, g) in &graphs {
+            for &k in &ks {
+                if k >= g.n() {
+                    continue;
+                }
+                let agg = coordinator.partition_repeated(
+                    g.clone(),
+                    &PartitionConfig::preset(preset, k),
+                    &default_seeds(reps),
+                );
+                cells.push((agg.avg_cut, agg.best_cut as f64, agg.avg_seconds));
+            }
+        }
+        let (avg, best, secs) = geomean_row(&cells);
+        table.row(&[
+            preset.name().into(),
+            fmt(avg),
+            fmt(best),
+            format!("{secs:.2}"),
+        ]);
+    }
+
+    println!("\npaper reference rows (Table 2, absolute values on the real");
+    println!("instance set — compare *ordering and ratios*, not magnitudes):");
+    println!("  CEcoR 71814/10.2s  CEco 67222/8.6s  CEcoV/B 64585/15.5s");
+    println!("  CFast 68839/3.9s   UFast 69170/1.5s UEcoV/B 65212/11.5s");
+    println!("  CStrong 60179/422s UStrong 59936/296s");
+    println!("  KaFFPaEco 85920/36.2s  Scotch 104955/10.6s");
+    println!("  kMetis 71978/0.4s  hMetis 65410/107.4s");
+}

@@ -1,0 +1,141 @@
+//! Table-formatting and aggregation helpers for the paper-reproduction
+//! benches (criterion is unavailable offline; these benches are custom
+//! `harness = false` binaries).
+
+use crate::util::timer::Stats;
+
+/// Common bench options parsed from `cargo bench -- [--full] [--reps N]`.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// Quick mode (the DEFAULT): tiny instances, fewer repetitions, so a
+    /// plain `cargo bench` finishes in CI time on one core. Pass
+    /// `--full` (or `make bench-full`) for the paper's full protocol.
+    pub quick: bool,
+    pub reps: usize,
+    /// Restrict k sweep (empty = default).
+    pub ks: Vec<usize>,
+}
+
+impl BenchOpts {
+    pub fn from_env() -> BenchOpts {
+        let args: Vec<String> = std::env::args().collect();
+        let quick = !args.iter().any(|a| a == "--full");
+        let reps = args
+            .iter()
+            .position(|a| a == "--reps")
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(if quick { 3 } else { 10 });
+        let ks = args
+            .iter()
+            .position(|a| a == "--k")
+            .and_then(|i| args.get(i + 1))
+            .map(|v| {
+                v.split(',')
+                    .filter_map(|t| t.parse().ok())
+                    .collect::<Vec<usize>>()
+            })
+            .unwrap_or_default();
+        BenchOpts { quick, reps, ks }
+    }
+
+    /// Paper §5 k sweep: 2, 4, 8, 16, 32, 64 (quick: 2, 8, 32).
+    pub fn k_sweep(&self) -> Vec<usize> {
+        if !self.ks.is_empty() {
+            return self.ks.clone();
+        }
+        if self.quick {
+            vec![2, 8, 32]
+        } else {
+            vec![2, 4, 8, 16, 32, 64]
+        }
+    }
+}
+
+/// Fixed-width table printer matching the paper's table style.
+pub struct TableWriter {
+    columns: Vec<(String, usize)>,
+}
+
+impl TableWriter {
+    pub fn new(columns: &[(&str, usize)]) -> Self {
+        let columns: Vec<(String, usize)> = columns
+            .iter()
+            .map(|(n, w)| (n.to_string(), (*w).max(n.len())))
+            .collect();
+        TableWriter { columns }
+    }
+
+    pub fn header(&self) {
+        let mut line = String::new();
+        for (name, width) in &self.columns {
+            line.push_str(&format!("{name:>width$}  "));
+        }
+        println!("{line}");
+        println!("{}", "-".repeat(line.len()));
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len());
+        let mut line = String::new();
+        for ((_, width), cell) in self.columns.iter().zip(cells) {
+            line.push_str(&format!("{cell:>width$}  "));
+        }
+        println!("{line}");
+    }
+}
+
+/// Format a float compactly (cut values, times).
+pub fn fmt(x: f64) -> String {
+    if x >= 1_000_000.0 {
+        format!("{:.2}M", x / 1_000_000.0)
+    } else if x >= 10_000.0 {
+        format!("{:.1}k", x / 1000.0)
+    } else if x >= 100.0 {
+        format!("{x:.0}")
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// Geometric-mean aggregation across instances (the paper's cross-
+/// instance score): input (avg_cut, best_cut, seconds) per instance.
+pub fn geomean_row(cells: &[(f64, f64, f64)]) -> (f64, f64, f64) {
+    let mut a = Stats::new();
+    let mut b = Stats::new();
+    let mut t = Stats::new();
+    for &(avg, best, secs) in cells {
+        a.add(avg);
+        b.add(best);
+        t.add(secs);
+    }
+    (a.geomean(), b.geomean(), t.geomean())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_row_matches_hand_calc() {
+        let (a, b, t) = geomean_row(&[(2.0, 1.0, 1.0), (8.0, 4.0, 4.0)]);
+        assert!((a - 4.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((t - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(3.25), "3.25");
+        assert_eq!(fmt(512.0), "512");
+        assert_eq!(fmt(51234.0), "51.2k");
+        assert_eq!(fmt(3_250_000.0), "3.25M");
+    }
+
+    #[test]
+    fn table_writer_accepts_rows() {
+        let t = TableWriter::new(&[("a", 6), ("b", 8)]);
+        t.header();
+        t.row(&["1".into(), "x".into()]);
+    }
+}

@@ -1,0 +1,7 @@
+//! Bench harness shared by `rust/benches/*`: instance loading, table
+//! formatting and the paper's aggregation conventions (§5: arithmetic
+//! mean per instance, geometric mean across instances).
+
+pub mod harness;
+
+pub use harness::{geomean_row, BenchOpts, TableWriter};

@@ -1,0 +1,154 @@
+//! Ensemble / overlay clusterings (§4 "Ensemble Clusterings").
+//!
+//! Two nodes share a cluster in the overlay iff they share a cluster in
+//! *every* input clustering. The paper computes the overlay iteratively:
+//! fold clusterings pairwise, hashing `(overlay_id, current_id)` pairs to
+//! fresh dense ids. We implement exactly that fold (the paper chose it
+//! over ℓ-tuple hashing for simplicity; so do we).
+
+use crate::graph::csr::Graph;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+use super::label_propagation::{size_constrained_lpa, Clustering, LpaConfig};
+
+/// Overlay of two label arrays: nodes together iff together in both.
+pub fn overlay_pair(a: &[u32], b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), b.len());
+    let mut map: HashMap<(u32, u32), u32> = HashMap::new();
+    let mut out = vec![0u32; a.len()];
+    let mut next = 0u32;
+    for v in 0..a.len() {
+        let key = (a[v], b[v]);
+        let id = *map.entry(key).or_insert_with(|| {
+            let id = next;
+            next += 1;
+            id
+        });
+        out[v] = id;
+    }
+    out
+}
+
+/// Overlay of many clusterings by iterated pairwise folding (§4).
+pub fn overlay_clustering(g: &Graph, inputs: &[Vec<u32>]) -> Clustering {
+    assert!(!inputs.is_empty());
+    let mut overlay = inputs[0].clone();
+    for c in &inputs[1..] {
+        overlay = overlay_pair(&overlay, c);
+    }
+    Clustering::from_labels(g, overlay)
+}
+
+/// Run `count` independent SCLaP clusterings and overlay them — the
+/// ensemble coarsening used by the `…/E` configurations. Each run gets
+/// an independent RNG stream; feasibility of every input implies
+/// feasibility of the overlay (overlay clusters are subsets).
+pub fn ensemble_sclap(
+    g: &Graph,
+    upper_bound: i64,
+    config: &LpaConfig,
+    count: usize,
+    respect: Option<&[u32]>,
+    rng: &mut Rng,
+) -> Clustering {
+    assert!(count >= 1);
+    let runs: Vec<Vec<u32>> = (0..count)
+        .map(|_| {
+            let mut stream = rng.split();
+            size_constrained_lpa(g, upper_bound, config, None, respect, &mut stream)
+                .0
+                .labels
+        })
+        .collect();
+    overlay_clustering(g, &runs)
+}
+
+/// Paper §5: ensemble size by k — 18 below 16 blocks, 7 for 16–32, 3 above.
+pub fn ensemble_size_for_k(k: usize) -> usize {
+    if k < 16 {
+        18
+    } else if k <= 32 {
+        7
+    } else {
+        3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::label_propagation::NodeOrdering;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::karate::karate_club;
+
+    #[test]
+    fn overlay_pair_intersects() {
+        let a = vec![0, 0, 0, 1, 1, 1];
+        let b = vec![0, 0, 1, 1, 2, 2];
+        let o = overlay_pair(&a, &b);
+        // groups: {0,1}, {2}, {3}, {4,5}
+        assert_eq!(o[0], o[1]);
+        assert_ne!(o[1], o[2]);
+        assert_ne!(o[2], o[3]);
+        assert_eq!(o[4], o[5]);
+        assert_ne!(o[3], o[4]);
+    }
+
+    #[test]
+    fn overlay_with_self_is_identity_partition() {
+        let a = vec![5u32, 5, 7, 7, 9];
+        let o = overlay_pair(&a, &a);
+        assert_eq!(o[0], o[1]);
+        assert_eq!(o[2], o[3]);
+        assert_ne!(o[0], o[2]);
+        assert_ne!(o[3], o[4]);
+    }
+
+    #[test]
+    fn overlay_never_coarser_than_inputs() {
+        let g = karate_club();
+        let mut rng = Rng::new(3);
+        let cfg = LpaConfig::clustering(5, NodeOrdering::Random);
+        let a = size_constrained_lpa(&g, 10, &cfg, None, None, &mut rng).0;
+        let b = size_constrained_lpa(&g, 10, &cfg, None, None, &mut rng).0;
+        let o = overlay_clustering(&g, &[a.labels.clone(), b.labels.clone()]);
+        assert!(o.num_clusters >= a.num_clusters.max(b.num_clusters));
+        // refinement property: same overlay cluster ⇒ same cluster in both
+        for u in 0..g.n() {
+            for v in (u + 1)..g.n() {
+                if o.labels[u] == o.labels[v] {
+                    assert_eq!(a.labels[u], a.labels[v]);
+                    assert_eq!(b.labels[u], b.labels[v]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ensemble_feasible_if_inputs_feasible() {
+        let g = karate_club();
+        let mut rng = Rng::new(5);
+        let cfg = LpaConfig::clustering(8, NodeOrdering::Degree);
+        let e = ensemble_sclap(&g, 6, &cfg, 5, None, &mut rng);
+        assert!(e.respects_bound(6), "{:?}", e.cluster_weights);
+    }
+
+    #[test]
+    fn ensemble_sizes_match_paper() {
+        assert_eq!(ensemble_size_for_k(2), 18);
+        assert_eq!(ensemble_size_for_k(8), 18);
+        assert_eq!(ensemble_size_for_k(16), 7);
+        assert_eq!(ensemble_size_for_k(32), 7);
+        assert_eq!(ensemble_size_for_k(64), 3);
+    }
+
+    #[test]
+    fn overlay_of_disagreeing_singletons() {
+        let g = GraphBuilder::new(3).edge(0, 1).edge(1, 2).build();
+        let a = vec![0, 0, 0];
+        let b = vec![0, 1, 2];
+        let o = overlay_clustering(&g, &[a, b]);
+        assert_eq!(o.num_clusters, 3);
+    }
+}

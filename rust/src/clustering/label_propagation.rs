@@ -1,0 +1,744 @@
+//! Size-constrained label propagation (SCLaP) — §3.1 of the paper.
+//!
+//! One engine serves both roles the paper gives it:
+//!
+//! - **Coarsening** ([`LpaMode::Clustering`]): every node starts in its
+//!   own cluster; nodes move to the *eligible* neighboring cluster with
+//!   the strongest connection (`U = max(max_v c(v), L_max/(f·k))`).
+//!   The result is contracted into the next-coarser graph.
+//! - **Local search** ([`LpaMode::Refinement`]): labels start as the
+//!   current partition blocks and `U = L_max`. If a node's own block is
+//!   overloaded it *must* consider only other blocks (the paper's
+//!   overloaded-block rule) so balance strictly improves.
+//!
+//! Extensions from §4 are all here: node orderings (random / increasing
+//! degree / weighted degree), the active-nodes rounds (two FIFO queues +
+//! two bit vectors, §B.2), and partition-respecting moves for V-cycles
+//! (§B.1: each cluster stays inside one block of the input partition so
+//! cut edges are never contracted).
+
+use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::util::fast_reset::{BitVec, FastResetArray};
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// Node traversal order for LPA rounds (§4 "Node Ordering").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeOrdering {
+    /// Random permutation per run (the original LPA; configs `*R`).
+    Random,
+    /// Increasing node degree — small-degree nodes settle first so a
+    /// meaningful cluster structure exists when hubs choose (default).
+    Degree,
+    /// Increasing weighted degree (paper: comparable to `Degree`).
+    WeightedDegree,
+}
+
+/// Which of the paper's two roles the engine plays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LpaMode {
+    /// Coarsening clustering: singletons → size-constrained clusters.
+    Clustering,
+    /// Local search on an existing partition: the overloaded-block rule
+    /// applies and blocks may not be emptied.
+    Refinement,
+}
+
+/// Tuning knobs for one SCLaP invocation.
+#[derive(Debug, Clone)]
+pub struct LpaConfig {
+    /// Maximum rounds ℓ (paper default 10; 3 for huge graphs).
+    pub max_iterations: usize,
+    pub ordering: NodeOrdering,
+    /// Active-nodes optimization (§4 / §B.2). Always used in refinement.
+    pub active_nodes: bool,
+    /// Stop when fewer than this fraction of nodes moved in a round
+    /// (paper: five percent).
+    pub convergence_fraction: f64,
+    pub mode: LpaMode,
+}
+
+impl Default for LpaConfig {
+    fn default() -> Self {
+        LpaConfig {
+            max_iterations: 10,
+            ordering: NodeOrdering::Degree,
+            active_nodes: false,
+            convergence_fraction: 0.05,
+            mode: LpaMode::Clustering,
+        }
+    }
+}
+
+impl LpaConfig {
+    pub fn clustering(max_iterations: usize, ordering: NodeOrdering) -> Self {
+        LpaConfig {
+            max_iterations,
+            ordering,
+            ..Default::default()
+        }
+    }
+
+    pub fn refinement(max_iterations: usize) -> Self {
+        LpaConfig {
+            max_iterations,
+            ordering: NodeOrdering::Degree,
+            active_nodes: true, // paper: always used during uncoarsening
+            convergence_fraction: 0.05,
+            mode: LpaMode::Refinement,
+        }
+    }
+}
+
+/// A clustering/labelling of the nodes with per-cluster weights.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    /// Cluster label per node, dense in `0..num_clusters`.
+    pub labels: Vec<u32>,
+    pub num_clusters: usize,
+    /// Total node weight per cluster.
+    pub cluster_weights: Vec<Weight>,
+}
+
+impl Clustering {
+    /// Build from an arbitrary (possibly sparse) label array.
+    pub fn from_labels(g: &Graph, labels: Vec<u32>) -> Self {
+        let mut c = Clustering {
+            labels,
+            num_clusters: 0,
+            cluster_weights: Vec::new(),
+        };
+        c.make_dense(g);
+        c
+    }
+
+    /// Relabel to dense ids `0..num_clusters` and recompute weights.
+    fn make_dense(&mut self, g: &Graph) {
+        let mut remap: Vec<u32> = vec![u32::MAX; self.labels.len().max(1)];
+        let mut next = 0u32;
+        for l in self.labels.iter_mut() {
+            let slot = *l as usize;
+            if remap[slot] == u32::MAX {
+                remap[slot] = next;
+                next += 1;
+            }
+            *l = remap[slot];
+        }
+        self.num_clusters = next as usize;
+        let mut weights = vec![0 as Weight; self.num_clusters];
+        for v in g.nodes() {
+            weights[self.labels[v as usize] as usize] += g.node_weight(v);
+        }
+        self.cluster_weights = weights;
+    }
+
+    /// Number of edges (by weight) cut between clusters.
+    pub fn cut(&self, g: &Graph) -> Weight {
+        g.edges()
+            .filter(|&(u, v, _)| self.labels[u as usize] != self.labels[v as usize])
+            .map(|(_, _, w)| w)
+            .sum()
+    }
+
+    /// Check the size constraint.
+    pub fn respects_bound(&self, bound: Weight) -> bool {
+        self.cluster_weights.iter().all(|&w| w <= bound)
+    }
+}
+
+/// Run size-constrained label propagation.
+///
+/// * `upper_bound` — `U`: no cluster's node weight may exceed it. Must be
+///   at least the maximum node weight (the caller applies the paper's
+///   `U := max(max_v c(v), W)` rule; we assert it).
+/// * `initial` — starting labels (`None` ⇒ singletons, only valid in
+///   clustering mode; refinement mode requires the current partition).
+/// * `respect` — optional block array for V-cycles (§B.1): a node may
+///   only join clusters inside its own block, so cut edges survive
+///   contraction.
+///
+/// Returns the dense clustering and the number of rounds executed.
+pub fn size_constrained_lpa(
+    g: &Graph,
+    upper_bound: Weight,
+    config: &LpaConfig,
+    initial: Option<Vec<u32>>,
+    respect: Option<&[u32]>,
+    rng: &mut Rng,
+) -> (Clustering, usize) {
+    let n = g.n();
+    assert!(
+        upper_bound >= g.max_node_weight(),
+        "U={} below max node weight {}",
+        upper_bound,
+        g.max_node_weight()
+    );
+    if let Some(r) = respect {
+        assert_eq!(r.len(), n);
+    }
+
+    let mut labels: Vec<u32> = match initial {
+        Some(init) => {
+            assert_eq!(init.len(), n);
+            init
+        }
+        None => {
+            assert_eq!(config.mode, LpaMode::Clustering);
+            (0..n as u32).collect()
+        }
+    };
+
+    // Cluster weight table, indexed by (sparse) label.
+    let max_label = labels.iter().copied().max().unwrap_or(0) as usize;
+    let mut cluster_weight: Vec<Weight> = vec![0; (max_label + 1).max(n)];
+    let mut cluster_count: Vec<u32> = vec![0; cluster_weight.len()];
+    for v in g.nodes() {
+        cluster_weight[labels[v as usize] as usize] += g.node_weight(v);
+        cluster_count[labels[v as usize] as usize] += 1;
+    }
+    debug_assert!(
+        config.mode == LpaMode::Refinement
+            || cluster_weight.iter().all(|&w| w <= upper_bound)
+    );
+
+    let order = build_order(g, config.ordering, rng);
+    let mut conn: FastResetArray<i64> = FastResetArray::new(cluster_weight.len());
+    let mut rounds = 0usize;
+
+    if config.active_nodes {
+        // §B.2: two FIFO queues + two bit vectors swapped per round.
+        let mut current: VecDeque<NodeId> = order.iter().copied().collect();
+        let mut next: VecDeque<NodeId> = VecDeque::new();
+        let mut in_current = BitVec::new(n);
+        let mut in_next = BitVec::new(n);
+        for &v in &order {
+            in_current.set(v as usize, true);
+        }
+        while rounds < config.max_iterations && !current.is_empty() {
+            rounds += 1;
+            let mut changed = 0usize;
+            while let Some(v) = current.pop_front() {
+                in_current.set(v as usize, false);
+                let moved = try_move(
+                    g,
+                    v,
+                    &mut labels,
+                    &mut cluster_weight,
+                    &mut cluster_count,
+                    upper_bound,
+                    config.mode,
+                    respect,
+                    &mut conn,
+                    rng,
+                );
+                if moved {
+                    changed += 1;
+                    for &u in g.adjacent(v) {
+                        if !in_next.get(u as usize) {
+                            in_next.set(u as usize, true);
+                            next.push_back(u);
+                        }
+                    }
+                    // The moved node itself may improve further next round.
+                    if !in_next.get(v as usize) {
+                        in_next.set(v as usize, true);
+                        next.push_back(v);
+                    }
+                }
+            }
+            std::mem::swap(&mut current, &mut next);
+            std::mem::swap(&mut in_current, &mut in_next);
+            if (changed as f64) < config.convergence_fraction * n as f64 {
+                break;
+            }
+        }
+    } else {
+        let mut order = order;
+        while rounds < config.max_iterations {
+            rounds += 1;
+            let mut changed = 0usize;
+            for &v in &order {
+                if try_move(
+                    g,
+                    v,
+                    &mut labels,
+                    &mut cluster_weight,
+                    &mut cluster_count,
+                    upper_bound,
+                    config.mode,
+                    respect,
+                    &mut conn,
+                    rng,
+                ) {
+                    changed += 1;
+                }
+            }
+            if (changed as f64) < config.convergence_fraction * n as f64 {
+                break;
+            }
+            if config.ordering == NodeOrdering::Random {
+                rng.shuffle(&mut order);
+            }
+        }
+    }
+
+    let mut clustering = Clustering {
+        labels,
+        num_clusters: 0,
+        cluster_weights: Vec::new(),
+    };
+    clustering.make_dense(g);
+    (clustering, rounds)
+}
+
+/// Visit one node; move it to the strongest eligible cluster.
+/// Returns true if the label changed.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn try_move(
+    g: &Graph,
+    v: NodeId,
+    labels: &mut [u32],
+    cluster_weight: &mut [Weight],
+    cluster_count: &mut [u32],
+    upper_bound: Weight,
+    mode: LpaMode,
+    respect: Option<&[u32]>,
+    conn: &mut FastResetArray<i64>,
+    rng: &mut Rng,
+) -> bool {
+    let cur = labels[v as usize];
+    let vw = g.node_weight(v);
+    let adj = g.adjacent(v);
+    if adj.is_empty() {
+        return false;
+    }
+    let weights = g.adjacent_weights(v);
+
+    conn.clear();
+    match respect {
+        // V-cycle restriction (§B.1): only clusters in the same block.
+        Some(blocks) => {
+            let bv = blocks[v as usize];
+            for (&u, &w) in adj.iter().zip(weights) {
+                if blocks[u as usize] == bv {
+                    conn.accumulate(labels[u as usize] as usize, w);
+                }
+            }
+        }
+        // Hot path: one accumulate per arc, no per-arc branch or bounds
+        // check. SAFETY: CSR validity gives u < n, labels.len() == n and
+        // every label < cluster_weight.len() == conn.capacity().
+        None => unsafe {
+            for (&u, &w) in adj.iter().zip(weights) {
+                let label = *labels.get_unchecked(u as usize) as usize;
+                conn.accumulate_unchecked(label, w);
+            }
+        },
+    }
+
+    let overloaded = mode == LpaMode::Refinement && cluster_weight[cur as usize] > upper_bound;
+    // Refinement must not empty a block (k is fixed).
+    let would_empty = mode == LpaMode::Refinement && cluster_count[cur as usize] <= 1;
+    if would_empty {
+        return false;
+    }
+
+    // Scan neighboring clusters for the strongest eligible one.
+    // Ties broken uniformly at random (reservoir over the argmax set).
+    let mut best_conn: i64 = if overloaded {
+        // Overloaded-block rule: choose among *other* blocks regardless
+        // of how strong the connection to the own block is.
+        i64::MIN
+    } else {
+        // Staying is always an option with the connection to `cur`.
+        conn.get(cur as usize)
+    };
+    let mut best: u32 = cur;
+    let mut ties: u32 = 1;
+    for &c in conn.touched() {
+        let c32 = c as u32;
+        if c32 == cur {
+            continue;
+        }
+        // Eligibility: target must not become overloaded (its own bound).
+        if cluster_weight[c] + vw > upper_bound {
+            continue;
+        }
+        let score = conn.value_of_touched(c);
+        if score > best_conn {
+            best_conn = score;
+            best = c32;
+            ties = 1;
+        } else if score == best_conn && best_conn > i64::MIN {
+            // Reservoir sampling over equally-strong candidates.
+            ties += 1;
+            if rng.below(ties as usize) == 0 {
+                best = c32;
+            }
+        }
+    }
+
+    if best == cur {
+        return false;
+    }
+    labels[v as usize] = best;
+    cluster_weight[cur as usize] -= vw;
+    cluster_weight[best as usize] += vw;
+    cluster_count[cur as usize] -= 1;
+    cluster_count[best as usize] += 1;
+    true
+}
+
+/// Build the node visit order for round one.
+fn build_order(g: &Graph, ordering: NodeOrdering, rng: &mut Rng) -> Vec<NodeId> {
+    let mut order: Vec<NodeId> = g.nodes().collect();
+    match ordering {
+        NodeOrdering::Random => rng.shuffle(&mut order),
+        NodeOrdering::Degree => {
+            // Shuffle first so equal-degree nodes appear in random order,
+            // then counting-sort by degree (stable, O(n + maxdeg) — a
+            // comparison sort here costs ~15% of a 3-round run, §Perf
+            // iteration 2).
+            rng.shuffle(&mut order);
+            counting_sort_by(&mut order, g.max_degree(), |v| g.degree(v));
+        }
+        NodeOrdering::WeightedDegree => {
+            rng.shuffle(&mut order);
+            let max_wd = g
+                .nodes()
+                .map(|v| g.weighted_degree(v))
+                .max()
+                .unwrap_or(0)
+                .max(0) as usize;
+            if max_wd <= 4 * g.n() {
+                counting_sort_by(&mut order, max_wd, |v| g.weighted_degree(v) as usize);
+            } else {
+                order.sort_by_key(|&v| g.weighted_degree(v));
+            }
+        }
+    }
+    order
+}
+
+/// Stable counting sort of `order` by `key(v) ∈ [0, max_key]`.
+fn counting_sort_by<F: Fn(NodeId) -> usize>(order: &mut Vec<NodeId>, max_key: usize, key: F) {
+    let mut counts = vec![0usize; max_key + 2];
+    for &v in order.iter() {
+        counts[key(v) + 1] += 1;
+    }
+    for i in 0..max_key + 1 {
+        counts[i + 1] += counts[i];
+    }
+    let mut out = vec![0 as NodeId; order.len()];
+    for &v in order.iter() {
+        let k = key(v);
+        out[counts[k]] = v;
+        counts[k] += 1;
+    }
+    *order = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::karate::karate_club;
+
+    fn two_cliques() -> Graph {
+        // Two K4s joined by one edge: the obvious clustering is the cliques.
+        let mut b = GraphBuilder::new(8);
+        for base in [0u32, 4] {
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    b.add_edge(base + i, base + j, 1);
+                }
+            }
+        }
+        b.add_edge(3, 4, 1);
+        b.build()
+    }
+
+    #[test]
+    fn finds_clique_structure() {
+        let g = two_cliques();
+        let mut rng = Rng::new(1);
+        let (c, _) = size_constrained_lpa(
+            &g,
+            4,
+            &LpaConfig::clustering(10, NodeOrdering::Degree),
+            None,
+            None,
+            &mut rng,
+        );
+        assert_eq!(c.num_clusters, 2);
+        // all of clique 1 in one cluster
+        assert!((1..4).all(|i| c.labels[i] == c.labels[0]));
+        assert!((5..8).all(|i| c.labels[i] == c.labels[4]));
+        assert_ne!(c.labels[0], c.labels[4]);
+        assert_eq!(c.cut(&g), 1);
+    }
+
+    #[test]
+    fn respects_size_constraint_tight() {
+        let g = two_cliques();
+        for seed in 0..10 {
+            let mut rng = Rng::new(seed);
+            let (c, _) = size_constrained_lpa(
+                &g,
+                2,
+                &LpaConfig::clustering(10, NodeOrdering::Random),
+                None,
+                None,
+                &mut rng,
+            );
+            assert!(c.respects_bound(2), "seed {seed}: {:?}", c.cluster_weights);
+        }
+    }
+
+    #[test]
+    fn bound_one_keeps_singletons() {
+        let g = two_cliques();
+        let mut rng = Rng::new(3);
+        let (c, _) = size_constrained_lpa(
+            &g,
+            1,
+            &LpaConfig::default(),
+            None,
+            None,
+            &mut rng,
+        );
+        assert_eq!(c.num_clusters, 8);
+        assert!(c.respects_bound(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "below max node weight")]
+    fn bound_below_max_node_weight_panics() {
+        let g = GraphBuilder::new(2)
+            .node_weights(vec![5, 1])
+            .edge(0, 1)
+            .build();
+        let mut rng = Rng::new(0);
+        let _ = size_constrained_lpa(&g, 2, &LpaConfig::default(), None, None, &mut rng);
+    }
+
+    #[test]
+    fn weighted_nodes_respect_bound() {
+        let mut b = GraphBuilder::new(6);
+        for i in 0..6u32 {
+            for j in (i + 1)..6 {
+                b.add_edge(i, j, 1);
+            }
+        }
+        b.set_node_weight(0, 3);
+        b.set_node_weight(1, 3);
+        let g = b.build();
+        for seed in 0..8 {
+            let mut rng = Rng::new(seed);
+            let (c, _) = size_constrained_lpa(
+                &g,
+                4,
+                &LpaConfig::clustering(10, NodeOrdering::Random),
+                None,
+                None,
+                &mut rng,
+            );
+            assert!(c.respects_bound(4), "{:?}", c.cluster_weights);
+        }
+    }
+
+    #[test]
+    fn karate_clusters_reasonably() {
+        let g = karate_club();
+        let mut rng = Rng::new(7);
+        let (c, _) = size_constrained_lpa(
+            &g,
+            10,
+            &LpaConfig::clustering(10, NodeOrdering::Degree),
+            None,
+            None,
+            &mut rng,
+        );
+        assert!(c.num_clusters >= 4, "nc={}", c.num_clusters);
+        assert!(c.respects_bound(10));
+        // clustering should beat random: cut below total edges
+        assert!(c.cut(&g) < 78);
+    }
+
+    #[test]
+    fn active_nodes_matches_constraint_and_quality() {
+        let mut rng = Rng::new(11);
+        let g = generators::rmat(10, 4000, 0.57, 0.19, 0.19, &mut rng);
+        let mut cfg = LpaConfig::clustering(10, NodeOrdering::Degree);
+        let (c1, _) = size_constrained_lpa(&g, 40, &cfg, None, None, &mut Rng::new(1));
+        cfg.active_nodes = true;
+        let (c2, _) = size_constrained_lpa(&g, 40, &cfg, None, None, &mut Rng::new(1));
+        assert!(c1.respects_bound(40));
+        assert!(c2.respects_bound(40));
+        // both should find substantial structure
+        assert!(c1.num_clusters < g.n());
+        assert!(c2.num_clusters < g.n());
+    }
+
+    #[test]
+    fn refinement_reduces_cut() {
+        let g = two_cliques();
+        // bad initial partition: split across the cliques
+        let initial = vec![0, 1, 0, 1, 0, 1, 0, 1];
+        let before: Weight = g
+            .edges()
+            .filter(|&(u, v, _)| initial[u as usize] != initial[v as usize])
+            .map(|(_, _, w)| w)
+            .sum();
+        let mut rng = Rng::new(5);
+        // U = 5 gives one unit of slack (with U = 4 and perfectly
+        // balanced blocks, *no* single move is eligible — also verified
+        // in `refinement_fully_balanced_is_frozen`).
+        let (c, _) = size_constrained_lpa(
+            &g,
+            5,
+            &LpaConfig::refinement(10),
+            Some(initial),
+            None,
+            &mut rng,
+        );
+        assert!(c.cut(&g) < before, "cut {} !< {before}", c.cut(&g));
+        // still exactly two blocks (refinement never empties)
+        assert_eq!(c.num_clusters, 2);
+        assert!(c.respects_bound(5));
+    }
+
+    #[test]
+    fn refinement_fully_balanced_is_frozen() {
+        // With U equal to the exact block weight there is no slack: no
+        // single move is eligible, so the partition must not change.
+        let g = two_cliques();
+        let initial = vec![0u32, 1, 0, 1, 0, 1, 0, 1];
+        let mut rng = Rng::new(5);
+        let (c, _) = size_constrained_lpa(
+            &g,
+            4,
+            &LpaConfig::refinement(10),
+            Some(initial.clone()),
+            None,
+            &mut rng,
+        );
+        // labels may be renamed by densification but the partition is the same
+        for u in 0..8 {
+            for v in 0..8 {
+                assert_eq!(
+                    initial[u] == initial[v],
+                    c.labels[u] == c.labels[v]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn refinement_fixes_overload() {
+        // Path of 6 nodes, block 0 holds 5 of them (overloaded for U=4).
+        let mut b = GraphBuilder::new(6);
+        for i in 1..6u32 {
+            b.add_edge(i - 1, i, 1);
+        }
+        let g = b.build();
+        let initial = vec![0, 0, 0, 0, 0, 1];
+        let mut rng = Rng::new(2);
+        let (c, _) = size_constrained_lpa(
+            &g,
+            4,
+            &LpaConfig::refinement(10),
+            Some(initial),
+            None,
+            &mut rng,
+        );
+        assert!(
+            c.cluster_weights.iter().all(|&w| w <= 4),
+            "{:?}",
+            c.cluster_weights
+        );
+    }
+
+    #[test]
+    fn respect_partition_blocks_cross_moves() {
+        let g = two_cliques();
+        // Partition splits *within* each clique; clustering must respect it.
+        let blocks = vec![0u32, 0, 1, 1, 0, 0, 1, 1];
+        for seed in 0..6 {
+            let mut rng = Rng::new(seed);
+            let (c, _) = size_constrained_lpa(
+                &g,
+                8,
+                &LpaConfig::clustering(10, NodeOrdering::Random),
+                None,
+                Some(&blocks),
+                &mut rng,
+            );
+            for (u, v, _) in g.edges() {
+                if blocks[u as usize] != blocks[v as usize] {
+                    assert_ne!(
+                        c.labels[u as usize], c.labels[v as usize],
+                        "cluster crossed block boundary on edge ({u},{v})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_nodes_stay_put() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1);
+        let g = b.build();
+        let mut rng = Rng::new(1);
+        let (c, _) = size_constrained_lpa(&g, 4, &LpaConfig::default(), None, None, &mut rng);
+        // isolated nodes keep their singleton clusters
+        assert!(c.num_clusters >= 3);
+    }
+
+    #[test]
+    fn converges_quickly_on_converged_input() {
+        let g = two_cliques();
+        let mut rng = Rng::new(9);
+        let (c, _) = size_constrained_lpa(
+            &g,
+            4,
+            &LpaConfig::clustering(10, NodeOrdering::Degree),
+            None,
+            None,
+            &mut rng,
+        );
+        // Re-run from the converged labels: should stop after one round.
+        let (_, rounds) = size_constrained_lpa(
+            &g,
+            4,
+            &LpaConfig::clustering(10, NodeOrdering::Degree),
+            Some(c.labels.clone()),
+            None,
+            &mut rng,
+        );
+        assert!(rounds <= 2, "rounds={rounds}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(42);
+        let g = generators::barabasi_albert(500, 3, &mut rng);
+        let run = |seed: u64| {
+            let mut r = Rng::new(seed);
+            size_constrained_lpa(
+                &g,
+                20,
+                &LpaConfig::clustering(10, NodeOrdering::Degree),
+                None,
+                None,
+                &mut r,
+            )
+            .0
+            .labels
+        };
+        assert_eq!(run(1), run(1));
+    }
+}

@@ -1,0 +1,12 @@
+//! Clustering algorithms: the paper's size-constrained label propagation
+//! (§3.1), ensemble overlay clustering (§4) and a shared-memory parallel
+//! LPA (the paper's §6 future-work direction).
+
+pub mod ensemble;
+pub mod label_propagation;
+pub mod parallel_lpa;
+
+pub use ensemble::overlay_clustering;
+pub use label_propagation::{
+    size_constrained_lpa, Clustering, LpaConfig, LpaMode, NodeOrdering,
+};

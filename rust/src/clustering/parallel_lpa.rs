@@ -1,0 +1,215 @@
+//! Shared-memory parallel SCLaP — the paper's §6 future-work direction
+//! ("label propagation … has a large potential to be efficiently
+//! parallelized"), implemented with std::thread.
+//!
+//! Semantics match the accelerator offload path (`runtime::dense_lpa`):
+//! each round is *synchronous* — worker threads score all nodes against a
+//! snapshot of the labels, then the proposals are reconciled sequentially
+//! in descending-gain order against a live cluster-size table, so the
+//! size constraint holds exactly (invariant 7 of DESIGN.md §7).
+
+use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::util::fast_reset::FastResetArray;
+use crate::util::rng::Rng;
+
+use super::label_propagation::Clustering;
+
+/// A proposed move produced by the scoring pass.
+#[derive(Debug, Clone, Copy)]
+pub struct Proposal {
+    pub node: NodeId,
+    pub target: u32,
+    /// Connection-strength improvement vs. staying (snapshot gain).
+    pub gain: i64,
+}
+
+/// Score one chunk of nodes against the label snapshot. Pure function —
+/// safe to run on worker threads with shared read-only state.
+fn score_chunk(
+    g: &Graph,
+    labels: &[u32],
+    cluster_weight: &[Weight],
+    upper_bound: Weight,
+    chunk: &[NodeId],
+    seed: u64,
+) -> Vec<Proposal> {
+    let mut conn: FastResetArray<i64> = FastResetArray::new(cluster_weight.len());
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for &v in chunk {
+        let cur = labels[v as usize];
+        let vw = g.node_weight(v);
+        let adj = g.adjacent(v);
+        if adj.is_empty() {
+            continue;
+        }
+        let ws = g.adjacent_weights(v);
+        conn.clear();
+        for (&u, &w) in adj.iter().zip(ws) {
+            conn.accumulate(labels[u as usize] as usize, w);
+        }
+        let stay = conn.get(cur as usize);
+        let mut best = cur;
+        let mut best_conn = stay;
+        let mut ties = 1u32;
+        for &c in conn.touched() {
+            let c32 = c as u32;
+            if c32 == cur || cluster_weight[c] + vw > upper_bound {
+                continue;
+            }
+            let s = conn.value_of_touched(c);
+            if s > best_conn {
+                best = c32;
+                best_conn = s;
+                ties = 1;
+            } else if s == best_conn {
+                ties += 1;
+                if rng.below(ties as usize) == 0 {
+                    best = c32;
+                }
+            }
+        }
+        if best != cur && best_conn > stay {
+            out.push(Proposal {
+                node: v,
+                target: best,
+                gain: best_conn - stay,
+            });
+        }
+    }
+    out
+}
+
+/// Apply proposals in descending-gain order against the live size table.
+/// Returns the number of applied moves. Shared with the PJRT offload path.
+pub fn reconcile_proposals(
+    g: &Graph,
+    labels: &mut [u32],
+    cluster_weight: &mut [Weight],
+    upper_bound: Weight,
+    proposals: &mut Vec<Proposal>,
+) -> usize {
+    proposals.sort_unstable_by(|a, b| b.gain.cmp(&a.gain).then(a.node.cmp(&b.node)));
+    let mut applied = 0;
+    for p in proposals.iter() {
+        let v = p.node as usize;
+        let vw = g.node_weight(p.node);
+        if labels[v] == p.target {
+            continue;
+        }
+        if cluster_weight[p.target as usize] + vw > upper_bound {
+            continue; // became ineligible after earlier accepted moves
+        }
+        cluster_weight[labels[v] as usize] -= vw;
+        cluster_weight[p.target as usize] += vw;
+        labels[v] = p.target;
+        applied += 1;
+    }
+    applied
+}
+
+/// Parallel size-constrained LPA (clustering mode, singleton start).
+pub fn parallel_sclap(
+    g: &Graph,
+    upper_bound: Weight,
+    max_iterations: usize,
+    threads: usize,
+    rng: &mut Rng,
+) -> Clustering {
+    let n = g.n();
+    assert!(upper_bound >= g.max_node_weight());
+    let threads = threads.max(1);
+    let mut labels: Vec<u32> = (0..n as u32).collect();
+    let mut cluster_weight: Vec<Weight> = g.node_weights().to_vec();
+
+    for _round in 0..max_iterations {
+        let nodes: Vec<NodeId> = (0..n as NodeId).collect();
+        let chunk_size = n.div_ceil(threads).max(1);
+        let seeds: Vec<u64> = (0..threads).map(|_| rng.next_u64()).collect();
+
+        let mut proposals: Vec<Proposal> = Vec::new();
+        std::thread::scope(|scope| {
+            let labels_ref: &[u32] = &labels;
+            let weights_ref: &[Weight] = &cluster_weight;
+            let handles: Vec<_> = nodes
+                .chunks(chunk_size)
+                .zip(seeds.iter())
+                .map(|(chunk, &seed)| {
+                    scope.spawn(move || {
+                        score_chunk(g, labels_ref, weights_ref, upper_bound, chunk, seed)
+                    })
+                })
+                .collect();
+            for h in handles {
+                proposals.extend(h.join().expect("scoring thread panicked"));
+            }
+        });
+
+        let applied = reconcile_proposals(
+            g,
+            &mut labels,
+            &mut cluster_weight,
+            upper_bound,
+            &mut proposals,
+        );
+        if (applied as f64) < 0.05 * n as f64 {
+            break;
+        }
+    }
+
+    Clustering::from_labels(g, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+    use crate::graph::karate::karate_club;
+
+    #[test]
+    fn parallel_respects_bound() {
+        let g = karate_club();
+        for threads in [1, 2, 4] {
+            let mut rng = Rng::new(1);
+            let c = parallel_sclap(&g, 6, 10, threads, &mut rng);
+            assert!(c.respects_bound(6), "threads={threads}: {:?}", c.cluster_weights);
+        }
+    }
+
+    #[test]
+    fn parallel_finds_structure() {
+        let mut rng = Rng::new(2);
+        let g = generators::barabasi_albert(2000, 4, &mut rng);
+        let c = parallel_sclap(&g, 50, 10, 4, &mut Rng::new(3));
+        assert!(c.num_clusters < g.n() / 2, "nc={}", c.num_clusters);
+        assert!(c.respects_bound(50));
+    }
+
+    #[test]
+    fn single_thread_equals_sequential_reconciliation() {
+        // With 1 thread the proposals are deterministic per seed; rerun
+        // must produce identical labels.
+        let mut rng = Rng::new(4);
+        let g = generators::rmat(9, 2000, 0.57, 0.19, 0.19, &mut rng);
+        let a = parallel_sclap(&g, 30, 5, 1, &mut Rng::new(7)).labels;
+        let b = parallel_sclap(&g, 30, 5, 1, &mut Rng::new(7)).labels;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reconcile_skips_ineligible() {
+        let g = karate_club();
+        let mut labels: Vec<u32> = (0..34).collect();
+        let mut weights: Vec<Weight> = vec![1; 34];
+        // Two proposals targeting cluster 0 with U=2: only one fits.
+        let mut props = vec![
+            Proposal { node: 5, target: 0, gain: 3 },
+            Proposal { node: 6, target: 0, gain: 2 },
+        ];
+        let applied = reconcile_proposals(&g, &mut labels, &mut weights, 2, &mut props);
+        assert_eq!(applied, 1);
+        assert_eq!(labels[5], 0); // higher gain won
+        assert_eq!(labels[6], 6);
+        assert_eq!(weights[0], 2);
+    }
+}

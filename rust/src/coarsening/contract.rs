@@ -1,0 +1,208 @@
+//! Cluster contraction (§3, Fig. 2).
+//!
+//! Each cluster becomes one coarse node whose weight is the sum of its
+//! members' weights; coarse edges aggregate all inter-cluster edge
+//! weights. By construction a partition of the coarse graph corresponds
+//! to a partition of the finer graph *with the same cut and balance* —
+//! the central invariant of the multilevel method (tested below and in
+//! `rust/tests/properties.rs`).
+
+use crate::clustering::label_propagation::Clustering;
+use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::util::fast_reset::FastResetArray;
+
+/// Result of contracting a clustering: the coarse graph plus the
+/// fine-node → coarse-node map.
+#[derive(Debug, Clone)]
+pub struct Contraction {
+    pub coarse: Graph,
+    /// `map[fine] = coarse` (equals the dense cluster labels).
+    pub map: Vec<u32>,
+}
+
+/// Contract `clustering` (labels must be dense `0..num_clusters`).
+pub fn contract(g: &Graph, clustering: &Clustering) -> Contraction {
+    let nc = clustering.num_clusters;
+    let labels = &clustering.labels;
+
+    // Bucket fine nodes by coarse id (counting sort) so each coarse
+    // node's edges are accumulated in one sweep with a fast-reset map.
+    let mut counts = vec![0usize; nc + 1];
+    for &l in labels.iter() {
+        counts[l as usize + 1] += 1;
+    }
+    for i in 0..nc {
+        counts[i + 1] += counts[i];
+    }
+    let mut members = vec![0 as NodeId; g.n()];
+    {
+        let mut cursor = counts.clone();
+        for v in g.nodes() {
+            let l = labels[v as usize] as usize;
+            members[cursor[l]] = v;
+            cursor[l] += 1;
+        }
+    }
+
+    let mut xadj: Vec<usize> = Vec::with_capacity(nc + 1);
+    xadj.push(0);
+    let mut targets: Vec<NodeId> = Vec::new();
+    let mut edge_weights: Vec<Weight> = Vec::new();
+    let mut node_weights: Vec<Weight> = vec![0; nc];
+    let mut acc: FastResetArray<i64> = FastResetArray::new(nc);
+
+    for c in 0..nc {
+        acc.clear();
+        for &v in &members[counts[c]..counts[c + 1]] {
+            node_weights[c] += g.node_weight(v);
+            let adj = g.adjacent(v);
+            let ws = g.adjacent_weights(v);
+            for (&u, &w) in adj.iter().zip(ws) {
+                let cu = labels[u as usize] as usize;
+                if cu != c {
+                    acc.accumulate(cu, w);
+                }
+            }
+        }
+        for &cu in acc.touched() {
+            targets.push(cu as NodeId);
+            edge_weights.push(acc.value_of_touched(cu));
+        }
+        xadj.push(targets.len());
+    }
+
+    let coarse = Graph::from_csr(xadj, targets, edge_weights, node_weights);
+    debug_assert!(coarse.validate().is_ok());
+    Contraction {
+        coarse,
+        map: labels.clone(),
+    }
+}
+
+/// Project a coarse partition back to the finer graph.
+pub fn project_partition(map: &[u32], coarse_blocks: &[u32]) -> Vec<u32> {
+    map.iter().map(|&c| coarse_blocks[c as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::label_propagation::Clustering;
+    use crate::graph::builder::GraphBuilder;
+
+    /// The Fig. 2 example: a graph whose 3-cluster clustering contracts
+    /// to a triangle with aggregated weights.
+    #[test]
+    fn figure2_example() {
+        // 7 nodes, three clusters: {0,1,2}, {3,4}, {5,6}
+        let mut b = GraphBuilder::new(7);
+        // intra-cluster edges
+        b.add_edge(0, 1, 1);
+        b.add_edge(1, 2, 1);
+        b.add_edge(0, 2, 1);
+        b.add_edge(3, 4, 1);
+        b.add_edge(5, 6, 1);
+        // inter-cluster edges
+        b.add_edge(2, 3, 1); // A-B
+        b.add_edge(1, 3, 1); // A-B (second edge)
+        b.add_edge(4, 5, 1); // B-C
+        b.add_edge(0, 6, 1); // A-C
+        let g = b.build();
+        let clustering = Clustering::from_labels(&g, vec![0, 0, 0, 1, 1, 2, 2]);
+        let c = contract(&g, &clustering);
+        assert_eq!(c.coarse.n(), 3);
+        assert_eq!(c.coarse.m(), 3); // triangle
+        // node weights = cluster sizes
+        assert_eq!(c.coarse.node_weight(0), 3);
+        assert_eq!(c.coarse.node_weight(1), 2);
+        assert_eq!(c.coarse.node_weight(2), 2);
+        // A-B edge aggregated weight 2
+        let ab = c.coarse.neighbors(0).find(|&(u, _)| u == 1).unwrap().1;
+        assert_eq!(ab, 2);
+        assert!(c.coarse.validate().is_ok());
+    }
+
+    #[test]
+    fn contraction_preserves_totals() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let g = crate::generators::rmat(9, 1500, 0.57, 0.19, 0.19, &mut rng);
+        let (clustering, _) = crate::clustering::label_propagation::size_constrained_lpa(
+            &g,
+            20,
+            &Default::default(),
+            None,
+            None,
+            &mut rng,
+        );
+        let c = contract(&g, &clustering);
+        assert_eq!(c.coarse.total_node_weight(), g.total_node_weight());
+        // total coarse edge weight = weight of cut edges of the clustering
+        assert_eq!(c.coarse.total_edge_weight(), clustering.cut(&g));
+    }
+
+    #[test]
+    fn projection_preserves_cut() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let g = crate::generators::barabasi_albert(400, 3, &mut rng);
+        let (clustering, _) = crate::clustering::label_propagation::size_constrained_lpa(
+            &g,
+            25,
+            &Default::default(),
+            None,
+            None,
+            &mut rng,
+        );
+        let c = contract(&g, &clustering);
+        // random 2-partition of the coarse graph
+        let coarse_blocks: Vec<u32> =
+            (0..c.coarse.n()).map(|_| rng.below(2) as u32).collect();
+        let coarse_cut: Weight = c
+            .coarse
+            .edges()
+            .filter(|&(u, v, _)| coarse_blocks[u as usize] != coarse_blocks[v as usize])
+            .map(|(_, _, w)| w)
+            .sum();
+        let fine_blocks = project_partition(&c.map, &coarse_blocks);
+        let fine_cut: Weight = g
+            .edges()
+            .filter(|&(u, v, _)| fine_blocks[u as usize] != fine_blocks[v as usize])
+            .map(|(_, _, w)| w)
+            .sum();
+        assert_eq!(coarse_cut, fine_cut);
+        // and block weights match
+        for b in 0..2u32 {
+            let coarse_w: Weight = c
+                .coarse
+                .nodes()
+                .filter(|&v| coarse_blocks[v as usize] == b)
+                .map(|v| c.coarse.node_weight(v))
+                .sum();
+            let fine_w: Weight = g
+                .nodes()
+                .filter(|&v| fine_blocks[v as usize] == b)
+                .map(|v| g.node_weight(v))
+                .sum();
+            assert_eq!(coarse_w, fine_w);
+        }
+    }
+
+    #[test]
+    fn contract_to_single_node() {
+        let g = GraphBuilder::new(3).edge(0, 1).edge(1, 2).build();
+        let clustering = Clustering::from_labels(&g, vec![0, 0, 0]);
+        let c = contract(&g, &clustering);
+        assert_eq!(c.coarse.n(), 1);
+        assert_eq!(c.coarse.m(), 0);
+        assert_eq!(c.coarse.node_weight(0), 3);
+    }
+
+    #[test]
+    fn contract_identity_clustering() {
+        let g = GraphBuilder::new(3).edge(0, 1).edge(1, 2).build();
+        let clustering = Clustering::from_labels(&g, vec![0, 1, 2]);
+        let c = contract(&g, &clustering);
+        assert_eq!(c.coarse.n(), 3);
+        assert_eq!(c.coarse.m(), 2);
+        assert_eq!(&c.coarse, &g);
+    }
+}

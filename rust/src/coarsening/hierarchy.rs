@@ -1,0 +1,324 @@
+//! Multilevel hierarchy construction (the coarsening phase).
+//!
+//! Repeatedly cluster + contract until the graph is small enough for
+//! initial partitioning: the paper's threshold is
+//! `n_coarse ≤ max(60·k, n/(60·k))` (§3.1). Supports both the paper's
+//! cluster-contraction scheme and the matching baseline, and threads an
+//! optional input partition through the levels for V-cycles (§B.1).
+
+use crate::clustering::ensemble::ensemble_sclap;
+use crate::clustering::label_propagation::{size_constrained_lpa, Clustering, LpaConfig};
+use crate::coarsening::contract::{contract, Contraction};
+use crate::coarsening::matching::heavy_edge_matching;
+use crate::graph::csr::{Graph, Weight};
+use crate::util::rng::Rng;
+
+/// Which coarsening algorithm builds each level.
+#[derive(Debug, Clone)]
+pub enum CoarseningScheme {
+    /// The paper's contribution: contract size-constrained LPA clusters.
+    ClusterLpa {
+        lpa: LpaConfig,
+        /// cluster-size factor f (paper default 18): W = L_max / (f·k)
+        size_factor: f64,
+        /// number of ensemble clusterings (None = single run)
+        ensemble: Option<usize>,
+    },
+    /// Baseline: heavy-edge matching (KaFFPa/Metis style).
+    Matching { two_hop: bool },
+}
+
+/// One coarse level: the contracted graph plus the map from the next
+/// finer graph's nodes to this graph's nodes.
+#[derive(Debug, Clone)]
+pub struct Level {
+    pub graph: Graph,
+    pub map: Vec<u32>,
+}
+
+/// The full coarsening output.
+#[derive(Debug)]
+pub struct Hierarchy {
+    /// Levels from finest-coarse (index 0) to coarsest (last). Empty if
+    /// the input was already small enough.
+    pub levels: Vec<Level>,
+    /// Input partition projected onto the coarsest graph (V-cycles).
+    pub coarsest_partition: Option<Vec<u32>>,
+}
+
+impl Hierarchy {
+    pub fn coarsest<'a>(&'a self, input: &'a Graph) -> &'a Graph {
+        self.levels.last().map(|l| &l.graph).unwrap_or(input)
+    }
+
+    /// Number of contraction steps performed.
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+}
+
+/// Paper §2.1: `L_max := (1+ε)·c(V)/k + max_v c(v)`.
+pub fn l_max(total_weight: Weight, k: usize, epsilon: f64, max_node_weight: Weight) -> Weight {
+    ((1.0 + epsilon) * total_weight as f64 / k as f64).ceil() as Weight + max_node_weight
+}
+
+/// Paper §3.1 stopping size: `max(60k, n/(60k))`.
+pub fn coarsest_size_threshold(n_input: usize, k: usize) -> usize {
+    (60 * k).max(n_input / (60 * k).max(1))
+}
+
+/// Compute the clustering for one coarsening step.
+fn cluster_once(
+    g: &Graph,
+    k: usize,
+    epsilon: f64,
+    scheme: &CoarseningScheme,
+    respect: Option<&[u32]>,
+    rng: &mut Rng,
+) -> Clustering {
+    match scheme {
+        CoarseningScheme::ClusterLpa {
+            lpa,
+            size_factor,
+            ensemble,
+        } => {
+            let lmax = l_max(g.total_node_weight(), k, epsilon, g.max_node_weight());
+            // U := max(max_v c(v), W) with W = L_max / (f·k)
+            let w = (lmax as f64 / (size_factor * k as f64)).floor() as Weight;
+            let upper = w.max(g.max_node_weight()).max(1);
+            match ensemble {
+                Some(count) => ensemble_sclap(g, upper, lpa, *count, respect, rng),
+                None => size_constrained_lpa(g, upper, lpa, None, respect, rng).0,
+            }
+        }
+        CoarseningScheme::Matching { two_hop } => {
+            let lmax = l_max(g.total_node_weight(), k, epsilon, g.max_node_weight());
+            // Metis-style bound: pair weight well under a block's weight.
+            let upper = (lmax as f64 / 1.5).max(2.0) as Weight;
+            let mut c = heavy_edge_matching(g, upper, *two_hop, rng);
+            if let Some(blocks) = respect {
+                // Baseline V-cycles: split any matched pair crossing a
+                // block boundary (cut edges must not be contracted).
+                c = split_cross_block_pairs(g, c, blocks);
+            }
+            c
+        }
+    }
+}
+
+fn split_cross_block_pairs(g: &Graph, c: Clustering, blocks: &[u32]) -> Clustering {
+    let mut labels = c.labels;
+    let n = labels.len();
+    // Any cluster containing two blocks is split: each member keeps a
+    // label derived from (cluster, block) pairs.
+    let mut seen: std::collections::HashMap<(u32, u32), u32> = std::collections::HashMap::new();
+    let mut next = 0u32;
+    for v in 0..n {
+        let key = (labels[v], blocks[v]);
+        let id = *seen.entry(key).or_insert_with(|| {
+            let id = next;
+            next += 1;
+            id
+        });
+        labels[v] = id;
+    }
+    Clustering::from_labels(g, labels)
+}
+
+/// Build the full hierarchy.
+///
+/// `respect`: input partition for V-cycles — every cluster stays inside
+/// one block, and the returned `coarsest_partition` is the projection.
+/// `min_shrink`: abort coarsening when a step shrinks the node count by
+/// less than this factor (guards against stalls; matching on complex
+/// networks routinely stalls, which is the paper's motivation).
+pub struct CoarseningParams {
+    pub k: usize,
+    pub epsilon: f64,
+    pub scheme: CoarseningScheme,
+    pub max_levels: usize,
+    pub min_shrink: f64,
+}
+
+impl CoarseningParams {
+    pub fn new(k: usize, epsilon: f64, scheme: CoarseningScheme) -> Self {
+        CoarseningParams {
+            k,
+            epsilon,
+            scheme,
+            max_levels: 64,
+            min_shrink: 0.98,
+        }
+    }
+}
+
+pub fn coarsen(
+    input: &Graph,
+    params: &CoarseningParams,
+    respect: Option<&[u32]>,
+    rng: &mut Rng,
+) -> Hierarchy {
+    let threshold = coarsest_size_threshold(input.n(), params.k);
+    let mut levels: Vec<Level> = Vec::new();
+    let mut partition: Option<Vec<u32>> = respect.map(|r| r.to_vec());
+
+    loop {
+        let current: &Graph = levels.last().map(|l| &l.graph).unwrap_or(input);
+        if current.n() <= threshold || levels.len() >= params.max_levels {
+            break;
+        }
+        let clustering = cluster_once(
+            current,
+            params.k,
+            params.epsilon,
+            &params.scheme,
+            partition.as_deref(),
+            rng,
+        );
+        if clustering.num_clusters as f64 > params.min_shrink * current.n() as f64 {
+            break; // stalled
+        }
+        let Contraction { coarse, map } = contract(current, &clustering);
+        // Project the partition: every cluster is inside one block.
+        partition = partition.map(|p| {
+            let mut coarse_part = vec![u32::MAX; coarse.n()];
+            for (v, &c) in map.iter().enumerate() {
+                debug_assert!(
+                    coarse_part[c as usize] == u32::MAX || coarse_part[c as usize] == p[v],
+                    "cluster crosses blocks"
+                );
+                coarse_part[c as usize] = p[v];
+            }
+            coarse_part
+        });
+        levels.push(Level { graph: coarse, map });
+    }
+
+    Hierarchy {
+        levels,
+        coarsest_partition: partition,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::label_propagation::NodeOrdering;
+    use crate::generators;
+
+    fn cluster_scheme() -> CoarseningScheme {
+        CoarseningScheme::ClusterLpa {
+            lpa: LpaConfig::clustering(10, NodeOrdering::Degree),
+            size_factor: 18.0,
+            ensemble: None,
+        }
+    }
+
+    #[test]
+    fn lmax_formula() {
+        // unweighted: (1+0.03)*1000/4 + 1 = 258.5 -> ceil 258 + 1
+        assert_eq!(l_max(1000, 4, 0.03, 1), 259);
+        assert_eq!(l_max(100, 2, 0.0, 1), 51);
+    }
+
+    #[test]
+    fn threshold_formula() {
+        assert_eq!(coarsest_size_threshold(1_000_000, 2), 8333);
+        assert_eq!(coarsest_size_threshold(1000, 16), 960);
+        assert_eq!(coarsest_size_threshold(10, 4), 240);
+    }
+
+    #[test]
+    fn cluster_coarsening_shrinks_complex_network() {
+        let mut rng = Rng::new(1);
+        let g = crate::graph::subgraph::largest_component(&generators::rmat(
+            12, 16000, 0.57, 0.19, 0.19, &mut rng,
+        ));
+        let params = CoarseningParams::new(4, 0.03, cluster_scheme());
+        let h = coarsen(&g, &params, None, &mut Rng::new(2));
+        assert!(h.depth() >= 1);
+        let coarsest = h.coarsest(&g);
+        // The natural floor of cluster coarsening is ≈ c(V)/W ≈ f·k
+        // clusters; assert at least a 4x shrink on a web-like graph
+        // (one level of matching could only give 2x).
+        assert!(coarsest.n() * 4 < g.n(), "coarsest n = {}", coarsest.n());
+        assert_eq!(coarsest.total_node_weight(), g.total_node_weight());
+        assert!(coarsest.validate().is_ok());
+    }
+
+    #[test]
+    fn cluster_beats_matching_shrink_rate() {
+        // The paper's headline coarsening claim, in miniature.
+        let mut rng = Rng::new(3);
+        let g = crate::graph::subgraph::largest_component(&generators::rmat(
+            12, 20000, 0.57, 0.19, 0.19, &mut rng,
+        ));
+        let cp = CoarseningParams::new(4, 0.03, cluster_scheme());
+        let hc = coarsen(&g, &cp, None, &mut Rng::new(4));
+        let mp = CoarseningParams::new(
+            4,
+            0.03,
+            CoarseningScheme::Matching { two_hop: true },
+        );
+        let hm = coarsen(&g, &mp, None, &mut Rng::new(4));
+        let first_cluster = hc.levels.first().map(|l| l.graph.n()).unwrap_or(g.n());
+        let first_match = hm.levels.first().map(|l| l.graph.n()).unwrap_or(g.n());
+        assert!(
+            first_cluster * 2 < first_match,
+            "cluster {} vs matching {}",
+            first_cluster,
+            first_match
+        );
+    }
+
+    #[test]
+    fn small_graph_not_coarsened() {
+        let g = crate::graph::karate_club();
+        let params = CoarseningParams::new(2, 0.03, cluster_scheme());
+        let h = coarsen(&g, &params, None, &mut Rng::new(5));
+        assert_eq!(h.depth(), 0); // 34 < 120 threshold
+        assert_eq!(h.coarsest(&g).n(), 34);
+    }
+
+    #[test]
+    fn respect_projects_partition() {
+        let mut rng = Rng::new(6);
+        let g = generators::barabasi_albert(3000, 4, &mut rng);
+        // arbitrary 2-partition by parity
+        let part: Vec<u32> = (0..g.n() as u32).map(|v| v % 2).collect();
+        let mut params = CoarseningParams::new(2, 0.03, cluster_scheme());
+        params.max_levels = 3;
+        let h = coarsen(&g, &params, Some(&part), &mut Rng::new(7));
+        let coarsest = h.coarsest(&g);
+        let coarse_part = h.coarsest_partition.as_ref().expect("partition projected");
+        assert_eq!(coarse_part.len(), coarsest.n());
+        // cut preserved exactly through all levels
+        let fine_cut: Weight = g
+            .edges()
+            .filter(|&(u, v, _)| part[u as usize] != part[v as usize])
+            .map(|(_, _, w)| w)
+            .sum();
+        let coarse_cut: Weight = coarsest
+            .edges()
+            .filter(|&(u, v, _)| coarse_part[u as usize] != coarse_part[v as usize])
+            .map(|(_, _, w)| w)
+            .sum();
+        assert_eq!(fine_cut, coarse_cut);
+    }
+
+    #[test]
+    fn matching_scheme_respects_blocks_too() {
+        let mut rng = Rng::new(8);
+        let g = generators::erdos_renyi(500, 2000, &mut rng);
+        let part: Vec<u32> = (0..g.n() as u32).map(|v| v % 2).collect();
+        let params = CoarseningParams::new(
+            2,
+            0.03,
+            CoarseningScheme::Matching { two_hop: true },
+        );
+        let h = coarsen(&g, &params, Some(&part), &mut Rng::new(9));
+        if let Some(cp) = &h.coarsest_partition {
+            assert_eq!(cp.len(), h.coarsest(&g).n());
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Coarsening phase: cluster contraction (the paper's contribution),
+//! the matching baseline, and hierarchy construction.
+
+pub mod contract;
+pub mod hierarchy;
+pub mod matching;
+
+pub use contract::{contract, project_partition, Contraction};
+pub use hierarchy::{
+    coarsen, coarsest_size_threshold, l_max, CoarseningParams, CoarseningScheme, Hierarchy,
+    Level,
+};
+pub use matching::heavy_edge_matching;

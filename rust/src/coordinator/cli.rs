@@ -1,0 +1,131 @@
+//! Minimal CLI argument parsing (the `clap` crate is not available
+//! offline — DESIGN.md §3). Flags are `--key value` or `--flag`.
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand plus `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut iter = args.into_iter().peekable();
+        let command = iter.next().unwrap_or_default();
+        let mut options = HashMap::new();
+        let mut positional = Vec::new();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                let value = match iter.peek() {
+                    Some(next) if !next.starts_with("--") => iter.next().unwrap(),
+                    _ => "true".to_string(), // boolean flag
+                };
+                if options.insert(key.to_string(), value).is_some() {
+                    return Err(format!("duplicate option --{key}"));
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Args {
+            command,
+            options,
+            positional,
+        })
+    }
+
+    pub fn parse_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad float {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = parse("partition --k 8 --preset UFast --graph g.bin");
+        assert_eq!(a.command, "partition");
+        assert_eq!(a.get("k"), Some("8"));
+        assert_eq!(a.get("preset"), Some("UFast"));
+        assert_eq!(a.get_usize("k", 2).unwrap(), 8);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("bench --quick --reps 3");
+        assert!(a.flag("quick"));
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.get_usize("reps", 10).unwrap(), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("stats");
+        assert_eq!(a.get_or("graph", "none"), "none");
+        assert_eq!(a.get_f64("epsilon", 0.03).unwrap(), 0.03);
+        assert_eq!(a.get_u64("seed", 1).unwrap(), 1);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("stats file1.graph file2.graph --quick");
+        assert_eq!(a.positional, vec!["file1.graph", "file2.graph"]);
+    }
+
+    #[test]
+    fn duplicate_option_rejected() {
+        assert!(Args::parse(
+            "x --k 1 --k 2".split_whitespace().map(String::from)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = parse("x --k eight");
+        assert!(a.get_usize("k", 2).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! L3 coordinator: the partitioning service (worker pool, repetition
+//! batching, aggregation — the paper's §5 protocol) and the CLI front end.
+
+pub mod cli;
+pub mod service;
+
+pub use cli::Args;
+pub use service::{default_seeds, Aggregate, Coordinator, RunOutcome};

@@ -1,0 +1,273 @@
+//! The partitioning service coordinator.
+//!
+//! The paper's evaluation protocol (§5: "we perform ten repetitions for
+//! each configuration of the algorithm and report the arithmetic
+//! average of computed cut size, running time and the best cut found")
+//! is a first-class L3 feature here: a worker pool executes repetition
+//! jobs in parallel, the coordinator aggregates average/best/geomean and
+//! retains the best partition. The bench harness and the CLI both sit
+//! on top of this service.
+//!
+//! Implementation: std threads + mpsc channels (tokio is not available
+//! offline — DESIGN.md §3). Jobs are deterministic per seed regardless
+//! of worker count or scheduling (invariant 6, DESIGN.md §7).
+
+use crate::graph::csr::{Graph, Weight};
+use crate::partitioning::config::PartitionConfig;
+use crate::partitioning::multilevel::{MultilevelPartitioner, PartitionResult};
+use crate::util::timer::Stats;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// One repetition outcome (a trimmed [`PartitionResult`]).
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub seed: u64,
+    pub cut: Weight,
+    pub seconds: f64,
+    pub imbalance: f64,
+    pub feasible: bool,
+    pub initial_cut: Weight,
+    pub levels: usize,
+    pub coarsest_n: usize,
+    pub blocks: Vec<u32>,
+}
+
+impl RunOutcome {
+    fn from_result(seed: u64, r: &PartitionResult) -> Self {
+        RunOutcome {
+            seed,
+            cut: r.metrics.cut,
+            seconds: r.seconds,
+            imbalance: r.metrics.imbalance,
+            feasible: r.metrics.feasible,
+            initial_cut: r.initial_cut,
+            levels: r.levels,
+            coarsest_n: r.coarsest_n,
+            blocks: r.partition.blocks.clone(),
+        }
+    }
+}
+
+/// Aggregate over the repetitions of one (instance, config, k) cell —
+/// exactly the numbers Table 2 / Table 3 report.
+#[derive(Debug, Clone)]
+pub struct Aggregate {
+    pub runs: Vec<RunOutcome>,
+    pub avg_cut: f64,
+    pub best_cut: Weight,
+    pub avg_seconds: f64,
+    pub avg_initial_cut: f64,
+    pub infeasible_runs: usize,
+    /// Blocks of the best run.
+    pub best_blocks: Vec<u32>,
+}
+
+impl Aggregate {
+    pub fn from_runs(mut runs: Vec<RunOutcome>) -> Aggregate {
+        assert!(!runs.is_empty());
+        runs.sort_by_key(|r| r.seed); // deterministic order
+        let mut cut = Stats::new();
+        let mut secs = Stats::new();
+        let mut init = Stats::new();
+        for r in &runs {
+            cut.add(r.cut as f64);
+            secs.add(r.seconds);
+            init.add(r.initial_cut as f64);
+        }
+        let best = runs
+            .iter()
+            .min_by_key(|r| r.cut)
+            .expect("non-empty runs");
+        Aggregate {
+            avg_cut: cut.mean(),
+            best_cut: best.cut,
+            avg_seconds: secs.mean(),
+            avg_initial_cut: init.mean(),
+            infeasible_runs: runs.iter().filter(|r| !r.feasible).count(),
+            best_blocks: best.blocks.clone(),
+            runs,
+        }
+    }
+}
+
+/// A work item: one partitioning repetition.
+struct Job {
+    graph: Arc<Graph>,
+    config: PartitionConfig,
+    seed: u64,
+    reply: Sender<RunOutcome>,
+}
+
+/// Long-lived worker pool executing partition jobs.
+pub struct Coordinator {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    worker_count: usize,
+}
+
+impl Coordinator {
+    /// Spawn `workers` threads (0 ⇒ available parallelism).
+    pub fn new(workers: usize) -> Self {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4)
+        } else {
+            workers
+        };
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("sclap-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("rx poisoned");
+                            guard.recv()
+                        };
+                        let Ok(job) = job else { break };
+                        // Failure containment: a panicking job must not
+                        // take the worker (and every queued job) down.
+                        let seed = job.seed;
+                        let outcome = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                let partitioner = MultilevelPartitioner::new(job.config);
+                                let result = partitioner.partition(&job.graph, seed);
+                                RunOutcome::from_result(seed, &result)
+                            }),
+                        );
+                        match outcome {
+                            // Receiver may have hung up (caller gave up)
+                            // — that's fine, drop the result.
+                            Ok(out) => {
+                                let _ = job.reply.send(out);
+                            }
+                            Err(_) => {
+                                eprintln!("sclap-worker-{i}: job seed={seed} panicked");
+                                // reply sender dropped ⇒ the aggregator's
+                                // count check reports the missing run.
+                            }
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Coordinator {
+            tx: Some(tx),
+            workers: handles,
+            worker_count: workers,
+        }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.worker_count
+    }
+
+    /// Run the §5 protocol: one repetition per seed, aggregated.
+    pub fn partition_repeated(
+        &self,
+        graph: Arc<Graph>,
+        config: &PartitionConfig,
+        seeds: &[u64],
+    ) -> Aggregate {
+        assert!(!seeds.is_empty());
+        let (reply_tx, reply_rx): (Sender<RunOutcome>, Receiver<RunOutcome>) = channel();
+        for &seed in seeds {
+            self.tx
+                .as_ref()
+                .expect("coordinator alive")
+                .send(Job {
+                    graph: graph.clone(),
+                    config: config.clone(),
+                    seed,
+                    reply: reply_tx.clone(),
+                })
+                .expect("workers alive");
+        }
+        drop(reply_tx);
+        let runs: Vec<RunOutcome> = reply_rx.iter().collect();
+        assert_eq!(runs.len(), seeds.len(), "every job must report");
+        Aggregate::from_runs(runs)
+    }
+
+    /// Convenience: a single run.
+    pub fn partition_once(
+        &self,
+        graph: Arc<Graph>,
+        config: &PartitionConfig,
+        seed: u64,
+    ) -> RunOutcome {
+        self.partition_repeated(graph, config, &[seed])
+            .runs
+            .into_iter()
+            .next()
+            .expect("one run")
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers drain and exit
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The default seed set for the §5 protocol (10 repetitions).
+pub fn default_seeds(n: usize) -> Vec<u64> {
+    (1..=n as u64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::karate_club;
+    use crate::partitioning::config::{PartitionConfig, Preset};
+
+    #[test]
+    fn repeated_runs_aggregate() {
+        let g = Arc::new(karate_club());
+        let coord = Coordinator::new(2);
+        let config = PartitionConfig::preset(Preset::CFast, 2);
+        let agg = coord.partition_repeated(g.clone(), &config, &default_seeds(5));
+        assert_eq!(agg.runs.len(), 5);
+        assert!(agg.best_cut as f64 <= agg.avg_cut);
+        assert!(agg.avg_seconds > 0.0);
+        assert_eq!(agg.best_blocks.len(), g.n());
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let g = Arc::new(karate_club());
+        let config = PartitionConfig::preset(Preset::CEco, 4);
+        let run = |workers| {
+            let coord = Coordinator::new(workers);
+            let agg = coord.partition_repeated(g.clone(), &config, &default_seeds(4));
+            agg.runs.iter().map(|r| (r.seed, r.cut)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn single_run_matches_direct_call() {
+        let g = Arc::new(karate_club());
+        let coord = Coordinator::new(1);
+        let config = PartitionConfig::preset(Preset::CFast, 2);
+        let via_service = coord.partition_once(g.clone(), &config, 7);
+        let direct = MultilevelPartitioner::new(config).partition(&g, 7);
+        assert_eq!(via_service.cut, direct.metrics.cut);
+        assert_eq!(via_service.blocks, direct.partition.blocks);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let coord = Coordinator::new(3);
+        assert_eq!(coord.worker_count(), 3);
+        drop(coord); // must not hang
+    }
+}

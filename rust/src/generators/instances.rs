@@ -1,0 +1,305 @@
+//! Named benchmark instance suite — the stand-in for the paper's Table 1.
+//!
+//! Each entry mirrors a *family* from the paper's collection (p2p,
+//! e-mail, social, co-authorship, citation, web) with a deterministic
+//! generator + seed, scaled so the full Table-2 protocol runs on one
+//! container. The `huge` suite mirrors Table 3/4's web crawls at the
+//! largest size practical here.
+
+use super::*;
+use crate::graph::csr::Graph;
+use crate::util::rng::Rng;
+
+/// Family tag — which paper instance class this stands in for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    PeerToPeer,
+    Social,
+    Email,
+    Citation,
+    CoAuthor,
+    Web,
+    Mesh,
+    Synthetic,
+}
+
+/// A named, reproducible benchmark instance.
+#[derive(Debug, Clone)]
+pub struct InstanceSpec {
+    pub name: &'static str,
+    pub family: Family,
+    /// Which paper instance this is modeled after.
+    pub models: &'static str,
+    pub seed: u64,
+    gen: GenKind,
+}
+
+#[derive(Debug, Clone)]
+enum GenKind {
+    Rmat { scale: u32, m: usize, a: f64, b: f64, c: f64 },
+    Ba { n: usize, attach: usize },
+    Ws { n: usize, k: usize, beta: f64 },
+    Er { n: usize, m: usize },
+    /// LFR-style: community structure + power-law degrees. `mu` is the
+    /// mixing parameter (fraction of inter-community stubs) — low for
+    /// web crawls, higher for social networks.
+    Lfr { n: usize, avg_deg: f64, mu: f64 },
+    Grid { rows: usize, cols: usize },
+    Karate,
+}
+
+impl InstanceSpec {
+    /// Materialize the instance (deterministic for the stored seed).
+    /// R-MAT and ER stand-ins are reduced to their largest connected
+    /// component — the form in which the paper's real instances are
+    /// distributed (crawl giant components, "PGPgiantcompo", …).
+    pub fn build(&self) -> Graph {
+        let mut rng = Rng::new(self.seed);
+        match &self.gen {
+            GenKind::Rmat { scale, m, a, b, c } => {
+                crate::graph::subgraph::largest_component(&rmat(*scale, *m, *a, *b, *c, &mut rng))
+            }
+            GenKind::Ba { n, attach } => barabasi_albert(*n, *attach, &mut rng),
+            GenKind::Ws { n, k, beta } => watts_strogatz(*n, *k, *beta, &mut rng),
+            GenKind::Er { n, m } => {
+                crate::graph::subgraph::largest_component(&erdos_renyi(*n, *m, &mut rng))
+            }
+            GenKind::Lfr { n, avg_deg, mu } => crate::graph::subgraph::largest_component(
+                &super::lfr::lfr_like(*n, *avg_deg, *mu, &mut rng).0,
+            ),
+            GenKind::Grid { rows, cols } => grid2d(*rows, *cols),
+            GenKind::Karate => crate::graph::karate::karate_club(),
+        }
+    }
+}
+
+/// The "large graphs" suite (stand-in for Table 1 top block, scaled).
+pub fn large_suite() -> Vec<InstanceSpec> {
+    vec![
+        InstanceSpec {
+            name: "karate",
+            family: Family::Social,
+            models: "sanity (real data)",
+            seed: 0,
+            gen: GenKind::Karate,
+        },
+        InstanceSpec {
+            name: "p2p-sim",
+            family: Family::PeerToPeer,
+            models: "p2p-Gnutella04",
+            seed: 101,
+            gen: GenKind::Er { n: 6400, m: 29000 },
+        },
+        InstanceSpec {
+            name: "word-sim",
+            family: Family::Synthetic,
+            models: "wordassociation-2011",
+            seed: 102,
+            gen: GenKind::Ba { n: 10600, attach: 6 },
+        },
+        InstanceSpec {
+            name: "smallworld-sim",
+            family: Family::Social,
+            models: "small-world contrast (WS)",
+            seed: 114,
+            gen: GenKind::Ws { n: 20000, k: 4, beta: 0.08 },
+        },
+        InstanceSpec {
+            name: "pgp-sim",
+            family: Family::Social,
+            models: "PGPgiantcompo",
+            seed: 103,
+            gen: GenKind::Lfr { n: 10700, avg_deg: 4.6, mu: 0.25 },
+        },
+        InstanceSpec {
+            name: "email-sim",
+            family: Family::Email,
+            models: "email-EuAll",
+            seed: 104,
+            gen: GenKind::Rmat { scale: 14, m: 60000, a: 0.57, b: 0.19, c: 0.19 },
+        },
+        InstanceSpec {
+            name: "as-sim",
+            family: Family::Web,
+            models: "as-22july06",
+            seed: 105,
+            gen: GenKind::Ba { n: 23000, attach: 2 },
+        },
+        InstanceSpec {
+            name: "slashdot-sim",
+            family: Family::Social,
+            models: "soc-Slashdot0902",
+            seed: 106,
+            gen: GenKind::Lfr { n: 28500, avg_deg: 26.0, mu: 0.35 },
+        },
+        InstanceSpec {
+            name: "brightkite-sim",
+            family: Family::Social,
+            models: "loc-brightkite",
+            seed: 107,
+            gen: GenKind::Lfr { n: 56700, avg_deg: 7.5, mu: 0.3 },
+        },
+        InstanceSpec {
+            name: "enron-sim",
+            family: Family::Email,
+            models: "enron",
+            seed: 108,
+            gen: GenKind::Rmat { scale: 16, m: 254000, a: 0.55, b: 0.2, c: 0.2 },
+        },
+        InstanceSpec {
+            name: "gowalla-sim",
+            family: Family::Social,
+            models: "loc-gowalla",
+            seed: 109,
+            gen: GenKind::Lfr { n: 196000, avg_deg: 9.7, mu: 0.3 },
+        },
+        InstanceSpec {
+            name: "coauthor-sim",
+            family: Family::CoAuthor,
+            models: "coAuthorsCiteseer",
+            seed: 110,
+            gen: GenKind::Lfr { n: 227000, avg_deg: 7.2, mu: 0.15 },
+        },
+        InstanceSpec {
+            name: "citation-sim",
+            family: Family::Citation,
+            models: "citationCiteseer",
+            seed: 111,
+            gen: GenKind::Lfr { n: 268000, avg_deg: 8.6, mu: 0.2 },
+        },
+        InstanceSpec {
+            name: "web-sim",
+            family: Family::Web,
+            models: "cnr-2000 / web-Google",
+            seed: 112,
+            gen: GenKind::Lfr { n: 340000, avg_deg: 12.0, mu: 0.08 },
+        },
+        InstanceSpec {
+            name: "mesh-contrast",
+            family: Family::Mesh,
+            models: "regular-mesh contrast (not in paper's set)",
+            seed: 113,
+            gen: GenKind::Grid { rows: 300, cols: 300 },
+        },
+    ]
+}
+
+/// Smaller suite for CI-speed tests (subset of `large_suite` shapes).
+pub fn tiny_suite() -> Vec<InstanceSpec> {
+    vec![
+        InstanceSpec {
+            name: "karate",
+            family: Family::Social,
+            models: "sanity",
+            seed: 0,
+            gen: GenKind::Karate,
+        },
+        InstanceSpec {
+            name: "tiny-rmat",
+            family: Family::Web,
+            models: "web-like",
+            seed: 201,
+            gen: GenKind::Rmat { scale: 10, m: 5000, a: 0.57, b: 0.19, c: 0.19 },
+        },
+        InstanceSpec {
+            name: "tiny-ba",
+            family: Family::Citation,
+            models: "citation-like",
+            seed: 202,
+            gen: GenKind::Lfr { n: 2000, avg_deg: 8.0, mu: 0.2 },
+        },
+        InstanceSpec {
+            name: "tiny-ws",
+            family: Family::Social,
+            models: "small-world",
+            seed: 203,
+            gen: GenKind::Lfr { n: 1500, avg_deg: 10.0, mu: 0.35 },
+        },
+        InstanceSpec {
+            name: "tiny-grid",
+            family: Family::Mesh,
+            models: "mesh contrast",
+            seed: 204,
+            gen: GenKind::Grid { rows: 40, cols: 40 },
+        },
+    ]
+}
+
+/// The "huge graphs" suite (stand-in for Tables 3/4, scaled to this
+/// container: millions of edges instead of billions).
+pub fn huge_suite() -> Vec<InstanceSpec> {
+    vec![
+        InstanceSpec {
+            name: "uk2002-sim",
+            family: Family::Web,
+            models: "uk-2002 (≈262M edges)",
+            seed: 301,
+            gen: GenKind::Lfr { n: 1_000_000, avg_deg: 14.0, mu: 0.06 },
+        },
+        InstanceSpec {
+            name: "arabic-sim",
+            family: Family::Web,
+            models: "arabic-2005 (≈553M edges)",
+            seed: 302,
+            gen: GenKind::Lfr { n: 1_400_000, avg_deg: 17.0, mu: 0.08 },
+        },
+        InstanceSpec {
+            name: "sk-sim",
+            family: Family::Web,
+            models: "sk-2005 (≈1.8G edges)",
+            seed: 303,
+            gen: GenKind::Lfr { n: 1_800_000, avg_deg: 18.0, mu: 0.12 },
+        },
+        InstanceSpec {
+            name: "uk2007-sim",
+            family: Family::Web,
+            models: "uk-2007 (≈3.3G edges)",
+            seed: 304,
+            gen: GenKind::Lfr { n: 2_400_000, avg_deg: 16.0, mu: 0.06 },
+        },
+    ]
+}
+
+/// Find an instance by name across all suites.
+pub fn by_name(name: &str) -> Option<InstanceSpec> {
+    large_suite()
+        .into_iter()
+        .chain(tiny_suite())
+        .chain(huge_suite())
+        .find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_suite_builds_and_validates() {
+        for spec in tiny_suite() {
+            let g = spec.build();
+            assert!(g.n() > 0, "{}", spec.name);
+            assert!(g.validate().is_ok(), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn instances_deterministic() {
+        let spec = &tiny_suite()[1];
+        assert_eq!(spec.build(), spec.build());
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("karate").is_some());
+        assert!(by_name("uk2007-sim").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn large_suite_spans_families() {
+        let suite = large_suite();
+        assert!(suite.len() >= 12);
+        let has = |f: Family| suite.iter().any(|s| s.family == f);
+        assert!(has(Family::Web) && has(Family::Social) && has(Family::Mesh));
+    }
+}

@@ -1,0 +1,314 @@
+//! Synthetic graph generators — the substitution for the paper's
+//! SNAP/LAW/DIMACS instance collection (DESIGN.md §3).
+//!
+//! The paper's claims depend on *structural class*, not on particular
+//! crawls: cluster contraction wins on scale-free small-world networks
+//! and ties on regular meshes. We therefore generate:
+//!
+//! - [`rmat`] — recursive-matrix graphs (Chakrabarti et al.); with the
+//!   classic (0.57, 0.19, 0.19) web-graph parameters they reproduce the
+//!   heavy-tailed, locally-dense structure of crawls like uk-2002.
+//! - [`barabasi_albert`] — preferential attachment; citation /
+//!   co-authorship degree laws (coAuthorsDBLP, citationCiteseer).
+//! - [`watts_strogatz`] — small-world rewired rings (high clustering,
+//!   small diameter; social-network-like neighborhoods).
+//! - [`erdos_renyi`] — G(n, m) noise baseline.
+//! - [`planted_partition`] — stochastic block model with known ground
+//!   truth (used to sanity-check that the pipeline *finds* structure).
+//! - [`lfr::lfr_like`] — LFR-style: power-law degrees AND power-law
+//!   communities with a mixing parameter; the instance suite's stand-in
+//!   for real crawls/social networks, which combine both properties
+//!   (pure R-MAT has no community structure, see lfr.rs).
+//! - [`grid2d`] / [`torus2d`] — regular meshes, the contrast class where
+//!   matching-based coarsening is traditionally fine.
+
+pub mod instances;
+pub mod lfr;
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::csr::{Graph, NodeId};
+use crate::util::rng::Rng;
+
+/// R-MAT generator: `n = 2^scale` nodes, `m` undirected edges, recursive
+/// quadrant probabilities (a, b, c); d = 1 - a - b - c.
+/// Classic web-graph parameters: a=0.57, b=0.19, c=0.19.
+pub fn rmat(scale: u32, m: usize, a: f64, b: f64, c: f64, rng: &mut Rng) -> Graph {
+    assert!(a + b + c < 1.0 + 1e-9, "quadrant probabilities must sum < 1");
+    let n = 1usize << scale;
+    let mut builder = GraphBuilder::with_edge_capacity(n, m);
+    let mut produced = 0usize;
+    // Oversample: dedup + self-loop drop eats some edges.
+    let mut attempts = 0usize;
+    let max_attempts = m * 8 + 1024;
+    while produced < m && attempts < max_attempts {
+        attempts += 1;
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.f64();
+            // noise the quadrant probabilities slightly per level (common
+            // practice to avoid exact self-similar striping)
+            let (qa, qb, qc) = (a, b, c);
+            u <<= 1;
+            v <<= 1;
+            if r < qa {
+                // top-left
+            } else if r < qa + qb {
+                v |= 1;
+            } else if r < qa + qb + qc {
+                u |= 1;
+            } else {
+                u |= 1;
+                v |= 1;
+            }
+        }
+        if u == v {
+            continue;
+        }
+        builder.add_edge(u as NodeId, v as NodeId, 1);
+        produced += 1;
+    }
+    builder.build()
+}
+
+/// Barabási–Albert preferential attachment: each new node attaches to
+/// `attach` existing nodes, chosen proportionally to degree.
+pub fn barabasi_albert(n: usize, attach: usize, rng: &mut Rng) -> Graph {
+    assert!(attach >= 1);
+    let attach = attach.min(n.saturating_sub(1)).max(1);
+    let mut builder = GraphBuilder::with_edge_capacity(n, n * attach);
+    // Repeated-endpoint list trick: sampling uniformly from the list of
+    // all edge endpoints is sampling proportional to degree.
+    let mut endpoints: Vec<NodeId> = Vec::with_capacity(2 * n * attach);
+    // Seed with a small clique of `attach + 1` nodes.
+    let seed = (attach + 1).min(n);
+    for u in 0..seed {
+        for v in (u + 1)..seed {
+            builder.add_edge(u as NodeId, v as NodeId, 1);
+            endpoints.push(u as NodeId);
+            endpoints.push(v as NodeId);
+        }
+    }
+    for v in seed..n {
+        let mut chosen: Vec<NodeId> = Vec::with_capacity(attach);
+        let mut guard = 0;
+        while chosen.len() < attach && guard < 50 * attach {
+            guard += 1;
+            let t = endpoints[rng.below(endpoints.len())];
+            if t as usize != v && !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &t in &chosen {
+            builder.add_edge(v as NodeId, t, 1);
+            endpoints.push(v as NodeId);
+            endpoints.push(t);
+        }
+    }
+    builder.build()
+}
+
+/// Watts–Strogatz small world: ring lattice with `k` nearest neighbors
+/// per side, each edge rewired with probability `beta`.
+pub fn watts_strogatz(n: usize, k: usize, beta: f64, rng: &mut Rng) -> Graph {
+    assert!(n > 2 * k, "need n > 2k");
+    let mut builder = GraphBuilder::with_edge_capacity(n, n * k);
+    for v in 0..n {
+        for off in 1..=k {
+            let u = (v + off) % n;
+            if rng.chance(beta) {
+                // Rewire the far endpoint uniformly (avoiding v).
+                let mut t = rng.below(n);
+                let mut guard = 0;
+                while (t == v || t == u) && guard < 32 {
+                    t = rng.below(n);
+                    guard += 1;
+                }
+                builder.add_edge(v as NodeId, t as NodeId, 1);
+            } else {
+                builder.add_edge(v as NodeId, u as NodeId, 1);
+            }
+        }
+    }
+    builder.build()
+}
+
+/// Erdős–Rényi G(n, m): m uniform random edges.
+pub fn erdos_renyi(n: usize, m: usize, rng: &mut Rng) -> Graph {
+    let mut builder = GraphBuilder::with_edge_capacity(n, m);
+    let mut produced = 0;
+    let mut attempts = 0;
+    while produced < m && attempts < 8 * m + 1024 {
+        attempts += 1;
+        let u = rng.below(n);
+        let v = rng.below(n);
+        if u == v {
+            continue;
+        }
+        builder.add_edge(u as NodeId, v as NodeId, 1);
+        produced += 1;
+    }
+    builder.build()
+}
+
+/// Planted-partition / stochastic block model: `blocks` groups of
+/// `block_size` nodes; intra-block edge probability `p_in`, inter `p_out`.
+/// Returns the graph and the ground-truth block of each node.
+pub fn planted_partition(
+    blocks: usize,
+    block_size: usize,
+    p_in: f64,
+    p_out: f64,
+    rng: &mut Rng,
+) -> (Graph, Vec<u32>) {
+    let n = blocks * block_size;
+    let truth: Vec<u32> = (0..n).map(|v| (v / block_size) as u32).collect();
+    let mut builder = GraphBuilder::new(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let p = if truth[u] == truth[v] { p_in } else { p_out };
+            if rng.chance(p) {
+                builder.add_edge(u as NodeId, v as NodeId, 1);
+            }
+        }
+    }
+    (builder.build(), truth)
+}
+
+/// 2D grid mesh (rows × cols, 4-neighborhood) — the "regular" contrast.
+pub fn grid2d(rows: usize, cols: usize) -> Graph {
+    let n = rows * cols;
+    let mut builder = GraphBuilder::with_edge_capacity(n, 2 * n);
+    let id = |r: usize, c: usize| (r * cols + c) as NodeId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                builder.add_edge(id(r, c), id(r, c + 1), 1);
+            }
+            if r + 1 < rows {
+                builder.add_edge(id(r, c), id(r + 1, c), 1);
+            }
+        }
+    }
+    builder.build()
+}
+
+/// 2D torus (wrap-around grid) — regular, no boundary effects.
+pub fn torus2d(rows: usize, cols: usize) -> Graph {
+    assert!(rows >= 3 && cols >= 3);
+    let n = rows * cols;
+    let mut builder = GraphBuilder::with_edge_capacity(n, 2 * n);
+    let id = |r: usize, c: usize| (r * cols + c) as NodeId;
+    for r in 0..rows {
+        for c in 0..cols {
+            builder.add_edge(id(r, c), id(r, (c + 1) % cols), 1);
+            builder.add_edge(id(r, c), id((r + 1) % rows, c), 1);
+        }
+    }
+    builder.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats::{component_count, compute_stats};
+
+    #[test]
+    fn rmat_shape_and_validity() {
+        let mut rng = Rng::new(1);
+        let g = rmat(10, 4000, 0.57, 0.19, 0.19, &mut rng);
+        assert_eq!(g.n(), 1024);
+        assert!(g.m() > 2500, "m={}", g.m()); // dedup loses some
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let mut rng = Rng::new(2);
+        let g = rmat(11, 8000, 0.57, 0.19, 0.19, &mut rng);
+        let s = compute_stats(&g, &mut rng);
+        assert!(
+            s.degree_gini > 0.35,
+            "rmat should be skewed, gini={}",
+            s.degree_gini
+        );
+        assert!(s.max_degree > 20 * s.avg_degree as usize / 2);
+    }
+
+    #[test]
+    fn ba_degree_law() {
+        let mut rng = Rng::new(3);
+        let g = barabasi_albert(2000, 4, &mut rng);
+        assert_eq!(g.n(), 2000);
+        assert!(g.validate().is_ok());
+        // connected by construction
+        assert_eq!(component_count(&g), 1);
+        let s = compute_stats(&g, &mut rng);
+        assert!(s.degree_gini > 0.25, "gini={}", s.degree_gini);
+        assert!(s.min_degree >= 1);
+    }
+
+    #[test]
+    fn ws_is_small_world() {
+        let mut rng = Rng::new(4);
+        let g = watts_strogatz(1000, 5, 0.1, &mut rng);
+        assert!(g.validate().is_ok());
+        let s = compute_stats(&g, &mut rng);
+        // ring would have diameter ~100; rewiring collapses it
+        assert!(s.approx_diameter < 30, "diam={}", s.approx_diameter);
+        assert!(s.clustering_coeff > 0.2, "cc={}", s.clustering_coeff);
+    }
+
+    #[test]
+    fn er_basic() {
+        let mut rng = Rng::new(5);
+        let g = erdos_renyi(500, 2000, &mut rng);
+        assert_eq!(g.n(), 500);
+        assert!(g.m() > 1800);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn sbm_ground_truth_denser_inside() {
+        let mut rng = Rng::new(6);
+        let (g, truth) = planted_partition(4, 50, 0.3, 0.01, &mut rng);
+        assert_eq!(g.n(), 200);
+        let (mut intra, mut inter) = (0usize, 0usize);
+        for (u, v, _) in g.edges() {
+            if truth[u as usize] == truth[v as usize] {
+                intra += 1;
+            } else {
+                inter += 1;
+            }
+        }
+        assert!(intra > 3 * inter, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn grid_structure() {
+        let g = grid2d(10, 7);
+        assert_eq!(g.n(), 70);
+        assert_eq!(g.m(), 10 * 6 + 9 * 7); // horizontal + vertical
+        assert!(g.validate().is_ok());
+        assert_eq!(component_count(&g), 1);
+    }
+
+    #[test]
+    fn torus_is_4_regular() {
+        let g = torus2d(5, 6);
+        assert_eq!(g.n(), 30);
+        for v in g.nodes() {
+            assert_eq!(g.degree(v), 4);
+        }
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let g1 = rmat(8, 1000, 0.57, 0.19, 0.19, &mut Rng::new(7));
+        let g2 = rmat(8, 1000, 0.57, 0.19, 0.19, &mut Rng::new(7));
+        assert_eq!(g1, g2);
+        let b1 = barabasi_albert(300, 3, &mut Rng::new(8));
+        let b2 = barabasi_albert(300, 3, &mut Rng::new(8));
+        assert_eq!(b1, b2);
+    }
+}

@@ -1,0 +1,164 @@
+//! Edge-list → CSR construction with symmetrization and deduplication.
+
+use super::csr::{Graph, NodeId, Weight};
+
+/// Accumulates undirected edges and produces a validated CSR [`Graph`].
+///
+/// - parallel edges are merged (weights summed),
+/// - self loops are dropped (the partitioning objective ignores them),
+/// - the arc lists are sorted by target for reproducibility.
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    n: usize,
+    node_weights: Vec<Weight>,
+    edges: Vec<(NodeId, NodeId, Weight)>,
+}
+
+impl GraphBuilder {
+    pub fn new(n: usize) -> Self {
+        GraphBuilder {
+            n,
+            node_weights: vec![1; n],
+            edges: Vec::new(),
+        }
+    }
+
+    /// Pre-size the edge accumulator.
+    pub fn with_edge_capacity(n: usize, m: usize) -> Self {
+        let mut b = Self::new(n);
+        b.edges.reserve(m);
+        b
+    }
+
+    /// Add an unweighted (weight-1) undirected edge.
+    pub fn edge(mut self, u: NodeId, v: NodeId) -> Self {
+        self.add_edge(u, v, 1);
+        self
+    }
+
+    /// Add a weighted undirected edge (in-place form).
+    pub fn add_edge(&mut self, u: NodeId, v: NodeId, w: Weight) {
+        assert!((u as usize) < self.n && (v as usize) < self.n);
+        if u == v {
+            return; // drop self loops
+        }
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        self.edges.push((a, b, w));
+    }
+
+    pub fn set_node_weight(&mut self, v: NodeId, w: Weight) {
+        self.node_weights[v as usize] = w;
+    }
+
+    pub fn node_weights(mut self, weights: Vec<Weight>) -> Self {
+        assert_eq!(weights.len(), self.n);
+        self.node_weights = weights;
+        self
+    }
+
+    /// Current (pre-dedup) edge count; useful for generators.
+    pub fn pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Build the CSR graph.
+    pub fn build(mut self) -> Graph {
+        // Sort + merge duplicates. Sorting (u,v) pairs also gives sorted
+        // adjacency arrays after the counting pass below.
+        self.edges.sort_unstable_by_key(|&(u, v, _)| (u, v));
+        let mut merged: Vec<(NodeId, NodeId, Weight)> = Vec::with_capacity(self.edges.len());
+        for (u, v, w) in self.edges {
+            match merged.last_mut() {
+                Some(last) if last.0 == u && last.1 == v => last.2 += w,
+                _ => merged.push((u, v, w)),
+            }
+        }
+
+        // Counting pass over both arc directions.
+        let n = self.n;
+        let mut deg = vec![0usize; n + 1];
+        for &(u, v, _) in &merged {
+            deg[u as usize + 1] += 1;
+            deg[v as usize + 1] += 1;
+        }
+        for i in 0..n {
+            deg[i + 1] += deg[i];
+        }
+        let xadj = deg.clone();
+        let arcs = *xadj.last().unwrap();
+        let mut targets = vec![0 as NodeId; arcs];
+        let mut weights = vec![0 as Weight; arcs];
+        let mut cursor = xadj.clone();
+        for &(u, v, w) in &merged {
+            let cu = &mut cursor[u as usize];
+            targets[*cu] = v;
+            weights[*cu] = w;
+            *cu += 1;
+            let cv = &mut cursor[v as usize];
+            targets[*cv] = u;
+            weights[*cv] = w;
+            *cv += 1;
+        }
+        // Arc lists per node: merged was sorted by (u,v) so the u→v arcs
+        // are already in increasing target order; the v→u arcs are in
+        // increasing source order which is also sorted. (Both passes fill
+        // monotonically.)
+        Graph::from_csr(xadj, targets, weights, self.node_weights)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_merges_weights() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 1, 2);
+        b.add_edge(1, 0, 3);
+        let g = b.build();
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.neighbors(0).next(), Some((1, 5)));
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 0, 5);
+        b.add_edge(0, 1, 1);
+        let g = b.build();
+        assert_eq!(g.m(), 1);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn adjacency_sorted() {
+        let mut b = GraphBuilder::new(5);
+        for v in [4u32, 2, 3, 1] {
+            b.add_edge(0, v, 1);
+        }
+        let g = b.build();
+        assert_eq!(g.adjacent(0), &[1, 2, 3, 4]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn node_weights_respected() {
+        let g = GraphBuilder::new(3)
+            .node_weights(vec![2, 3, 4])
+            .edge(0, 1)
+            .build();
+        assert_eq!(g.total_node_weight(), 9);
+        assert_eq!(g.node_weight(2), 4);
+    }
+
+    #[test]
+    fn isolated_nodes_allowed() {
+        let g = GraphBuilder::new(4).edge(0, 1).build();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.degree(2), 0);
+        assert_eq!(g.degree(3), 0);
+        assert!(g.validate().is_ok());
+    }
+}

@@ -1,0 +1,283 @@
+//! Compressed sparse row graph — the core substrate.
+//!
+//! Matches the paper's model (§2.1): undirected graph
+//! `G = (V, E, c, ω)` with node weights `c : V → ℝ≥0` and edge weights
+//! `ω : E → ℝ>0`. We store integer weights (i64) — the paper's inputs
+//! are unit-weighted and contraction sums weights, so integers are exact
+//! and cut values are exactly comparable across levels.
+//!
+//! Each undirected edge {u,v} is stored twice (u→v and v→u), the usual
+//! METIS convention; `m()` reports the number of *undirected* edges.
+
+pub type NodeId = u32;
+pub type EdgeId = usize;
+pub type Weight = i64;
+
+/// Immutable CSR graph with node and edge weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    /// offsets into `targets`/`edge_weights`, length n+1
+    xadj: Vec<EdgeId>,
+    targets: Vec<NodeId>,
+    edge_weights: Vec<Weight>,
+    node_weights: Vec<Weight>,
+    total_node_weight: Weight,
+    total_edge_weight: Weight,
+}
+
+impl Graph {
+    /// Construct from raw CSR arrays. Panics (debug) on malformed input;
+    /// use [`crate::graph::builder::GraphBuilder`] for edge-list input.
+    pub fn from_csr(
+        xadj: Vec<EdgeId>,
+        targets: Vec<NodeId>,
+        edge_weights: Vec<Weight>,
+        node_weights: Vec<Weight>,
+    ) -> Self {
+        assert_eq!(xadj.len(), node_weights.len() + 1);
+        assert_eq!(*xadj.last().unwrap(), targets.len());
+        assert_eq!(targets.len(), edge_weights.len());
+        let total_node_weight = node_weights.iter().sum();
+        let total_edge_weight = edge_weights.iter().sum::<Weight>() / 2;
+        Graph {
+            xadj,
+            targets,
+            edge_weights,
+            node_weights,
+            total_node_weight,
+            total_edge_weight,
+        }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.node_weights.len()
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.targets.len() / 2
+    }
+
+    /// Number of directed arcs (2m).
+    #[inline]
+    pub fn arc_count(&self) -> usize {
+        self.targets.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> usize {
+        let v = v as usize;
+        self.xadj[v + 1] - self.xadj[v]
+    }
+
+    /// Sum of incident edge weights (weighted degree).
+    #[inline]
+    pub fn weighted_degree(&self, v: NodeId) -> Weight {
+        let v = v as usize;
+        self.edge_weights[self.xadj[v]..self.xadj[v + 1]]
+            .iter()
+            .sum()
+    }
+
+    #[inline]
+    pub fn node_weight(&self, v: NodeId) -> Weight {
+        self.node_weights[v as usize]
+    }
+
+    #[inline]
+    pub fn total_node_weight(&self) -> Weight {
+        self.total_node_weight
+    }
+
+    /// Sum of ω over undirected edges.
+    #[inline]
+    pub fn total_edge_weight(&self) -> Weight {
+        self.total_edge_weight
+    }
+
+    /// Maximum node weight (0 for the empty graph).
+    pub fn max_node_weight(&self) -> Weight {
+        self.node_weights.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n() as NodeId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Neighbors of `v` with edge weights.
+    #[inline]
+    pub fn neighbors(&self, v: NodeId) -> impl Iterator<Item = (NodeId, Weight)> + '_ {
+        let v = v as usize;
+        let range = self.xadj[v]..self.xadj[v + 1];
+        self.targets[range.clone()]
+            .iter()
+            .copied()
+            .zip(self.edge_weights[range].iter().copied())
+    }
+
+    /// Neighbor ids only (slice access — the hot-path form).
+    #[inline]
+    pub fn adjacent(&self, v: NodeId) -> &[NodeId] {
+        let v = v as usize;
+        &self.targets[self.xadj[v]..self.xadj[v + 1]]
+    }
+
+    /// Edge weights aligned with [`Self::adjacent`].
+    #[inline]
+    pub fn adjacent_weights(&self, v: NodeId) -> &[Weight] {
+        let v = v as usize;
+        &self.edge_weights[self.xadj[v]..self.xadj[v + 1]]
+    }
+
+    #[inline]
+    pub fn nodes(&self) -> impl Iterator<Item = NodeId> {
+        0..self.n() as NodeId
+    }
+
+    /// All node weights.
+    #[inline]
+    pub fn node_weights(&self) -> &[Weight] {
+        &self.node_weights
+    }
+
+    /// Edges as (u, v, w) with u < v (each undirected edge once).
+    pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId, Weight)> + '_ {
+        self.nodes().flat_map(move |u| {
+            self.neighbors(u)
+                .filter(move |&(v, _)| u < v)
+                .map(move |(v, w)| (u, v, w))
+        })
+    }
+
+    /// Structural validation; returns a description of the first defect.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n();
+        if self.xadj[0] != 0 {
+            return Err("xadj[0] != 0".into());
+        }
+        for v in 0..n {
+            if self.xadj[v + 1] < self.xadj[v] {
+                return Err(format!("xadj not monotone at {v}"));
+            }
+        }
+        for (i, &t) in self.targets.iter().enumerate() {
+            if t as usize >= n {
+                return Err(format!("target out of range at arc {i}"));
+            }
+        }
+        for v in 0..n as NodeId {
+            for (u, w) in self.neighbors(v) {
+                if u == v {
+                    return Err(format!("self loop at {v}"));
+                }
+                if w <= 0 {
+                    return Err(format!("non-positive edge weight on ({v},{u})"));
+                }
+                // Symmetry: u must list v with the same weight.
+                let back = self
+                    .neighbors(u)
+                    .find(|&(x, _)| x == v)
+                    .map(|(_, bw)| bw);
+                match back {
+                    Some(bw) if bw == w => {}
+                    Some(bw) => {
+                        return Err(format!(
+                            "asymmetric weight ({v},{u}): {w} vs {bw}"
+                        ))
+                    }
+                    None => return Err(format!("missing reverse arc ({u},{v})")),
+                }
+            }
+        }
+        if self.targets.len() % 2 != 0 {
+            return Err("odd arc count".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn triangle() -> Graph {
+        GraphBuilder::new(3)
+            .edge(0, 1)
+            .edge(1, 2)
+            .edge(0, 2)
+            .build()
+    }
+
+    #[test]
+    fn basic_counts() {
+        let g = triangle();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.arc_count(), 6);
+        assert_eq!(g.total_node_weight(), 3);
+        assert_eq!(g.total_edge_weight(), 3);
+        for v in g.nodes() {
+            assert_eq!(g.degree(v), 2);
+            assert_eq!(g.weighted_degree(v), 2);
+            assert_eq!(g.node_weight(v), 1);
+        }
+    }
+
+    #[test]
+    fn neighbors_and_edges() {
+        let g = triangle();
+        let mut nb: Vec<_> = g.adjacent(0).to_vec();
+        nb.sort_unstable();
+        assert_eq!(nb, vec![1, 2]);
+        let edges: Vec<_> = g.edges().collect();
+        assert_eq!(edges.len(), 3);
+        for (u, v, w) in edges {
+            assert!(u < v);
+            assert_eq!(w, 1);
+        }
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(triangle().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_detects_asymmetry() {
+        // Hand-build a broken CSR: arc 0->1 but no 1->0.
+        let g = Graph::from_csr(vec![0, 1, 1], vec![1], vec![1], vec![1, 1]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_detects_self_loop() {
+        let g = Graph::from_csr(vec![0, 2, 2], vec![0, 0], vec![1, 1], vec![1, 1]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_csr(vec![0], vec![], vec![], vec![]);
+        assert_eq!(g.n(), 0);
+        assert_eq!(g.m(), 0);
+        assert_eq!(g.max_node_weight(), 0);
+        assert_eq!(g.max_degree(), 0);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn singleton_graph() {
+        let g = Graph::from_csr(vec![0, 0], vec![], vec![], vec![5]);
+        assert_eq!(g.n(), 1);
+        assert_eq!(g.m(), 0);
+        assert_eq!(g.total_node_weight(), 5);
+        assert!(g.validate().is_ok());
+    }
+}

@@ -1,0 +1,72 @@
+//! Zachary's karate club — the canonical 34-node social network, embedded
+//! as ground-truth test data (the only "real" instance small enough to
+//! ship in-tree; everything larger is generated, see DESIGN.md §3).
+
+use super::builder::GraphBuilder;
+use super::csr::Graph;
+
+/// The 78 undirected edges of Zachary's karate club (0-indexed).
+pub const KARATE_EDGES: [(u32, u32); 78] = [
+    (0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (0, 6), (0, 7), (0, 8),
+    (0, 10), (0, 11), (0, 12), (0, 13), (0, 17), (0, 19), (0, 21), (0, 31),
+    (1, 2), (1, 3), (1, 7), (1, 13), (1, 17), (1, 19), (1, 21), (1, 30),
+    (2, 3), (2, 7), (2, 8), (2, 9), (2, 13), (2, 27), (2, 28), (2, 32),
+    (3, 7), (3, 12), (3, 13), (4, 6), (4, 10), (5, 6), (5, 10), (5, 16),
+    (6, 16), (8, 30), (8, 32), (8, 33), (9, 33), (13, 33), (14, 32),
+    (14, 33), (15, 32), (15, 33), (18, 32), (18, 33), (19, 33), (20, 32),
+    (20, 33), (22, 32), (22, 33), (23, 25), (23, 27), (23, 29), (23, 32),
+    (23, 33), (24, 25), (24, 27), (24, 31), (25, 31), (26, 29), (26, 33),
+    (27, 33), (28, 31), (28, 33), (29, 32), (29, 33), (30, 32), (30, 33),
+    (31, 32), (31, 33), (32, 33),
+];
+
+/// The split after the club's real-world fission (Mr. Hi = block 0,
+/// Officer = block 1) — a natural 2-partition with cut 10.
+pub const KARATE_FACTION: [u32; 34] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 1, 1, 0, 0, 1, 0, 1, 0, 1,
+    1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1,
+];
+
+/// Build the karate-club graph (34 nodes, 78 edges, unit weights).
+pub fn karate_club() -> Graph {
+    let mut b = GraphBuilder::new(34);
+    for &(u, v) in KARATE_EDGES.iter() {
+        b.add_edge(u, v, 1);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn karate_shape() {
+        let g = karate_club();
+        assert_eq!(g.n(), 34);
+        assert_eq!(g.m(), 78);
+        assert!(g.validate().is_ok());
+        // Node 33 (the officer) and node 0 (Mr. Hi) are the hubs.
+        assert_eq!(g.degree(33), 17);
+        assert_eq!(g.degree(0), 16);
+    }
+
+    #[test]
+    fn faction_split_cut_is_ten() {
+        let g = karate_club();
+        let cut: i64 = g
+            .edges()
+            .filter(|&(u, v, _)| KARATE_FACTION[u as usize] != KARATE_FACTION[v as usize])
+            .map(|(_, _, w)| w)
+            .sum();
+        assert_eq!(cut, 10);
+    }
+
+    #[test]
+    fn faction_is_roughly_balanced() {
+        // Zachary's observed fission is a 16/18 split (node 8 sided with
+        // the officer's club despite supporting Mr. Hi).
+        let ones = KARATE_FACTION.iter().filter(|&&f| f == 1).count();
+        assert_eq!(ones, 18);
+    }
+}

@@ -1,0 +1,15 @@
+//! Graph substrate: CSR storage, construction, file I/O, statistics, and
+//! embedded test instances.
+
+pub mod builder;
+pub mod csr;
+pub mod io;
+pub mod karate;
+pub mod stats;
+pub mod subgraph;
+
+pub use builder::GraphBuilder;
+pub use csr::{EdgeId, Graph, NodeId, Weight};
+pub use karate::karate_club;
+pub use stats::{compute_stats, GraphStats};
+pub use subgraph::{induced_subgraph, largest_component};

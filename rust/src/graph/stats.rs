@@ -1,0 +1,217 @@
+//! Graph statistics for the instance table (Table 1) and for verifying
+//! that generated instances have the structural properties the paper's
+//! claims depend on (scale-free degree law, small-world diameter).
+
+use super::csr::{Graph, NodeId};
+use crate::util::rng::Rng;
+use crate::util::union_find::UnionFind;
+use std::collections::VecDeque;
+
+/// Summary statistics of a graph instance.
+#[derive(Debug, Clone)]
+pub struct GraphStats {
+    pub n: usize,
+    pub m: usize,
+    pub min_degree: usize,
+    pub max_degree: usize,
+    pub avg_degree: f64,
+    pub components: usize,
+    /// Gini coefficient of the degree distribution — ~0 for regular
+    /// meshes, high (>0.4) for scale-free networks.
+    pub degree_gini: f64,
+    /// BFS eccentricity from a few random sources (diameter lower bound;
+    /// small for small-world graphs).
+    pub approx_diameter: usize,
+    /// Global clustering coefficient estimated by wedge sampling.
+    pub clustering_coeff: f64,
+}
+
+pub fn compute_stats(g: &Graph, rng: &mut Rng) -> GraphStats {
+    let n = g.n();
+    let degrees: Vec<usize> = g.nodes().map(|v| g.degree(v)).collect();
+    let min_degree = degrees.iter().copied().min().unwrap_or(0);
+    let max_degree = degrees.iter().copied().max().unwrap_or(0);
+    let avg_degree = if n == 0 {
+        0.0
+    } else {
+        degrees.iter().sum::<usize>() as f64 / n as f64
+    };
+
+    GraphStats {
+        n,
+        m: g.m(),
+        min_degree,
+        max_degree,
+        avg_degree,
+        components: component_count(g),
+        degree_gini: gini(&degrees),
+        approx_diameter: approx_diameter(g, rng, 4),
+        clustering_coeff: sample_clustering(g, rng, 2000),
+    }
+}
+
+/// Number of connected components.
+pub fn component_count(g: &Graph) -> usize {
+    let mut uf = UnionFind::new(g.n());
+    for (u, v, _) in g.edges() {
+        uf.union(u as usize, v as usize);
+    }
+    uf.component_count()
+}
+
+/// Gini coefficient of a non-negative integer distribution.
+fn gini(values: &[usize]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<usize> = values.to_vec();
+    sorted.sort_unstable();
+    let n = sorted.len() as f64;
+    let sum: f64 = sorted.iter().map(|&v| v as f64).sum();
+    if sum == 0.0 {
+        return 0.0;
+    }
+    let weighted: f64 = sorted
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (i as f64 + 1.0) * v as f64)
+        .sum();
+    (2.0 * weighted) / (n * sum) - (n + 1.0) / n
+}
+
+/// Max BFS eccentricity over `sources` random start nodes (lower bound
+/// on the diameter; for small-world graphs this saturates quickly).
+pub fn approx_diameter(g: &Graph, rng: &mut Rng, sources: usize) -> usize {
+    if g.n() == 0 {
+        return 0;
+    }
+    let mut best = 0;
+    let mut dist = vec![u32::MAX; g.n()];
+    let mut queue = VecDeque::new();
+    for _ in 0..sources {
+        let s = rng.below(g.n()) as NodeId;
+        dist.fill(u32::MAX);
+        dist[s as usize] = 0;
+        queue.clear();
+        queue.push_back(s);
+        let mut ecc = 0;
+        while let Some(v) = queue.pop_front() {
+            let d = dist[v as usize];
+            ecc = ecc.max(d as usize);
+            for &u in g.adjacent(v) {
+                if dist[u as usize] == u32::MAX {
+                    dist[u as usize] = d + 1;
+                    queue.push_back(u);
+                }
+            }
+        }
+        best = best.max(ecc);
+    }
+    best
+}
+
+/// Global clustering coefficient (fraction of closed wedges), estimated
+/// by sampling `samples` random wedges.
+fn sample_clustering(g: &Graph, rng: &mut Rng, samples: usize) -> f64 {
+    let candidates: Vec<NodeId> = g.nodes().filter(|&v| g.degree(v) >= 2).collect();
+    if candidates.is_empty() {
+        return 0.0;
+    }
+    let mut closed = 0usize;
+    for _ in 0..samples {
+        let v = *rng.choose(&candidates);
+        let adj = g.adjacent(v);
+        let i = rng.below(adj.len());
+        let mut j = rng.below(adj.len());
+        while j == i {
+            j = rng.below(adj.len());
+        }
+        let (a, b) = (adj[i], adj[j]);
+        // adjacency arrays are sorted → binary search
+        if g.adjacent(a).binary_search(&b).is_ok() {
+            closed += 1;
+        }
+    }
+    closed as f64 / samples as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn path_graph(n: usize) -> Graph {
+        let mut b = GraphBuilder::new(n);
+        for i in 1..n {
+            b.add_edge((i - 1) as NodeId, i as NodeId, 1);
+        }
+        b.build()
+    }
+
+    fn complete_graph(n: usize) -> Graph {
+        let mut b = GraphBuilder::new(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                b.add_edge(u as NodeId, v as NodeId, 1);
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn components_of_disjoint_paths() {
+        let mut b = GraphBuilder::new(6);
+        b.add_edge(0, 1, 1);
+        b.add_edge(2, 3, 1);
+        b.add_edge(4, 5, 1);
+        assert_eq!(component_count(&b.build()), 3);
+    }
+
+    #[test]
+    fn diameter_of_path() {
+        let g = path_graph(10);
+        let mut rng = Rng::new(1);
+        let d = approx_diameter(&g, &mut rng, 8);
+        assert!(d >= 5 && d <= 9, "d={d}"); // lower bound ≤ true diameter 9
+    }
+
+    #[test]
+    fn clustering_of_complete_graph_is_one() {
+        let g = complete_graph(8);
+        let mut rng = Rng::new(2);
+        let c = sample_clustering(&g, &mut rng, 500);
+        assert!((c - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clustering_of_path_is_zero() {
+        let g = path_graph(20);
+        let mut rng = Rng::new(3);
+        assert_eq!(sample_clustering(&g, &mut rng, 500), 0.0);
+    }
+
+    #[test]
+    fn gini_uniform_is_zero() {
+        assert!(gini(&[5, 5, 5, 5]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gini_concentrated_is_high() {
+        let mut values = vec![1usize; 99];
+        values.push(1000);
+        assert!(gini(&values) > 0.7);
+    }
+
+    #[test]
+    fn stats_on_small_graph() {
+        let g = complete_graph(5);
+        let mut rng = Rng::new(4);
+        let s = compute_stats(&g, &mut rng);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.m, 10);
+        assert_eq!(s.min_degree, 4);
+        assert_eq!(s.max_degree, 4);
+        assert_eq!(s.components, 1);
+        assert_eq!(s.approx_diameter, 1);
+    }
+}

@@ -1,0 +1,110 @@
+//! Subgraph extraction utilities.
+//!
+//! Real-world benchmark graphs (the paper's Table 1 crawls and social
+//! networks) are typically distributed as their giant connected
+//! component. Our R-MAT stand-ins produce isolated nodes, so instance
+//! generation extracts the largest component to match the structural
+//! profile of the originals.
+
+use super::builder::GraphBuilder;
+use super::csr::{Graph, NodeId};
+use crate::util::union_find::UnionFind;
+
+/// Extract the node-induced subgraph on `nodes` (ids are remapped to
+/// `0..nodes.len()` in the given order). Returns the subgraph and the
+/// old-id array (`old_of[new] = old`).
+pub fn induced_subgraph(g: &Graph, nodes: &[NodeId]) -> (Graph, Vec<NodeId>) {
+    let mut new_of = vec![u32::MAX; g.n()];
+    for (new, &old) in nodes.iter().enumerate() {
+        new_of[old as usize] = new as u32;
+    }
+    let mut b = GraphBuilder::new(nodes.len());
+    for (new, &old) in nodes.iter().enumerate() {
+        b.set_node_weight(new as NodeId, g.node_weight(old));
+        for (u, w) in g.neighbors(old) {
+            let nu = new_of[u as usize];
+            if nu != u32::MAX && (new as u32) < nu {
+                b.add_edge(new as NodeId, nu, w);
+            }
+        }
+    }
+    (b.build(), nodes.to_vec())
+}
+
+/// Extract the largest connected component.
+pub fn largest_component(g: &Graph) -> Graph {
+    if g.n() == 0 {
+        return g.clone();
+    }
+    let mut uf = UnionFind::new(g.n());
+    for (u, v, _) in g.edges() {
+        uf.union(u as usize, v as usize);
+    }
+    // count component sizes
+    let mut size = vec![0usize; g.n()];
+    for v in 0..g.n() {
+        size[uf.find(v)] += 1;
+    }
+    let best_root = (0..g.n()).max_by_key(|&r| size[r]).unwrap();
+    let nodes: Vec<NodeId> = (0..g.n())
+        .filter(|&v| uf.find(v) == best_root)
+        .map(|v| v as NodeId)
+        .collect();
+    induced_subgraph(g, &nodes).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    #[test]
+    fn largest_component_picks_biggest() {
+        // triangle + edge + isolated node
+        let mut b = GraphBuilder::new(6);
+        b.add_edge(0, 1, 1);
+        b.add_edge(1, 2, 1);
+        b.add_edge(0, 2, 1);
+        b.add_edge(3, 4, 1);
+        let g = b.build();
+        let c = largest_component(&g);
+        assert_eq!(c.n(), 3);
+        assert_eq!(c.m(), 3);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn induced_subgraph_keeps_weights() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 7);
+        b.add_edge(1, 2, 3);
+        b.add_edge(2, 3, 9);
+        b.set_node_weight(1, 5);
+        let g = b.build();
+        let (s, old) = induced_subgraph(&g, &[1, 2]);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.m(), 1);
+        assert_eq!(s.node_weight(0), 5);
+        assert_eq!(s.total_edge_weight(), 3);
+        assert_eq!(old, vec![1, 2]);
+    }
+
+    #[test]
+    fn connected_graph_unchanged_shape() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1);
+        b.add_edge(1, 2, 1);
+        b.add_edge(2, 3, 1);
+        let g = b.build();
+        let c = largest_component(&g);
+        assert_eq!(c.n(), 4);
+        assert_eq!(c.m(), 3);
+    }
+
+    #[test]
+    fn empty_graph_ok() {
+        let g = GraphBuilder::new(0).build();
+        let c = largest_component(&g);
+        assert_eq!(c.n(), 0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Greedy graph growing — the classic initial bisection heuristic
+//! (Karypis & Kumar): grow one block outward from a seed node, always
+//! absorbing the frontier node with the best gain, until the block
+//! reaches its target weight. Several seeds are tried; the best result
+//! (after optional 2-way FM polish) wins.
+
+use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::partitioning::metrics::cut_value;
+use crate::partitioning::partition::Partition;
+use crate::util::bucket_queue::BucketQueue;
+use crate::util::fast_reset::FastResetArray;
+use crate::util::rng::Rng;
+
+/// Grow block 1 from `seed` until its weight reaches `target`.
+/// Returns the block array (0 = rest, 1 = grown side).
+pub fn grow_from(g: &Graph, seed: NodeId, target: Weight) -> Vec<u32> {
+    let n = g.n();
+    let mut blocks = vec![0u32; n];
+    let mut grown_weight: Weight = 0;
+    let max_gain = (g.max_degree() as i64 + 1).max(8);
+    let mut queue = BucketQueue::new(n, max_gain);
+    let mut conn: FastResetArray<i64> = FastResetArray::new(2);
+
+    let gain_of = |v: NodeId, blocks: &[u32], conn: &mut FastResetArray<i64>| -> i64 {
+        conn.clear();
+        let adj = g.adjacent(v);
+        let ws = g.adjacent_weights(v);
+        let mut inside = 0i64;
+        let mut outside = 0i64;
+        for i in 0..adj.len() {
+            if blocks[adj[i] as usize] == 1 {
+                inside += ws[i];
+            } else {
+                outside += ws[i];
+            }
+        }
+        inside - outside
+    };
+
+    queue.push(seed as usize, 0);
+    while grown_weight < target {
+        let Some((vu, _)) = queue.pop_max() else { break };
+        let v = vu as NodeId;
+        if blocks[vu] == 1 {
+            continue;
+        }
+        blocks[vu] = 1;
+        grown_weight += g.node_weight(v);
+        for &u in g.adjacent(v) {
+            let uu = u as usize;
+            if blocks[uu] == 0 {
+                let gain = gain_of(u, &blocks, &mut conn);
+                queue.update(uu, gain);
+            }
+        }
+    }
+
+    // Disconnected graphs: frontier may empty before the target — top up
+    // with arbitrary unassigned nodes (keeps the bisection feasible).
+    if grown_weight < target {
+        for v in g.nodes() {
+            if grown_weight >= target {
+                break;
+            }
+            if blocks[v as usize] == 0 {
+                blocks[v as usize] = 1;
+                grown_weight += g.node_weight(v);
+            }
+        }
+    }
+    blocks
+}
+
+/// Best-of-`tries` greedy-growing bisection with target weight for the
+/// grown side. Returns the best block array by cut.
+pub fn greedy_bisection(
+    g: &Graph,
+    target: Weight,
+    tries: usize,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    assert!(g.n() > 0);
+    let mut best: Option<(Weight, Vec<u32>)> = None;
+    for _ in 0..tries.max(1) {
+        let seed = rng.below(g.n()) as NodeId;
+        let blocks = grow_from(g, seed, target);
+        let cut = cut_value(g, &blocks);
+        if best.as_ref().map(|(bc, _)| cut < *bc).unwrap_or(true) {
+            best = Some((cut, blocks));
+        }
+    }
+    best.unwrap().1
+}
+
+/// Round-robin fallback for degenerate cases (n < k): block i gets every
+/// k-th node.
+pub fn round_robin(g: &Graph, k: usize) -> Partition {
+    let blocks: Vec<u32> = (0..g.n()).map(|v| (v % k) as u32).collect();
+    Partition::from_blocks(g, k, blocks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::karate::karate_club;
+
+    fn two_cliques() -> Graph {
+        let mut b = GraphBuilder::new(8);
+        for base in [0u32, 4] {
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    b.add_edge(base + i, base + j, 1);
+                }
+            }
+        }
+        b.add_edge(3, 4, 1);
+        b.build()
+    }
+
+    #[test]
+    fn grows_to_target() {
+        let g = karate_club();
+        let blocks = grow_from(&g, 0, 17);
+        let w: Weight = blocks.iter().filter(|&&b| b == 1).count() as Weight;
+        assert!(w >= 17);
+        assert!(w <= 18); // one node overshoot at most
+    }
+
+    #[test]
+    fn finds_clique_cut() {
+        let g = two_cliques();
+        let mut rng = Rng::new(1);
+        let blocks = greedy_bisection(&g, 4, 4, &mut rng);
+        assert_eq!(cut_value(&g, &blocks), 1);
+    }
+
+    #[test]
+    fn grown_side_is_connected_when_possible() {
+        let g = two_cliques();
+        let blocks = grow_from(&g, 0, 4);
+        // growing from node 0 with target 4 should absorb exactly clique 1
+        assert_eq!(&blocks[0..4], &[1, 1, 1, 1]);
+        assert_eq!(&blocks[4..8], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn disconnected_top_up() {
+        let mut b = GraphBuilder::new(6);
+        b.add_edge(0, 1, 1);
+        b.add_edge(2, 3, 1);
+        b.add_edge(4, 5, 1);
+        let g = b.build();
+        let blocks = grow_from(&g, 0, 4);
+        let grown = blocks.iter().filter(|&&x| x == 1).count();
+        assert!(grown >= 4);
+    }
+
+    #[test]
+    fn round_robin_covers_all_blocks() {
+        let g = karate_club();
+        let p = round_robin(&g, 5);
+        assert_eq!(p.nonempty_blocks(), 5);
+        assert!(p.validate(&g).is_ok());
+    }
+}

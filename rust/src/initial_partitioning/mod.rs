@@ -1,0 +1,11 @@
+//! Initial partitioning of the coarsest graph: greedy graph growing and
+//! multilevel recursive bisection (matching- or cluster-based, the `C…`
+//! vs `U…` configuration families of §5.1).
+
+pub mod greedy_growing;
+pub mod recursive_bisection;
+
+pub use greedy_growing::{greedy_bisection, grow_from, round_robin};
+pub use recursive_bisection::{
+    multilevel_bisect, recursive_bisection, InitialPartitionConfig,
+};

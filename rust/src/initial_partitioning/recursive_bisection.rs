@@ -1,0 +1,243 @@
+//! Multilevel recursive bisection — KaHIP's initial partitioning (§3.1:
+//! "KaHIP uses a multilevel recursive bisection algorithm to create an
+//! initial partitioning").
+//!
+//! To split into k blocks: bisect with proportional target weights
+//! (⌈k/2⌉ : ⌊k/2⌋), recurse on the induced subgraphs. Each bisection is
+//! itself a small multilevel run: coarsen (matching for the `C…`
+//! configurations, cluster contraction for `U…`), greedy-grow + 2-way FM
+//! on the coarsest graph, FM-refine while uncoarsening.
+
+use crate::coarsening::hierarchy::{coarsen, CoarseningParams, CoarseningScheme};
+use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::graph::subgraph::induced_subgraph;
+use crate::initial_partitioning::greedy_growing::{greedy_bisection, round_robin};
+use crate::partitioning::partition::Partition;
+use crate::refinement::fm::{kway_fm_bounded, FmConfig};
+use crate::util::rng::Rng;
+
+/// Initial partitioning configuration.
+#[derive(Debug, Clone)]
+pub struct InitialPartitionConfig {
+    /// Coarsening scheme inside each bisection (C = matching, U = LPA).
+    pub scheme: CoarseningScheme,
+    /// Imbalance allowance ε for the bisection targets.
+    pub epsilon: f64,
+    /// Greedy-growing attempts per bisection.
+    pub tries: usize,
+    pub fm: FmConfig,
+}
+
+impl InitialPartitionConfig {
+    pub fn matching_based(epsilon: f64) -> Self {
+        InitialPartitionConfig {
+            scheme: CoarseningScheme::Matching { two_hop: true },
+            epsilon,
+            tries: 4,
+            fm: FmConfig::eco(),
+        }
+    }
+
+    pub fn cluster_based(epsilon: f64) -> Self {
+        use crate::clustering::label_propagation::{LpaConfig, NodeOrdering};
+        InitialPartitionConfig {
+            scheme: CoarseningScheme::ClusterLpa {
+                lpa: LpaConfig::clustering(10, NodeOrdering::Degree),
+                size_factor: 18.0,
+                ensemble: None,
+            },
+            epsilon,
+            tries: 4,
+            fm: FmConfig::eco(),
+        }
+    }
+}
+
+/// Partition `g` into `k` blocks by multilevel recursive bisection.
+pub fn recursive_bisection(
+    g: &Graph,
+    k: usize,
+    config: &InitialPartitionConfig,
+    rng: &mut Rng,
+) -> Partition {
+    assert!(k >= 1);
+    if k == 1 {
+        return Partition::from_blocks(g, 1, vec![0; g.n()]);
+    }
+    if g.n() <= k {
+        return round_robin(g, k);
+    }
+    let mut blocks = vec![0u32; g.n()];
+    let all: Vec<NodeId> = g.nodes().collect();
+    split(g, &all, k, 0, config, &mut blocks, rng);
+    Partition::from_blocks(g, k, blocks)
+}
+
+/// Recursively bisect the subgraph induced by `nodes` into `k` blocks
+/// with ids starting at `first_block`.
+fn split(
+    root: &Graph,
+    nodes: &[NodeId],
+    k: usize,
+    first_block: u32,
+    config: &InitialPartitionConfig,
+    out: &mut [u32],
+    rng: &mut Rng,
+) {
+    if k == 1 {
+        for &v in nodes {
+            out[v as usize] = first_block;
+        }
+        return;
+    }
+    // Degenerate branch: fewer nodes than target blocks (possible when k
+    // is close to n — e.g. karate with k=32). Round-robin so every block
+    // id in [first_block, first_block+k) is used where possible.
+    if nodes.len() <= k {
+        for (i, &v) in nodes.iter().enumerate() {
+            out[v as usize] = first_block + (i % k) as u32;
+        }
+        return;
+    }
+    let (sub, old_of) = induced_subgraph(root, nodes);
+    let k1 = k.div_ceil(2);
+    let k2 = k - k1;
+    let target1 = (sub.total_node_weight() as f64 * k1 as f64 / k as f64).round() as Weight;
+    let side1 = multilevel_bisect(&sub, target1, config, rng);
+
+    let mut left: Vec<NodeId> = Vec::new();
+    let mut right: Vec<NodeId> = Vec::new();
+    for (i, &old) in old_of.iter().enumerate() {
+        if side1[i] == 1 {
+            left.push(old);
+        } else {
+            right.push(old);
+        }
+    }
+    // Degenerate guard: greedy growing can swallow everything on tiny
+    // or star-shaped graphs — force non-empty sides.
+    if left.is_empty() || right.is_empty() {
+        let mut both: Vec<NodeId> = nodes.to_vec();
+        rng.shuffle(&mut both);
+        let cut_at = (both.len() * k1 / k).max(1).min(both.len() - 1);
+        left = both[..cut_at].to_vec();
+        right = both[cut_at..].to_vec();
+    }
+    split(root, &left, k1, first_block, config, out, rng);
+    split(root, &right, k2, first_block + k1 as u32, config, out, rng);
+}
+
+/// One multilevel bisection: returns a 0/1 array over `g`'s nodes where
+/// side 1 has weight ≈ `target1`.
+pub fn multilevel_bisect(
+    g: &Graph,
+    target1: Weight,
+    config: &InitialPartitionConfig,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let total = g.total_node_weight();
+    let target0 = total - target1;
+    // Per-side bounds with ε slack + heaviest node allowance.
+    let slack = |t: Weight| {
+        ((1.0 + config.epsilon) * t as f64).ceil() as Weight + g.max_node_weight()
+    };
+    let bounds = [slack(target0), slack(target1)];
+
+    // Mini-multilevel: coarsen for 2 blocks.
+    let mut params = CoarseningParams::new(2, config.epsilon, config.scheme.clone());
+    params.max_levels = 32;
+    let h = coarsen(g, &params, None, rng);
+    let coarsest = h.coarsest(g);
+
+    // Initial bisection on the coarsest graph.
+    let blocks = greedy_bisection(coarsest, target1, config.tries, rng);
+    let mut p = Partition::from_blocks(coarsest, 2, blocks);
+    kway_fm_bounded(coarsest, &mut p, &bounds, &config.fm, rng);
+
+    // Uncoarsen with FM at every level.
+    let mut blocks = p.blocks;
+    for i in (0..h.levels.len()).rev() {
+        let finer: &Graph = if i == 0 { g } else { &h.levels[i - 1].graph };
+        let map = &h.levels[i].map;
+        blocks = crate::coarsening::contract::project_partition(map, &blocks);
+        let mut p = Partition::from_blocks(finer, 2, blocks);
+        kway_fm_bounded(finer, &mut p, &bounds, &config.fm, rng);
+        blocks = p.blocks;
+    }
+    blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+    use crate::graph::karate::karate_club;
+    use crate::partitioning::metrics::{cut_value, evaluate};
+
+    #[test]
+    fn bisection_of_karate_is_decent() {
+        let g = karate_club();
+        let mut rng = Rng::new(1);
+        let config = InitialPartitionConfig::matching_based(0.03);
+        let p = recursive_bisection(&g, 2, &config, &mut rng);
+        assert!(p.validate(&g).is_ok());
+        let m = evaluate(&g, &p, 0.03);
+        // ground-truth fission cuts 10; a decent bisection lands ≤ 14
+        assert!(m.cut <= 14, "cut = {}", m.cut);
+        assert!(m.feasible, "weights {:?}", p.block_weights);
+    }
+
+    #[test]
+    fn kway_produces_k_blocks() {
+        let mut rng = Rng::new(2);
+        let g = generators::barabasi_albert(500, 3, &mut rng);
+        for k in [2usize, 3, 4, 8] {
+            let config = InitialPartitionConfig::matching_based(0.03);
+            let p = recursive_bisection(&g, k, &config, &mut Rng::new(k as u64));
+            assert_eq!(p.k, k);
+            assert_eq!(p.nonempty_blocks(), k, "k={k}");
+            assert!(p.validate(&g).is_ok());
+        }
+    }
+
+    #[test]
+    fn cluster_based_variant_works() {
+        let mut rng = Rng::new(3);
+        let g = generators::rmat(10, 4000, 0.57, 0.19, 0.19, &mut rng);
+        let g = crate::graph::subgraph::largest_component(&g);
+        let config = InitialPartitionConfig::cluster_based(0.03);
+        let p = recursive_bisection(&g, 4, &config, &mut Rng::new(4));
+        assert_eq!(p.nonempty_blocks(), 4);
+        let m = evaluate(&g, &p, 0.03);
+        assert!(m.cut < g.total_edge_weight(), "cut should be nontrivial");
+    }
+
+    #[test]
+    fn k_one_is_trivial() {
+        let g = karate_club();
+        let config = InitialPartitionConfig::matching_based(0.03);
+        let p = recursive_bisection(&g, 1, &config, &mut Rng::new(5));
+        assert_eq!(p.k, 1);
+        assert_eq!(cut_value(&g, &p.blocks), 0);
+    }
+
+    #[test]
+    fn tiny_graph_round_robins() {
+        let g = karate_club();
+        let config = InitialPartitionConfig::matching_based(0.03);
+        let p = recursive_bisection(&g, 34, &config, &mut Rng::new(6));
+        assert_eq!(p.nonempty_blocks(), 34);
+    }
+
+    #[test]
+    fn balance_within_bounds_odd_k() {
+        let mut rng = Rng::new(7);
+        let g = generators::watts_strogatz(900, 4, 0.1, &mut rng);
+        let config = InitialPartitionConfig::matching_based(0.05);
+        let p = recursive_bisection(&g, 5, &config, &mut Rng::new(8));
+        let m = evaluate(&g, &p, 0.05);
+        // recursive bisection compounds slack; allow generous margin but
+        // catch gross imbalance
+        assert!(m.imbalance < 0.25, "imbalance {}", m.imbalance);
+    }
+}

@@ -1,0 +1,45 @@
+//! # sclap — size-constrained label-propagation graph partitioning
+//!
+//! Production-quality reproduction of *"Partitioning Complex Networks via
+//! Size-constrained Clustering"* (Meyerhenke, Sanders, Schulz; 2014) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: the full multilevel partitioner — size-constrained
+//!   label propagation (SCLaP), cluster contraction, initial partitioning,
+//!   refinement, V-cycles, ensembles, the baselines, and a partitioning
+//!   service coordinator.
+//! - **L2/L1 (python/, build-time only)**: the dense synchronous SCLaP
+//!   round (JAX) with a Pallas-tiled scoring matmul, AOT-lowered to HLO
+//!   text in `artifacts/` and executed from [`runtime`] via PJRT.
+//!
+//! Quickstart:
+//! ```no_run
+//! use sclap::prelude::*;
+//!
+//! let graph = sclap::generators::instances::by_name("tiny-rmat").unwrap().build();
+//! let config = PartitionConfig::preset(Preset::UFast, 8);
+//! let result = MultilevelPartitioner::new(config).partition(&graph, 42);
+//! println!("cut = {}", result.metrics.cut);
+//! ```
+
+pub mod bench;
+pub mod clustering;
+pub mod coarsening;
+pub mod coordinator;
+pub mod generators;
+pub mod graph;
+pub mod initial_partitioning;
+pub mod partitioning;
+pub mod refinement;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::graph::{Graph, GraphBuilder, NodeId, Weight};
+    pub use crate::partitioning::config::{PartitionConfig, Preset};
+    pub use crate::partitioning::metrics::PartitionMetrics;
+    pub use crate::partitioning::multilevel::MultilevelPartitioner;
+    pub use crate::partitioning::partition::Partition;
+    pub use crate::util::rng::Rng;
+}

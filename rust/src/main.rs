@@ -1,0 +1,269 @@
+//! sclap — the command-line front end of the partitioning system.
+//!
+//! Subcommands:
+//!   partition  — partition a graph (file or named instance)
+//!   generate   — write a synthetic instance to a file
+//!   stats      — print instance statistics (Table-1 style)
+//!   offload    — demo the PJRT dense-LPA offload on a small graph
+//!   presets    — list the available configuration presets
+//!
+//! Examples:
+//!   sclap partition --instance tiny-rmat --k 8 --preset UFast --reps 10
+//!   sclap partition --graph my.graph --k 16 --preset UStrong --output part.txt
+//!   sclap generate --kind rmat --scale 18 --edges 2000000 --out web.bin
+//!   sclap stats --instance uk2002-sim
+
+use anyhow::{bail, Context, Result};
+use sclap::coordinator::cli::Args;
+use sclap::coordinator::service::{default_seeds, Coordinator};
+use sclap::generators;
+use sclap::graph::csr::Graph;
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::util::rng::Rng;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let args = match Args::parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "partition" => cmd_partition(args),
+        "evaluate" => cmd_evaluate(args),
+        "generate" => cmd_generate(args),
+        "stats" => cmd_stats(args),
+        "offload" => cmd_offload(args),
+        "presets" => cmd_presets(),
+        "" | "help" | "--help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `sclap help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "sclap — size-constrained label-propagation graph partitioning\n\
+         \n\
+         USAGE: sclap <command> [--options]\n\
+         \n\
+         COMMANDS:\n\
+           partition --graph FILE | --instance NAME  --k K [--preset P]\n\
+                     [--reps N] [--seed S] [--workers W] [--epsilon E]\n\
+                     [--output FILE]\n\
+           generate  --kind rmat|ba|ws|er|grid --out FILE [--scale S]\n\
+                     [--n N] [--edges M] [--seed S]\n\
+           evaluate  --graph FILE | --instance NAME --partition FILE\n\
+                     [--epsilon E]\n\
+           stats     --graph FILE | --instance NAME\n\
+           offload   --instance NAME [--upper U] [--rounds R]\n\
+           presets\n"
+    );
+}
+
+fn load_graph(args: &Args) -> Result<Graph> {
+    if let Some(name) = args.get("instance") {
+        let spec = generators::instances::by_name(name)
+            .with_context(|| format!("unknown instance {name:?} (see DESIGN.md §3)"))?;
+        return Ok(spec.build());
+    }
+    if let Some(path) = args.get("graph") {
+        return sclap::graph::io::load_path(Path::new(path))
+            .with_context(|| format!("loading {path}"));
+    }
+    bail!("need --graph FILE or --instance NAME");
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let graph = Arc::new(load_graph(args)?);
+    let k = args.get_usize("k", 2).map_err(anyhow::Error::msg)?;
+    let preset_name = args.get_or("preset", "UFast");
+    let preset = Preset::from_name(preset_name)
+        .with_context(|| format!("unknown preset {preset_name:?} (see `sclap presets`)"))?;
+    let mut config = PartitionConfig::preset(preset, k);
+    config.epsilon = args.get_f64("epsilon", 0.03).map_err(anyhow::Error::msg)?;
+    if let Some(l) = args.get("lpa-iterations") {
+        config.lpa_iterations = l.parse().context("--lpa-iterations")?;
+    }
+    let reps = args.get_usize("reps", 1).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    let workers = args.get_usize("workers", 0).map_err(anyhow::Error::msg)?;
+
+    println!(
+        "partitioning n={} m={} into k={k} with {} (ε={}, {reps} reps)",
+        graph.n(),
+        graph.m(),
+        preset.name(),
+        config.epsilon
+    );
+    let coordinator = Coordinator::new(workers);
+    let seeds: Vec<u64> = default_seeds(reps).iter().map(|s| s + seed - 1).collect();
+    let agg = coordinator.partition_repeated(graph.clone(), &config, &seeds);
+
+    println!("avg cut    : {:.1}", agg.avg_cut);
+    println!("best cut   : {}", agg.best_cut);
+    println!("avg time   : {:.3}s", agg.avg_seconds);
+    println!("infeasible : {}/{}", agg.infeasible_runs, reps);
+    let best = &agg.runs[agg
+        .runs
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, r)| r.cut)
+        .map(|(i, _)| i)
+        .unwrap()];
+    println!(
+        "hierarchy  : {} levels, coarsest n={}, initial cut={}",
+        best.levels, best.coarsest_n, best.initial_cut
+    );
+
+    if let Some(out) = args.get("output") {
+        let mut text = String::new();
+        for b in &agg.best_blocks {
+            text.push_str(&b.to_string());
+            text.push('\n');
+        }
+        std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
+        println!("wrote best partition to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let kind = args.get_or("kind", "rmat");
+    let seed = args.get_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    let mut rng = Rng::new(seed);
+    let graph = match kind {
+        "rmat" => {
+            let scale = args.get_usize("scale", 16).map_err(anyhow::Error::msg)? as u32;
+            let m = args.get_usize("edges", 1 << (scale + 3)).map_err(anyhow::Error::msg)?;
+            generators::rmat(scale, m, 0.57, 0.19, 0.19, &mut rng)
+        }
+        "ba" => {
+            let n = args.get_usize("n", 100_000).map_err(anyhow::Error::msg)?;
+            let attach = args.get_usize("attach", 4).map_err(anyhow::Error::msg)?;
+            generators::barabasi_albert(n, attach, &mut rng)
+        }
+        "ws" => {
+            let n = args.get_usize("n", 100_000).map_err(anyhow::Error::msg)?;
+            let k = args.get_usize("ring", 4).map_err(anyhow::Error::msg)?;
+            let beta = args.get_f64("beta", 0.1).map_err(anyhow::Error::msg)?;
+            generators::watts_strogatz(n, k, beta, &mut rng)
+        }
+        "er" => {
+            let n = args.get_usize("n", 100_000).map_err(anyhow::Error::msg)?;
+            let m = args.get_usize("edges", 4 * n).map_err(anyhow::Error::msg)?;
+            generators::erdos_renyi(n, m, &mut rng)
+        }
+        "grid" => {
+            let rows = args.get_usize("rows", 300).map_err(anyhow::Error::msg)?;
+            let cols = args.get_usize("cols", 300).map_err(anyhow::Error::msg)?;
+            generators::grid2d(rows, cols)
+        }
+        other => bail!("unknown generator kind {other:?}"),
+    };
+    let out = args.get("out").context("need --out FILE")?;
+    sclap::graph::io::save_path(&graph, Path::new(out))?;
+    println!("wrote n={} m={} to {out}", graph.n(), graph.m());
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let graph = load_graph(args)?;
+    let part_path = args.get("partition").context("need --partition FILE")?;
+    let file = std::fs::File::open(part_path).with_context(|| format!("opening {part_path}"))?;
+    let p = sclap::partitioning::partition::read_partition(
+        &graph,
+        std::io::BufReader::new(file),
+        None,
+    )?;
+    let epsilon = args.get_f64("epsilon", 0.03).map_err(anyhow::Error::msg)?;
+    let m = sclap::partitioning::metrics::evaluate(&graph, &p, epsilon);
+    println!("k             : {}", m.k);
+    println!("cut           : {}", m.cut);
+    println!("imbalance     : {:.4}", m.imbalance);
+    println!("feasible(ε={epsilon}): {}", m.feasible);
+    println!("boundary nodes: {}", m.boundary_nodes);
+    println!("block weights : min {} max {}", m.min_block_weight, m.max_block_weight);
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let graph = load_graph(args)?;
+    let mut rng = Rng::new(42);
+    let s = sclap::graph::stats::compute_stats(&graph, &mut rng);
+    println!("n                : {}", s.n);
+    println!("m                : {}", s.m);
+    println!("degree (min/avg/max): {}/{:.2}/{}", s.min_degree, s.avg_degree, s.max_degree);
+    println!("components       : {}", s.components);
+    println!("degree gini      : {:.3}", s.degree_gini);
+    println!("approx diameter  : {}", s.approx_diameter);
+    println!("clustering coeff : {:.3}", s.clustering_coeff);
+    Ok(())
+}
+
+fn cmd_offload(args: &Args) -> Result<()> {
+    let graph = load_graph(args)?;
+    let mut runtime = sclap::runtime::pjrt::Runtime::from_env()
+        .context("PJRT runtime (run `make artifacts` first)")?;
+    println!("runtime: {:?}", runtime);
+    let upper = args.get_u64("upper", (graph.total_node_weight() as u64 / 8).max(2))
+        .map_err(anyhow::Error::msg)? as i64;
+    let rounds = args.get_usize("rounds", 10).map_err(anyhow::Error::msg)?;
+    let result = sclap::runtime::dense_lpa::offload_sclap(&graph, upper, rounds, &mut runtime)?;
+    match result {
+        None => bail!(
+            "graph too large for the available artifacts (n={} > max {})",
+            graph.n(),
+            runtime.max_n()
+        ),
+        Some((clustering, stats)) => {
+            println!(
+                "offloaded clustering: {} clusters, cut {}, bound {} respected: {}",
+                clustering.num_clusters,
+                clustering.cut(&graph),
+                upper,
+                clustering.respects_bound(upper)
+            );
+            println!(
+                "rounds={} proposals={} applied={} artifact=N{}",
+                stats.rounds, stats.proposals, stats.applied, stats.artifact_n
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_presets() -> Result<()> {
+    println!("available presets (paper §5.1 + baselines):");
+    for p in Preset::ALL {
+        let c = PartitionConfig::preset(p, 8);
+        println!(
+            "  {:<14} scheme={:?} initial={:?} refinement={:?} V={} B={} E={} A={}",
+            p.name(),
+            c.scheme,
+            c.initial,
+            c.refinement,
+            c.vcycles,
+            c.coarse_imbalance > 0.0,
+            c.ensemble,
+            c.active_nodes_coarsening,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,384 @@
+//! Partitioner configurations — the paper's §5.1 configuration ladder
+//! (CEcoR … UStrong) plus the in-repo competitor baselines (DESIGN.md §3).
+//!
+//! Naming (paper): `C` = matching-based initial partitioning, `U` =
+//! cluster-based initial partitioning; `Fast`/`Eco`/`Strong` = the
+//! refinement ladder; suffix letters: `R` random ordering, `V` V-cycles,
+//! `B` extra imbalance on coarse levels, `E` ensemble clusterings, `A`
+//! active nodes during coarsening.
+
+use crate::clustering::label_propagation::NodeOrdering;
+use crate::refinement::fm::FmConfig;
+
+/// Coarsening algorithm choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchemeKind {
+    /// The paper's cluster contraction (SCLaP).
+    ClusterLpa,
+    /// Matching baseline (KaFFPa / Metis style).
+    Matching,
+}
+
+/// Initial partitioning family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitialKind {
+    /// `C…`: recursive bisection with matching-based mini-multilevels.
+    MatchingRb,
+    /// `U…`: recursive bisection with cluster-based mini-multilevels.
+    ClusterRb,
+}
+
+/// Refinement ladder.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RefinementKind {
+    /// `Fast`: SCLaP as local search only (§3.1).
+    Lpa,
+    /// `Eco`: SCLaP + cheap boundary FM.
+    Eco,
+    /// `Strong`: SCLaP + deep FM with long hill climbs.
+    Strong,
+    /// kMetis-like greedy: positive-gain boundary pass only.
+    Greedy,
+}
+
+/// Full parameterization of one partitioner run.
+#[derive(Debug, Clone)]
+pub struct PartitionConfig {
+    pub k: usize,
+    /// Imbalance ε (paper default 0.03).
+    pub epsilon: f64,
+    /// LP iterations ℓ during coarsening (paper: 10; 3 for huge graphs).
+    pub lpa_iterations: usize,
+    /// Cluster-size factor f (paper: 18).
+    pub size_factor: f64,
+    pub ordering: NodeOrdering,
+    /// `A`: active-nodes rounds during coarsening.
+    pub active_nodes_coarsening: bool,
+    /// `E`: ensemble clusterings for coarsening (size by `k`, §5).
+    pub ensemble: bool,
+    /// `V`: number of multilevel iterations (1 = plain, paper V = 3).
+    pub vcycles: usize,
+    /// `B`: extra imbalance δ distributed over coarse levels (0 = off).
+    pub coarse_imbalance: f64,
+    pub scheme: SchemeKind,
+    pub initial: InitialKind,
+    pub refinement: RefinementKind,
+    /// FM knobs when refinement uses FM.
+    pub fm: FmConfig,
+    /// Scotch-like behavior: tolerate infeasible final balance.
+    pub tolerate_imbalance: bool,
+    /// hMetis-like behavior: coarsen far deeper before IP.
+    pub deep_coarsening: bool,
+}
+
+/// Named presets: the paper's configurations and the baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Preset {
+    CFastR,
+    CFast,
+    CFastV,
+    CFastVB,
+    CFastVBE,
+    CFastVBEA,
+    CEcoR,
+    CEco,
+    CEcoV,
+    CEcoVB,
+    CEcoVBE,
+    CEcoVBEA,
+    CStrong,
+    UFast,
+    UFastV,
+    UEcoVB,
+    UStrong,
+    /// Matching-based baseline ≈ KaFFPaEco.
+    KaffpaEco,
+    /// Matching-based baseline ≈ KaFFPaStrong.
+    KaffpaStrong,
+    /// Fast matching-based competitor ≈ kMetis 5.1 (2-hop matching).
+    KMetisLike,
+    /// ≈ Scotch: matching + RB, imbalance tolerated.
+    ScotchLike,
+    /// ≈ hMetis: deep slow coarsening + heavy FM.
+    HMetisLike,
+}
+
+impl Preset {
+    pub const ALL: [Preset; 22] = [
+        Preset::CEcoR,
+        Preset::CEco,
+        Preset::CEcoV,
+        Preset::CEcoVB,
+        Preset::CEcoVBE,
+        Preset::CEcoVBEA,
+        Preset::CFastR,
+        Preset::CFast,
+        Preset::CFastV,
+        Preset::CFastVB,
+        Preset::CFastVBE,
+        Preset::CFastVBEA,
+        Preset::UFast,
+        Preset::UFastV,
+        Preset::UEcoVB,
+        Preset::CStrong,
+        Preset::UStrong,
+        Preset::KaffpaEco,
+        Preset::KaffpaStrong,
+        Preset::ScotchLike,
+        Preset::KMetisLike,
+        Preset::HMetisLike,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Preset::CFastR => "CFastR",
+            Preset::CFast => "CFast",
+            Preset::CFastV => "CFastV",
+            Preset::CFastVB => "CFastV/B",
+            Preset::CFastVBE => "CFastV/B/E",
+            Preset::CFastVBEA => "CFastV/B/E/A",
+            Preset::CEcoR => "CEcoR",
+            Preset::CEco => "CEco",
+            Preset::CEcoV => "CEcoV",
+            Preset::CEcoVB => "CEcoV/B",
+            Preset::CEcoVBE => "CEcoV/B/E",
+            Preset::CEcoVBEA => "CEcoV/B/E/A",
+            Preset::CStrong => "CStrong",
+            Preset::UFast => "UFast",
+            Preset::UFastV => "UFastV",
+            Preset::UEcoVB => "UEcoV/B",
+            Preset::UStrong => "UStrong",
+            Preset::KaffpaEco => "KaFFPaEco",
+            Preset::KaffpaStrong => "KaFFPaStrong",
+            Preset::KMetisLike => "kMetis-like",
+            Preset::ScotchLike => "Scotch-like",
+            Preset::HMetisLike => "hMetis-like",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Preset> {
+        Preset::ALL.iter().copied().find(|p| {
+            p.name().eq_ignore_ascii_case(name)
+                || p.name().replace('/', "").eq_ignore_ascii_case(name)
+        })
+    }
+}
+
+impl PartitionConfig {
+    /// Shared defaults (paper §5 tuned parameters).
+    fn base(k: usize) -> Self {
+        PartitionConfig {
+            k,
+            epsilon: 0.03,
+            lpa_iterations: 10,
+            size_factor: 18.0,
+            ordering: NodeOrdering::Degree,
+            active_nodes_coarsening: false,
+            ensemble: false,
+            vcycles: 1,
+            coarse_imbalance: 0.0,
+            scheme: SchemeKind::ClusterLpa,
+            initial: InitialKind::MatchingRb,
+            refinement: RefinementKind::Eco,
+            fm: FmConfig::eco(),
+            tolerate_imbalance: false,
+            deep_coarsening: false,
+        }
+    }
+
+    /// Materialize a named preset for `k` blocks.
+    pub fn preset(preset: Preset, k: usize) -> Self {
+        use Preset::*;
+        let mut c = Self::base(k);
+        match preset {
+            CEcoR => {
+                c.ordering = NodeOrdering::Random;
+            }
+            CEco => {}
+            CEcoV => {
+                c.vcycles = 3;
+            }
+            CEcoVB => {
+                c.vcycles = 3;
+                c.coarse_imbalance = 0.03;
+            }
+            CEcoVBE => {
+                c.vcycles = 3;
+                c.coarse_imbalance = 0.03;
+                c.ensemble = true;
+            }
+            CEcoVBEA => {
+                c.vcycles = 3;
+                c.coarse_imbalance = 0.03;
+                c.ensemble = true;
+                c.active_nodes_coarsening = true;
+            }
+            CFastR => {
+                c.ordering = NodeOrdering::Random;
+                c.refinement = RefinementKind::Lpa;
+            }
+            CFast => {
+                c.refinement = RefinementKind::Lpa;
+            }
+            CFastV => {
+                c.refinement = RefinementKind::Lpa;
+                c.vcycles = 3;
+            }
+            CFastVB => {
+                c.refinement = RefinementKind::Lpa;
+                c.vcycles = 3;
+                c.coarse_imbalance = 0.03;
+            }
+            CFastVBE => {
+                c.refinement = RefinementKind::Lpa;
+                c.vcycles = 3;
+                c.coarse_imbalance = 0.03;
+                c.ensemble = true;
+            }
+            CFastVBEA => {
+                c.refinement = RefinementKind::Lpa;
+                c.vcycles = 3;
+                c.coarse_imbalance = 0.03;
+                c.ensemble = true;
+                c.active_nodes_coarsening = true;
+            }
+            CStrong => {
+                c.coarse_imbalance = 0.03;
+                c.ensemble = true;
+                c.refinement = RefinementKind::Strong;
+                c.fm = FmConfig::strong();
+            }
+            UFast => {
+                c.refinement = RefinementKind::Lpa;
+                c.initial = InitialKind::ClusterRb;
+            }
+            UFastV => {
+                c.refinement = RefinementKind::Lpa;
+                c.initial = InitialKind::ClusterRb;
+                c.vcycles = 3;
+            }
+            UEcoVB => {
+                c.initial = InitialKind::ClusterRb;
+                c.vcycles = 3;
+                c.coarse_imbalance = 0.03;
+            }
+            UStrong => {
+                c.coarse_imbalance = 0.03;
+                c.ensemble = true;
+                c.refinement = RefinementKind::Strong;
+                c.fm = FmConfig::strong();
+                c.initial = InitialKind::ClusterRb;
+            }
+            KaffpaEco => {
+                c.scheme = SchemeKind::Matching;
+                c.refinement = RefinementKind::Eco;
+            }
+            KaffpaStrong => {
+                c.scheme = SchemeKind::Matching;
+                c.refinement = RefinementKind::Strong;
+                c.fm = FmConfig::strong();
+                c.vcycles = 3;
+            }
+            KMetisLike => {
+                c.scheme = SchemeKind::Matching;
+                c.refinement = RefinementKind::Greedy;
+                c.fm = FmConfig {
+                    max_passes: 2,
+                    max_negative_moves: 0,
+                    seed_fraction: 1.0,
+                };
+            }
+            ScotchLike => {
+                c.scheme = SchemeKind::Matching;
+                c.refinement = RefinementKind::Greedy;
+                c.tolerate_imbalance = true;
+                c.fm = FmConfig {
+                    max_passes: 2,
+                    max_negative_moves: 0,
+                    seed_fraction: 1.0,
+                };
+            }
+            HMetisLike => {
+                c.scheme = SchemeKind::Matching;
+                c.refinement = RefinementKind::Strong;
+                c.fm = FmConfig {
+                    max_passes: 16,
+                    max_negative_moves: 2000,
+                    seed_fraction: 1.0,
+                };
+                c.deep_coarsening = true;
+            }
+        }
+        c
+    }
+
+    /// Ensemble size per the paper (§5): 18 / 7 / 3 depending on k.
+    pub fn ensemble_count(&self) -> Option<usize> {
+        self.ensemble
+            .then(|| crate::clustering::ensemble::ensemble_size_for_k(self.k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_materialize() {
+        for p in Preset::ALL {
+            let c = PartitionConfig::preset(p, 8);
+            assert_eq!(c.k, 8);
+            assert!(c.epsilon > 0.0);
+            assert!(c.vcycles >= 1);
+        }
+    }
+
+    #[test]
+    fn preset_roundtrip_names() {
+        for p in Preset::ALL {
+            assert_eq!(Preset::from_name(p.name()), Some(p), "{}", p.name());
+        }
+        assert_eq!(Preset::from_name("ufast"), Some(Preset::UFast));
+        assert_eq!(Preset::from_name("CEcoVB"), Some(Preset::CEcoVB));
+        assert!(Preset::from_name("bogus").is_none());
+    }
+
+    #[test]
+    fn letter_semantics() {
+        let c = PartitionConfig::preset(Preset::CEcoVBEA, 4);
+        assert_eq!(c.vcycles, 3);
+        assert!(c.coarse_imbalance > 0.0);
+        assert!(c.ensemble);
+        assert!(c.active_nodes_coarsening);
+        assert_eq!(c.ordering, NodeOrdering::Degree);
+        let r = PartitionConfig::preset(Preset::CEcoR, 4);
+        assert_eq!(r.ordering, NodeOrdering::Random);
+        let u = PartitionConfig::preset(Preset::UStrong, 4);
+        assert_eq!(u.initial, InitialKind::ClusterRb);
+    }
+
+    #[test]
+    fn ensemble_counts() {
+        let mut c = PartitionConfig::preset(Preset::CEcoVBE, 8);
+        assert_eq!(c.ensemble_count(), Some(18));
+        c.k = 16;
+        assert_eq!(c.ensemble_count(), Some(7));
+        c.k = 64;
+        assert_eq!(c.ensemble_count(), Some(3));
+        let plain = PartitionConfig::preset(Preset::CEco, 8);
+        assert_eq!(plain.ensemble_count(), None);
+    }
+
+    #[test]
+    fn baselines_use_matching() {
+        for p in [
+            Preset::KaffpaEco,
+            Preset::KaffpaStrong,
+            Preset::KMetisLike,
+            Preset::ScotchLike,
+            Preset::HMetisLike,
+        ] {
+            assert_eq!(PartitionConfig::preset(p, 4).scheme, SchemeKind::Matching);
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Partition quality metrics (§2.1): total cut, balance/imbalance, and
+//! the auxiliary statistics the evaluation tables report.
+
+use super::partition::Partition;
+use crate::graph::csr::{Graph, Weight};
+
+/// Quality summary of a partition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionMetrics {
+    pub k: usize,
+    /// Total weight of cut edges — the objective.
+    pub cut: Weight,
+    /// max block weight / ceil(total/k) − 1 (0 = perfectly balanced).
+    pub imbalance: f64,
+    pub max_block_weight: Weight,
+    pub min_block_weight: Weight,
+    /// Number of boundary nodes.
+    pub boundary_nodes: usize,
+    /// Whether every block obeys `L_max` for the given ε.
+    pub feasible: bool,
+}
+
+/// Total weight of edges crossing blocks.
+pub fn cut_value(g: &Graph, blocks: &[u32]) -> Weight {
+    let mut cut = 0;
+    for v in g.nodes() {
+        let bv = blocks[v as usize];
+        let adj = g.adjacent(v);
+        let ws = g.adjacent_weights(v);
+        for i in 0..adj.len() {
+            if blocks[adj[i] as usize] != bv {
+                cut += ws[i];
+            }
+        }
+    }
+    cut / 2
+}
+
+/// Count nodes with at least one neighbor in another block.
+pub fn boundary_nodes(g: &Graph, blocks: &[u32]) -> usize {
+    g.nodes()
+        .filter(|&v| {
+            let bv = blocks[v as usize];
+            g.adjacent(v).iter().any(|&u| blocks[u as usize] != bv)
+        })
+        .count()
+}
+
+/// Compute all metrics for a partition under imbalance parameter ε.
+pub fn evaluate(g: &Graph, p: &Partition, epsilon: f64) -> PartitionMetrics {
+    let avg = (g.total_node_weight() as f64 / p.k as f64).ceil();
+    let lmax = crate::coarsening::hierarchy::l_max(
+        g.total_node_weight(),
+        p.k,
+        epsilon,
+        g.max_node_weight(),
+    );
+    let max_w = p.max_block_weight();
+    PartitionMetrics {
+        k: p.k,
+        cut: cut_value(g, &p.blocks),
+        imbalance: if avg > 0.0 {
+            max_w as f64 / avg - 1.0
+        } else {
+            0.0
+        },
+        max_block_weight: max_w,
+        min_block_weight: p.min_block_weight(),
+        boundary_nodes: boundary_nodes(g, &p.blocks),
+        feasible: max_w <= lmax,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn square() -> Graph {
+        GraphBuilder::new(4)
+            .edge(0, 1)
+            .edge(1, 2)
+            .edge(2, 3)
+            .edge(3, 0)
+            .build()
+    }
+
+    #[test]
+    fn cut_of_square_halves() {
+        let g = square();
+        assert_eq!(cut_value(&g, &[0, 0, 1, 1]), 2);
+        assert_eq!(cut_value(&g, &[0, 1, 0, 1]), 4);
+        assert_eq!(cut_value(&g, &[0, 0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn cut_respects_weights() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 1, 7);
+        let g = b.build();
+        assert_eq!(cut_value(&g, &[0, 1]), 7);
+    }
+
+    #[test]
+    fn boundary_count() {
+        let g = square();
+        assert_eq!(boundary_nodes(&g, &[0, 0, 1, 1]), 4);
+        assert_eq!(boundary_nodes(&g, &[0, 0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn evaluate_balanced() {
+        let g = square();
+        let p = Partition::from_blocks(&g, 2, vec![0, 0, 1, 1]);
+        let m = evaluate(&g, &p, 0.03);
+        assert_eq!(m.cut, 2);
+        assert!(m.imbalance.abs() < 1e-9);
+        assert!(m.feasible);
+        assert_eq!(m.boundary_nodes, 4);
+    }
+
+    #[test]
+    fn evaluate_imbalanced() {
+        let g = square();
+        let p = Partition::from_blocks(&g, 2, vec![0, 0, 0, 1]);
+        let m = evaluate(&g, &p, 0.03);
+        assert!((m.imbalance - 0.5).abs() < 1e-9);
+        // L_max = ceil(1.03*4/2)+1 = 4 wait: (1.03*4/2).ceil()=3, +1=4 ⇒ 3 ≤ 4 feasible
+        assert!(m.feasible);
+    }
+}

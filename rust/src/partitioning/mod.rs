@@ -1,0 +1,12 @@
+//! The partitioning system: partition type, quality metrics, named
+//! configurations (paper §5.1 + baselines) and the multilevel driver.
+
+pub mod config;
+pub mod metrics;
+pub mod multilevel;
+pub mod partition;
+
+pub use config::{PartitionConfig, Preset};
+pub use metrics::{cut_value, evaluate, PartitionMetrics};
+pub use multilevel::{MultilevelPartitioner, PartitionResult};
+pub use partition::Partition;

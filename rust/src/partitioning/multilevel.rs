@@ -1,0 +1,370 @@
+//! The multilevel driver: coarsen → initial partition → uncoarsen+refine,
+//! iterated as V-cycles (§4, §B.1), with the coarse-level imbalance
+//! schedule (§4: ε̂_ℓ = δ/(q−ℓ+1), first V-cycle only).
+
+use crate::clustering::label_propagation::LpaConfig;
+use crate::coarsening::contract::project_partition;
+use crate::coarsening::hierarchy::{
+    coarsen, l_max, CoarseningParams, CoarseningScheme, Hierarchy,
+};
+use crate::graph::csr::{Graph, Weight};
+use crate::initial_partitioning::recursive_bisection::{
+    recursive_bisection, InitialPartitionConfig,
+};
+use crate::partitioning::config::{InitialKind, PartitionConfig, RefinementKind, SchemeKind};
+use crate::partitioning::metrics::{cut_value, evaluate, PartitionMetrics};
+use crate::partitioning::partition::Partition;
+use crate::refinement::balance::rebalance;
+use crate::refinement::fm::kway_fm;
+use crate::refinement::lpa_refine::lpa_refine;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Outcome of a partitioning run, with the statistics the paper's
+/// evaluation tables report.
+#[derive(Debug, Clone)]
+pub struct PartitionResult {
+    pub partition: Partition,
+    pub metrics: PartitionMetrics,
+    /// Wall-clock seconds total.
+    pub seconds: f64,
+    /// Seconds spent per phase (coarsening, initial, uncoarsening).
+    pub coarsening_seconds: f64,
+    pub initial_seconds: f64,
+    pub uncoarsening_seconds: f64,
+    /// Hierarchy depth of the first V-cycle.
+    pub levels: usize,
+    /// Node/edge counts of the first-cycle coarsest graph.
+    pub coarsest_n: usize,
+    pub coarsest_m: usize,
+    /// Cut of the initial partition projected to the input graph —
+    /// the paper reports this for the huge instances (§5.2).
+    pub initial_cut: Weight,
+    /// Shrink factor of the first contraction (n_input / n_level0).
+    pub first_shrink: f64,
+}
+
+/// The multilevel partitioner (the system's main entry point).
+#[derive(Debug, Clone)]
+pub struct MultilevelPartitioner {
+    pub config: PartitionConfig,
+}
+
+impl MultilevelPartitioner {
+    pub fn new(config: PartitionConfig) -> Self {
+        MultilevelPartitioner { config }
+    }
+
+    fn coarsening_scheme(&self) -> CoarseningScheme {
+        match self.config.scheme {
+            SchemeKind::ClusterLpa => CoarseningScheme::ClusterLpa {
+                lpa: LpaConfig {
+                    max_iterations: self.config.lpa_iterations,
+                    ordering: self.config.ordering,
+                    active_nodes: self.config.active_nodes_coarsening,
+                    convergence_fraction: 0.05,
+                    mode: crate::clustering::label_propagation::LpaMode::Clustering,
+                },
+                size_factor: self.config.size_factor,
+                ensemble: self.config.ensemble_count(),
+            },
+            SchemeKind::Matching => CoarseningScheme::Matching { two_hop: true },
+        }
+    }
+
+    fn initial_config(&self) -> InitialPartitionConfig {
+        let mut ip = match self.config.initial {
+            InitialKind::MatchingRb => InitialPartitionConfig::matching_based(self.config.epsilon),
+            InitialKind::ClusterRb => InitialPartitionConfig::cluster_based(self.config.epsilon),
+        };
+        if matches!(self.config.refinement, RefinementKind::Strong) {
+            ip.tries = 8;
+        }
+        ip
+    }
+
+    /// Refine `p` on `g` under bound `lmax` according to the config.
+    fn refine(&self, g: &Graph, p: &mut Partition, lmax: Weight, rng: &mut Rng) {
+        match self.config.refinement {
+            RefinementKind::Lpa => {
+                lpa_refine(g, p, lmax, self.config.lpa_iterations, rng);
+            }
+            RefinementKind::Eco => {
+                lpa_refine(g, p, lmax, self.config.lpa_iterations, rng);
+                kway_fm(g, p, lmax, &self.config.fm, rng);
+            }
+            RefinementKind::Strong => {
+                lpa_refine(g, p, lmax, self.config.lpa_iterations, rng);
+                kway_fm(g, p, lmax, &self.config.fm, rng);
+                // KaFFPa's "more-localized" pairwise search (§2.2): only
+                // affordable on the smaller levels of the hierarchy.
+                if g.n() <= 50_000 {
+                    crate::refinement::quotient::quotient_pair_refine(
+                        g, p, lmax, &self.config.fm, 2, rng,
+                    );
+                }
+            }
+            RefinementKind::Greedy => {
+                kway_fm(g, p, lmax, &self.config.fm, rng);
+            }
+        }
+    }
+
+    /// Partition `input` with the configured algorithm and `seed`.
+    pub fn partition(&self, input: &Graph, seed: u64) -> PartitionResult {
+        let cfg = &self.config;
+        let k = cfg.k;
+        assert!(k >= 1);
+        let total_timer = Timer::start();
+        let mut rng = Rng::new(seed);
+
+        let final_lmax = l_max(
+            input.total_node_weight(),
+            k,
+            cfg.epsilon,
+            input.max_node_weight(),
+        );
+
+        let mut best_blocks: Option<Vec<u32>> = None;
+        let mut best_cut: Weight = Weight::MAX;
+        let mut coarsening_seconds = 0.0;
+        let mut initial_seconds = 0.0;
+        let mut uncoarsening_seconds = 0.0;
+        let mut levels_first = 0usize;
+        let mut coarsest_n = input.n();
+        let mut coarsest_m = input.m();
+        let mut initial_cut: Weight = 0;
+        let mut first_shrink = 1.0f64;
+
+        for cycle in 0..cfg.vcycles.max(1) {
+            // ---- Coarsening ----
+            let t = Timer::start();
+            let mut params =
+                CoarseningParams::new(k, cfg.epsilon, self.coarsening_scheme());
+            if cfg.deep_coarsening {
+                params.min_shrink = 0.999;
+            }
+            let respect = best_blocks.clone();
+            let h: Hierarchy = coarsen(input, &params, respect.as_deref(), &mut rng);
+            coarsening_seconds += t.elapsed_s();
+            let q = h.levels.len();
+            let coarsest = h.coarsest(input);
+            if cycle == 0 {
+                levels_first = q;
+                coarsest_n = coarsest.n();
+                coarsest_m = coarsest.m();
+                first_shrink = input.n() as f64
+                    / h.levels.first().map(|l| l.graph.n()).unwrap_or(input.n()) as f64;
+            }
+
+            // ---- Initial partitioning ----
+            let t = Timer::start();
+            let mut blocks = match &h.coarsest_partition {
+                Some(projected) => projected.clone(),
+                None => {
+                    let ip = recursive_bisection(
+                        coarsest,
+                        k,
+                        &self.initial_config(),
+                        &mut rng,
+                    );
+                    ip.blocks
+                }
+            };
+            if cycle == 0 {
+                // Paper §5.2 reports the initial partition's quality on
+                // the input graph: project through all levels.
+                let mut proj = blocks.clone();
+                for i in (0..h.levels.len()).rev() {
+                    proj = project_partition(&h.levels[i].map, &proj);
+                }
+                initial_cut = cut_value(input, &proj);
+            }
+            initial_seconds += t.elapsed_s();
+
+            // ---- Uncoarsening with refinement ----
+            let t = Timer::start();
+            // Imbalance schedule (§4): extra ε̂ on coarse levels, first
+            // cycle only, decreasing to 0 at the finest level.
+            let delta = if cycle == 0 { cfg.coarse_imbalance } else { 0.0 };
+            // Refine the coarsest level (level index q → ε̂ = δ).
+            {
+                let eps_here = cfg.epsilon + if q > 0 { delta } else { 0.0 };
+                let lmax_here = l_max(
+                    input.total_node_weight(),
+                    k,
+                    eps_here,
+                    coarsest.max_node_weight(),
+                );
+                let mut p = Partition::from_blocks(coarsest, k, blocks);
+                self.refine(coarsest, &mut p, lmax_here, &mut rng);
+                blocks = p.blocks;
+            }
+            for i in (0..h.levels.len()).rev() {
+                let finer: &Graph = if i == 0 { input } else { &h.levels[i - 1].graph };
+                blocks = project_partition(&h.levels[i].map, &blocks);
+                // Level i of `levels` is graph G_{i+2} in paper numbering
+                // (G_1 = input). For the finer graph at index i-1 (or the
+                // input), the remaining coarse distance is i.
+                let eps_hat = if i > 0 {
+                    delta / (q - i + 1) as f64
+                } else {
+                    0.0 // finest level: no extra imbalance
+                };
+                let lmax_here = l_max(
+                    input.total_node_weight(),
+                    k,
+                    cfg.epsilon + eps_hat,
+                    finer.max_node_weight(),
+                );
+                let mut p = Partition::from_blocks(finer, k, blocks);
+                self.refine(finer, &mut p, lmax_here, &mut rng);
+                blocks = p.blocks;
+            }
+
+            // Final feasibility repair on the input graph.
+            let mut p = Partition::from_blocks(input, k, blocks);
+            if !cfg.tolerate_imbalance && p.max_block_weight() > final_lmax {
+                let _ = rebalance(input, &mut p, final_lmax);
+                // Rebalancing may open improvement: one more cheap pass.
+                self.refine(input, &mut p, final_lmax, &mut rng);
+                if p.max_block_weight() > final_lmax {
+                    let _ = rebalance(input, &mut p, final_lmax);
+                }
+            }
+            uncoarsening_seconds += t.elapsed_s();
+
+            let cut = cut_value(input, &p.blocks);
+            if cut < best_cut || best_blocks.is_none() {
+                best_cut = cut;
+                best_blocks = Some(p.blocks);
+            }
+        }
+
+        let partition = Partition::from_blocks(input, k, best_blocks.unwrap());
+        let metrics = evaluate(input, &partition, cfg.epsilon);
+        PartitionResult {
+            partition,
+            metrics,
+            seconds: total_timer.elapsed_s(),
+            coarsening_seconds,
+            initial_seconds,
+            uncoarsening_seconds,
+            levels: levels_first,
+            coarsest_n,
+            coarsest_m,
+            initial_cut,
+            first_shrink,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+    use crate::graph::karate_club;
+    use crate::partitioning::config::Preset;
+
+    fn check_result(g: &Graph, r: &PartitionResult, k: usize, eps: f64) {
+        assert_eq!(r.partition.k, k);
+        assert!(r.partition.validate(g).is_ok());
+        assert_eq!(r.metrics.cut, cut_value(g, &r.partition.blocks));
+        let lmax = l_max(g.total_node_weight(), k, eps, g.max_node_weight());
+        assert!(
+            r.partition.max_block_weight() <= lmax,
+            "imbalanced: {:?} lmax={lmax}",
+            r.partition.block_weights
+        );
+    }
+
+    #[test]
+    fn karate_bisection_all_fast_presets() {
+        let g = karate_club();
+        for preset in [Preset::CFast, Preset::UFast, Preset::CEco, Preset::KMetisLike] {
+            let cfg = PartitionConfig::preset(preset, 2);
+            let r = MultilevelPartitioner::new(cfg).partition(&g, 1);
+            check_result(&g, &r, 2, 0.03);
+            assert!(
+                r.metrics.cut <= 15,
+                "{}: cut = {}",
+                preset.name(),
+                r.metrics.cut
+            );
+        }
+    }
+
+    #[test]
+    fn ba_graph_k8() {
+        let mut rng = Rng::new(1);
+        let g = generators::barabasi_albert(3000, 4, &mut rng);
+        let cfg = PartitionConfig::preset(Preset::UFast, 8);
+        let r = MultilevelPartitioner::new(cfg).partition(&g, 2);
+        check_result(&g, &r, 8, 0.03);
+        assert_eq!(r.partition.nonempty_blocks(), 8);
+        assert!(r.metrics.cut > 0);
+        assert!(r.levels >= 1);
+        assert!(r.first_shrink > 1.5, "shrink {}", r.first_shrink);
+    }
+
+    #[test]
+    fn vcycles_never_worse_than_first() {
+        let mut rng = Rng::new(2);
+        let g = crate::graph::subgraph::largest_component(&generators::rmat(
+            11, 8000, 0.57, 0.19, 0.19, &mut rng,
+        ));
+        let base = PartitionConfig::preset(Preset::CFast, 4);
+        let mut with_v = base.clone();
+        with_v.vcycles = 3;
+        let r1 = MultilevelPartitioner::new(base).partition(&g, 3);
+        let r3 = MultilevelPartitioner::new(with_v).partition(&g, 3);
+        // Same seed ⇒ first cycle identical; V-cycles keep the best.
+        assert!(r3.metrics.cut <= r1.metrics.cut);
+        check_result(&g, &r3, 4, 0.03);
+    }
+
+    #[test]
+    fn strong_beats_or_ties_fast() {
+        let mut rng = Rng::new(4);
+        let g = generators::watts_strogatz(1200, 5, 0.1, &mut rng);
+        let fast = MultilevelPartitioner::new(PartitionConfig::preset(Preset::CFast, 4))
+            .partition(&g, 5);
+        let strong = MultilevelPartitioner::new(PartitionConfig::preset(Preset::CStrong, 4))
+            .partition(&g, 5);
+        check_result(&g, &fast, 4, 0.03);
+        check_result(&g, &strong, 4, 0.03);
+        assert!(
+            strong.metrics.cut as f64 <= fast.metrics.cut as f64 * 1.1,
+            "strong {} vs fast {}",
+            strong.metrics.cut,
+            fast.metrics.cut
+        );
+    }
+
+    #[test]
+    fn scotch_like_may_be_imbalanced_but_runs() {
+        let mut rng = Rng::new(6);
+        let g = generators::barabasi_albert(1000, 3, &mut rng);
+        let cfg = PartitionConfig::preset(Preset::ScotchLike, 4);
+        let r = MultilevelPartitioner::new(cfg).partition(&g, 7);
+        assert!(r.partition.validate(&g).is_ok());
+        assert_eq!(r.partition.nonempty_blocks(), 4);
+    }
+
+    #[test]
+    fn k_one_trivial() {
+        let g = karate_club();
+        let cfg = PartitionConfig::preset(Preset::CFast, 1);
+        let r = MultilevelPartitioner::new(cfg).partition(&g, 8);
+        assert_eq!(r.metrics.cut, 0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = karate_club();
+        let cfg = PartitionConfig::preset(Preset::CEco, 4);
+        let a = MultilevelPartitioner::new(cfg.clone()).partition(&g, 42);
+        let b = MultilevelPartitioner::new(cfg).partition(&g, 42);
+        assert_eq!(a.partition.blocks, b.partition.blocks);
+    }
+}

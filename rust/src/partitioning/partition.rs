@@ -1,0 +1,218 @@
+//! The partition type: a block assignment `V → {0..k-1}` with cached
+//! block weights and the paper's balance bookkeeping (§2.1).
+
+use crate::graph::csr::{Graph, NodeId, Weight};
+use std::io::{self, BufRead, Write};
+
+/// A k-way partition of a graph's nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    pub k: usize,
+    /// Block id per node.
+    pub blocks: Vec<u32>,
+    /// Cached total node weight per block.
+    pub block_weights: Vec<Weight>,
+}
+
+impl Partition {
+    /// Build from a block array (weights computed from the graph).
+    pub fn from_blocks(g: &Graph, k: usize, blocks: Vec<u32>) -> Self {
+        assert_eq!(blocks.len(), g.n());
+        let mut block_weights = vec![0 as Weight; k];
+        for v in g.nodes() {
+            let b = blocks[v as usize] as usize;
+            assert!(b < k, "block id {b} out of range (k={k})");
+            block_weights[b] += g.node_weight(v);
+        }
+        Partition {
+            k,
+            blocks,
+            block_weights,
+        }
+    }
+
+    /// All nodes in block 0 (the trivial 1-extendable start).
+    pub fn singleton(g: &Graph, k: usize) -> Self {
+        Partition::from_blocks(g, k, vec![0; g.n()])
+    }
+
+    #[inline]
+    pub fn block_of(&self, v: NodeId) -> u32 {
+        self.blocks[v as usize]
+    }
+
+    /// Move `v` to `target`, maintaining cached weights.
+    #[inline]
+    pub fn move_node(&mut self, g: &Graph, v: NodeId, target: u32) {
+        let from = self.blocks[v as usize];
+        if from == target {
+            return;
+        }
+        let w = g.node_weight(v);
+        self.block_weights[from as usize] -= w;
+        self.block_weights[target as usize] += w;
+        self.blocks[v as usize] = target;
+    }
+
+    /// Heaviest block weight.
+    pub fn max_block_weight(&self) -> Weight {
+        self.block_weights.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Lightest block weight.
+    pub fn min_block_weight(&self) -> Weight {
+        self.block_weights.iter().copied().min().unwrap_or(0)
+    }
+
+    /// Number of non-empty blocks.
+    pub fn nonempty_blocks(&self) -> usize {
+        self.block_weights.iter().filter(|&&w| w > 0).count()
+    }
+
+    /// Structural validation against a graph.
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        if self.blocks.len() != g.n() {
+            return Err("length mismatch".into());
+        }
+        if self.block_weights.len() != self.k {
+            return Err("weights length mismatch".into());
+        }
+        let mut weights = vec![0 as Weight; self.k];
+        for v in g.nodes() {
+            let b = self.blocks[v as usize] as usize;
+            if b >= self.k {
+                return Err(format!("node {v} in out-of-range block {b}"));
+            }
+            weights[b] += g.node_weight(v);
+        }
+        if weights != self.block_weights {
+            return Err("cached block weights stale".into());
+        }
+        Ok(())
+    }
+}
+
+/// Write the METIS-compatible partition format: one block id per line,
+/// line i = block of node i.
+pub fn write_partition<W: Write>(p: &Partition, out: &mut W) -> io::Result<()> {
+    for &b in &p.blocks {
+        writeln!(out, "{b}")?;
+    }
+    Ok(())
+}
+
+/// Read a METIS-style partition file for graph `g`. `k` is inferred as
+/// 1 + max block id unless `k_hint` is larger.
+pub fn read_partition<R: BufRead>(
+    g: &Graph,
+    reader: R,
+    k_hint: Option<usize>,
+) -> io::Result<Partition> {
+    let mut blocks = Vec::with_capacity(g.n());
+    for line in reader.lines() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') || t.starts_with('#') {
+            continue;
+        }
+        let b: u32 = t
+            .parse()
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad block id"))?;
+        blocks.push(b);
+    }
+    if blocks.len() != g.n() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("partition has {} entries for {} nodes", blocks.len(), g.n()),
+        ));
+    }
+    let k = blocks
+        .iter()
+        .map(|&b| b as usize + 1)
+        .max()
+        .unwrap_or(1)
+        .max(k_hint.unwrap_or(1));
+    Ok(Partition::from_blocks(g, k, blocks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn square() -> Graph {
+        GraphBuilder::new(4)
+            .edge(0, 1)
+            .edge(1, 2)
+            .edge(2, 3)
+            .edge(3, 0)
+            .build()
+    }
+
+    #[test]
+    fn from_blocks_computes_weights() {
+        let g = square();
+        let p = Partition::from_blocks(&g, 2, vec![0, 0, 1, 1]);
+        assert_eq!(p.block_weights, vec![2, 2]);
+        assert!(p.validate(&g).is_ok());
+    }
+
+    #[test]
+    fn move_node_updates_weights() {
+        let g = square();
+        let mut p = Partition::from_blocks(&g, 2, vec![0, 0, 1, 1]);
+        p.move_node(&g, 0, 1);
+        assert_eq!(p.block_weights, vec![1, 3]);
+        assert_eq!(p.block_of(0), 1);
+        assert!(p.validate(&g).is_ok());
+        // self-move is a no-op
+        p.move_node(&g, 0, 1);
+        assert_eq!(p.block_weights, vec![1, 3]);
+    }
+
+    #[test]
+    fn min_max_and_nonempty() {
+        let g = square();
+        let p = Partition::from_blocks(&g, 3, vec![0, 0, 0, 1]);
+        assert_eq!(p.max_block_weight(), 3);
+        assert_eq!(p.min_block_weight(), 0);
+        assert_eq!(p.nonempty_blocks(), 2);
+    }
+
+    #[test]
+    fn partition_file_roundtrip() {
+        let g = square();
+        let p = Partition::from_blocks(&g, 3, vec![0, 2, 1, 2]);
+        let mut buf = Vec::new();
+        write_partition(&p, &mut buf).unwrap();
+        let p2 = read_partition(&g, std::io::Cursor::new(buf), None).unwrap();
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn partition_file_length_mismatch_rejected() {
+        let g = square();
+        let r = read_partition(&g, std::io::Cursor::new("0
+1
+"), None);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn partition_file_k_hint() {
+        let g = square();
+        let p2 = read_partition(&g, std::io::Cursor::new("0
+0
+1
+1
+"), Some(5)).unwrap();
+        assert_eq!(p2.k, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_block_panics() {
+        let g = square();
+        let _ = Partition::from_blocks(&g, 2, vec![0, 0, 1, 2]);
+    }
+}

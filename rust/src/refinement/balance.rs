@@ -1,0 +1,174 @@
+//! Greedy rebalancer: repair partitions that violate `L_max`.
+//!
+//! Needed because (a) the coarse-level imbalance schedule (§4 "Allowing
+//! Larger Imbalances") deliberately produces over-loaded blocks that
+//! must be legal by the finest level, and (b) LPA refinement is poor at
+//! rebalancing on its own (the paper notes this for CFastV/B).
+//!
+//! Strategy: while a block exceeds the bound, move its boundary node
+//! with the least cut damage (max gain) to the lightest eligible block.
+
+use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::partitioning::partition::Partition;
+use crate::util::bucket_queue::BucketQueue;
+use crate::util::fast_reset::FastResetArray;
+
+/// Rebalance `p` so every block weight ≤ `lmax`. Returns the number of
+/// moves made; gives up (returns Err with the remaining overload) if no
+/// progress is possible (e.g. a single node heavier than `lmax`).
+pub fn rebalance(
+    g: &Graph,
+    p: &mut Partition,
+    lmax: Weight,
+) -> Result<usize, Weight> {
+    let mut moves = 0usize;
+    let mut conn: FastResetArray<i64> = FastResetArray::new(p.k);
+    let max_gain = (g.max_degree() as i64 + 1).max(8);
+
+    loop {
+        // Find the most overloaded block.
+        let Some((over_block, _)) = p
+            .block_weights
+            .iter()
+            .enumerate()
+            .filter(|&(_, &w)| w > lmax)
+            .max_by_key(|&(_, &w)| w)
+        else {
+            return Ok(moves);
+        };
+        let over_block = over_block as u32;
+
+        // Queue all nodes of the overloaded block by move gain.
+        let mut queue = BucketQueue::new(g.n(), max_gain);
+        for v in g.nodes() {
+            if p.block_of(v) != over_block {
+                continue;
+            }
+            if let Some((_, gain)) = best_target(g, p, v, lmax, &mut conn) {
+                queue.push(v as usize, gain);
+            }
+        }
+
+        let mut progressed = false;
+        while p.block_weights[over_block as usize] > lmax {
+            let Some((vu, _)) = queue.pop_max() else { break };
+            let v = vu as NodeId;
+            if p.block_of(v) != over_block {
+                continue;
+            }
+            let Some((target, _)) = best_target(g, p, v, lmax, &mut conn) else {
+                continue;
+            };
+            p.move_node(g, v, target);
+            moves += 1;
+            progressed = true;
+        }
+
+        if p.block_weights[over_block as usize] > lmax && !progressed {
+            let overload = p.max_block_weight() - lmax;
+            return Err(overload);
+        }
+    }
+}
+
+/// Best target block for evacuating `v`: the eligible block with the
+/// strongest connection (fallback: the globally lightest block if no
+/// neighbor block is eligible — evacuation must make progress even for
+/// interior nodes).
+fn best_target(
+    g: &Graph,
+    p: &Partition,
+    v: NodeId,
+    lmax: Weight,
+    conn: &mut FastResetArray<i64>,
+) -> Option<(u32, i64)> {
+    let from = p.block_of(v);
+    let vw = g.node_weight(v);
+    conn.clear();
+    let adj = g.adjacent(v);
+    let ws = g.adjacent_weights(v);
+    for i in 0..adj.len() {
+        conn.add_i64(p.blocks[adj[i] as usize] as usize, ws[i]);
+    }
+    let internal = conn.get(from as usize);
+    let mut best: Option<(u32, i64)> = None;
+    for &b in conn.touched() {
+        let b32 = b as u32;
+        if b32 == from || p.block_weights[b] + vw > lmax {
+            continue;
+        }
+        let gain = conn.get(b) - internal;
+        if best.map(|(_, bg)| gain > bg).unwrap_or(true) {
+            best = Some((b32, gain));
+        }
+    }
+    if best.is_some() {
+        return best;
+    }
+    // Interior node or all neighbor blocks full: lightest block overall.
+    let (lightest, lw) = p
+        .block_weights
+        .iter()
+        .enumerate()
+        .filter(|&(b, _)| b as u32 != from)
+        .min_by_key(|&(_, &w)| w)?;
+    if lw + vw > lmax {
+        return None;
+    }
+    Some((lightest as u32, -internal))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::karate::karate_club;
+
+    #[test]
+    fn rebalance_fixes_overload() {
+        let g = karate_club();
+        // Everything in block 0 of 2.
+        let mut p = Partition::from_blocks(&g, 2, vec![0; 34]);
+        let lmax = 18;
+        let moves = rebalance(&g, &mut p, lmax).expect("balanceable");
+        assert!(moves > 0);
+        assert!(p.max_block_weight() <= lmax, "{:?}", p.block_weights);
+        assert!(p.validate(&g).is_ok());
+    }
+
+    #[test]
+    fn rebalance_noop_when_balanced() {
+        let g = karate_club();
+        let blocks: Vec<u32> = (0..34u32).map(|v| v % 2).collect();
+        let mut p = Partition::from_blocks(&g, 2, blocks);
+        let moves = rebalance(&g, &mut p, 18).unwrap();
+        assert_eq!(moves, 0);
+    }
+
+    #[test]
+    fn rebalance_reports_impossible() {
+        // One node of weight 10, lmax 5: impossible.
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 1, 1);
+        b.set_node_weight(0, 10);
+        let g = b.build();
+        let mut p = Partition::from_blocks(&g, 2, vec![0, 1]);
+        assert!(rebalance(&g, &mut p, 5).is_err());
+    }
+
+    #[test]
+    fn rebalance_prefers_low_damage_moves() {
+        // Path a-b-c-d-e; block0={a,b,c,d}, block1={e}; lmax=3.
+        // Moving d (boundary) costs nothing extra; moving a would cut 1.
+        let mut bld = GraphBuilder::new(5);
+        for i in 1..5u32 {
+            bld.add_edge(i - 1, i, 1);
+        }
+        let g = bld.build();
+        let mut p = Partition::from_blocks(&g, 2, vec![0, 0, 0, 0, 1]);
+        rebalance(&g, &mut p, 3).unwrap();
+        assert!(p.max_block_weight() <= 3);
+        // d moved to block 1 (cut stays 1)
+        assert_eq!(p.blocks, vec![0, 0, 0, 1, 1]);
+    }
+}

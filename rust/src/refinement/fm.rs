@@ -1,0 +1,350 @@
+//! K-way boundary Fiduccia–Mattheyses local search — the refinement
+//! family used by KaFFPa's Eco/Strong configurations (§2.2, §5.1).
+//!
+//! Classic scheme: maintain a bucket priority queue of boundary nodes
+//! keyed by the best move gain; pop, move, lock, update neighbors.
+//! Negative-gain moves are allowed (hill climbing) and the best prefix
+//! of the move sequence is kept — this is what distinguishes FM from
+//! greedy refinement and why the Strong configs cut deeper.
+
+use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::partitioning::partition::Partition;
+use crate::util::bucket_queue::BucketQueue;
+use crate::util::fast_reset::{BitVec, FastResetArray};
+use crate::util::rng::Rng;
+
+/// FM tuning parameters.
+#[derive(Debug, Clone)]
+pub struct FmConfig {
+    /// Maximum FM passes (each pass visits the boundary once).
+    pub max_passes: usize,
+    /// Abort a pass after this many consecutive non-improving moves
+    /// (classic adaptive stopping rule).
+    pub max_negative_moves: usize,
+    /// Fraction of boundary nodes seeded per pass (1.0 = all).
+    pub seed_fraction: f64,
+}
+
+impl FmConfig {
+    /// Eco: cheap — few passes, early abort.
+    pub fn eco() -> Self {
+        FmConfig {
+            max_passes: 3,
+            max_negative_moves: 150,
+            seed_fraction: 1.0,
+        }
+    }
+
+    /// Strong: deep — more passes, long hill climbs.
+    pub fn strong() -> Self {
+        FmConfig {
+            max_passes: 10,
+            max_negative_moves: 1000,
+            seed_fraction: 1.0,
+        }
+    }
+}
+
+/// Result of a refinement call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FmResult {
+    pub initial_cut: Weight,
+    pub final_cut: Weight,
+    pub moves_applied: usize,
+    pub passes: usize,
+}
+
+/// Connection strengths of `v` towards each adjacent block.
+#[inline]
+fn connections(
+    g: &Graph,
+    blocks: &[u32],
+    v: NodeId,
+    conn: &mut FastResetArray<i64>,
+) {
+    conn.clear();
+    let adj = g.adjacent(v);
+    let ws = g.adjacent_weights(v);
+    for i in 0..adj.len() {
+        conn.add_i64(blocks[adj[i] as usize] as usize, ws[i]);
+    }
+}
+
+/// Best admissible move for `v`: returns (target, gain).
+/// `bounds[b]` is the weight cap of block `b` (uniform `L_max` in k-way
+/// refinement; proportional targets in recursive bisection).
+#[inline]
+fn best_move(
+    g: &Graph,
+    p: &Partition,
+    v: NodeId,
+    bounds: &[Weight],
+    conn: &mut FastResetArray<i64>,
+    rng: &mut Rng,
+) -> Option<(u32, i64)> {
+    let from = p.block_of(v);
+    connections(g, &p.blocks, v, conn);
+    let internal = conn.get(from as usize);
+    let vw = g.node_weight(v);
+    let mut best: Option<(u32, i64)> = None;
+    let mut ties = 0u32;
+    for &b in conn.touched() {
+        let b32 = b as u32;
+        if b32 == from {
+            continue;
+        }
+        if p.block_weights[b] + vw > bounds[b] {
+            continue;
+        }
+        let gain = conn.get(b) - internal;
+        match best {
+            Some((_, bg)) if gain < bg => {}
+            Some((_, bg)) if gain == bg => {
+                ties += 1;
+                if rng.below(ties as usize + 1) == 0 {
+                    best = Some((b32, gain));
+                }
+            }
+            _ => {
+                best = Some((b32, gain));
+                ties = 0;
+            }
+        }
+    }
+    best
+}
+
+/// Run k-way boundary FM until no pass improves. The partition is
+/// modified in place; moves that would push a block over its bound are
+/// inadmissible. Blocks are never emptied.
+///
+/// Uniform-`L_max` convenience wrapper; see [`kway_fm_bounded`].
+pub fn kway_fm(
+    g: &Graph,
+    p: &mut Partition,
+    lmax: Weight,
+    config: &FmConfig,
+    rng: &mut Rng,
+) -> FmResult {
+    let bounds = vec![lmax; p.k];
+    kway_fm_bounded(g, p, &bounds, config, rng)
+}
+
+/// K-way boundary FM with a per-block weight bound (`bounds[b]`).
+pub fn kway_fm_bounded(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[Weight],
+    config: &FmConfig,
+    rng: &mut Rng,
+) -> FmResult {
+    kway_fm_frozen(g, p, bounds, config, None, rng)
+}
+
+/// K-way boundary FM with per-block bounds and optionally frozen nodes
+/// (used by the quotient-graph pair refinement to pin virtual terminals).
+pub fn kway_fm_frozen(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[Weight],
+    config: &FmConfig,
+    frozen: Option<&BitVec>,
+    rng: &mut Rng,
+) -> FmResult {
+    assert_eq!(bounds.len(), p.k);
+    let initial_cut = crate::partitioning::metrics::cut_value(g, &p.blocks);
+    let mut current_cut = initial_cut;
+    let mut conn: FastResetArray<i64> = FastResetArray::new(p.k);
+    let max_gain = (g.max_degree() as i64 + 1).max(8);
+    let mut passes = 0;
+    let mut total_moves = 0usize;
+
+    let mut block_counts = vec![0u32; p.k];
+    for &b in &p.blocks {
+        block_counts[b as usize] += 1;
+    }
+
+    for _ in 0..config.max_passes {
+        passes += 1;
+        // Seed queue with boundary nodes.
+        let mut queue = BucketQueue::new(g.n(), max_gain);
+        let mut locked = BitVec::new(g.n());
+        let mut boundary: Vec<NodeId> = g
+            .nodes()
+            .filter(|&v| {
+                let bv = p.blocks[v as usize];
+                g.adjacent(v).iter().any(|&u| p.blocks[u as usize] != bv)
+            })
+            .collect();
+        if config.seed_fraction < 1.0 {
+            rng.shuffle(&mut boundary);
+            let keep = ((boundary.len() as f64) * config.seed_fraction).ceil() as usize;
+            boundary.truncate(keep.max(1).min(boundary.len()));
+        }
+        for &v in &boundary {
+            if frozen.map(|f| f.get(v as usize)).unwrap_or(false) {
+                continue;
+            }
+            if let Some((_, gain)) = best_move(g, p, v, bounds, &mut conn, rng) {
+                queue.push(v as usize, gain);
+            }
+        }
+
+        // Move log for rollback: (node, from_block).
+        let mut log: Vec<(NodeId, u32)> = Vec::new();
+        let mut best_cut = current_cut;
+        let mut best_len = 0usize;
+        let mut running_cut = current_cut;
+        let mut negatives = 0usize;
+
+        while let Some((vu, _stale_gain)) = queue.pop_max() {
+            let v = vu as NodeId;
+            if locked.get(vu) {
+                continue;
+            }
+            // Revalidate lazily: the stored gain may be stale.
+            let Some((target, gain)) = best_move(g, p, v, bounds, &mut conn, rng) else {
+                continue;
+            };
+            let from = p.block_of(v);
+            if block_counts[from as usize] <= 1 {
+                continue; // never empty a block
+            }
+            p.move_node(g, v, target);
+            block_counts[from as usize] -= 1;
+            block_counts[target as usize] += 1;
+            locked.set(vu, true);
+            log.push((v, from));
+            running_cut -= gain;
+            total_moves += 1;
+
+            if running_cut < best_cut {
+                best_cut = running_cut;
+                best_len = log.len();
+                negatives = 0;
+            } else {
+                negatives += 1;
+                if negatives > config.max_negative_moves {
+                    break;
+                }
+            }
+
+            // Update neighbors in the queue.
+            for &u in g.adjacent(v) {
+                let uu = u as usize;
+                if locked.get(uu) || frozen.map(|f| f.get(uu)).unwrap_or(false) {
+                    continue;
+                }
+                match best_move(g, p, u, bounds, &mut conn, rng) {
+                    Some((_, ug)) => queue.update(uu, ug),
+                    None => queue.remove(uu),
+                }
+            }
+        }
+
+        // Roll back past the best prefix.
+        for &(v, from) in log[best_len..].iter().rev() {
+            let cur = p.block_of(v);
+            p.move_node(g, v, from);
+            block_counts[cur as usize] -= 1;
+            block_counts[from as usize] += 1;
+        }
+        debug_assert_eq!(
+            crate::partitioning::metrics::cut_value(g, &p.blocks),
+            best_cut
+        );
+
+        let improved = best_cut < current_cut;
+        current_cut = best_cut;
+        if !improved {
+            break;
+        }
+    }
+
+    FmResult {
+        initial_cut,
+        final_cut: current_cut,
+        moves_applied: total_moves,
+        passes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::karate::karate_club;
+    use crate::partitioning::metrics::cut_value;
+
+    fn two_cliques() -> Graph {
+        let mut b = GraphBuilder::new(8);
+        for base in [0u32, 4] {
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    b.add_edge(base + i, base + j, 1);
+                }
+            }
+        }
+        b.add_edge(3, 4, 1);
+        b.build()
+    }
+
+    #[test]
+    fn fm_recovers_clique_split() {
+        let g = two_cliques();
+        let mut p = Partition::from_blocks(&g, 2, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+        let mut rng = Rng::new(1);
+        let res = kway_fm(&g, &mut p, 5, &FmConfig::strong(), &mut rng);
+        assert_eq!(res.final_cut, 1, "blocks: {:?}", p.blocks);
+        assert_eq!(cut_value(&g, &p.blocks), 1);
+        assert!(p.validate(&g).is_ok());
+    }
+
+    #[test]
+    fn fm_never_violates_lmax() {
+        let g = karate_club();
+        for seed in 0..5 {
+            let mut rng = Rng::new(seed);
+            let blocks: Vec<u32> = (0..g.n() as u32).map(|v| v % 4).collect();
+            let mut p = Partition::from_blocks(&g, 4, blocks);
+            let lmax = 10;
+            kway_fm(&g, &mut p, lmax, &FmConfig::eco(), &mut rng);
+            assert!(p.max_block_weight() <= lmax, "{:?}", p.block_weights);
+            assert!(p.validate(&g).is_ok());
+        }
+    }
+
+    #[test]
+    fn fm_never_increases_cut() {
+        let g = karate_club();
+        for seed in 0..5 {
+            let mut rng = Rng::new(seed + 100);
+            let blocks: Vec<u32> = (0..g.n() as u32).map(|_| rng.below(3) as u32).collect();
+            let mut p = Partition::from_blocks(&g, 3, blocks);
+            let before = cut_value(&g, &p.blocks);
+            let res = kway_fm(&g, &mut p, 15, &FmConfig::strong(), &mut rng);
+            assert!(res.final_cut <= before);
+            assert_eq!(res.final_cut, cut_value(&g, &p.blocks));
+        }
+    }
+
+    #[test]
+    fn fm_keeps_all_blocks_nonempty() {
+        let g = two_cliques();
+        let mut rng = Rng::new(7);
+        let mut p = Partition::from_blocks(&g, 4, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        kway_fm(&g, &mut p, 8, &FmConfig::strong(), &mut rng);
+        assert_eq!(p.nonempty_blocks(), 4);
+    }
+
+    #[test]
+    fn fm_noop_on_optimal() {
+        let g = two_cliques();
+        let mut p = Partition::from_blocks(&g, 2, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        let mut rng = Rng::new(9);
+        let res = kway_fm(&g, &mut p, 5, &FmConfig::strong(), &mut rng);
+        assert_eq!(res.final_cut, 1);
+        assert_eq!(res.initial_cut, 1);
+        assert_eq!(p.blocks, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+    }
+}

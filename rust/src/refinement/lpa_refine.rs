@@ -1,0 +1,167 @@
+//! SCLaP as local search (§3.1 last paragraph): the same size-constrained
+//! label propagation engine, run in refinement mode with `W = L_max`.
+//! This is the "Fast" refinement of the paper's configurations — much
+//! cheaper than FM, surprisingly effective on complex networks, but poor
+//! at *re*-balancing (the paper observes exactly that in §5.1, CFastV vs
+//! CFastV/B — reproduced in `benches/ablations.rs`).
+
+use crate::clustering::label_propagation::{size_constrained_lpa, LpaConfig};
+use crate::graph::csr::{Graph, Weight};
+use crate::partitioning::partition::Partition;
+use crate::util::rng::Rng;
+
+/// Refine `p` in place with SCLaP (active-nodes rounds, §B.2).
+/// Returns (cut_before, cut_after).
+pub fn lpa_refine(
+    g: &Graph,
+    p: &mut Partition,
+    lmax: Weight,
+    iterations: usize,
+    rng: &mut Rng,
+) -> (Weight, Weight) {
+    let before = crate::partitioning::metrics::cut_value(g, &p.blocks);
+    let config = LpaConfig::refinement(iterations);
+    let (clustering, _) = size_constrained_lpa(
+        g,
+        lmax,
+        &config,
+        Some(p.blocks.clone()),
+        None,
+        rng,
+    );
+    // Refinement mode never merges blocks out of existence, but the
+    // densification may have renamed labels; restore original block ids
+    // by majority vote per dense cluster (each dense cluster is exactly
+    // one original block since moves only relabel nodes between blocks).
+    // Simpler and exact: map each dense label to the original block of
+    // any node holding it *before* moves is wrong — instead carry the
+    // actual label values: refinement labels ARE block ids before
+    // densification. Re-derive from the clustering labels directly.
+    let new_blocks = undense_blocks(&clustering.labels, &p.blocks, p.k);
+    *p = Partition::from_blocks(g, p.k, new_blocks);
+    let after = crate::partitioning::metrics::cut_value(g, &p.blocks);
+    // Note: `after > before` is legitimate when the overloaded-block
+    // rule fires — the paper trades cut for balance there ("at the cost
+    // of the number of edges cut", §3.1) — and the repair may be only
+    // partial if no eligible target exists yet.
+    (before, after)
+}
+
+/// The LPA engine densifies labels; map dense cluster ids back to block
+/// ids `0..k`. Every dense cluster corresponds to exactly one original
+/// block (clusters in refinement mode are blocks), so a single
+/// co-occurrence vote per cluster suffices — but after moves a node's
+/// dense label may pair with several original blocks. The *dense label*
+/// is what identifies the block: two nodes share a final block iff they
+/// share a dense label. We assign each dense label the id of the block
+/// whose members dominate it (stable, keeps ids aligned for V-cycles).
+fn undense_blocks(dense: &[u32], original: &[u32], k: usize) -> Vec<u32> {
+    let nd = dense.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0);
+    // vote[dense][orig] counts — k is small, dense count = k in practice
+    let mut votes = vec![0u64; nd * k];
+    for v in 0..dense.len() {
+        votes[dense[v] as usize * k + original[v] as usize] += 1;
+    }
+    let mut assignment = vec![0u32; nd];
+    let mut taken = vec![false; k];
+    // Greedy maximum-vote assignment (nd ≤ k always holds here).
+    let mut order: Vec<usize> = (0..nd).collect();
+    order.sort_by_key(|&d| std::cmp::Reverse(*votes[d * k..(d + 1) * k].iter().max().unwrap()));
+    for &d in &order {
+        let mut best = None;
+        let mut best_votes = 0u64;
+        for b in 0..k {
+            if !taken[b] && votes[d * k + b] >= best_votes {
+                best = Some(b);
+                best_votes = votes[d * k + b];
+            }
+        }
+        let b = best.expect("more dense clusters than blocks");
+        taken[b] = true;
+        assignment[d] = b as u32;
+    }
+    dense.iter().map(|&d| assignment[d as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::karate::karate_club;
+    use crate::partitioning::metrics::cut_value;
+
+    #[test]
+    fn refine_improves_random_partition() {
+        let g = karate_club();
+        let mut rng = Rng::new(1);
+        let blocks: Vec<u32> = (0..g.n() as u32).map(|_| rng.below(2) as u32).collect();
+        let mut p = Partition::from_blocks(&g, 2, blocks);
+        let lmax = 20;
+        let (before, after) = lpa_refine(&g, &mut p, lmax, 10, &mut rng);
+        assert!(after <= before);
+        assert_eq!(after, cut_value(&g, &p.blocks));
+        assert_eq!(p.k, 2);
+        assert!(p.validate(&g).is_ok());
+    }
+
+    #[test]
+    fn refine_keeps_block_count() {
+        let g = karate_club();
+        let mut rng = Rng::new(2);
+        let blocks: Vec<u32> = (0..g.n() as u32).map(|v| v % 4).collect();
+        let mut p = Partition::from_blocks(&g, 4, blocks);
+        lpa_refine(&g, &mut p, 12, 10, &mut rng);
+        assert_eq!(p.nonempty_blocks(), 4);
+        assert!(p.max_block_weight() <= 12);
+    }
+
+    #[test]
+    fn undense_identity() {
+        let orig = vec![0u32, 0, 1, 1, 2, 2];
+        let out = undense_blocks(&[0, 0, 1, 1, 2, 2], &orig, 3);
+        assert_eq!(out, orig);
+    }
+
+    #[test]
+    fn undense_renamed() {
+        // dense labels permuted relative to original blocks
+        let orig = vec![2u32, 2, 0, 0, 1, 1];
+        let dense = vec![0u32, 0, 1, 1, 2, 2];
+        let out = undense_blocks(&dense, &orig, 3);
+        assert_eq!(out, orig);
+    }
+
+    #[test]
+    fn undense_after_moves_majority() {
+        // block 0 = {0,1,2}, block 1 = {3}; node 3 joined dense cluster 0
+        // after a move — wait, moves change dense labels not originals.
+        // dense: {0,1,2,3} all in cluster 0? Then k=2 but nd=1 < k is
+        // impossible in refinement (blocks never emptied); use nd=k case:
+        let orig = vec![0u32, 0, 1, 1];
+        let dense = vec![0u32, 0, 0, 1]; // node 2 moved from block 1 to 0
+        let out = undense_blocks(&dense, &orig, 2);
+        assert_eq!(out, vec![0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn weighted_graph_refinement() {
+        let mut b = GraphBuilder::new(6);
+        b.add_edge(0, 1, 10);
+        b.add_edge(1, 2, 10);
+        b.add_edge(3, 4, 10);
+        b.add_edge(4, 5, 10);
+        b.add_edge(2, 3, 1);
+        let g = b.build();
+        // split across the weak edge is optimal; start from a bad split
+        // (cut 30). LPA refinement is order-dependent and can stall in a
+        // local optimum when U leaves little slack — the paper pairs it
+        // with FM for exactly this reason — so assert improvement, not
+        // optimality.
+        let mut p = Partition::from_blocks(&g, 2, vec![0, 0, 1, 1, 0, 1]);
+        let mut rng = Rng::new(3);
+        let (before, after) = lpa_refine(&g, &mut p, 4, 10, &mut rng);
+        assert_eq!(before, 30);
+        assert!(after < before, "after={after}");
+        assert!(p.max_block_weight() <= 4);
+    }
+}

@@ -1,0 +1,13 @@
+//! Uncoarsening local search: SCLaP-as-refinement (the paper's fast
+//! path), k-way boundary FM (the Eco/Strong path) and the greedy
+//! rebalancer used by the coarse-level imbalance schedule.
+
+pub mod balance;
+pub mod fm;
+pub mod lpa_refine;
+pub mod quotient;
+
+pub use balance::rebalance;
+pub use fm::{kway_fm, kway_fm_bounded, kway_fm_frozen, FmConfig, FmResult};
+pub use lpa_refine::lpa_refine;
+pub use quotient::quotient_pair_refine;

@@ -1,0 +1,260 @@
+//! Quotient-graph pairwise refinement — KaFFPa's "more-localized local
+//! searches" (§2.2): for every pair of blocks that share cut edges, run
+//! a focused 2-way FM on the *band* around their mutual boundary.
+//!
+//! Band construction: the boundary nodes of the pair plus `hops` rings
+//! of same-pair neighbors. Edges to nodes outside the band are
+//! represented exactly by two *virtual terminal* nodes (one per block):
+//! a band node's connection to the outside of block `b` becomes an edge
+//! to terminal `b`, and the terminal's node weight equals the total
+//! outside weight of its block — so block weights and move gains inside
+//! the band equal their global values. Terminals are frozen.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::partitioning::metrics::cut_value;
+use crate::partitioning::partition::Partition;
+use crate::refinement::fm::{kway_fm_frozen, FmConfig};
+use crate::util::fast_reset::BitVec;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Refine every cut-sharing block pair of `p` in place.
+/// Returns (cut_before, cut_after).
+pub fn quotient_pair_refine(
+    g: &Graph,
+    p: &mut Partition,
+    lmax: Weight,
+    config: &FmConfig,
+    hops: usize,
+    rng: &mut Rng,
+) -> (Weight, Weight) {
+    let before = cut_value(g, &p.blocks);
+
+    // Collect adjacent block pairs (quotient-graph edges).
+    let mut pairs: HashMap<(u32, u32), Weight> = HashMap::new();
+    for (u, v, w) in g.edges() {
+        let (a, b) = (p.block_of(u), p.block_of(v));
+        if a != b {
+            let key = (a.min(b), a.max(b));
+            *pairs.entry(key).or_insert(0) += w;
+        }
+    }
+    // Heaviest pairs first: most improvement potential.
+    let mut order: Vec<((u32, u32), Weight)> = pairs.into_iter().collect();
+    order.sort_by_key(|&(_, w)| std::cmp::Reverse(w));
+
+    for ((a, b), _) in order {
+        refine_pair(g, p, a, b, lmax, config, hops, rng);
+    }
+
+    let after = cut_value(g, &p.blocks);
+    debug_assert!(after <= before);
+    (before, after)
+}
+
+/// Run 2-way FM on the band around the (a, b) boundary.
+#[allow(clippy::too_many_arguments)]
+fn refine_pair(
+    g: &Graph,
+    p: &mut Partition,
+    a: u32,
+    b: u32,
+    lmax: Weight,
+    config: &FmConfig,
+    hops: usize,
+    rng: &mut Rng,
+) {
+    // --- band: boundary nodes of the pair + `hops` rings inside a/b ---
+    let mut in_band = BitVec::new(g.n());
+    let mut band: Vec<NodeId> = Vec::new();
+    for v in g.nodes() {
+        let bv = p.block_of(v);
+        if bv != a && bv != b {
+            continue;
+        }
+        let other = if bv == a { b } else { a };
+        if g.adjacent(v).iter().any(|&u| p.block_of(u) == other) {
+            in_band.set(v as usize, true);
+            band.push(v);
+        }
+    }
+    if band.is_empty() {
+        return;
+    }
+    let mut frontier = band.clone();
+    for _ in 0..hops {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for &u in g.adjacent(v) {
+                let bu = p.block_of(u);
+                if (bu == a || bu == b) && !in_band.get(u as usize) {
+                    in_band.set(u as usize, true);
+                    band.push(u);
+                    next.push(u);
+                }
+            }
+        }
+        frontier = next;
+    }
+
+    // --- build the band graph with 2 virtual terminals ---
+    // local ids: band nodes 0..nb, terminal_a = nb, terminal_b = nb+1
+    let nb = band.len();
+    let mut local_of: HashMap<NodeId, u32> = HashMap::with_capacity(nb);
+    for (i, &v) in band.iter().enumerate() {
+        local_of.insert(v, i as u32);
+    }
+    let term_a = nb as u32;
+    let term_b = nb as u32 + 1;
+
+    let mut builder = GraphBuilder::new(nb + 2);
+    let mut outside_weight = [0 as Weight; 2]; // [a, b]
+    // outside weight = total block weight minus band part
+    let mut band_weight = [0 as Weight; 2];
+    for (i, &v) in band.iter().enumerate() {
+        builder.set_node_weight(i as u32, g.node_weight(v));
+        let bv = p.block_of(v);
+        band_weight[if bv == a { 0 } else { 1 }] += g.node_weight(v);
+        // edges
+        let adj = g.adjacent(v);
+        let ws = g.adjacent_weights(v);
+        let mut to_term = [0 as Weight; 2];
+        for j in 0..adj.len() {
+            let u = adj[j];
+            match local_of.get(&u) {
+                Some(&lu) => {
+                    if (i as u32) < lu {
+                        builder.add_edge(i as u32, lu, ws[j]);
+                    }
+                }
+                None => {
+                    let bu = p.block_of(u);
+                    if bu == a {
+                        to_term[0] += ws[j];
+                    } else if bu == b {
+                        to_term[1] += ws[j];
+                    }
+                    // edges to other blocks are constant cut: ignore
+                }
+            }
+        }
+        if to_term[0] > 0 {
+            builder.add_edge(i as u32, term_a, to_term[0]);
+        }
+        if to_term[1] > 0 {
+            builder.add_edge(i as u32, term_b, to_term[1]);
+        }
+    }
+    outside_weight[0] = p.block_weights[a as usize] - band_weight[0];
+    outside_weight[1] = p.block_weights[b as usize] - band_weight[1];
+    builder.set_node_weight(term_a, outside_weight[0].max(0));
+    builder.set_node_weight(term_b, outside_weight[1].max(0));
+    let band_graph = builder.build();
+
+    // --- local 2-way FM ---
+    let mut local_blocks = vec![0u32; nb + 2];
+    for (i, &v) in band.iter().enumerate() {
+        local_blocks[i] = if p.block_of(v) == a { 0 } else { 1 };
+    }
+    local_blocks[term_a as usize] = 0;
+    local_blocks[term_b as usize] = 1;
+    let mut local_p = Partition::from_blocks(&band_graph, 2, local_blocks);
+    // Local block weights equal the *global* a/b weights (terminals carry
+    // the outside), so the global L_max applies directly.
+    let bounds = [lmax, lmax];
+    let mut frozen = BitVec::new(nb + 2);
+    frozen.set(term_a as usize, true);
+    frozen.set(term_b as usize, true);
+    let res = kway_fm_frozen(&band_graph, &mut local_p, &bounds, config, Some(&frozen), rng);
+
+    // --- apply only if the local search improved ---
+    if res.final_cut < res.initial_cut {
+        for (i, &v) in band.iter().enumerate() {
+            let target = if local_p.block_of(i as u32) == 0 { a } else { b };
+            p.move_node(g, v, target);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+    use crate::graph::karate::karate_club;
+
+    #[test]
+    fn improves_bad_bisection() {
+        let g = karate_club();
+        let mut rng = Rng::new(1);
+        let blocks: Vec<u32> = (0..34u32).map(|v| v % 2).collect();
+        let mut p = Partition::from_blocks(&g, 2, blocks);
+        let (before, after) =
+            quotient_pair_refine(&g, &mut p, 20, &FmConfig::strong(), 2, &mut rng);
+        assert!(after < before, "{after} !< {before}");
+        assert!(p.validate(&g).is_ok());
+        assert!(p.max_block_weight() <= 20);
+    }
+
+    #[test]
+    fn never_worsens_and_respects_bound_kway() {
+        let mut rng = Rng::new(2);
+        let g = generators::instances::by_name("tiny-ba").unwrap().build();
+        let k = 4;
+        let blocks: Vec<u32> = (0..g.n() as u32).map(|v| v % k as u32).collect();
+        let mut p = Partition::from_blocks(&g, k, blocks);
+        let lmax = crate::coarsening::hierarchy::l_max(
+            g.total_node_weight(),
+            k,
+            0.05,
+            g.max_node_weight(),
+        );
+        let before = cut_value(g_ref(&g), &p.blocks);
+        let (_, after) =
+            quotient_pair_refine(&g, &mut p, lmax, &FmConfig::eco(), 1, &mut rng);
+        assert!(after <= before);
+        assert!(p.max_block_weight() <= lmax, "{:?}", p.block_weights);
+        assert_eq!(p.nonempty_blocks(), k);
+        assert!(p.validate(&g).is_ok());
+    }
+
+    fn g_ref(g: &Graph) -> &Graph {
+        g
+    }
+
+    #[test]
+    fn noop_on_optimal_pair() {
+        // two cliques split correctly: nothing to improve
+        let mut b = crate::graph::builder::GraphBuilder::new(8);
+        for base in [0u32, 4] {
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    b.add_edge(base + i, base + j, 1);
+                }
+            }
+        }
+        b.add_edge(3, 4, 1);
+        let g = b.build();
+        let mut p = Partition::from_blocks(&g, 2, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        let mut rng = Rng::new(3);
+        let (before, after) =
+            quotient_pair_refine(&g, &mut p, 5, &FmConfig::strong(), 2, &mut rng);
+        assert_eq!(before, 1);
+        assert_eq!(after, 1);
+        assert_eq!(p.blocks, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn terminal_bookkeeping_preserves_global_semantics() {
+        // Band-local cut improvement must equal the global improvement.
+        let mut rng = Rng::new(4);
+        let g = generators::watts_strogatz(300, 4, 0.15, &mut rng);
+        let blocks: Vec<u32> = (0..g.n() as u32).map(|_| rng.below(3) as u32).collect();
+        let mut p = Partition::from_blocks(&g, 3, blocks);
+        let before = cut_value(&g, &p.blocks);
+        let (b2, after) = quotient_pair_refine(&g, &mut p, 150, &FmConfig::eco(), 2, &mut rng);
+        assert_eq!(before, b2);
+        assert_eq!(after, cut_value(&g, &p.blocks));
+        assert!(after <= before);
+    }
+}

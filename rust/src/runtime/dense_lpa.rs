@@ -1,0 +1,149 @@
+//! Dense-LPA offload: run SCLaP scoring rounds through the AOT-compiled
+//! JAX/Pallas artifact and reconcile the synchronous proposals on the
+//! host (DESIGN.md §Hardware-Adaptation).
+//!
+//! Applicability: the *coarse* levels of the hierarchy. After one
+//! cluster contraction a web graph is orders of magnitude smaller
+//! (paper §5.2), so the N ≤ 1024 artifact shapes cover the levels where
+//! clustering quality matters most per node.
+
+use anyhow::Result;
+
+use crate::clustering::label_propagation::Clustering;
+use crate::clustering::parallel_lpa::{reconcile_proposals, Proposal};
+use crate::graph::csr::{Graph, Weight};
+use super::pjrt::Runtime;
+
+/// Outcome statistics of an offloaded clustering.
+#[derive(Debug, Clone)]
+pub struct OffloadStats {
+    pub rounds: usize,
+    pub proposals: usize,
+    pub applied: usize,
+    pub artifact_n: usize,
+}
+
+/// Pack a graph into the dense row-major f32 adjacency the artifact
+/// expects (zero-padded to `n_pad`).
+pub fn pack_dense(g: &Graph, n_pad: usize) -> Vec<f32> {
+    assert!(g.n() <= n_pad);
+    let mut adj = vec![0f32; n_pad * n_pad];
+    for v in g.nodes() {
+        let row = v as usize * n_pad;
+        let targets = g.adjacent(v);
+        let ws = g.adjacent_weights(v);
+        for i in 0..targets.len() {
+            adj[row + targets[i] as usize] = ws[i] as f32;
+        }
+    }
+    adj
+}
+
+/// Size-constrained clustering via offloaded synchronous rounds.
+///
+/// Semantics match `clustering::parallel_lpa::parallel_sclap`: each
+/// round scores *all* nodes against a snapshot (on the PJRT executable),
+/// then proposals are applied in descending-gain order against a live
+/// size table so the constraint `cluster weight ≤ upper` holds exactly.
+///
+/// Returns `Ok(None)` if no artifact is large enough for `g`.
+pub fn offload_sclap(
+    g: &Graph,
+    upper: Weight,
+    max_rounds: usize,
+    runtime: &mut Runtime,
+) -> Result<Option<(Clustering, OffloadStats)>> {
+    let n = g.n();
+    let Some(round) = runtime.round_for(n)? else {
+        return Ok(None);
+    };
+    let n_pad = round.n;
+    assert_eq!(round.c, n_pad, "cluster artifacts are square");
+
+    let adj = pack_dense(g, n_pad);
+    // Padding nodes: weight 0, singleton labels beyond the real range —
+    // they never produce positive gain (tested in python/tests).
+    let mut labels_i32: Vec<i32> = (0..n_pad as i32).collect();
+    let mut node_w: Vec<f32> = vec![0.0; n_pad];
+    for v in g.nodes() {
+        node_w[v as usize] = g.node_weight(v) as f32;
+    }
+    let mut sizes: Vec<f32> = vec![0.0; n_pad];
+    for v in g.nodes() {
+        sizes[labels_i32[v as usize] as usize] += g.node_weight(v) as f32;
+    }
+
+    let mut labels: Vec<u32> = (0..n as u32).collect();
+    let mut cluster_weight: Vec<Weight> = g.node_weights().to_vec();
+    cluster_weight.resize(n_pad, 0);
+
+    let mut stats = OffloadStats {
+        rounds: 0,
+        proposals: 0,
+        applied: 0,
+        artifact_n: n_pad,
+    };
+
+    for _ in 0..max_rounds {
+        stats.rounds += 1;
+        let out = round.execute(&adj, &labels_i32, &sizes, &node_w, upper as f32)?;
+        let mut proposals: Vec<Proposal> = Vec::new();
+        for v in 0..n {
+            // f32 gains are exact for integer edge weights < 2^24.
+            if out.gain[v] > 0.0 {
+                proposals.push(Proposal {
+                    node: v as u32,
+                    target: out.best[v] as u32,
+                    gain: out.gain[v] as i64,
+                });
+            }
+        }
+        stats.proposals += proposals.len();
+        let applied =
+            reconcile_proposals(g, &mut labels, &mut cluster_weight, upper, &mut proposals);
+        stats.applied += applied;
+        // Refresh device inputs from the reconciled state.
+        for v in 0..n {
+            labels_i32[v] = labels[v] as i32;
+        }
+        for s in sizes.iter_mut() {
+            *s = 0.0;
+        }
+        for v in 0..n {
+            sizes[labels[v] as usize] += node_w[v];
+        }
+        if (applied as f64) < 0.05 * n as f64 {
+            break;
+        }
+    }
+
+    let clustering = Clustering::from_labels(g, labels);
+    Ok(Some((clustering, stats)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    #[test]
+    fn pack_dense_symmetric() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 2);
+        b.add_edge(1, 2, 5);
+        let g = b.build();
+        let adj = pack_dense(&g, 4);
+        assert_eq!(adj.len(), 16);
+        assert_eq!(adj[0 * 4 + 1], 2.0);
+        assert_eq!(adj[1 * 4 + 0], 2.0);
+        assert_eq!(adj[1 * 4 + 2], 5.0);
+        assert_eq!(adj[2 * 4 + 1], 5.0);
+        // diagonal and padding are zero
+        assert_eq!(adj[0], 0.0);
+        assert_eq!(adj[3 * 4 + 3], 0.0);
+        assert_eq!(adj[0 * 4 + 3], 0.0);
+    }
+
+    // Execution tests live in rust/tests/runtime_offload.rs (they need
+    // the artifacts built by `make artifacts`).
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`) and executes the dense synchronous SCLaP
+//! round from the rust request path. Python never runs here.
+
+pub mod dense_lpa;
+pub mod pjrt;
+
+pub use dense_lpa::{offload_sclap, pack_dense, OffloadStats};
+pub use pjrt::{CompiledRound, RoundOutput, Runtime};

@@ -1,0 +1,165 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! on the CPU PJRT client (the `xla` crate). This is the only bridge
+//! between the rust request path and the JAX/Pallas build-time world —
+//! python never runs here.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact: one `lpa_round` executable at a fixed (N, C).
+pub struct CompiledRound {
+    pub name: String,
+    pub n: usize,
+    pub c: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Output of one offloaded LPA round.
+#[derive(Debug, Clone)]
+pub struct RoundOutput {
+    /// Strongest eligible cluster per node (length N, padded).
+    pub best: Vec<i32>,
+    /// Connection gain vs staying (length N, padded).
+    pub gain: Vec<f32>,
+}
+
+impl CompiledRound {
+    /// Execute one synchronous SCLaP round.
+    ///
+    /// * `adj` — row-major N×N f32 adjacency (zero padded)
+    /// * `labels` — i32[N] current cluster per node (in `[0, C)`)
+    /// * `sizes` — f32[C] cluster weights snapshot
+    /// * `node_w` — f32[N] node weights (0 for padding)
+    /// * `upper` — size bound U
+    pub fn execute(
+        &self,
+        adj: &[f32],
+        labels: &[i32],
+        sizes: &[f32],
+        node_w: &[f32],
+        upper: f32,
+    ) -> Result<RoundOutput> {
+        let (n, c) = (self.n, self.c);
+        anyhow::ensure!(adj.len() == n * n, "adj size {} != {n}x{n}", adj.len());
+        anyhow::ensure!(labels.len() == n && node_w.len() == n && sizes.len() == c);
+
+        let adj_lit = xla::Literal::vec1(adj).reshape(&[n as i64, n as i64])?;
+        let labels_lit = xla::Literal::vec1(labels);
+        let sizes_lit = xla::Literal::vec1(sizes);
+        let node_w_lit = xla::Literal::vec1(node_w);
+        let upper_lit = xla::Literal::scalar(upper);
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[adj_lit, labels_lit, sizes_lit, node_w_lit, upper_lit])?
+            [0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → (best, gain)
+        let (best_lit, gain_lit) = result.to_tuple2()?;
+        Ok(RoundOutput {
+            best: best_lit.to_vec::<i32>()?,
+            gain: gain_lit.to_vec::<f32>()?,
+        })
+    }
+}
+
+/// Artifact registry + PJRT client. Compiles HLO text lazily and caches
+/// one executable per artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    /// name → (n, c, path)
+    manifest: Vec<(String, usize, usize, PathBuf)>,
+    compiled: HashMap<String, std::rc::Rc<CompiledRound>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over an artifact directory produced by
+    /// `make artifacts` (must contain `manifest.txt`).
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest_path = artifact_dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let mut manifest = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let tok: Vec<&str> = line.split_whitespace().collect();
+            anyhow::ensure!(tok.len() == 4, "bad manifest line: {line}");
+            manifest.push((
+                tok[0].to_string(),
+                tok[1].parse::<usize>()?,
+                tok[2].parse::<usize>()?,
+                artifact_dir.join(tok[3]),
+            ));
+        }
+        anyhow::ensure!(!manifest.is_empty(), "empty artifact manifest");
+        manifest.sort_by_key(|(_, n, _, _)| *n);
+        Ok(Runtime {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Default artifact directory: `$SCLAP_ARTIFACTS` or `./artifacts`.
+    pub fn from_env() -> Result<Self> {
+        let dir = std::env::var("SCLAP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(Path::new(&dir))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Largest artifact N available.
+    pub fn max_n(&self) -> usize {
+        self.manifest.iter().map(|(_, n, _, _)| *n).max().unwrap_or(0)
+    }
+
+    /// Pick the smallest artifact with `N >= n_needed` and compile it
+    /// (cached). Returns None if no artifact is large enough.
+    pub fn round_for(&mut self, n_needed: usize) -> Result<Option<std::rc::Rc<CompiledRound>>> {
+        let Some((name, n, c, path)) = self
+            .manifest
+            .iter()
+            .find(|(_, n, _, _)| *n >= n_needed)
+            .cloned()
+        else {
+            return Ok(None);
+        };
+        if let Some(r) = self.compiled.get(&name) {
+            return Ok(Some(r.clone()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let round = std::rc::Rc::new(CompiledRound {
+            name: name.clone(),
+            n,
+            c,
+            exe,
+        });
+        self.compiled.insert(name, round.clone());
+        Ok(Some(round))
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.platform())
+            .field("artifacts", &self.manifest.len())
+            .field("compiled", &self.compiled.len())
+            .finish()
+    }
+}

@@ -1,0 +1,234 @@
+//! Bucket priority queue for FM-style refinement.
+//!
+//! Gains in Fiduccia–Mattheyses refinement are bounded integers
+//! (|gain| ≤ max weighted degree), so the classic implementation keeps a
+//! doubly linked list per gain value and a pointer to the maximum
+//! non-empty bucket. All operations are O(1) except max-bucket pointer
+//! decay, which amortizes over insertions.
+
+/// Max-priority bucket queue over elements `0..n` with integer priorities
+/// in `[-max_prio, +max_prio]`.
+#[derive(Debug)]
+pub struct BucketQueue {
+    /// head of the intrusive list per bucket (offset priority), usize::MAX = empty
+    buckets: Vec<usize>,
+    next: Vec<usize>,
+    prev: Vec<usize>,
+    /// priority of each element, or `i64::MIN` if absent
+    prio: Vec<i64>,
+    max_prio: i64,
+    max_bucket: usize,
+    len: usize,
+}
+
+const NIL: usize = usize::MAX;
+
+impl BucketQueue {
+    /// `n` elements, priorities clamped to `[-max_prio, max_prio]`.
+    pub fn new(n: usize, max_prio: i64) -> Self {
+        let nb = (2 * max_prio + 1) as usize;
+        BucketQueue {
+            buckets: vec![NIL; nb],
+            next: vec![NIL; n],
+            prev: vec![NIL; n],
+            prio: vec![i64::MIN; n],
+            max_prio,
+            max_bucket: 0,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(&self, p: i64) -> usize {
+        (p.clamp(-self.max_prio, self.max_prio) + self.max_prio) as usize
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn contains(&self, x: usize) -> bool {
+        self.prio[x] != i64::MIN
+    }
+
+    /// Current priority, if present.
+    pub fn priority(&self, x: usize) -> Option<i64> {
+        if self.contains(x) {
+            Some(self.prio[x])
+        } else {
+            None
+        }
+    }
+
+    /// Insert `x` with priority `p`; panics in debug if already present.
+    pub fn push(&mut self, x: usize, p: i64) {
+        debug_assert!(!self.contains(x));
+        self.prio[x] = p.clamp(-self.max_prio, self.max_prio);
+        let b = self.bucket_of(p);
+        self.next[x] = self.buckets[b];
+        self.prev[x] = NIL;
+        if self.buckets[b] != NIL {
+            self.prev[self.buckets[b]] = x;
+        }
+        self.buckets[b] = x;
+        if b > self.max_bucket || self.len == 0 {
+            self.max_bucket = b;
+        }
+        self.len += 1;
+    }
+
+    /// Remove `x` (no-op if absent).
+    pub fn remove(&mut self, x: usize) {
+        if !self.contains(x) {
+            return;
+        }
+        let b = self.bucket_of(self.prio[x]);
+        if self.prev[x] != NIL {
+            self.next[self.prev[x]] = self.next[x];
+        } else {
+            self.buckets[b] = self.next[x];
+        }
+        if self.next[x] != NIL {
+            self.prev[self.next[x]] = self.prev[x];
+        }
+        self.prio[x] = i64::MIN;
+        self.len -= 1;
+    }
+
+    /// Change priority of a present element (or insert if absent).
+    pub fn update(&mut self, x: usize, p: i64) {
+        self.remove(x);
+        self.push(x, p);
+    }
+
+    /// Pop the element with maximum priority.
+    pub fn pop_max(&mut self) -> Option<(usize, i64)> {
+        if self.len == 0 {
+            return None;
+        }
+        while self.buckets[self.max_bucket] == NIL {
+            debug_assert!(self.max_bucket > 0);
+            self.max_bucket -= 1;
+        }
+        let x = self.buckets[self.max_bucket];
+        let p = self.prio[x];
+        self.remove(x);
+        Some((x, p))
+    }
+
+    /// Peek the maximum priority without removing.
+    pub fn peek_max(&mut self) -> Option<(usize, i64)> {
+        if self.len == 0 {
+            return None;
+        }
+        while self.buckets[self.max_bucket] == NIL {
+            self.max_bucket -= 1;
+        }
+        let x = self.buckets[self.max_bucket];
+        Some((x, self.prio[x]))
+    }
+
+    pub fn clear(&mut self) {
+        if self.len == 0 {
+            return;
+        }
+        self.buckets.fill(NIL);
+        self.prio.fill(i64::MIN);
+        self.max_bucket = 0;
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_order() {
+        let mut q = BucketQueue::new(10, 100);
+        q.push(0, 5);
+        q.push(1, -3);
+        q.push(2, 7);
+        q.push(3, 7);
+        assert_eq!(q.len(), 4);
+        let (x, p) = q.pop_max().unwrap();
+        assert_eq!(p, 7);
+        assert!(x == 2 || x == 3);
+        let (_, p) = q.pop_max().unwrap();
+        assert_eq!(p, 7);
+        assert_eq!(q.pop_max().unwrap(), (0, 5));
+        assert_eq!(q.pop_max().unwrap(), (1, -3));
+        assert!(q.pop_max().is_none());
+    }
+
+    #[test]
+    fn update_moves_element() {
+        let mut q = BucketQueue::new(4, 10);
+        q.push(0, 1);
+        q.push(1, 2);
+        q.update(0, 9);
+        assert_eq!(q.pop_max().unwrap(), (0, 9));
+        assert_eq!(q.pop_max().unwrap(), (1, 2));
+    }
+
+    #[test]
+    fn remove_absent_is_noop() {
+        let mut q = BucketQueue::new(4, 10);
+        q.push(2, 3);
+        q.remove(1);
+        assert_eq!(q.len(), 1);
+        q.remove(2);
+        q.remove(2);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn clamping_out_of_range_prio() {
+        let mut q = BucketQueue::new(3, 5);
+        q.push(0, 1000);
+        q.push(1, -1000);
+        assert_eq!(q.pop_max().unwrap(), (0, 5));
+        assert_eq!(q.pop_max().unwrap(), (1, -5));
+    }
+
+    #[test]
+    fn interleaved_stress_matches_reference() {
+        use crate::util::rng::Rng;
+        let n = 64;
+        let mut q = BucketQueue::new(n, 50);
+        let mut reference: Vec<Option<i64>> = vec![None; n];
+        let mut rng = Rng::new(99);
+        for _ in 0..5000 {
+            let x = rng.below(n);
+            match rng.below(3) {
+                0 => {
+                    if reference[x].is_none() {
+                        let p = rng.range(0, 100) as i64 - 50;
+                        q.push(x, p);
+                        reference[x] = Some(p);
+                    }
+                }
+                1 => {
+                    q.remove(x);
+                    reference[x] = None;
+                }
+                _ => {
+                    if let Some((y, p)) = q.pop_max() {
+                        let best = reference.iter().filter_map(|o| *o).max().unwrap();
+                        assert_eq!(p, best);
+                        assert_eq!(reference[y], Some(p));
+                        reference[y] = None;
+                    }
+                }
+            }
+            assert_eq!(q.len(), reference.iter().filter(|o| o.is_some()).count());
+        }
+    }
+}

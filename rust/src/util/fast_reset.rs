@@ -1,0 +1,267 @@
+//! Timestamped "fast-reset" containers.
+//!
+//! The inner loop of size-constrained label propagation accumulates, for
+//! the node under consideration, the total edge weight towards each
+//! neighboring cluster, then clears the accumulator before the next node.
+//! Clearing a `HashMap` or zeroing a dense array per node would cost
+//! O(n) or allocator traffic; the classic algorithm-engineering trick is
+//! a dense array with a per-slot timestamp — "clearing" is a single
+//! counter increment.
+
+/// Dense map from `usize` keys in `[0, capacity)` to values, with O(1)
+/// bulk clear. Used for per-node cluster-weight accumulation in SCLaP
+/// and gain tables in FM refinement.
+#[derive(Debug)]
+pub struct FastResetArray<T: Copy + Default> {
+    values: Vec<T>,
+    stamp: Vec<u32>,
+    current: u32,
+    /// Keys touched since the last clear (for sparse iteration).
+    touched: Vec<usize>,
+}
+
+impl<T: Copy + Default> FastResetArray<T> {
+    pub fn new(capacity: usize) -> Self {
+        FastResetArray {
+            values: vec![T::default(); capacity],
+            stamp: vec![0; capacity],
+            current: 1,
+            touched: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Grow to at least `capacity` slots (preserves the current epoch).
+    pub fn ensure_capacity(&mut self, capacity: usize) {
+        if capacity > self.values.len() {
+            self.values.resize(capacity, T::default());
+            self.stamp.resize(capacity, 0);
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, key: usize) -> bool {
+        self.stamp[key] == self.current
+    }
+
+    #[inline]
+    pub fn get(&self, key: usize) -> T {
+        if self.contains(key) {
+            self.values[key]
+        } else {
+            T::default()
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, key: usize, value: T) {
+        if !self.contains(key) {
+            self.stamp[key] = self.current;
+            self.touched.push(key);
+        }
+        self.values[key] = value;
+    }
+
+    /// Keys written since the last `clear`, in first-touch order.
+    #[inline]
+    pub fn touched(&self) -> &[usize] {
+        &self.touched
+    }
+
+    /// O(1) amortized clear (epoch bump; full rewrite on wraparound).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.touched.clear();
+        self.current = self.current.wrapping_add(1);
+        if self.current == 0 {
+            // Epoch wrapped: lazily-stale stamps could now collide.
+            self.stamp.fill(0);
+            self.current = 1;
+        }
+    }
+}
+
+impl FastResetArray<f64> {
+    /// Accumulate `delta` into `key` (the SCLaP scoring primitive).
+    #[inline]
+    pub fn add(&mut self, key: usize, delta: f64) {
+        let v = self.get(key);
+        self.set(key, v + delta);
+    }
+}
+
+impl FastResetArray<i64> {
+    #[inline]
+    pub fn add_i64(&mut self, key: usize, delta: i64) {
+        let v = self.get(key);
+        self.set(key, v + delta);
+    }
+
+    /// Hot-path accumulate with a single stamp check (vs `add_i64`'s
+    /// two): the SCLaP inner loop runs this once per graph arc, so the
+    /// saved load+branch is measurable (§Perf iteration 1).
+    #[inline(always)]
+    pub fn accumulate(&mut self, key: usize, delta: i64) {
+        if self.stamp[key] == self.current {
+            self.values[key] += delta;
+        } else {
+            self.stamp[key] = self.current;
+            self.values[key] = delta;
+            self.touched.push(key);
+        }
+    }
+
+    /// Read a key that is known to be touched in the current epoch
+    /// (skips the stamp check). Debug-asserted.
+    #[inline(always)]
+    pub fn value_of_touched(&self, key: usize) -> i64 {
+        debug_assert!(self.contains(key));
+        self.values[key]
+    }
+
+    /// `accumulate` without bounds checks.
+    ///
+    /// # Safety
+    /// `key < self.capacity()` must hold. The SCLaP inner loop calls this
+    /// once per graph arc with `key = label[u] < n ≤ capacity`, which the
+    /// engine guarantees by construction (§Perf iteration 3).
+    #[inline(always)]
+    pub unsafe fn accumulate_unchecked(&mut self, key: usize, delta: i64) {
+        debug_assert!(key < self.values.len());
+        if *self.stamp.get_unchecked(key) == self.current {
+            *self.values.get_unchecked_mut(key) += delta;
+        } else {
+            *self.stamp.get_unchecked_mut(key) = self.current;
+            *self.values.get_unchecked_mut(key) = delta;
+            self.touched.push(key);
+        }
+    }
+}
+
+/// Bit vector with the operations needed by the active-nodes rounds
+/// (§B.2 of the paper: two FIFO queues + two bit vectors).
+#[derive(Debug, Clone)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn new(len: usize) -> Self {
+        BitVec {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i >> 6];
+        let mask = 1u64 << (i & 63);
+        if v {
+            *w |= mask;
+        } else {
+            *w &= !mask;
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_reset_roundtrip() {
+        let mut a: FastResetArray<f64> = FastResetArray::new(10);
+        a.set(3, 1.5);
+        a.add(3, 2.0);
+        a.add(7, 1.0);
+        assert_eq!(a.get(3), 3.5);
+        assert_eq!(a.get(7), 1.0);
+        assert_eq!(a.get(0), 0.0);
+        assert_eq!(a.touched(), &[3, 7]);
+        a.clear();
+        assert_eq!(a.get(3), 0.0);
+        assert!(a.touched().is_empty());
+        assert!(!a.contains(3));
+    }
+
+    #[test]
+    fn fast_reset_many_epochs() {
+        let mut a: FastResetArray<i64> = FastResetArray::new(4);
+        for epoch in 0..1000i64 {
+            a.add_i64(2, epoch);
+            assert_eq!(a.get(2), epoch);
+            a.clear();
+        }
+    }
+
+    #[test]
+    fn fast_reset_epoch_wraparound() {
+        let mut a: FastResetArray<i64> = FastResetArray::new(2);
+        a.current = u32::MAX - 1;
+        a.set(0, 42);
+        a.clear(); // -> u32::MAX
+        a.set(1, 7);
+        a.clear(); // wraps to 0 -> full reset path
+        assert!(!a.contains(0));
+        assert!(!a.contains(1));
+        a.set(0, 9);
+        assert_eq!(a.get(0), 9);
+    }
+
+    #[test]
+    fn fast_reset_grow() {
+        let mut a: FastResetArray<f64> = FastResetArray::new(2);
+        a.set(1, 5.0);
+        a.ensure_capacity(10);
+        assert_eq!(a.get(1), 5.0);
+        a.set(9, 2.0);
+        assert_eq!(a.get(9), 2.0);
+    }
+
+    #[test]
+    fn bitvec_basics() {
+        let mut b = BitVec::new(130);
+        assert_eq!(b.count_ones(), 0);
+        b.set(0, true);
+        b.set(64, true);
+        b.set(129, true);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1));
+        assert_eq!(b.count_ones(), 3);
+        b.set(64, false);
+        assert_eq!(b.count_ones(), 2);
+        b.clear();
+        assert_eq!(b.count_ones(), 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Shared algorithm-engineering substrate: deterministic RNG, fast-reset
+//! accumulators, bucket queues, disjoint sets, timers and a minimal
+//! property-testing harness. All std-only (see DESIGN.md §3).
+
+pub mod bucket_queue;
+pub mod fast_reset;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+pub mod union_find;
+
+pub use bucket_queue::BucketQueue;
+pub use fast_reset::{BitVec, FastResetArray};
+pub use rng::Rng;
+pub use timer::{Stats, Timer};
+pub use union_find::UnionFind;

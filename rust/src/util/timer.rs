@@ -1,0 +1,150 @@
+//! Lightweight timing + aggregate statistics for the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Stopwatch with lap support.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Timer::start()
+    }
+}
+
+/// Online mean/min/max/geomean accumulator used by the paper-table
+/// harness (§5: arithmetic average per instance, geometric mean across
+/// instances).
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    n: usize,
+    sum: f64,
+    log_sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats {
+            n: 0,
+            sum: 0.0,
+            log_sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        // Geometric mean over values that may legitimately be 0 (a cut of
+        // zero on a disconnected toy instance): clamp like the DIMACS
+        // challenge scripts do (add 1 inside the log? No — use max with
+        // tiny epsilon so a single zero doesn't zero the whole geomean).
+        self.log_sum += x.max(1e-12).ln();
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn geomean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.log_sum / self.n as f64).exp()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_mean_min_max() {
+        let mut s = Stats::new();
+        for x in [2.0, 4.0, 8.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 3);
+        assert!((s.mean() - 14.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 8.0);
+    }
+
+    #[test]
+    fn stats_geomean() {
+        let mut s = Stats::new();
+        for x in [2.0, 4.0, 8.0] {
+            s.add(x);
+        }
+        assert!((s.geomean() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_empty() {
+        let s = Stats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.geomean(), 0.0);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        let a = t.elapsed();
+        let b = t.elapsed();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,122 @@
+//! Disjoint-set forest (union by rank + path halving).
+//!
+//! Used by the ensemble overlay clustering (connected components of the
+//! graph minus the union of cut edges, §4 of the paper) and by graph
+//! connectivity statistics.
+
+#[derive(Debug, Clone)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+    components: usize,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        assert!(n <= u32::MAX as usize);
+        UnionFind {
+            parent: (0..n as u32).collect(),
+            rank: vec![0; n],
+            components: n,
+        }
+    }
+
+    #[inline]
+    pub fn find(&mut self, mut x: usize) -> usize {
+        // Path halving.
+        while self.parent[x] as usize != x {
+            let gp = self.parent[self.parent[x] as usize];
+            self.parent[x] = gp;
+            x = gp as usize;
+        }
+        x
+    }
+
+    /// Union the sets of `a` and `b`; returns true if they were separate.
+    pub fn union(&mut self, a: usize, b: usize) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (hi, lo) = if self.rank[ra] >= self.rank[rb] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[lo] = hi as u32;
+        if self.rank[hi] == self.rank[lo] {
+            self.rank[hi] += 1;
+        }
+        self.components -= 1;
+        true
+    }
+
+    #[inline]
+    pub fn same(&mut self, a: usize, b: usize) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    pub fn component_count(&self) -> usize {
+        self.components
+    }
+
+    /// Relabel roots to dense ids `0..components`; returns per-element ids.
+    pub fn dense_labels(&mut self) -> Vec<u32> {
+        let n = self.parent.len();
+        let mut label = vec![u32::MAX; n];
+        let mut next = 0u32;
+        let mut out = vec![0u32; n];
+        for i in 0..n {
+            let r = self.find(i);
+            if label[r] == u32::MAX {
+                label[r] = next;
+                next += 1;
+            }
+            out[i] = label[r];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_find_basic() {
+        let mut uf = UnionFind::new(6);
+        assert_eq!(uf.component_count(), 6);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(2, 3));
+        assert!(!uf.union(1, 0));
+        assert!(uf.union(0, 2));
+        assert_eq!(uf.component_count(), 3);
+        assert!(uf.same(1, 3));
+        assert!(!uf.same(1, 4));
+    }
+
+    #[test]
+    fn dense_labels_are_consistent() {
+        let mut uf = UnionFind::new(5);
+        uf.union(0, 4);
+        uf.union(1, 2);
+        let labels = uf.dense_labels();
+        assert_eq!(labels[0], labels[4]);
+        assert_eq!(labels[1], labels[2]);
+        assert_ne!(labels[0], labels[1]);
+        assert_ne!(labels[3], labels[0]);
+        let max = *labels.iter().max().unwrap();
+        assert_eq!(max as usize + 1, uf.component_count());
+    }
+
+    #[test]
+    fn chain_union_single_component() {
+        let n = 1000;
+        let mut uf = UnionFind::new(n);
+        for i in 1..n {
+            uf.union(i - 1, i);
+        }
+        assert_eq!(uf.component_count(), 1);
+        assert!(uf.same(0, n - 1));
+    }
+}

@@ -1,0 +1,93 @@
+//! Integration: qualitative Table-2 orderings on a small web-like
+//! instance. These assert the *shape* of the paper's findings (who wins),
+//! not absolute numbers — the quantitative reproduction lives in
+//! `cargo bench --bench table2`.
+
+use sclap::coordinator::service::{default_seeds, Coordinator};
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use std::sync::Arc;
+
+fn agg(
+    coord: &Coordinator,
+    g: &Arc<sclap::graph::csr::Graph>,
+    preset: Preset,
+    k: usize,
+    reps: usize,
+) -> (f64, f64) {
+    let a = coord.partition_repeated(
+        g.clone(),
+        &PartitionConfig::preset(preset, k),
+        &default_seeds(reps),
+    );
+    (a.avg_cut, a.avg_seconds)
+}
+
+/// Paper §5.1: cluster coarsening (CEco) beats matching coarsening
+/// (KaFFPaEco-like) on complex networks in quality.
+#[test]
+fn cluster_beats_matching_on_web_like() {
+    let g = Arc::new(sclap::generators::instances::by_name("tiny-rmat").unwrap().build());
+    let coord = Coordinator::new(0);
+    let (ceco, _) = agg(&coord, &g, Preset::CEco, 4, 5);
+    let (kaffpa, _) = agg(&coord, &g, Preset::KaffpaEco, 4, 5);
+    assert!(
+        ceco < kaffpa * 1.05,
+        "CEco {ceco:.0} should not lose clearly to KaFFPaEco {kaffpa:.0}"
+    );
+}
+
+/// Paper §5.1: UStrong cuts less than kMetis-like by a clear margin on
+/// complex networks.
+#[test]
+fn ustrong_beats_kmetis_like() {
+    let g = Arc::new(sclap::generators::instances::by_name("tiny-ba").unwrap().build());
+    let coord = Coordinator::new(0);
+    let (strong, _) = agg(&coord, &g, Preset::UStrong, 4, 3);
+    let (kmetis, _) = agg(&coord, &g, Preset::KMetisLike, 4, 3);
+    assert!(
+        strong < kmetis,
+        "UStrong {strong:.0} must beat kMetis-like {kmetis:.0}"
+    );
+}
+
+/// Paper §5.1: the Fast family is faster than the Strong family.
+#[test]
+fn fast_is_faster_than_strong() {
+    let g = Arc::new(sclap::generators::instances::by_name("tiny-rmat").unwrap().build());
+    let coord = Coordinator::new(1);
+    let (_, fast_t) = agg(&coord, &g, Preset::UFast, 4, 3);
+    let (_, strong_t) = agg(&coord, &g, Preset::UStrong, 4, 3);
+    assert!(
+        fast_t < strong_t,
+        "UFast {fast_t:.3}s should be faster than UStrong {strong_t:.3}s"
+    );
+}
+
+/// Paper §5.1: Scotch-like produces the worst quality of the pack.
+#[test]
+fn scotch_like_is_worst() {
+    let g = Arc::new(sclap::generators::instances::by_name("tiny-ba").unwrap().build());
+    let coord = Coordinator::new(0);
+    let (scotch, _) = agg(&coord, &g, Preset::ScotchLike, 4, 3);
+    let (ueco, _) = agg(&coord, &g, Preset::UEcoVB, 4, 3);
+    assert!(
+        ueco <= scotch,
+        "UEcoV/B {ueco:.0} must not lose to Scotch-like {scotch:.0}"
+    );
+}
+
+/// Best-of-10 ≤ average (trivial but guards the aggregation plumbing
+/// the table benches rely on).
+#[test]
+fn best_cut_bounded_by_avg() {
+    let g = Arc::new(sclap::generators::instances::by_name("tiny-ws").unwrap().build());
+    let coord = Coordinator::new(0);
+    for preset in [Preset::CFast, Preset::CEco, Preset::KMetisLike] {
+        let a = coord.partition_repeated(
+            g.clone(),
+            &PartitionConfig::preset(preset, 8),
+            &default_seeds(10),
+        );
+        assert!(a.best_cut as f64 <= a.avg_cut + 1e-9, "{}", preset.name());
+    }
+}

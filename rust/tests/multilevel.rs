@@ -1,0 +1,120 @@
+//! Integration: the full multilevel pipeline (Fig. 1 contract) across
+//! configurations and instance families.
+
+use sclap::coarsening::hierarchy::l_max;
+use sclap::generators::instances::tiny_suite;
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::partitioning::metrics::cut_value;
+use sclap::partitioning::multilevel::MultilevelPartitioner;
+
+/// Every preset must produce a valid, feasible partition on every tiny
+/// instance (except Scotch-like, which is allowed to be imbalanced —
+/// exactly like the real Scotch in the paper's §5.1).
+#[test]
+fn every_preset_on_every_tiny_instance() {
+    for spec in tiny_suite() {
+        let g = spec.build();
+        for preset in Preset::ALL {
+            // Strong presets are slow; skip them on the largest tiny instances.
+            let heavy = matches!(
+                preset,
+                Preset::CStrong | Preset::UStrong | Preset::KaffpaStrong | Preset::HMetisLike
+            );
+            if heavy && g.n() > 2000 {
+                continue;
+            }
+            let k = 4.min(g.n());
+            let config = PartitionConfig::preset(preset, k);
+            let r = MultilevelPartitioner::new(config).partition(&g, 123);
+            assert!(
+                r.partition.validate(&g).is_ok(),
+                "{} on {}",
+                preset.name(),
+                spec.name
+            );
+            assert_eq!(r.partition.nonempty_blocks(), k, "{} on {}", preset.name(), spec.name);
+            assert_eq!(r.metrics.cut, cut_value(&g, &r.partition.blocks));
+            let lmax = l_max(g.total_node_weight(), k, 0.03, g.max_node_weight());
+            if preset != Preset::ScotchLike {
+                assert!(
+                    r.partition.max_block_weight() <= lmax,
+                    "{} on {}: {:?} > {lmax}",
+                    preset.name(),
+                    spec.name,
+                    r.partition.block_weights
+                );
+            }
+        }
+    }
+}
+
+/// The Fig. 1 multilevel contract: a coarse partition projects to the
+/// finest level with the same cut, and refinement only improves it. We
+/// verify through the driver's reported phases.
+#[test]
+fn multilevel_improves_on_initial() {
+    // tiny-ba (n=2000) with k=4: above the coarsest-size threshold
+    // (max(240, n/240) = 240) AND with a non-degenerate cluster bound
+    // W = L_max/(f·k) ≈ 7, so the hierarchy is non-trivial.
+    let g = sclap::generators::instances::by_name("tiny-ba").unwrap().build();
+    let config = PartitionConfig::preset(Preset::CEco, 4);
+    let r = MultilevelPartitioner::new(config).partition(&g, 7);
+    // refinement must not be worse than the projected initial partition
+    assert!(
+        r.metrics.cut <= r.initial_cut,
+        "final {} > initial {}",
+        r.metrics.cut,
+        r.initial_cut
+    );
+    assert!(r.levels >= 1);
+    assert!(r.coarsest_n < g.n());
+}
+
+/// k sweep of the paper (§5): all six values produce valid partitions.
+#[test]
+fn paper_k_sweep() {
+    let g = sclap::generators::instances::by_name("tiny-ba").unwrap().build();
+    for k in [2usize, 4, 8, 16, 32, 64] {
+        let config = PartitionConfig::preset(Preset::UFast, k);
+        let r = MultilevelPartitioner::new(config).partition(&g, k as u64);
+        assert_eq!(r.partition.nonempty_blocks(), k, "k={k}");
+        let lmax = l_max(g.total_node_weight(), k, 0.03, g.max_node_weight());
+        assert!(r.partition.max_block_weight() <= lmax, "k={k}");
+    }
+}
+
+/// Cluster coarsening must beat matching coarsening on hierarchy depth
+/// for complex networks (the paper's §3 claim: aggressive shrinkage).
+#[test]
+fn cluster_coarsening_is_more_aggressive() {
+    // Needs enough nodes that the cluster bound W = L_max/(f·k) is well
+    // above 2, else SCLaP degenerates to pair-merging (the paper's
+    // instances are 10^4..10^9 nodes; scale-13 R-MAT suffices here).
+    let mut rng = sclap::util::rng::Rng::new(77);
+    let g = sclap::graph::subgraph::largest_component(&sclap::generators::rmat(
+        13, 40_000, 0.57, 0.19, 0.19, &mut rng,
+    ));
+    let cluster = MultilevelPartitioner::new(PartitionConfig::preset(Preset::CFast, 4))
+        .partition(&g, 5);
+    let matching = MultilevelPartitioner::new(PartitionConfig::preset(Preset::KaffpaEco, 4))
+        .partition(&g, 5);
+    assert!(
+        cluster.first_shrink > matching.first_shrink,
+        "cluster {} vs matching {}",
+        cluster.first_shrink,
+        matching.first_shrink
+    );
+}
+
+/// Regular meshes: both schemes must still work (the paper's method is
+/// *also* correct on meshes, merely not uniquely better).
+#[test]
+fn mesh_contrast_instance() {
+    let g = sclap::generators::instances::by_name("tiny-grid").unwrap().build();
+    for preset in [Preset::CFast, Preset::KaffpaEco] {
+        let r = MultilevelPartitioner::new(PartitionConfig::preset(preset, 4)).partition(&g, 9);
+        assert!(r.partition.validate(&g).is_ok());
+        // a 40x40 grid 4-partition should cut well under 200 of 3120 edges
+        assert!(r.metrics.cut < 400, "{}: {}", preset.name(), r.metrics.cut);
+    }
+}

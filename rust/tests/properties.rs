@@ -1,0 +1,193 @@
+//! Property tests (proptest-lite, DESIGN.md §7) over random graphs,
+//! seeds and parameters. Each property runs dozens of seeded cases; a
+//! failure reports seed + size for exact reproduction.
+
+use sclap::clustering::ensemble::{ensemble_sclap, overlay_clustering};
+use sclap::clustering::label_propagation::{
+    size_constrained_lpa, LpaConfig, LpaMode, NodeOrdering,
+};
+use sclap::coarsening::contract::{contract, project_partition};
+use sclap::generators;
+use sclap::graph::csr::{Graph, Weight};
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::partitioning::metrics::cut_value;
+use sclap::partitioning::multilevel::MultilevelPartitioner;
+use sclap::util::proptest::{for_random_cases, PropConfig};
+use sclap::util::rng::Rng;
+
+/// Random graph mixing the generator families, sized by the hint.
+fn arb_graph(rng: &mut Rng, size: usize) -> Graph {
+    let n = (size * 8).max(8);
+    match rng.below(4) {
+        0 => generators::erdos_renyi(n, 3 * n, rng),
+        1 => generators::barabasi_albert(n, 3, rng),
+        2 => generators::watts_strogatz(n.max(12), 3, 0.2, rng),
+        _ => {
+            let scale = (n as f64).log2().ceil() as u32;
+            generators::rmat(scale, 4 * n, 0.57, 0.19, 0.19, rng)
+        }
+    }
+}
+
+/// Invariant 1: SCLaP never violates the size constraint.
+#[test]
+fn prop_sclap_respects_bound() {
+    for_random_cases(&PropConfig::default(), |rng, size| {
+        let g = arb_graph(rng, size);
+        let upper = (rng.range(1, 20)) as Weight;
+        let upper = upper.max(g.max_node_weight());
+        let ordering = *rng.choose(&[
+            NodeOrdering::Random,
+            NodeOrdering::Degree,
+            NodeOrdering::WeightedDegree,
+        ]);
+        let mut cfg = LpaConfig::clustering(rng.range(1, 6), ordering);
+        cfg.active_nodes = rng.chance(0.5);
+        let (c, _) = size_constrained_lpa(&g, upper, &cfg, None, None, rng);
+        assert!(
+            c.respects_bound(upper),
+            "bound {upper} violated: {:?}",
+            c.cluster_weights.iter().max()
+        );
+        // labels dense and complete
+        assert_eq!(c.labels.len(), g.n());
+        assert!(c.labels.iter().all(|&l| (l as usize) < c.num_clusters));
+    });
+}
+
+/// Invariant 2: contraction preserves totals and lifts partitions with
+/// identical cut + balance.
+#[test]
+fn prop_contraction_preserves_cut() {
+    for_random_cases(&PropConfig::default(), |rng, size| {
+        let g = arb_graph(rng, size);
+        let upper = g.max_node_weight().max(rng.range(2, 12) as Weight);
+        let (c, _) =
+            size_constrained_lpa(&g, upper, &LpaConfig::default(), None, None, rng);
+        let cont = contract(&g, &c);
+        assert_eq!(cont.coarse.total_node_weight(), g.total_node_weight());
+        assert_eq!(cont.coarse.total_edge_weight(), c.cut(&g));
+        assert!(cont.coarse.validate().is_ok());
+
+        // random coarse partition lifts with identical cut
+        let k = rng.range(2, 5);
+        let coarse_blocks: Vec<u32> =
+            (0..cont.coarse.n()).map(|_| rng.below(k) as u32).collect();
+        let fine_blocks = project_partition(&cont.map, &coarse_blocks);
+        assert_eq!(
+            cut_value(&cont.coarse, &coarse_blocks),
+            cut_value(&g, &fine_blocks)
+        );
+    });
+}
+
+/// Invariant 3: the overlay refines every input clustering and stays
+/// feasible if the inputs are.
+#[test]
+fn prop_overlay_refines_inputs() {
+    for_random_cases(&PropConfig::quick(), |rng, size| {
+        let g = arb_graph(rng, size.min(32));
+        let upper = g.max_node_weight().max(8);
+        let inputs: Vec<Vec<u32>> = (0..3)
+            .map(|_| {
+                size_constrained_lpa(
+                    &g,
+                    upper,
+                    &LpaConfig::clustering(4, NodeOrdering::Random),
+                    None,
+                    None,
+                    rng,
+                )
+                .0
+                .labels
+            })
+            .collect();
+        let o = overlay_clustering(&g, &inputs);
+        assert!(o.respects_bound(upper));
+        for v in 0..g.n() {
+            for u in (v + 1)..g.n().min(v + 50) {
+                if o.labels[v] == o.labels[u] {
+                    for input in &inputs {
+                        assert_eq!(input[v], input[u], "overlay merged separated nodes");
+                    }
+                }
+            }
+        }
+        // ensemble wrapper too
+        let e = ensemble_sclap(&g, upper, &LpaConfig::default(), 3, None, rng);
+        assert!(e.respects_bound(upper));
+    });
+}
+
+/// Invariant 5: refinement mode never overflows the bound (if feasible
+/// on entry) and never empties a block.
+#[test]
+fn prop_refinement_safety() {
+    for_random_cases(&PropConfig::default(), |rng, size| {
+        let g = arb_graph(rng, size);
+        let k = rng.range(2, 5).min(g.n());
+        let blocks: Vec<u32> = (0..g.n()).map(|v| (v % k) as u32).collect();
+        let per_block = (g.total_node_weight() as f64 / k as f64).ceil() as Weight;
+        let upper = per_block + g.max_node_weight() + rng.range(0, 5) as Weight;
+        let mut cfg = LpaConfig::refinement(rng.range(1, 8));
+        cfg.mode = LpaMode::Refinement;
+        let before_blocks = blocks.clone();
+        let (c, _) = size_constrained_lpa(&g, upper, &cfg, Some(blocks), None, rng);
+        assert_eq!(c.num_clusters, k, "block vanished (had {k})");
+        assert!(
+            c.respects_bound(upper),
+            "refinement overflowed: {:?} > {upper}",
+            c.cluster_weights
+        );
+        // sanity: it never *increases* the cut
+        let before_cut = cut_value(&g, &before_blocks);
+        assert!(c.cut(&g) <= before_cut);
+    });
+}
+
+/// Invariant 8: the full driver always emits valid feasible partitions.
+#[test]
+fn prop_multilevel_valid_output() {
+    let presets = [
+        Preset::CFast,
+        Preset::UFast,
+        Preset::CEco,
+        Preset::KMetisLike,
+        Preset::CFastVB,
+    ];
+    for_random_cases(&PropConfig::quick(), |rng, size| {
+        let g = arb_graph(rng, size);
+        let k = *rng.choose(&[2usize, 3, 4, 8]);
+        let k = k.min(g.n().max(1));
+        let preset = *rng.choose(&presets);
+        let config = PartitionConfig::preset(preset, k);
+        let r = MultilevelPartitioner::new(config).partition(&g, rng.next_u64());
+        assert!(r.partition.validate(&g).is_ok(), "{}", preset.name());
+        assert_eq!(r.partition.nonempty_blocks(), k);
+        let lmax = sclap::coarsening::hierarchy::l_max(
+            g.total_node_weight(),
+            k,
+            0.03,
+            g.max_node_weight(),
+        );
+        assert!(
+            r.partition.max_block_weight() <= lmax,
+            "{} k={k}: {:?} > {lmax}",
+            preset.name(),
+            r.partition.block_weights
+        );
+    });
+}
+
+/// Matching is a matching for every graph family and bound.
+#[test]
+fn prop_matching_invariant() {
+    for_random_cases(&PropConfig::default(), |rng, size| {
+        let g = arb_graph(rng, size);
+        let bound = g.max_node_weight().max(rng.range(2, 10) as Weight);
+        let two_hop = rng.chance(0.5);
+        let c = sclap::coarsening::matching::heavy_edge_matching(&g, bound, two_hop, rng);
+        assert!(sclap::coarsening::matching::is_matching(&c));
+        assert!(c.respects_bound(bound));
+    });
+}

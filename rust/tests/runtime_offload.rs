@@ -1,0 +1,127 @@
+//! Integration: the PJRT runtime + dense-LPA offload (requires the AOT
+//! artifacts — `make artifacts` — which `make test` guarantees).
+//!
+//! Checks DESIGN.md invariant 7: the offloaded clustering satisfies the
+//! same size constraint as the sequential path, and quality is in the
+//! same regime.
+
+use sclap::clustering::label_propagation::{size_constrained_lpa, LpaConfig};
+use sclap::generators;
+use sclap::graph::karate_club;
+use sclap::runtime::dense_lpa::offload_sclap;
+use sclap::runtime::pjrt::Runtime;
+use sclap::util::rng::Rng;
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::new(&dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            // Artifacts missing: fail loudly in CI (make test builds them
+            // first); skip only if explicitly requested.
+            if std::env::var("SCLAP_SKIP_RUNTIME_TESTS").is_ok() {
+                eprintln!("skipping runtime tests: {e:#}");
+                None
+            } else {
+                panic!("artifacts not built (run `make artifacts`): {e:#}");
+            }
+        }
+    }
+}
+
+#[test]
+fn offload_respects_size_constraint() {
+    let Some(mut rt) = runtime() else { return };
+    let g = karate_club();
+    for upper in [3i64, 6, 10] {
+        let (c, stats) = offload_sclap(&g, upper, 10, &mut rt)
+            .expect("execute")
+            .expect("karate fits smallest artifact");
+        assert!(
+            c.respects_bound(upper),
+            "U={upper}: {:?}",
+            c.cluster_weights.iter().max()
+        );
+        assert!(stats.rounds >= 1);
+        assert_eq!(stats.artifact_n, 128);
+    }
+}
+
+#[test]
+fn offload_quality_comparable_to_sequential() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Rng::new(5);
+    let g = generators::barabasi_albert(120, 3, &mut rng);
+    let upper = 12i64;
+    let (off, _) = offload_sclap(&g, upper, 10, &mut rt)
+        .expect("execute")
+        .expect("fits");
+    let (seq, _) = size_constrained_lpa(&g, upper, &LpaConfig::default(), None, None, &mut rng);
+    // Both must find real structure; the synchronous variant may differ
+    // but should be within 2x of the sequential cut.
+    let (co, cs) = (off.cut(&g), seq.cut(&g));
+    assert!(off.num_clusters < g.n(), "no merging happened");
+    assert!(
+        co <= cs * 2 + 20,
+        "offload cut {co} way worse than sequential {cs}"
+    );
+}
+
+#[test]
+fn artifact_selection_picks_smallest_fit() {
+    let Some(mut rt) = runtime() else { return };
+    assert_eq!(rt.max_n(), 1024);
+    let r = rt.round_for(34).unwrap().unwrap();
+    assert_eq!(r.n, 128);
+    let r = rt.round_for(129).unwrap().unwrap();
+    assert_eq!(r.n, 256);
+    let r = rt.round_for(1024).unwrap().unwrap();
+    assert_eq!(r.n, 1024);
+    assert!(rt.round_for(1025).unwrap().is_none());
+}
+
+#[test]
+fn oversized_graph_returns_none() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Rng::new(6);
+    let g = generators::erdos_renyi(2000, 4000, &mut rng);
+    let out = offload_sclap(&g, 50, 3, &mut rt).expect("no crash");
+    assert!(out.is_none());
+}
+
+#[test]
+fn compiled_round_rejects_bad_shapes() {
+    let Some(mut rt) = runtime() else { return };
+    let round = rt.round_for(10).unwrap().unwrap();
+    let n = round.n;
+    let err = round.execute(
+        &vec![0f32; n], // wrong: should be n*n
+        &vec![0i32; n],
+        &vec![0f32; n],
+        &vec![0f32; n],
+        1.0,
+    );
+    assert!(err.is_err());
+}
+
+#[test]
+fn offload_applies_only_positive_gain() {
+    let Some(mut rt) = runtime() else { return };
+    // A graph already at its LPA fixed point: two disjoint triangles with
+    // U=3 — after the first convergence, further rounds apply nothing.
+    let mut b = sclap::graph::builder::GraphBuilder::new(6);
+    for base in [0u32, 3] {
+        b.add_edge(base, base + 1, 1);
+        b.add_edge(base + 1, base + 2, 1);
+        b.add_edge(base, base + 2, 1);
+    }
+    let g = b.build();
+    let (c, stats) = offload_sclap(&g, 3, 10, &mut rt)
+        .expect("execute")
+        .expect("fits");
+    assert_eq!(c.num_clusters, 2);
+    assert_eq!(c.cut(&g), 0);
+    // converged well before the round cap
+    assert!(stats.rounds < 10);
+}

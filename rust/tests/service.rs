@@ -1,0 +1,104 @@
+//! Integration: the coordinator service (DESIGN.md invariant 6).
+
+use sclap::coordinator::service::{default_seeds, Aggregate, Coordinator};
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use std::sync::Arc;
+
+#[test]
+fn n_jobs_n_results() {
+    let g = Arc::new(sclap::generators::instances::by_name("tiny-ba").unwrap().build());
+    let coord = Coordinator::new(4);
+    for reps in [1usize, 3, 10] {
+        let agg = coord.partition_repeated(
+            g.clone(),
+            &PartitionConfig::preset(Preset::UFast, 4),
+            &default_seeds(reps),
+        );
+        assert_eq!(agg.runs.len(), reps);
+        assert!(agg.best_cut as f64 <= agg.avg_cut + 1e-9);
+    }
+}
+
+#[test]
+fn determinism_independent_of_worker_count() {
+    let g = Arc::new(sclap::generators::instances::by_name("tiny-ws").unwrap().build());
+    let config = PartitionConfig::preset(Preset::CFast, 4);
+    let mut outcomes = Vec::new();
+    for workers in [1usize, 2, 8] {
+        let coord = Coordinator::new(workers);
+        let agg = coord.partition_repeated(g.clone(), &config, &default_seeds(6));
+        outcomes.push(
+            agg.runs
+                .iter()
+                .map(|r| (r.seed, r.cut, r.blocks.clone()))
+                .collect::<Vec<_>>(),
+        );
+    }
+    assert_eq!(outcomes[0], outcomes[1]);
+    assert_eq!(outcomes[1], outcomes[2]);
+}
+
+#[test]
+fn aggregate_stats_consistent() {
+    let g = Arc::new(sclap::graph::karate_club());
+    let coord = Coordinator::new(2);
+    let agg = coord.partition_repeated(
+        g.clone(),
+        &PartitionConfig::preset(Preset::CEco, 2),
+        &default_seeds(8),
+    );
+    let manual_avg: f64 =
+        agg.runs.iter().map(|r| r.cut as f64).sum::<f64>() / agg.runs.len() as f64;
+    assert!((agg.avg_cut - manual_avg).abs() < 1e-9);
+    let manual_best = agg.runs.iter().map(|r| r.cut).min().unwrap();
+    assert_eq!(agg.best_cut, manual_best);
+    // best_blocks must realize best_cut
+    assert_eq!(
+        sclap::partitioning::metrics::cut_value(&g, &agg.best_blocks),
+        agg.best_cut
+    );
+}
+
+#[test]
+fn concurrent_different_configs() {
+    // Two interleaved workloads on one pool must not cross-contaminate.
+    let g = Arc::new(sclap::graph::karate_club());
+    let coord = Coordinator::new(4);
+    let fast = coord.partition_repeated(
+        g.clone(),
+        &PartitionConfig::preset(Preset::CFast, 2),
+        &default_seeds(4),
+    );
+    let eco = coord.partition_repeated(
+        g.clone(),
+        &PartitionConfig::preset(Preset::CEco, 4),
+        &default_seeds(4),
+    );
+    for r in &fast.runs {
+        assert_eq!(r.blocks.iter().copied().max().unwrap(), 1); // k=2
+    }
+    for r in &eco.runs {
+        assert_eq!(r.blocks.iter().copied().max().unwrap(), 3); // k=4
+    }
+}
+
+#[test]
+fn aggregate_from_runs_sorts_by_seed() {
+    use sclap::coordinator::service::RunOutcome;
+    let mk = |seed, cut| RunOutcome {
+        seed,
+        cut,
+        seconds: 0.1,
+        imbalance: 0.0,
+        feasible: true,
+        initial_cut: cut,
+        levels: 1,
+        coarsest_n: 10,
+        blocks: vec![0, 1],
+    };
+    let agg = Aggregate::from_runs(vec![mk(3, 30), mk(1, 10), mk(2, 20)]);
+    let seeds: Vec<u64> = agg.runs.iter().map(|r| r.seed).collect();
+    assert_eq!(seeds, vec![1, 2, 3]);
+    assert_eq!(agg.best_cut, 10);
+    assert!((agg.avg_cut - 20.0).abs() < 1e-9);
+}

@@ -1,0 +1,154 @@
+//! Integration: iterated V-cycles (§4, §B.1, Fig. 3/4).
+//!
+//! Invariants: (a) with a partition-respecting clustering, no cut edge
+//! is ever contracted, so the coarsest graph inherits the partition with
+//! identical cut; (b) the final result of a V-cycled run is never worse
+//! than its first iteration (Fig. 3's guarantee).
+
+use sclap::clustering::label_propagation::{
+    size_constrained_lpa, LpaConfig, NodeOrdering,
+};
+use sclap::coarsening::contract::contract;
+use sclap::coarsening::hierarchy::{coarsen, CoarseningParams, CoarseningScheme};
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::partitioning::metrics::cut_value;
+use sclap::partitioning::multilevel::MultilevelPartitioner;
+use sclap::util::rng::Rng;
+
+fn web_like() -> sclap::graph::csr::Graph {
+    sclap::generators::instances::by_name("tiny-rmat").unwrap().build()
+}
+
+/// Fig. 4: clusters are subsets of blocks ⇒ contraction preserves the
+/// partition with identical cut and balance on every level.
+#[test]
+fn respecting_coarsening_preserves_cut_exactly() {
+    let g = web_like();
+    // some partition (here: from a quick run)
+    let p = MultilevelPartitioner::new(PartitionConfig::preset(Preset::CFast, 4))
+        .partition(&g, 1)
+        .partition;
+    let fine_cut = cut_value(&g, &p.blocks);
+
+    let params = CoarseningParams::new(
+        4,
+        0.03,
+        CoarseningScheme::ClusterLpa {
+            lpa: LpaConfig::clustering(10, NodeOrdering::Degree),
+            size_factor: 18.0,
+            ensemble: None,
+        },
+    );
+    let mut rng = Rng::new(2);
+    let h = coarsen(&g, &params, Some(&p.blocks), &mut rng);
+    assert!(h.depth() >= 1, "should coarsen at least once");
+    let coarsest = h.coarsest(&g);
+    let coarse_part = h.coarsest_partition.as_ref().expect("projected partition");
+    let coarse_cut = cut_value(coarsest, coarse_part);
+    assert_eq!(fine_cut, coarse_cut, "V-cycle contraction changed the cut");
+
+    // block weights preserved too
+    for b in 0..4u32 {
+        let fine_w: i64 = g
+            .nodes()
+            .filter(|&v| p.blocks[v as usize] == b)
+            .map(|v| g.node_weight(v))
+            .sum();
+        let coarse_w: i64 = coarsest
+            .nodes()
+            .filter(|&v| coarse_part[v as usize] == b)
+            .map(|v| coarsest.node_weight(v))
+            .sum();
+        assert_eq!(fine_w, coarse_w, "block {b} weight changed");
+    }
+}
+
+/// §B.1: every cluster contains nodes of one unique block.
+#[test]
+fn clusters_never_cross_blocks() {
+    let g = web_like();
+    let blocks: Vec<u32> = {
+        let mut rng = Rng::new(3);
+        (0..g.n()).map(|_| rng.below(4) as u32).collect()
+    };
+    for seed in 0..5 {
+        let mut rng = Rng::new(seed);
+        let (c, _) = size_constrained_lpa(
+            &g,
+            30,
+            &LpaConfig::clustering(8, NodeOrdering::Random),
+            None,
+            Some(&blocks),
+            &mut rng,
+        );
+        // cluster -> block must be single-valued
+        let mut block_of_cluster = vec![u32::MAX; c.num_clusters];
+        for v in 0..g.n() {
+            let cl = c.labels[v] as usize;
+            if block_of_cluster[cl] == u32::MAX {
+                block_of_cluster[cl] = blocks[v];
+            } else {
+                assert_eq!(
+                    block_of_cluster[cl], blocks[v],
+                    "cluster {cl} crosses blocks (seed {seed})"
+                );
+            }
+        }
+        // and contraction keeps every cut edge
+        let cont = contract(&g, &c);
+        let fine_cut = cut_value(&g, &blocks);
+        let coarse_blocks: Vec<u32> = {
+            let mut cb = vec![0u32; cont.coarse.n()];
+            for v in 0..g.n() {
+                cb[cont.map[v] as usize] = blocks[v];
+            }
+            cb
+        };
+        assert_eq!(fine_cut, cut_value(&cont.coarse, &coarse_blocks));
+    }
+}
+
+/// Fig. 3's guarantee: iterated V-cycles never end worse than cycle 1
+/// (our driver keeps the best cycle, and each cycle starts from the
+/// previous partition, so this must hold for every preset and seed).
+#[test]
+fn vcycles_monotone_improvement() {
+    let g = web_like();
+    for preset in [Preset::CFastV, Preset::CEcoV, Preset::UFastV] {
+        for seed in [1u64, 7, 42] {
+            let mut one = PartitionConfig::preset(preset, 4);
+            one.vcycles = 1;
+            let mut three = PartitionConfig::preset(preset, 4);
+            three.vcycles = 3;
+            let r1 = MultilevelPartitioner::new(one).partition(&g, seed);
+            let r3 = MultilevelPartitioner::new(three).partition(&g, seed);
+            assert!(
+                r3.metrics.cut <= r1.metrics.cut,
+                "{} seed {seed}: V3 {} > V1 {}",
+                preset.name(),
+                r3.metrics.cut,
+                r1.metrics.cut
+            );
+        }
+    }
+}
+
+/// The imbalance schedule (§4) must deliver a *feasible* partition at
+/// the finest level even though coarse levels were allowed to overflow.
+#[test]
+fn coarse_imbalance_ends_feasible() {
+    let g = web_like();
+    let config = PartitionConfig::preset(Preset::CEcoVB, 8);
+    let r = MultilevelPartitioner::new(config).partition(&g, 11);
+    let lmax = sclap::coarsening::hierarchy::l_max(
+        g.total_node_weight(),
+        8,
+        0.03,
+        g.max_node_weight(),
+    );
+    assert!(
+        r.partition.max_block_weight() <= lmax,
+        "{:?} > {lmax}",
+        r.partition.block_weights
+    );
+}
