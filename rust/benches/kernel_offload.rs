@@ -20,8 +20,10 @@ fn main() {
     let mut runtime = match Runtime::from_env() {
         Ok(r) => r,
         Err(e) => {
-            eprintln!("artifacts not built (`make artifacts`): {e:#}");
-            std::process::exit(1);
+            // Default offline build: the PJRT backend is stubbed out —
+            // nothing to measure, and that is not a bench failure.
+            eprintln!("skipping kernel_offload bench: {e}");
+            return;
         }
     };
     println!("platform: {}\n", runtime.platform());

@@ -8,12 +8,15 @@ use sclap::clustering::label_propagation::{
     size_constrained_lpa, LpaConfig, NodeOrdering,
 };
 use sclap::clustering::parallel_lpa::parallel_sclap;
-use sclap::coarsening::contract::contract;
+use sclap::coarsening::contract::{contract, contract_parallel};
 use sclap::graph::csr::Graph;
+use sclap::util::pool::ThreadPool;
 use sclap::util::rng::Rng;
 use sclap::util::timer::Timer;
 
-fn bench<F: FnMut() -> u64>(label: &str, edges: usize, iters: usize, mut f: F) {
+/// Run `f` `iters` times (after one warmup), print throughput, and
+/// return the mean seconds per iteration (for speedup summaries).
+fn bench<F: FnMut() -> u64>(label: &str, edges: usize, iters: usize, mut f: F) -> f64 {
     // warmup
     let mut sink = f();
     let t = Timer::start();
@@ -26,6 +29,7 @@ fn bench<F: FnMut() -> u64>(label: &str, edges: usize, iters: usize, mut f: F) {
         secs * 1e3,
         edges as f64 / secs / 1e6,
     );
+    secs
 }
 
 fn main() {
@@ -58,23 +62,35 @@ fn main() {
         });
     }
 
-    // parallel rounds (paper §6 future work)
+    // Pool-parallel synchronous rounds (paper §6 future work), now on
+    // the shared deterministic thread pool. Same seed ⇒ same clustering
+    // for every pool size; only wall-clock changes.
+    let mut secs_by_threads: Vec<(usize, f64)> = Vec::new();
     for threads in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(threads);
         let mut seed = 100u64;
-        bench(
-            &format!("parallel sclap l=3 ({threads} threads)"),
+        let secs = bench(
+            &format!("parallel sclap l=3 ({threads} threads, pool)"),
             3 * g.m(),
             iters,
             || {
                 seed += 1;
                 let mut r = Rng::new(seed);
-                let c = parallel_sclap(&g, upper, 3, threads, &mut r);
+                let c = parallel_sclap(&g, upper, 3, &pool, &mut r);
                 c.num_clusters as u64
             },
         );
+        secs_by_threads.push((threads, secs));
+    }
+    let t1 = secs_by_threads[0].1;
+    for &(threads, secs) in &secs_by_threads[1..] {
+        println!(
+            "    -> speedup {threads} threads vs 1: {:.2}x (target at 4: >= 1.5x)",
+            t1 / secs
+        );
     }
 
-    // contraction throughput
+    // contraction throughput: sequential vs pool-parallel
     {
         let mut r = Rng::new(7);
         let (clustering, _) = size_constrained_lpa(
@@ -85,9 +101,14 @@ fn main() {
             None,
             &mut r,
         );
-        bench("cluster contraction", g.m(), iters, || {
+        let seq = bench("cluster contraction (sequential)", g.m(), iters, || {
             contract(&g, &clustering).coarse.n() as u64
         });
+        let pool = ThreadPool::new(4);
+        let par = bench("cluster contraction (pool, 4 threads)", g.m(), iters, || {
+            contract_parallel(&g, &clustering, &pool).coarse.n() as u64
+        });
+        println!("    -> contraction speedup 4 threads: {:.2}x", seq / par);
     }
 
     // matching baseline for contrast

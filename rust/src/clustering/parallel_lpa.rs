@@ -1,18 +1,45 @@
-//! Shared-memory parallel SCLaP — the paper's §6 future-work direction
-//! ("label propagation … has a large potential to be efficiently
-//! parallelized"), implemented with std::thread.
+//! Pool-parallel synchronous SCLaP — the paper's §6 future-work
+//! direction ("label propagation … has a large potential to be
+//! efficiently parallelized"), running on the shared deterministic
+//! [`ThreadPool`] instead of spawning threads per round.
 //!
 //! Semantics match the accelerator offload path (`runtime::dense_lpa`):
-//! each round is *synchronous* — worker threads score all nodes against a
-//! snapshot of the labels, then the proposals are reconciled sequentially
-//! in descending-gain order against a live cluster-size table, so the
-//! size constraint holds exactly (invariant 7 of DESIGN.md §7).
+//! each round is *synchronous* — pool workers score fixed-size node
+//! chunks against a snapshot of the labels, then the proposals are
+//! reconciled sequentially in descending-gain order against a live
+//! cluster-size table, so the size constraint holds exactly (invariant 7
+//! of DESIGN.md §7).
+//!
+//! Determinism: the chunk decomposition uses [`SCORING_CHUNK`] (a fixed
+//! constant, *not* the thread count) and every chunk scores with an RNG
+//! stream seeded by `(round seed, chunk index)`. The proposal set — and
+//! therefore the final labels — is bit-identical for every pool size;
+//! `rust/tests/properties.rs` and `rust/tests/determinism.rs` enforce
+//! this.
 
 use crate::graph::csr::{Graph, NodeId, Weight};
 use crate::util::fast_reset::FastResetArray;
+use crate::util::pool::{ThreadPool, WorkerLocal};
 use crate::util::rng::Rng;
 
 use super::label_propagation::Clustering;
+
+/// Nodes per scoring chunk. Fixed so the work decomposition — and with
+/// it every per-chunk RNG stream — is independent of the thread count
+/// (the pool's determinism contract, `util::pool` module docs).
+pub const SCORING_CHUNK: usize = 512;
+
+/// Which role a synchronous round plays (mirrors `LpaMode` for the
+/// sequential engine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Coarsening clustering: move only on strictly positive gain.
+    Clustering,
+    /// Local search on a partition: the overloaded-block rule applies
+    /// (an overloaded block's nodes must consider other blocks even at
+    /// negative gain) and blocks are never emptied.
+    Refinement,
+}
 
 /// A proposed move produced by the scoring pass.
 #[derive(Debug, Clone, Copy)]
@@ -23,20 +50,30 @@ pub struct Proposal {
     pub gain: i64,
 }
 
-/// Score one chunk of nodes against the label snapshot. Pure function —
-/// safe to run on worker threads with shared read-only state.
-fn score_chunk(
+/// Derive the RNG seed of one scoring chunk from the round seed. Pure
+/// function of (round, chunk) — never of the executing worker.
+#[inline]
+fn chunk_seed(round_seed: u64, chunk: usize) -> u64 {
+    round_seed ^ (chunk as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Score one node range against the label snapshot. Pure function —
+/// safe to run on pool workers with shared read-only state.
+#[allow(clippy::too_many_arguments)]
+fn score_range(
     g: &Graph,
     labels: &[u32],
     cluster_weight: &[Weight],
     upper_bound: Weight,
-    chunk: &[NodeId],
+    range: std::ops::Range<usize>,
     seed: u64,
+    mode: SyncMode,
+    conn: &mut FastResetArray<i64>,
 ) -> Vec<Proposal> {
-    let mut conn: FastResetArray<i64> = FastResetArray::new(cluster_weight.len());
     let mut rng = Rng::new(seed);
     let mut out = Vec::new();
-    for &v in chunk {
+    for v in range {
+        let v = v as NodeId;
         let cur = labels[v as usize];
         let vw = g.node_weight(v);
         let adj = g.adjacent(v);
@@ -49,8 +86,10 @@ fn score_chunk(
             conn.accumulate(labels[u as usize] as usize, w);
         }
         let stay = conn.get(cur as usize);
+        let overloaded =
+            mode == SyncMode::Refinement && cluster_weight[cur as usize] > upper_bound;
         let mut best = cur;
-        let mut best_conn = stay;
+        let mut best_conn = if overloaded { i64::MIN } else { stay };
         let mut ties = 1u32;
         for &c in conn.touched() {
             let c32 = c as u32;
@@ -62,14 +101,19 @@ fn score_chunk(
                 best = c32;
                 best_conn = s;
                 ties = 1;
-            } else if s == best_conn {
+            } else if s == best_conn && best_conn > i64::MIN {
                 ties += 1;
                 if rng.below(ties as usize) == 0 {
                     best = c32;
                 }
             }
         }
-        if best != cur && best_conn > stay {
+        let improves = if overloaded {
+            best != cur // any eligible escape route counts
+        } else {
+            best != cur && best_conn > stay
+        };
+        if improves {
             out.push(Proposal {
                 node: v,
                 target: best,
@@ -81,11 +125,25 @@ fn score_chunk(
 }
 
 /// Apply proposals in descending-gain order against the live size table.
-/// Returns the number of applied moves. Shared with the PJRT offload path.
+/// Returns the number of applied moves. Shared with the PJRT offload
+/// path (clustering semantics: no block-count bookkeeping).
 pub fn reconcile_proposals(
     g: &Graph,
     labels: &mut [u32],
     cluster_weight: &mut [Weight],
+    upper_bound: Weight,
+    proposals: &mut Vec<Proposal>,
+) -> usize {
+    apply_proposals(g, labels, cluster_weight, None, upper_bound, proposals)
+}
+
+/// Reconcile with optional per-cluster cardinality tracking (refinement
+/// must never empty a block).
+fn apply_proposals(
+    g: &Graph,
+    labels: &mut [u32],
+    cluster_weight: &mut [Weight],
+    mut cluster_count: Option<&mut [u32]>,
     upper_bound: Weight,
     proposals: &mut Vec<Proposal>,
 ) -> usize {
@@ -94,64 +152,112 @@ pub fn reconcile_proposals(
     for p in proposals.iter() {
         let v = p.node as usize;
         let vw = g.node_weight(p.node);
-        if labels[v] == p.target {
+        let from = labels[v];
+        if from == p.target {
             continue;
+        }
+        if let Some(counts) = cluster_count.as_deref_mut() {
+            if counts[from as usize] <= 1 {
+                continue; // never empty a block (refinement)
+            }
         }
         if cluster_weight[p.target as usize] + vw > upper_bound {
             continue; // became ineligible after earlier accepted moves
         }
-        cluster_weight[labels[v] as usize] -= vw;
+        cluster_weight[from as usize] -= vw;
         cluster_weight[p.target as usize] += vw;
+        if let Some(counts) = cluster_count.as_deref_mut() {
+            counts[from as usize] -= 1;
+            counts[p.target as usize] += 1;
+        }
         labels[v] = p.target;
         applied += 1;
     }
     applied
 }
 
-/// Parallel size-constrained LPA (clustering mode, singleton start).
+/// One synchronous SCLaP round on the pool: snapshot-score all nodes in
+/// fixed chunks, then reconcile sequentially. Returns applied moves.
+///
+/// `scratch` must have one accumulator per pool worker, each with
+/// capacity ≥ the number of distinct labels.
+#[allow(clippy::too_many_arguments)]
+pub fn synchronous_round(
+    g: &Graph,
+    labels: &mut [u32],
+    cluster_weight: &mut [Weight],
+    cluster_count: Option<&mut [u32]>,
+    upper_bound: Weight,
+    mode: SyncMode,
+    pool: &ThreadPool,
+    scratch: &WorkerLocal<FastResetArray<i64>>,
+    round_seed: u64,
+) -> usize {
+    let n = g.n();
+    let num_chunks = n.div_ceil(SCORING_CHUNK).max(1);
+    let per_chunk: Vec<Vec<Proposal>> = {
+        let labels_ref: &[u32] = labels;
+        let weights_ref: &[Weight] = cluster_weight;
+        pool.map_indexed(num_chunks, |worker, chunk| {
+            let lo = chunk * SCORING_CHUNK;
+            let hi = (lo + SCORING_CHUNK).min(n);
+            // SAFETY: `worker` is the pool-provided worker id; at most
+            // one task runs per id at a time (WorkerLocal contract).
+            let conn = unsafe { scratch.get_mut(worker) };
+            score_range(
+                g,
+                labels_ref,
+                weights_ref,
+                upper_bound,
+                lo..hi,
+                chunk_seed(round_seed, chunk),
+                mode,
+                conn,
+            )
+        })
+    };
+    // Flatten in chunk order — part of the deterministic schedule.
+    let mut proposals: Vec<Proposal> = per_chunk.into_iter().flatten().collect();
+    apply_proposals(
+        g,
+        labels,
+        cluster_weight,
+        cluster_count,
+        upper_bound,
+        &mut proposals,
+    )
+}
+
+/// Pool-parallel size-constrained LPA (clustering mode, singleton
+/// start). Bit-identical output for any pool size, given the same seed
+/// stream in `rng`.
 pub fn parallel_sclap(
     g: &Graph,
     upper_bound: Weight,
     max_iterations: usize,
-    threads: usize,
+    pool: &ThreadPool,
     rng: &mut Rng,
 ) -> Clustering {
     let n = g.n();
     assert!(upper_bound >= g.max_node_weight());
-    let threads = threads.max(1);
     let mut labels: Vec<u32> = (0..n as u32).collect();
     let mut cluster_weight: Vec<Weight> = g.node_weights().to_vec();
+    let scratch = WorkerLocal::new(pool.threads(), || FastResetArray::new(n.max(1)));
 
     for _round in 0..max_iterations {
-        let nodes: Vec<NodeId> = (0..n as NodeId).collect();
-        let chunk_size = n.div_ceil(threads).max(1);
-        let seeds: Vec<u64> = (0..threads).map(|_| rng.next_u64()).collect();
-
-        let mut proposals: Vec<Proposal> = Vec::new();
-        std::thread::scope(|scope| {
-            let labels_ref: &[u32] = &labels;
-            let weights_ref: &[Weight] = &cluster_weight;
-            let handles: Vec<_> = nodes
-                .chunks(chunk_size)
-                .zip(seeds.iter())
-                .map(|(chunk, &seed)| {
-                    scope.spawn(move || {
-                        score_chunk(g, labels_ref, weights_ref, upper_bound, chunk, seed)
-                    })
-                })
-                .collect();
-            for h in handles {
-                proposals.extend(h.join().expect("scoring thread panicked"));
-            }
-        });
-
-        let applied = reconcile_proposals(
+        let round_seed = rng.next_u64();
+        let applied = synchronous_round(
             g,
             &mut labels,
             &mut cluster_weight,
+            None,
             upper_bound,
-            &mut proposals,
+            SyncMode::Clustering,
+            pool,
+            &scratch,
+            round_seed,
         );
+        debug_assert!(cluster_weight.iter().all(|&w| w <= upper_bound));
         if (applied as f64) < 0.05 * n as f64 {
             break;
         }
@@ -169,9 +275,10 @@ mod tests {
     #[test]
     fn parallel_respects_bound() {
         let g = karate_club();
-        for threads in [1, 2, 4] {
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
             let mut rng = Rng::new(1);
-            let c = parallel_sclap(&g, 6, 10, threads, &mut rng);
+            let c = parallel_sclap(&g, 6, 10, &pool, &mut rng);
             assert!(c.respects_bound(6), "threads={threads}: {:?}", c.cluster_weights);
         }
     }
@@ -180,19 +287,36 @@ mod tests {
     fn parallel_finds_structure() {
         let mut rng = Rng::new(2);
         let g = generators::barabasi_albert(2000, 4, &mut rng);
-        let c = parallel_sclap(&g, 50, 10, 4, &mut Rng::new(3));
+        let pool = ThreadPool::new(4);
+        let c = parallel_sclap(&g, 50, 10, &pool, &mut Rng::new(3));
         assert!(c.num_clusters < g.n() / 2, "nc={}", c.num_clusters);
         assert!(c.respects_bound(50));
     }
 
     #[test]
-    fn single_thread_equals_sequential_reconciliation() {
-        // With 1 thread the proposals are deterministic per seed; rerun
-        // must produce identical labels.
+    fn labels_identical_across_pool_sizes() {
+        // The tentpole invariant at the engine level: same seed, any
+        // thread count, bit-identical labels. n=2000 spans several
+        // SCORING_CHUNK chunks, so the parallel path is really exercised.
         let mut rng = Rng::new(4);
-        let g = generators::rmat(9, 2000, 0.57, 0.19, 0.19, &mut rng);
-        let a = parallel_sclap(&g, 30, 5, 1, &mut Rng::new(7)).labels;
-        let b = parallel_sclap(&g, 30, 5, 1, &mut Rng::new(7)).labels;
+        let g = generators::rmat(11, 6000, 0.57, 0.19, 0.19, &mut rng);
+        let run = |threads: usize| {
+            let pool = ThreadPool::new(threads);
+            parallel_sclap(&g, 30, 5, &pool, &mut Rng::new(7)).labels
+        };
+        let reference = run(1);
+        for threads in [2usize, 3, 4, 8] {
+            assert_eq!(reference, run(threads), "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn rerun_same_seed_identical() {
+        let mut rng = Rng::new(5);
+        let g = generators::barabasi_albert(1500, 3, &mut rng);
+        let pool = ThreadPool::new(4);
+        let a = parallel_sclap(&g, 25, 5, &pool, &mut Rng::new(9)).labels;
+        let b = parallel_sclap(&g, 25, 5, &pool, &mut Rng::new(9)).labels;
         assert_eq!(a, b);
     }
 
@@ -211,5 +335,35 @@ mod tests {
         assert_eq!(labels[5], 0); // higher gain won
         assert_eq!(labels[6], 6);
         assert_eq!(weights[0], 2);
+    }
+
+    #[test]
+    fn refinement_round_never_empties_blocks() {
+        let g = karate_club();
+        let k = 2usize;
+        let mut labels: Vec<u32> = (0..34u32).map(|v| v % 2).collect();
+        let mut weight = vec![0 as Weight; k];
+        let mut count = vec![0u32; k];
+        for &l in &labels {
+            weight[l as usize] += 1;
+            count[l as usize] += 1;
+        }
+        let pool = ThreadPool::new(2);
+        let scratch = WorkerLocal::new(pool.threads(), || FastResetArray::new(k));
+        for round in 0..5u64 {
+            synchronous_round(
+                &g,
+                &mut labels,
+                &mut weight,
+                Some(&mut count),
+                20,
+                SyncMode::Refinement,
+                &pool,
+                &scratch,
+                round,
+            );
+            assert!(weight.iter().all(|&w| w <= 20), "{weight:?}");
+            assert!(count.iter().all(|&c| c >= 1), "block emptied: {count:?}");
+        }
     }
 }

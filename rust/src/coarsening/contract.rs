@@ -6,10 +6,18 @@
 //! to a partition of the finer graph *with the same cut and balance* —
 //! the central invariant of the multilevel method (tested below and in
 //! `rust/tests/properties.rs`).
+//!
+//! Contraction is embarrassingly parallel across coarse nodes: each
+//! coarse node's adjacency depends only on its own members, so
+//! [`contract_parallel`] aggregates fixed-size coarse-id chunks on the
+//! shared pool and concatenates them in chunk order — **bit-identical**
+//! to the sequential [`contract`] for every thread count (the pool's
+//! determinism contract; asserted in the tests below).
 
 use crate::clustering::label_propagation::Clustering;
 use crate::graph::csr::{Graph, NodeId, Weight};
 use crate::util::fast_reset::FastResetArray;
+use crate::util::pool::{ThreadPool, WorkerLocal};
 
 /// Result of contracting a clustering: the coarse graph plus the
 /// fine-node → coarse-node map.
@@ -20,13 +28,19 @@ pub struct Contraction {
     pub map: Vec<u32>,
 }
 
-/// Contract `clustering` (labels must be dense `0..num_clusters`).
-pub fn contract(g: &Graph, clustering: &Clustering) -> Contraction {
-    let nc = clustering.num_clusters;
-    let labels = &clustering.labels;
+/// Coarse nodes per parallel-aggregation chunk. Fixed (not derived from
+/// the thread count) per the pool determinism contract — though for
+/// contraction even a thread-dependent split would be safe, since the
+/// merge is by chunk index and each coarse node is independent.
+const CONTRACT_CHUNK: usize = 1024;
 
-    // Bucket fine nodes by coarse id (counting sort) so each coarse
-    // node's edges are accumulated in one sweep with a fast-reset map.
+/// Arc-count threshold below which [`contract_with_pool`] stays
+/// sequential (pool dispatch overhead dominates on tiny levels).
+const CONTRACT_PARALLEL_MIN_ARCS: usize = 1 << 15;
+
+/// Bucket fine nodes by coarse id (counting sort) so each coarse node's
+/// edges are accumulated in one sweep. Returns (prefix counts, members).
+fn bucket_members(g: &Graph, labels: &[u32], nc: usize) -> (Vec<usize>, Vec<NodeId>) {
     let mut counts = vec![0usize; nc + 1];
     for &l in labels.iter() {
         counts[l as usize + 1] += 1;
@@ -35,26 +49,37 @@ pub fn contract(g: &Graph, clustering: &Clustering) -> Contraction {
         counts[i + 1] += counts[i];
     }
     let mut members = vec![0 as NodeId; g.n()];
-    {
-        let mut cursor = counts.clone();
-        for v in g.nodes() {
-            let l = labels[v as usize] as usize;
-            members[cursor[l]] = v;
-            cursor[l] += 1;
-        }
+    let mut cursor = counts.clone();
+    for v in g.nodes() {
+        let l = labels[v as usize] as usize;
+        members[cursor[l]] = v;
+        cursor[l] += 1;
     }
+    (counts, members)
+}
 
-    let mut xadj: Vec<usize> = Vec::with_capacity(nc + 1);
-    xadj.push(0);
-    let mut targets: Vec<NodeId> = Vec::new();
-    let mut edge_weights: Vec<Weight> = Vec::new();
-    let mut node_weights: Vec<Weight> = vec![0; nc];
-    let mut acc: FastResetArray<i64> = FastResetArray::new(nc);
-
-    for c in 0..nc {
+/// Aggregate the coarse CSR rows for coarse ids `lo..hi`. The inner loop
+/// is shared verbatim between the sequential and parallel paths so their
+/// outputs are identical by construction.
+#[allow(clippy::too_many_arguments)]
+fn aggregate_range(
+    g: &Graph,
+    labels: &[u32],
+    counts: &[usize],
+    members: &[NodeId],
+    lo: usize,
+    hi: usize,
+    acc: &mut FastResetArray<i64>,
+    xadj: &mut Vec<usize>,
+    targets: &mut Vec<NodeId>,
+    edge_weights: &mut Vec<Weight>,
+    node_weights: &mut Vec<Weight>,
+) {
+    for c in lo..hi {
         acc.clear();
+        let mut nw: Weight = 0;
         for &v in &members[counts[c]..counts[c + 1]] {
-            node_weights[c] += g.node_weight(v);
+            nw += g.node_weight(v);
             let adj = g.adjacent(v);
             let ws = g.adjacent_weights(v);
             for (&u, &w) in adj.iter().zip(ws) {
@@ -64,11 +89,112 @@ pub fn contract(g: &Graph, clustering: &Clustering) -> Contraction {
                 }
             }
         }
+        node_weights.push(nw);
         for &cu in acc.touched() {
             targets.push(cu as NodeId);
             edge_weights.push(acc.value_of_touched(cu));
         }
         xadj.push(targets.len());
+    }
+}
+
+/// Contract `clustering` (labels must be dense `0..num_clusters`).
+pub fn contract(g: &Graph, clustering: &Clustering) -> Contraction {
+    let nc = clustering.num_clusters;
+    let labels = &clustering.labels;
+    let (counts, members) = bucket_members(g, labels, nc);
+
+    let mut xadj: Vec<usize> = Vec::with_capacity(nc + 1);
+    xadj.push(0);
+    let mut targets: Vec<NodeId> = Vec::new();
+    let mut edge_weights: Vec<Weight> = Vec::new();
+    let mut node_weights: Vec<Weight> = Vec::with_capacity(nc);
+    let mut acc: FastResetArray<i64> = FastResetArray::new(nc);
+
+    aggregate_range(
+        g,
+        labels,
+        &counts,
+        &members,
+        0,
+        nc,
+        &mut acc,
+        &mut xadj,
+        &mut targets,
+        &mut edge_weights,
+        &mut node_weights,
+    );
+
+    let coarse = Graph::from_csr(xadj, targets, edge_weights, node_weights);
+    debug_assert!(coarse.validate().is_ok());
+    Contraction {
+        coarse,
+        map: labels.clone(),
+    }
+}
+
+/// Per-chunk partial coarse CSR (xadj is chunk-local, rebased on merge).
+struct ChunkCsr {
+    xadj: Vec<usize>,
+    targets: Vec<NodeId>,
+    edge_weights: Vec<Weight>,
+    node_weights: Vec<Weight>,
+}
+
+/// Pool-parallel contraction: aggregate fixed coarse-id chunks on the
+/// pool workers and concatenate in chunk order. Output is bit-identical
+/// to [`contract`] for every pool size.
+pub fn contract_parallel(g: &Graph, clustering: &Clustering, pool: &ThreadPool) -> Contraction {
+    let nc = clustering.num_clusters;
+    let labels = &clustering.labels;
+    let (counts, members) = bucket_members(g, labels, nc);
+
+    let num_chunks = nc.div_ceil(CONTRACT_CHUNK).max(1);
+    let scratch = WorkerLocal::new(pool.threads(), || FastResetArray::new(nc.max(1)));
+    let chunks: Vec<ChunkCsr> = pool.map_indexed(num_chunks, |worker, chunk| {
+        let lo = chunk * CONTRACT_CHUNK;
+        let hi = (lo + CONTRACT_CHUNK).min(nc);
+        // SAFETY: `worker` is the pool-provided id (WorkerLocal contract).
+        let acc = unsafe { scratch.get_mut(worker) };
+        let mut xadj = Vec::with_capacity(hi - lo + 1);
+        xadj.push(0);
+        let mut out = ChunkCsr {
+            xadj,
+            targets: Vec::new(),
+            edge_weights: Vec::new(),
+            node_weights: Vec::with_capacity(hi - lo),
+        };
+        aggregate_range(
+            g,
+            labels,
+            &counts,
+            &members,
+            lo,
+            hi,
+            acc,
+            &mut out.xadj,
+            &mut out.targets,
+            &mut out.edge_weights,
+            &mut out.node_weights,
+        );
+        out
+    });
+
+    // Deterministic merge: concatenate in chunk order, rebasing offsets.
+    let total_arcs: usize = chunks.iter().map(|c| c.targets.len()).sum();
+    let mut xadj: Vec<usize> = Vec::with_capacity(nc + 1);
+    xadj.push(0);
+    let mut targets: Vec<NodeId> = Vec::with_capacity(total_arcs);
+    let mut edge_weights: Vec<Weight> = Vec::with_capacity(total_arcs);
+    let mut node_weights: Vec<Weight> = Vec::with_capacity(nc);
+    for chunk in chunks {
+        let base = targets.len();
+        for &off in &chunk.xadj[1..] {
+            xadj.push(base + off);
+        }
+        targets.extend_from_slice(&chunk.targets);
+        edge_weights.extend_from_slice(&chunk.edge_weights);
+        node_weights.extend_from_slice(&chunk.node_weights);
     }
 
     let coarse = Graph::from_csr(xadj, targets, edge_weights, node_weights);
@@ -76,6 +202,23 @@ pub fn contract(g: &Graph, clustering: &Clustering) -> Contraction {
     Contraction {
         coarse,
         map: labels.clone(),
+    }
+}
+
+/// Contraction entry point for the multilevel driver: parallel when a
+/// pool with >1 thread is supplied and the level is big enough for the
+/// dispatch overhead to pay off, sequential otherwise. Both paths
+/// produce identical output, so the choice never affects results.
+pub fn contract_with_pool(
+    g: &Graph,
+    clustering: &Clustering,
+    pool: Option<&ThreadPool>,
+) -> Contraction {
+    match pool {
+        Some(pool) if pool.threads() > 1 && g.arc_count() >= CONTRACT_PARALLEL_MIN_ARCS => {
+            contract_parallel(g, clustering, pool)
+        }
+        _ => contract(g, clustering),
     }
 }
 
@@ -204,5 +347,44 @@ mod tests {
         assert_eq!(c.coarse.n(), 3);
         assert_eq!(c.coarse.m(), 2);
         assert_eq!(&c.coarse, &g);
+    }
+
+    #[test]
+    fn parallel_contract_matches_sequential() {
+        // Identity clustering keeps nc large (> CONTRACT_CHUNK) so the
+        // parallel path really splits into several chunks.
+        let mut rng = crate::util::rng::Rng::new(5);
+        let g = crate::generators::rmat(12, 20000, 0.57, 0.19, 0.19, &mut rng);
+        for clustering in [
+            Clustering::from_labels(&g, (0..g.n() as u32).collect()),
+            crate::clustering::label_propagation::size_constrained_lpa(
+                &g,
+                30,
+                &Default::default(),
+                None,
+                None,
+                &mut rng,
+            )
+            .0,
+        ] {
+            let seq = contract(&g, &clustering);
+            for threads in [1usize, 2, 4] {
+                let pool = ThreadPool::new(threads);
+                let par = contract_parallel(&g, &clustering, &pool);
+                assert_eq!(seq.coarse, par.coarse, "threads={threads}");
+                assert_eq!(seq.map, par.map);
+            }
+        }
+    }
+
+    #[test]
+    fn contract_with_pool_gates_small_levels() {
+        // Tiny graph: must take the sequential path and still be correct.
+        let g = GraphBuilder::new(4).edge(0, 1).edge(2, 3).build();
+        let pool = ThreadPool::new(4);
+        let clustering = Clustering::from_labels(&g, vec![0, 0, 1, 1]);
+        let c = contract_with_pool(&g, &clustering, Some(&pool));
+        assert_eq!(c.coarse.n(), 2);
+        assert_eq!(c.coarse, contract(&g, &clustering).coarse);
     }
 }

@@ -8,10 +8,12 @@
 
 use crate::clustering::ensemble::ensemble_sclap;
 use crate::clustering::label_propagation::{size_constrained_lpa, Clustering, LpaConfig};
-use crate::coarsening::contract::{contract, Contraction};
+use crate::coarsening::contract::{contract_with_pool, Contraction};
 use crate::coarsening::matching::heavy_edge_matching;
 use crate::graph::csr::{Graph, Weight};
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Which coarsening algorithm builds each level.
 #[derive(Debug, Clone)]
@@ -138,6 +140,11 @@ pub struct CoarseningParams {
     pub scheme: CoarseningScheme,
     pub max_levels: usize,
     pub min_shrink: f64,
+    /// Shared pool for the parallel phases of coarsening (currently
+    /// cluster contraction). `None` (or a 1-thread pool) runs
+    /// sequentially; results are bit-identical either way — the pool
+    /// only changes wall-clock, never output (util::pool contract).
+    pub pool: Option<Arc<ThreadPool>>,
 }
 
 impl CoarseningParams {
@@ -148,6 +155,7 @@ impl CoarseningParams {
             scheme,
             max_levels: 64,
             min_shrink: 0.98,
+            pool: None,
         }
     }
 }
@@ -178,7 +186,8 @@ pub fn coarsen(
         if clustering.num_clusters as f64 > params.min_shrink * current.n() as f64 {
             break; // stalled
         }
-        let Contraction { coarse, map } = contract(current, &clustering);
+        let Contraction { coarse, map } =
+            contract_with_pool(current, &clustering, params.pool.as_deref());
         // Project the partition: every cluster is inside one block.
         partition = partition.map(|p| {
             let mut coarse_part = vec![u32::MAX; coarse.n()];

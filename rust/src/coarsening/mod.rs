@@ -5,7 +5,9 @@ pub mod contract;
 pub mod hierarchy;
 pub mod matching;
 
-pub use contract::{contract, project_partition, Contraction};
+pub use contract::{
+    contract, contract_parallel, contract_with_pool, project_partition, Contraction,
+};
 pub use hierarchy::{
     coarsen, coarsest_size_threshold, l_max, CoarseningParams, CoarseningScheme, Hierarchy,
     Level,

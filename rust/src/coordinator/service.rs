@@ -3,22 +3,25 @@
 //! The paper's evaluation protocol (§5: "we perform ten repetitions for
 //! each configuration of the algorithm and report the arithmetic
 //! average of computed cut size, running time and the best cut found")
-//! is a first-class L3 feature here: a worker pool executes repetition
-//! jobs in parallel, the coordinator aggregates average/best/geomean and
-//! retains the best partition. The bench harness and the CLI both sit
-//! on top of this service.
+//! is a first-class L3 feature here: the shared deterministic
+//! [`ThreadPool`] executes repetition jobs in parallel, the coordinator
+//! aggregates average/best/geomean and retains the best partition. The
+//! bench harness and the CLI both sit on top of this service.
 //!
-//! Implementation: std threads + mpsc channels (tokio is not available
-//! offline — DESIGN.md §3). Jobs are deterministic per seed regardless
-//! of worker count or scheduling (invariant 6, DESIGN.md §7).
+//! Implementation: `util::pool` (std threads; tokio is not available
+//! offline — DESIGN.md §3). Each job's outcome is a pure function of
+//! (graph, config, seed), and results are collected in seed order, so
+//! aggregates are deterministic regardless of worker count or
+//! scheduling (invariant 6, DESIGN.md §7). A panicking job is contained
+//! by the pool (the worker — and every queued job — survives; the
+//! caller re-raises after the batch drains).
 
 use crate::graph::csr::{Graph, Weight};
 use crate::partitioning::config::PartitionConfig;
 use crate::partitioning::multilevel::{MultilevelPartitioner, PartitionResult};
+use crate::util::pool::ThreadPool;
 use crate::util::timer::Stats;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::Arc;
 
 /// One repetition outcome (a trimmed [`PartitionResult`]).
 #[derive(Debug, Clone)]
@@ -92,82 +95,27 @@ impl Aggregate {
     }
 }
 
-/// A work item: one partitioning repetition.
-struct Job {
-    graph: Arc<Graph>,
-    config: PartitionConfig,
-    seed: u64,
-    reply: Sender<RunOutcome>,
-}
-
-/// Long-lived worker pool executing partition jobs.
+/// Repetition executor on the shared deterministic worker pool.
 pub struct Coordinator {
-    tx: Option<Sender<Job>>,
-    workers: Vec<JoinHandle<()>>,
-    worker_count: usize,
+    pool: ThreadPool,
 }
 
 impl Coordinator {
-    /// Spawn `workers` threads (0 ⇒ available parallelism).
+    /// Pool of `workers` threads (0 ⇒ available parallelism).
     pub fn new(workers: usize) -> Self {
-        let workers = if workers == 0 {
-            std::thread::available_parallelism()
-                .map(|p| p.get())
-                .unwrap_or(4)
-        } else {
-            workers
-        };
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let handles = (0..workers)
-            .map(|i| {
-                let rx = rx.clone();
-                std::thread::Builder::new()
-                    .name(format!("sclap-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().expect("rx poisoned");
-                            guard.recv()
-                        };
-                        let Ok(job) = job else { break };
-                        // Failure containment: a panicking job must not
-                        // take the worker (and every queued job) down.
-                        let seed = job.seed;
-                        let outcome = std::panic::catch_unwind(
-                            std::panic::AssertUnwindSafe(|| {
-                                let partitioner = MultilevelPartitioner::new(job.config);
-                                let result = partitioner.partition(&job.graph, seed);
-                                RunOutcome::from_result(seed, &result)
-                            }),
-                        );
-                        match outcome {
-                            // Receiver may have hung up (caller gave up)
-                            // — that's fine, drop the result.
-                            Ok(out) => {
-                                let _ = job.reply.send(out);
-                            }
-                            Err(_) => {
-                                eprintln!("sclap-worker-{i}: job seed={seed} panicked");
-                                // reply sender dropped ⇒ the aggregator's
-                                // count check reports the missing run.
-                            }
-                        }
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
         Coordinator {
-            tx: Some(tx),
-            workers: handles,
-            worker_count: workers,
+            pool: ThreadPool::new(workers),
         }
     }
 
     pub fn worker_count(&self) -> usize {
-        self.worker_count
+        self.pool.threads()
     }
 
     /// Run the §5 protocol: one repetition per seed, aggregated.
+    /// Deterministic for a given (graph, config, seeds) regardless of
+    /// the worker count: each job depends only on its seed, and the
+    /// results are collected in seed order.
     pub fn partition_repeated(
         &self,
         graph: Arc<Graph>,
@@ -175,22 +123,34 @@ impl Coordinator {
         seeds: &[u64],
     ) -> Aggregate {
         assert!(!seeds.is_empty());
-        let (reply_tx, reply_rx): (Sender<RunOutcome>, Receiver<RunOutcome>) = channel();
-        for &seed in seeds {
-            self.tx
-                .as_ref()
-                .expect("coordinator alive")
-                .send(Job {
-                    graph: graph.clone(),
-                    config: config.clone(),
-                    seed,
-                    reply: reply_tx.clone(),
-                })
-                .expect("workers alive");
+        // Nested-pool guard: when the repetitions already fan out across
+        // this pool, resolve `threads = 0` (auto) to 1 inside each job —
+        // results are byte-identical either way (thread-count
+        // invariance), and W jobs × "all cores" inner pools would
+        // oversubscribe the machine quadratically. An *explicit* inner
+        // thread count is honored: the caller asked for it.
+        let mut job_config = config.clone();
+        if job_config.threads == 0 && self.pool.threads() > 1 && seeds.len() > 1 {
+            job_config.threads = 1;
         }
-        drop(reply_tx);
-        let runs: Vec<RunOutcome> = reply_rx.iter().collect();
-        assert_eq!(runs.len(), seeds.len(), "every job must report");
+        let runs: Vec<RunOutcome> = self.pool.map_indexed(seeds.len(), |_worker, i| {
+            let seed = seeds[i];
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let partitioner = MultilevelPartitioner::new(job_config.clone());
+                let result = partitioner.partition(&graph, seed);
+                RunOutcome::from_result(seed, &result)
+            }));
+            match outcome {
+                Ok(run) => run,
+                Err(payload) => {
+                    // Name the failing repetition so the operator can
+                    // reproduce it directly, then let the pool's panic
+                    // containment report the batch failure.
+                    eprintln!("sclap coordinator: repetition seed={seed} panicked");
+                    std::panic::resume_unwind(payload)
+                }
+            }
+        });
         Aggregate::from_runs(runs)
     }
 
@@ -206,15 +166,6 @@ impl Coordinator {
             .into_iter()
             .next()
             .expect("one run")
-    }
-}
-
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        drop(self.tx.take()); // close the channel; workers drain and exit
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
     }
 }
 
@@ -269,5 +220,23 @@ mod tests {
         let coord = Coordinator::new(3);
         assert_eq!(coord.worker_count(), 3);
         drop(coord); // must not hang
+    }
+
+    #[test]
+    fn panicking_job_does_not_poison_the_pool() {
+        let g = Arc::new(karate_club());
+        let coord = Coordinator::new(2);
+        // k = 0 violates the partitioner's precondition and panics
+        // inside the job; the batch must report it...
+        let mut bad = PartitionConfig::preset(Preset::CFast, 2);
+        bad.k = 0;
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            coord.partition_repeated(g.clone(), &bad, &default_seeds(3))
+        }));
+        assert!(r.is_err(), "bad config must surface as a panic");
+        // ...and the coordinator must keep serving later batches.
+        let good = PartitionConfig::preset(Preset::CFast, 2);
+        let agg = coord.partition_repeated(g.clone(), &good, &default_seeds(3));
+        assert_eq!(agg.runs.len(), 3);
     }
 }

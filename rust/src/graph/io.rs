@@ -197,26 +197,52 @@ pub fn read_binary<R: Read>(mut reader: R) -> io::Result<Graph> {
     if &magic != BIN_MAGIC {
         return Err(bad("bad magic"));
     }
-    let n = read_u64(&mut reader)? as usize;
-    let arcs = read_u64(&mut reader)? as usize;
-    let mut node_weights = Vec::with_capacity(n);
-    for _ in 0..n {
-        node_weights.push(read_u64(&mut reader)? as Weight);
+    let n_raw = read_u64(&mut reader)?;
+    // NodeId is u32: a header beyond that could otherwise smuggle in
+    // targets that pass the range check but wrap on the cast below.
+    if n_raw > u32::MAX as u64 {
+        return Err(bad("node count out of range"));
     }
-    let mut xadj = Vec::with_capacity(n + 1);
+    let n = n_raw as usize;
+    let arcs = read_u64(&mut reader)? as usize;
+    // Clamp pre-reservation: a corrupt header must yield an I/O error
+    // (EOF below), never an abort from an absurd allocation request.
+    let mut node_weights = Vec::with_capacity(n.min(1 << 24));
+    for _ in 0..n {
+        let w = read_u64(&mut reader)?;
+        if w > i64::MAX as u64 {
+            return Err(bad("node weight out of range"));
+        }
+        node_weights.push(w as Weight);
+    }
+    let mut xadj = Vec::with_capacity((n + 1).min(1 << 24));
     xadj.push(0usize);
     for _ in 0..n {
         let d = read_u64(&mut reader)? as usize;
-        xadj.push(xadj.last().unwrap() + d);
+        let next = xadj
+            .last()
+            .unwrap()
+            .checked_add(d)
+            .ok_or_else(|| bad("degree sum overflows"))?;
+        xadj.push(next);
     }
     if *xadj.last().unwrap() != arcs {
         return Err(bad("degree sum != arc count"));
     }
-    let mut targets = Vec::with_capacity(arcs);
-    let mut weights = Vec::with_capacity(arcs);
+    let mut targets = Vec::with_capacity(arcs.min(1 << 26));
+    let mut weights = Vec::with_capacity(arcs.min(1 << 26));
     for _ in 0..arcs {
-        targets.push(read_u64(&mut reader)? as NodeId);
-        weights.push(read_u64(&mut reader)? as Weight);
+        let t = read_u64(&mut reader)?;
+        if t >= n as u64 {
+            return Err(bad("arc target out of range"));
+        }
+        targets.push(t as NodeId);
+        let w = read_u64(&mut reader)?;
+        // CSR invariant: edge weights are strictly positive i64.
+        if w == 0 || w > i64::MAX as u64 {
+            return Err(bad("edge weight out of range"));
+        }
+        weights.push(w as Weight);
     }
     Ok(Graph::from_csr(xadj, targets, weights, node_weights))
 }

@@ -41,5 +41,6 @@ pub mod prelude {
     pub use crate::partitioning::metrics::PartitionMetrics;
     pub use crate::partitioning::multilevel::MultilevelPartitioner;
     pub use crate::partitioning::partition::Partition;
+    pub use crate::util::pool::ThreadPool;
     pub use crate::util::rng::Rng;
 }

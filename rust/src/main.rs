@@ -13,12 +13,13 @@
 //!   sclap generate --kind rmat --scale 18 --edges 2000000 --out web.bin
 //!   sclap stats --instance uk2002-sim
 
-use anyhow::{bail, Context, Result};
+use sclap::bail;
 use sclap::coordinator::cli::Args;
 use sclap::coordinator::service::{default_seeds, Coordinator};
 use sclap::generators;
 use sclap::graph::csr::Graph;
 use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::util::error::{Context, Result};
 use sclap::util::rng::Rng;
 use std::path::Path;
 use std::sync::Arc;
@@ -34,7 +35,7 @@ fn main() {
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             1
         }
     };
@@ -65,15 +66,23 @@ fn print_usage() {
          \n\
          COMMANDS:\n\
            partition --graph FILE | --instance NAME  --k K [--preset P]\n\
-                     [--reps N] [--seed S] [--workers W] [--epsilon E]\n\
-                     [--output FILE]\n\
+                     [--reps N] [--seed S] [--workers W] [--threads T]\n\
+                     [--epsilon E] [--output FILE]\n\
            generate  --kind rmat|ba|ws|er|grid --out FILE [--scale S]\n\
                      [--n N] [--edges M] [--seed S]\n\
            evaluate  --graph FILE | --instance NAME --partition FILE\n\
                      [--epsilon E]\n\
            stats     --graph FILE | --instance NAME\n\
            offload   --instance NAME [--upper U] [--rounds R]\n\
-           presets\n"
+           presets\n\
+         \n\
+         --workers W: parallel repetitions (0 = all cores).\n\
+         --threads T: pool threads inside one partitioner run (0 = auto,\n\
+           1 = sequential; also via SCLAP_THREADS). Results are\n\
+           byte-identical for every T — same seed, same partition.\n\
+           With several reps on a multi-worker coordinator, auto\n\
+           resolves to 1 (no oversubscription); an explicit T is used\n\
+           as given.\n"
     );
 }
 
@@ -92,18 +101,19 @@ fn load_graph(args: &Args) -> Result<Graph> {
 
 fn cmd_partition(args: &Args) -> Result<()> {
     let graph = Arc::new(load_graph(args)?);
-    let k = args.get_usize("k", 2).map_err(anyhow::Error::msg)?;
+    let k = args.get_usize("k", 2)?;
     let preset_name = args.get_or("preset", "UFast");
     let preset = Preset::from_name(preset_name)
         .with_context(|| format!("unknown preset {preset_name:?} (see `sclap presets`)"))?;
     let mut config = PartitionConfig::preset(preset, k);
-    config.epsilon = args.get_f64("epsilon", 0.03).map_err(anyhow::Error::msg)?;
+    config.epsilon = args.get_f64("epsilon", 0.03)?;
     if let Some(l) = args.get("lpa-iterations") {
         config.lpa_iterations = l.parse().context("--lpa-iterations")?;
     }
-    let reps = args.get_usize("reps", 1).map_err(anyhow::Error::msg)?;
-    let seed = args.get_u64("seed", 1).map_err(anyhow::Error::msg)?;
-    let workers = args.get_usize("workers", 0).map_err(anyhow::Error::msg)?;
+    config.threads = args.get_usize("threads", config.threads)?;
+    let reps = args.get_usize("reps", 1)?;
+    let seed = args.get_u64("seed", 1)?;
+    let workers = args.get_usize("workers", 0)?;
 
     println!(
         "partitioning n={} m={} into k={k} with {} (ε={}, {reps} reps)",
@@ -146,33 +156,33 @@ fn cmd_partition(args: &Args) -> Result<()> {
 
 fn cmd_generate(args: &Args) -> Result<()> {
     let kind = args.get_or("kind", "rmat");
-    let seed = args.get_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 1)?;
     let mut rng = Rng::new(seed);
     let graph = match kind {
         "rmat" => {
-            let scale = args.get_usize("scale", 16).map_err(anyhow::Error::msg)? as u32;
-            let m = args.get_usize("edges", 1 << (scale + 3)).map_err(anyhow::Error::msg)?;
+            let scale = args.get_usize("scale", 16)? as u32;
+            let m = args.get_usize("edges", 1 << (scale + 3))?;
             generators::rmat(scale, m, 0.57, 0.19, 0.19, &mut rng)
         }
         "ba" => {
-            let n = args.get_usize("n", 100_000).map_err(anyhow::Error::msg)?;
-            let attach = args.get_usize("attach", 4).map_err(anyhow::Error::msg)?;
+            let n = args.get_usize("n", 100_000)?;
+            let attach = args.get_usize("attach", 4)?;
             generators::barabasi_albert(n, attach, &mut rng)
         }
         "ws" => {
-            let n = args.get_usize("n", 100_000).map_err(anyhow::Error::msg)?;
-            let k = args.get_usize("ring", 4).map_err(anyhow::Error::msg)?;
-            let beta = args.get_f64("beta", 0.1).map_err(anyhow::Error::msg)?;
+            let n = args.get_usize("n", 100_000)?;
+            let k = args.get_usize("ring", 4)?;
+            let beta = args.get_f64("beta", 0.1)?;
             generators::watts_strogatz(n, k, beta, &mut rng)
         }
         "er" => {
-            let n = args.get_usize("n", 100_000).map_err(anyhow::Error::msg)?;
-            let m = args.get_usize("edges", 4 * n).map_err(anyhow::Error::msg)?;
+            let n = args.get_usize("n", 100_000)?;
+            let m = args.get_usize("edges", 4 * n)?;
             generators::erdos_renyi(n, m, &mut rng)
         }
         "grid" => {
-            let rows = args.get_usize("rows", 300).map_err(anyhow::Error::msg)?;
-            let cols = args.get_usize("cols", 300).map_err(anyhow::Error::msg)?;
+            let rows = args.get_usize("rows", 300)?;
+            let cols = args.get_usize("cols", 300)?;
             generators::grid2d(rows, cols)
         }
         other => bail!("unknown generator kind {other:?}"),
@@ -192,7 +202,7 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
         std::io::BufReader::new(file),
         None,
     )?;
-    let epsilon = args.get_f64("epsilon", 0.03).map_err(anyhow::Error::msg)?;
+    let epsilon = args.get_f64("epsilon", 0.03)?;
     let m = sclap::partitioning::metrics::evaluate(&graph, &p, epsilon);
     println!("k             : {}", m.k);
     println!("cut           : {}", m.cut);
@@ -220,11 +230,10 @@ fn cmd_stats(args: &Args) -> Result<()> {
 fn cmd_offload(args: &Args) -> Result<()> {
     let graph = load_graph(args)?;
     let mut runtime = sclap::runtime::pjrt::Runtime::from_env()
-        .context("PJRT runtime (run `make artifacts` first)")?;
-    println!("runtime: {:?}", runtime);
-    let upper = args.get_u64("upper", (graph.total_node_weight() as u64 / 8).max(2))
-        .map_err(anyhow::Error::msg)? as i64;
-    let rounds = args.get_usize("rounds", 10).map_err(anyhow::Error::msg)?;
+        .context("PJRT runtime (vendor the `xla` crate, enable the `pjrt` feature per Cargo.toml, then run `make artifacts`)")?;
+    println!("runtime: {runtime:?}");
+    let upper = args.get_u64("upper", (graph.total_node_weight() as u64 / 8).max(2))? as i64;
+    let rounds = args.get_usize("rounds", 10)?;
     let result = sclap::runtime::dense_lpa::offload_sclap(&graph, upper, rounds, &mut runtime)?;
     match result {
         None => bail!(

@@ -69,6 +69,32 @@ pub struct PartitionConfig {
     pub tolerate_imbalance: bool,
     /// hMetis-like behavior: coarsen far deeper before IP.
     pub deep_coarsening: bool,
+    /// Worker threads for the pool-parallel phases (`0` = available
+    /// parallelism, `1` = fully sequential). First-class knob: CLI
+    /// `--threads`, env `SCLAP_THREADS`, or set directly. The logical
+    /// schedule is thread-count-invariant — same seed + same config ⇒
+    /// byte-identical partition for every value (the `util::pool`
+    /// determinism contract, enforced by `rust/tests/determinism.rs`).
+    pub threads: usize,
+    /// Use the synchronous-round pool engine
+    /// (`refinement::parallel_lpa_refine`) for the SCLaP refinement
+    /// stage instead of the sequential asynchronous engine. Off by
+    /// default: the sequential engine is the paper-faithful reference;
+    /// both are deterministic, but they are *different algorithms* and
+    /// produce different (comparable-quality) cuts.
+    pub parallel_refinement: bool,
+}
+
+/// Default thread count: `SCLAP_THREADS` if set and parseable, else 0
+/// (auto = available parallelism).
+fn threads_from_env() -> usize {
+    parse_threads(std::env::var("SCLAP_THREADS").ok().as_deref())
+}
+
+/// Pure parsing core of [`threads_from_env`] (unit-testable without
+/// mutating process-global env state): unset or unparseable ⇒ 0 (auto).
+fn parse_threads(value: Option<&str>) -> usize {
+    value.and_then(|v| v.parse().ok()).unwrap_or(0)
 }
 
 /// Named presets: the paper's configurations and the baselines.
@@ -183,6 +209,8 @@ impl PartitionConfig {
             fm: FmConfig::eco(),
             tolerate_imbalance: false,
             deep_coarsening: false,
+            threads: threads_from_env(),
+            parallel_refinement: false,
         }
     }
 
@@ -367,6 +395,24 @@ mod tests {
         assert_eq!(c.ensemble_count(), Some(3));
         let plain = PartitionConfig::preset(Preset::CEco, 8);
         assert_eq!(plain.ensemble_count(), None);
+    }
+
+    #[test]
+    fn thread_knob_defaults() {
+        // parallel_refinement is opt-in everywhere.
+        for p in Preset::ALL {
+            assert!(!PartitionConfig::preset(p, 4).parallel_refinement);
+        }
+        // SCLAP_THREADS parsing (pure core — no env mutation in tests):
+        // unset/garbage/empty fall back to 0 = auto, numbers are taken
+        // as-is.
+        assert_eq!(parse_threads(None), 0);
+        assert_eq!(parse_threads(Some("")), 0);
+        assert_eq!(parse_threads(Some("garbage")), 0);
+        assert_eq!(parse_threads(Some("-2")), 0);
+        assert_eq!(parse_threads(Some("0")), 0);
+        assert_eq!(parse_threads(Some("1")), 1);
+        assert_eq!(parse_threads(Some("8")), 8);
     }
 
     #[test]

@@ -16,9 +16,11 @@ use crate::partitioning::metrics::{cut_value, evaluate, PartitionMetrics};
 use crate::partitioning::partition::Partition;
 use crate::refinement::balance::rebalance;
 use crate::refinement::fm::kway_fm;
-use crate::refinement::lpa_refine::lpa_refine;
+use crate::refinement::lpa_refine::{lpa_refine, parallel_lpa_refine};
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
+use std::sync::{Arc, OnceLock};
 
 /// Outcome of a partitioning run, with the statistics the paper's
 /// evaluation tables report.
@@ -44,15 +46,49 @@ pub struct PartitionResult {
     pub first_shrink: f64,
 }
 
+/// Arc-count threshold below which the driver skips creating/using the
+/// thread pool for coarsening: on tiny levels the dispatch overhead
+/// outweighs the work, and the sequential and parallel paths are
+/// bit-identical anyway (the gate changes wall-clock, never output).
+const POOL_MIN_ARCS: usize = 1 << 16;
+
 /// The multilevel partitioner (the system's main entry point).
-#[derive(Debug, Clone)]
 pub struct MultilevelPartitioner {
     pub config: PartitionConfig,
+    /// Lazily-created shared pool (only when a phase will actually use
+    /// it, so tiny-graph runs never spawn threads).
+    pool: OnceLock<Arc<ThreadPool>>,
+}
+
+impl std::fmt::Debug for MultilevelPartitioner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MultilevelPartitioner")
+            .field("config", &self.config)
+            .finish()
+    }
+}
+
+impl Clone for MultilevelPartitioner {
+    fn clone(&self) -> Self {
+        // The pool is per-instance runtime state; a clone re-creates it
+        // lazily (results are thread-count-invariant, so this is safe).
+        MultilevelPartitioner::new(self.config.clone())
+    }
 }
 
 impl MultilevelPartitioner {
     pub fn new(config: PartitionConfig) -> Self {
-        MultilevelPartitioner { config }
+        MultilevelPartitioner {
+            config,
+            pool: OnceLock::new(),
+        }
+    }
+
+    /// The shared worker pool, created on first use from
+    /// `config.threads` (0 = available parallelism).
+    fn pool(&self) -> &Arc<ThreadPool> {
+        self.pool
+            .get_or_init(|| Arc::new(ThreadPool::new(self.config.threads)))
     }
 
     fn coarsening_scheme(&self) -> CoarseningScheme {
@@ -83,18 +119,30 @@ impl MultilevelPartitioner {
         ip
     }
 
+    /// The SCLaP refinement stage: sequential asynchronous engine by
+    /// default, synchronous pool rounds when `parallel_refinement` is
+    /// set. Both are deterministic; the choice selects an *algorithm*,
+    /// never a schedule (thread count does not affect either).
+    fn lpa_stage(&self, g: &Graph, p: &mut Partition, lmax: Weight, rng: &mut Rng) {
+        if self.config.parallel_refinement {
+            parallel_lpa_refine(g, p, lmax, self.config.lpa_iterations, self.pool(), rng);
+        } else {
+            lpa_refine(g, p, lmax, self.config.lpa_iterations, rng);
+        }
+    }
+
     /// Refine `p` on `g` under bound `lmax` according to the config.
     fn refine(&self, g: &Graph, p: &mut Partition, lmax: Weight, rng: &mut Rng) {
         match self.config.refinement {
             RefinementKind::Lpa => {
-                lpa_refine(g, p, lmax, self.config.lpa_iterations, rng);
+                self.lpa_stage(g, p, lmax, rng);
             }
             RefinementKind::Eco => {
-                lpa_refine(g, p, lmax, self.config.lpa_iterations, rng);
+                self.lpa_stage(g, p, lmax, rng);
                 kway_fm(g, p, lmax, &self.config.fm, rng);
             }
             RefinementKind::Strong => {
-                lpa_refine(g, p, lmax, self.config.lpa_iterations, rng);
+                self.lpa_stage(g, p, lmax, rng);
                 kway_fm(g, p, lmax, &self.config.fm, rng);
                 // KaFFPa's "more-localized" pairwise search (§2.2): only
                 // affordable on the smaller levels of the hierarchy.
@@ -125,6 +173,16 @@ impl MultilevelPartitioner {
             input.max_node_weight(),
         );
 
+        // Pool for the parallel coarsening phases; skipped entirely for
+        // small inputs (identical results, no thread-spawn cost). The
+        // refinement stage creates the pool on demand via `self.pool()`.
+        let coarsening_pool: Option<Arc<ThreadPool>> =
+            if input.arc_count() >= POOL_MIN_ARCS && self.config.threads != 1 {
+                Some(self.pool().clone())
+            } else {
+                None
+            };
+
         let mut best_blocks: Option<Vec<u32>> = None;
         let mut best_cut: Weight = Weight::MAX;
         let mut coarsening_seconds = 0.0;
@@ -144,6 +202,7 @@ impl MultilevelPartitioner {
             if cfg.deep_coarsening {
                 params.min_shrink = 0.999;
             }
+            params.pool = coarsening_pool.clone();
             let respect = best_blocks.clone();
             let h: Hierarchy = coarsen(input, &params, respect.as_deref(), &mut rng);
             coarsening_seconds += t.elapsed_s();
@@ -366,5 +425,26 @@ mod tests {
         let a = MultilevelPartitioner::new(cfg.clone()).partition(&g, 42);
         let b = MultilevelPartitioner::new(cfg).partition(&g, 42);
         assert_eq!(a.partition.blocks, b.partition.blocks);
+    }
+
+    #[test]
+    fn parallel_refinement_is_valid_and_thread_invariant() {
+        let mut rng = Rng::new(9);
+        let g = generators::barabasi_albert(2500, 4, &mut rng);
+        let run = |threads: usize| {
+            let mut cfg = PartitionConfig::preset(Preset::UFast, 4);
+            cfg.parallel_refinement = true;
+            cfg.threads = threads;
+            MultilevelPartitioner::new(cfg).partition(&g, 13)
+        };
+        let reference = run(1);
+        check_result(&g, &reference, 4, 0.03);
+        for threads in [2usize, 4] {
+            let r = run(threads);
+            assert_eq!(
+                reference.partition.blocks, r.partition.blocks,
+                "threads={threads} diverged"
+            );
+        }
     }
 }

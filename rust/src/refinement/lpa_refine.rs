@@ -6,8 +6,11 @@
 //! CFastV/B — reproduced in `benches/ablations.rs`).
 
 use crate::clustering::label_propagation::{size_constrained_lpa, LpaConfig};
+use crate::clustering::parallel_lpa::{synchronous_round, SyncMode};
 use crate::graph::csr::{Graph, Weight};
 use crate::partitioning::partition::Partition;
+use crate::util::fast_reset::FastResetArray;
+use crate::util::pool::{ThreadPool, WorkerLocal};
 use crate::util::rng::Rng;
 
 /// Refine `p` in place with SCLaP (active-nodes rounds, §B.2).
@@ -44,6 +47,59 @@ pub fn lpa_refine(
     // rule fires — the paper trades cut for balance there ("at the cost
     // of the number of edges cut", §3.1) — and the repair may be only
     // partial if no eligible target exists yet.
+    (before, after)
+}
+
+/// Pool-parallel SCLaP refinement: the same size-constrained local
+/// search, but with *synchronous* rounds on the shared [`ThreadPool`]
+/// (snapshot-score in fixed chunks, reconcile sequentially in
+/// descending-gain order — `clustering::parallel_lpa` semantics, so the
+/// overloaded-block rule applies and blocks are never emptied).
+///
+/// Because refinement labels *are* block ids, no densification or
+/// undensing is needed. Output is bit-identical for every pool size
+/// given the same `rng` stream (enforced in `rust/tests/properties.rs`);
+/// it generally differs from the sequential asynchronous [`lpa_refine`],
+/// which visits nodes in degree order with live updates.
+pub fn parallel_lpa_refine(
+    g: &Graph,
+    p: &mut Partition,
+    lmax: Weight,
+    iterations: usize,
+    pool: &ThreadPool,
+    rng: &mut Rng,
+) -> (Weight, Weight) {
+    let before = crate::partitioning::metrics::cut_value(g, &p.blocks);
+    let k = p.k;
+    let n = g.n();
+    let mut labels = p.blocks.clone();
+    let mut cluster_weight = p.block_weights.clone();
+    let mut cluster_count = vec![0u32; k];
+    for &b in &labels {
+        cluster_count[b as usize] += 1;
+    }
+    let scratch = WorkerLocal::new(pool.threads(), || FastResetArray::new(k.max(1)));
+
+    for _ in 0..iterations {
+        let round_seed = rng.next_u64();
+        let applied = synchronous_round(
+            g,
+            &mut labels,
+            &mut cluster_weight,
+            Some(&mut cluster_count),
+            lmax,
+            SyncMode::Refinement,
+            pool,
+            &scratch,
+            round_seed,
+        );
+        if (applied as f64) < 0.05 * n as f64 {
+            break;
+        }
+    }
+
+    *p = Partition::from_blocks(g, k, labels);
+    let after = crate::partitioning::metrics::cut_value(g, &p.blocks);
     (before, after)
 }
 
@@ -141,6 +197,38 @@ mod tests {
         let dense = vec![0u32, 0, 0, 1]; // node 2 moved from block 1 to 0
         let out = undense_blocks(&dense, &orig, 2);
         assert_eq!(out, vec![0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn parallel_refine_respects_bound_and_blocks() {
+        let g = karate_club();
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut rng = Rng::new(6);
+            let blocks: Vec<u32> = (0..g.n() as u32).map(|v| v % 4).collect();
+            let mut p = Partition::from_blocks(&g, 4, blocks);
+            parallel_lpa_refine(&g, &mut p, 12, 10, &pool, &mut rng);
+            assert!(p.max_block_weight() <= 12, "threads={threads}");
+            assert_eq!(p.nonempty_blocks(), 4);
+            assert!(p.validate(&g).is_ok());
+        }
+    }
+
+    #[test]
+    fn parallel_refine_thread_invariant() {
+        let mut rng = Rng::new(7);
+        let g = crate::generators::barabasi_albert(1500, 3, &mut rng);
+        let blocks: Vec<u32> = (0..g.n() as u32).map(|v| v % 3).collect();
+        let run = |threads: usize| {
+            let pool = ThreadPool::new(threads);
+            let mut p = Partition::from_blocks(&g, 3, blocks.clone());
+            parallel_lpa_refine(&g, &mut p, 520, 8, &pool, &mut Rng::new(11));
+            p.blocks
+        };
+        let reference = run(1);
+        for threads in [2usize, 4] {
+            assert_eq!(reference, run(threads), "threads={threads}");
+        }
     }
 
     #[test]

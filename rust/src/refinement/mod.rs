@@ -9,5 +9,5 @@ pub mod quotient;
 
 pub use balance::rebalance;
 pub use fm::{kway_fm, kway_fm_bounded, kway_fm_frozen, FmConfig, FmResult};
-pub use lpa_refine::lpa_refine;
+pub use lpa_refine::{lpa_refine, parallel_lpa_refine};
 pub use quotient::quotient_pair_refine;

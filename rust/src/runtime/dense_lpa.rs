@@ -7,7 +7,7 @@
 //! (paper §5.2), so the N ≤ 1024 artifact shapes cover the levels where
 //! clustering quality matters most per node.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::clustering::label_propagation::Clustering;
 use crate::clustering::parallel_lpa::{reconcile_proposals, Proposal};

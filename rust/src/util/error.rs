@@ -1,0 +1,173 @@
+//! Minimal error + context plumbing (the `anyhow` crate is not available
+//! in this offline environment — DESIGN.md §3).
+//!
+//! A string-backed [`Error`], the [`Context`] extension trait for
+//! `Result`/`Option`, and the [`bail!`]/[`ensure!`] macros — just enough
+//! surface for the CLI and the PJRT runtime plumbing, with the same call
+//! shapes as `anyhow` so the code reads familiarly.
+
+use std::fmt;
+
+/// String-backed error. Context is prepended `"{context}: {cause}"`, so
+/// `{e}` (and `{e:#}`) print the full chain in one line.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-shaped extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Replace/augment the error with `context: {original}`.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Lazily-built variant of [`Context::context`].
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)).into())
+    };
+}
+
+/// Bail unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse().context("not an integer")?;
+        Ok(v)
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = parse("zzz").unwrap_err();
+        let text = format!("{e}");
+        assert!(text.starts_with("not an integer:"), "{text}");
+        assert_eq!(parse("42").unwrap(), 42);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, String> = Ok(1);
+        let v = ok
+            .with_context(|| panic!("must not evaluate on Ok"))
+            .unwrap();
+        assert_eq!(v, 1);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            crate::ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                crate::bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        assert_eq!(format!("{}", f(101).unwrap_err()), "too big: 101");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn open() -> Result<String> {
+            let text = std::fs::read_to_string("/definitely/not/a/file/xyz")?;
+            Ok(text)
+        }
+        assert!(open().is_err());
+    }
+}

@@ -1,16 +1,22 @@
 //! Shared algorithm-engineering substrate: deterministic RNG, fast-reset
-//! accumulators, bucket queues, disjoint sets, timers and a minimal
-//! property-testing harness. All std-only (see DESIGN.md §3).
+//! accumulators, bucket queues, disjoint sets, timers, a minimal
+//! property-testing harness, error plumbing, and the deterministic
+//! thread pool every parallel phase runs on. All std-only (see
+//! DESIGN.md §3).
 
 pub mod bucket_queue;
+pub mod error;
 pub mod fast_reset;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod timer;
 pub mod union_find;
 
 pub use bucket_queue::BucketQueue;
+pub use error::{Context, Error};
 pub use fast_reset::{BitVec, FastResetArray};
+pub use pool::{ThreadPool, WorkerLocal};
 pub use rng::Rng;
 pub use timer::{Stats, Timer};
 pub use union_find::UnionFind;

@@ -1,0 +1,490 @@
+//! Shared deterministic thread pool — the runtime substrate for every
+//! parallel phase of the multilevel pipeline (std-only; rayon/crossbeam
+//! are not available offline, DESIGN.md §3).
+//!
+//! # The determinism contract
+//!
+//! Every pool primitive executes a **fixed logical schedule** whose
+//! result is a pure function of its inputs, never of the thread count or
+//! the OS scheduler:
+//!
+//! 1. Work is decomposed into tasks *before* dispatch, by the caller,
+//!    using only input sizes (e.g. fixed-size node chunks). The
+//!    decomposition must not depend on [`ThreadPool::threads`].
+//! 2. Tasks are claimed dynamically (idle workers steal the next chunk
+//!    index from a shared counter — cheap work stealing), but each task
+//!    writes only to its own result slot, so *which* worker ran a task
+//!    is unobservable.
+//! 3. Any randomness inside a task comes from an RNG stream seeded by
+//!    the task index (plus a caller-provided seed), never from a
+//!    worker-local or time-derived source.
+//! 4. Reductions over task results happen on the caller in task-index
+//!    order.
+//!
+//! Under this contract `threads = 1` and `threads = N` produce
+//! bit-identical results — the invariant `rust/tests/determinism.rs`
+//! enforces for the whole partitioning pipeline ("same seed + same
+//! config ⇒ byte-identical partition, regardless of thread count").
+//!
+//! # Implementation notes
+//!
+//! A pool of `threads` has `threads - 1` background workers; the calling
+//! thread participates as worker 0, so `threads = 1` runs everything
+//! inline (one uncontended lock, no worker dispatch). One job is active
+//! at a time — `run` serializes through an internal lock on *every*
+//! path, including the inline one, because the `WorkerLocal` contract
+//! (at most one task per worker id) must hold even for concurrent
+//! `run` calls on a shared pool. Tasks must therefore never submit to
+//! their *own* pool (nested use of a *different* pool is fine — the
+//! coordinator's repetition pool runs partitioners that own scoring
+//! pools).
+//!
+//! Borrowed closures are handed to the long-lived workers by erasing the
+//! closure lifetime. Soundness: `run` does not return until `remaining`
+//! hits zero, i.e. until every claimed task has finished; workers that
+//! observe the job afterwards only perform a failed claim
+//! (`next >= count`) and never touch the closure again. Panics inside
+//! tasks are caught per task (a panicking job must not take the worker —
+//! and every later job — down) and re-raised on the caller after the
+//! job drains.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// One in-flight job: a lifetime-erased task closure plus claim/progress
+/// counters. Held in an `Arc` so late-waking workers can do a failed
+/// claim safely after the job completed.
+struct JobCtrl {
+    /// `f(worker, task)` — lifetime-erased borrow of the caller's
+    /// closure; only dereferenced for successfully claimed task indices.
+    task: &'static (dyn Fn(usize, usize) + Sync),
+    count: usize,
+    next: AtomicUsize,
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+struct PoolState {
+    job: Option<Arc<JobCtrl>>,
+    /// Bumped per job so a worker never re-enters a job it has finished.
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new job (or shutdown).
+    work_cv: Condvar,
+    /// The caller waits here for `remaining == 0`.
+    done_cv: Condvar,
+}
+
+/// Lock that survives poisoning: a panicking *caller* (task panics are
+/// re-raised after the job drains) must not brick the pool for later
+/// jobs.
+fn lock(m: &Mutex<PoolState>) -> MutexGuard<'_, PoolState> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Deterministic work-sharing thread pool. See the module docs for the
+/// determinism contract.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Serializes `run` calls: a single job slot is active at a time.
+    run_lock: Mutex<()>,
+}
+
+impl ThreadPool {
+    /// Create a pool of `threads` total workers (including the calling
+    /// thread). `0` means [`std::thread::available_parallelism`];
+    /// `1` means fully inline sequential execution.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4)
+        } else {
+            threads
+        };
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|id| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("sclap-pool-{id}"))
+                    .spawn(move || worker_loop(shared, id))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool {
+            shared,
+            workers,
+            threads,
+            run_lock: Mutex::new(()),
+        }
+    }
+
+    /// Total worker count, including the calling thread.
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(worker, task)` for every `task in 0..count`, blocking
+    /// until all tasks finished. `worker` is a stable id in
+    /// `0..threads()` — at most one task runs per worker id at a time,
+    /// so it may index caller-owned scratch (see [`WorkerLocal`]).
+    ///
+    /// Tasks are claimed in index order from a shared counter; per the
+    /// module contract, `f`'s effect must depend only on `task`.
+    /// Panics (once, after the job drains) if any task panicked.
+    pub fn run<F>(&self, count: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if count == 0 {
+            return;
+        }
+        // One job at a time — also across the inline fast path below:
+        // WorkerLocal's &mut-per-worker-id contract relies on worker id
+        // 0 (the caller slot) never being active twice concurrently.
+        let _serial = self
+            .run_lock
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        if self.workers.is_empty() || count == 1 {
+            // Sequential fast path: same schedule, no worker dispatch.
+            for i in 0..count {
+                f(0, i);
+            }
+            return;
+        }
+
+        // Erase the closure lifetime; see module docs for the soundness
+        // argument (no dereference after `remaining == 0`).
+        let task: &(dyn Fn(usize, usize) + Sync) = &f;
+        let task: &'static (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(task) };
+        let ctrl = Arc::new(JobCtrl {
+            task,
+            count,
+            next: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(count),
+            panicked: AtomicBool::new(false),
+        });
+
+        {
+            let mut st = lock(&self.shared.state);
+            st.epoch += 1;
+            st.job = Some(ctrl.clone());
+            self.shared.work_cv.notify_all();
+        }
+
+        // The caller is worker 0.
+        work_on(&ctrl, 0, &self.shared);
+
+        let mut st = lock(&self.shared.state);
+        while ctrl.remaining.load(Ordering::Acquire) != 0 {
+            st = self
+                .shared
+                .done_cv
+                .wait(st)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+        st.job = None;
+        drop(st);
+
+        if ctrl.panicked.load(Ordering::Relaxed) {
+            panic!("sclap::util::pool: a pool task panicked (see stderr above)");
+        }
+    }
+
+    /// Deterministic parallel map: `out[i] = f(worker, i)`, results in
+    /// task order regardless of scheduling.
+    pub fn map_indexed<R, F>(&self, count: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, usize) -> R + Sync,
+    {
+        let mut out: Vec<Option<R>> = Vec::with_capacity(count);
+        out.resize_with(count, || None);
+        let slots = SendPtr(out.as_mut_ptr());
+        self.run(count, |worker, i| {
+            let r = f(worker, i);
+            // SAFETY: each task index is claimed exactly once, so slot
+            // `i` is written by exactly one thread; `out` outlives `run`
+            // (which blocks until every task completed).
+            unsafe { *slots.0.add(i) = Some(r) };
+        });
+        out.into_iter()
+            .map(|r| r.expect("pool task completed"))
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool")
+            .field("threads", &self.threads)
+            .finish()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw-pointer courier for disjoint slot writes from pool tasks.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+fn worker_loop(shared: Arc<Shared>, worker: usize) {
+    let mut last_epoch = 0u64;
+    loop {
+        let ctrl = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != last_epoch {
+                    if let Some(ctrl) = &st.job {
+                        last_epoch = st.epoch;
+                        break ctrl.clone();
+                    }
+                }
+                st = shared
+                    .work_cv
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        work_on(&ctrl, worker, &shared);
+    }
+}
+
+/// Claim-and-execute loop shared by workers and the calling thread.
+fn work_on(ctrl: &JobCtrl, worker: usize, shared: &Shared) {
+    loop {
+        let i = ctrl.next.fetch_add(1, Ordering::Relaxed);
+        if i >= ctrl.count {
+            return;
+        }
+        let result = catch_unwind(AssertUnwindSafe(|| (ctrl.task)(worker, i)));
+        if result.is_err() {
+            // Context for batch operators: which task blew up (callers
+            // add their own domain context, e.g. the coordinator prints
+            // the repetition seed before rethrowing).
+            eprintln!("sclap pool worker {worker}: task {i} panicked");
+            ctrl.panicked.store(true, Ordering::Relaxed);
+        }
+        if ctrl.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last task: wake the caller. Lock pairs the notify with the
+            // caller's checked wait so the wakeup cannot be lost.
+            let _st = lock(&shared.state);
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Per-worker mutable scratch for pool tasks (e.g. a fast-reset
+/// accumulator per worker instead of one allocation per chunk).
+///
+/// # Safety contract
+///
+/// [`WorkerLocal::get_mut`] hands out `&mut T` indexed by the worker id
+/// a pool primitive passed to the task closure. The pool guarantees at
+/// most one task runs per worker id at a time, which makes the access
+/// exclusive. Do not call `get_mut` with anything other than the worker
+/// id of the current task.
+pub struct WorkerLocal<T> {
+    slots: Vec<std::cell::UnsafeCell<T>>,
+}
+
+// SAFETY: access is partitioned by worker id (one thread per id at a
+// time, enforced by the pool); T crosses thread boundaries, hence Send.
+unsafe impl<T: Send> Sync for WorkerLocal<T> {}
+
+impl<T> WorkerLocal<T> {
+    /// One slot per worker, built by `init` (called `workers` times).
+    pub fn new<F: FnMut() -> T>(workers: usize, mut init: F) -> Self {
+        WorkerLocal {
+            slots: (0..workers.max(1))
+                .map(|_| std::cell::UnsafeCell::new(init()))
+                .collect(),
+        }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Whether the scratch set is empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Exclusive access to worker `worker`'s slot.
+    ///
+    /// # Safety
+    /// `worker` must be the worker id passed by the pool to the calling
+    /// task (or the pool must be otherwise quiescent); two simultaneous
+    /// calls with the same id are undefined behavior.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, worker: usize) -> &mut T {
+        &mut *self.slots[worker].get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(n, |_w, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        for threads in [1usize, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let out = pool.map_indexed(257, |_w, i| i * i);
+            assert_eq!(out.len(), 257);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        // The determinism contract at the pool level: same task function,
+        // different pool sizes, identical output.
+        let compute = |i: usize| {
+            let mut rng = crate::util::rng::Rng::new(i as u64);
+            (0..10).map(|_| rng.next_u64()).fold(0u64, u64::wrapping_add)
+        };
+        let reference: Vec<u64> = (0..100).map(compute).collect();
+        for threads in [1usize, 2, 3, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let out = pool.map_indexed(100, |_w, i| compute(i));
+            assert_eq!(out, reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn worker_ids_are_in_range_and_exclusive() {
+        let threads = 4;
+        let pool = ThreadPool::new(threads);
+        let in_use: Vec<AtomicUsize> = (0..threads).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(500, |w, _i| {
+            assert!(w < threads);
+            let prev = in_use[w].fetch_add(1, Ordering::SeqCst);
+            assert_eq!(prev, 0, "worker id {w} used concurrently");
+            std::thread::yield_now();
+            in_use[w].fetch_sub(1, Ordering::SeqCst);
+        });
+    }
+
+    #[test]
+    fn worker_local_scratch_accumulates() {
+        let threads = 4;
+        let pool = ThreadPool::new(threads);
+        let scratch: WorkerLocal<u64> = WorkerLocal::new(threads, || 0);
+        pool.run(100, |w, i| {
+            let slot = unsafe { scratch.get_mut(w) };
+            *slot += i as u64;
+        });
+        let total: u64 = (0..threads)
+            .map(|w| unsafe { *scratch.get_mut(w) })
+            .sum();
+        assert_eq!(total, (0..100u64).sum());
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, |_w, i| {
+                assert!(i != 7, "task 7 exploded");
+            });
+        }));
+        assert!(r.is_err());
+        // The pool must still execute later jobs.
+        let out = pool.map_indexed(8, |_w, i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn zero_tasks_and_auto_threads() {
+        let pool = ThreadPool::new(0);
+        assert!(pool.threads() >= 1);
+        pool.run(0, |_w, _i| panic!("must not run"));
+    }
+
+    #[test]
+    fn single_thread_is_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let main_id = std::thread::current().id();
+        pool.run(10, |w, _i| {
+            assert_eq!(w, 0);
+            assert_eq!(std::thread::current().id(), main_id);
+        });
+    }
+
+    #[test]
+    fn drop_joins_quickly() {
+        let pool = ThreadPool::new(6);
+        pool.run(10, |_w, _i| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn nested_distinct_pools() {
+        // The coordinator pattern: outer repetition pool, inner per-job
+        // pools. Nested *distinct* pools must compose without deadlock.
+        let outer = ThreadPool::new(3);
+        let sums = outer.map_indexed(6, |_w, i| {
+            let inner = ThreadPool::new(2);
+            inner
+                .map_indexed(20, |_iw, j| (i * j) as u64)
+                .into_iter()
+                .sum::<u64>()
+        });
+        for (i, s) in sums.iter().enumerate() {
+            assert_eq!(*s, (0..20).map(|j| (i * j) as u64).sum::<u64>());
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Integration: the pool determinism contract, end to end.
+//!
+//! The hard invariant of the thread-pool runtime (`util::pool` module
+//! docs): **same seed + same config ⇒ byte-identical `Partition.blocks`
+//! for `threads ∈ {1, 2, 4}`** — the thread count is an execution knob,
+//! never an algorithmic one.
+//!
+//! Coverage is budgeted for CI wall-clock (tier-1 runs tests in debug):
+//! the *full* 22-preset ladder sweeps the two smallest instances, a
+//! representative preset subset (covering both coarsening schemes, both
+//! IP families, every refinement kind, V-cycles/ensembles and the
+//! tolerant baseline) sweeps the whole tiny suite, and the synchronous
+//! parallel-refinement engine gets its own sweep since it is the one
+//! configuration whose hot loop actually fans out on small inputs.
+
+use sclap::generators::instances::{by_name, tiny_suite};
+use sclap::graph::csr::Graph;
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::partitioning::multilevel::MultilevelPartitioner;
+
+fn blocks(cfg: &PartitionConfig, g: &Graph, seed: u64) -> Vec<u32> {
+    MultilevelPartitioner::new(cfg.clone())
+        .partition(g, seed)
+        .partition
+        .blocks
+}
+
+/// Run `cfg` at threads ∈ {1, 2, 4} and assert byte-identical blocks.
+fn assert_thread_invariant(
+    label: &str,
+    instance: &str,
+    mut cfg: PartitionConfig,
+    g: &Graph,
+    seed: u64,
+) {
+    let mut reference: Option<Vec<u32>> = None;
+    for threads in [1usize, 2, 4] {
+        cfg.threads = threads;
+        let b = blocks(&cfg, g, seed);
+        match &reference {
+            None => reference = Some(b),
+            Some(r) => assert_eq!(
+                r, &b,
+                "{label} on {instance}: threads={threads} diverged from threads=1"
+            ),
+        }
+    }
+}
+
+#[test]
+fn every_preset_identical_across_thread_counts() {
+    for name in ["karate", "tiny-rmat"] {
+        let g = by_name(name).unwrap().build();
+        let k = 4.min(g.n());
+        for preset in Preset::ALL {
+            assert_thread_invariant(
+                preset.name(),
+                name,
+                PartitionConfig::preset(preset, k),
+                &g,
+                42,
+            );
+        }
+    }
+}
+
+#[test]
+fn representative_presets_on_the_full_tiny_suite() {
+    let subset = [
+        Preset::CFast,
+        Preset::UFast,
+        Preset::CEco,
+        Preset::CEcoVB,
+        Preset::CFastVBE,
+        Preset::KMetisLike,
+        Preset::ScotchLike,
+    ];
+    for spec in tiny_suite() {
+        let g = spec.build();
+        let k = 4.min(g.n());
+        for preset in subset {
+            assert_thread_invariant(
+                preset.name(),
+                spec.name,
+                PartitionConfig::preset(preset, k),
+                &g,
+                7,
+            );
+        }
+    }
+}
+
+#[test]
+fn same_seed_reruns_are_identical() {
+    for spec in tiny_suite() {
+        let g = spec.build();
+        let mut cfg = PartitionConfig::preset(Preset::UFast, 4.min(g.n()));
+        cfg.threads = 4;
+        assert_eq!(
+            blocks(&cfg, &g, 7),
+            blocks(&cfg, &g, 7),
+            "{}: same-seed rerun differed",
+            spec.name
+        );
+        // ...and a different seed really is a different run (guards
+        // against the seed being silently ignored).
+        if g.n() > 40 {
+            assert_ne!(
+                blocks(&cfg, &g, 7),
+                blocks(&cfg, &g, 8),
+                "{}: seeds 7 and 8 gave identical partitions",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_refinement_engine_thread_invariant() {
+    // n = 2000 spans several scoring chunks, so the synchronous rounds
+    // genuinely fan out across the pool here.
+    let g = by_name("tiny-ba").unwrap().build();
+    for preset in [Preset::CFast, Preset::UFast, Preset::CEco] {
+        let mut cfg = PartitionConfig::preset(preset, 4);
+        cfg.parallel_refinement = true;
+        assert_thread_invariant(
+            preset.name(),
+            "tiny-ba (parallel refinement)",
+            cfg,
+            &g,
+            99,
+        );
+    }
+}

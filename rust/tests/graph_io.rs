@@ -1,0 +1,156 @@
+//! Integration: graph file I/O — format round-trips on generated
+//! instances plus malformed-input hardening (bad headers, out-of-range
+//! vertices, truncated binaries must all surface as `Err`, never as a
+//! panic or an abort).
+
+use sclap::graph::csr::Graph;
+use sclap::graph::io::{
+    read_binary, read_edge_list, read_metis, write_binary, write_edge_list, write_metis,
+};
+use sclap::util::rng::Rng;
+use std::io::Cursor;
+
+fn weighted_sample() -> Graph {
+    // A generated graph with non-trivial node weights: contract a BA
+    // graph once so coarse node/edge weights exceed 1.
+    let mut rng = Rng::new(42);
+    let g = sclap::generators::barabasi_albert(400, 3, &mut rng);
+    let (clustering, _) = sclap::clustering::label_propagation::size_constrained_lpa(
+        &g,
+        12,
+        &Default::default(),
+        None,
+        None,
+        &mut rng,
+    );
+    sclap::coarsening::contract::contract(&g, &clustering).coarse
+}
+
+#[test]
+fn metis_roundtrip_weighted_generated() {
+    let g = weighted_sample();
+    assert!(g.max_node_weight() > 1, "sample should be weighted");
+    let mut buf = Vec::new();
+    write_metis(&g, &mut buf).unwrap();
+    let g2 = read_metis(Cursor::new(buf)).unwrap();
+    assert_eq!(g, g2);
+    assert!(g2.validate().is_ok());
+}
+
+#[test]
+fn binary_roundtrip_weighted_generated() {
+    let g = weighted_sample();
+    let mut buf = Vec::new();
+    write_binary(&g, &mut buf).unwrap();
+    let g2 = read_binary(Cursor::new(buf)).unwrap();
+    assert_eq!(g, g2);
+}
+
+#[test]
+fn edge_list_roundtrip_preserves_topology() {
+    let mut rng = Rng::new(7);
+    let g = sclap::generators::erdos_renyi(300, 900, &mut rng);
+    let mut buf = Vec::new();
+    write_edge_list(&g, &mut buf).unwrap();
+    let g2 = read_edge_list(Cursor::new(buf), Some(g.n())).unwrap();
+    assert_eq!(g.n(), g2.n());
+    assert_eq!(g.m(), g2.m());
+    assert_eq!(g.total_edge_weight(), g2.total_edge_weight());
+}
+
+#[test]
+fn metis_malformed_inputs_error() {
+    // bad header tokens
+    assert!(read_metis(Cursor::new("x y\n")).is_err());
+    // header too short
+    assert!(read_metis(Cursor::new("5\n")).is_err());
+    // neighbor id out of range (node 3 in a 2-node graph)
+    assert!(read_metis(Cursor::new("2 1\n3\n\n")).is_err());
+    // neighbor id zero (METIS is 1-indexed)
+    assert!(read_metis(Cursor::new("2 1\n0\n\n")).is_err());
+    // fewer adjacency lines than the header promises
+    assert!(read_metis(Cursor::new("3 2\n2\n")).is_err());
+    // more adjacency lines than nodes
+    assert!(read_metis(Cursor::new("1 0\n\n2\n")).is_err());
+    // non-integer token
+    assert!(read_metis(Cursor::new("2 1\ntwo\n1\n")).is_err());
+    // missing node weight with fmt=10
+    assert!(read_metis(Cursor::new("2 1 10\n\n\n")).is_err());
+}
+
+#[test]
+fn edge_list_malformed_inputs_error() {
+    assert!(read_edge_list(Cursor::new("0\n"), None).is_err()); // lone endpoint
+    assert!(read_edge_list(Cursor::new("0 x\n"), None).is_err()); // bad v
+    assert!(read_edge_list(Cursor::new("0 1 w\n"), None).is_err()); // bad weight
+}
+
+#[test]
+fn binary_truncations_error_not_panic() {
+    let g = weighted_sample();
+    let mut buf = Vec::new();
+    write_binary(&g, &mut buf).unwrap();
+    // Truncate at the magic, inside the header, inside the node
+    // weights, inside the degree table and inside the arc stream.
+    for cut in [0usize, 4, 8, 12, 20, 24 + 3, buf.len() / 3, buf.len() - 5] {
+        let r = read_binary(Cursor::new(buf[..cut].to_vec()));
+        assert!(r.is_err(), "truncation at {cut} bytes must fail");
+    }
+}
+
+#[test]
+fn binary_bad_magic_and_corrupt_header_error() {
+    assert!(read_binary(Cursor::new(b"WRONGMAG".to_vec())).is_err());
+    // Valid magic, absurd node count, no payload: must be a clean error
+    // (the reader clamps pre-reservation, so no allocation abort).
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"SCLAPG1\0");
+    buf.extend_from_slice(&u64::MAX.to_le_bytes()); // n
+    buf.extend_from_slice(&0u64.to_le_bytes()); // arcs
+    assert!(read_binary(Cursor::new(buf)).is_err());
+}
+
+#[test]
+fn binary_out_of_range_target_errors() {
+    // Hand-build: n=2, arcs=2, symmetric edge, then corrupt one target.
+    let g = sclap::graph::builder::GraphBuilder::new(2).edge(0, 1).build();
+    let mut buf = Vec::new();
+    write_binary(&g, &mut buf).unwrap();
+    // Layout: magic(8) n(8) arcs(8) node_w(2*8) degrees(2*8) then arcs
+    // as (target, weight) pairs — corrupt the first target.
+    let first_target_at = 8 + 8 + 8 + 16 + 16;
+    buf[first_target_at..first_target_at + 8].copy_from_slice(&99u64.to_le_bytes());
+    assert!(read_binary(Cursor::new(buf)).is_err());
+}
+
+#[test]
+fn binary_negative_weights_error() {
+    let g = sclap::graph::builder::GraphBuilder::new(2).edge(0, 1).build();
+    let base = {
+        let mut buf = Vec::new();
+        write_binary(&g, &mut buf).unwrap();
+        buf
+    };
+    // Node weight with the sign bit set (would become negative as i64).
+    let mut buf = base.clone();
+    buf[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(read_binary(Cursor::new(buf)).is_err());
+    // First arc's edge weight: zero and sign-bit-set are both invalid.
+    let weight_at = 8 + 8 + 8 + 16 + 16 + 8;
+    for bad in [0u64, u64::MAX] {
+        let mut buf = base.clone();
+        buf[weight_at..weight_at + 8].copy_from_slice(&bad.to_le_bytes());
+        assert!(read_binary(Cursor::new(buf)).is_err(), "weight {bad:#x}");
+    }
+}
+
+#[test]
+fn binary_degree_sum_mismatch_errors() {
+    let g = sclap::graph::builder::GraphBuilder::new(2).edge(0, 1).build();
+    let mut buf = Vec::new();
+    write_binary(&g, &mut buf).unwrap();
+    // Corrupt the degree table: node 0 now claims degree 5.
+    let degrees_at = 8 + 8 + 8 + 16;
+    buf[degrees_at..degrees_at + 8].copy_from_slice(&5u64.to_le_bytes());
+    assert!(read_binary(Cursor::new(buf)).is_err());
+}

@@ -6,12 +6,16 @@ use sclap::clustering::ensemble::{ensemble_sclap, overlay_clustering};
 use sclap::clustering::label_propagation::{
     size_constrained_lpa, LpaConfig, LpaMode, NodeOrdering,
 };
-use sclap::coarsening::contract::{contract, project_partition};
+use sclap::clustering::parallel_lpa::parallel_sclap;
+use sclap::coarsening::contract::{contract, contract_parallel, project_partition};
 use sclap::generators;
 use sclap::graph::csr::{Graph, Weight};
 use sclap::partitioning::config::{PartitionConfig, Preset};
 use sclap::partitioning::metrics::cut_value;
 use sclap::partitioning::multilevel::MultilevelPartitioner;
+use sclap::partitioning::partition::Partition;
+use sclap::refinement::lpa_refine::parallel_lpa_refine;
+use sclap::util::pool::ThreadPool;
 use sclap::util::proptest::{for_random_cases, PropConfig};
 use sclap::util::rng::Rng;
 
@@ -176,6 +180,91 @@ fn prop_multilevel_valid_output() {
             preset.name(),
             r.partition.block_weights
         );
+    });
+}
+
+/// Pool invariant A: parallel SCLaP ≡ sequential SCLaP — the 1-thread
+/// pool executes the identical logical schedule, so labels match the
+/// multi-thread pools bit for bit, per seed. And the size constraint
+/// holds after *every* round (checked by truncating the round budget).
+#[test]
+fn prop_parallel_sclap_thread_invariant_and_bounded() {
+    let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+    for_random_cases(&PropConfig::quick(), |rng, size| {
+        let g = arb_graph(rng, size);
+        let upper = g.max_node_weight().max(rng.range(2, 16) as Weight);
+        let seed = rng.next_u64();
+        // Size constraint after every round: run the same seed with
+        // every prefix of the round budget.
+        for rounds in 1..=3 {
+            let c = parallel_sclap(&g, upper, rounds, &pools[0], &mut Rng::new(seed));
+            assert!(
+                c.respects_bound(upper),
+                "bound {upper} violated after round {rounds}: {:?}",
+                c.cluster_weights.iter().max()
+            );
+        }
+        let sequential = parallel_sclap(&g, upper, 5, &pools[0], &mut Rng::new(seed));
+        assert!(sequential.respects_bound(upper));
+        for pool in &pools[1..] {
+            let parallel = parallel_sclap(&g, upper, 5, pool, &mut Rng::new(seed));
+            assert_eq!(
+                sequential.labels,
+                parallel.labels,
+                "pool size {} diverged from sequential",
+                pool.threads()
+            );
+        }
+    });
+}
+
+/// Pool invariant B: parallel contraction is bit-identical to the
+/// sequential contraction for every pool size.
+#[test]
+fn prop_parallel_contract_equals_sequential() {
+    let pools = [ThreadPool::new(2), ThreadPool::new(4)];
+    for_random_cases(&PropConfig::quick(), |rng, size| {
+        let g = arb_graph(rng, size);
+        let upper = g.max_node_weight().max(rng.range(2, 12) as Weight);
+        let (c, _) = size_constrained_lpa(&g, upper, &LpaConfig::default(), None, None, rng);
+        let seq = contract(&g, &c);
+        for pool in &pools {
+            let par = contract_parallel(&g, &c, pool);
+            assert_eq!(seq.coarse, par.coarse, "pool size {}", pool.threads());
+            assert_eq!(seq.map, par.map);
+        }
+    });
+}
+
+/// Pool invariant C: parallel LPA refinement is thread-count-invariant,
+/// never overflows a feasible bound, and never empties a block.
+#[test]
+fn prop_parallel_refine_safety_and_invariance() {
+    let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+    for_random_cases(&PropConfig::quick(), |rng, size| {
+        let g = arb_graph(rng, size);
+        let k = rng.range(2, 5).min(g.n());
+        let blocks: Vec<u32> = (0..g.n()).map(|v| (v % k) as u32).collect();
+        let per_block = (g.total_node_weight() as f64 / k as f64).ceil() as Weight;
+        let lmax = per_block + g.max_node_weight() + rng.range(0, 5) as Weight;
+        let seed = rng.next_u64();
+        let mut reference: Option<Vec<u32>> = None;
+        for pool in &pools {
+            let mut p = Partition::from_blocks(&g, k, blocks.clone());
+            parallel_lpa_refine(&g, &mut p, lmax, 5, pool, &mut Rng::new(seed));
+            assert!(
+                p.max_block_weight() <= lmax,
+                "pool {} overflowed: {:?} > {lmax}",
+                pool.threads(),
+                p.block_weights
+            );
+            assert_eq!(p.nonempty_blocks(), k, "block vanished");
+            assert!(p.validate(&g).is_ok());
+            match &reference {
+                None => reference = Some(p.blocks),
+                Some(r) => assert_eq!(r, &p.blocks, "pool size {}", pool.threads()),
+            }
+        }
     });
 }
 
