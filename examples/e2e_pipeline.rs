@@ -29,7 +29,7 @@ use sclap::partitioning::config::{PartitionConfig, Preset};
 use sclap::runtime::dense_lpa::offload_sclap;
 use sclap::runtime::pjrt::Runtime;
 use sclap::util::error::Result;
-use sclap::util::pool::ThreadPool;
+use sclap::util::exec::ExecutionCtx;
 use sclap::util::rng::Rng;
 use sclap::util::timer::Timer;
 use std::sync::Arc;
@@ -126,8 +126,8 @@ fn main() -> Result<()> {
     };
     let dev_clustering = offloaded.unwrap_or_else(|| {
         println!("    falling back to the pool-parallel synchronous engine");
-        let pool = ThreadPool::new(0);
-        parallel_sclap(&coarse, u_dev, 10, &pool, &mut rng)
+        let ctx = ExecutionCtx::new(0);
+        parallel_sclap(&coarse, u_dev, 10, &ctx, &mut rng)
     });
     println!(
         "    synchronous clustering: {} clusters, cut {}, bound ok: {} ({:.2}s)",

@@ -1,15 +1,22 @@
 //! Microbenchmarks of the L3 hot path: SCLaP round throughput (edges/s),
-//! orderings, active nodes, contraction, and the parallel variant.
-//! These feed EXPERIMENTS.md §Perf (target: ≥50M edges/s traversal).
+//! orderings, active nodes, contraction, and the parallel variants —
+//! including the coloring-based parallel *asynchronous* LPA
+//! (arXiv 1404.4797 engine, `clustering::async_lpa`).
+//! These feed EXPERIMENTS.md §Perf (target: ≥50M edges/s traversal) and
+//! emit machine-readable results to `BENCH_lpa_micro.json`
+//! (`bench::harness::JsonReport`).
 //!
 //!     cargo bench --bench lpa_micro [-- --full]
 
+use sclap::bench::harness::JsonReport;
+use sclap::clustering::async_lpa::parallel_async_sclap;
 use sclap::clustering::label_propagation::{
     size_constrained_lpa, LpaConfig, NodeOrdering,
 };
 use sclap::clustering::parallel_lpa::parallel_sclap;
 use sclap::coarsening::contract::{contract, contract_parallel};
 use sclap::graph::csr::Graph;
+use sclap::util::exec::ExecutionCtx;
 use sclap::util::pool::ThreadPool;
 use sclap::util::rng::Rng;
 use sclap::util::timer::Timer;
@@ -36,6 +43,7 @@ fn main() {
     let quick = !std::env::args().any(|a| a == "--full");
     let (scale, m) = if quick { (15, 500_000) } else { (18, 4_000_000) };
     let iters = if quick { 3 } else { 5 };
+    let mut report = JsonReport::new("lpa_micro");
 
     let mut rng = Rng::new(1);
     println!("building R-MAT scale {scale}, {m} edges...");
@@ -43,6 +51,16 @@ fn main() {
         scale, m, 0.57, 0.19, 0.19, &mut rng,
     ));
     println!("n={} m={}\n", g.n(), g.m());
+    report.record(
+        "instance",
+        &[
+            ("kind", "rmat".into()),
+            ("scale", (scale as usize).into()),
+            ("n", g.n().into()),
+            ("m", g.m().into()),
+            ("quick", quick.into()),
+        ],
+    );
     let upper = (g.total_node_weight() / 64).max(g.max_node_weight());
 
     // one full SCLaP invocation (ℓ=3 rounds max) per measurement
@@ -54,20 +72,28 @@ fn main() {
         let mut cfg = LpaConfig::clustering(3, ordering);
         cfg.active_nodes = active;
         let mut seed = 0u64;
-        bench(label, 3 * g.m(), iters, || {
+        let secs = bench(label, 3 * g.m(), iters, || {
             seed += 1;
             let mut r = Rng::new(seed);
             let (c, rounds) = size_constrained_lpa(&g, upper, &cfg, None, None, &mut r);
             c.num_clusters as u64 + rounds as u64
         });
+        report.record(
+            "sequential_sclap",
+            &[
+                ("label", label.into()),
+                ("secs", secs.into()),
+                ("medges_per_s", (3.0 * g.m() as f64 / secs / 1e6).into()),
+            ],
+        );
     }
 
-    // Pool-parallel synchronous rounds (paper §6 future work), now on
-    // the shared deterministic thread pool. Same seed ⇒ same clustering
-    // for every pool size; only wall-clock changes.
+    // Pool-parallel synchronous rounds (paper §6 future work) on the
+    // shared deterministic context. Same seed ⇒ same clustering for
+    // every pool size; only wall-clock changes.
     let mut secs_by_threads: Vec<(usize, f64)> = Vec::new();
     for threads in [1usize, 2, 4, 8] {
-        let pool = ThreadPool::new(threads);
+        let ctx = ExecutionCtx::new(threads);
         let mut seed = 100u64;
         let secs = bench(
             &format!("parallel sclap l=3 ({threads} threads, pool)"),
@@ -76,17 +102,98 @@ fn main() {
             || {
                 seed += 1;
                 let mut r = Rng::new(seed);
-                let c = parallel_sclap(&g, upper, 3, &pool, &mut r);
+                let c = parallel_sclap(&g, upper, 3, &ctx, &mut r);
                 c.num_clusters as u64
             },
         );
         secs_by_threads.push((threads, secs));
+        report.record(
+            "sync_parallel_sclap",
+            &[("threads", threads.into()), ("secs", secs.into())],
+        );
     }
     let t1 = secs_by_threads[0].1;
     for &(threads, secs) in &secs_by_threads[1..] {
         println!(
             "    -> speedup {threads} threads vs 1: {:.2}x (target at 4: >= 1.5x)",
             t1 / secs
+        );
+        report.record(
+            "sync_parallel_sclap_speedup",
+            &[("threads", threads.into()), ("speedup", (t1 / secs).into())],
+        );
+    }
+
+    // The coloring-based parallel *asynchronous* coarsening round
+    // (arXiv 1404.4797): same move rule as the sequential engine,
+    // independent sets processed in parallel. This is the acceptance
+    // metric of ISSUE 2: >= 1.3x at 4 threads on the largest micro
+    // instance, recorded in BENCH_lpa_micro.json.
+    let mut async_secs: Vec<(usize, f64)> = Vec::new();
+    {
+        let cfg = LpaConfig::clustering(3, NodeOrdering::Degree);
+        // Quality of the engine — identical for every pool size (the
+        // determinism contract), so it is computed once, untimed, and
+        // kept out of the throughput measurements below.
+        {
+            let ctx = ExecutionCtx::new(1);
+            let (c, _) =
+                parallel_async_sclap(&g, upper, &cfg, None, &ctx, &mut Rng::new(301));
+            report.record(
+                "async_lpa_quality",
+                &[
+                    ("num_clusters", c.num_clusters.into()),
+                    ("cut", c.cut(&g).into()),
+                ],
+            );
+        }
+        for threads in [1usize, 2, 4, 8] {
+            let ctx = ExecutionCtx::new(threads);
+            let mut seed = 300u64;
+            let secs = bench(
+                &format!("async-lpa coarsening l=3 ({threads} threads)"),
+                3 * g.m(),
+                iters,
+                || {
+                    seed += 1;
+                    let mut r = Rng::new(seed);
+                    let (c, _) =
+                        parallel_async_sclap(&g, upper, &cfg, None, &ctx, &mut r);
+                    c.num_clusters as u64
+                },
+            );
+            async_secs.push((threads, secs));
+            report.record(
+                "async_lpa",
+                &[
+                    ("threads", threads.into()),
+                    ("secs", secs.into()),
+                    ("medges_per_s", (3.0 * g.m() as f64 / secs / 1e6).into()),
+                ],
+            );
+        }
+        let a1 = async_secs[0].1;
+        let mut speedup4 = 0.0f64;
+        for &(threads, secs) in &async_secs[1..] {
+            let speedup = a1 / secs;
+            if threads == 4 {
+                speedup4 = speedup;
+            }
+            println!(
+                "    -> async-lpa speedup {threads} threads vs 1: {speedup:.2}x (target at 4: >= 1.3x)"
+            );
+            report.record(
+                "async_lpa_speedup",
+                &[("threads", threads.into()), ("speedup", speedup.into())],
+            );
+        }
+        report.record(
+            "async_lpa_summary",
+            &[
+                ("speedup_4_threads", speedup4.into()),
+                ("target", 1.3.into()),
+                ("meets_target", (speedup4 >= 1.3).into()),
+            ],
         );
     }
 
@@ -109,19 +216,32 @@ fn main() {
             contract_parallel(&g, &clustering, &pool).coarse.n() as u64
         });
         println!("    -> contraction speedup 4 threads: {:.2}x", seq / par);
+        report.record(
+            "contraction",
+            &[
+                ("secs_sequential", seq.into()),
+                ("secs_parallel_4", par.into()),
+                ("speedup", (seq / par).into()),
+            ],
+        );
     }
 
     // matching baseline for contrast
     {
         let mut seed = 200u64;
-        bench("heavy-edge matching (+2hop)", g.m(), iters, || {
+        let secs = bench("heavy-edge matching (+2hop)", g.m(), iters, || {
             seed += 1;
             let mut r = Rng::new(seed);
             let c = sclap::coarsening::matching::heavy_edge_matching(&g, upper, true, &mut r);
             c.num_clusters as u64
         });
+        report.record("matching_baseline", &[("secs", secs.into())]);
     }
 
+    match report.write() {
+        Ok(path) => println!("\nwrote machine-readable results to {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench JSON: {e}"),
+    }
     println!("\ntarget (EXPERIMENTS.md §Perf): >=50M edges/s for the sequential");
     println!("sclap round on this class of hardware (paper-era machine ~25M).");
 }

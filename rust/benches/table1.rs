@@ -1,15 +1,18 @@
 //! Table 1 reproduction: basic properties of the benchmark instance
 //! suite (our generated stand-ins for the paper's collection — each row
-//! names the paper instance it models; see DESIGN.md §3).
+//! names the paper instance it models; see DESIGN.md §3). Emits
+//! machine-readable rows to `BENCH_table1.json`.
 //!
 //!     cargo bench --bench table1 [-- --full for the full protocol]
 
-use sclap::bench::harness::{BenchOpts, TableWriter};
+use sclap::bench::harness::{BenchOpts, JsonReport, TableWriter};
 use sclap::generators::instances::{huge_suite, large_suite, tiny_suite};
 use sclap::util::rng::Rng;
+use sclap::util::timer::Timer;
 
 fn main() {
     let opts = BenchOpts::from_env();
+    let mut report = JsonReport::new("table1");
     println!("== Table 1: instance suite properties ==");
     println!("(stand-ins for the paper's SNAP/LAW/DIMACS graphs; `models` = original)\n");
 
@@ -27,6 +30,7 @@ fn main() {
 
     let suite = if opts.quick { tiny_suite() } else { large_suite() };
     for spec in suite {
+        let t = Timer::start();
         let g = spec.build();
         let mut rng = Rng::new(1);
         let s = sclap::graph::stats::compute_stats(&g, &mut rng);
@@ -40,6 +44,20 @@ fn main() {
             s.approx_diameter.to_string(),
             format!("{:.2}", s.clustering_coeff),
         ]);
+        report.record(
+            "instance",
+            &[
+                ("instance", spec.name.into()),
+                ("models", spec.models.into()),
+                ("n", s.n.into()),
+                ("m", s.m.into()),
+                ("max_degree", s.max_degree.into()),
+                ("degree_gini", s.degree_gini.into()),
+                ("approx_diameter", s.approx_diameter.into()),
+                ("clustering_coeff", s.clustering_coeff.into()),
+                ("build_and_stats_secs", t.elapsed_s().into()),
+            ],
+        );
     }
 
     if !opts.quick {
@@ -53,6 +71,10 @@ fn main() {
                 format!("seed {}", spec.seed),
             ]);
         }
+    }
+    match report.write() {
+        Ok(path) => println!("\nwrote machine-readable results to {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench JSON: {e}"),
     }
     println!("\nexpectation (paper): web/social instances show high degree gini");
     println!("(scale-free) and small diameter (small-world); the mesh contrast");

@@ -1,8 +1,14 @@
 //! Table-formatting and aggregation helpers for the paper-reproduction
 //! benches (criterion is unavailable offline; these benches are custom
-//! `harness = false` binaries).
+//! `harness = false` binaries), plus the machine-readable result
+//! writer: every bench that goes through [`JsonReport`] leaves a
+//! `BENCH_<name>.json` behind (cut, imbalance, wall-time per config),
+//! so successive commits accumulate a perf trajectory that scripts can
+//! diff — no more copy-pasting numbers out of stdout.
 
 use crate::util::timer::Stats;
+use std::io::Write;
+use std::path::{Path, PathBuf};
 
 /// Common bench options parsed from `cargo bench -- [--full] [--reps N]`.
 #[derive(Debug, Clone)]
@@ -49,6 +55,146 @@ impl BenchOpts {
         } else {
             vec![2, 4, 8, 16, 32, 64]
         }
+    }
+}
+
+/// One JSON scalar (the std-only subset the bench records need).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Int(i64),
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl From<i64> for JsonValue {
+    fn from(x: i64) -> Self {
+        JsonValue::Int(x)
+    }
+}
+impl From<usize> for JsonValue {
+    fn from(x: usize) -> Self {
+        JsonValue::Int(x as i64)
+    }
+}
+impl From<f64> for JsonValue {
+    fn from(x: f64) -> Self {
+        JsonValue::Num(x)
+    }
+}
+impl From<&str> for JsonValue {
+    fn from(x: &str) -> Self {
+        JsonValue::Str(x.to_string())
+    }
+}
+impl From<String> for JsonValue {
+    fn from(x: String) -> Self {
+        JsonValue::Str(x)
+    }
+}
+impl From<bool> for JsonValue {
+    fn from(x: bool) -> Self {
+        JsonValue::Bool(x)
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_value(v: &JsonValue) -> String {
+    match v {
+        JsonValue::Int(x) => x.to_string(),
+        // JSON has no NaN/∞: emit null so consumers fail loudly instead
+        // of parsing garbage.
+        JsonValue::Num(x) if !x.is_finite() => "null".to_string(),
+        JsonValue::Num(x) => format!("{x}"),
+        JsonValue::Str(s) => format!("\"{}\"", escape_json(s)),
+        JsonValue::Bool(b) => b.to_string(),
+    }
+}
+
+/// Machine-readable bench results. Records are flat key→scalar maps
+/// tagged with a section name; [`JsonReport::write`] emits
+/// `BENCH_<name>.json` into `SCLAP_BENCH_DIR` (default: the current
+/// directory, i.e. `rust/` under `cargo bench`).
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    name: String,
+    records: Vec<Vec<(String, JsonValue)>>,
+}
+
+impl JsonReport {
+    pub fn new(name: &str) -> JsonReport {
+        JsonReport {
+            name: name.to_string(),
+            records: Vec::new(),
+        }
+    }
+
+    /// Append one record; `section` groups related records (e.g. one
+    /// per thread count of the same engine).
+    pub fn record(&mut self, section: &str, fields: &[(&str, JsonValue)]) {
+        let mut rec: Vec<(String, JsonValue)> =
+            vec![("section".to_string(), JsonValue::from(section))];
+        rec.extend(fields.iter().map(|(k, v)| (k.to_string(), v.clone())));
+        self.records.push(rec);
+    }
+
+    /// Serialize the whole report (stable field order = insertion order).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\n  \"name\": \"{}\",\n  \"records\": [\n",
+            escape_json(&self.name)
+        ));
+        for (i, rec) in self.records.iter().enumerate() {
+            out.push_str("    {");
+            for (j, (k, v)) in rec.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("\"{}\": {}", escape_json(k), render_value(v)));
+            }
+            out.push('}');
+            if i + 1 < self.records.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// `BENCH_<name>.json` under `dir`.
+    pub fn path_in(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Write the report into `dir`; returns the file path.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = self.path_in(dir);
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.to_json().as_bytes())?;
+        Ok(path)
+    }
+
+    /// Write to `SCLAP_BENCH_DIR` (default `.`); returns the file path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("SCLAP_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_to(Path::new(&dir))
     }
 }
 
@@ -137,5 +283,46 @@ mod tests {
         let t = TableWriter::new(&[("a", 6), ("b", 8)]);
         t.header();
         t.row(&["1".into(), "x".into()]);
+    }
+
+    #[test]
+    fn json_report_serializes() {
+        let mut r = JsonReport::new("demo");
+        r.record(
+            "lpa",
+            &[
+                ("threads", 4usize.into()),
+                ("secs", 0.5.into()),
+                ("label", "a \"quoted\"\nname".into()),
+                ("ok", true.into()),
+            ],
+        );
+        r.record("lpa", &[("nan", f64::NAN.into())]);
+        let json = r.to_json();
+        assert!(json.contains("\"name\": \"demo\""));
+        assert!(json.contains("\"section\": \"lpa\""));
+        assert!(json.contains("\"threads\": 4"));
+        assert!(json.contains("\"secs\": 0.5"));
+        assert!(json.contains("\\\"quoted\\\"\\nname"));
+        assert!(json.contains("\"nan\": null"));
+        // exactly two records, comma-separated
+        assert_eq!(json.matches("\"section\"").count(), 2);
+    }
+
+    #[test]
+    fn json_report_writes_file() {
+        let dir = std::env::temp_dir().join(format!(
+            "sclap-bench-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut r = JsonReport::new("unit");
+        r.record("s", &[("x", 1usize.into())]);
+        let path = r.write_to(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap(), "BENCH_unit.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, r.to_json());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
     }
 }

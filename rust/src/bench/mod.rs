@@ -4,4 +4,4 @@
 
 pub mod harness;
 
-pub use harness::{geomean_row, BenchOpts, TableWriter};
+pub use harness::{geomean_row, BenchOpts, JsonReport, JsonValue, TableWriter};

@@ -1,0 +1,385 @@
+//! Deterministic **parallel asynchronous** SCLaP via graph coloring —
+//! the approach of the paper's companion work *Parallel Graph
+//! Partitioning for Complex Networks* (arXiv 1404.4797), on the shared
+//! [`ExecutionCtx`] pool.
+//!
+//! The sequential engine (`label_propagation::size_constrained_lpa`) is
+//! *asynchronous*: each node immediately sees the moves of previously
+//! visited nodes. That data dependence is what made it "the big
+//! remaining scaling item" (ROADMAP): a naive parallelization races on
+//! the label reads. The companion paper's fix is classic: a **greedy
+//! graph coloring** partitions the nodes into independent sets; within
+//! one color class no two nodes are adjacent, so every label a class
+//! member reads belongs to a node *outside* the class and is stable
+//! while the class is processed. Rounds then walk the color classes in
+//! order, scoring each class in parallel with the **same move rule as
+//! the sequential engine** (strongest eligible neighboring cluster,
+//! ties broken by reservoir sampling, size bound `U` respected) and
+//! applying the proposed moves sequentially in class order against the
+//! live cluster-size table — so the size constraint holds *exactly*
+//! after every class, not just in expectation.
+//!
+//! # Determinism
+//!
+//! The schedule is a pure function of the input: the coloring follows
+//! the (seeded) node order; class member lists inherit that order; each
+//! scoring chunk is a fixed-size slice of a class with an RNG stream
+//! derived from `(round seed, class, chunk)` via
+//! [`exec::derive_seed`]; and the apply pass walks proposals in class
+//! order. The executing pool size is unobservable — `threads ∈ {1,2,4}`
+//! produce byte-identical labels (enforced by `rust/tests/properties.rs`
+//! and, end-to-end through the coarsening path, by
+//! `rust/tests/determinism.rs`).
+//!
+//! Like the synchronous engine (`clustering::parallel_lpa`), this is a
+//! *different algorithm* from the sequential asynchronous engine — the
+//! eligibility snapshot is per-class rather than per-node — so it is
+//! opt-in via `PartitionConfig::parallel_coarsening`
+//! (`crate::partitioning::config`), selected by configuration, never by
+//! thread count.
+
+use crate::clustering::label_propagation::{build_order, Clustering, LpaConfig, LpaMode};
+use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::util::exec::{derive_seed, ExecutionCtx};
+use crate::util::fast_reset::FastResetArray;
+use crate::util::pool::WorkerLocal;
+use crate::util::rng::Rng;
+
+/// Class members per scoring chunk. Fixed (never derived from the
+/// thread count) so the decomposition — and with it every per-chunk RNG
+/// stream — is part of the deterministic logical schedule.
+pub const COLOR_CHUNK: usize = 256;
+
+/// Greedy coloring in visit order: each node takes the smallest color
+/// not used by an already-colored neighbor. Returns the color classes,
+/// each member list in visit order. The number of classes is at most
+/// `max_degree + 1`.
+pub fn greedy_color_classes(g: &Graph, order: &[NodeId]) -> Vec<Vec<NodeId>> {
+    let n = g.n();
+    let mut color = vec![u32::MAX; n];
+    let mut classes: Vec<Vec<NodeId>> = Vec::new();
+    // mark[c] == stamp ⇔ color c is taken by a neighbor of the current
+    // node (fast-reset by stamping; no clearing between nodes).
+    let mut mark: Vec<u32> = Vec::new();
+    for (visit, &v) in order.iter().enumerate() {
+        let stamp = visit as u32 + 1;
+        for &u in g.adjacent(v) {
+            let cu = color[u as usize];
+            if cu != u32::MAX {
+                let cu = cu as usize;
+                if cu >= mark.len() {
+                    mark.resize(cu + 1, 0);
+                }
+                mark[cu] = stamp;
+            }
+        }
+        let mut c = 0usize;
+        while c < mark.len() && mark[c] == stamp {
+            c += 1;
+        }
+        color[v as usize] = c as u32;
+        if c == classes.len() {
+            classes.push(Vec::new());
+        }
+        classes[c].push(v);
+    }
+    classes
+}
+
+/// Score one slice of a color class against the current labels and the
+/// class-start cluster-weight snapshot, with the sequential engine's
+/// move rule. Pure function of its arguments — safe on pool workers.
+#[allow(clippy::too_many_arguments)]
+fn score_members(
+    g: &Graph,
+    labels: &[u32],
+    cluster_weight: &[Weight],
+    upper_bound: Weight,
+    members: &[NodeId],
+    seed: u64,
+    respect: Option<&[u32]>,
+    conn: &mut FastResetArray<i64>,
+) -> Vec<(NodeId, u32)> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for &v in members {
+        let cur = labels[v as usize];
+        let vw = g.node_weight(v);
+        let adj = g.adjacent(v);
+        if adj.is_empty() {
+            continue;
+        }
+        let weights = g.adjacent_weights(v);
+        conn.clear();
+        match respect {
+            // V-cycle restriction (§B.1): only clusters in the same block.
+            Some(blocks) => {
+                let bv = blocks[v as usize];
+                for (&u, &w) in adj.iter().zip(weights) {
+                    if blocks[u as usize] == bv {
+                        conn.accumulate(labels[u as usize] as usize, w);
+                    }
+                }
+            }
+            None => {
+                for (&u, &w) in adj.iter().zip(weights) {
+                    conn.accumulate(labels[u as usize] as usize, w);
+                }
+            }
+        }
+        // Same scan as the sequential `try_move` (clustering mode):
+        // staying is an option with the connection to `cur`; candidates
+        // must fit under the bound; equal-strength candidates are chosen
+        // by reservoir sampling (zero-gain tie moves allowed).
+        let mut best_conn: i64 = conn.get(cur as usize);
+        let mut best: u32 = cur;
+        let mut ties: u32 = 1;
+        for &c in conn.touched() {
+            let c32 = c as u32;
+            if c32 == cur {
+                continue;
+            }
+            if cluster_weight[c] + vw > upper_bound {
+                continue;
+            }
+            let score = conn.value_of_touched(c);
+            if score > best_conn {
+                best_conn = score;
+                best = c32;
+                ties = 1;
+            } else if score == best_conn {
+                ties += 1;
+                if rng.below(ties as usize) == 0 {
+                    best = c32;
+                }
+            }
+        }
+        if best != cur {
+            out.push((v, best));
+        }
+    }
+    out
+}
+
+/// Parallel asynchronous size-constrained LPA (clustering mode,
+/// singleton start) — see the module docs. Returns the dense clustering
+/// and the number of rounds executed; output is byte-identical for
+/// every pool size given the same `rng` stream.
+pub fn parallel_async_sclap(
+    g: &Graph,
+    upper_bound: Weight,
+    config: &LpaConfig,
+    respect: Option<&[u32]>,
+    ctx: &ExecutionCtx,
+    rng: &mut Rng,
+) -> (Clustering, usize) {
+    let n = g.n();
+    assert_eq!(
+        config.mode,
+        LpaMode::Clustering,
+        "parallel async SCLaP is a coarsening engine"
+    );
+    assert!(
+        upper_bound >= g.max_node_weight(),
+        "U={} below max node weight {}",
+        upper_bound,
+        g.max_node_weight()
+    );
+    if let Some(r) = respect {
+        assert_eq!(r.len(), n);
+    }
+
+    let mut labels: Vec<u32> = (0..n as u32).collect();
+    let mut cluster_weight: Vec<Weight> = g.node_weights().to_vec();
+    let order = build_order(g, config.ordering, rng);
+    // The coloring depends only on the graph and the order, so it is
+    // computed once and reused across rounds.
+    let classes = greedy_color_classes(g, &order);
+    let pool = ctx.pool();
+    let scratch: WorkerLocal<FastResetArray<i64>> =
+        WorkerLocal::new(pool.threads(), || FastResetArray::new(n.max(1)));
+
+    let mut rounds = 0usize;
+    while rounds < config.max_iterations {
+        rounds += 1;
+        let round_seed = rng.next_u64();
+        let mut moved = 0usize;
+        for (ci, class) in classes.iter().enumerate() {
+            let num_chunks = class.len().div_ceil(COLOR_CHUNK);
+            let proposals: Vec<Vec<(NodeId, u32)>> = {
+                let labels_ref: &[u32] = &labels;
+                let weight_ref: &[Weight] = &cluster_weight;
+                pool.map_indexed(num_chunks, |worker, chunk| {
+                    let lo = chunk * COLOR_CHUNK;
+                    let hi = (lo + COLOR_CHUNK).min(class.len());
+                    // SAFETY: `worker` is the pool-provided worker id; at
+                    // most one task runs per id (WorkerLocal contract).
+                    let conn = unsafe { scratch.get_mut(worker) };
+                    score_members(
+                        g,
+                        labels_ref,
+                        weight_ref,
+                        upper_bound,
+                        &class[lo..hi],
+                        derive_seed(round_seed, ((ci as u64) << 32) ^ chunk as u64),
+                        respect,
+                        conn,
+                    )
+                })
+            };
+            // Apply in class order against the live size table: a target
+            // that filled up since the class-start snapshot is skipped,
+            // so the bound holds exactly after every class.
+            for (v, target) in proposals.into_iter().flatten() {
+                let vw = g.node_weight(v);
+                let cur = labels[v as usize];
+                if cluster_weight[target as usize] + vw > upper_bound {
+                    continue;
+                }
+                cluster_weight[cur as usize] -= vw;
+                cluster_weight[target as usize] += vw;
+                labels[v as usize] = target;
+                moved += 1;
+            }
+        }
+        debug_assert!(cluster_weight.iter().all(|&w| w <= upper_bound));
+        if (moved as f64) < config.convergence_fraction * n as f64 {
+            break;
+        }
+    }
+
+    (Clustering::from_labels(g, labels), rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::label_propagation::NodeOrdering;
+    use crate::generators;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::karate::karate_club;
+
+    fn is_proper_coloring(g: &Graph, classes: &[Vec<NodeId>]) -> bool {
+        let mut color = vec![u32::MAX; g.n()];
+        for (c, class) in classes.iter().enumerate() {
+            for &v in class {
+                color[v as usize] = c as u32;
+            }
+        }
+        color.iter().all(|&c| c != u32::MAX)
+            && g.edges()
+                .all(|(u, v, _)| color[u as usize] != color[v as usize])
+    }
+
+    #[test]
+    fn coloring_is_proper_and_complete() {
+        let mut rng = Rng::new(1);
+        for g in [
+            karate_club(),
+            generators::barabasi_albert(800, 4, &mut rng),
+            generators::grid2d(17, 23),
+        ] {
+            let order: Vec<NodeId> = g.nodes().collect();
+            let classes = greedy_color_classes(&g, &order);
+            assert!(is_proper_coloring(&g, &classes), "improper coloring");
+            assert!(classes.len() <= g.max_degree() + 1);
+            assert_eq!(classes.iter().map(|c| c.len()).sum::<usize>(), g.n());
+        }
+    }
+
+    #[test]
+    fn grid_two_colors() {
+        // A bipartite graph colored in natural order needs 2 colors.
+        let g = generators::grid2d(8, 8);
+        let order: Vec<NodeId> = g.nodes().collect();
+        let classes = greedy_color_classes(&g, &order);
+        assert_eq!(classes.len(), 2);
+    }
+
+    #[test]
+    fn finds_clique_structure() {
+        // Two K4s joined by one edge — same sanity case as the
+        // sequential engine's test.
+        let mut b = GraphBuilder::new(8);
+        for base in [0u32, 4] {
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    b.add_edge(base + i, base + j, 1);
+                }
+            }
+        }
+        b.add_edge(3, 4, 1);
+        let g = b.build();
+        let ctx = ExecutionCtx::sequential();
+        let cfg = LpaConfig::clustering(10, NodeOrdering::Degree);
+        let (c, _) = parallel_async_sclap(&g, 4, &cfg, None, &ctx, &mut Rng::new(3));
+        assert_eq!(c.num_clusters, 2);
+        assert!((1..4).all(|i| c.labels[i] == c.labels[0]));
+        assert!((5..8).all(|i| c.labels[i] == c.labels[4]));
+        assert_eq!(c.cut(&g), 1);
+    }
+
+    #[test]
+    fn respects_bound_for_many_seeds() {
+        let mut rng = Rng::new(5);
+        let g = generators::barabasi_albert(600, 3, &mut rng);
+        let ctx = ExecutionCtx::new(4);
+        let cfg = LpaConfig::clustering(5, NodeOrdering::Degree);
+        for seed in 0..6 {
+            let (c, _) =
+                parallel_async_sclap(&g, 20, &cfg, None, &ctx, &mut Rng::new(seed));
+            assert!(c.respects_bound(20), "seed {seed}: {:?}", c.cluster_weights);
+            assert!(c.num_clusters < g.n(), "no clustering happened");
+        }
+    }
+
+    #[test]
+    fn labels_identical_across_pool_sizes() {
+        // The tentpole invariant: same seed, any thread count,
+        // bit-identical labels. n spans several COLOR_CHUNK chunks in
+        // the large color classes, so the parallel path is exercised.
+        let mut rng = Rng::new(7);
+        let g = generators::rmat(11, 6000, 0.57, 0.19, 0.19, &mut rng);
+        let cfg = LpaConfig::clustering(5, NodeOrdering::Degree);
+        let run = |threads: usize| {
+            let ctx = ExecutionCtx::new(threads);
+            parallel_async_sclap(&g, 30, &cfg, None, &ctx, &mut Rng::new(11))
+                .0
+                .labels
+        };
+        let reference = run(1);
+        for threads in [2usize, 3, 4, 8] {
+            assert_eq!(reference, run(threads), "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn respect_partition_blocks_cross_moves() {
+        let mut rng = Rng::new(9);
+        let g = generators::barabasi_albert(400, 3, &mut rng);
+        let blocks: Vec<u32> = (0..g.n() as u32).map(|v| v % 2).collect();
+        let ctx = ExecutionCtx::new(2);
+        let cfg = LpaConfig::clustering(5, NodeOrdering::Degree);
+        let (c, _) =
+            parallel_async_sclap(&g, 30, &cfg, Some(&blocks), &ctx, &mut Rng::new(13));
+        for (u, v, _) in g.edges() {
+            if blocks[u as usize] != blocks[v as usize] {
+                assert_ne!(
+                    c.labels[u as usize], c.labels[v as usize],
+                    "cluster crossed the block boundary on edge ({u},{v})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_nodes_stay_put() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1);
+        let g = b.build();
+        let ctx = ExecutionCtx::sequential();
+        let cfg = LpaConfig::clustering(5, NodeOrdering::Degree);
+        let (c, _) = parallel_async_sclap(&g, 4, &cfg, None, &ctx, &mut Rng::new(1));
+        assert!(c.num_clusters >= 3);
+    }
+}

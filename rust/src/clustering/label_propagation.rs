@@ -390,8 +390,9 @@ fn try_move(
     true
 }
 
-/// Build the node visit order for round one.
-fn build_order(g: &Graph, ordering: NodeOrdering, rng: &mut Rng) -> Vec<NodeId> {
+/// Build the node visit order for round one (shared with the parallel
+/// asynchronous engine, `clustering::async_lpa`).
+pub(crate) fn build_order(g: &Graph, ordering: NodeOrdering, rng: &mut Rng) -> Vec<NodeId> {
     let mut order: Vec<NodeId> = g.nodes().collect();
     match ordering {
         NodeOrdering::Random => rng.shuffle(&mut order),

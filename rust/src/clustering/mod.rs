@@ -1,11 +1,15 @@
 //! Clustering algorithms: the paper's size-constrained label propagation
-//! (§3.1), ensemble overlay clustering (§4) and a shared-memory parallel
-//! LPA (the paper's §6 future-work direction).
+//! (§3.1), ensemble overlay clustering (§4), a shared-memory synchronous
+//! parallel LPA (the paper's §6 future-work direction), and the
+//! coloring-based parallel *asynchronous* LPA of the companion work
+//! (arXiv 1404.4797).
 
+pub mod async_lpa;
 pub mod ensemble;
 pub mod label_propagation;
 pub mod parallel_lpa;
 
+pub use async_lpa::parallel_async_sclap;
 pub use ensemble::overlay_clustering;
 pub use label_propagation::{
     size_constrained_lpa, Clustering, LpaConfig, LpaMode, NodeOrdering,

@@ -18,6 +18,7 @@
 //! this.
 
 use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::util::exec::ExecutionCtx;
 use crate::util::fast_reset::FastResetArray;
 use crate::util::pool::{ThreadPool, WorkerLocal};
 use crate::util::rng::Rng;
@@ -229,16 +230,17 @@ pub fn synchronous_round(
 }
 
 /// Pool-parallel size-constrained LPA (clustering mode, singleton
-/// start). Bit-identical output for any pool size, given the same seed
-/// stream in `rng`.
+/// start) on the shared [`ExecutionCtx`]. Bit-identical output for any
+/// pool size, given the same seed stream in `rng`.
 pub fn parallel_sclap(
     g: &Graph,
     upper_bound: Weight,
     max_iterations: usize,
-    pool: &ThreadPool,
+    ctx: &ExecutionCtx,
     rng: &mut Rng,
 ) -> Clustering {
     let n = g.n();
+    let pool = ctx.pool();
     assert!(upper_bound >= g.max_node_weight());
     let mut labels: Vec<u32> = (0..n as u32).collect();
     let mut cluster_weight: Vec<Weight> = g.node_weights().to_vec();
@@ -276,9 +278,9 @@ mod tests {
     fn parallel_respects_bound() {
         let g = karate_club();
         for threads in [1usize, 2, 4] {
-            let pool = ThreadPool::new(threads);
+            let ctx = ExecutionCtx::new(threads);
             let mut rng = Rng::new(1);
-            let c = parallel_sclap(&g, 6, 10, &pool, &mut rng);
+            let c = parallel_sclap(&g, 6, 10, &ctx, &mut rng);
             assert!(c.respects_bound(6), "threads={threads}: {:?}", c.cluster_weights);
         }
     }
@@ -287,8 +289,8 @@ mod tests {
     fn parallel_finds_structure() {
         let mut rng = Rng::new(2);
         let g = generators::barabasi_albert(2000, 4, &mut rng);
-        let pool = ThreadPool::new(4);
-        let c = parallel_sclap(&g, 50, 10, &pool, &mut Rng::new(3));
+        let ctx = ExecutionCtx::new(4);
+        let c = parallel_sclap(&g, 50, 10, &ctx, &mut Rng::new(3));
         assert!(c.num_clusters < g.n() / 2, "nc={}", c.num_clusters);
         assert!(c.respects_bound(50));
     }
@@ -301,8 +303,8 @@ mod tests {
         let mut rng = Rng::new(4);
         let g = generators::rmat(11, 6000, 0.57, 0.19, 0.19, &mut rng);
         let run = |threads: usize| {
-            let pool = ThreadPool::new(threads);
-            parallel_sclap(&g, 30, 5, &pool, &mut Rng::new(7)).labels
+            let ctx = ExecutionCtx::new(threads);
+            parallel_sclap(&g, 30, 5, &ctx, &mut Rng::new(7)).labels
         };
         let reference = run(1);
         for threads in [2usize, 3, 4, 8] {
@@ -314,9 +316,9 @@ mod tests {
     fn rerun_same_seed_identical() {
         let mut rng = Rng::new(5);
         let g = generators::barabasi_albert(1500, 3, &mut rng);
-        let pool = ThreadPool::new(4);
-        let a = parallel_sclap(&g, 25, 5, &pool, &mut Rng::new(9)).labels;
-        let b = parallel_sclap(&g, 25, 5, &pool, &mut Rng::new(9)).labels;
+        let ctx = ExecutionCtx::new(4);
+        let a = parallel_sclap(&g, 25, 5, &ctx, &mut Rng::new(9)).labels;
+        let b = parallel_sclap(&g, 25, 5, &ctx, &mut Rng::new(9)).labels;
         assert_eq!(a, b);
     }
 

@@ -222,6 +222,16 @@ pub fn contract_with_pool(
     }
 }
 
+/// [`contract_with_pool`] through a shared [`ExecutionCtx`] — the
+/// multilevel driver's entry point after the ExecutionCtx refactor.
+pub fn contract_with_ctx(
+    g: &Graph,
+    clustering: &Clustering,
+    ctx: Option<&crate::util::exec::ExecutionCtx>,
+) -> Contraction {
+    contract_with_pool(g, clustering, ctx.map(|c| c.pool()))
+}
+
 /// Project a coarse partition back to the finer graph.
 pub fn project_partition(map: &[u32], coarse_blocks: &[u32]) -> Vec<u32> {
     map.iter().map(|&c| coarse_blocks[c as usize]).collect()

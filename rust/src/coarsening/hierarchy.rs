@@ -6,12 +6,13 @@
 //! cluster-contraction scheme and the matching baseline, and threads an
 //! optional input partition through the levels for V-cycles (§B.1).
 
+use crate::clustering::async_lpa::parallel_async_sclap;
 use crate::clustering::ensemble::ensemble_sclap;
 use crate::clustering::label_propagation::{size_constrained_lpa, Clustering, LpaConfig};
-use crate::coarsening::contract::{contract_with_pool, Contraction};
+use crate::coarsening::contract::{contract_with_ctx, Contraction};
 use crate::coarsening::matching::heavy_edge_matching;
 use crate::graph::csr::{Graph, Weight};
-use crate::util::pool::ThreadPool;
+use crate::util::exec::ExecutionCtx;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -72,13 +73,12 @@ pub fn coarsest_size_threshold(n_input: usize, k: usize) -> usize {
 /// Compute the clustering for one coarsening step.
 fn cluster_once(
     g: &Graph,
-    k: usize,
-    epsilon: f64,
-    scheme: &CoarseningScheme,
+    params: &CoarseningParams,
     respect: Option<&[u32]>,
     rng: &mut Rng,
 ) -> Clustering {
-    match scheme {
+    let (k, epsilon) = (params.k, params.epsilon);
+    match &params.scheme {
         CoarseningScheme::ClusterLpa {
             lpa,
             size_factor,
@@ -90,6 +90,22 @@ fn cluster_once(
             let upper = w.max(g.max_node_weight()).max(1);
             match ensemble {
                 Some(count) => ensemble_sclap(g, upper, lpa, *count, respect, rng),
+                // The coloring-based parallel asynchronous engine —
+                // selected by configuration only (never by thread count
+                // or graph size), so results stay thread-invariant. A
+                // missing ctx falls back to an inline sequential one:
+                // identical output, by the pool contract.
+                None if params.parallel_lpa => {
+                    let fallback;
+                    let ctx: &ExecutionCtx = match params.ctx.as_deref() {
+                        Some(c) => c,
+                        None => {
+                            fallback = ExecutionCtx::sequential();
+                            &fallback
+                        }
+                    };
+                    parallel_async_sclap(g, upper, lpa, respect, ctx, rng).0
+                }
                 None => size_constrained_lpa(g, upper, lpa, None, respect, rng).0,
             }
         }
@@ -140,11 +156,19 @@ pub struct CoarseningParams {
     pub scheme: CoarseningScheme,
     pub max_levels: usize,
     pub min_shrink: f64,
-    /// Shared pool for the parallel phases of coarsening (currently
-    /// cluster contraction). `None` (or a 1-thread pool) runs
-    /// sequentially; results are bit-identical either way — the pool
-    /// only changes wall-clock, never output (util::pool contract).
-    pub pool: Option<Arc<ThreadPool>>,
+    /// Shared execution context for the parallel phases of coarsening
+    /// (cluster contraction, and the parallel asynchronous LPA when
+    /// [`parallel_lpa`](CoarseningParams::parallel_lpa) is set). `None`
+    /// (or a 1-thread context) runs sequentially; results are
+    /// bit-identical either way — the context only changes wall-clock,
+    /// never output (util::pool contract).
+    pub ctx: Option<Arc<ExecutionCtx>>,
+    /// Use the coloring-based parallel *asynchronous* SCLaP
+    /// (`clustering::async_lpa`) for the non-ensemble cluster steps
+    /// instead of the sequential engine. A different (equally
+    /// deterministic) algorithm — an opt-in configuration choice, so
+    /// output never depends on the thread count.
+    pub parallel_lpa: bool,
 }
 
 impl CoarseningParams {
@@ -155,7 +179,8 @@ impl CoarseningParams {
             scheme,
             max_levels: 64,
             min_shrink: 0.98,
-            pool: None,
+            ctx: None,
+            parallel_lpa: false,
         }
     }
 }
@@ -175,19 +200,12 @@ pub fn coarsen(
         if current.n() <= threshold || levels.len() >= params.max_levels {
             break;
         }
-        let clustering = cluster_once(
-            current,
-            params.k,
-            params.epsilon,
-            &params.scheme,
-            partition.as_deref(),
-            rng,
-        );
+        let clustering = cluster_once(current, params, partition.as_deref(), rng);
         if clustering.num_clusters as f64 > params.min_shrink * current.n() as f64 {
             break; // stalled
         }
         let Contraction { coarse, map } =
-            contract_with_pool(current, &clustering, params.pool.as_deref());
+            contract_with_ctx(current, &clustering, params.ctx.as_deref());
         // Project the partition: every cluster is inside one block.
         partition = partition.map(|p| {
             let mut coarse_part = vec![u32::MAX; coarse.n()];
@@ -278,6 +296,46 @@ mod tests {
             first_cluster,
             first_match
         );
+    }
+
+    #[test]
+    fn parallel_lpa_coarsening_is_thread_invariant() {
+        let mut rng = Rng::new(10);
+        let g = generators::barabasi_albert(4000, 4, &mut rng);
+        let run = |threads: usize| {
+            let mut params = CoarseningParams::new(4, 0.03, cluster_scheme());
+            params.parallel_lpa = true;
+            params.ctx = Some(Arc::new(ExecutionCtx::new(threads)));
+            let h = coarsen(&g, &params, None, &mut Rng::new(11));
+            h.levels
+                .iter()
+                .map(|l| l.map.clone())
+                .collect::<Vec<_>>()
+        };
+        let reference = run(1);
+        assert!(!reference.is_empty(), "no coarsening happened");
+        for threads in [2usize, 4] {
+            assert_eq!(reference, run(threads), "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn parallel_lpa_without_ctx_falls_back_sequentially() {
+        // No ctx supplied: the flag must still select the same algorithm
+        // (inline sequential context), with identical output.
+        let mut rng = Rng::new(12);
+        let g = generators::barabasi_albert(3000, 4, &mut rng);
+        let mut without = CoarseningParams::new(4, 0.03, cluster_scheme());
+        without.parallel_lpa = true;
+        let mut with = CoarseningParams::new(4, 0.03, cluster_scheme());
+        with.parallel_lpa = true;
+        with.ctx = Some(Arc::new(ExecutionCtx::new(4)));
+        let a = coarsen(&g, &without, None, &mut Rng::new(13));
+        let b = coarsen(&g, &with, None, &mut Rng::new(13));
+        assert_eq!(a.depth(), b.depth());
+        for (la, lb) in a.levels.iter().zip(&b.levels) {
+            assert_eq!(la.map, lb.map);
+        }
     }
 
     #[test]

@@ -4,22 +4,30 @@
 //! each configuration of the algorithm and report the arithmetic
 //! average of computed cut size, running time and the best cut found")
 //! is a first-class L3 feature here: the shared deterministic
-//! [`ThreadPool`] executes repetition jobs in parallel, the coordinator
-//! aggregates average/best/geomean and retains the best partition. The
-//! bench harness and the CLI both sit on top of this service.
+//! [`ExecutionCtx`] pool executes repetition jobs in parallel, the
+//! coordinator aggregates average/best/geomean and retains the best
+//! partition. The bench harness and the CLI both sit on top of this
+//! service.
 //!
-//! Implementation: `util::pool` (std threads; tokio is not available
-//! offline — DESIGN.md §3). Each job's outcome is a pure function of
-//! (graph, config, seed), and results are collected in seed order, so
-//! aggregates are deterministic regardless of worker count or
-//! scheduling (invariant 6, DESIGN.md §7). A panicking job is contained
-//! by the pool (the worker — and every queued job — survives; the
-//! caller re-raises after the batch drains).
+//! Implementation: one shared [`ExecutionCtx`] owns **the** process
+//! pool (std threads; tokio is not available offline — DESIGN.md §3).
+//! Repetition jobs fan out across that pool, and the same context is
+//! handed down into every job's `MultilevelPartitioner`, so nested
+//! parallel phases (coarsening LPA, contraction, recursive bisection,
+//! refinement) re-enter the same pool and run inline — total live
+//! worker threads never exceed the configured cap
+//! (`rust/tests/thread_cap.rs`), with no oversubscription guard needed.
+//! Each job's outcome is a pure function of (graph, config, seed), and
+//! results are collected in seed order, so aggregates are deterministic
+//! regardless of worker count or scheduling (invariant 6, DESIGN.md
+//! §7). A panicking job is contained by the pool (the worker — and
+//! every queued job — survives; the caller re-raises after the batch
+//! drains).
 
 use crate::graph::csr::{Graph, Weight};
 use crate::partitioning::config::PartitionConfig;
 use crate::partitioning::multilevel::{MultilevelPartitioner, PartitionResult};
-use crate::util::pool::ThreadPool;
+use crate::util::exec::ExecutionCtx;
 use crate::util::timer::Stats;
 use std::sync::Arc;
 
@@ -95,27 +103,48 @@ impl Aggregate {
     }
 }
 
-/// Repetition executor on the shared deterministic worker pool.
+/// Repetition executor on the shared [`ExecutionCtx`]: the coordinator
+/// creates the one process pool and hands it down through every phase.
 pub struct Coordinator {
-    pool: ThreadPool,
+    ctx: Arc<ExecutionCtx>,
 }
 
 impl Coordinator {
-    /// Pool of `workers` threads (0 ⇒ available parallelism).
+    /// Context with a pool of `workers` threads (0 ⇒ available
+    /// parallelism) — the process-wide worker cap.
     pub fn new(workers: usize) -> Self {
         Coordinator {
-            pool: ThreadPool::new(workers),
+            ctx: Arc::new(ExecutionCtx::new(workers)),
         }
     }
 
+    /// Coordinator on an existing shared context.
+    pub fn with_ctx(ctx: Arc<ExecutionCtx>) -> Self {
+        Coordinator { ctx }
+    }
+
+    /// The shared execution context (pool + phase-timing sink).
+    pub fn ctx(&self) -> &Arc<ExecutionCtx> {
+        &self.ctx
+    }
+
     pub fn worker_count(&self) -> usize {
-        self.pool.threads()
+        self.ctx.threads()
     }
 
     /// Run the §5 protocol: one repetition per seed, aggregated.
     /// Deterministic for a given (graph, config, seeds) regardless of
     /// the worker count: each job depends only on its seed, and the
     /// results are collected in seed order.
+    ///
+    /// Every job runs on this coordinator's shared context — repetitions
+    /// fan out across the pool, and the jobs' own parallel phases
+    /// re-enter it inline (util::pool re-entrancy), so the configured
+    /// worker cap bounds the whole batch. `config.threads` is not
+    /// consulted here: one pool serves every nesting level. (The old
+    /// nested-pool guard — `threads = 0 ⇒ 1` inside jobs, bounded
+    /// oversubscription — is gone because there is no nested pool left
+    /// to guard.)
     pub fn partition_repeated(
         &self,
         graph: Arc<Graph>,
@@ -123,20 +152,22 @@ impl Coordinator {
         seeds: &[u64],
     ) -> Aggregate {
         assert!(!seeds.is_empty());
-        // Nested-pool guard: when the repetitions already fan out across
-        // this pool, resolve `threads = 0` (auto) to 1 inside each job —
-        // results are byte-identical either way (thread-count
-        // invariance), and W jobs × "all cores" inner pools would
-        // oversubscribe the machine quadratically. An *explicit* inner
-        // thread count is honored: the caller asked for it.
-        let mut job_config = config.clone();
-        if job_config.threads == 0 && self.pool.threads() > 1 && seeds.len() > 1 {
-            job_config.threads = 1;
+        if seeds.len() == 1 {
+            // Single repetition: run on the caller so the job's own
+            // parallel phases fan out across the shared pool instead of
+            // nesting inline behind a one-task job. Identical result
+            // (thread-count invariance), better wall-clock.
+            let seed = seeds[0];
+            let partitioner =
+                MultilevelPartitioner::with_ctx(config.clone(), self.ctx.clone());
+            let result = partitioner.partition(&graph, seed);
+            return Aggregate::from_runs(vec![RunOutcome::from_result(seed, &result)]);
         }
-        let runs: Vec<RunOutcome> = self.pool.map_indexed(seeds.len(), |_worker, i| {
+        let runs: Vec<RunOutcome> = self.ctx.pool().map_indexed(seeds.len(), |_worker, i| {
             let seed = seeds[i];
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                let partitioner = MultilevelPartitioner::new(job_config.clone());
+                let partitioner =
+                    MultilevelPartitioner::with_ctx(config.clone(), self.ctx.clone());
                 let result = partitioner.partition(&graph, seed);
                 RunOutcome::from_result(seed, &result)
             }));

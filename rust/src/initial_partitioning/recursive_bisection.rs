@@ -1,12 +1,28 @@
 //! Multilevel recursive bisection — KaHIP's initial partitioning (§3.1:
 //! "KaHIP uses a multilevel recursive bisection algorithm to create an
-//! initial partitioning").
+//! initial partitioning"), **parallel across independent splits** on
+//! the shared [`ExecutionCtx`] pool.
 //!
 //! To split into k blocks: bisect with proportional target weights
 //! (⌈k/2⌉ : ⌊k/2⌋), recurse on the induced subgraphs. Each bisection is
 //! itself a small multilevel run: coarsen (matching for the `C…`
 //! configurations, cluster contraction for `U…`), greedy-grow + 2-way FM
 //! on the coarsest graph, FM-refine while uncoarsening.
+//!
+//! # Parallelism and determinism
+//!
+//! The two halves of every split are independent (disjoint node sets),
+//! so the recursion is processed as a **breadth-first frontier of split
+//! tasks** fanned out on the shared pool: all splits of one depth run
+//! concurrently (up to k/2-way parallelism at the leaves), and each
+//! task draws from an RNG stream derived from its **split path** — the
+//! root is path 1, the halves of path `p` are `2p` and `2p + 1` — via
+//! [`exec::derive_seed`](crate::util::exec::derive_seed). A task's
+//! output is therefore a pure function of (graph, config, base seed,
+//! path): the executing thread, the pool size, and the completion order
+//! of sibling splits are all unobservable, and `threads ∈ {1, 2, 4}`
+//! produce byte-identical partitions (`rust/tests/recursive_bisection.rs`
+//! and, end-to-end, `rust/tests/determinism.rs`).
 
 use crate::coarsening::hierarchy::{coarsen, CoarseningParams, CoarseningScheme};
 use crate::graph::csr::{Graph, NodeId, Weight};
@@ -14,6 +30,7 @@ use crate::graph::subgraph::induced_subgraph;
 use crate::initial_partitioning::greedy_growing::{greedy_bisection, round_robin};
 use crate::partitioning::partition::Partition;
 use crate::refinement::fm::{kway_fm_bounded, FmConfig};
+use crate::util::exec::{derive_seed, ExecutionCtx};
 use crate::util::rng::Rng;
 
 /// Initial partitioning configuration.
@@ -53,14 +70,38 @@ impl InitialPartitionConfig {
     }
 }
 
-/// Partition `g` into `k` blocks by multilevel recursive bisection.
+/// One pending split: bisect the subgraph induced by `nodes` into `k`
+/// blocks with ids starting at `first_block`. `path` identifies the
+/// split's position in the recursion tree (root 1; children 2p, 2p+1)
+/// and seeds its RNG stream.
+struct SplitTask {
+    nodes: Vec<NodeId>,
+    k: usize,
+    first_block: u32,
+    path: u64,
+}
+
+/// What one processed split produced: either final block assignments
+/// (a leaf) or the two child splits.
+enum SplitOutcome {
+    Assign(Vec<(NodeId, u32)>),
+    Children(SplitTask, SplitTask),
+}
+
+/// Partition `g` into `k` blocks by multilevel recursive bisection,
+/// fanning the independent splits of each depth out on `ctx`'s pool.
+/// Consumes exactly one draw from `rng` (the base seed of the per-path
+/// streams), so the caller's stream advances identically for every
+/// thread count.
 pub fn recursive_bisection(
     g: &Graph,
     k: usize,
     config: &InitialPartitionConfig,
+    ctx: &ExecutionCtx,
     rng: &mut Rng,
 ) -> Partition {
     assert!(k >= 1);
+    let base_seed = rng.next_u64();
     if k == 1 {
         return Partition::from_blocks(g, 1, vec![0; g.n()]);
     }
@@ -68,36 +109,64 @@ pub fn recursive_bisection(
         return round_robin(g, k);
     }
     let mut blocks = vec![0u32; g.n()];
-    let all: Vec<NodeId> = g.nodes().collect();
-    split(g, &all, k, 0, config, &mut blocks, rng);
+    let mut frontier = vec![SplitTask {
+        nodes: g.nodes().collect(),
+        k,
+        first_block: 0,
+        path: 1,
+    }];
+    while !frontier.is_empty() {
+        // All tasks in the frontier are independent (disjoint node
+        // sets); results come back in task order, so the schedule is
+        // deterministic for any pool size.
+        let outcomes: Vec<SplitOutcome> =
+            ctx.pool().map_indexed(frontier.len(), |_worker, i| {
+                let task = &frontier[i];
+                let mut branch_rng = Rng::new(derive_seed(base_seed, task.path));
+                split_once(g, task, config, &mut branch_rng)
+            });
+        let mut next = Vec::new();
+        for outcome in outcomes {
+            match outcome {
+                SplitOutcome::Assign(pairs) => {
+                    for (v, b) in pairs {
+                        blocks[v as usize] = b;
+                    }
+                }
+                SplitOutcome::Children(left, right) => {
+                    next.push(left);
+                    next.push(right);
+                }
+            }
+        }
+        frontier = next;
+    }
     Partition::from_blocks(g, k, blocks)
 }
 
-/// Recursively bisect the subgraph induced by `nodes` into `k` blocks
-/// with ids starting at `first_block`.
-fn split(
+/// Process one split task: either terminate (k = 1 or a degenerate tiny
+/// branch) or bisect and emit the two child tasks.
+fn split_once(
     root: &Graph,
-    nodes: &[NodeId],
-    k: usize,
-    first_block: u32,
+    task: &SplitTask,
     config: &InitialPartitionConfig,
-    out: &mut [u32],
     rng: &mut Rng,
-) {
+) -> SplitOutcome {
+    let (nodes, k, first_block) = (&task.nodes, task.k, task.first_block);
     if k == 1 {
-        for &v in nodes {
-            out[v as usize] = first_block;
-        }
-        return;
+        return SplitOutcome::Assign(nodes.iter().map(|&v| (v, first_block)).collect());
     }
     // Degenerate branch: fewer nodes than target blocks (possible when k
     // is close to n — e.g. karate with k=32). Round-robin so every block
     // id in [first_block, first_block+k) is used where possible.
     if nodes.len() <= k {
-        for (i, &v) in nodes.iter().enumerate() {
-            out[v as usize] = first_block + (i % k) as u32;
-        }
-        return;
+        return SplitOutcome::Assign(
+            nodes
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (v, first_block + (i % k) as u32))
+                .collect(),
+        );
     }
     let (sub, old_of) = induced_subgraph(root, nodes);
     let k1 = k.div_ceil(2);
@@ -117,18 +186,32 @@ fn split(
     // Degenerate guard: greedy growing can swallow everything on tiny
     // or star-shaped graphs — force non-empty sides.
     if left.is_empty() || right.is_empty() {
-        let mut both: Vec<NodeId> = nodes.to_vec();
+        let mut both: Vec<NodeId> = nodes.clone();
         rng.shuffle(&mut both);
         let cut_at = (both.len() * k1 / k).max(1).min(both.len() - 1);
-        left = both[..cut_at].to_vec();
-        right = both[cut_at..].to_vec();
+        right = both.split_off(cut_at);
+        left = both;
     }
-    split(root, &left, k1, first_block, config, out, rng);
-    split(root, &right, k2, first_block + k1 as u32, config, out, rng);
+    SplitOutcome::Children(
+        SplitTask {
+            nodes: left,
+            k: k1,
+            first_block,
+            path: task.path * 2,
+        },
+        SplitTask {
+            nodes: right,
+            k: k2,
+            first_block: first_block + k1 as u32,
+            path: task.path * 2 + 1,
+        },
+    )
 }
 
 /// One multilevel bisection: returns a 0/1 array over `g`'s nodes where
-/// side 1 has weight ≈ `target1`.
+/// side 1 has weight ≈ `target1`. Runs sequentially — it executes
+/// *inside* a split task on the shared pool, and any nested pool use
+/// goes inline there (util::pool re-entrancy).
 pub fn multilevel_bisect(
     g: &Graph,
     target1: Weight,
@@ -174,12 +257,16 @@ mod tests {
     use crate::graph::karate::karate_club;
     use crate::partitioning::metrics::{cut_value, evaluate};
 
+    fn seq() -> ExecutionCtx {
+        ExecutionCtx::sequential()
+    }
+
     #[test]
     fn bisection_of_karate_is_decent() {
         let g = karate_club();
         let mut rng = Rng::new(1);
         let config = InitialPartitionConfig::matching_based(0.03);
-        let p = recursive_bisection(&g, 2, &config, &mut rng);
+        let p = recursive_bisection(&g, 2, &config, &seq(), &mut rng);
         assert!(p.validate(&g).is_ok());
         let m = evaluate(&g, &p, 0.03);
         // ground-truth fission cuts 10; a decent bisection lands ≤ 14
@@ -193,7 +280,7 @@ mod tests {
         let g = generators::barabasi_albert(500, 3, &mut rng);
         for k in [2usize, 3, 4, 8] {
             let config = InitialPartitionConfig::matching_based(0.03);
-            let p = recursive_bisection(&g, k, &config, &mut Rng::new(k as u64));
+            let p = recursive_bisection(&g, k, &config, &seq(), &mut Rng::new(k as u64));
             assert_eq!(p.k, k);
             assert_eq!(p.nonempty_blocks(), k, "k={k}");
             assert!(p.validate(&g).is_ok());
@@ -206,7 +293,7 @@ mod tests {
         let g = generators::rmat(10, 4000, 0.57, 0.19, 0.19, &mut rng);
         let g = crate::graph::subgraph::largest_component(&g);
         let config = InitialPartitionConfig::cluster_based(0.03);
-        let p = recursive_bisection(&g, 4, &config, &mut Rng::new(4));
+        let p = recursive_bisection(&g, 4, &config, &seq(), &mut Rng::new(4));
         assert_eq!(p.nonempty_blocks(), 4);
         let m = evaluate(&g, &p, 0.03);
         assert!(m.cut < g.total_edge_weight(), "cut should be nontrivial");
@@ -216,7 +303,7 @@ mod tests {
     fn k_one_is_trivial() {
         let g = karate_club();
         let config = InitialPartitionConfig::matching_based(0.03);
-        let p = recursive_bisection(&g, 1, &config, &mut Rng::new(5));
+        let p = recursive_bisection(&g, 1, &config, &seq(), &mut Rng::new(5));
         assert_eq!(p.k, 1);
         assert_eq!(cut_value(&g, &p.blocks), 0);
     }
@@ -225,7 +312,7 @@ mod tests {
     fn tiny_graph_round_robins() {
         let g = karate_club();
         let config = InitialPartitionConfig::matching_based(0.03);
-        let p = recursive_bisection(&g, 34, &config, &mut Rng::new(6));
+        let p = recursive_bisection(&g, 34, &config, &seq(), &mut Rng::new(6));
         assert_eq!(p.nonempty_blocks(), 34);
     }
 
@@ -234,10 +321,42 @@ mod tests {
         let mut rng = Rng::new(7);
         let g = generators::watts_strogatz(900, 4, 0.1, &mut rng);
         let config = InitialPartitionConfig::matching_based(0.05);
-        let p = recursive_bisection(&g, 5, &config, &mut Rng::new(8));
+        let p = recursive_bisection(&g, 5, &config, &seq(), &mut Rng::new(8));
         let m = evaluate(&g, &p, 0.05);
         // recursive bisection compounds slack; allow generous margin but
         // catch gross imbalance
         assert!(m.imbalance < 0.25, "imbalance {}", m.imbalance);
+    }
+
+    #[test]
+    fn fan_out_matches_sequential() {
+        // The tentpole invariant at the engine level: the frontier fans
+        // out on the pool, but path-derived streams make the result a
+        // pure function of (graph, config, seed).
+        let mut rng = Rng::new(9);
+        let g = generators::barabasi_albert(800, 4, &mut rng);
+        let config = InitialPartitionConfig::matching_based(0.03);
+        let run = |threads: usize| {
+            let ctx = ExecutionCtx::new(threads);
+            recursive_bisection(&g, 8, &config, &ctx, &mut Rng::new(10)).blocks
+        };
+        let reference = run(1);
+        for threads in [2usize, 4] {
+            assert_eq!(reference, run(threads), "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn consumes_exactly_one_rng_draw() {
+        // The caller's stream must advance identically regardless of the
+        // recursion shape (that is what keeps the surrounding pipeline
+        // thread-invariant).
+        let g = karate_club();
+        let config = InitialPartitionConfig::matching_based(0.03);
+        let mut a = Rng::new(21);
+        let _ = recursive_bisection(&g, 2, &config, &seq(), &mut a);
+        let mut b = Rng::new(21);
+        let _ = recursive_bisection(&g, 8, &config, &seq(), &mut b);
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 }

@@ -21,6 +21,55 @@
 //! let result = MultilevelPartitioner::new(config).partition(&graph, 42);
 //! println!("cut = {}", result.metrics.cut);
 //! ```
+//!
+//! # ExecutionCtx: one pool through every phase
+//!
+//! All parallelism runs on a single shared [`util::exec::ExecutionCtx`]
+//! — a handle bundling **the** process [`util::pool::ThreadPool`],
+//! deterministic per-phase RNG-stream derivation
+//! ([`util::exec::derive_seed`]), and a phase-timing sink. The
+//! coordinator ([`coordinator::service::Coordinator`]) creates the one
+//! pool and hands the context down into every repetition job
+//! ([`partitioning::multilevel::MultilevelPartitioner::with_ctx`]);
+//! nested parallel phases — coarsening LPA, cluster contraction,
+//! recursive bisection, refinement — re-enter the same pool, where
+//! re-entrant jobs execute inline, so total live worker threads never
+//! exceed the configured cap (see `rust/tests/thread_cap.rs`).
+//!
+//! The hard invariant on top: **thread count is an execution knob,
+//! never an algorithmic one.** Same seed + same config ⇒ byte-identical
+//! partition for any pool size (`rust/tests/determinism.rs`). Parallel
+//! *algorithms* are therefore selected by configuration, not by thread
+//! count: `PartitionConfig::parallel_coarsening` enables the
+//! coloring-based parallel asynchronous LPA
+//! ([`clustering::async_lpa`], after arXiv 1404.4797) and
+//! `PartitionConfig::parallel_refinement` the synchronous-round engine
+//! ([`refinement::lpa_refine::parallel_lpa_refine`]); recursive
+//! bisection always fans its independent splits out on the shared pool
+//! with split-path-derived RNG streams
+//! ([`initial_partitioning::recursive_bisection`]).
+//!
+//! ```no_run
+//! use sclap::prelude::*;
+//! use std::sync::Arc;
+//!
+//! // One process-wide context: 8 workers, total — repetitions and all
+//! // nested phases share it.
+//! let ctx = Arc::new(ExecutionCtx::new(8));
+//! let coordinator = sclap::coordinator::service::Coordinator::with_ctx(ctx.clone());
+//! let graph = Arc::new(sclap::generators::instances::by_name("tiny-rmat").unwrap().build());
+//! let mut config = PartitionConfig::preset(Preset::UFast, 8);
+//! config.parallel_coarsening = true; // async LPA on the shared pool
+//! let agg = coordinator.partition_repeated(
+//!     graph,
+//!     &config,
+//!     &sclap::coordinator::service::default_seeds(10),
+//! );
+//! println!("avg cut = {}", agg.avg_cut);
+//! for (phase, stat) in ctx.phase_stats() {
+//!     println!("{phase}: {} calls, {:.3}s", stat.calls, stat.seconds);
+//! }
+//! ```
 
 pub mod bench;
 pub mod clustering;
@@ -41,6 +90,7 @@ pub mod prelude {
     pub use crate::partitioning::metrics::PartitionMetrics;
     pub use crate::partitioning::multilevel::MultilevelPartitioner;
     pub use crate::partitioning::partition::Partition;
+    pub use crate::util::exec::ExecutionCtx;
     pub use crate::util::pool::ThreadPool;
     pub use crate::util::rng::Rng;
 }

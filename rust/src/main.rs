@@ -68,6 +68,7 @@ fn print_usage() {
            partition --graph FILE | --instance NAME  --k K [--preset P]\n\
                      [--reps N] [--seed S] [--workers W] [--threads T]\n\
                      [--epsilon E] [--output FILE]\n\
+                     [--parallel-coarsening] [--parallel-refinement]\n\
            generate  --kind rmat|ba|ws|er|grid --out FILE [--scale S]\n\
                      [--n N] [--edges M] [--seed S]\n\
            evaluate  --graph FILE | --instance NAME --partition FILE\n\
@@ -76,13 +77,17 @@ fn print_usage() {
            offload   --instance NAME [--upper U] [--rounds R]\n\
            presets\n\
          \n\
-         --workers W: parallel repetitions (0 = all cores).\n\
-         --threads T: pool threads inside one partitioner run (0 = auto,\n\
-           1 = sequential; also via SCLAP_THREADS). Results are\n\
-           byte-identical for every T — same seed, same partition.\n\
-           With several reps on a multi-worker coordinator, auto\n\
-           resolves to 1 (no oversubscription); an explicit T is used\n\
-           as given.\n"
+         --workers W: the one process pool (0 = all cores). Repetitions\n\
+           fan out across it and every phase inside a repetition shares\n\
+           it (ExecutionCtx handoff), so W caps total worker threads.\n\
+         --threads T: caps the shared pool when --workers is absent\n\
+           (0 = auto, 1 = fully sequential; also via SCLAP_THREADS).\n\
+           Results are byte-identical for every T and W — same seed,\n\
+           same partition.\n\
+         --parallel-coarsening: coloring-based parallel asynchronous\n\
+           LPA for coarsening (arXiv 1404.4797 engine).\n\
+         --parallel-refinement: synchronous-round pool engine for the\n\
+           SCLaP refinement stage.\n"
     );
 }
 
@@ -111,6 +116,8 @@ fn cmd_partition(args: &Args) -> Result<()> {
         config.lpa_iterations = l.parse().context("--lpa-iterations")?;
     }
     config.threads = args.get_usize("threads", config.threads)?;
+    config.parallel_coarsening |= args.flag("parallel-coarsening");
+    config.parallel_refinement |= args.flag("parallel-refinement");
     let reps = args.get_usize("reps", 1)?;
     let seed = args.get_u64("seed", 1)?;
     let workers = args.get_usize("workers", 0)?;
@@ -122,7 +129,12 @@ fn cmd_partition(args: &Args) -> Result<()> {
         preset.name(),
         config.epsilon
     );
-    let coordinator = Coordinator::new(workers);
+    // Size the one process pool: explicit --workers wins; otherwise an
+    // explicit --threads / SCLAP_THREADS caps it (so `--threads 1` still
+    // means a fully sequential run, as before the ExecutionCtx refactor);
+    // else auto. Every phase of every repetition shares this pool.
+    let pool_threads = if workers != 0 { workers } else { config.threads };
+    let coordinator = Coordinator::new(pool_threads);
     let seeds: Vec<u64> = default_seeds(reps).iter().map(|s| s + seed - 1).collect();
     let agg = coordinator.partition_repeated(graph.clone(), &config, &seeds);
 

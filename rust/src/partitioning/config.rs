@@ -83,6 +83,14 @@ pub struct PartitionConfig {
     /// both are deterministic, but they are *different algorithms* and
     /// produce different (comparable-quality) cuts.
     pub parallel_refinement: bool,
+    /// Use the coloring-based parallel *asynchronous* LPA
+    /// (`clustering::async_lpa`, after arXiv 1404.4797) for the
+    /// non-ensemble coarsening cluster steps instead of the sequential
+    /// engine. Off by default for the same reason as
+    /// `parallel_refinement`: a different (equally deterministic)
+    /// algorithm, selected by configuration, never by thread count —
+    /// the thread-count-invariance contract holds for both values.
+    pub parallel_coarsening: bool,
 }
 
 /// Default thread count: `SCLAP_THREADS` if set and parseable, else 0
@@ -211,6 +219,7 @@ impl PartitionConfig {
             deep_coarsening: false,
             threads: threads_from_env(),
             parallel_refinement: false,
+            parallel_coarsening: false,
         }
     }
 
@@ -399,9 +408,11 @@ mod tests {
 
     #[test]
     fn thread_knob_defaults() {
-        // parallel_refinement is opt-in everywhere.
+        // The parallel engines are opt-in everywhere.
         for p in Preset::ALL {
-            assert!(!PartitionConfig::preset(p, 4).parallel_refinement);
+            let c = PartitionConfig::preset(p, 4);
+            assert!(!c.parallel_refinement);
+            assert!(!c.parallel_coarsening);
         }
         // SCLAP_THREADS parsing (pure core — no env mutation in tests):
         // unset/garbage/empty fall back to 0 = auto, numbers are taken

@@ -17,7 +17,7 @@ use crate::partitioning::partition::Partition;
 use crate::refinement::balance::rebalance;
 use crate::refinement::fm::kway_fm;
 use crate::refinement::lpa_refine::{lpa_refine, parallel_lpa_refine};
-use crate::util::pool::ThreadPool;
+use crate::util::exec::ExecutionCtx;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use std::sync::{Arc, OnceLock};
@@ -46,18 +46,24 @@ pub struct PartitionResult {
     pub first_shrink: f64,
 }
 
-/// Arc-count threshold below which the driver skips creating/using the
-/// thread pool for coarsening: on tiny levels the dispatch overhead
-/// outweighs the work, and the sequential and parallel paths are
-/// bit-identical anyway (the gate changes wall-clock, never output).
+/// Arc-count threshold below which the driver runs on an inline
+/// sequential [`ExecutionCtx`] instead of the configured one: on tiny
+/// inputs the dispatch overhead outweighs the work, and the sequential
+/// and parallel paths are bit-identical anyway (the gate changes
+/// wall-clock, never output — a 1-thread pool spawns no OS threads).
 const POOL_MIN_ARCS: usize = 1 << 16;
 
 /// The multilevel partitioner (the system's main entry point).
 pub struct MultilevelPartitioner {
     pub config: PartitionConfig,
-    /// Lazily-created shared pool (only when a phase will actually use
-    /// it, so tiny-graph runs never spawn threads).
-    pool: OnceLock<Arc<ThreadPool>>,
+    /// The shared execution context: injected by the coordinator via
+    /// [`MultilevelPartitioner::with_ctx`] (one process pool through
+    /// every phase), or lazily created from `config.threads` on first
+    /// use.
+    ctx: OnceLock<Arc<ExecutionCtx>>,
+    /// Inline sequential context for inputs below [`POOL_MIN_ARCS`]
+    /// (never spawns threads; identical results by the pool contract).
+    seq_ctx: OnceLock<Arc<ExecutionCtx>>,
 }
 
 impl std::fmt::Debug for MultilevelPartitioner {
@@ -70,9 +76,13 @@ impl std::fmt::Debug for MultilevelPartitioner {
 
 impl Clone for MultilevelPartitioner {
     fn clone(&self) -> Self {
-        // The pool is per-instance runtime state; a clone re-creates it
-        // lazily (results are thread-count-invariant, so this is safe).
-        MultilevelPartitioner::new(self.config.clone())
+        // Runtime state: an injected shared context is kept (handoff
+        // semantics survive cloning); a lazily-created one is re-created
+        // lazily. Results are thread-count-invariant either way.
+        match self.ctx.get() {
+            Some(ctx) => MultilevelPartitioner::with_ctx(self.config.clone(), ctx.clone()),
+            None => MultilevelPartitioner::new(self.config.clone()),
+        }
     }
 }
 
@@ -80,15 +90,60 @@ impl MultilevelPartitioner {
     pub fn new(config: PartitionConfig) -> Self {
         MultilevelPartitioner {
             config,
-            pool: OnceLock::new(),
+            ctx: OnceLock::new(),
+            seq_ctx: OnceLock::new(),
         }
     }
 
-    /// The shared worker pool, created on first use from
-    /// `config.threads` (0 = available parallelism).
-    fn pool(&self) -> &Arc<ThreadPool> {
-        self.pool
-            .get_or_init(|| Arc::new(ThreadPool::new(self.config.threads)))
+    /// Partitioner running on a shared [`ExecutionCtx`] — the
+    /// coordinator handoff path. The context's pool is used for every
+    /// parallel phase; `config.threads` is ignored (the context owner
+    /// already decided the process-wide cap).
+    pub fn with_ctx(config: PartitionConfig, ctx: Arc<ExecutionCtx>) -> Self {
+        let cell = OnceLock::new();
+        let _ = cell.set(ctx);
+        MultilevelPartitioner {
+            config,
+            ctx: cell,
+            seq_ctx: OnceLock::new(),
+        }
+    }
+
+    /// The shared execution context, created on first use from
+    /// `config.threads` (0 = available parallelism) unless injected.
+    pub fn ctx(&self) -> &Arc<ExecutionCtx> {
+        self.ctx
+            .get_or_init(|| Arc::new(ExecutionCtx::new(self.config.threads)))
+    }
+
+    fn seq_ctx(&self) -> &Arc<ExecutionCtx> {
+        self.seq_ctx
+            .get_or_init(|| Arc::new(ExecutionCtx::sequential()))
+    }
+
+    /// The context a run on `input` executes with. An already-available
+    /// context (injected by the coordinator, or created by an earlier
+    /// run) is always used — its pool exists, so there is nothing to
+    /// save. Otherwise the configured context is created only when the
+    /// input is big enough to amortize pool dispatch; small inputs get
+    /// the inline sequential one (no thread spawn). Pure wall-clock
+    /// choice — both produce byte-identical results (util::pool
+    /// contract).
+    fn ctx_for(&self, input: &Graph) -> &Arc<ExecutionCtx> {
+        if let Some(existing) = self.ctx.get() {
+            return existing;
+        }
+        // The opt-in parallel engines get the configured pool regardless
+        // of input size (the caller asked for them); otherwise only
+        // inputs past the gate are worth the dispatch.
+        let wants_pool = input.arc_count() >= POOL_MIN_ARCS
+            || self.config.parallel_refinement
+            || self.config.parallel_coarsening;
+        if wants_pool && self.config.threads != 1 {
+            self.ctx()
+        } else {
+            self.seq_ctx()
+        }
     }
 
     fn coarsening_scheme(&self) -> CoarseningScheme {
@@ -123,26 +178,40 @@ impl MultilevelPartitioner {
     /// default, synchronous pool rounds when `parallel_refinement` is
     /// set. Both are deterministic; the choice selects an *algorithm*,
     /// never a schedule (thread count does not affect either).
-    fn lpa_stage(&self, g: &Graph, p: &mut Partition, lmax: Weight, rng: &mut Rng) {
+    fn lpa_stage(
+        &self,
+        ctx: &ExecutionCtx,
+        g: &Graph,
+        p: &mut Partition,
+        lmax: Weight,
+        rng: &mut Rng,
+    ) {
         if self.config.parallel_refinement {
-            parallel_lpa_refine(g, p, lmax, self.config.lpa_iterations, self.pool(), rng);
+            parallel_lpa_refine(g, p, lmax, self.config.lpa_iterations, ctx, rng);
         } else {
             lpa_refine(g, p, lmax, self.config.lpa_iterations, rng);
         }
     }
 
     /// Refine `p` on `g` under bound `lmax` according to the config.
-    fn refine(&self, g: &Graph, p: &mut Partition, lmax: Weight, rng: &mut Rng) {
+    fn refine(
+        &self,
+        ctx: &ExecutionCtx,
+        g: &Graph,
+        p: &mut Partition,
+        lmax: Weight,
+        rng: &mut Rng,
+    ) {
         match self.config.refinement {
             RefinementKind::Lpa => {
-                self.lpa_stage(g, p, lmax, rng);
+                self.lpa_stage(ctx, g, p, lmax, rng);
             }
             RefinementKind::Eco => {
-                self.lpa_stage(g, p, lmax, rng);
+                self.lpa_stage(ctx, g, p, lmax, rng);
                 kway_fm(g, p, lmax, &self.config.fm, rng);
             }
             RefinementKind::Strong => {
-                self.lpa_stage(g, p, lmax, rng);
+                self.lpa_stage(ctx, g, p, lmax, rng);
                 kway_fm(g, p, lmax, &self.config.fm, rng);
                 // KaFFPa's "more-localized" pairwise search (§2.2): only
                 // affordable on the smaller levels of the hierarchy.
@@ -173,15 +242,11 @@ impl MultilevelPartitioner {
             input.max_node_weight(),
         );
 
-        // Pool for the parallel coarsening phases; skipped entirely for
-        // small inputs (identical results, no thread-spawn cost). The
-        // refinement stage creates the pool on demand via `self.pool()`.
-        let coarsening_pool: Option<Arc<ThreadPool>> =
-            if input.arc_count() >= POOL_MIN_ARCS && self.config.threads != 1 {
-                Some(self.pool().clone())
-            } else {
-                None
-            };
+        // The one execution context for every phase of this run —
+        // the configured shared pool for big inputs, an inline
+        // sequential context (no thread spawn) for small ones; results
+        // are identical either way.
+        let ctx: &Arc<ExecutionCtx> = self.ctx_for(input);
 
         let mut best_blocks: Option<Vec<u32>> = None;
         let mut best_cut: Weight = Weight::MAX;
@@ -202,10 +267,13 @@ impl MultilevelPartitioner {
             if cfg.deep_coarsening {
                 params.min_shrink = 0.999;
             }
-            params.pool = coarsening_pool.clone();
+            params.ctx = Some(ctx.clone());
+            params.parallel_lpa = cfg.parallel_coarsening;
             let respect = best_blocks.clone();
             let h: Hierarchy = coarsen(input, &params, respect.as_deref(), &mut rng);
-            coarsening_seconds += t.elapsed_s();
+            let secs = t.elapsed_s();
+            coarsening_seconds += secs;
+            ctx.record("coarsening", secs);
             let q = h.levels.len();
             let coarsest = h.coarsest(input);
             if cycle == 0 {
@@ -225,6 +293,7 @@ impl MultilevelPartitioner {
                         coarsest,
                         k,
                         &self.initial_config(),
+                        ctx,
                         &mut rng,
                     );
                     ip.blocks
@@ -239,7 +308,9 @@ impl MultilevelPartitioner {
                 }
                 initial_cut = cut_value(input, &proj);
             }
-            initial_seconds += t.elapsed_s();
+            let secs = t.elapsed_s();
+            initial_seconds += secs;
+            ctx.record("initial", secs);
 
             // ---- Uncoarsening with refinement ----
             let t = Timer::start();
@@ -256,7 +327,7 @@ impl MultilevelPartitioner {
                     coarsest.max_node_weight(),
                 );
                 let mut p = Partition::from_blocks(coarsest, k, blocks);
-                self.refine(coarsest, &mut p, lmax_here, &mut rng);
+                self.refine(ctx, coarsest, &mut p, lmax_here, &mut rng);
                 blocks = p.blocks;
             }
             for i in (0..h.levels.len()).rev() {
@@ -277,7 +348,7 @@ impl MultilevelPartitioner {
                     finer.max_node_weight(),
                 );
                 let mut p = Partition::from_blocks(finer, k, blocks);
-                self.refine(finer, &mut p, lmax_here, &mut rng);
+                self.refine(ctx, finer, &mut p, lmax_here, &mut rng);
                 blocks = p.blocks;
             }
 
@@ -286,12 +357,14 @@ impl MultilevelPartitioner {
             if !cfg.tolerate_imbalance && p.max_block_weight() > final_lmax {
                 let _ = rebalance(input, &mut p, final_lmax);
                 // Rebalancing may open improvement: one more cheap pass.
-                self.refine(input, &mut p, final_lmax, &mut rng);
+                self.refine(ctx, input, &mut p, final_lmax, &mut rng);
                 if p.max_block_weight() > final_lmax {
                     let _ = rebalance(input, &mut p, final_lmax);
                 }
             }
-            uncoarsening_seconds += t.elapsed_s();
+            let secs = t.elapsed_s();
+            uncoarsening_seconds += secs;
+            ctx.record("uncoarsening", secs);
 
             let cut = cut_value(input, &p.blocks);
             if cut < best_cut || best_blocks.is_none() {
@@ -425,6 +498,45 @@ mod tests {
         let a = MultilevelPartitioner::new(cfg.clone()).partition(&g, 42);
         let b = MultilevelPartitioner::new(cfg).partition(&g, 42);
         assert_eq!(a.partition.blocks, b.partition.blocks);
+    }
+
+    #[test]
+    fn parallel_coarsening_is_valid_and_thread_invariant() {
+        let mut rng = Rng::new(14);
+        let g = generators::barabasi_albert(2500, 4, &mut rng);
+        let run = |threads: usize| {
+            let mut cfg = PartitionConfig::preset(Preset::CFast, 4);
+            cfg.parallel_coarsening = true;
+            cfg.threads = threads;
+            MultilevelPartitioner::new(cfg).partition(&g, 17)
+        };
+        let reference = run(1);
+        check_result(&g, &reference, 4, 0.03);
+        for threads in [2usize, 4] {
+            let r = run(threads);
+            assert_eq!(
+                reference.partition.blocks, r.partition.blocks,
+                "threads={threads} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn injected_ctx_is_used_and_records_phases() {
+        let mut rng = Rng::new(15);
+        let g = generators::barabasi_albert(2000, 4, &mut rng);
+        let ctx = Arc::new(ExecutionCtx::new(2));
+        let cfg = PartitionConfig::preset(Preset::CFast, 4);
+        let shared = MultilevelPartitioner::with_ctx(cfg.clone(), ctx.clone());
+        let a = shared.partition(&g, 23);
+        let b = MultilevelPartitioner::new(cfg).partition(&g, 23);
+        // Handoff never changes results (thread-count invariance).
+        assert_eq!(a.partition.blocks, b.partition.blocks);
+        // The stats sink saw every phase of the run.
+        let phases: Vec<&str> = ctx.phase_stats().iter().map(|(n, _)| *n).collect();
+        for expected in ["coarsening", "initial", "uncoarsening"] {
+            assert!(phases.contains(&expected), "missing phase {expected}");
+        }
     }
 
     #[test]

@@ -9,8 +9,9 @@ use crate::clustering::label_propagation::{size_constrained_lpa, LpaConfig};
 use crate::clustering::parallel_lpa::{synchronous_round, SyncMode};
 use crate::graph::csr::{Graph, Weight};
 use crate::partitioning::partition::Partition;
+use crate::util::exec::ExecutionCtx;
 use crate::util::fast_reset::FastResetArray;
-use crate::util::pool::{ThreadPool, WorkerLocal};
+use crate::util::pool::WorkerLocal;
 use crate::util::rng::Rng;
 
 /// Refine `p` in place with SCLaP (active-nodes rounds, §B.2).
@@ -51,10 +52,11 @@ pub fn lpa_refine(
 }
 
 /// Pool-parallel SCLaP refinement: the same size-constrained local
-/// search, but with *synchronous* rounds on the shared [`ThreadPool`]
-/// (snapshot-score in fixed chunks, reconcile sequentially in
-/// descending-gain order — `clustering::parallel_lpa` semantics, so the
-/// overloaded-block rule applies and blocks are never emptied).
+/// search, but with *synchronous* rounds on the shared
+/// [`ExecutionCtx`] pool (snapshot-score in fixed chunks, reconcile
+/// sequentially in descending-gain order — `clustering::parallel_lpa`
+/// semantics, so the overloaded-block rule applies and blocks are never
+/// emptied).
 ///
 /// Because refinement labels *are* block ids, no densification or
 /// undensing is needed. Output is bit-identical for every pool size
@@ -66,10 +68,11 @@ pub fn parallel_lpa_refine(
     p: &mut Partition,
     lmax: Weight,
     iterations: usize,
-    pool: &ThreadPool,
+    ctx: &ExecutionCtx,
     rng: &mut Rng,
 ) -> (Weight, Weight) {
     let before = crate::partitioning::metrics::cut_value(g, &p.blocks);
+    let pool = ctx.pool();
     let k = p.k;
     let n = g.n();
     let mut labels = p.blocks.clone();
@@ -203,11 +206,11 @@ mod tests {
     fn parallel_refine_respects_bound_and_blocks() {
         let g = karate_club();
         for threads in [1usize, 2, 4] {
-            let pool = ThreadPool::new(threads);
+            let ctx = ExecutionCtx::new(threads);
             let mut rng = Rng::new(6);
             let blocks: Vec<u32> = (0..g.n() as u32).map(|v| v % 4).collect();
             let mut p = Partition::from_blocks(&g, 4, blocks);
-            parallel_lpa_refine(&g, &mut p, 12, 10, &pool, &mut rng);
+            parallel_lpa_refine(&g, &mut p, 12, 10, &ctx, &mut rng);
             assert!(p.max_block_weight() <= 12, "threads={threads}");
             assert_eq!(p.nonempty_blocks(), 4);
             assert!(p.validate(&g).is_ok());
@@ -220,9 +223,9 @@ mod tests {
         let g = crate::generators::barabasi_albert(1500, 3, &mut rng);
         let blocks: Vec<u32> = (0..g.n() as u32).map(|v| v % 3).collect();
         let run = |threads: usize| {
-            let pool = ThreadPool::new(threads);
+            let ctx = ExecutionCtx::new(threads);
             let mut p = Partition::from_blocks(&g, 3, blocks.clone());
-            parallel_lpa_refine(&g, &mut p, 520, 8, &pool, &mut Rng::new(11));
+            parallel_lpa_refine(&g, &mut p, 520, 8, &ctx, &mut Rng::new(11));
             p.blocks
         };
         let reference = run(1);

@@ -1,11 +1,13 @@
 //! Shared algorithm-engineering substrate: deterministic RNG, fast-reset
 //! accumulators, bucket queues, disjoint sets, timers, a minimal
-//! property-testing harness, error plumbing, and the deterministic
-//! thread pool every parallel phase runs on. All std-only (see
-//! DESIGN.md §3).
+//! property-testing harness, error plumbing, the deterministic thread
+//! pool every parallel phase runs on, and the shared [`ExecutionCtx`]
+//! (`exec`) that hands one pool + per-phase RNG streams + a stats sink
+//! through every layer of the pipeline. All std-only (see DESIGN.md §3).
 
 pub mod bucket_queue;
 pub mod error;
+pub mod exec;
 pub mod fast_reset;
 pub mod pool;
 pub mod proptest;
@@ -15,6 +17,7 @@ pub mod union_find;
 
 pub use bucket_queue::BucketQueue;
 pub use error::{Context, Error};
+pub use exec::ExecutionCtx;
 pub use fast_reset::{BitVec, FastResetArray};
 pub use pool::{ThreadPool, WorkerLocal};
 pub use rng::Rng;

@@ -34,10 +34,24 @@
 //! at a time — `run` serializes through an internal lock on *every*
 //! path, including the inline one, because the `WorkerLocal` contract
 //! (at most one task per worker id) must hold even for concurrent
-//! `run` calls on a shared pool. Tasks must therefore never submit to
-//! their *own* pool (nested use of a *different* pool is fine — the
-//! coordinator's repetition pool runs partitioners that own scoring
-//! pools).
+//! `run` calls on a shared pool.
+//!
+//! # Re-entrancy (the `ExecutionCtx` handoff)
+//!
+//! A task may submit to its *own* pool: the nested `run` detects (via a
+//! thread-local set of entered pool ids) that the calling thread is
+//! already inside a job of this pool and executes the nested job
+//! **inline, sequentially, as worker 0** — no locks taken, no extra
+//! threads, no deadlock on the job slot. This is what lets one shared
+//! pool serve every nesting level (coordinator repetitions → partitioner
+//! phases → recursive-bisection branches) while capping total live
+//! worker threads at the configured count: by the thread-count-invariance
+//! contract the inline schedule produces bit-identical results to a
+//! fanned-out one. Two rules follow for nested jobs: (1) a nested job's
+//! [`WorkerLocal`] must be created *inside* the nesting task (distinct
+//! outer tasks run nested jobs concurrently, each as its own worker 0),
+//! which all in-tree callers do naturally by allocating scratch per
+//! call; (2) nested use of a *different* pool still dispatches normally.
 //!
 //! Borrowed closures are handed to the long-lived workers by erasing the
 //! closure lifetime. Soundness: `run` does not return until `remaining`
@@ -48,10 +62,67 @@
 //! and every later job — down) and re-raised on the caller after the
 //! job drains.
 
+use std::cell::RefCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+
+/// Unique id per pool (for the thread-local re-entrancy set).
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Gauge of live background pool worker threads in this process.
+/// Incremented at spawn (in [`ThreadPool::new`], before it returns) and
+/// decremented when a worker thread exits; `Drop` joins the workers, so
+/// after a pool is dropped its workers have left the gauge.
+static LIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Pool ids this thread is currently executing a job of (a stack:
+    /// nested distinct pools push multiple entries). Used by `run` to
+    /// detect re-entrant submission and go inline.
+    static ACTIVE_POOLS: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Number of live background pool worker threads in the whole process —
+/// the observable for the "worker threads never exceed the configured
+/// cap" invariant (`rust/tests/thread_cap.rs`). The calling threads of
+/// pools are not counted (they exist regardless).
+pub fn live_pool_workers() -> usize {
+    LIVE_WORKERS.load(Ordering::SeqCst)
+}
+
+fn pool_entered(id: u64) -> bool {
+    ACTIVE_POOLS.with(|s| s.borrow().contains(&id))
+}
+
+/// RAII marker: this thread is executing a job of pool `id`.
+struct ActiveGuard(u64);
+
+fn enter_pool(id: u64) -> ActiveGuard {
+    ACTIVE_POOLS.with(|s| s.borrow_mut().push(id));
+    ActiveGuard(id)
+}
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        ACTIVE_POOLS.with(|s| {
+            let mut v = s.borrow_mut();
+            if let Some(pos) = v.iter().rposition(|&x| x == self.0) {
+                v.remove(pos);
+            }
+        });
+    }
+}
+
+/// Decrements the live-worker gauge when a worker thread exits.
+struct WorkerGauge;
+
+impl Drop for WorkerGauge {
+    fn drop(&mut self) {
+        LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
 
 /// One in-flight job: a lifetime-erased task closure plus claim/progress
 /// counters. Held in an `Arc` so late-waking workers can do a failed
@@ -96,6 +167,8 @@ pub struct ThreadPool {
     threads: usize,
     /// Serializes `run` calls: a single job slot is active at a time.
     run_lock: Mutex<()>,
+    /// Process-unique id for re-entrancy detection.
+    id: u64,
 }
 
 impl ThreadPool {
@@ -119,12 +192,23 @@ impl ThreadPool {
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
         });
+        let pool_id = NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed);
         let workers = (1..threads)
             .map(|id| {
                 let shared = shared.clone();
+                // Count the worker before the spawn returns so the gauge
+                // is exact the moment `new` completes.
+                LIVE_WORKERS.fetch_add(1, Ordering::SeqCst);
                 std::thread::Builder::new()
                     .name(format!("sclap-pool-{id}"))
-                    .spawn(move || worker_loop(shared, id))
+                    .spawn(move || {
+                        let _gauge = WorkerGauge;
+                        // A worker executes tasks of this pool only; mark
+                        // it entered for the thread's whole lifetime so
+                        // re-entrant submission from tasks goes inline.
+                        let _active = enter_pool(pool_id);
+                        worker_loop(shared, id)
+                    })
                     .expect("spawn pool worker")
             })
             .collect();
@@ -133,6 +217,7 @@ impl ThreadPool {
             workers,
             threads,
             run_lock: Mutex::new(()),
+            id: pool_id,
         }
     }
 
@@ -157,6 +242,18 @@ impl ThreadPool {
         if count == 0 {
             return;
         }
+        // Re-entrant submission (the ExecutionCtx handoff): a task of
+        // this pool calling back into it runs the nested job inline,
+        // sequentially, as worker 0 — same results by thread-count
+        // invariance, no deadlock on the job slot, no extra threads.
+        // Safe for WorkerLocal because nested jobs allocate their own
+        // scratch inside the nesting task (module docs, re-entrancy).
+        if pool_entered(self.id) {
+            for i in 0..count {
+                f(0, i);
+            }
+            return;
+        }
         // One job at a time — also across the inline fast path below:
         // WorkerLocal's &mut-per-worker-id contract relies on worker id
         // 0 (the caller slot) never being active twice concurrently.
@@ -164,6 +261,10 @@ impl ThreadPool {
             .run_lock
             .lock()
             .unwrap_or_else(|p| p.into_inner());
+        // Mark entered for the whole job — including the inline path, so
+        // phases nested under an inline job (threads = 1, or count = 1)
+        // also go inline instead of deadlocking on `run_lock`.
+        let _active = enter_pool(self.id);
         if self.workers.is_empty() || count == 1 {
             // Sequential fast path: same schedule, no worker dispatch.
             for i in 0..count {
@@ -469,6 +570,63 @@ mod tests {
         let pool = ThreadPool::new(6);
         pool.run(10, |_w, _i| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn reentrant_same_pool_runs_inline() {
+        // The ExecutionCtx handoff pattern: a task submits to its own
+        // pool. The nested job must execute inline as worker 0 and
+        // produce the deterministic result.
+        let pool = ThreadPool::new(3);
+        let pool_ref = &pool;
+        let sums = pool_ref.map_indexed(6, |_w, i| {
+            pool_ref
+                .map_indexed(20, |w, j| {
+                    assert_eq!(w, 0, "nested tasks run inline as worker 0");
+                    (i * j) as u64
+                })
+                .into_iter()
+                .sum::<u64>()
+        });
+        for (i, s) in sums.iter().enumerate() {
+            assert_eq!(*s, (0..20).map(|j| (i * j) as u64).sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn reentrant_under_inline_job() {
+        // threads = 1: the outer job runs inline while holding run_lock;
+        // the nested submission must not deadlock.
+        let pool = ThreadPool::new(1);
+        let pool_ref = &pool;
+        let out = pool_ref.map_indexed(3, |_w, i| {
+            pool_ref.map_indexed(4, |_w, j| i * 10 + j).len()
+        });
+        assert_eq!(out, vec![4, 4, 4]);
+    }
+
+    #[test]
+    fn reentrant_two_levels_deep() {
+        let pool = ThreadPool::new(4);
+        let pool_ref = &pool;
+        let total: u64 = pool_ref
+            .map_indexed(4, |_w, i| {
+                pool_ref
+                    .map_indexed(3, |_w, j| {
+                        pool_ref
+                            .map_indexed(2, |_w, l| (i + j + l) as u64)
+                            .into_iter()
+                            .sum::<u64>()
+                    })
+                    .into_iter()
+                    .sum::<u64>()
+            })
+            .into_iter()
+            .sum();
+        let expect: u64 = (0..4u64)
+            .flat_map(|i| (0..3u64).flat_map(move |j| (0..2u64).map(move |l| i + j + l)))
+            .sum();
+        assert_eq!(total, expect);
     }
 
     #[test]

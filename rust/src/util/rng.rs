@@ -6,6 +6,21 @@
 //! only needs random node orderings, random tie-breaking and seedable
 //! repetition (§5: "ten repetitions for each configuration").
 
+/// One step of a splitmix64 stream seeded at `z`: advance by the golden
+/// gamma and finalize. The single home of the splitmix64 magic
+/// constants — shared by [`Rng::new`] seed expansion and
+/// `util::exec::derive_seed`, so the two can never drift apart.
+#[inline]
+pub fn splitmix64(z: u64) -> u64 {
+    let mut z = z.wrapping_add(SPLITMIX_GAMMA);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The splitmix64 state increment (the 64-bit golden ratio).
+const SPLITMIX_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
 /// xoshiro256++ PRNG. Deterministic for a given seed; `jump()` provides
 /// 2^128 non-overlapping subsequence splits for parallel workers.
 #[derive(Debug, Clone)]
@@ -19,11 +34,9 @@ impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let mut next_sm = || {
-            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-            z ^ (z >> 31)
+            let out = splitmix64(sm);
+            sm = sm.wrapping_add(SPLITMIX_GAMMA);
+            out
         };
         let s = [next_sm(), next_sm(), next_sm(), next_sm()];
         // splitmix64 never yields all-zero state from distinct outputs,

@@ -15,8 +15,12 @@
 
 use sclap::generators::instances::{by_name, tiny_suite};
 use sclap::graph::csr::Graph;
+use sclap::initial_partitioning::recursive_bisection::{
+    recursive_bisection, InitialPartitionConfig,
+};
 use sclap::partitioning::config::{PartitionConfig, Preset};
 use sclap::partitioning::multilevel::MultilevelPartitioner;
+use sclap::util::exec::ExecutionCtx;
 
 fn blocks(cfg: &PartitionConfig, g: &Graph, seed: u64) -> Vec<u32> {
     MultilevelPartitioner::new(cfg.clone())
@@ -111,6 +115,71 @@ fn same_seed_reruns_are_identical() {
                 "{}: seeds 7 and 8 gave identical partitions",
                 spec.name
             );
+        }
+    }
+}
+
+#[test]
+fn parallel_async_coarsening_thread_invariant() {
+    // The coloring-based parallel asynchronous LPA (arXiv 1404.4797
+    // engine) through the full coarsening path: same seed + config ⇒
+    // byte-identical partition for threads ∈ {1, 2, 4}. tiny-rmat and
+    // tiny-ba are large enough to actually coarsen, so the engine runs
+    // on every level of the hierarchy.
+    for name in ["tiny-rmat", "tiny-ba"] {
+        let g = by_name(name).unwrap().build();
+        for preset in [Preset::CFast, Preset::UFast, Preset::CEco] {
+            let mut cfg = PartitionConfig::preset(preset, 4);
+            cfg.parallel_coarsening = true;
+            assert_thread_invariant(
+                preset.name(),
+                &format!("{name} (parallel async coarsening)"),
+                cfg,
+                &g,
+                31,
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_async_coarsening_with_vcycles_thread_invariant() {
+    // V-cycles exercise the `respect` path of the parallel async engine
+    // (clusters must not cross the input partition's block boundaries).
+    let g = by_name("tiny-ba").unwrap().build();
+    let mut cfg = PartitionConfig::preset(Preset::CFastVB, 4);
+    cfg.parallel_coarsening = true;
+    assert_thread_invariant("CFastV/B", "tiny-ba (async coarsening + V-cycles)", cfg, &g, 37);
+}
+
+#[test]
+fn parallel_recursive_bisection_thread_invariant() {
+    // The initial-partitioning engine directly: the split frontier fans
+    // out on the pool, per-branch streams derive from the split path —
+    // same seed ⇒ byte-identical blocks for threads ∈ {1, 2, 4}.
+    for name in ["karate", "tiny-rmat"] {
+        let g = by_name(name).unwrap().build();
+        for k in [2usize, 4, 8] {
+            let config = InitialPartitionConfig::matching_based(0.03);
+            let run = |threads: usize| {
+                let ctx = ExecutionCtx::new(threads);
+                recursive_bisection(
+                    &g,
+                    k,
+                    &config,
+                    &ctx,
+                    &mut sclap::util::rng::Rng::new(41),
+                )
+                .blocks
+            };
+            let reference = run(1);
+            for threads in [2usize, 4] {
+                assert_eq!(
+                    reference,
+                    run(threads),
+                    "{name} k={k}: threads={threads} diverged"
+                );
+            }
         }
     }
 }

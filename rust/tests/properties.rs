@@ -2,6 +2,7 @@
 //! seeds and parameters. Each property runs dozens of seeded cases; a
 //! failure reports seed + size for exact reproduction.
 
+use sclap::clustering::async_lpa::parallel_async_sclap;
 use sclap::clustering::ensemble::{ensemble_sclap, overlay_clustering};
 use sclap::clustering::label_propagation::{
     size_constrained_lpa, LpaConfig, LpaMode, NodeOrdering,
@@ -15,6 +16,7 @@ use sclap::partitioning::metrics::cut_value;
 use sclap::partitioning::multilevel::MultilevelPartitioner;
 use sclap::partitioning::partition::Partition;
 use sclap::refinement::lpa_refine::parallel_lpa_refine;
+use sclap::util::exec::ExecutionCtx;
 use sclap::util::pool::ThreadPool;
 use sclap::util::proptest::{for_random_cases, PropConfig};
 use sclap::util::rng::Rng;
@@ -189,7 +191,11 @@ fn prop_multilevel_valid_output() {
 /// holds after *every* round (checked by truncating the round budget).
 #[test]
 fn prop_parallel_sclap_thread_invariant_and_bounded() {
-    let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+    let ctxs = [
+        ExecutionCtx::new(1),
+        ExecutionCtx::new(2),
+        ExecutionCtx::new(4),
+    ];
     for_random_cases(&PropConfig::quick(), |rng, size| {
         let g = arb_graph(rng, size);
         let upper = g.max_node_weight().max(rng.range(2, 16) as Weight);
@@ -197,22 +203,62 @@ fn prop_parallel_sclap_thread_invariant_and_bounded() {
         // Size constraint after every round: run the same seed with
         // every prefix of the round budget.
         for rounds in 1..=3 {
-            let c = parallel_sclap(&g, upper, rounds, &pools[0], &mut Rng::new(seed));
+            let c = parallel_sclap(&g, upper, rounds, &ctxs[0], &mut Rng::new(seed));
             assert!(
                 c.respects_bound(upper),
                 "bound {upper} violated after round {rounds}: {:?}",
                 c.cluster_weights.iter().max()
             );
         }
-        let sequential = parallel_sclap(&g, upper, 5, &pools[0], &mut Rng::new(seed));
+        let sequential = parallel_sclap(&g, upper, 5, &ctxs[0], &mut Rng::new(seed));
         assert!(sequential.respects_bound(upper));
-        for pool in &pools[1..] {
-            let parallel = parallel_sclap(&g, upper, 5, pool, &mut Rng::new(seed));
+        for ctx in &ctxs[1..] {
+            let parallel = parallel_sclap(&g, upper, 5, ctx, &mut Rng::new(seed));
             assert_eq!(
                 sequential.labels,
                 parallel.labels,
                 "pool size {} diverged from sequential",
-                pool.threads()
+                ctx.threads()
+            );
+        }
+    });
+}
+
+/// Pool invariant A′: the coloring-based parallel *asynchronous* SCLaP
+/// (arXiv 1404.4797 engine) is thread-count-invariant and never
+/// violates the size constraint, for any round budget.
+#[test]
+fn prop_parallel_async_sclap_thread_invariant_and_bounded() {
+    let ctxs = [
+        ExecutionCtx::new(1),
+        ExecutionCtx::new(2),
+        ExecutionCtx::new(4),
+    ];
+    for_random_cases(&PropConfig::quick(), |rng, size| {
+        let g = arb_graph(rng, size);
+        let upper = g.max_node_weight().max(rng.range(2, 16) as Weight);
+        let seed = rng.next_u64();
+        for rounds in 1..=3 {
+            let cfg = LpaConfig::clustering(rounds, NodeOrdering::Degree);
+            let (c, _) =
+                parallel_async_sclap(&g, upper, &cfg, None, &ctxs[0], &mut Rng::new(seed));
+            assert!(
+                c.respects_bound(upper),
+                "bound {upper} violated after round {rounds}: {:?}",
+                c.cluster_weights.iter().max()
+            );
+        }
+        let cfg = LpaConfig::clustering(5, NodeOrdering::Degree);
+        let (sequential, _) =
+            parallel_async_sclap(&g, upper, &cfg, None, &ctxs[0], &mut Rng::new(seed));
+        for ctx in &ctxs[1..] {
+            let (parallel, _) =
+                parallel_async_sclap(&g, upper, &cfg, None, ctx, &mut Rng::new(seed));
+            assert_eq!(
+                sequential.labels,
+                parallel.labels,
+                "pool size {} diverged from sequential",
+                ctx.threads()
             );
         }
     });
@@ -240,7 +286,11 @@ fn prop_parallel_contract_equals_sequential() {
 /// never overflows a feasible bound, and never empties a block.
 #[test]
 fn prop_parallel_refine_safety_and_invariance() {
-    let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+    let ctxs = [
+        ExecutionCtx::new(1),
+        ExecutionCtx::new(2),
+        ExecutionCtx::new(4),
+    ];
     for_random_cases(&PropConfig::quick(), |rng, size| {
         let g = arb_graph(rng, size);
         let k = rng.range(2, 5).min(g.n());
@@ -249,20 +299,20 @@ fn prop_parallel_refine_safety_and_invariance() {
         let lmax = per_block + g.max_node_weight() + rng.range(0, 5) as Weight;
         let seed = rng.next_u64();
         let mut reference: Option<Vec<u32>> = None;
-        for pool in &pools {
+        for ctx in &ctxs {
             let mut p = Partition::from_blocks(&g, k, blocks.clone());
-            parallel_lpa_refine(&g, &mut p, lmax, 5, pool, &mut Rng::new(seed));
+            parallel_lpa_refine(&g, &mut p, lmax, 5, ctx, &mut Rng::new(seed));
             assert!(
                 p.max_block_weight() <= lmax,
                 "pool {} overflowed: {:?} > {lmax}",
-                pool.threads(),
+                ctx.threads(),
                 p.block_weights
             );
             assert_eq!(p.nonempty_blocks(), k, "block vanished");
             assert!(p.validate(&g).is_ok());
             match &reference {
                 None => reference = Some(p.blocks),
-                Some(r) => assert_eq!(r, &p.blocks, "pool size {}", pool.threads()),
+                Some(r) => assert_eq!(r, &p.blocks, "pool size {}", ctx.threads()),
             }
         }
     });

@@ -1,0 +1,114 @@
+//! Integration: parallel recursive bisection (initial partitioning) —
+//! determinism across thread counts and the per-split balance
+//! guarantee, on the karate sanity instance and the LFR community
+//! instance ("tiny-ba" models a citation network via the LFR-style
+//! generator).
+//!
+//! Balance semantics: every bisection bounds each side by
+//! `⌈(1+ε)·target⌉ + max_v c(v)` (the ε slack plus the heaviest-node
+//! allowance, `multilevel_bisect`). Recursive bisection *compounds*
+//! that per-split guarantee over ⌈log₂ k⌉ levels, so the sharp bound
+//! for a leaf block is `⌈(1+ε)^⌈log₂ k⌉ · c(V)/k⌉ + ⌈log₂ k⌉·max_v
+//! c(v)` — that (not the single-level L_max, which only the full
+//! pipeline's refinement/rebalance stage restores) is what we assert.
+
+use sclap::generators::instances::by_name;
+use sclap::graph::csr::{Graph, Weight};
+use sclap::initial_partitioning::recursive_bisection::{
+    recursive_bisection, InitialPartitionConfig,
+};
+use sclap::partitioning::metrics::evaluate;
+use sclap::util::exec::ExecutionCtx;
+use sclap::util::rng::Rng;
+
+/// The compounded per-split balance bound (see the module docs).
+fn compounded_bound(g: &Graph, k: usize, eps: f64) -> Weight {
+    let levels = (k as f64).log2().ceil() as i32;
+    ((1.0 + eps).powi(levels) * g.total_node_weight() as f64 / k as f64).ceil() as Weight
+        + levels as Weight * g.max_node_weight()
+}
+
+#[test]
+fn balance_respected_on_karate_and_lfr() {
+    for name in ["karate", "tiny-ba"] {
+        let g = by_name(name).unwrap().build();
+        for k in [2usize, 4, 8] {
+            for config in [
+                InitialPartitionConfig::matching_based(0.03),
+                InitialPartitionConfig::cluster_based(0.03),
+            ] {
+                let ctx = ExecutionCtx::new(2);
+                let p = recursive_bisection(&g, k, &config, &ctx, &mut Rng::new(5));
+                assert_eq!(p.k, k);
+                assert!(p.validate(&g).is_ok());
+                assert_eq!(p.nonempty_blocks(), k, "{name} k={k}: empty block");
+                let bound = compounded_bound(&g, k, 0.03);
+                assert!(
+                    p.max_block_weight() <= bound,
+                    "{name} k={k}: max block {} exceeds compounded ε bound {bound} \
+                     (weights {:?})",
+                    p.max_block_weight(),
+                    p.block_weights
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bisection_balance_is_tight_for_k2() {
+    // A single bisection has no compounding: one level of slack only.
+    for name in ["karate", "tiny-ba"] {
+        let g = by_name(name).unwrap().build();
+        let config = InitialPartitionConfig::matching_based(0.03);
+        let ctx = ExecutionCtx::new(2);
+        let p = recursive_bisection(&g, 2, &config, &ctx, &mut Rng::new(7));
+        let m = evaluate(&g, &p, 0.03);
+        assert!(
+            m.feasible,
+            "{name}: single bisection infeasible, weights {:?}",
+            p.block_weights
+        );
+    }
+}
+
+#[test]
+fn deterministic_across_threads_1_2_4() {
+    for name in ["karate", "tiny-ba"] {
+        let g = by_name(name).unwrap().build();
+        for k in [2usize, 4, 8] {
+            for config in [
+                InitialPartitionConfig::matching_based(0.03),
+                InitialPartitionConfig::cluster_based(0.03),
+            ] {
+                let run = |threads: usize| {
+                    let ctx = ExecutionCtx::new(threads);
+                    recursive_bisection(&g, k, &config, &ctx, &mut Rng::new(9)).blocks
+                };
+                let reference = run(1);
+                for threads in [2usize, 4] {
+                    assert_eq!(
+                        reference,
+                        run(threads),
+                        "{name} k={k}: threads={threads} diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shared_ctx_reuse_is_stable() {
+    // One context serving many bisections back to back (the coordinator
+    // pattern) must give the same answers as fresh contexts.
+    let g = by_name("tiny-ba").unwrap().build();
+    let config = InitialPartitionConfig::matching_based(0.03);
+    let shared = ExecutionCtx::new(4);
+    for k in [2usize, 4, 8] {
+        let a = recursive_bisection(&g, k, &config, &shared, &mut Rng::new(11)).blocks;
+        let fresh = ExecutionCtx::new(4);
+        let b = recursive_bisection(&g, k, &config, &fresh, &mut Rng::new(11)).blocks;
+        assert_eq!(a, b, "k={k}: shared-context run diverged");
+    }
+}

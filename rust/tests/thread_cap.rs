@@ -1,0 +1,75 @@
+//! Integration: the ExecutionCtx handoff caps total worker threads.
+//!
+//! Before the shared-context refactor, a coordinator job created its
+//! own partitioner pool and a guard resolved `threads = 0` to 1 inside
+//! jobs to bound oversubscription. Now one pool serves every nesting
+//! level, so the configured worker count is a hard cap on live pool
+//! worker threads — asserted here via the `util::pool` gauge while a
+//! repetition batch (with every parallel engine enabled) runs.
+//!
+//! This file contains a single test on purpose: the gauge is process
+//! global, and sibling tests creating pools concurrently would make the
+//! cap assertion meaningless. Integration test files run in their own
+//! process, so this is isolated from the rest of the suite.
+
+use sclap::coordinator::service::{default_seeds, Coordinator};
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::util::pool::live_pool_workers;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+#[test]
+fn worker_threads_never_exceed_the_configured_cap() {
+    let base = live_pool_workers();
+    let cap = 3usize; // 3 total workers ⇒ 2 background threads
+    let coord = Coordinator::new(cap);
+    assert_eq!(
+        live_pool_workers(),
+        base + cap - 1,
+        "coordinator pool must own exactly cap-1 background workers"
+    );
+
+    // Sample the gauge concurrently with the batch: any nested pool
+    // creation inside a job would push it above the cap.
+    let stop = Arc::new(AtomicBool::new(false));
+    let max_seen = Arc::new(AtomicUsize::new(0));
+    let sampler = {
+        let stop = stop.clone();
+        let max_seen = max_seen.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                max_seen.fetch_max(live_pool_workers(), Ordering::SeqCst);
+                std::thread::yield_now();
+            }
+        })
+    };
+
+    let g = Arc::new(
+        sclap::generators::instances::by_name("tiny-ba")
+            .unwrap()
+            .build(),
+    );
+    // threads = 0 (auto) was exactly the old oversubscription scenario;
+    // both parallel engines on makes the jobs exercise the shared pool.
+    let mut config = PartitionConfig::preset(Preset::UFast, 4);
+    config.threads = 0;
+    config.parallel_coarsening = true;
+    config.parallel_refinement = true;
+    let agg = coord.partition_repeated(g.clone(), &config, &default_seeds(6));
+    assert_eq!(agg.runs.len(), 6);
+
+    stop.store(true, Ordering::SeqCst);
+    sampler.join().unwrap();
+    let peak = max_seen.load(Ordering::SeqCst);
+    assert!(
+        peak <= base + cap - 1,
+        "live pool workers peaked at {peak}, above the cap of {} — a nested \
+         pool was created during the batch",
+        base + cap - 1
+    );
+    // The batch left no pools behind...
+    assert_eq!(live_pool_workers(), base + cap - 1);
+    // ...and dropping the coordinator joins its workers.
+    drop(coord);
+    assert_eq!(live_pool_workers(), base);
+}
