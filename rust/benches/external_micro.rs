@@ -1,0 +1,170 @@
+//! Microbenchmarks of the out-of-core path: external vs in-memory
+//! level-0 coarsening wall time at shard counts {1, 2, 4, 8}, plus the
+//! IO report — raw shard streaming throughput (MB/s) and semi-external
+//! LPA round time — emitted as `BENCH_external_micro.json` and
+//! `BENCH_external_io.json` (`bench::harness::JsonReport`).
+//!
+//!     cargo bench --bench external_micro [-- --full]
+
+use sclap::bench::harness::JsonReport;
+use sclap::clustering::external_lpa::{dense_from_labels, external_sclap};
+use sclap::clustering::label_propagation::{size_constrained_lpa, LpaConfig, NodeOrdering};
+use sclap::coarsening::contract::{contract, contract_store};
+use sclap::graph::csr::Graph;
+use sclap::graph::store::{write_sharded, GraphStore, ShardedStore};
+use sclap::util::exec::ExecutionCtx;
+use sclap::util::rng::Rng;
+use sclap::util::timer::Timer;
+use std::path::PathBuf;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn temp_dir(label: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("sclap-extbench-{}-{label}", std::process::id()))
+}
+
+/// Mean seconds per iteration of `f` (one warmup).
+fn time<F: FnMut() -> u64>(iters: usize, mut f: F) -> (f64, u64) {
+    let mut sink = f();
+    let t = Timer::start();
+    for _ in 0..iters {
+        sink = sink.wrapping_add(f());
+    }
+    (t.elapsed_s() / iters as f64, sink)
+}
+
+fn level0_upper(g: &Graph) -> i64 {
+    (g.total_node_weight() / 64).max(g.max_node_weight()).max(1)
+}
+
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let (n, avg_degree) = if quick { (30_000, 8.0) } else { (250_000, 10.0) };
+    let iters = if quick { 3 } else { 5 };
+    let lpa_rounds = 3usize;
+
+    let mut rng = Rng::new(1);
+    println!("building LFR-like instance: n={n}, avg degree {avg_degree}...");
+    let (g, _) = sclap::generators::lfr::lfr_like(n, avg_degree, 0.15, &mut rng);
+    println!("n={} m={}\n", g.n(), g.m());
+
+    let mut report = JsonReport::new("external_micro");
+    let mut io_report = JsonReport::new("external_io");
+    for r in [&mut report, &mut io_report] {
+        r.record(
+            "instance",
+            &[
+                ("kind", "lfr".into()),
+                ("n", g.n().into()),
+                ("m", g.m().into()),
+                ("quick", quick.into()),
+            ],
+        );
+    }
+
+    let upper = level0_upper(&g);
+    let cfg = LpaConfig::clustering(lpa_rounds, NodeOrdering::Degree);
+    let ctx = ExecutionCtx::sequential();
+
+    // ---- in-memory level-0 reference: sequential SCLaP + contract ----
+    let (secs, sink) = time(iters, || {
+        let mut r = Rng::new(7);
+        let (c, _) = size_constrained_lpa(&g, upper, &cfg, None, None, &mut r);
+        let contraction = contract(&g, &c);
+        contraction.coarse.n() as u64
+    });
+    println!(
+        "in-memory level-0 (sequential SCLaP + contract)   {:>8.1} ms (coarse n {sink})",
+        secs * 1e3
+    );
+    report.record(
+        "in_memory_level0",
+        &[
+            ("engine", "sequential_sclap".into()),
+            ("secs", secs.into()),
+            ("medges_per_s", (g.m() as f64 * lpa_rounds as f64 / secs / 1e6).into()),
+        ],
+    );
+
+    // ---- external level-0 at shard counts {1, 2, 4, 8} ----
+    for shards in SHARD_COUNTS {
+        let dir = temp_dir(&format!("s{shards}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store: ShardedStore = write_sharded(&g, &dir, shards).unwrap();
+        let disk_bytes = store.disk_bytes().unwrap();
+
+        // level-0 coarsening: semi-external SCLaP + streaming contract
+        let (secs, sink) = time(iters, || {
+            let (labels, _) =
+                external_sclap(&store, upper, &cfg, None, &ctx, &mut Rng::new(7)).unwrap();
+            let clustering = dense_from_labels(store.node_weights(), labels);
+            let contraction = contract_store(&store, &clustering).unwrap();
+            contraction.coarse.n() as u64
+        });
+        println!(
+            "external level-0, {shards} shard(s)                 {:>8.1} ms (coarse n {sink})",
+            secs * 1e3
+        );
+        report.record(
+            "external_level0",
+            &[
+                ("shards", shards.into()),
+                ("secs", secs.into()),
+                ("medges_per_s", (g.m() as f64 * lpa_rounds as f64 / secs / 1e6).into()),
+            ],
+        );
+
+        // raw shard streaming throughput: one full pass over the shards
+        let (secs, arcs) = time(iters, || {
+            let mut cursor = store.cursor();
+            let mut total = 0u64;
+            for s in 0..store.num_shards() {
+                let view = cursor.load(s).unwrap();
+                total += view.arc_count() as u64;
+            }
+            total
+        });
+        let mb_per_s = disk_bytes as f64 / secs / (1 << 20) as f64;
+        println!(
+            "shard streaming, {shards} shard(s)                  {:>8.1} ms   {:>7.1} MB/s ({arcs} arcs)",
+            secs * 1e3,
+            mb_per_s
+        );
+        io_report.record(
+            "shard_streaming",
+            &[
+                ("shards", shards.into()),
+                ("secs", secs.into()),
+                ("disk_bytes", (disk_bytes as usize).into()),
+                ("mb_per_s", mb_per_s.into()),
+            ],
+        );
+
+        // one semi-external LPA round
+        let round_cfg = LpaConfig::clustering(1, NodeOrdering::Degree);
+        let (secs, _) = time(iters, || {
+            external_sclap(&store, upper, &round_cfg, None, &ctx, &mut Rng::new(7))
+                .unwrap()
+                .1 as u64
+        });
+        println!(
+            "external LPA round, {shards} shard(s)               {:>8.1} ms",
+            secs * 1e3
+        );
+        io_report.record(
+            "external_lpa_round",
+            &[
+                ("shards", shards.into()),
+                ("round_secs", secs.into()),
+                ("medges_per_s", (g.m() as f64 / secs / 1e6).into()),
+            ],
+        );
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    let path = report.write().expect("write BENCH_external_micro.json");
+    println!("\nwrote {}", path.display());
+    let path = io_report.write().expect("write BENCH_external_io.json");
+    println!("wrote {}", path.display());
+}

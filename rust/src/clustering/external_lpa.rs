@@ -1,0 +1,501 @@
+//! Semi-external size-constrained label propagation — SCLaP over a
+//! [`GraphStore`], after *(Semi-)External Algorithms for Graph
+//! Partitioning and Clustering* (arXiv 1404.4887): only node state
+//! (labels, cluster weights/counts — O(n)) is resident; adjacency is
+//! streamed shard by shard through a [`ShardCursor`], at most one shard
+//! in RAM.
+//!
+//! # Schedule (and why it is shard- and thread-invariant)
+//!
+//! Each round walks the **global node range in natural order**, split
+//! into fixed [`STREAM_CHUNK`]-node chunks:
+//!
+//! 1. **Score** every node of the chunk against the label/size state
+//!    left by the previous chunk — the sequential engine's move rule
+//!    (strongest eligible neighboring cluster, size bound `U`, ties by
+//!    reservoir sampling), evaluated as a pure function and fanned out
+//!    on the shared pool in fixed [`SCORE_CHUNK`] slices. Each node's
+//!    tie-break RNG stream derives from `(round seed, node id)` via
+//!    [`derive_seed`], so the proposal set is independent of *any*
+//!    decomposition — pool size, scoring slice, or shard boundary.
+//!    Scoring scratch is **degree-bounded** (sorted neighbor-label
+//!    runs, candidates visited in ascending label order), not an
+//!    O(n) per-worker table — per-worker memory stays O(max degree),
+//!    preserving the O(n)-node-state budget at any thread count.
+//! 2. **Apply** the chunk's proposals sequentially in node order
+//!    against the live size table, re-checking eligibility (a target
+//!    that filled up since scoring is skipped), so the bound holds
+//!    exactly after every chunk — the same proposal/apply discipline as
+//!    `clustering::async_lpa`.
+//!
+//! A chunk whose node range crosses a shard boundary is scored in two
+//! sub-ranges (old shard, then new shard) with **no applies in
+//! between** — both sub-scorings read the same state, so shard
+//! boundaries are unobservable in the output. The cursor therefore
+//! advances strictly forward: each round streams each shard exactly
+//! once. The hard invariant (asserted by `rust/tests/sharded_store.rs`):
+//! same seed + config ⇒ byte-identical labels for any shard count and
+//! any thread count, and for [`InMemoryStore`](crate::graph::store)
+//! versus [`ShardedStore`](crate::graph::store) backends.
+//!
+//! Like the other parallel engines this is a *different algorithm* from
+//! the sequential `size_constrained_lpa` (natural order instead of
+//! degree order, chunk-snapshot eligibility): it is selected by
+//! configuration (`PartitionConfig::memory_budget_bytes`), never by
+//! input size probing, thread count, or storage backend.
+
+use crate::clustering::label_propagation::{Clustering, LpaConfig, LpaMode};
+use crate::graph::csr::{NodeId, Weight};
+use crate::graph::store::{GraphStore, ShardView};
+use crate::util::exec::{derive_seed, ExecutionCtx};
+use crate::util::pool::{ThreadPool, WorkerLocal};
+use crate::util::rng::Rng;
+use std::io;
+
+/// Nodes per score→apply chunk. Fixed — part of the logical schedule,
+/// never derived from the thread count, shard count, or input size.
+pub const STREAM_CHUNK: usize = 2048;
+
+/// Nodes per pool scoring slice within a chunk. Also fixed; with
+/// per-node RNG streams the slicing is unobservable anyway, this only
+/// sizes the dispatch.
+const SCORE_CHUNK: usize = 256;
+
+/// Run semi-external SCLaP on `store`.
+///
+/// * `upper_bound` — `U`: no cluster's weight may exceed it (must be at
+///   least the maximum node weight; asserted).
+/// * `initial` — starting labels (`None` ⇒ singletons, clustering mode
+///   only). Refinement mode requires the current partition and applies
+///   the overloaded-block and never-empty rules of the sequential
+///   engine.
+///
+/// Returns the **raw** final labels (refinement callers keep their
+/// block ids; coarsening callers densify via [`dense_from_labels`])
+/// and the number of rounds executed.
+pub fn external_sclap(
+    store: &dyn GraphStore,
+    upper_bound: Weight,
+    config: &LpaConfig,
+    initial: Option<Vec<u32>>,
+    ctx: &ExecutionCtx,
+    rng: &mut Rng,
+) -> io::Result<(Vec<u32>, usize)> {
+    let n = store.n();
+    let node_weights = store.node_weights();
+    assert!(
+        upper_bound >= store.max_node_weight(),
+        "U={} below max node weight {}",
+        upper_bound,
+        store.max_node_weight()
+    );
+    let mut labels: Vec<u32> = match initial {
+        Some(init) => {
+            assert_eq!(init.len(), n);
+            init
+        }
+        None => {
+            assert_eq!(config.mode, LpaMode::Clustering);
+            (0..n as u32).collect()
+        }
+    };
+
+    // Resident cluster state, indexed by (possibly sparse) label.
+    let max_label = labels.iter().copied().max().unwrap_or(0) as usize;
+    let table = (max_label + 1).max(n).max(1);
+    let mut cluster_weight: Vec<Weight> = vec![0; table];
+    let mut cluster_count: Vec<u32> = vec![0; table];
+    for v in 0..n {
+        cluster_weight[labels[v] as usize] += node_weights[v];
+        cluster_count[labels[v] as usize] += 1;
+    }
+
+    let pool = ctx.pool();
+    // Per-worker scoring scratch, degree-bounded (grows to the largest
+    // adjacency seen) — never O(n) per worker.
+    let scratch: WorkerLocal<Vec<(u32, Weight)>> = WorkerLocal::new(pool.threads(), Vec::new);
+
+    let mut cursor = store.cursor();
+    let mut proposals: Vec<(NodeId, u32)> = Vec::new();
+    let mut rounds = 0usize;
+    while rounds < config.max_iterations {
+        rounds += 1;
+        let round_seed = rng.next_u64();
+        let mut changed = 0usize;
+        let mut shard = 0usize;
+        let mut chunk_lo = 0usize;
+        while chunk_lo < n {
+            let chunk_hi = (chunk_lo + STREAM_CHUNK).min(n);
+            proposals.clear();
+            // ---- score (possibly split at shard boundaries; the state
+            // is identical for every split, so the split is invisible).
+            let mut start = chunk_lo;
+            while start < chunk_hi {
+                while store.shard_span(shard).1 <= start {
+                    shard += 1;
+                }
+                let stop = chunk_hi.min(store.shard_span(shard).1);
+                let view = cursor.load(shard)?;
+                score_range(
+                    &view,
+                    node_weights,
+                    &labels,
+                    &cluster_weight,
+                    &cluster_count,
+                    upper_bound,
+                    config.mode,
+                    start,
+                    stop,
+                    round_seed,
+                    pool,
+                    &scratch,
+                    &mut proposals,
+                );
+                start = stop;
+            }
+            // ---- apply in node order against the live size table.
+            for &(v, target) in &proposals {
+                let vi = v as usize;
+                let cur = labels[vi];
+                if cur == target {
+                    continue;
+                }
+                let vw = node_weights[vi];
+                if cluster_weight[target as usize] + vw > upper_bound {
+                    continue; // filled up since scoring
+                }
+                if config.mode == LpaMode::Refinement && cluster_count[cur as usize] <= 1 {
+                    continue; // blocks must never empty
+                }
+                cluster_weight[cur as usize] -= vw;
+                cluster_weight[target as usize] += vw;
+                cluster_count[cur as usize] -= 1;
+                cluster_count[target as usize] += 1;
+                labels[vi] = target;
+                changed += 1;
+            }
+            chunk_lo = chunk_hi;
+        }
+        debug_assert!(
+            config.mode == LpaMode::Refinement
+                || cluster_weight.iter().all(|&w| w <= upper_bound)
+        );
+        if (changed as f64) < config.convergence_fraction * n as f64 {
+            break;
+        }
+    }
+    Ok((labels, rounds))
+}
+
+/// Score nodes `start..stop` (all inside `view`'s span) on the pool,
+/// appending accepted proposals in node order.
+#[allow(clippy::too_many_arguments)]
+fn score_range(
+    view: &ShardView<'_>,
+    node_weights: &[Weight],
+    labels: &[u32],
+    cluster_weight: &[Weight],
+    cluster_count: &[u32],
+    upper_bound: Weight,
+    mode: LpaMode,
+    start: usize,
+    stop: usize,
+    round_seed: u64,
+    pool: &ThreadPool,
+    scratch: &WorkerLocal<Vec<(u32, Weight)>>,
+    out: &mut Vec<(NodeId, u32)>,
+) {
+    let len = stop - start;
+    let num_slices = len.div_ceil(SCORE_CHUNK);
+    let parts: Vec<Vec<(NodeId, u32)>> = pool.map_indexed(num_slices, |worker, slice| {
+        let lo = start + slice * SCORE_CHUNK;
+        let hi = (lo + SCORE_CHUNK).min(stop);
+        // SAFETY: `worker` is the pool-provided id (WorkerLocal contract).
+        let pairs = unsafe { scratch.get_mut(worker) };
+        let mut part = Vec::new();
+        for v in lo..hi {
+            let proposal = score_node(
+                view,
+                node_weights,
+                labels,
+                cluster_weight,
+                cluster_count,
+                upper_bound,
+                mode,
+                v as NodeId,
+                derive_seed(round_seed, v as u64),
+                pairs,
+            );
+            if let Some(target) = proposal {
+                part.push((v as NodeId, target));
+            }
+        }
+        part
+    });
+    for p in parts {
+        out.extend(p);
+    }
+}
+
+/// The sequential engine's move rule as a pure function: strongest
+/// eligible neighboring cluster under the chunk-start state, ties by
+/// reservoir sampling on a per-node RNG stream. Returns the proposed
+/// target, or `None` to stay.
+///
+/// Connection aggregation is degree-bounded: neighbor (label, weight)
+/// pairs are gathered into `pairs` (worker scratch), sorted by label,
+/// and scanned as runs — candidates appear in ascending label order, a
+/// pure function of the inputs, with O(max degree) scratch instead of
+/// an O(n) per-worker table.
+#[allow(clippy::too_many_arguments)]
+fn score_node(
+    view: &ShardView<'_>,
+    node_weights: &[Weight],
+    labels: &[u32],
+    cluster_weight: &[Weight],
+    cluster_count: &[u32],
+    upper_bound: Weight,
+    mode: LpaMode,
+    v: NodeId,
+    seed: u64,
+    pairs: &mut Vec<(u32, Weight)>,
+) -> Option<u32> {
+    let vi = v as usize;
+    let cur = labels[vi];
+    let (adj, ws) = view.adjacent(v);
+    if adj.is_empty() {
+        return None;
+    }
+    if mode == LpaMode::Refinement && cluster_count[cur as usize] <= 1 {
+        return None; // refinement must not empty a block
+    }
+    let vw = node_weights[vi];
+    pairs.clear();
+    pairs.extend(adj.iter().zip(ws).map(|(&u, &w)| (labels[u as usize], w)));
+    pairs.sort_unstable_by_key(|&(label, _)| label);
+    let overloaded = mode == LpaMode::Refinement && cluster_weight[cur as usize] > upper_bound;
+    // Overloaded-block rule: an overloaded block's nodes must consider
+    // only other blocks; otherwise staying is an option with the
+    // connection to `cur`.
+    let stay: Weight = pairs
+        .iter()
+        .filter(|&&(label, _)| label == cur)
+        .map(|&(_, w)| w)
+        .sum();
+    let mut rng = Rng::new(seed);
+    let mut best_conn: i64 = if overloaded { i64::MIN } else { stay };
+    let mut best: u32 = cur;
+    let mut ties: u32 = 1;
+    let mut i = 0usize;
+    while i < pairs.len() {
+        let label = pairs[i].0;
+        let mut conn: Weight = 0;
+        while i < pairs.len() && pairs[i].0 == label {
+            conn += pairs[i].1;
+            i += 1;
+        }
+        if label == cur {
+            continue;
+        }
+        if cluster_weight[label as usize] + vw > upper_bound {
+            continue;
+        }
+        if conn > best_conn {
+            best_conn = conn;
+            best = label;
+            ties = 1;
+        } else if conn == best_conn && best_conn > i64::MIN {
+            ties += 1;
+            if rng.below(ties as usize) == 0 {
+                best = label;
+            }
+        }
+    }
+    (best != cur).then_some(best)
+}
+
+/// Densify raw labels into a [`Clustering`] (dense ids `0..nc` by first
+/// occurrence, cluster weights summed from the resident node weights) —
+/// the store-side equivalent of `Clustering::from_labels`, needing no
+/// materialized graph.
+pub fn dense_from_labels(node_weights: &[Weight], mut labels: Vec<u32>) -> Clustering {
+    let mut remap: Vec<u32> = vec![u32::MAX; labels.len().max(1)];
+    let mut next = 0u32;
+    for l in labels.iter_mut() {
+        let slot = *l as usize;
+        if remap[slot] == u32::MAX {
+            remap[slot] = next;
+            next += 1;
+        }
+        *l = remap[slot];
+    }
+    let num_clusters = next as usize;
+    let mut cluster_weights = vec![0 as Weight; num_clusters];
+    for (v, &l) in labels.iter().enumerate() {
+        cluster_weights[l as usize] += node_weights[v];
+    }
+    Clustering {
+        labels,
+        num_clusters,
+        cluster_weights,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::label_propagation::NodeOrdering;
+    use crate::generators;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::csr::Graph;
+    use crate::graph::store::InMemoryStore;
+
+    fn clustering_cfg(iters: usize) -> LpaConfig {
+        LpaConfig::clustering(iters, NodeOrdering::Degree)
+    }
+
+    fn run_labels(g: &Graph, shards: usize, threads: usize, seed: u64) -> Vec<u32> {
+        let store = InMemoryStore::with_shards(g, shards);
+        let ctx = ExecutionCtx::new(threads);
+        let upper = (g.total_node_weight() / 16).max(g.max_node_weight()).max(1);
+        external_sclap(
+            &store,
+            upper,
+            &clustering_cfg(5),
+            None,
+            &ctx,
+            &mut Rng::new(seed),
+        )
+        .unwrap()
+        .0
+    }
+
+    #[test]
+    fn finds_clique_structure() {
+        // Two K4s joined by one edge.
+        let mut b = GraphBuilder::new(8);
+        for base in [0u32, 4] {
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    b.add_edge(base + i, base + j, 1);
+                }
+            }
+        }
+        b.add_edge(3, 4, 1);
+        let g = b.build();
+        let store = InMemoryStore::new(&g);
+        let ctx = ExecutionCtx::sequential();
+        let (labels, _) =
+            external_sclap(&store, 4, &clustering_cfg(10), None, &ctx, &mut Rng::new(3))
+                .unwrap();
+        let c = dense_from_labels(g.node_weights(), labels);
+        assert_eq!(c.num_clusters, 2);
+        assert!((1..4).all(|i| c.labels[i] == c.labels[0]));
+        assert!((5..8).all(|i| c.labels[i] == c.labels[4]));
+        assert_eq!(c.cut(&g), 1);
+    }
+
+    #[test]
+    fn labels_invariant_across_shards_and_threads() {
+        let mut rng = Rng::new(7);
+        let g = generators::barabasi_albert(3000, 4, &mut rng);
+        let reference = run_labels(&g, 1, 1, 11);
+        assert!(
+            reference.iter().collect::<std::collections::HashSet<_>>().len() < g.n(),
+            "no clustering happened"
+        );
+        for shards in [2usize, 3, 7, 8] {
+            for threads in [1usize, 4] {
+                assert_eq!(
+                    reference,
+                    run_labels(&g, shards, threads, 11),
+                    "shards={shards} threads={threads} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn respects_bound_for_many_seeds() {
+        let mut rng = Rng::new(5);
+        let g = generators::barabasi_albert(600, 3, &mut rng);
+        let store = InMemoryStore::with_shards(&g, 3);
+        let ctx = ExecutionCtx::new(2);
+        for seed in 0..6 {
+            let (labels, _) = external_sclap(
+                &store,
+                20,
+                &clustering_cfg(5),
+                None,
+                &ctx,
+                &mut Rng::new(seed),
+            )
+            .unwrap();
+            let c = dense_from_labels(g.node_weights(), labels);
+            assert!(c.respects_bound(20), "seed {seed}: {:?}", c.cluster_weights);
+        }
+    }
+
+    #[test]
+    fn refinement_reduces_cut_and_keeps_blocks() {
+        let mut rng = Rng::new(9);
+        let g = generators::barabasi_albert(800, 3, &mut rng);
+        // Bad initial 2-partition by parity.
+        let initial: Vec<u32> = (0..g.n() as u32).map(|v| v % 2).collect();
+        let before = crate::partitioning::metrics::cut_value(&g, &initial);
+        let store = InMemoryStore::with_shards(&g, 4);
+        let ctx = ExecutionCtx::sequential();
+        let upper = (g.total_node_weight() * 11 / 20).max(g.max_node_weight());
+        let mut cfg = LpaConfig::refinement(10);
+        cfg.active_nodes = false; // streaming engine has no queue variant
+        let (refined, _) = external_sclap(
+            &store,
+            upper,
+            &cfg,
+            Some(initial),
+            &ctx,
+            &mut Rng::new(2),
+        )
+        .unwrap();
+        let after = crate::partitioning::metrics::cut_value(&g, &refined);
+        assert!(after < before, "cut {after} !< {before}");
+        // Still exactly two non-empty blocks with ids < 2.
+        assert!(refined.iter().all(|&b| b < 2));
+        assert!(refined.iter().any(|&b| b == 0));
+        assert!(refined.iter().any(|&b| b == 1));
+        // Balance bound respected.
+        let w0: i64 = refined
+            .iter()
+            .enumerate()
+            .filter(|&(_, &b)| b == 0)
+            .map(|(v, _)| g.node_weight(v as u32))
+            .sum();
+        assert!(w0 <= upper && (g.total_node_weight() - w0) <= upper);
+    }
+
+    #[test]
+    fn isolated_nodes_stay_put() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1);
+        let g = b.build();
+        let store = InMemoryStore::new(&g);
+        let ctx = ExecutionCtx::sequential();
+        let (labels, _) =
+            external_sclap(&store, 4, &clustering_cfg(5), None, &ctx, &mut Rng::new(1))
+                .unwrap();
+        let c = dense_from_labels(g.node_weights(), labels);
+        assert!(c.num_clusters >= 3);
+    }
+
+    #[test]
+    fn dense_from_labels_matches_clustering_from_labels() {
+        let mut rng = Rng::new(13);
+        let g = generators::erdos_renyi(200, 600, &mut rng);
+        let labels: Vec<u32> = (0..g.n() as u32).map(|v| (v * 7) % 13).collect();
+        let a = dense_from_labels(g.node_weights(), labels.clone());
+        let b = Clustering::from_labels(&g, labels);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.num_clusters, b.num_clusters);
+        assert_eq!(a.cluster_weights, b.cluster_weights);
+    }
+}

@@ -1,16 +1,19 @@
 //! Clustering algorithms: the paper's size-constrained label propagation
 //! (§3.1), ensemble overlay clustering (§4), a shared-memory synchronous
-//! parallel LPA (the paper's §6 future-work direction), and the
+//! parallel LPA (the paper's §6 future-work direction), the
 //! coloring-based parallel *asynchronous* LPA of the companion work
-//! (arXiv 1404.4797).
+//! (arXiv 1404.4797), and the semi-external streaming engine over
+//! `graph::store` shards (arXiv 1404.4887; `external_lpa`).
 
 pub mod async_lpa;
 pub mod ensemble;
+pub mod external_lpa;
 pub mod label_propagation;
 pub mod parallel_lpa;
 
 pub use async_lpa::parallel_async_sclap;
 pub use ensemble::overlay_clustering;
+pub use external_lpa::{dense_from_labels, external_sclap};
 pub use label_propagation::{
     size_constrained_lpa, Clustering, LpaConfig, LpaMode, NodeOrdering,
 };

@@ -232,6 +232,80 @@ pub fn contract_with_ctx(
     contract_with_pool(g, clustering, ctx.map(|c| c.pool()))
 }
 
+/// Streaming contraction over a [`GraphStore`]: one pass over the
+/// shards (each arc read once, at most one shard resident), building
+/// the coarse graph — which fits in RAM by the premise of out-of-core
+/// coarsening — incrementally.
+///
+/// **Exactly** reproduces [`contract`]'s output: `contract` visits each
+/// coarse node's members in increasing fine id (the bucket fill order)
+/// and pushes coarse arcs in first-touch order; streaming fine nodes in
+/// natural order visits every cluster's members in that same relative
+/// order, so maintaining per-coarse-row first-touch arc lists yields
+/// the identical CSR. `rust/tests/sharded_store.rs` asserts equality
+/// against the in-memory path for shard counts {1, 2, 7}.
+pub fn contract_store(
+    store: &dyn crate::graph::store::GraphStore,
+    clustering: &Clustering,
+) -> std::io::Result<Contraction> {
+    use std::collections::hash_map::Entry;
+    use std::collections::HashMap;
+
+    let nc = clustering.num_clusters;
+    let labels = &clustering.labels;
+    assert_eq!(labels.len(), store.n());
+
+    // Per-coarse-node arc rows in first-touch order; `slot` locates the
+    // accumulator of an existing (row, target) pair. Never iterated —
+    // output order comes from `rows` alone, so the HashMap cannot leak
+    // nondeterminism.
+    let mut rows: Vec<Vec<(NodeId, Weight)>> = vec![Vec::new(); nc];
+    let mut slot: HashMap<(u32, u32), usize> = HashMap::new();
+    let mut cursor = store.cursor();
+    for s in 0..store.num_shards() {
+        let view = cursor.load(s)?;
+        let (lo, hi) = view.span();
+        for v in lo..hi {
+            let c = labels[v];
+            let (adj, ws) = view.adjacent(v as NodeId);
+            for (&u, &w) in adj.iter().zip(ws) {
+                let cu = labels[u as usize];
+                if cu == c {
+                    continue;
+                }
+                match slot.entry((c, cu)) {
+                    Entry::Occupied(e) => rows[c as usize][*e.get()].1 += w,
+                    Entry::Vacant(e) => {
+                        e.insert(rows[c as usize].len());
+                        rows[c as usize].push((cu as NodeId, w));
+                    }
+                }
+            }
+        }
+    }
+
+    let total_arcs: usize = rows.iter().map(|r| r.len()).sum();
+    let mut xadj: Vec<usize> = Vec::with_capacity(nc + 1);
+    xadj.push(0);
+    let mut targets: Vec<NodeId> = Vec::with_capacity(total_arcs);
+    let mut edge_weights: Vec<Weight> = Vec::with_capacity(total_arcs);
+    for row in &rows {
+        for &(cu, w) in row {
+            targets.push(cu);
+            edge_weights.push(w);
+        }
+        xadj.push(targets.len());
+    }
+    // Coarse node weights are the cluster weights (what `contract`
+    // computes by summing members).
+    let coarse = Graph::from_csr(xadj, targets, edge_weights, clustering.cluster_weights.clone());
+    debug_assert!(coarse.validate().is_ok());
+    Ok(Contraction {
+        coarse,
+        map: labels.clone(),
+    })
+}
+
 /// Project a coarse partition back to the finer graph.
 pub fn project_partition(map: &[u32], coarse_blocks: &[u32]) -> Vec<u32> {
     map.iter().map(|&c| coarse_blocks[c as usize]).collect()
@@ -384,6 +458,28 @@ mod tests {
                 assert_eq!(seq.coarse, par.coarse, "threads={threads}");
                 assert_eq!(seq.map, par.map);
             }
+        }
+    }
+
+    #[test]
+    fn contract_store_matches_in_memory_for_any_shard_count() {
+        use crate::graph::store::InMemoryStore;
+        let mut rng = crate::util::rng::Rng::new(21);
+        let g = crate::generators::barabasi_albert(1200, 3, &mut rng);
+        let (clustering, _) = crate::clustering::label_propagation::size_constrained_lpa(
+            &g,
+            25,
+            &Default::default(),
+            None,
+            None,
+            &mut rng,
+        );
+        let reference = contract(&g, &clustering);
+        for shards in [1usize, 2, 5, 9] {
+            let store = InMemoryStore::with_shards(&g, shards);
+            let streamed = contract_store(&store, &clustering).unwrap();
+            assert_eq!(reference.coarse, streamed.coarse, "shards={shards}");
+            assert_eq!(reference.map, streamed.map);
         }
     }
 

@@ -6,8 +6,8 @@ pub mod hierarchy;
 pub mod matching;
 
 pub use contract::{
-    contract, contract_parallel, contract_with_ctx, contract_with_pool, project_partition,
-    Contraction,
+    contract, contract_parallel, contract_store, contract_with_ctx, contract_with_pool,
+    project_partition, Contraction,
 };
 pub use hierarchy::{
     coarsen, coarsest_size_threshold, l_max, CoarseningParams, CoarseningScheme, Hierarchy,

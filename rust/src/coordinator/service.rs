@@ -185,6 +185,22 @@ impl Coordinator {
         Aggregate::from_runs(runs)
     }
 
+    /// Partition a stored (possibly out-of-core) graph on this
+    /// coordinator's shared context — the service entry point for
+    /// instances behind a `GraphStore` (on-disk shard directories, or
+    /// in-memory graphs under a memory budget). Routed through
+    /// `partitioning::external::partition_store_with_ctx`, so the
+    /// budget switch, streaming coarsening/refinement, and the ordinary
+    /// pipeline all share this coordinator's one pool.
+    pub fn partition_store(
+        &self,
+        store: &dyn crate::graph::store::GraphStore,
+        config: &PartitionConfig,
+        seed: u64,
+    ) -> std::io::Result<crate::partitioning::external::OutOfCoreResult> {
+        crate::partitioning::external::partition_store_with_ctx(store, config, seed, &self.ctx)
+    }
+
     /// Convenience: a single run.
     pub fn partition_once(
         &self,
@@ -244,6 +260,21 @@ mod tests {
         let direct = MultilevelPartitioner::new(config).partition(&g, 7);
         assert_eq!(via_service.cut, direct.metrics.cut);
         assert_eq!(via_service.blocks, direct.partition.blocks);
+    }
+
+    #[test]
+    fn partition_store_routes_through_the_shared_pool() {
+        use crate::graph::store::InMemoryStore;
+        let g = karate_club();
+        let coord = Coordinator::new(2);
+        let config = PartitionConfig::preset(Preset::CFast, 2);
+        let store = InMemoryStore::new(&g);
+        let via_store = coord.partition_store(&store, &config, 7).unwrap();
+        let direct = coord.partition_once(Arc::new(g.clone()), &config, 7);
+        // No budget: identical to the ordinary pipeline.
+        assert_eq!(via_store.blocks, direct.blocks);
+        assert_eq!(via_store.cut, direct.cut);
+        assert_eq!(via_store.external_levels, 0);
     }
 
     #[test]

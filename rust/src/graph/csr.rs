@@ -13,6 +13,20 @@ pub type NodeId = u32;
 pub type EdgeId = usize;
 pub type Weight = i64;
 
+/// Exact heap footprint (bytes) of the CSR component arrays of a graph
+/// with `n` nodes and `arcs` directed arcs: `xadj` (n+1 × EdgeId),
+/// `node_weights` (n × Weight), `targets` (arcs × NodeId) and
+/// `edge_weights` (arcs × Weight). The single size formula shared by
+/// [`Graph::memory_bytes`] and the `graph::store` backends, so the
+/// in-memory/out-of-core switch decision can be made *before* a graph
+/// is materialized.
+pub fn csr_footprint_bytes(n: usize, arcs: usize) -> u64 {
+    let per_node = std::mem::size_of::<Weight>() as u64;
+    let xadj = (n as u64 + 1) * std::mem::size_of::<EdgeId>() as u64;
+    let per_arc = (std::mem::size_of::<NodeId>() + std::mem::size_of::<Weight>()) as u64;
+    xadj + n as u64 * per_node + arcs as u64 * per_arc
+}
+
 /// Immutable CSR graph with node and edge weights.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Graph {
@@ -108,6 +122,22 @@ impl Graph {
             .map(|v| self.degree(v))
             .max()
             .unwrap_or(0)
+    }
+
+    /// Exact CSR footprint of this graph in bytes (component arrays
+    /// only; `Vec` headers and allocator slack excluded). This is the
+    /// number the `graph::store` memory-budget switch compares against
+    /// `PartitionConfig::memory_budget_bytes`.
+    pub fn memory_bytes(&self) -> u64 {
+        csr_footprint_bytes(self.n(), self.arc_count())
+    }
+
+    /// Raw CSR components `(xadj, targets, edge_weights)` — the
+    /// zero-copy window the in-memory `graph::store` shard views sit
+    /// on. `xadj` has length `n + 1` with global arc offsets.
+    #[inline]
+    pub fn raw_csr(&self) -> (&[EdgeId], &[NodeId], &[Weight]) {
+        (&self.xadj, &self.targets, &self.edge_weights)
     }
 
     /// Neighbors of `v` with edge weights.
@@ -260,6 +290,34 @@ mod tests {
     fn validate_detects_self_loop() {
         let g = Graph::from_csr(vec![0, 2, 2], vec![0, 0], vec![1, 1], vec![1, 1]);
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn memory_bytes_matches_component_arrays() {
+        let g = triangle();
+        let (xadj, targets, weights) = g.raw_csr();
+        let expect = (xadj.len() * std::mem::size_of::<EdgeId>()
+            + targets.len() * std::mem::size_of::<NodeId>()
+            + weights.len() * std::mem::size_of::<Weight>()
+            + g.n() * std::mem::size_of::<Weight>()) as u64;
+        assert_eq!(g.memory_bytes(), expect);
+        assert_eq!(g.memory_bytes(), csr_footprint_bytes(g.n(), g.arc_count()));
+        // 64-bit usize/i64, u32 NodeId: 4*8 + 3*8 + 6*4 + 6*8 = 128.
+        assert_eq!(g.memory_bytes(), 128);
+        // The formula is usable before materialization.
+        assert_eq!(csr_footprint_bytes(0, 0), 8);
+    }
+
+    #[test]
+    fn raw_csr_is_the_adjacency() {
+        let g = triangle();
+        let (xadj, targets, weights) = g.raw_csr();
+        assert_eq!(xadj.len(), g.n() + 1);
+        assert_eq!(targets.len(), g.arc_count());
+        assert_eq!(weights.len(), g.arc_count());
+        for v in g.nodes() {
+            assert_eq!(&targets[xadj[v as usize]..xadj[v as usize + 1]], g.adjacent(v));
+        }
     }
 
     #[test]

@@ -15,96 +15,214 @@ use std::fs::File;
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-/// Parse a METIS-format graph from a reader.
-pub fn read_metis<R: BufRead>(reader: R) -> io::Result<Graph> {
-    let mut lines = reader.lines();
-    let header = loop {
-        match lines.next() {
-            Some(line) => {
-                let line = line?;
-                let t = line.trim();
-                if !t.is_empty() && !t.starts_with('%') {
-                    break t.to_string();
-                }
-            }
-            None => return Err(bad("empty METIS file")),
-        }
-    };
-    let head: Vec<usize> = header
-        .split_whitespace()
-        .map(|t| t.parse().map_err(|_| bad("bad header token")))
-        .collect::<Result<_, _>>()?;
-    if head.len() < 2 {
-        return Err(bad("METIS header needs `n m`"));
-    }
-    let (n, m) = (head[0], head[1]);
-    let fmt = head.get(2).copied().unwrap_or(0);
-    let has_node_w = fmt / 10 % 10 == 1;
-    let has_edge_w = fmt % 10 == 1;
-    let ncon = head.get(3).copied().unwrap_or(if has_node_w { 1 } else { 0 });
+/// One parsed METIS adjacency row, in canonical form: 0-indexed
+/// neighbors sorted by id, duplicate entries merged (weights summed),
+/// self loops dropped — exactly the per-node adjacency the CSR
+/// [`GraphBuilder`] produces, so streaming consumers (the
+/// `graph::store` METIS→shards converter) and [`read_metis`] agree
+/// byte-for-byte on well-formed (symmetric) files.
+#[derive(Debug, Default)]
+pub struct MetisRow {
+    pub node_weight: Weight,
+    pub neighbors: Vec<(NodeId, Weight)>,
+}
 
-    let mut builder = GraphBuilder::with_edge_capacity(n, m);
-    let mut v: usize = 0;
-    for line in lines {
-        let line = line?;
-        let t = line.trim();
-        if t.starts_with('%') {
-            continue;
-        }
-        if v >= n {
-            if t.is_empty() {
+/// Streaming METIS parser: header up front, then one adjacency row per
+/// [`MetisReader::next_row`] call into a reused [`MetisRow`] buffer —
+/// O(max row) memory, never the whole graph, and one reused line
+/// buffer (no per-row allocation on the multi-billion-edge conversion
+/// path). Tolerates `%` comment lines anywhere, CRLF line endings and
+/// stray whitespace; blank lines inside the adjacency section are
+/// isolated nodes (per the format), blank/comment lines after the last
+/// node are ignored. Edge weights must be positive (the CSR invariant
+/// every consumer — `GraphBuilder` output, shard files — relies on).
+pub struct MetisReader<B: BufRead> {
+    reader: B,
+    /// Reused line buffer.
+    line: String,
+    /// Node count from the header.
+    pub n: usize,
+    /// Undirected edge count from the header.
+    pub m: usize,
+    has_node_w: bool,
+    has_edge_w: bool,
+    ncon: usize,
+    next_node: usize,
+}
+
+impl<B: BufRead> MetisReader<B> {
+    /// Parse the header; the reader is then positioned on row 0.
+    pub fn new(mut reader: B) -> io::Result<Self> {
+        let mut line = String::new();
+        let head: Vec<usize> = loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                return Err(bad("empty METIS file"));
+            }
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
                 continue;
             }
-            return Err(bad("more adjacency lines than nodes"));
+            break t
+                .split_whitespace()
+                .map(|tok| tok.parse().map_err(|_| bad("bad header token")))
+                .collect::<Result<_, _>>()?;
+        };
+        if head.len() < 2 {
+            return Err(bad("METIS header needs `n m`"));
         }
-        let mut tokens = t.split_whitespace().map(|s| {
+        let (n, m) = (head[0], head[1]);
+        let fmt = head.get(2).copied().unwrap_or(0);
+        let has_node_w = fmt / 10 % 10 == 1;
+        let has_edge_w = fmt % 10 == 1;
+        let ncon = head.get(3).copied().unwrap_or(if has_node_w { 1 } else { 0 });
+        Ok(MetisReader {
+            reader,
+            line,
+            n,
+            m,
+            has_node_w,
+            has_edge_w,
+            ncon,
+            next_node: 0,
+        })
+    }
+
+    /// Read the adjacency row of the next node into `row` (buffers
+    /// reused). Returns `Ok(false)` once all `n` rows are consumed —
+    /// at which point the remaining input is validated to contain only
+    /// blank/comment lines.
+    pub fn next_row(&mut self, row: &mut MetisRow) -> io::Result<bool> {
+        if self.next_node >= self.n {
+            loop {
+                self.line.clear();
+                if self.reader.read_line(&mut self.line)? == 0 {
+                    return Ok(false);
+                }
+                let t = self.line.trim();
+                if !t.is_empty() && !t.starts_with('%') {
+                    return Err(bad("more adjacency lines than nodes"));
+                }
+            }
+        }
+        let v = self.next_node;
+        // Next non-comment line; a blank line is a (valid) isolated node.
+        loop {
+            self.line.clear();
+            if self.reader.read_line(&mut self.line)? == 0 {
+                return Err(bad("fewer adjacency lines than header n"));
+            }
+            if !self.line.trim_start().starts_with('%') {
+                break;
+            }
+        }
+        row.node_weight = 1;
+        row.neighbors.clear();
+        let mut tokens = self.line.split_whitespace().map(|s| {
             s.parse::<i64>()
                 .map_err(|_| bad("non-integer token in adjacency line"))
         });
-        if has_node_w {
+        if self.has_node_w {
             // Only the first constraint is used as the node weight.
             let mut w = 1;
-            for c in 0..ncon.max(1) {
+            for c in 0..self.ncon.max(1) {
                 let tok = tokens.next().ok_or_else(|| bad("missing node weight"))??;
                 if c == 0 {
                     w = tok;
                 }
             }
-            builder.set_node_weight(v as NodeId, w as Weight);
+            if w < 0 {
+                // Reject at parse time (like non-positive edge weights)
+                // so the in-memory and shard-conversion paths agree
+                // instead of the converter failing at its final reopen.
+                return Err(bad(&format!("negative node weight {w} (node {})", v + 1)));
+            }
+            row.node_weight = w as Weight;
         }
         loop {
             let Some(tok) = tokens.next() else { break };
             let u = tok?;
-            if u < 1 || u as usize > n {
-                return Err(bad("neighbor id out of range"));
+            if u == 0 {
+                // The classic off-by-one: 0-indexed input. Without this
+                // check `u - 1` underflows into a bogus huge id.
+                return Err(bad(&format!(
+                    "METIS adjacency is 1-indexed: node {} lists neighbor id 0",
+                    v + 1
+                )));
             }
-            let w = if has_edge_w {
+            if u < 1 || u as usize > self.n {
+                return Err(bad(&format!(
+                    "neighbor id {u} out of range 1..={} (node {})",
+                    self.n,
+                    v + 1
+                )));
+            }
+            let w = if self.has_edge_w {
                 tokens.next().ok_or_else(|| bad("missing edge weight"))??
             } else {
                 1
             };
+            if w <= 0 {
+                // CSR invariant: ω > 0. Rejecting here keeps the
+                // streaming shard converter and `read_metis` agreeing
+                // instead of failing later at shard-read time.
+                return Err(bad(&format!(
+                    "non-positive edge weight {w} (node {})",
+                    v + 1
+                )));
+            }
             let u = (u - 1) as NodeId;
+            if u as usize != v {
+                row.neighbors.push((u, w as Weight));
+            } // self loop: drop, consistent with GraphBuilder
+        }
+        // Canonical row: sorted by target, duplicates merged — the form
+        // GraphBuilder produces after symmetrization + dedup.
+        row.neighbors.sort_unstable_by_key(|&(u, _)| u);
+        row.neighbors.dedup_by(|a, b| {
+            if a.0 == b.0 {
+                b.1 += a.1;
+                true
+            } else {
+                false
+            }
+        });
+        self.next_node += 1;
+        Ok(true)
+    }
+
+    /// Header-vs-parsed edge-count check shared with the streaming
+    /// converter: tolerate sloppy headers (dedup shrinks counts in real
+    /// DIMACS files) but reject wildly-off ones.
+    pub(crate) fn check_edge_count(&self, parsed_m: usize) -> io::Result<()> {
+        if parsed_m != self.m && parsed_m.abs_diff(self.m) > self.m / 2 + 8 {
+            return Err(bad(&format!(
+                "edge count mismatch: header {}, parsed {parsed_m}",
+                self.m
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Parse a METIS-format graph from a reader.
+pub fn read_metis<R: BufRead>(reader: R) -> io::Result<Graph> {
+    let mut metis = MetisReader::new(reader)?;
+    let mut builder = GraphBuilder::with_edge_capacity(metis.n, metis.m);
+    let mut row = MetisRow::default();
+    let mut v: NodeId = 0;
+    while metis.next_row(&mut row)? {
+        builder.set_node_weight(v, row.node_weight);
+        for &(u, w) in &row.neighbors {
             // Each undirected edge appears twice in METIS; keep one copy.
-            if (v as NodeId) < u {
-                builder.add_edge(v as NodeId, u, w as Weight);
-            } else if (v as NodeId) == u {
-                // self loop: drop, consistent with builder
+            if v < u {
+                builder.add_edge(v, u, w);
             }
         }
         v += 1;
     }
-    if v != n {
-        return Err(bad("fewer adjacency lines than header n"));
-    }
     let g = builder.build();
-    if g.m() != m {
-        // Tolerate instances whose header miscounts after dedup, but warn
-        // via error only when wildly off (>2x) — real DIMACS files are
-        // occasionally sloppy. Here: strict is safer for our own files.
-        if g.m().abs_diff(m) > m / 2 + 8 {
-            return Err(bad(&format!("edge count mismatch: header {m}, parsed {}", g.m())));
-        }
-    }
+    metis.check_edge_count(g.m())?;
     Ok(g)
 }
 
@@ -247,7 +365,8 @@ pub fn read_binary<R: Read>(mut reader: R) -> io::Result<Graph> {
     Ok(Graph::from_csr(xadj, targets, weights, node_weights))
 }
 
-fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+/// Little-endian u64 read shared with the `graph::store` shard format.
+pub(crate) fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
@@ -330,6 +449,70 @@ mod tests {
         assert!(read_metis(Cursor::new("")).is_err());
         assert!(read_metis(Cursor::new("3 1\n2\n1\n")).is_err()); // missing line
         assert!(read_metis(Cursor::new("2 1\n5\n\n")).is_err()); // id range
+    }
+
+    #[test]
+    fn metis_tolerates_crlf_comments_and_whitespace() {
+        // CRLF endings, % comments after the header and between rows,
+        // trailing whitespace, and blank/comment lines after the last
+        // node must all parse cleanly.
+        let text = "% made on windows\r\n3 2\r\n% mid comment\r\n2  \r\n1 3\r\n  2\r\n\r\n% bye\r\n";
+        let g = read_metis(Cursor::new(text)).unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 2);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn metis_blank_line_is_isolated_node() {
+        let text = "3 1\n2\n1\n\n";
+        let g = read_metis(Cursor::new(text)).unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.degree(2), 0);
+    }
+
+    #[test]
+    fn metis_rejects_zero_id_with_clear_error() {
+        // 0-indexed input must produce a diagnosis, not an underflowed id.
+        let err = read_metis(Cursor::new("2 1\n0\n1\n")).unwrap_err();
+        assert!(err.to_string().contains("1-indexed"), "{err}");
+    }
+
+    #[test]
+    fn metis_rejects_non_positive_edge_weights() {
+        // fmt=1 with weight 0 / negative: must fail at parse time (the
+        // CSR invariant), not later at shard-read time.
+        for bad_w in ["0", "-3"] {
+            let text = format!("2 1 1\n2 {bad_w}\n1 {bad_w}\n");
+            let err = read_metis(Cursor::new(text)).unwrap_err();
+            assert!(err.to_string().contains("edge weight"), "{err}");
+        }
+    }
+
+    #[test]
+    fn metis_rejects_negative_node_weights() {
+        // fmt=10: a negative vertex weight would poison the balance
+        // math in-memory and wrap to 2^64-1 in the shard meta — reject
+        // at parse time on both paths.
+        let err = read_metis(Cursor::new("2 1 10\n-1 2\n1 1\n")).unwrap_err();
+        assert!(err.to_string().contains("node weight"), "{err}");
+    }
+
+    #[test]
+    fn metis_row_canonical_form() {
+        // Duplicate neighbor entries merge (weights summed), self loops
+        // drop, rows come out sorted — the GraphBuilder-equivalent form.
+        let text = "3 2 1\n2 5 2 3 3 1\n1 5 1 3\n1 1\n";
+        let mut r = MetisReader::new(Cursor::new(text)).unwrap();
+        let mut row = MetisRow::default();
+        assert!(r.next_row(&mut row).unwrap());
+        assert_eq!(row.neighbors, vec![(1, 8), (2, 1)]);
+        assert!(r.next_row(&mut row).unwrap());
+        assert_eq!(row.neighbors, vec![(0, 8)]);
+        assert!(r.next_row(&mut row).unwrap());
+        assert_eq!(row.neighbors, vec![(0, 1)]);
+        assert!(!r.next_row(&mut row).unwrap());
     }
 
     #[test]

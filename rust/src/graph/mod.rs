@@ -1,15 +1,18 @@
-//! Graph substrate: CSR storage, construction, file I/O, statistics, and
-//! embedded test instances.
+//! Graph substrate: CSR storage, construction, file I/O, statistics,
+//! embedded test instances, and the sharded out-of-core storage layer
+//! ([`store`]).
 
 pub mod builder;
 pub mod csr;
 pub mod io;
 pub mod karate;
 pub mod stats;
+pub mod store;
 pub mod subgraph;
 
 pub use builder::GraphBuilder;
 pub use csr::{EdgeId, Graph, NodeId, Weight};
 pub use karate::karate_club;
 pub use stats::{compute_stats, GraphStats};
+pub use store::{GraphStore, InMemoryStore, ShardedStore};
 pub use subgraph::{induced_subgraph, largest_component};

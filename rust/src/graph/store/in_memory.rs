@@ -1,0 +1,181 @@
+//! [`InMemoryStore`] — the [`GraphStore`] view of an existing CSR
+//! [`Graph`]: shard views are zero-copy windows onto the graph's own
+//! arrays, so `load` never copies, and any virtual shard count is free.
+//!
+//! Two uses: (1) the reference backend in the shard-invariance tests
+//! (`ShardedStore` must be byte-identical to it), and (2) the "the
+//! graph happens to fit, but the budgeted out-of-core algorithm was
+//! requested" path of `partitioning::external::partition_store`.
+
+use super::{shard_bounds, GraphStore, ShardCursor, ShardView};
+use crate::graph::csr::{Graph, Weight};
+use std::io;
+
+/// Zero-copy [`GraphStore`] over a borrowed [`Graph`].
+#[derive(Debug)]
+pub struct InMemoryStore<'g> {
+    graph: &'g Graph,
+    bounds: Vec<usize>,
+}
+
+impl<'g> InMemoryStore<'g> {
+    /// Single-shard view (the common case).
+    pub fn new(graph: &'g Graph) -> Self {
+        Self::with_shards(graph, 1)
+    }
+
+    /// View with `shards` contiguous virtual shards — free, since the
+    /// views window one shared CSR; used to exercise shard-boundary
+    /// handling without touching disk.
+    pub fn with_shards(graph: &'g Graph, shards: usize) -> Self {
+        InMemoryStore {
+            graph,
+            bounds: shard_bounds(graph.n(), shards),
+        }
+    }
+
+    /// The underlying graph.
+    pub fn graph(&self) -> &'g Graph {
+        self.graph
+    }
+}
+
+impl GraphStore for InMemoryStore<'_> {
+    fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    fn arc_count(&self) -> usize {
+        self.graph.arc_count()
+    }
+
+    fn total_node_weight(&self) -> Weight {
+        self.graph.total_node_weight()
+    }
+
+    fn max_node_weight(&self) -> Weight {
+        self.graph.max_node_weight()
+    }
+
+    fn node_weights(&self) -> &[Weight] {
+        self.graph.node_weights()
+    }
+
+    fn num_shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    fn shard_span(&self, shard: usize) -> (usize, usize) {
+        (self.bounds[shard], self.bounds[shard + 1])
+    }
+
+    fn cursor(&self) -> Box<dyn ShardCursor + '_> {
+        Box::new(InMemoryCursor {
+            graph: self.graph,
+            bounds: &self.bounds,
+        })
+    }
+
+    fn memory_bytes(&self) -> u64 {
+        self.graph.memory_bytes()
+    }
+
+    fn as_graph(&self) -> Option<&Graph> {
+        Some(self.graph)
+    }
+
+    fn to_graph(&self) -> io::Result<Graph> {
+        Ok(self.graph.clone())
+    }
+}
+
+/// Cursor over an [`InMemoryStore`]: `load` slices the graph's CSR
+/// arrays — no state, no copies, trivially allocation-free.
+struct InMemoryCursor<'a> {
+    graph: &'a Graph,
+    bounds: &'a [usize],
+}
+
+impl ShardCursor for InMemoryCursor<'_> {
+    fn load(&mut self, shard: usize) -> io::Result<ShardView<'_>> {
+        let lo = self.bounds[shard];
+        let hi = self.bounds[shard + 1];
+        let (xadj, targets, weights) = self.graph.raw_csr();
+        let a = xadj[lo];
+        let b = xadj[hi];
+        Ok(ShardView::new(
+            lo,
+            hi,
+            &xadj[lo..=hi],
+            &targets[a..b],
+            &weights[a..b],
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::store::streaming_cut;
+
+    fn sample() -> Graph {
+        let mut b = GraphBuilder::new(6);
+        b.add_edge(0, 1, 2);
+        b.add_edge(1, 2, 1);
+        b.add_edge(2, 3, 3);
+        b.add_edge(3, 4, 1);
+        b.add_edge(4, 5, 2);
+        b.add_edge(0, 5, 1);
+        b.set_node_weight(4, 7);
+        b.build()
+    }
+
+    #[test]
+    fn counts_mirror_the_graph() {
+        let g = sample();
+        let s = InMemoryStore::new(&g);
+        assert_eq!(s.n(), g.n());
+        assert_eq!(s.m(), g.m());
+        assert_eq!(s.arc_count(), g.arc_count());
+        assert_eq!(s.total_node_weight(), g.total_node_weight());
+        assert_eq!(s.max_node_weight(), 7);
+        assert_eq!(s.node_weights(), g.node_weights());
+        assert_eq!(s.memory_bytes(), g.memory_bytes());
+        assert_eq!(s.to_graph().unwrap(), g);
+    }
+
+    #[test]
+    fn views_equal_graph_adjacency_for_any_shard_count() {
+        let g = sample();
+        for shards in [1usize, 2, 3, 4, 7] {
+            let s = InMemoryStore::with_shards(&g, shards);
+            assert_eq!(s.num_shards(), shards);
+            let mut cursor = s.cursor();
+            let mut seen = 0usize;
+            for sh in 0..s.num_shards() {
+                let view = cursor.load(sh).unwrap();
+                let (lo, hi) = view.span();
+                assert_eq!((lo, hi), s.shard_span(sh));
+                for v in lo..hi {
+                    let (adj, ws) = view.adjacent(v as u32);
+                    assert_eq!(adj, g.adjacent(v as u32), "shards={shards} v={v}");
+                    assert_eq!(ws, g.adjacent_weights(v as u32));
+                    seen += 1;
+                }
+            }
+            assert_eq!(seen, g.n());
+        }
+    }
+
+    #[test]
+    fn streaming_cut_matches_direct() {
+        let g = sample();
+        let labels = vec![0u32, 0, 1, 1, 2, 2];
+        let direct = crate::partitioning::metrics::cut_value(&g, &labels);
+        for shards in [1usize, 3, 6] {
+            let s = InMemoryStore::with_shards(&g, shards);
+            assert_eq!(streaming_cut(&s, &labels).unwrap(), direct);
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Sharded graph storage — topology access abstracted over *where the
+//! adjacency lives*, so the partitioning pipeline can run on instances
+//! whose CSR does not fit in RAM (the paper's headline 3.3G-edge regime;
+//! semi-external model after arXiv 1404.4887: node state stays resident,
+//! adjacency is streamed).
+//!
+//! # Model
+//!
+//! A [`GraphStore`] splits the node range `0..n` into `num_shards`
+//! **contiguous** shards; shard `s` owns nodes
+//! `shard_span(s) = [lo, hi)` and their outgoing arcs. Node state (node
+//! weights — and, in the algorithms on top, labels and cluster-size
+//! tables) is always resident: O(n) memory. Adjacency is only reachable
+//! through a [`ShardCursor`], which keeps **at most one shard's CSR
+//! resident at a time**: `load(s)` replaces the previous shard and
+//! returns a [`ShardView`] window onto it. Algorithms that stream
+//! shards in increasing order therefore touch each shard file exactly
+//! once per pass.
+//!
+//! Two implementations:
+//! - [`InMemoryStore`] — zero-copy windows onto an existing [`Graph`]
+//!   (any virtual shard count; `load` never copies or allocates);
+//! - [`ShardedStore`] — an on-disk shard directory (format below); the
+//!   cursor reuses three grow-only buffers across `load` calls, so the
+//!   steady state is allocation-free and peak memory is one shard.
+//!
+//! The determinism contract extends over storage: every algorithm in
+//! this crate that consumes a `GraphStore` (`clustering::external_lpa`,
+//! `coarsening::contract::contract_store`,
+//! `partitioning::external::partition_store`) is **shard-count- and
+//! thread-count-invariant** — same seed + same config ⇒ byte-identical
+//! output for any backend, any shard count, any pool size (enforced by
+//! `rust/tests/sharded_store.rs`). Sharding is an execution knob, never
+//! an algorithmic one.
+//!
+//! # On-disk shard format (version 1)
+//!
+//! A store is a directory. All integers are little-endian `u64` (the
+//! convention of `graph::io::write_binary`); the format is versioned
+//! independently of the single-file `SCLAPG1` dump so the two can
+//! evolve separately.
+//!
+//! `meta.bin` — resident node state + shard table:
+//!
+//! ```text
+//! magic   8 bytes  b"SCLAPM1\0"
+//! version u64      SHARD_FORMAT_VERSION (1)
+//! n       u64      node count (must fit u32: NodeId)
+//! arcs    u64      total directed arc count (2m)
+//! shards  u64      shard count S
+//! bounds  (S+1)×u64  shard boundaries; bounds[0]=0, bounds[S]=n,
+//!                    monotonically non-decreasing (empty shards legal)
+//! nodew   n×u64    node weights
+//! ```
+//!
+//! `shard_<s>.bin` — one CSR segment per shard:
+//!
+//! ```text
+//! magic   8 bytes  b"SCLAPS1\0"
+//! version u64      SHARD_FORMAT_VERSION (1)
+//! lo, hi  u64×2    node span (must match meta bounds)
+//! arcs    u64      arc count of this shard
+//! deg     (hi-lo)×u64   degrees (prefix-summed into xadj on load)
+//! arcs    arcs×(u64 target, u64 weight)  targets are *global* node
+//!                                        ids; weights in 1..=i64::MAX
+//! ```
+//!
+//! Arc lists are stored per node sorted by target with duplicates
+//! merged — the canonical [`GraphBuilder`](crate::graph::builder)
+//! adjacency form — so a `ShardedStore` of a METIS file and the
+//! in-memory `read_metis` graph are arc-for-arc identical.
+
+pub mod in_memory;
+pub mod sharded;
+
+pub use in_memory::InMemoryStore;
+pub use sharded::{convert_metis_to_shards, write_sharded, ShardedStore};
+
+use crate::graph::csr::{EdgeId, Graph, NodeId, Weight};
+use std::io;
+
+/// Shard binary format version (meta + shard files).
+pub const SHARD_FORMAT_VERSION: u64 = 1;
+
+/// Abstract topology access: counts + resident node state + per-shard
+/// adjacency streaming. Object safe — the pipeline takes
+/// `&dyn GraphStore`. `Sync` is a supertrait so a store can be shared
+/// across pool workers (each worker opens its own [`ShardCursor`];
+/// repetition fan-out and future parallel shard prefetch rely on it).
+pub trait GraphStore: Sync {
+    /// Number of nodes.
+    fn n(&self) -> usize;
+    /// Number of directed arcs (2m).
+    fn arc_count(&self) -> usize;
+    /// Number of undirected edges.
+    fn m(&self) -> usize {
+        self.arc_count() / 2
+    }
+    fn total_node_weight(&self) -> Weight;
+    fn max_node_weight(&self) -> Weight;
+    /// Resident node weights, length `n` (the semi-external model keeps
+    /// all node state in RAM).
+    fn node_weights(&self) -> &[Weight];
+    /// Number of contiguous node-range shards.
+    fn num_shards(&self) -> usize;
+    /// Node span `[lo, hi)` of shard `shard`.
+    fn shard_span(&self, shard: usize) -> (usize, usize);
+    /// A fresh cursor; see [`ShardCursor`].
+    fn cursor(&self) -> Box<dyn ShardCursor + '_>;
+    /// Bytes the full CSR would occupy in RAM
+    /// ([`crate::graph::csr::csr_footprint_bytes`]) — the quantity the
+    /// memory-budget switch compares, available *without* materializing.
+    fn memory_bytes(&self) -> u64;
+    /// The already-materialized graph, when this backend holds one
+    /// (in-memory stores). Lets the budget-fits path run without the
+    /// [`to_graph`](GraphStore::to_graph) copy — which would double
+    /// peak memory exactly when a budget was asked for.
+    fn as_graph(&self) -> Option<&Graph> {
+        None
+    }
+    /// Materialize the full in-memory [`Graph`] (streams every shard).
+    fn to_graph(&self) -> io::Result<Graph>;
+}
+
+/// Streaming access to one shard at a time. `load(s)` makes shard `s`
+/// the resident shard (dropping the previous one) and returns a view;
+/// loading the already-resident shard is free. Implementations reuse
+/// their buffers across loads — after warm-up, `load` performs no
+/// allocation and holds at most one shard's CSR.
+pub trait ShardCursor {
+    fn load(&mut self, shard: usize) -> io::Result<ShardView<'_>>;
+}
+
+/// Borrowed CSR window over one shard's node span `[lo, hi)`.
+///
+/// `xadj` has length `hi - lo + 1`; offsets are relative to `xadj[0]`
+/// (global offsets from an in-memory graph and rebased-to-0 offsets
+/// from a shard file both satisfy this), `targets`/`weights` hold
+/// exactly this shard's arcs. Targets are global node ids.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardView<'a> {
+    lo: usize,
+    hi: usize,
+    xadj: &'a [EdgeId],
+    targets: &'a [NodeId],
+    weights: &'a [Weight],
+}
+
+impl<'a> ShardView<'a> {
+    pub fn new(
+        lo: usize,
+        hi: usize,
+        xadj: &'a [EdgeId],
+        targets: &'a [NodeId],
+        weights: &'a [Weight],
+    ) -> Self {
+        debug_assert_eq!(xadj.len(), hi - lo + 1);
+        debug_assert_eq!(xadj[hi - lo] - xadj[0], targets.len());
+        debug_assert_eq!(targets.len(), weights.len());
+        ShardView {
+            lo,
+            hi,
+            xadj,
+            targets,
+            weights,
+        }
+    }
+
+    /// Node span `[lo, hi)` of this view.
+    #[inline]
+    pub fn span(&self) -> (usize, usize) {
+        (self.lo, self.hi)
+    }
+
+    /// Arcs in this shard.
+    #[inline]
+    pub fn arc_count(&self) -> usize {
+        self.targets.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> usize {
+        let i = v as usize - self.lo;
+        self.xadj[i + 1] - self.xadj[i]
+    }
+
+    /// Neighbor ids and aligned edge weights of `v` (global ids).
+    #[inline]
+    pub fn adjacent(&self, v: NodeId) -> (&'a [NodeId], &'a [Weight]) {
+        let i = v as usize - self.lo;
+        let base = self.xadj[0];
+        let a = self.xadj[i] - base;
+        let b = self.xadj[i + 1] - base;
+        (&self.targets[a..b], &self.weights[a..b])
+    }
+}
+
+/// Contiguous shard boundaries for `n` nodes split into `shards` parts
+/// (balanced by node count; `shards > n` yields empty trailing spans,
+/// which every consumer tolerates).
+pub fn shard_bounds(n: usize, shards: usize) -> Vec<usize> {
+    let s = shards.max(1);
+    (0..=s).map(|i| i * n / s).collect()
+}
+
+/// Total weight of cut edges of a labelling, computed in one streaming
+/// pass over the shards (each arc read once; labels resident).
+pub fn streaming_cut(store: &dyn GraphStore, labels: &[u32]) -> io::Result<Weight> {
+    assert_eq!(labels.len(), store.n());
+    let mut cut: Weight = 0;
+    let mut cursor = store.cursor();
+    for s in 0..store.num_shards() {
+        let view = cursor.load(s)?;
+        let (lo, hi) = view.span();
+        for v in lo..hi {
+            let bv = labels[v];
+            let (adj, ws) = view.adjacent(v as NodeId);
+            for (&u, &w) in adj.iter().zip(ws) {
+                if labels[u as usize] != bv {
+                    cut += w;
+                }
+            }
+        }
+    }
+    Ok(cut / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_bounds_cover_and_balance() {
+        let b = shard_bounds(10, 3);
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last(), Some(&10));
+        assert!(b.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(shard_bounds(5, 1), vec![0, 5]);
+        // more shards than nodes: empty spans, still covering
+        let tiny = shard_bounds(2, 5);
+        assert_eq!(tiny.len(), 6);
+        assert_eq!(*tiny.last().unwrap(), 2);
+        assert_eq!(shard_bounds(0, 4), vec![0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn shard_view_windows() {
+        // Hand-built window: nodes 2..4 of some graph, global offsets.
+        let xadj = [10usize, 12, 15];
+        let targets = [1u32, 3, 0, 1, 4];
+        let weights = [1i64, 2, 3, 4, 5];
+        let v = ShardView::new(2, 4, &xadj, &targets, &weights);
+        assert_eq!(v.span(), (2, 4));
+        assert_eq!(v.arc_count(), 5);
+        assert_eq!(v.degree(2), 2);
+        assert_eq!(v.degree(3), 3);
+        assert_eq!(v.adjacent(2), (&targets[0..2], &weights[0..2]));
+        assert_eq!(v.adjacent(3), (&targets[2..5], &weights[2..5]));
+    }
+}

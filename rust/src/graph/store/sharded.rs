@@ -1,0 +1,559 @@
+//! [`ShardedStore`] — the on-disk [`GraphStore`]: a directory of
+//! independent CSR shard segments plus a meta file holding the resident
+//! node state (format documented in the `graph::store` module docs).
+//!
+//! Peak-memory discipline:
+//! - [`convert_metis_to_shards`] streams the METIS file row by row and
+//!   buffers **one shard's** degrees/arcs before flushing it to disk —
+//!   the full graph is never materialized (node weights, O(n), are the
+//!   only whole-graph state, as the semi-external model allows);
+//! - [`ShardFileCursor`] owns three grow-only buffers (`xadj`,
+//!   `targets`, `weights`) that are cleared and refilled on every
+//!   `load` — at most one shard resident, allocation-free once the
+//!   buffers have grown to the largest shard.
+
+use super::{shard_bounds, GraphStore, ShardCursor, ShardView, SHARD_FORMAT_VERSION};
+use crate::graph::csr::{csr_footprint_bytes, EdgeId, Graph, NodeId, Weight};
+use crate::graph::io::{read_u64, MetisReader, MetisRow};
+use crate::util::rng::splitmix64;
+use std::fs::File;
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+const META_MAGIC: &[u8; 8] = b"SCLAPM1\0";
+const SHARD_MAGIC: &[u8; 8] = b"SCLAPS1\0";
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+fn write_u64<W: Write>(out: &mut W, x: u64) -> io::Result<()> {
+    out.write_all(&x.to_le_bytes())
+}
+
+/// On-disk sharded CSR store. Opening reads only `meta.bin` (node
+/// weights + shard table); adjacency stays on disk until a cursor
+/// streams it.
+#[derive(Debug)]
+pub struct ShardedStore {
+    dir: PathBuf,
+    arcs: usize,
+    bounds: Vec<usize>,
+    node_weights: Vec<Weight>,
+    total_node_weight: Weight,
+    max_node_weight: Weight,
+}
+
+impl ShardedStore {
+    /// Open a shard directory written by [`write_sharded`] /
+    /// [`convert_metis_to_shards`].
+    pub fn open(dir: &Path) -> io::Result<ShardedStore> {
+        let file = File::open(dir.join("meta.bin"))?;
+        let mut r = BufReader::new(file);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != META_MAGIC {
+            return Err(bad("bad shard-store meta magic"));
+        }
+        let version = read_u64(&mut r)?;
+        if version != SHARD_FORMAT_VERSION {
+            return Err(bad(&format!("unsupported shard format version {version}")));
+        }
+        let n_raw = read_u64(&mut r)?;
+        if n_raw > u32::MAX as u64 {
+            return Err(bad("node count out of range"));
+        }
+        let n = n_raw as usize;
+        let arcs = read_u64(&mut r)? as usize;
+        let shards = read_u64(&mut r)? as usize;
+        if shards == 0 || shards > n.max(1) * 2 + 64 {
+            return Err(bad("implausible shard count"));
+        }
+        let mut bounds = Vec::with_capacity(shards + 1);
+        for _ in 0..=shards {
+            bounds.push(read_u64(&mut r)? as usize);
+        }
+        if bounds[0] != 0 || bounds[shards] != n || bounds.windows(2).any(|w| w[0] > w[1]) {
+            return Err(bad("shard bounds not a monotone cover of 0..n"));
+        }
+        let mut node_weights = Vec::with_capacity(n.min(1 << 24));
+        for _ in 0..n {
+            let w = read_u64(&mut r)?;
+            if w > i64::MAX as u64 {
+                return Err(bad("node weight out of range"));
+            }
+            node_weights.push(w as Weight);
+        }
+        let total_node_weight = node_weights.iter().sum();
+        let max_node_weight = node_weights.iter().copied().max().unwrap_or(0);
+        Ok(ShardedStore {
+            dir: dir.to_path_buf(),
+            arcs,
+            bounds,
+            node_weights,
+            total_node_weight,
+            max_node_weight,
+        })
+    }
+
+    /// Directory this store lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn shard_path(&self, shard: usize) -> PathBuf {
+        self.dir.join(format!("shard_{shard}.bin"))
+    }
+
+    /// Total on-disk bytes of meta + shard files (for IO-throughput
+    /// reporting; distinct from [`GraphStore::memory_bytes`], which is
+    /// the *in-RAM* CSR footprint).
+    pub fn disk_bytes(&self) -> io::Result<u64> {
+        let mut total = std::fs::metadata(self.dir.join("meta.bin"))?.len();
+        for s in 0..self.num_shards() {
+            total += std::fs::metadata(self.shard_path(s))?.len();
+        }
+        Ok(total)
+    }
+}
+
+impl GraphStore for ShardedStore {
+    fn n(&self) -> usize {
+        self.node_weights.len()
+    }
+
+    fn arc_count(&self) -> usize {
+        self.arcs
+    }
+
+    fn total_node_weight(&self) -> Weight {
+        self.total_node_weight
+    }
+
+    fn max_node_weight(&self) -> Weight {
+        self.max_node_weight
+    }
+
+    fn node_weights(&self) -> &[Weight] {
+        &self.node_weights
+    }
+
+    fn num_shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    fn shard_span(&self, shard: usize) -> (usize, usize) {
+        (self.bounds[shard], self.bounds[shard + 1])
+    }
+
+    fn cursor(&self) -> Box<dyn ShardCursor + '_> {
+        Box::new(ShardFileCursor {
+            store: self,
+            xadj: Vec::new(),
+            targets: Vec::new(),
+            weights: Vec::new(),
+            loaded: None,
+            loads: 0,
+        })
+    }
+
+    fn memory_bytes(&self) -> u64 {
+        csr_footprint_bytes(self.n(), self.arcs)
+    }
+
+    fn to_graph(&self) -> io::Result<Graph> {
+        let n = self.n();
+        let mut xadj: Vec<EdgeId> = Vec::with_capacity(n + 1);
+        xadj.push(0);
+        let mut targets: Vec<NodeId> = Vec::with_capacity(self.arcs.min(1 << 26));
+        let mut weights: Vec<Weight> = Vec::with_capacity(self.arcs.min(1 << 26));
+        let mut cursor = self.cursor();
+        for s in 0..self.num_shards() {
+            let view = cursor.load(s)?;
+            let (lo, hi) = view.span();
+            for v in lo..hi {
+                let (adj, ws) = view.adjacent(v as NodeId);
+                targets.extend_from_slice(adj);
+                weights.extend_from_slice(ws);
+                xadj.push(targets.len());
+            }
+        }
+        if xadj.len() != n + 1 || targets.len() != self.arcs {
+            return Err(bad("shard files inconsistent with meta"));
+        }
+        Ok(Graph::from_csr(xadj, targets, weights, self.node_weights.clone()))
+    }
+}
+
+/// Streaming cursor over a [`ShardedStore`]: one shard resident, three
+/// reusable buffers, no allocation after warm-up (see module docs).
+pub struct ShardFileCursor<'a> {
+    store: &'a ShardedStore,
+    xadj: Vec<EdgeId>,
+    targets: Vec<NodeId>,
+    weights: Vec<Weight>,
+    loaded: Option<usize>,
+    loads: usize,
+}
+
+impl ShardFileCursor<'_> {
+    /// Number of shard files read from disk so far (re-loading the
+    /// resident shard is free and not counted) — the observable for
+    /// "each pass touches each shard once".
+    pub fn disk_loads(&self) -> usize {
+        self.loads
+    }
+
+    fn read_shard(&mut self, shard: usize) -> io::Result<()> {
+        let (lo, hi) = self.store.shard_span(shard);
+        let file = File::open(self.store.shard_path(shard))?;
+        let mut r = BufReader::new(file);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != SHARD_MAGIC {
+            return Err(bad("bad shard magic"));
+        }
+        if read_u64(&mut r)? != SHARD_FORMAT_VERSION {
+            return Err(bad("unsupported shard format version"));
+        }
+        let (flo, fhi) = (read_u64(&mut r)? as usize, read_u64(&mut r)? as usize);
+        if (flo, fhi) != (lo, hi) {
+            return Err(bad("shard span disagrees with meta"));
+        }
+        let arcs = read_u64(&mut r)? as usize;
+        if arcs > self.store.arcs {
+            return Err(bad("shard arc count exceeds store total"));
+        }
+        let n = self.store.n();
+        self.xadj.clear();
+        self.xadj.reserve(hi - lo + 1);
+        self.xadj.push(0);
+        for _ in lo..hi {
+            let d = read_u64(&mut r)? as usize;
+            let next = self
+                .xadj
+                .last()
+                .unwrap()
+                .checked_add(d)
+                .ok_or_else(|| bad("degree sum overflows"))?;
+            self.xadj.push(next);
+        }
+        if *self.xadj.last().unwrap() != arcs {
+            return Err(bad("shard degree sum != arc count"));
+        }
+        // Clamp pre-reservation (the `read_binary` convention): a
+        // corrupt header must surface as an `InvalidData`/EOF error,
+        // never as an allocation abort.
+        self.targets.clear();
+        self.targets.reserve(arcs.min(1 << 26));
+        self.weights.clear();
+        self.weights.reserve(arcs.min(1 << 26));
+        for _ in 0..arcs {
+            let t = read_u64(&mut r)?;
+            if t >= n as u64 {
+                return Err(bad("shard arc target out of range"));
+            }
+            self.targets.push(t as NodeId);
+            let w = read_u64(&mut r)?;
+            if w == 0 || w > i64::MAX as u64 {
+                return Err(bad("shard edge weight out of range"));
+            }
+            self.weights.push(w as Weight);
+        }
+        Ok(())
+    }
+}
+
+impl ShardCursor for ShardFileCursor<'_> {
+    fn load(&mut self, shard: usize) -> io::Result<ShardView<'_>> {
+        if self.loaded != Some(shard) {
+            // Invalidate BEFORE reading: a failed read_shard leaves the
+            // buffers partially clobbered, and `loaded` must not keep
+            // naming the previous shard (a later re-load of it would
+            // short-circuit onto garbage).
+            self.loaded = None;
+            self.read_shard(shard)?;
+            self.loaded = Some(shard);
+            self.loads += 1;
+        }
+        let (lo, hi) = self.store.shard_span(shard);
+        Ok(ShardView::new(lo, hi, &self.xadj, &self.targets, &self.weights))
+    }
+}
+
+fn write_shard_file(
+    dir: &Path,
+    shard: usize,
+    lo: usize,
+    hi: usize,
+    degrees: &[u64],
+    arcs: &[(NodeId, Weight)],
+) -> io::Result<()> {
+    debug_assert_eq!(degrees.len(), hi - lo);
+    debug_assert_eq!(degrees.iter().sum::<u64>() as usize, arcs.len());
+    let file = File::create(dir.join(format!("shard_{shard}.bin")))?;
+    let mut out = BufWriter::new(file);
+    out.write_all(SHARD_MAGIC)?;
+    write_u64(&mut out, SHARD_FORMAT_VERSION)?;
+    write_u64(&mut out, lo as u64)?;
+    write_u64(&mut out, hi as u64)?;
+    write_u64(&mut out, arcs.len() as u64)?;
+    for &d in degrees {
+        write_u64(&mut out, d)?;
+    }
+    for &(t, w) in arcs {
+        write_u64(&mut out, t as u64)?;
+        write_u64(&mut out, w as u64)?;
+    }
+    out.flush()
+}
+
+fn write_meta(
+    dir: &Path,
+    n: usize,
+    arcs: u64,
+    bounds: &[usize],
+    node_weights: &[Weight],
+) -> io::Result<()> {
+    let file = File::create(dir.join("meta.bin"))?;
+    let mut out = BufWriter::new(file);
+    out.write_all(META_MAGIC)?;
+    write_u64(&mut out, SHARD_FORMAT_VERSION)?;
+    write_u64(&mut out, n as u64)?;
+    write_u64(&mut out, arcs)?;
+    write_u64(&mut out, (bounds.len() - 1) as u64)?;
+    for &b in bounds {
+        write_u64(&mut out, b as u64)?;
+    }
+    for &w in node_weights {
+        write_u64(&mut out, w as u64)?;
+    }
+    out.flush()
+}
+
+/// Write `graph` as a shard directory with `shards` contiguous shards
+/// (for `.bin`/edge-list inputs and benches; METIS files should go
+/// through the streaming [`convert_metis_to_shards`] instead).
+pub fn write_sharded(graph: &Graph, dir: &Path, shards: usize) -> io::Result<ShardedStore> {
+    if graph.n() > u32::MAX as usize {
+        return Err(bad("node count out of range"));
+    }
+    std::fs::create_dir_all(dir)?;
+    let bounds = shard_bounds(graph.n(), shards);
+    let mut degrees: Vec<u64> = Vec::new();
+    let mut arcs: Vec<(NodeId, Weight)> = Vec::new();
+    for s in 0..bounds.len() - 1 {
+        let (lo, hi) = (bounds[s], bounds[s + 1]);
+        degrees.clear();
+        arcs.clear();
+        for v in lo..hi {
+            degrees.push(graph.degree(v as NodeId) as u64);
+            for (u, w) in graph.neighbors(v as NodeId) {
+                arcs.push((u, w));
+            }
+        }
+        write_shard_file(dir, s, lo, hi, &degrees, &arcs)?;
+    }
+    write_meta(
+        dir,
+        graph.n(),
+        graph.arc_count() as u64,
+        &bounds,
+        graph.node_weights(),
+    )?;
+    ShardedStore::open(dir)
+}
+
+/// Streaming METIS → shard-directory converter. Reads the file once,
+/// row by row ([`MetisReader`]), holding only the *current* shard's
+/// degrees and arcs plus the O(n) node-weight array — the full
+/// adjacency is never materialized, so graphs far beyond RAM convert
+/// in bounded memory. The rows are written in the canonical
+/// sorted/deduped form, making the resulting store arc-for-arc
+/// identical to `read_metis` + [`write_sharded`].
+///
+/// Symmetry guard: `read_metis` *symmetrizes* (it keeps the low-
+/// endpoint copy of each edge), while this converter writes rows
+/// verbatim — an asymmetric file would make the two backends diverge
+/// silently. A streaming O(1)-state check (a direction-signed
+/// commutative hash over `(min, max, ω)` per arc, which must cancel to
+/// zero on a symmetric file) rejects such inputs; collisions are
+/// astronomically unlikely, never false positives.
+pub fn convert_metis_to_shards<R: BufRead>(
+    reader: R,
+    dir: &Path,
+    shards: usize,
+) -> io::Result<ShardedStore> {
+    let mut metis = MetisReader::new(reader)?;
+    let n = metis.n;
+    if n > u32::MAX as usize {
+        return Err(bad("node count out of range"));
+    }
+    std::fs::create_dir_all(dir)?;
+    let bounds = shard_bounds(n, shards);
+    let num_shards = bounds.len() - 1;
+    let mut node_weights: Vec<Weight> = Vec::with_capacity(n);
+    let mut degrees: Vec<u64> = Vec::new();
+    let mut arcs: Vec<(NodeId, Weight)> = Vec::new();
+    let mut shard = 0usize;
+    let mut total_arcs: u64 = 0;
+    let mut sym_hash: u64 = 0;
+    let mut row = MetisRow::default();
+    let mut v = 0usize;
+    while metis.next_row(&mut row)? {
+        while v >= bounds[shard + 1] {
+            write_shard_file(dir, shard, bounds[shard], bounds[shard + 1], &degrees, &arcs)?;
+            degrees.clear();
+            arcs.clear();
+            shard += 1;
+        }
+        for &(u, w) in &row.neighbors {
+            let (a, b) = ((v as u64).min(u as u64), (v as u64).max(u as u64));
+            let h = splitmix64(a ^ splitmix64(b ^ splitmix64(w as u64)));
+            if (u as usize) > v {
+                sym_hash = sym_hash.wrapping_add(h);
+            } else {
+                sym_hash = sym_hash.wrapping_sub(h);
+            }
+        }
+        node_weights.push(row.node_weight);
+        degrees.push(row.neighbors.len() as u64);
+        arcs.extend_from_slice(&row.neighbors);
+        total_arcs += row.neighbors.len() as u64;
+        v += 1;
+    }
+    while shard < num_shards {
+        write_shard_file(dir, shard, bounds[shard], bounds[shard + 1], &degrees, &arcs)?;
+        degrees.clear();
+        arcs.clear();
+        shard += 1;
+    }
+    if sym_hash != 0 {
+        return Err(bad(
+            "asymmetric METIS adjacency: some edge is listed only once or with \
+             direction-dependent weight (in-memory parsing would symmetrize and diverge)",
+        ));
+    }
+    metis.check_edge_count((total_arcs / 2) as usize)?;
+    write_meta(dir, n, total_arcs, &bounds, &node_weights)?;
+    ShardedStore::open(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::io::{read_metis, write_metis};
+    use crate::graph::store::streaming_cut;
+    use crate::util::rng::Rng;
+    use std::io::Cursor;
+
+    fn temp_dir(label: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "sclap-store-{}-{label}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample() -> Graph {
+        let mut rng = Rng::new(3);
+        crate::generators::barabasi_albert(300, 3, &mut rng)
+    }
+
+    #[test]
+    fn write_open_roundtrip_any_shard_count() {
+        let g = sample();
+        for shards in [1usize, 2, 5, 7] {
+            let dir = temp_dir(&format!("rt{shards}"));
+            let store = write_sharded(&g, &dir, shards).unwrap();
+            assert_eq!(store.n(), g.n());
+            assert_eq!(store.m(), g.m());
+            assert_eq!(store.num_shards(), shards);
+            assert_eq!(store.node_weights(), g.node_weights());
+            assert_eq!(store.memory_bytes(), g.memory_bytes());
+            assert_eq!(store.to_graph().unwrap(), g);
+            // reopen from disk
+            let reopened = ShardedStore::open(&dir).unwrap();
+            assert_eq!(reopened.to_graph().unwrap(), g);
+            assert!(reopened.disk_bytes().unwrap() > 0);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn metis_conversion_matches_in_memory_parse() {
+        let g = sample();
+        let mut buf = Vec::new();
+        write_metis(&g, &mut buf).unwrap();
+        let reference = read_metis(Cursor::new(&buf)).unwrap();
+        for shards in [1usize, 2, 7] {
+            let dir = temp_dir(&format!("conv{shards}"));
+            let store =
+                convert_metis_to_shards(Cursor::new(&buf), &dir, shards).unwrap();
+            assert_eq!(store.to_graph().unwrap(), reference, "shards={shards}");
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn cursor_streams_each_shard_once_per_pass() {
+        let g = sample();
+        let dir = temp_dir("passes");
+        let store = write_sharded(&g, &dir, 4).unwrap();
+        let mut cursor = ShardFileCursor {
+            store: &store,
+            xadj: Vec::new(),
+            targets: Vec::new(),
+            weights: Vec::new(),
+            loaded: None,
+            loads: 0,
+        };
+        for s in 0..4 {
+            // repeated loads of the resident shard hit the buffer
+            let a = cursor.load(s).unwrap().arc_count();
+            let b = cursor.load(s).unwrap().arc_count();
+            assert_eq!(a, b);
+        }
+        assert_eq!(cursor.disk_loads(), 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn streaming_cut_agrees_with_direct() {
+        let g = sample();
+        let labels: Vec<u32> = (0..g.n() as u32).map(|v| v % 3).collect();
+        let direct = crate::partitioning::metrics::cut_value(&g, &labels);
+        let dir = temp_dir("cut");
+        let store = write_sharded(&g, &dir, 3).unwrap();
+        assert_eq!(streaming_cut(&store, &labels).unwrap(), direct);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn converter_rejects_asymmetric_adjacency() {
+        // Node 1 lists 2, but node 2 does not list 1: read_metis would
+        // symmetrize, the converter must refuse instead of silently
+        // diverging from the in-memory backend.
+        let dir = temp_dir("asym");
+        let err = convert_metis_to_shards(Cursor::new("3 1\n2\n\n\n"), &dir, 2).unwrap_err();
+        assert!(err.to_string().contains("asymmetric"), "{err}");
+        // Direction-dependent weights are asymmetry too (fmt=1).
+        let dir2 = temp_dir("asym-w");
+        let err = convert_metis_to_shards(Cursor::new("2 1 1\n2 5\n1 7\n"), &dir2, 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("asymmetric"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
+    }
+
+    #[test]
+    fn open_rejects_corruption() {
+        let dir = temp_dir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.bin"), b"WRONGMAGIC______").unwrap();
+        assert!(ShardedStore::open(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(ShardedStore::open(Path::new("/definitely/not/here")).is_err());
+    }
+}

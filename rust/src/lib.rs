@@ -70,6 +70,40 @@
 //!     println!("{phase}: {} calls, {:.3}s", stat.calls, stat.seconds);
 //! }
 //! ```
+//!
+//! # graph::store: out-of-core instances beyond RAM
+//!
+//! Inputs whose CSR exceeds
+//! [`PartitionConfig::memory_budget_bytes`](partitioning::config::PartitionConfig)
+//! (CLI `--memory-budget`, env `SCLAP_MEMORY_BUDGET`) are partitioned
+//! **semi-externally** (after arXiv 1404.4887): the
+//! [`graph::store::GraphStore`] abstraction splits the node range into
+//! contiguous on-disk CSR shards ([`graph::store::ShardedStore`]; a
+//! streaming METIS→shards converter never materializes the full
+//! graph), a shard cursor keeps at most one shard's adjacency
+//! resident, and level 0 of the hierarchy is built by semi-external
+//! SCLaP ([`clustering::external_lpa`]) + streaming contraction
+//! ([`coarsening::contract::contract_store`]) with only O(n) node
+//! state in RAM. The driver
+//! ([`partitioning::external::partition_store`]) switches to the
+//! ordinary in-memory pipeline the moment the contracted graph fits
+//! the budget, and finishes with a semi-external refinement pass on
+//! the input shards.
+//!
+//! The determinism contract extends over storage: same seed + same
+//! config ⇒ byte-identical partition for **any thread count, any shard
+//! count, and either storage backend** (`rust/tests/sharded_store.rs`).
+//!
+//! ```no_run
+//! use sclap::prelude::*;
+//!
+//! let graph = sclap::generators::instances::by_name("tiny-rmat").unwrap().build();
+//! let store = sclap::graph::store::InMemoryStore::with_shards(&graph, 8);
+//! let mut config = PartitionConfig::preset(Preset::CFast, 8);
+//! config.memory_budget_bytes = Some(1); // force the out-of-core path
+//! let r = sclap::partitioning::external::partition_store(&store, &config, 42).unwrap();
+//! println!("cut = {} via {} external level(s)", r.cut, r.external_levels);
+//! ```
 
 pub mod bench;
 pub mod clustering;
@@ -85,6 +119,7 @@ pub mod util;
 
 /// Convenience re-exports for downstream users.
 pub mod prelude {
+    pub use crate::graph::store::{GraphStore, InMemoryStore, ShardedStore};
     pub use crate::graph::{Graph, GraphBuilder, NodeId, Weight};
     pub use crate::partitioning::config::{PartitionConfig, Preset};
     pub use crate::partitioning::metrics::PartitionMetrics;

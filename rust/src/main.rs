@@ -18,7 +18,11 @@ use sclap::coordinator::cli::Args;
 use sclap::coordinator::service::{default_seeds, Coordinator};
 use sclap::generators;
 use sclap::graph::csr::Graph;
-use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::graph::store::{
+    convert_metis_to_shards, write_sharded, GraphStore, InMemoryStore, ShardedStore,
+};
+use sclap::partitioning::config::{parse_memory_budget, PartitionConfig, Preset};
+use sclap::partitioning::external::OutOfCoreResult;
 use sclap::util::error::{Context, Result};
 use sclap::util::rng::Rng;
 use std::path::Path;
@@ -47,6 +51,7 @@ fn run(args: &Args) -> Result<()> {
         "partition" => cmd_partition(args),
         "evaluate" => cmd_evaluate(args),
         "generate" => cmd_generate(args),
+        "shard" => cmd_shard(args),
         "stats" => cmd_stats(args),
         "offload" => cmd_offload(args),
         "presets" => cmd_presets(),
@@ -65,17 +70,31 @@ fn print_usage() {
          USAGE: sclap <command> [--options]\n\
          \n\
          COMMANDS:\n\
-           partition --graph FILE | --instance NAME  --k K [--preset P]\n\
-                     [--reps N] [--seed S] [--workers W] [--threads T]\n\
-                     [--epsilon E] [--output FILE]\n\
+           partition --graph FILE | --instance NAME | --shards DIR\n\
+                     --k K [--preset P] [--reps N] [--seed S]\n\
+                     [--workers W] [--threads T] [--epsilon E]\n\
+                     [--output FILE] [--memory-budget BYTES]\n\
                      [--parallel-coarsening] [--parallel-refinement]\n\
-           generate  --kind rmat|ba|ws|er|grid --out FILE [--scale S]\n\
-                     [--n N] [--edges M] [--seed S]\n\
+           generate  --kind rmat|ba|ws|er|grid|lfr --out FILE\n\
+                     [--scale S] [--n N] [--edges M] [--seed S]\n\
+                     [--avg-degree D] [--mu MU]\n\
+           shard     --graph FILE | --instance NAME --out DIR\n\
+                     [--shards S]\n\
            evaluate  --graph FILE | --instance NAME --partition FILE\n\
                      [--epsilon E]\n\
            stats     --graph FILE | --instance NAME\n\
            offload   --instance NAME [--upper U] [--rounds R]\n\
            presets\n\
+         \n\
+         --shards DIR: read topology from a shard directory (see the\n\
+           `shard` command) instead of one graph file.\n\
+         --memory-budget BYTES (k/m/g suffixes; env\n\
+           SCLAP_MEMORY_BUDGET): RAM budget for holding a CSR. Inputs\n\
+           beyond it are partitioned out-of-core: semi-external SCLaP\n\
+           level-0 coarsening streamed shard by shard, in-memory\n\
+           multilevel once the contraction fits, semi-external LPA\n\
+           refinement on the way back up. Same seed + config gives the\n\
+           identical partition for any shard count and storage backend.\n\
          \n\
          --workers W: the one process pool (0 = all cores). Repetitions\n\
            fan out across it and every phase inside a repetition shares\n\
@@ -105,7 +124,6 @@ fn load_graph(args: &Args) -> Result<Graph> {
 }
 
 fn cmd_partition(args: &Args) -> Result<()> {
-    let graph = Arc::new(load_graph(args)?);
     let k = args.get_usize("k", 2)?;
     let preset_name = args.get_or("preset", "UFast");
     let preset = Preset::from_name(preset_name)
@@ -118,9 +136,29 @@ fn cmd_partition(args: &Args) -> Result<()> {
     config.threads = args.get_usize("threads", config.threads)?;
     config.parallel_coarsening |= args.flag("parallel-coarsening");
     config.parallel_refinement |= args.flag("parallel-refinement");
+    if let Some(v) = args.get("memory-budget") {
+        config.memory_budget_bytes = parse_memory_budget(Some(v));
+        if config.memory_budget_bytes.is_none() && v != "0" {
+            bail!("--memory-budget: bad value {v:?} (bytes, or k/m/g suffix)");
+        }
+    }
     let reps = args.get_usize("reps", 1)?;
     let seed = args.get_u64("seed", 1)?;
     let workers = args.get_usize("workers", 0)?;
+
+    // Store-backed paths: shard-directory input, or any input under a
+    // memory budget (the out-of-core driver decides in-memory vs
+    // semi-external — identically for either storage backend).
+    if let Some(dir) = args.get("shards") {
+        let store = ShardedStore::open(Path::new(dir))
+            .with_context(|| format!("opening shard directory {dir}"))?;
+        return run_partition_store(args, &store, &config, reps, seed, workers);
+    }
+    let graph = Arc::new(load_graph(args)?);
+    if config.memory_budget_bytes.is_some() {
+        let store = InMemoryStore::new(&graph);
+        return run_partition_store(args, &store, &config, reps, seed, workers);
+    }
 
     println!(
         "partitioning n={} m={} into k={k} with {} (ε={}, {reps} reps)",
@@ -155,14 +193,124 @@ fn cmd_partition(args: &Args) -> Result<()> {
     );
 
     if let Some(out) = args.get("output") {
-        let mut text = String::new();
-        for b in &agg.best_blocks {
-            text.push_str(&b.to_string());
-            text.push('\n');
-        }
-        std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
-        println!("wrote best partition to {out}");
+        write_partition_file(out, &agg.best_blocks)?;
     }
+    Ok(())
+}
+
+fn write_partition_file(out: &str, blocks: &[u32]) -> Result<()> {
+    let mut text = String::new();
+    for b in blocks {
+        text.push_str(&b.to_string());
+        text.push('\n');
+    }
+    std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
+    println!("wrote best partition to {out}");
+    Ok(())
+}
+
+/// The store-backed `partition` path (shard directories and
+/// memory-budgeted runs): repetitions on the coordinator's shared
+/// context, best-cut aggregation, same output conventions.
+fn run_partition_store(
+    args: &Args,
+    store: &dyn GraphStore,
+    config: &PartitionConfig,
+    reps: usize,
+    seed: u64,
+    workers: usize,
+) -> Result<()> {
+    let budget = config
+        .memory_budget_bytes
+        .map(|b| b.to_string())
+        .unwrap_or_else(|| "unlimited".into());
+    println!(
+        "partitioning n={} m={} into k={} ({} shard(s), memory budget {budget}, {reps} reps)",
+        store.n(),
+        store.m(),
+        config.k,
+        store.num_shards(),
+    );
+    let pool_threads = if workers != 0 { workers } else { config.threads };
+    let coordinator = Coordinator::new(pool_threads);
+    let reps = reps.max(1);
+    // Repetitions fan out across the coordinator pool (like the normal
+    // path's partition_repeated); each job's nested phases re-enter
+    // the same pool inline, and results are collected in seed order.
+    let outcomes: Vec<std::io::Result<OutOfCoreResult>> = coordinator
+        .ctx()
+        .pool()
+        .map_indexed(reps, |_worker, i| {
+            coordinator.partition_store(store, config, seed + i as u64)
+        });
+    let mut best: Option<OutOfCoreResult> = None;
+    let mut cut_sum = 0.0;
+    let mut secs_sum = 0.0;
+    let mut infeasible = 0usize;
+    for outcome in outcomes {
+        let r = outcome.context("out-of-core partition")?;
+        cut_sum += r.cut as f64;
+        secs_sum += r.seconds;
+        if !r.feasible {
+            infeasible += 1;
+        }
+        if best.as_ref().map(|b| r.cut < b.cut).unwrap_or(true) {
+            best = Some(r);
+        }
+    }
+    let best = best.expect("at least one repetition");
+    println!("avg cut    : {:.1}", cut_sum / reps as f64);
+    println!("best cut   : {}", best.cut);
+    println!("avg time   : {:.3}s", secs_sum / reps as f64);
+    println!("infeasible : {infeasible}/{reps}");
+    println!(
+        "out-of-core: {} external level(s), handed off n={} m={} ({:.3}s external)",
+        best.external_levels, best.handoff_n, best.handoff_m, best.external_seconds
+    );
+    if let Some(out) = args.get("output") {
+        write_partition_file(out, &best.blocks)?;
+    }
+    Ok(())
+}
+
+/// `shard`: convert a graph to an on-disk shard directory. METIS inputs
+/// stream through `convert_metis_to_shards` (bounded memory — never the
+/// whole graph); other formats load and re-shard.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let out = args.get("out").context("need --out DIR")?;
+    let shards = args.get_usize("shards", 4)?;
+    if shards == 0 {
+        bail!("--shards must be at least 1");
+    }
+    let store = if let Some(path) = args.get("graph") {
+        let p = Path::new(path);
+        let ext = p.extension().and_then(|e| e.to_str()).unwrap_or("");
+        match ext {
+            "bin" | "el" | "edges" | "txt" => {
+                let g = sclap::graph::io::load_path(p)
+                    .with_context(|| format!("loading {path}"))?;
+                write_sharded(&g, Path::new(out), shards)?
+            }
+            // METIS and anything else METIS-shaped: streaming.
+            _ => {
+                let file = std::fs::File::open(p).with_context(|| format!("opening {path}"))?;
+                convert_metis_to_shards(std::io::BufReader::new(file), Path::new(out), shards)
+                    .with_context(|| format!("converting {path}"))?
+            }
+        }
+    } else if args.get("instance").is_some() {
+        let g = load_graph(args)?;
+        write_sharded(&g, Path::new(out), shards)?
+    } else {
+        bail!("need --graph FILE or --instance NAME");
+    };
+    println!(
+        "wrote {} shard(s), n={} m={} ({} bytes on disk) to {out}",
+        store.num_shards(),
+        store.n(),
+        store.m(),
+        store.disk_bytes().unwrap_or(0),
+    );
     Ok(())
 }
 
@@ -196,6 +344,15 @@ fn cmd_generate(args: &Args) -> Result<()> {
             let rows = args.get_usize("rows", 300)?;
             let cols = args.get_usize("cols", 300)?;
             generators::grid2d(rows, cols)
+        }
+        "lfr" => {
+            // Community-structured scale-free — the stand-in for the
+            // paper's web/social crawls; what the CI out-of-core smoke
+            // partitions.
+            let n = args.get_usize("n", 50_000)?;
+            let avg_degree = args.get_f64("avg-degree", 8.0)?;
+            let mu = args.get_f64("mu", 0.2)?;
+            generators::lfr::lfr_like(n, avg_degree, mu, &mut rng).0
         }
         other => bail!("unknown generator kind {other:?}"),
     };

@@ -91,6 +91,18 @@ pub struct PartitionConfig {
     /// algorithm, selected by configuration, never by thread count —
     /// the thread-count-invariance contract holds for both values.
     pub parallel_coarsening: bool,
+    /// RAM budget (bytes) for holding a graph's CSR in memory. `None`
+    /// (default) = unlimited, fully in-memory pipeline. When an input's
+    /// [`Graph::memory_bytes`](crate::graph::csr::Graph::memory_bytes)
+    /// exceeds the budget, `partitioning::external::partition_store`
+    /// builds level 0 of the hierarchy out-of-core (semi-external SCLaP
+    /// + streaming contraction over `graph::store` shards) and switches
+    /// to the in-memory pipeline once the contracted graph fits. Knobs:
+    /// CLI `--memory-budget` (bytes, `k`/`m`/`g` suffixes accepted),
+    /// env `SCLAP_MEMORY_BUDGET`. The budget selects an *algorithm*;
+    /// the storage backend and shard count never change results
+    /// (`rust/tests/sharded_store.rs`).
+    pub memory_budget_bytes: Option<u64>,
 }
 
 /// Default thread count: `SCLAP_THREADS` if set and parseable, else 0
@@ -103,6 +115,37 @@ fn threads_from_env() -> usize {
 /// mutating process-global env state): unset or unparseable ⇒ 0 (auto).
 fn parse_threads(value: Option<&str>) -> usize {
     value.and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+/// Default memory budget: `SCLAP_MEMORY_BUDGET` if set and parseable,
+/// else `None` (unlimited).
+fn memory_budget_from_env() -> Option<u64> {
+    parse_memory_budget(std::env::var("SCLAP_MEMORY_BUDGET").ok().as_deref())
+}
+
+/// Parse a memory budget: plain bytes or with a `k`/`m`/`g` binary
+/// suffix (case-insensitive). Unset, unparseable, or `0` ⇒ `None`
+/// (unlimited). Shared by the env default and the CLI flag.
+pub fn parse_memory_budget(value: Option<&str>) -> Option<u64> {
+    let v = value?.trim().to_ascii_lowercase();
+    if v.is_empty() {
+        return None;
+    }
+    let (digits, mult) = if let Some(d) = v.strip_suffix('k') {
+        (d, 1u64 << 10)
+    } else if let Some(d) = v.strip_suffix('m') {
+        (d, 1u64 << 20)
+    } else if let Some(d) = v.strip_suffix('g') {
+        (d, 1u64 << 30)
+    } else {
+        (v.as_str(), 1u64)
+    };
+    digits
+        .trim()
+        .parse::<u64>()
+        .ok()
+        .map(|x| x.saturating_mul(mult))
+        .filter(|&x| x > 0)
 }
 
 /// Named presets: the paper's configurations and the baselines.
@@ -220,6 +263,7 @@ impl PartitionConfig {
             threads: threads_from_env(),
             parallel_refinement: false,
             parallel_coarsening: false,
+            memory_budget_bytes: memory_budget_from_env(),
         }
     }
 
@@ -424,6 +468,23 @@ mod tests {
         assert_eq!(parse_threads(Some("0")), 0);
         assert_eq!(parse_threads(Some("1")), 1);
         assert_eq!(parse_threads(Some("8")), 8);
+    }
+
+    #[test]
+    fn memory_budget_parsing() {
+        // Pure core — no env mutation in tests. Unset/garbage/zero ⇒
+        // None (unlimited); binary suffixes accepted.
+        assert_eq!(parse_memory_budget(None), None);
+        assert_eq!(parse_memory_budget(Some("")), None);
+        assert_eq!(parse_memory_budget(Some("garbage")), None);
+        assert_eq!(parse_memory_budget(Some("0")), None);
+        assert_eq!(parse_memory_budget(Some("-3")), None);
+        assert_eq!(parse_memory_budget(Some("1")), Some(1));
+        assert_eq!(parse_memory_budget(Some("4096")), Some(4096));
+        assert_eq!(parse_memory_budget(Some("2k")), Some(2048));
+        assert_eq!(parse_memory_budget(Some("3M")), Some(3 << 20));
+        assert_eq!(parse_memory_budget(Some("1G")), Some(1 << 30));
+        assert_eq!(parse_memory_budget(Some(" 8 ")), Some(8));
     }
 
     #[test]

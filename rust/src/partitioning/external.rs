@@ -1,0 +1,388 @@
+//! Out-of-core partitioning driver: the memory-budget switch between
+//! the fully in-memory multilevel pipeline and the semi-external path.
+//!
+//! [`partition_store`] is the entry point for inputs behind a
+//! [`GraphStore`]. With no budget (or a budget the input's CSR
+//! footprint fits), the store is materialized and the ordinary
+//! [`MultilevelPartitioner`] runs — byte-identical to partitioning the
+//! graph directly. When the input **exceeds**
+//! `PartitionConfig::memory_budget_bytes`, the driver runs the paper's
+//! semi-external recipe (arXiv 1404.4887) end to end:
+//!
+//! 1. **out-of-core coarsening** — semi-external SCLaP
+//!    ([`external_sclap`]) + streaming contraction ([`contract_store`])
+//!    build level 0 (and, if the contracted graph still exceeds the
+//!    budget, further levels through an in-memory store view) with at
+//!    most one shard of adjacency resident;
+//! 2. **in-memory multilevel** — once the contracted graph fits the
+//!    budget (or clustering stalls), the ordinary pipeline partitions
+//!    it with a seed drawn from the same deterministic RNG stream;
+//! 3. **projection + semi-external refinement** — blocks project back
+//!    through the level maps, then one semi-external SCLaP refinement
+//!    pass (overloaded-block rule, blocks never emptied) runs over the
+//!    input store, and the final metrics are computed in one more
+//!    streaming pass.
+//!
+//! # Budget semantics
+//!
+//! `memory_budget_bytes` **steers the algorithm** (which levels are
+//! built out-of-core, and when the pipeline may materialize); it is
+//! not a hard RSS cap: every contracted level is an in-memory [`Graph`]
+//! by construction, so an unsatisfiable budget (e.g. the
+//! `--memory-budget 1` forcing idiom used by tests and CI) coarsens
+//! externally as far as clustering can shrink, warns, and hands the
+//! smallest reachable graph to the in-memory pipeline. The one hard
+//! refusal: an input that is *not* in memory and cannot be shrunk at
+//! all (level-0 stall) errors instead of being silently materialized.
+//!
+//! # Determinism
+//!
+//! The budget selects the *algorithm*; storage is an execution detail.
+//! For a fixed config (including the budget) the result is a pure
+//! function of (graph, seed): byte-identical for any shard count, any
+//! thread count, and for `InMemoryStore` vs `ShardedStore` backends —
+//! so "the in-memory run" of the external path is the reference the
+//! CI out-of-core smoke job compares the shard-streamed run against
+//! (`rust/tests/sharded_store.rs`, `.github/workflows/ci.yml`).
+
+use crate::clustering::external_lpa::{dense_from_labels, external_sclap};
+use crate::clustering::label_propagation::{LpaConfig, LpaMode, NodeOrdering};
+use crate::coarsening::contract::{contract_store, project_partition, Contraction};
+use crate::coarsening::hierarchy::l_max;
+use crate::graph::csr::{Graph, Weight};
+use crate::graph::store::{streaming_cut, GraphStore, InMemoryStore};
+use crate::partitioning::config::PartitionConfig;
+use crate::partitioning::multilevel::MultilevelPartitioner;
+use crate::util::exec::ExecutionCtx;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+use std::io;
+use std::sync::Arc;
+
+/// Shrink-stall guard: stop external coarsening when a level keeps more
+/// than this fraction of its nodes (mirrors `CoarseningParams`'s
+/// default `min_shrink`).
+const EXTERNAL_MIN_SHRINK: f64 = 0.98;
+
+/// Hard cap on out-of-core contraction levels (far above anything a
+/// shrinking hierarchy can reach; loop-safety only).
+const EXTERNAL_MAX_LEVELS: usize = 64;
+
+/// Outcome of an out-of-core (or budget-satisfied in-memory) run.
+#[derive(Debug, Clone)]
+pub struct OutOfCoreResult {
+    /// Block id per input node.
+    pub blocks: Vec<u32>,
+    /// Cut on the input graph (streamed for the external path).
+    pub cut: Weight,
+    pub max_block_weight: Weight,
+    pub min_block_weight: Weight,
+    /// max block weight / ceil(total/k) − 1.
+    pub imbalance: f64,
+    /// Whether every block obeys `L_max` for the configured ε.
+    pub feasible: bool,
+    /// Out-of-core contraction levels executed (0 = the input fit the
+    /// budget and the ordinary in-memory pipeline ran).
+    pub external_levels: usize,
+    /// Size of the graph handed to the in-memory pipeline.
+    pub handoff_n: usize,
+    pub handoff_m: usize,
+    /// Total wall-clock seconds, and the share spent in the external
+    /// phases (streaming coarsening + refinement).
+    pub seconds: f64,
+    pub external_seconds: f64,
+}
+
+/// Partition a stored graph under the configured memory budget (module
+/// docs). Creates a fresh [`ExecutionCtx`] from `config.threads`; the
+/// coordinator path ([`partition_store_with_ctx`]) shares one instead.
+pub fn partition_store(
+    store: &dyn GraphStore,
+    config: &PartitionConfig,
+    seed: u64,
+) -> io::Result<OutOfCoreResult> {
+    let ctx = Arc::new(ExecutionCtx::new(config.threads));
+    partition_store_with_ctx(store, config, seed, &ctx)
+}
+
+/// [`partition_store`] on a shared execution context (one pool through
+/// every phase — the `ExecutionCtx` handoff).
+pub fn partition_store_with_ctx(
+    store: &dyn GraphStore,
+    config: &PartitionConfig,
+    seed: u64,
+    ctx: &Arc<ExecutionCtx>,
+) -> io::Result<OutOfCoreResult> {
+    let k = config.k;
+    assert!(k >= 1);
+    let total_timer = Timer::start();
+
+    let fits = match config.memory_budget_bytes {
+        None => true,
+        Some(budget) => store.memory_bytes() <= budget,
+    };
+    if fits {
+        // In-memory fast path: run the ordinary pipeline. An in-memory
+        // backend hands out its graph directly (no copy — a clone here
+        // would double peak memory exactly when a budget was asked
+        // for); a sharded store streams its segments together once.
+        let owned;
+        let g: &Graph = match store.as_graph() {
+            Some(g) => g,
+            None => {
+                owned = store.to_graph()?;
+                &owned
+            }
+        };
+        let r = MultilevelPartitioner::with_ctx(config.clone(), ctx.clone()).partition(g, seed);
+        return Ok(OutOfCoreResult {
+            blocks: r.partition.blocks,
+            cut: r.metrics.cut,
+            max_block_weight: r.metrics.max_block_weight,
+            min_block_weight: r.metrics.min_block_weight,
+            imbalance: r.metrics.imbalance,
+            feasible: r.metrics.feasible,
+            external_levels: 0,
+            handoff_n: g.n(),
+            handoff_m: g.m(),
+            seconds: total_timer.elapsed_s(),
+            external_seconds: 0.0,
+        });
+    }
+    let budget = config.memory_budget_bytes.expect("checked above");
+
+    let mut rng = Rng::new(seed);
+    let ext_timer = Timer::start();
+
+    // ---- 1. out-of-core coarsening --------------------------------
+    // Level 0 streams the input store; if the contracted graph still
+    // exceeds the budget, further levels stream it through an
+    // in-memory store view until it fits or clustering stalls.
+    let mut maps: Vec<Vec<u32>> = Vec::new();
+    let mut current: Option<Graph> = None;
+    while maps.len() < EXTERNAL_MAX_LEVELS {
+        let step = {
+            let holder;
+            let level_store: &dyn GraphStore = match &current {
+                None => store,
+                Some(g) => {
+                    holder = InMemoryStore::new(g);
+                    &holder
+                }
+            };
+            external_coarsen_once(level_store, config, ctx, &mut rng)?
+        };
+        match step {
+            None => break, // stalled: no useful shrink left
+            Some(Contraction { coarse, map }) => {
+                maps.push(map);
+                let done = coarse.memory_bytes() <= budget;
+                current = Some(coarse);
+                if done {
+                    break;
+                }
+            }
+        }
+    }
+    // The budget steers the algorithm; it is not a hard RSS cap — a
+    // contracted level is materialized in RAM by construction, and a
+    // tiny budget (the `--memory-budget 1` forcing idiom) is
+    // intentionally never satisfiable. When coarsening stalls above
+    // the budget we hand off the smallest graph reached, loudly.
+    if let Some(g) = &current {
+        if g.memory_bytes() > budget {
+            eprintln!(
+                "sclap out-of-core: coarsening stalled at n={} ({} bytes, budget {budget}); \
+                 handing the smallest reachable graph to the in-memory pipeline",
+                g.n(),
+                g.memory_bytes()
+            );
+        }
+    }
+    let external_levels = maps.len();
+    let coarsen_seconds = ext_timer.elapsed_s();
+    ctx.record("external_coarsening", coarsen_seconds);
+
+    // ---- 2. in-memory multilevel on the contracted graph ----------
+    let inner_seed = rng.next_u64();
+    let (inner_blocks, handoff_n, handoff_m) = {
+        // A stall before any shrink means the budget is unsatisfiable
+        // for this instance. An in-memory backend can still proceed on
+        // its borrowed graph (it evidently fits in RAM); a genuinely
+        // out-of-core input must NOT be silently materialized — that
+        // is exactly the OOM the budget was meant to prevent.
+        let g: &Graph = match &current {
+            Some(g) => g,
+            None => store.as_graph().ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!(
+                        "memory budget ({budget} bytes) unsatisfiable: level-0 clustering \
+                         stalled at n={} ({} bytes) on an out-of-core input",
+                        store.n(),
+                        store.memory_bytes()
+                    ),
+                )
+            })?,
+        };
+        let r = MultilevelPartitioner::with_ctx(config.clone(), ctx.clone())
+            .partition(g, inner_seed);
+        (r.partition.blocks, g.n(), g.m())
+    };
+
+    // ---- 3. project back + semi-external refinement ---------------
+    let mut blocks = inner_blocks;
+    for map in maps.iter().rev() {
+        blocks = project_partition(map, &blocks);
+    }
+    let final_lmax = l_max(
+        store.total_node_weight(),
+        k,
+        config.epsilon,
+        store.max_node_weight(),
+    );
+    let refine_timer = Timer::start();
+    if external_levels > 0 && k > 1 {
+        let refine_cfg = LpaConfig {
+            max_iterations: config.lpa_iterations,
+            ordering: NodeOrdering::Degree, // streaming engine: natural order
+            active_nodes: false,
+            convergence_fraction: 0.05,
+            mode: LpaMode::Refinement,
+        };
+        let (refined, _) =
+            external_sclap(store, final_lmax, &refine_cfg, Some(blocks), ctx, &mut rng)?;
+        blocks = refined;
+    }
+    let refine_seconds = refine_timer.elapsed_s();
+    ctx.record("external_refinement", refine_seconds);
+    // Only the streamed phases — the phase-2 in-memory multilevel is
+    // deliberately excluded.
+    let external_seconds = coarsen_seconds + refine_seconds;
+
+    // ---- metrics (one more streaming pass) ------------------------
+    let cut = streaming_cut(store, &blocks)?;
+    let mut block_weights = vec![0 as Weight; k];
+    for (v, &b) in blocks.iter().enumerate() {
+        block_weights[b as usize] += store.node_weights()[v];
+    }
+    let max_w = block_weights.iter().copied().max().unwrap_or(0);
+    let min_w = block_weights.iter().copied().min().unwrap_or(0);
+    let avg = (store.total_node_weight() as f64 / k as f64).ceil();
+    Ok(OutOfCoreResult {
+        blocks,
+        cut,
+        max_block_weight: max_w,
+        min_block_weight: min_w,
+        imbalance: if avg > 0.0 { max_w as f64 / avg - 1.0 } else { 0.0 },
+        feasible: max_w <= final_lmax,
+        external_levels,
+        handoff_n,
+        handoff_m,
+        seconds: total_timer.elapsed_s(),
+        external_seconds,
+    })
+}
+
+/// One semi-external coarsening step: SCLaP clustering under the
+/// paper's size bound `U = max(max_v c(v), L_max/(f·k))`, then
+/// streaming contraction. `None` when clustering stalled (shrink below
+/// [`EXTERNAL_MIN_SHRINK`]).
+fn external_coarsen_once(
+    store: &dyn GraphStore,
+    config: &PartitionConfig,
+    ctx: &ExecutionCtx,
+    rng: &mut Rng,
+) -> io::Result<Option<Contraction>> {
+    let n = store.n();
+    if n == 0 {
+        return Ok(None);
+    }
+    let lmax = l_max(
+        store.total_node_weight(),
+        config.k,
+        config.epsilon,
+        store.max_node_weight(),
+    );
+    let w = (lmax as f64 / (config.size_factor * config.k as f64)).floor() as Weight;
+    let upper = w.max(store.max_node_weight()).max(1);
+    let lpa = LpaConfig {
+        max_iterations: config.lpa_iterations,
+        ordering: NodeOrdering::Degree, // streaming engine: natural order
+        active_nodes: false,
+        convergence_fraction: 0.05,
+        mode: LpaMode::Clustering,
+    };
+    let (labels, _rounds) = external_sclap(store, upper, &lpa, None, ctx, rng)?;
+    let clustering = dense_from_labels(store.node_weights(), labels);
+    if clustering.num_clusters as f64 > EXTERNAL_MIN_SHRINK * n as f64 {
+        return Ok(None);
+    }
+    Ok(Some(contract_store(store, &clustering)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+    use crate::partitioning::config::Preset;
+
+    fn lfr() -> Graph {
+        let mut rng = Rng::new(4);
+        generators::lfr::lfr_like(1200, 6.0, 0.15, &mut rng).0
+    }
+
+    #[test]
+    fn unlimited_budget_equals_plain_pipeline() {
+        let g = lfr();
+        let mut cfg = PartitionConfig::preset(Preset::CFast, 4);
+        cfg.memory_budget_bytes = None;
+        let store = InMemoryStore::new(&g);
+        let via_store = partition_store(&store, &cfg, 7).unwrap();
+        let direct = MultilevelPartitioner::new(cfg.clone()).partition(&g, 7);
+        assert_eq!(via_store.blocks, direct.partition.blocks);
+        assert_eq!(via_store.cut, direct.metrics.cut);
+        assert_eq!(via_store.external_levels, 0);
+        // A budget the graph fits takes the same path.
+        cfg.memory_budget_bytes = Some(g.memory_bytes());
+        let roomy = partition_store(&store, &cfg, 7).unwrap();
+        assert_eq!(roomy.blocks, direct.partition.blocks);
+    }
+
+    #[test]
+    fn tiny_budget_forces_external_levels() {
+        let g = lfr();
+        let mut cfg = PartitionConfig::preset(Preset::CFast, 4);
+        cfg.memory_budget_bytes = Some(1);
+        let store = InMemoryStore::with_shards(&g, 3);
+        let r = partition_store(&store, &cfg, 9).unwrap();
+        assert!(r.external_levels >= 1, "external path not taken");
+        assert!(r.handoff_n < g.n(), "no out-of-core shrink happened");
+        assert_eq!(r.blocks.len(), g.n());
+        assert_eq!(r.cut, crate::partitioning::metrics::cut_value(&g, &r.blocks));
+        assert!(r.blocks.iter().all(|&b| (b as usize) < 4));
+        // All four blocks populated and the cut is non-trivial.
+        for b in 0..4u32 {
+            assert!(r.blocks.iter().any(|&x| x == b), "block {b} empty");
+        }
+        assert!(r.cut > 0);
+        assert!(r.external_seconds <= r.seconds);
+    }
+
+    #[test]
+    fn external_result_reports_balance_honestly() {
+        let g = lfr();
+        let mut cfg = PartitionConfig::preset(Preset::CFast, 2);
+        cfg.memory_budget_bytes = Some(1);
+        let store = InMemoryStore::new(&g);
+        let r = partition_store(&store, &cfg, 3).unwrap();
+        let mut weights = vec![0i64; 2];
+        for (v, &b) in r.blocks.iter().enumerate() {
+            weights[b as usize] += g.node_weight(v as u32);
+        }
+        assert_eq!(r.max_block_weight, *weights.iter().max().unwrap());
+        assert_eq!(r.min_block_weight, *weights.iter().min().unwrap());
+        let lmax = l_max(g.total_node_weight(), 2, cfg.epsilon, g.max_node_weight());
+        assert_eq!(r.feasible, r.max_block_weight <= lmax);
+    }
+}

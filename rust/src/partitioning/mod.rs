@@ -1,12 +1,16 @@
 //! The partitioning system: partition type, quality metrics, named
-//! configurations (paper §5.1 + baselines) and the multilevel driver.
+//! configurations (paper §5.1 + baselines), the multilevel driver, and
+//! the out-of-core driver ([`external`]) for inputs beyond the memory
+//! budget.
 
 pub mod config;
+pub mod external;
 pub mod metrics;
 pub mod multilevel;
 pub mod partition;
 
 pub use config::{PartitionConfig, Preset};
+pub use external::{partition_store, OutOfCoreResult};
 pub use metrics::{cut_value, evaluate, PartitionMetrics};
 pub use multilevel::{MultilevelPartitioner, PartitionResult};
 pub use partition::Partition;

@@ -1,0 +1,232 @@
+//! Integration: the `graph::store` subsystem end to end.
+//!
+//! The contract under test (graph::store module docs): **sharding is an
+//! execution knob, never an algorithmic one** — same seed + same config
+//! ⇒ byte-identical partition for any shard count, any thread count,
+//! and either storage backend (`InMemoryStore` vs on-disk
+//! `ShardedStore`); and the streaming METIS→shards→contract path
+//! produces exactly the coarse graph the in-memory path produces.
+
+use sclap::clustering::external_lpa::{dense_from_labels, external_sclap};
+use sclap::clustering::label_propagation::{LpaConfig, NodeOrdering};
+use sclap::coarsening::contract::{contract, contract_store};
+use sclap::graph::csr::Graph;
+use sclap::graph::io::{read_metis, write_metis};
+use sclap::graph::store::{
+    convert_metis_to_shards, streaming_cut, write_sharded, GraphStore, InMemoryStore,
+};
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::partitioning::external::partition_store;
+use sclap::partitioning::metrics::cut_value;
+use sclap::partitioning::multilevel::MultilevelPartitioner;
+use sclap::util::exec::ExecutionCtx;
+use sclap::util::rng::Rng;
+use std::io::Cursor;
+use std::path::PathBuf;
+
+fn temp_dir(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sclap-itest-{}-{label}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Community-structured test instance (what the out-of-core path is
+/// for): large enough to coarsen, small enough for CI.
+fn lfr() -> Graph {
+    let mut rng = Rng::new(8);
+    sclap::generators::lfr::lfr_like(1500, 6.0, 0.15, &mut rng).0
+}
+
+/// metis → ShardedStore (1/2/7 shards) → level-0 contraction must equal
+/// the in-memory path exactly (round-trip property of the ISSUE).
+#[test]
+fn metis_to_shards_to_level0_matches_in_memory() {
+    let g = lfr();
+    let mut metis = Vec::new();
+    write_metis(&g, &mut metis).unwrap();
+    let parsed = read_metis(Cursor::new(&metis)).unwrap();
+    assert_eq!(parsed, g, "metis round-trip must be exact");
+
+    // In-memory reference: the same semi-external engine over a
+    // single-shard in-memory view, contracted by the in-memory
+    // contraction.
+    let upper = (g.total_node_weight() / 32).max(g.max_node_weight()).max(1);
+    let cfg = LpaConfig::clustering(5, NodeOrdering::Degree);
+    let reference_labels = {
+        let store = InMemoryStore::new(&g);
+        let ctx = ExecutionCtx::sequential();
+        external_sclap(&store, upper, &cfg, None, &ctx, &mut Rng::new(13))
+            .unwrap()
+            .0
+    };
+    let reference_clustering = dense_from_labels(g.node_weights(), reference_labels.clone());
+    let reference_coarse = contract(&g, &reference_clustering).coarse;
+    assert!(
+        reference_clustering.num_clusters < g.n(),
+        "clustering must shrink for the test to be meaningful"
+    );
+
+    for shards in [1usize, 2, 7] {
+        let dir = temp_dir(&format!("level0-{shards}"));
+        let store = convert_metis_to_shards(Cursor::new(&metis), &dir, shards).unwrap();
+        assert_eq!(store.to_graph().unwrap(), g, "shards={shards}");
+        let ctx = ExecutionCtx::sequential();
+        let (labels, _) =
+            external_sclap(&store, upper, &cfg, None, &ctx, &mut Rng::new(13)).unwrap();
+        assert_eq!(labels, reference_labels, "shards={shards}: labels diverged");
+        let clustering = dense_from_labels(store.node_weights(), labels);
+        let contraction = contract_store(&store, &clustering).unwrap();
+        assert_eq!(
+            contraction.coarse, reference_coarse,
+            "shards={shards}: coarse graph diverged from the in-memory path"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Determinism tentpole: `--memory-budget 1` (forced out-of-core path)
+/// must give byte-identical partitions across shard counts {1, 3, 8} ×
+/// threads {1, 4}, and across storage backends.
+#[test]
+fn forced_external_partition_invariant_across_shards_and_threads() {
+    let g = lfr();
+    let base = {
+        let mut c = PartitionConfig::preset(Preset::CFast, 4);
+        c.memory_budget_bytes = Some(1);
+        c
+    };
+    let seed = 29;
+
+    let reference = {
+        let mut cfg = base.clone();
+        cfg.threads = 1;
+        let store = InMemoryStore::with_shards(&g, 1);
+        partition_store(&store, &cfg, seed).unwrap()
+    };
+    assert!(reference.external_levels >= 1, "budget 1 must force the external path");
+    assert_eq!(reference.cut, cut_value(&g, &reference.blocks));
+
+    for shards in [1usize, 3, 8] {
+        for threads in [1usize, 4] {
+            let mut cfg = base.clone();
+            cfg.threads = threads;
+            let store = InMemoryStore::with_shards(&g, shards);
+            let r = partition_store(&store, &cfg, seed).unwrap();
+            assert_eq!(
+                reference.blocks, r.blocks,
+                "shards={shards} threads={threads}: partition diverged"
+            );
+            assert_eq!(reference.cut, r.cut);
+        }
+    }
+
+    // The on-disk backend must be indistinguishable from the in-memory
+    // one — this is the CI smoke job's property, asserted natively.
+    for shards in [3usize, 8] {
+        let dir = temp_dir(&format!("det-{shards}"));
+        let store = write_sharded(&g, &dir, shards).unwrap();
+        let mut cfg = base.clone();
+        cfg.threads = 4;
+        let r = partition_store(&store, &cfg, seed).unwrap();
+        assert_eq!(
+            reference.blocks, r.blocks,
+            "on-disk shards={shards}: partition diverged from in-memory backend"
+        );
+        assert_eq!(streaming_cut(&store, &r.blocks).unwrap(), reference.cut);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Without a budget (or with a roomy one) the store path is the plain
+/// in-memory pipeline, bit for bit — the switch never changes results
+/// when it selects in-memory.
+#[test]
+fn roomy_budget_is_the_plain_pipeline() {
+    let g = lfr();
+    let mut cfg = PartitionConfig::preset(Preset::UFast, 4);
+    cfg.memory_budget_bytes = Some(64 << 20);
+    assert!(g.memory_bytes() < (64 << 20));
+    let direct = MultilevelPartitioner::new(cfg.clone()).partition(&g, 17);
+    let dir = temp_dir("roomy");
+    let store = write_sharded(&g, &dir, 5).unwrap();
+    let r = partition_store(&store, &cfg, 17).unwrap();
+    assert_eq!(r.external_levels, 0);
+    assert_eq!(r.blocks, direct.partition.blocks);
+    assert_eq!(r.cut, direct.metrics.cut);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Same-seed reruns of the external path are identical; different seeds
+/// differ (the seed is not ignored).
+#[test]
+fn external_path_seeded_reproducibility() {
+    let g = lfr();
+    let mut cfg = PartitionConfig::preset(Preset::CFast, 4);
+    cfg.memory_budget_bytes = Some(1);
+    cfg.threads = 2;
+    let store = InMemoryStore::with_shards(&g, 4);
+    let a = partition_store(&store, &cfg, 5).unwrap();
+    let b = partition_store(&store, &cfg, 5).unwrap();
+    assert_eq!(a.blocks, b.blocks);
+    let c = partition_store(&store, &cfg, 6).unwrap();
+    assert_ne!(a.blocks, c.blocks, "seed ignored by the external path");
+}
+
+/// An unsatisfiable budget (clustering stalls at level 0) proceeds on
+/// an in-memory input (it evidently fits) but must ERROR on an
+/// out-of-core input instead of silently materializing it — the OOM
+/// the budget exists to prevent.
+#[test]
+fn unsatisfiable_budget_errors_on_disk_but_proceeds_in_memory() {
+    // Heavy nodes: no merge fits under U = max node weight, so the
+    // semi-external clustering keeps every node a singleton (stall).
+    let mut b = sclap::graph::GraphBuilder::new(8);
+    for v in 0..8u32 {
+        b.set_node_weight(v, 100);
+        if v > 0 {
+            b.add_edge(v - 1, v, 1);
+        }
+    }
+    let g = b.build();
+    let mut cfg = PartitionConfig::preset(Preset::CFast, 2);
+    cfg.memory_budget_bytes = Some(1);
+    let mem = partition_store(&InMemoryStore::new(&g), &cfg, 3).unwrap();
+    assert_eq!(mem.external_levels, 0);
+    assert_eq!(mem.blocks.len(), 8);
+    let dir = temp_dir("unsat");
+    let store = write_sharded(&g, &dir, 2).unwrap();
+    let err = partition_store(&store, &cfg, 3).unwrap_err();
+    assert!(err.to_string().contains("unsatisfiable"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The external path must produce a sane partition: all blocks
+/// populated, cut far below the trivial random cut, balance reported
+/// honestly.
+#[test]
+fn external_partition_quality_and_metrics() {
+    let g = lfr();
+    let k = 4;
+    let mut cfg = PartitionConfig::preset(Preset::CFast, k);
+    cfg.memory_budget_bytes = Some(1);
+    let store = InMemoryStore::with_shards(&g, 3);
+    let r = partition_store(&store, &cfg, 77).unwrap();
+    assert_eq!(r.blocks.len(), g.n());
+    for b in 0..k as u32 {
+        assert!(r.blocks.iter().any(|&x| x == b), "block {b} empty");
+    }
+    // Random 4-partitions cut ≈ 3/4 of the edges; structure must beat
+    // that comfortably on a community graph.
+    assert!(
+        (r.cut as f64) < 0.5 * g.total_edge_weight() as f64,
+        "cut {} of {} total edge weight",
+        r.cut,
+        g.total_edge_weight()
+    );
+    let mut weights = vec![0i64; k];
+    for (v, &b) in r.blocks.iter().enumerate() {
+        weights[b as usize] += g.node_weight(v as u32);
+    }
+    assert_eq!(r.max_block_weight, *weights.iter().max().unwrap());
+    assert_eq!(r.min_block_weight, *weights.iter().min().unwrap());
+}
