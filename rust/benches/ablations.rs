@@ -72,8 +72,16 @@ fn main() {
                 cells.push((agg.avg_cut, agg.best_cut as f64, agg.avg_seconds));
             }
         }
-        let (avg, _, secs) = geomean_row(&cells);
-        results.push((*preset, avg, secs));
+        let g = geomean_row(&cells);
+        if g.zero_cut_cells > 0 || g.zero_time_cells > 0 {
+            println!(
+                "note: {} excluded {} zero-cut / {} zero-time cell(s) from its geomeans",
+                preset.name(),
+                g.zero_cut_cells,
+                g.zero_time_cells
+            );
+        }
+        results.push((*preset, g.avg_cut, g.seconds));
     }
 
     let get = |p: Preset| results.iter().find(|(x, _, _)| *x == p).unwrap();

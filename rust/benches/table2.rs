@@ -75,12 +75,16 @@ fn main() {
                 cells.push((agg.avg_cut, agg.best_cut as f64, agg.avg_seconds));
             }
         }
-        let (avg, best, secs) = geomean_row(&cells);
+        let g = geomean_row(&cells);
+        // Zero cells (disconnected draws, sub-resolution timings) are
+        // excluded from the geomeans, not epsilon-clamped; mark the
+        // affected cells so the row is never compared against a
+        // full-cell row unawares.
         table.row(&[
-            preset.name().into(),
-            fmt(avg),
-            fmt(best),
-            format!("{secs:.2}"),
+            format!("{}{}", preset.name(), g.zero_marker()),
+            fmt(g.avg_cut),
+            fmt(g.best_cut),
+            format!("{:.2}{}", g.seconds, g.time_marker()),
         ]);
     }
 

@@ -6,6 +6,7 @@
 //! so successive commits accumulate a perf trajectory that scripts can
 //! diff — no more copy-pasting numbers out of stdout.
 
+use crate::util::json::escape_json;
 use crate::util::timer::Stats;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -96,22 +97,6 @@ impl From<bool> for JsonValue {
     fn from(x: bool) -> Self {
         JsonValue::Bool(x)
     }
-}
-
-fn escape_json(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
 }
 
 fn render_value(v: &JsonValue) -> String {
@@ -244,18 +229,77 @@ pub fn fmt(x: f64) -> String {
     }
 }
 
+/// Cross-instance geometric means of one configuration row, plus an
+/// explicit account of the cells that could not participate (cut 0 —
+/// e.g. a disconnected LFR draw). See [`geomean_row`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GeomeanRow {
+    /// Geomean of the per-instance average cuts (positive cells only).
+    pub avg_cut: f64,
+    /// Geomean of the per-instance best cuts (positive cells only).
+    pub best_cut: f64,
+    /// Geomean of the per-instance average times (positive cells only).
+    pub seconds: f64,
+    /// Cells whose avg or best cut was non-positive, excluded from the
+    /// cut geomeans. Report this next to the numbers: a geomean over a
+    /// silently shrunken cell set is not comparable across rows.
+    pub zero_cut_cells: usize,
+    /// Cells whose time was non-positive (sub-timer-resolution runs),
+    /// excluded from the seconds geomean — same reporting rule.
+    pub zero_time_cells: usize,
+}
+
+impl GeomeanRow {
+    /// `"*N"` marker for cut cells when `N` zero-cut cells were
+    /// excluded, empty otherwise.
+    pub fn zero_marker(&self) -> String {
+        Self::marker(self.zero_cut_cells)
+    }
+
+    /// `"*N"` marker for the seconds cell when `N` zero-time cells were
+    /// excluded, empty otherwise.
+    pub fn time_marker(&self) -> String {
+        Self::marker(self.zero_time_cells)
+    }
+
+    fn marker(n: usize) -> String {
+        if n == 0 {
+            String::new()
+        } else {
+            format!("*{n}")
+        }
+    }
+}
+
 /// Geometric-mean aggregation across instances (the paper's cross-
 /// instance score): input (avg_cut, best_cut, seconds) per instance.
-pub fn geomean_row(cells: &[(f64, f64, f64)]) -> (f64, f64, f64) {
+///
+/// Zero-cut cells are **excluded with a count**
+/// ([`GeomeanRow::zero_cut_cells`]) instead of being clamped to a tiny
+/// epsilon — the old clamp dragged the whole row's geomean toward 0 by
+/// a factor of `(1e-12 / typical_cut)^(1/n)` per zero cell, which is
+/// exactly the kind of silent skew a paper-reproduction table must not
+/// have.
+pub fn geomean_row(cells: &[(f64, f64, f64)]) -> GeomeanRow {
     let mut a = Stats::new();
     let mut b = Stats::new();
     let mut t = Stats::new();
+    let mut zero_cut_cells = 0;
     for &(avg, best, secs) in cells {
         a.add(avg);
         b.add(best);
         t.add(secs);
+        if avg <= 0.0 || best <= 0.0 {
+            zero_cut_cells += 1;
+        }
     }
-    (a.geomean(), b.geomean(), t.geomean())
+    GeomeanRow {
+        avg_cut: a.positive_geomean(),
+        best_cut: b.positive_geomean(),
+        seconds: t.positive_geomean(),
+        zero_cut_cells,
+        zero_time_cells: t.nonpositive_count(),
+    }
 }
 
 #[cfg(test)]
@@ -264,10 +308,56 @@ mod tests {
 
     #[test]
     fn geomean_row_matches_hand_calc() {
-        let (a, b, t) = geomean_row(&[(2.0, 1.0, 1.0), (8.0, 4.0, 4.0)]);
-        assert!((a - 4.0).abs() < 1e-9);
-        assert!((b - 2.0).abs() < 1e-9);
-        assert!((t - 2.0).abs() < 1e-9);
+        let g = geomean_row(&[(2.0, 1.0, 1.0), (8.0, 4.0, 4.0)]);
+        assert!((g.avg_cut - 4.0).abs() < 1e-9);
+        assert!((g.best_cut - 2.0).abs() < 1e-9);
+        assert!((g.seconds - 2.0).abs() < 1e-9);
+        assert_eq!(g.zero_cut_cells, 0);
+        assert_eq!(g.zero_marker(), "");
+    }
+
+    #[test]
+    fn geomean_row_excludes_zero_cells_with_a_count() {
+        // A disconnected instance with cut 0 must not skew the row (the
+        // old epsilon clamp multiplied the geomean by ~(1e-12)^(1/n));
+        // it is excluded and counted instead.
+        let g = geomean_row(&[(0.0, 0.0, 1.0), (2.0, 1.0, 1.0), (8.0, 4.0, 4.0)]);
+        assert!((g.avg_cut - 4.0).abs() < 1e-9);
+        assert!((g.best_cut - 2.0).abs() < 1e-9);
+        assert_eq!(g.zero_cut_cells, 1);
+        assert_eq!(g.zero_marker(), "*1");
+        assert_eq!(g.zero_time_cells, 0);
+        assert_eq!(g.time_marker(), "");
+    }
+
+    #[test]
+    fn geomean_row_counts_zero_time_cells() {
+        // A sub-timer-resolution run (0.0s) is excluded from the time
+        // geomean with a count, not silently dropped.
+        let g = geomean_row(&[(2.0, 1.0, 0.0), (8.0, 4.0, 2.0)]);
+        assert_eq!(g.zero_time_cells, 1);
+        assert_eq!(g.time_marker(), "*1");
+        assert!((g.seconds - 2.0).abs() < 1e-9);
+        assert_eq!(g.zero_cut_cells, 0);
+    }
+
+    #[test]
+    fn geomean_row_all_zero() {
+        let g = geomean_row(&[(0.0, 0.0, 1.0), (0.0, 0.0, 2.0)]);
+        assert_eq!(g.avg_cut, 0.0);
+        assert_eq!(g.best_cut, 0.0);
+        assert_eq!(g.zero_cut_cells, 2);
+        // times are still positive and aggregate normally
+        assert!((g.seconds - 2.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_row_counts_best_only_zero() {
+        // best = 0 while avg > 0 (one lucky run) still flags the cell.
+        let g = geomean_row(&[(2.0, 0.0, 1.0)]);
+        assert_eq!(g.zero_cut_cells, 1);
+        assert!((g.avg_cut - 2.0).abs() < 1e-12);
+        assert_eq!(g.best_cut, 0.0);
     }
 
     #[test]

@@ -1,9 +1,147 @@
 //! Minimal CLI argument parsing (the `clap` crate is not available
-//! offline — DESIGN.md §3). Flags are `--key value` or `--flag`.
+//! offline — DESIGN.md §3).
+//!
+//! Parsing is **spec-driven**: every subcommand declares which option
+//! keys take a value and which are boolean flags ([`CommandSpec`],
+//! [`COMMANDS`]). This closes two silent-failure holes the old
+//! permissive parser had:
+//!
+//! - a boolean flag followed by a positional argument no longer
+//!   swallows the positional as its "value"
+//!   (`partition --parallel-coarsening g.graph` keeps `g.graph`);
+//! - an unrecognized option is an error with a did-you-mean suggestion
+//!   (`--memory-bugdet 1g` fails loudly instead of running fully
+//!   in-memory with no warning).
+//!
+//! Accepted forms: `--key value`, `--key=value`, `--flag`,
+//! `--flag=true|false`, and a literal `--` that turns every remaining
+//! token into a positional.
 
 use std::collections::HashMap;
 
-/// Parsed command line: a subcommand plus `--key value` options.
+/// Option schema of one subcommand: which `--keys` take a value and
+/// which are boolean flags. Anything else is rejected at parse time.
+#[derive(Debug, Clone, Copy)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub value_keys: &'static [&'static str],
+    pub flag_keys: &'static [&'static str],
+}
+
+/// The full subcommand table (kept in sync with `main.rs::run` — see
+/// the unit tests).
+pub const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "partition",
+        value_keys: &[
+            "graph",
+            "instance",
+            "shards",
+            "k",
+            "preset",
+            "epsilon",
+            "lpa-iterations",
+            "threads",
+            "reps",
+            "seed",
+            "workers",
+            "memory-budget",
+            "output",
+        ],
+        flag_keys: &["parallel-coarsening", "parallel-refinement"],
+    },
+    CommandSpec {
+        name: "serve",
+        value_keys: &["requests", "workers", "max-pending"],
+        flag_keys: &["timing"],
+    },
+    CommandSpec {
+        name: "generate",
+        value_keys: &[
+            "kind",
+            "out",
+            "seed",
+            "scale",
+            "n",
+            "edges",
+            "attach",
+            "ring",
+            "beta",
+            "rows",
+            "cols",
+            "avg-degree",
+            "mu",
+        ],
+        flag_keys: &[],
+    },
+    CommandSpec {
+        name: "shard",
+        value_keys: &["graph", "instance", "out", "shards"],
+        flag_keys: &[],
+    },
+    CommandSpec {
+        name: "evaluate",
+        value_keys: &["graph", "instance", "partition", "epsilon"],
+        flag_keys: &[],
+    },
+    CommandSpec {
+        name: "stats",
+        value_keys: &["graph", "instance"],
+        flag_keys: &[],
+    },
+    CommandSpec {
+        name: "offload",
+        value_keys: &["graph", "instance", "upper", "rounds"],
+        flag_keys: &[],
+    },
+    CommandSpec {
+        name: "presets",
+        value_keys: &[],
+        flag_keys: &[],
+    },
+];
+
+/// Look up a subcommand's option schema.
+pub fn command_spec(name: &str) -> Option<&'static CommandSpec> {
+    COMMANDS.iter().find(|c| c.name == name)
+}
+
+/// Bounded Levenshtein distance for did-you-mean suggestions.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest known key within edit distance 2, for error messages.
+fn suggest<'a>(key: &str, spec: &'a CommandSpec) -> Option<&'a str> {
+    spec.value_keys
+        .iter()
+        .chain(spec.flag_keys.iter())
+        .map(|k| (edit_distance(key, k), *k))
+        .filter(|(d, _)| *d <= 2)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, k)| k)
+}
+
+fn unknown_option(command: &str, key: &str, spec: &CommandSpec) -> String {
+    match suggest(key, spec) {
+        Some(s) => format!("unknown option --{key} for `{command}` (did you mean --{s}?)"),
+        None => format!("unknown option --{key} for `{command}` (see `sclap help`)"),
+    }
+}
+
+/// Parsed command line: a subcommand plus validated options.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: String,
@@ -12,23 +150,82 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// Parse from an iterator of arguments (excluding argv[0]): the
+    /// first token selects the subcommand and its [`CommandSpec`];
+    /// unknown subcommands and unknown options are errors.
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
-        let mut iter = args.into_iter().peekable();
+        let mut iter = args.into_iter();
         let command = iter.next().unwrap_or_default();
+        if matches!(command.as_str(), "" | "help" | "--help") {
+            return Ok(Args {
+                command,
+                ..Args::default()
+            });
+        }
+        let spec = command_spec(&command)
+            .ok_or_else(|| format!("unknown command {command:?} (try `sclap help`)"))?;
+        Self::parse_with_spec(command, iter, spec)
+    }
+
+    /// Parse the options of one subcommand against its schema.
+    pub fn parse_with_spec<I: IntoIterator<Item = String>>(
+        command: String,
+        args: I,
+        spec: &CommandSpec,
+    ) -> Result<Args, String> {
+        let mut iter = args.into_iter().peekable();
         let mut options = HashMap::new();
         let mut positional = Vec::new();
         while let Some(arg) = iter.next() {
-            if let Some(key) = arg.strip_prefix("--") {
-                let value = match iter.peek() {
+            if arg == "--" {
+                // Explicit end of options: the rest is positional.
+                positional.extend(iter);
+                break;
+            }
+            let Some(body) = arg.strip_prefix("--") else {
+                positional.push(arg);
+                continue;
+            };
+            let (key, inline_value) = match body.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (body.to_string(), None),
+            };
+            let takes_value = spec.value_keys.contains(&key.as_str());
+            let is_flag = spec.flag_keys.contains(&key.as_str());
+            if !takes_value && !is_flag {
+                return Err(unknown_option(&command, &key, spec));
+            }
+            let value = if let Some(v) = inline_value {
+                if is_flag && !takes_value {
+                    // An inline value on a boolean flag must actually be
+                    // a boolean — `--timing=on` silently meaning "off"
+                    // is the class of misparse this parser exists to
+                    // eliminate. Stored lowercased so `flag()` sees it.
+                    let lower = v.to_ascii_lowercase();
+                    if !matches!(
+                        lower.as_str(),
+                        "true" | "false" | "1" | "0" | "yes" | "no"
+                    ) {
+                        return Err(format!("option --{key}: bad boolean {v:?} (true/false)"));
+                    }
+                    lower
+                } else {
+                    v
+                }
+            } else if takes_value {
+                // A value-taking key consumes exactly the next token —
+                // which must exist and must not itself be an option.
+                match iter.peek() {
                     Some(next) if !next.starts_with("--") => iter.next().unwrap(),
-                    _ => "true".to_string(), // boolean flag
-                };
-                if options.insert(key.to_string(), value).is_some() {
-                    return Err(format!("duplicate option --{key}"));
+                    _ => return Err(format!("option --{key} needs a value")),
                 }
             } else {
-                positional.push(arg);
+                // Boolean flag: never consumes the next token, so a
+                // following positional is kept as a positional.
+                "true".to_string()
+            };
+            if options.insert(key.clone(), value).is_some() {
+                return Err(format!("duplicate option --{key}"));
             }
         }
         Ok(Args {
@@ -84,6 +281,10 @@ mod tests {
         Args::parse(s.split_whitespace().map(String::from)).unwrap()
     }
 
+    fn parse_err(s: &str) -> String {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap_err()
+    }
+
     #[test]
     fn parses_subcommand_and_options() {
         let a = parse("partition --k 8 --preset UFast --graph g.bin");
@@ -95,10 +296,10 @@ mod tests {
 
     #[test]
     fn boolean_flags() {
-        let a = parse("bench --quick --reps 3");
-        assert!(a.flag("quick"));
+        let a = parse("serve --timing --max-pending 3");
+        assert!(a.flag("timing"));
         assert!(!a.flag("verbose"));
-        assert_eq!(a.get_usize("reps", 10).unwrap(), 3);
+        assert_eq!(a.get_usize("max-pending", 10).unwrap(), 3);
     }
 
     #[test]
@@ -111,21 +312,125 @@ mod tests {
 
     #[test]
     fn positional_args() {
-        let a = parse("stats file1.graph file2.graph --quick");
+        let a = parse("stats file1.graph file2.graph");
         assert_eq!(a.positional, vec!["file1.graph", "file2.graph"]);
     }
 
     #[test]
+    fn flag_does_not_swallow_following_positional() {
+        // Regression: the old parser attached the next non-`--` token to
+        // ANY option, so a boolean flag silently ate a positional.
+        let a = parse("partition --parallel-coarsening g.graph");
+        assert!(a.flag("parallel-coarsening"));
+        assert_eq!(a.positional, vec!["g.graph"]);
+    }
+
+    #[test]
+    fn key_equals_value_forms() {
+        let a = parse("partition --k=8 --preset=UFast --parallel-refinement=false");
+        assert_eq!(a.get_usize("k", 2).unwrap(), 8);
+        assert_eq!(a.get("preset"), Some("UFast"));
+        assert!(!a.flag("parallel-refinement"));
+        let b = parse("partition --parallel-refinement=true");
+        assert!(b.flag("parallel-refinement"));
+    }
+
+    #[test]
+    fn flag_inline_values_validated() {
+        // `--timing=on` must error, not silently mean "off".
+        let e = parse_err("serve --timing=on");
+        assert!(e.contains("bad boolean"), "{e}");
+        // case-insensitive booleans normalize so `flag()` sees them
+        assert!(parse("serve --timing=TRUE").flag("timing"));
+        assert!(!parse("serve --timing=No").flag("timing"));
+    }
+
+    #[test]
+    fn unknown_option_is_an_error_with_suggestion() {
+        // Regression: `--memory-bugdet 1g` used to be silently ignored,
+        // running fully in-memory with no warning.
+        let e = parse_err("partition --memory-bugdet 1g --graph g.bin");
+        assert!(e.contains("--memory-bugdet"), "{e}");
+        assert!(e.contains("--memory-budget"), "no suggestion in {e:?}");
+        // and far-off typos still error, just without a suggestion
+        let e2 = parse_err("partition --frobnicate 1");
+        assert!(e2.contains("unknown option"), "{e2}");
+    }
+
+    #[test]
+    fn unknown_options_validated_per_subcommand() {
+        // `--reps` is a partition key, not a stats key.
+        assert!(parse_err("stats --reps 3").contains("unknown option"));
+        assert!(parse("partition --reps 3").get("reps").is_some());
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        assert!(parse_err("partitoin --k 8").contains("unknown command"));
+    }
+
+    #[test]
+    fn help_forms_skip_option_validation() {
+        for cmd in ["", "help", "--help"] {
+            let a = Args::parse(cmd.split_whitespace().map(String::from)).unwrap();
+            assert_eq!(a.command, cmd);
+        }
+    }
+
+    #[test]
+    fn value_key_requires_a_value() {
+        assert!(parse_err("partition --k").contains("needs a value"));
+        assert!(parse_err("partition --k --preset UFast").contains("needs a value"));
+    }
+
+    #[test]
+    fn double_dash_ends_options() {
+        let a = parse("stats -- --graph");
+        assert!(a.options.is_empty());
+        assert_eq!(a.positional, vec!["--graph"]);
+    }
+
+    #[test]
     fn duplicate_option_rejected() {
-        assert!(Args::parse(
-            "x --k 1 --k 2".split_whitespace().map(String::from)
-        )
-        .is_err());
+        assert!(parse_err("partition --k 1 --k 2").contains("duplicate"));
+        assert!(parse_err("partition --k=1 --k 2").contains("duplicate"));
     }
 
     #[test]
     fn bad_number_reported() {
-        let a = parse("x --k eight");
+        let a = parse("partition --k eight");
         assert!(a.get_usize("k", 2).is_err());
+    }
+
+    #[test]
+    fn negative_single_dash_values_still_accepted() {
+        // only `--`-prefixed tokens are refused as values
+        let a = parse("partition --seed -3");
+        assert_eq!(a.get("seed"), Some("-3"));
+    }
+
+    #[test]
+    fn config_option_keys_are_all_partition_keys() {
+        // `PartitionConfig::apply_option` keys must stay accepted by the
+        // `partition` subcommand (value keys or flag keys).
+        let spec = command_spec("partition").unwrap();
+        for key in crate::partitioning::config::CONFIG_OPTION_KEYS {
+            assert!(
+                spec.value_keys.contains(key) || spec.flag_keys.contains(key),
+                "config option --{key} missing from the partition spec"
+            );
+        }
+    }
+
+    #[test]
+    fn main_dispatch_table_covered() {
+        // every spec'd command resolves, and the spec table has no dups
+        for c in COMMANDS {
+            assert_eq!(command_spec(c.name).unwrap().name, c.name);
+        }
+        let mut names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), COMMANDS.len());
     }
 }

@@ -1,8 +1,15 @@
 //! L3 coordinator: the partitioning service (worker pool, repetition
-//! batching, aggregation — the paper's §5 protocol) and the CLI front end.
+//! batching, aggregation — the paper's §5 protocol), the batching
+//! service front end ([`queue`]: bounded multi-producer request queue,
+//! repetition-interleaved scheduling, backpressure, graceful shutdown),
+//! and the CLI front end.
 
 pub mod cli;
+pub mod queue;
 pub mod service;
 
 pub use cli::Args;
+pub use queue::{
+    BatchService, GraphHandle, Request, RequestError, ServiceConfig, SubmitError, Ticket,
+};
 pub use service::{default_seeds, Aggregate, Coordinator, RunOutcome};

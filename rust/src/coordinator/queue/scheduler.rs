@@ -1,0 +1,352 @@
+//! The batching scheduler: drains the request queue and fans
+//! **individual repetitions** from many requests onto the one shared
+//! pool in round-robin waves, reassembling results per request in seed
+//! order. See the module docs in [`super`] for the model and the
+//! determinism contract.
+
+use super::{lock, GraphHandle, QueueShared, Reply, Request, RequestError};
+use crate::coordinator::service::{run_repetition, Aggregate, RunOutcome};
+use crate::graph::csr::Graph;
+use crate::graph::store::{InMemoryStore, ShardedStore};
+use crate::partitioning::config::PartitionConfig;
+use crate::partitioning::external::partition_store_with_ctx;
+use crate::util::exec::ExecutionCtx;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc};
+
+/// Where an activated request's topology lives. Cheap to clone into
+/// per-repetition units (everything is behind an `Arc`).
+#[derive(Clone)]
+enum Backend {
+    Mem(Arc<Graph>),
+    Store(Arc<ShardedStore>),
+}
+
+/// One accepted request being scheduled: per-seed result slots plus the
+/// dispatch cursor.
+struct ActiveRequest {
+    id: String,
+    config: Arc<PartitionConfig>,
+    seeds: Vec<u64>,
+    /// `None` only when activation failed (then `failed` is set).
+    backend: Option<Backend>,
+    /// First seed index not yet dispatched (waves are synchronous, so
+    /// dispatched implies completed by the time the next wave builds).
+    next_seed: usize,
+    results: Vec<Option<RunOutcome>>,
+    reply: mpsc::Sender<Reply>,
+    failed: Option<String>,
+}
+
+impl ActiveRequest {
+    fn activate(req: Request, reply: mpsc::Sender<Reply>) -> ActiveRequest {
+        let Request {
+            id,
+            graph,
+            config,
+            seeds,
+        } = req;
+        let mut failed = None;
+        if seeds.is_empty() {
+            failed = Some("request has no seeds".to_string());
+        }
+        let backend = match graph {
+            GraphHandle::InMemory(g) => Some(Backend::Mem(g)),
+            GraphHandle::Shards(dir) => match ShardedStore::open(&dir) {
+                Ok(store) => Some(Backend::Store(Arc::new(store))),
+                Err(e) => {
+                    if failed.is_none() {
+                        failed = Some(format!(
+                            "opening shard directory {}: {e}",
+                            dir.display()
+                        ));
+                    }
+                    None
+                }
+            },
+        };
+        let slots = seeds.len();
+        ActiveRequest {
+            id,
+            config: Arc::new(config),
+            seeds,
+            backend,
+            next_seed: 0,
+            results: vec![None; slots],
+            reply,
+            failed,
+        }
+    }
+}
+
+/// One repetition ready to execute: a pure function of its fields.
+struct Unit {
+    backend: Backend,
+    config: Arc<PartitionConfig>,
+    seed: u64,
+}
+
+/// The scheduler thread body: intake → wave → record → reap, until
+/// shutdown has drained everything.
+pub(super) fn scheduler_loop(shared: &Arc<QueueShared>, ctx: &Arc<ExecutionCtx>) {
+    let mut active: Vec<ActiveRequest> = Vec::new();
+    // Rotating fairness offset: each wave starts its round-robin one
+    // request further along, so even a 1-wide wave (workers = 1) — or
+    // more active requests than wave slots — serves every request
+    // within `active.len()` waves instead of draining request 0 first.
+    let mut rotate = 0usize;
+    loop {
+        // Intake: grab everything queued (unless paused); sleep only
+        // when there is nothing to schedule at all.
+        let newly: Vec<(Request, mpsc::Sender<Reply>)> = {
+            let mut st = lock(&shared.state);
+            loop {
+                // Shutdown overrides pause so draining always finishes.
+                let intake_allowed = !st.paused || st.shutting_down;
+                if (intake_allowed && !st.pending.is_empty()) || !active.is_empty() {
+                    break;
+                }
+                if st.shutting_down {
+                    return; // queue empty, nothing active: fully drained
+                }
+                st = shared
+                    .not_empty
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+            if !st.paused || st.shutting_down {
+                let drained: Vec<_> = st.pending.drain(..).collect();
+                if !drained.is_empty() {
+                    shared.not_full.notify_all();
+                }
+                drained
+            } else {
+                Vec::new()
+            }
+        };
+        for (req, reply) in newly {
+            active.push(ActiveRequest::activate(req, reply));
+        }
+        // Activation failures (unopenable shard dir, no seeds) reply
+        // immediately, before any wave is spent on them.
+        reap(&mut active);
+        if active.is_empty() {
+            continue;
+        }
+
+        // One wave of repetitions, interleaved across requests.
+        let wave = build_wave(&active, ctx.threads().max(1), rotate % active.len());
+        rotate = rotate.wrapping_add(1);
+        let units: Vec<Unit> = wave
+            .iter()
+            .map(|&(ri, si)| Unit {
+                backend: active[ri]
+                    .backend
+                    .clone()
+                    .expect("live request has a backend"),
+                config: active[ri].config.clone(),
+                seed: active[ri].seeds[si],
+            })
+            .collect();
+        let results = run_wave(ctx, &units);
+        for (&(ri, si), result) in wave.iter().zip(results) {
+            let a = &mut active[ri];
+            a.next_seed = a.next_seed.max(si + 1);
+            match result {
+                Ok(run) => a.results[si] = Some(run),
+                // First failure wins (wave order is deterministic); the
+                // request's remaining repetitions are not dispatched.
+                Err(message) => {
+                    if a.failed.is_none() {
+                        a.failed = Some(message);
+                    }
+                }
+            }
+        }
+        reap(&mut active);
+    }
+}
+
+/// Round-robin wave builder: one repetition per live request per cycle,
+/// starting at request index `start` and wrapping, until the wave is
+/// `target`-sized or nothing is left. With the caller's rotating
+/// `start`, a 1-seed request rides a near-immediate wave instead of
+/// queueing behind a bigger request's full seed list — even when the
+/// wave is narrower than the active request count (e.g. workers = 1).
+fn build_wave(active: &[ActiveRequest], target: usize, start: usize) -> Vec<(usize, usize)> {
+    let mut wave = Vec::new();
+    let mut cursor: Vec<usize> = active.iter().map(|a| a.next_seed).collect();
+    loop {
+        let mut took = false;
+        for step in 0..active.len() {
+            let ri = (start + step) % active.len();
+            let a = &active[ri];
+            if a.failed.is_some() {
+                continue;
+            }
+            if cursor[ri] < a.seeds.len() {
+                wave.push((ri, cursor[ri]));
+                cursor[ri] += 1;
+                took = true;
+                if wave.len() >= target {
+                    return wave;
+                }
+            }
+        }
+        if !took {
+            return wave;
+        }
+    }
+}
+
+/// Execute one wave. Results come back in wave order; a repetition's
+/// panic or I/O error becomes an `Err` for its own request only —
+/// other requests' units in the same wave are unaffected.
+fn run_wave(ctx: &Arc<ExecutionCtx>, units: &[Unit]) -> Vec<Result<RunOutcome, String>> {
+    if units.len() == 1 {
+        // Single unit: run on the scheduler thread so the repetition's
+        // own parallel phases fan out across the pool instead of
+        // nesting inline behind a one-task job (identical results by
+        // thread-count invariance; better wall-clock).
+        return vec![run_unit(ctx, &units[0])];
+    }
+    ctx.pool()
+        .map_indexed(units.len(), |_worker, i| run_unit(ctx, &units[i]))
+}
+
+/// Execute one repetition; contains panics (a poisoned config must fail
+/// its request, not the wave, the pool, or the service).
+fn run_unit(ctx: &Arc<ExecutionCtx>, unit: &Unit) -> Result<RunOutcome, String> {
+    let outcome = catch_unwind(AssertUnwindSafe(|| match &unit.backend {
+        Backend::Mem(graph) => {
+            if unit.config.memory_budget_bytes.is_some() {
+                // Budgeted in-memory request: same store-backed path the
+                // `partition` CLI takes, so the budget switch behaves
+                // identically through the queue.
+                let store = InMemoryStore::new(graph);
+                return partition_store_with_ctx(&store, &unit.config, unit.seed, ctx)
+                    .map(|r| RunOutcome::from_out_of_core(unit.seed, &r))
+                    .map_err(|e| e.to_string());
+            }
+            Ok(run_repetition(ctx, graph, &unit.config, unit.seed))
+        }
+        Backend::Store(store) => {
+            partition_store_with_ctx(store.as_ref(), &unit.config, unit.seed, ctx)
+                .map(|r| RunOutcome::from_out_of_core(unit.seed, &r))
+                .map_err(|e| e.to_string())
+        }
+    }));
+    match outcome {
+        Ok(result) => result,
+        Err(payload) => Err(panic_message(&payload)),
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("repetition panicked: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("repetition panicked: {s}")
+    } else {
+        "repetition panicked".to_string()
+    }
+}
+
+/// Reply to and drop every finished request: failed ones with their
+/// error, completed ones with an [`Aggregate`] over the seed-ordered
+/// runs. A dropped ticket (client gone) is not an error.
+fn reap(active: &mut Vec<ActiveRequest>) {
+    active.retain_mut(|a| {
+        if let Some(message) = a.failed.take() {
+            let _ = a.reply.send(Err(RequestError {
+                id: a.id.clone(),
+                message,
+            }));
+            return false;
+        }
+        if a.results.iter().all(|r| r.is_some()) {
+            let runs: Vec<RunOutcome> = a
+                .results
+                .drain(..)
+                .map(|r| r.expect("all slots filled"))
+                .collect();
+            let _ = a.reply.send(Ok(Aggregate::from_runs(runs)));
+            return false;
+        }
+        true
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(seeds: usize, next: usize) -> ActiveRequest {
+        // The receiver is dropped: these wave-shape tests never reply
+        // (and `reap` tolerates a gone client anyway).
+        let (tx, _rx) = mpsc::channel();
+        ActiveRequest {
+            id: "t".into(),
+            config: Arc::new(crate::partitioning::config::PartitionConfig::preset(
+                crate::partitioning::config::Preset::CFast,
+                2,
+            )),
+            seeds: (1..=seeds as u64).collect(),
+            backend: None,
+            next_seed: next,
+            results: vec![None; seeds],
+            reply: tx,
+            failed: None,
+        }
+    }
+
+    #[test]
+    fn wave_interleaves_round_robin() {
+        // A(4 seeds), B(1), C(2) with a 5-wide wave: one repetition per
+        // request per cycle — B's single seed rides the first cycle.
+        let active = vec![dummy(4, 0), dummy(1, 0), dummy(2, 0)];
+        let wave = build_wave(&active, 5, 0);
+        assert_eq!(wave, vec![(0, 0), (1, 0), (2, 0), (0, 1), (2, 1)]);
+    }
+
+    #[test]
+    fn wave_respects_cursor_and_target() {
+        let active = vec![dummy(4, 2), dummy(3, 3)]; // B fully dispatched
+        let wave = build_wave(&active, 8, 0);
+        assert_eq!(wave, vec![(0, 2), (0, 3)]);
+        let capped = build_wave(&active, 1, 0);
+        assert_eq!(capped, vec![(0, 2)]);
+    }
+
+    #[test]
+    fn wave_skips_failed_requests() {
+        let mut active = vec![dummy(2, 0), dummy(2, 0)];
+        active[0].failed = Some("boom".into());
+        let wave = build_wave(&active, 4, 0);
+        assert_eq!(wave, vec![(1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn rotating_start_prevents_narrow_wave_starvation() {
+        // workers = 1 ⇒ 1-wide waves. Without rotation every wave would
+        // serve request 0 until it drained; with the scheduler's
+        // rotating start, request 1 is served on the wave starting at
+        // index 1.
+        let active = vec![dummy(10, 0), dummy(1, 0)];
+        assert_eq!(build_wave(&active, 1, 0), vec![(0, 0)]);
+        assert_eq!(build_wave(&active, 1, 1), vec![(1, 0)]);
+        // wrapping works, and a start past a drained request falls
+        // through to the next live one
+        let active = vec![dummy(2, 2), dummy(3, 0)]; // request 0 drained
+        assert_eq!(build_wave(&active, 1, 0), vec![(1, 0)]);
+        assert_eq!(build_wave(&active, 2, 1), vec![(1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn panic_messages_extracted() {
+        let err = catch_unwind(|| panic!("literal")).unwrap_err();
+        assert_eq!(panic_message(&*err), "repetition panicked: literal");
+        let err = catch_unwind(|| panic!("{}", String::from("formatted"))).unwrap_err();
+        assert_eq!(panic_message(&*err), "repetition panicked: formatted");
+    }
+}

@@ -1,0 +1,359 @@
+//! Request specs for the `serve` subcommand: one request per line,
+//! whitespace-separated `key=value` tokens, `#` comments and blank
+//! lines skipped —
+//!
+//! ```text
+//! id=r1 graph=/tmp/web.graph k=8 preset=CFast seeds=1,2,3 output=/tmp/r1.txt
+//! id=r2 shards=/tmp/web-shards k=4 reps=3 seed=5 memory-budget=1
+//! id=r3 instance=tiny-rmat k=8 epsilon=0.05 parallel-coarsening=true
+//! ```
+//!
+//! plus the matching one-JSON-line-per-request result rendering. The
+//! rendered line contains **only deterministic fields** unless timing
+//! is explicitly requested, so two `serve` runs over the same requests
+//! — any worker count, any submission order — produce byte-identical
+//! output lines (the property CI's serve smoke job compares).
+
+use crate::coordinator::service::Aggregate;
+use crate::partitioning::config::{PartitionConfig, Preset, CONFIG_OPTION_KEYS};
+use crate::util::json::escape_json;
+
+/// Where one request's topology comes from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestSource {
+    /// A graph file (`graph=PATH`) loadable by `graph::io::load_path`.
+    GraphFile(String),
+    /// A named generator instance (`instance=NAME`).
+    Instance(String),
+    /// An on-disk shard directory (`shards=DIR`).
+    Shards(String),
+}
+
+/// One parsed request line (pure data — materializing graphs and
+/// submitting is the caller's job, so parsing stays I/O-free and
+/// testable).
+#[derive(Debug, Clone)]
+pub struct RequestSpec {
+    pub id: String,
+    pub source: RequestSource,
+    pub k: usize,
+    pub preset: Preset,
+    /// Explicit seed list (from `seeds=...`, or expanded from
+    /// `reps=N seed=S`; default: the single seed 1).
+    pub seeds: Vec<u64>,
+    /// `(key, value)` pairs for [`PartitionConfig::apply_option`].
+    pub config_options: Vec<(String, String)>,
+    /// Optional path to write the best partition to.
+    pub output: Option<String>,
+}
+
+impl RequestSpec {
+    /// Materialize the partitioner configuration for this spec.
+    pub fn build_config(&self) -> Result<PartitionConfig, String> {
+        let mut config = PartitionConfig::preset(self.preset, self.k);
+        for (key, value) in &self.config_options {
+            config.apply_option(key, value)?;
+        }
+        Ok(config)
+    }
+}
+
+/// Keys a request line may use besides [`CONFIG_OPTION_KEYS`].
+const SPEC_KEYS: &[&str] = &[
+    "id", "graph", "instance", "shards", "k", "preset", "seeds", "reps", "seed", "output",
+];
+
+fn known_key(key: &str) -> bool {
+    SPEC_KEYS.contains(&key) || CONFIG_OPTION_KEYS.contains(&key)
+}
+
+/// Parse one request line. `default_id` names the request when the line
+/// has no `id=` (callers pass e.g. `"req3"` for line 3). Returns
+/// `Ok(None)` for blank/comment lines; unknown keys, missing required
+/// keys, and malformed values are errors — a service front end must
+/// never silently ignore part of a request.
+pub fn parse_request_line(line: &str, default_id: &str) -> Result<Option<RequestSpec>, String> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut id = default_id.to_string();
+    let mut source: Option<RequestSource> = None;
+    let mut k: Option<usize> = None;
+    let mut preset_name = "CFast".to_string();
+    let mut seeds: Option<Vec<u64>> = None;
+    let mut reps: Option<usize> = None;
+    let mut seed: Option<u64> = None;
+    let mut output = None;
+    let mut config_options = Vec::new();
+    let mut seen: Vec<String> = Vec::new();
+
+    for token in line.split_whitespace() {
+        let (key, value) = token
+            .split_once('=')
+            .ok_or_else(|| format!("bad token {token:?} (want key=value)"))?;
+        if !known_key(key) {
+            return Err(format!("unknown request key {key:?}"));
+        }
+        // Last-wins would silently ignore part of the request (e.g. two
+        // specs pasted onto one line) — reject, like the CLI parser
+        // rejects duplicate options.
+        if seen.iter().any(|s| s == key) {
+            return Err(format!("duplicate request key {key:?}"));
+        }
+        seen.push(key.to_string());
+        let set_source = |source: &mut Option<RequestSource>, s: RequestSource| {
+            if source.is_some() {
+                return Err("more than one of graph=/instance=/shards=".to_string());
+            }
+            *source = Some(s);
+            Ok(())
+        };
+        match key {
+            "id" => id = value.to_string(),
+            "graph" => set_source(&mut source, RequestSource::GraphFile(value.to_string()))?,
+            "instance" => set_source(&mut source, RequestSource::Instance(value.to_string()))?,
+            "shards" => set_source(&mut source, RequestSource::Shards(value.to_string()))?,
+            "k" => {
+                k = Some(
+                    value
+                        .parse()
+                        .map_err(|_| format!("k: bad integer {value:?}"))?,
+                );
+            }
+            "preset" => preset_name = value.to_string(),
+            "seeds" => {
+                let parsed: Result<Vec<u64>, _> =
+                    value.split(',').map(|t| t.trim().parse::<u64>()).collect();
+                seeds = Some(parsed.map_err(|_| format!("seeds: bad list {value:?}"))?);
+            }
+            "reps" => {
+                reps = Some(
+                    value
+                        .parse()
+                        .map_err(|_| format!("reps: bad integer {value:?}"))?,
+                );
+            }
+            "seed" => {
+                seed = Some(
+                    value
+                        .parse()
+                        .map_err(|_| format!("seed: bad integer {value:?}"))?,
+                );
+            }
+            "output" => output = Some(value.to_string()),
+            // everything else is a config key by `known_key`
+            other => config_options.push((other.to_string(), value.to_string())),
+        }
+    }
+
+    let source = source.ok_or("need one of graph=/instance=/shards=")?;
+    let k = k.ok_or("need k=")?;
+    if k == 0 {
+        return Err("k must be at least 1".to_string());
+    }
+    let preset = Preset::from_name(&preset_name)
+        .ok_or_else(|| format!("unknown preset {preset_name:?}"))?;
+    let seeds = match (seeds, reps, seed) {
+        (Some(_), Some(_), _) => {
+            return Err("seeds= and reps= are mutually exclusive".to_string())
+        }
+        (Some(_), None, Some(_)) => {
+            return Err("seeds= and seed= are mutually exclusive".to_string())
+        }
+        (Some(list), None, None) => list,
+        (None, r, s) => {
+            let start = s.unwrap_or(1);
+            let n = r.unwrap_or(1);
+            (0..n as u64).map(|i| start + i).collect()
+        }
+    };
+    if seeds.is_empty() {
+        return Err("request has no seeds".to_string());
+    }
+    Ok(Some(RequestSpec {
+        id,
+        source,
+        k,
+        preset,
+        seeds,
+        config_options,
+        output,
+    }))
+}
+
+/// FNV-1a over the little-endian bytes of a block vector — a compact
+/// deterministic fingerprint of a partition for result lines.
+pub fn blocks_fingerprint(blocks: &[u32]) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for b in blocks {
+        for byte in b.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Render one finished request as a JSON line. Field order is fixed and
+/// every field is a pure function of the request — except the trailing
+/// timing fields, emitted only when `timing` is set (they vary run to
+/// run, so the default output is bit-for-bit reproducible).
+pub fn render_result_line(id: &str, agg: &Aggregate, timing: bool) -> String {
+    let seeds: Vec<String> = agg.runs.iter().map(|r| r.seed.to_string()).collect();
+    let cuts: Vec<String> = agg.runs.iter().map(|r| r.cut.to_string()).collect();
+    let mut line = format!(
+        "{{\"id\":\"{}\",\"status\":\"ok\",\"n\":{},\"reps\":{},\"seeds\":[{}],\"cuts\":[{}],\"avg_cut\":{},\"best_cut\":{},\"infeasible_runs\":{},\"best_blocks_fnv\":\"{:016x}\"",
+        escape_json(id),
+        agg.best_blocks.len(),
+        agg.runs.len(),
+        seeds.join(","),
+        cuts.join(","),
+        agg.avg_cut,
+        agg.best_cut,
+        agg.infeasible_runs,
+        blocks_fingerprint(&agg.best_blocks),
+    );
+    if timing {
+        line.push_str(&format!(",\"avg_seconds\":{}", agg.avg_seconds));
+    }
+    line.push('}');
+    line
+}
+
+/// Render one failed request as a JSON line.
+pub fn render_error_line(id: &str, message: &str) -> String {
+    format!(
+        "{{\"id\":\"{}\",\"status\":\"error\",\"error\":\"{}\"}}",
+        escape_json(id),
+        escape_json(message)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::RunOutcome;
+
+    fn parse(line: &str) -> RequestSpec {
+        parse_request_line(line, "d").unwrap().unwrap()
+    }
+
+    fn parse_err(line: &str) -> String {
+        parse_request_line(line, "d").unwrap_err()
+    }
+
+    #[test]
+    fn blank_and_comment_lines_skip() {
+        assert!(parse_request_line("", "d").unwrap().is_none());
+        assert!(parse_request_line("   ", "d").unwrap().is_none());
+        assert!(parse_request_line("# graph=x k=2", "d").unwrap().is_none());
+    }
+
+    #[test]
+    fn full_line_parses() {
+        let s = parse("id=r1 graph=/tmp/g.graph k=8 preset=UFast seeds=3,1,2 output=/tmp/o.txt");
+        assert_eq!(s.id, "r1");
+        assert_eq!(s.source, RequestSource::GraphFile("/tmp/g.graph".into()));
+        assert_eq!(s.k, 8);
+        assert_eq!(s.preset, Preset::UFast);
+        assert_eq!(s.seeds, vec![3, 1, 2]);
+        assert_eq!(s.output.as_deref(), Some("/tmp/o.txt"));
+    }
+
+    #[test]
+    fn defaults_and_reps_expansion() {
+        let s = parse("instance=tiny-rmat k=4");
+        assert_eq!(s.id, "d");
+        assert_eq!(s.preset, Preset::CFast);
+        assert_eq!(s.seeds, vec![1]);
+        let s = parse("instance=tiny-rmat k=4 reps=3 seed=5");
+        assert_eq!(s.seeds, vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn config_options_flow_into_the_config() {
+        let s = parse("shards=/tmp/dir k=4 memory-budget=2k epsilon=0.05 parallel-coarsening=true");
+        assert_eq!(s.source, RequestSource::Shards("/tmp/dir".into()));
+        let c = s.build_config().unwrap();
+        assert_eq!(c.memory_budget_bytes, Some(2048));
+        assert!((c.epsilon - 0.05).abs() < 1e-12);
+        assert!(c.parallel_coarsening);
+        assert_eq!(c.k, 4);
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(parse_err("k=4").contains("graph=/instance=/shards="));
+        assert!(parse_err("graph=g").contains("need k="));
+        assert!(parse_err("graph=g k=0").contains("at least 1"));
+        assert!(parse_err("graph=g k=2 prest=UFast").contains("unknown request key"));
+        assert!(parse_err("graph=g k=2 preset=Bogus").contains("unknown preset"));
+        assert!(parse_err("graph=g k=2 seeds=1,x").contains("bad list"));
+        assert!(parse_err("graph=g k=4 k=8").contains("duplicate request key"));
+        assert!(parse_err("graph=g k=2 epsilon=0.01 epsilon=0.05").contains("duplicate"));
+        assert!(parse_err("graph=g k=2 seeds=1 reps=2").contains("mutually exclusive"));
+        assert!(parse_err("graph=g k=2 seeds=1 seed=2").contains("mutually exclusive"));
+        assert!(parse_err("graph=g k=2 seeds=").contains("bad list"));
+        assert!(parse_err("graph=g instance=x k=2").contains("more than one"));
+        assert!(parse_err("graph=g k=2 bare-token").contains("key=value"));
+        // config-key values are validated through apply_option
+        let s = parse("graph=g k=2 memory-budget=1q");
+        assert!(s.build_config().unwrap_err().contains("memory-budget"));
+    }
+
+    fn tiny_aggregate() -> Aggregate {
+        let mk = |seed, cut| RunOutcome {
+            seed,
+            cut,
+            seconds: 0.25,
+            imbalance: 0.0,
+            feasible: true,
+            initial_cut: cut,
+            levels: 1,
+            coarsest_n: 4,
+            blocks: vec![0, 1, 0, 1],
+        };
+        Aggregate::from_runs(vec![mk(2, 30), mk(1, 10)])
+    }
+
+    #[test]
+    fn result_line_is_deterministic_json() {
+        let agg = tiny_aggregate();
+        let line = render_result_line("r\"1\"", &agg, false);
+        assert!(line.starts_with("{\"id\":\"r\\\"1\\\"\",\"status\":\"ok\""), "{line}");
+        assert!(line.contains("\"seeds\":[1,2]"), "{line}");
+        assert!(line.contains("\"cuts\":[10,30]"), "{line}");
+        assert!(line.contains("\"best_cut\":10"), "{line}");
+        assert!(line.contains("\"avg_cut\":20"), "{line}");
+        assert!(!line.contains("avg_seconds"), "{line}");
+        assert_eq!(line, render_result_line("r\"1\"", &agg, false));
+        // timing is opt-in (and the only nondeterministic field)
+        assert!(render_result_line("x", &agg, true).contains("avg_seconds"));
+    }
+
+    #[test]
+    fn error_line_escapes() {
+        let line = render_error_line("r1", "bad \"value\"\n");
+        assert_eq!(
+            line,
+            "{\"id\":\"r1\",\"status\":\"error\",\"error\":\"bad \\\"value\\\"\\n\"}"
+        );
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_partitions() {
+        let a = blocks_fingerprint(&[0, 1, 0, 1]);
+        let b = blocks_fingerprint(&[0, 1, 1, 0]);
+        assert_ne!(a, b);
+        assert_eq!(a, blocks_fingerprint(&[0, 1, 0, 1]));
+        // FNV-1a of empty input is the offset basis
+        assert_eq!(blocks_fingerprint(&[]), 0xcbf2_9ce4_8422_2325);
+        // Known-answer vectors (reference FNV-1a 64 over the LE bytes),
+        // so an external consumer can recompute the fingerprint.
+        assert_eq!(blocks_fingerprint(&[1]), 0xad2a_ca77_4798_5764);
+        assert_eq!(blocks_fingerprint(&[0, 1, 0, 1]), 0x32d7_4821_5c66_e845);
+    }
+}

@@ -46,7 +46,7 @@ pub struct RunOutcome {
 }
 
 impl RunOutcome {
-    fn from_result(seed: u64, r: &PartitionResult) -> Self {
+    pub(crate) fn from_result(seed: u64, r: &PartitionResult) -> Self {
         RunOutcome {
             seed,
             cut: r.metrics.cut,
@@ -59,6 +59,45 @@ impl RunOutcome {
             blocks: r.partition.blocks.clone(),
         }
     }
+
+    /// RunOutcome view of an out-of-core run (the store-backed service
+    /// path). The external driver does not track an initial cut, so
+    /// `initial_cut` reports 0; `levels` carries the external level
+    /// count and `coarsest_n` the size of the graph handed to the
+    /// in-memory pipeline. All fields except `seconds` are
+    /// deterministic for a fixed (store, config, seed).
+    pub fn from_out_of_core(
+        seed: u64,
+        r: &crate::partitioning::external::OutOfCoreResult,
+    ) -> Self {
+        RunOutcome {
+            seed,
+            cut: r.cut,
+            seconds: r.seconds,
+            imbalance: r.imbalance,
+            feasible: r.feasible,
+            initial_cut: 0,
+            levels: r.external_levels,
+            coarsest_n: r.handoff_n,
+            blocks: r.blocks.clone(),
+        }
+    }
+}
+
+/// Execute one repetition on the shared context: the single code path
+/// behind both [`Coordinator::partition_repeated`] jobs and the
+/// batching service's scheduler units
+/// ([`crate::coordinator::queue::BatchService`]). Pure function of
+/// (graph, config, seed) — the context never influences results.
+pub(crate) fn run_repetition(
+    ctx: &Arc<ExecutionCtx>,
+    graph: &Arc<Graph>,
+    config: &PartitionConfig,
+    seed: u64,
+) -> RunOutcome {
+    let partitioner = MultilevelPartitioner::with_ctx(config.clone(), ctx.clone());
+    let result = partitioner.partition(graph, seed);
+    RunOutcome::from_result(seed, &result)
 }
 
 /// Aggregate over the repetitions of one (instance, config, k) cell —
@@ -157,19 +196,13 @@ impl Coordinator {
             // parallel phases fan out across the shared pool instead of
             // nesting inline behind a one-task job. Identical result
             // (thread-count invariance), better wall-clock.
-            let seed = seeds[0];
-            let partitioner =
-                MultilevelPartitioner::with_ctx(config.clone(), self.ctx.clone());
-            let result = partitioner.partition(&graph, seed);
-            return Aggregate::from_runs(vec![RunOutcome::from_result(seed, &result)]);
+            let run = run_repetition(&self.ctx, &graph, config, seeds[0]);
+            return Aggregate::from_runs(vec![run]);
         }
         let runs: Vec<RunOutcome> = self.ctx.pool().map_indexed(seeds.len(), |_worker, i| {
             let seed = seeds[i];
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                let partitioner =
-                    MultilevelPartitioner::with_ctx(config.clone(), self.ctx.clone());
-                let result = partitioner.partition(&graph, seed);
-                RunOutcome::from_result(seed, &result)
+                run_repetition(&self.ctx, &graph, config, seed)
             }));
             match outcome {
                 Ok(run) => run,

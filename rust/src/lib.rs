@@ -7,7 +7,7 @@
 //! - **L3 (this crate)**: the full multilevel partitioner — size-constrained
 //!   label propagation (SCLaP), cluster contraction, initial partitioning,
 //!   refinement, V-cycles, ensembles, the baselines, and a partitioning
-//!   service coordinator.
+//!   service coordinator with a batching request-queue front end.
 //! - **L2/L1 (python/, build-time only)**: the dense synchronous SCLaP
 //!   round (JAX) with a Pallas-tiled scoring matmul, AOT-lowered to HLO
 //!   text in `artifacts/` and executed from [`runtime`] via PJRT.
@@ -104,6 +104,60 @@
 //! let r = sclap::partitioning::external::partition_store(&store, &config, 42).unwrap();
 //! println!("cut = {} via {} external level(s)", r.cut, r.external_levels);
 //! ```
+//!
+//! # coordinator::queue: the batching service front end
+//!
+//! Many clients, one machine: [`coordinator::queue::BatchService`]
+//! puts a **bounded multi-producer request queue** in front of the
+//! coordinator. A request is (graph handle, config, seeds) — graph
+//! handles are in-memory `Arc<Graph>`s or on-disk shard directories,
+//! so both storage regimes flow through the same queue. A scheduler
+//! thread drains the queue and fans out **individual repetitions**
+//! (not whole requests) in round-robin waves across the one shared
+//! pool, rotating the round-robin start each wave: a 1-seed request
+//! submitted next to a 10-seed request rides an early wave instead of
+//! queueing behind all ten repetitions, for any pool width. Results
+//! are reassembled per request in seed order.
+//!
+//! Semantics:
+//! - **backpressure** — the queue is bounded by
+//!   [`ServiceConfig::max_pending`](coordinator::queue::ServiceConfig):
+//!   `submit` blocks until a slot frees; `try_submit` returns
+//!   [`SubmitError::Busy`](coordinator::queue::SubmitError).
+//! - **graceful shutdown** — dropping (or `shutdown()`-ing) the
+//!   service refuses new work, drains every accepted request, and
+//!   resolves their tickets before the scheduler exits.
+//! - **fault isolation** — a panicking repetition (poisoned config)
+//!   or an I/O error fails only its own request; the pool and every
+//!   other request keep going.
+//! - **determinism** — each repetition is a pure function of (graph,
+//!   config, seed), so a request's [`coordinator::service::Aggregate`]
+//!   is byte-identical (modulo wall-clock fields) for any worker
+//!   count, submission order, or interleaving with other requests
+//!   (`rust/tests/batch_queue.rs`).
+//!
+//! The `sclap serve` subcommand exposes the queue on the command
+//! line: newline-delimited request specs in, one deterministic JSON
+//! result line per request out (`coordinator::queue::spec`).
+//!
+//! ```no_run
+//! use sclap::coordinator::queue::{BatchService, GraphHandle, Request, ServiceConfig};
+//! use sclap::prelude::*;
+//! use std::sync::Arc;
+//!
+//! let service = BatchService::new(ServiceConfig { workers: 8, max_pending: 32 });
+//! let graph = Arc::new(sclap::generators::instances::by_name("tiny-rmat").unwrap().build());
+//! let ticket = service
+//!     .submit(Request {
+//!         id: "job-1".into(),
+//!         graph: GraphHandle::InMemory(graph),
+//!         config: PartitionConfig::preset(Preset::UFast, 8),
+//!         seeds: (1..=10).collect(),
+//!     })
+//!     .expect("queue accepts while below max_pending");
+//! let agg = ticket.wait().expect("request succeeds");
+//! println!("avg cut = {}", agg.avg_cut);
+//! ```
 
 pub mod bench;
 pub mod clustering;
@@ -119,6 +173,7 @@ pub mod util;
 
 /// Convenience re-exports for downstream users.
 pub mod prelude {
+    pub use crate::coordinator::queue::{BatchService, ServiceConfig};
     pub use crate::graph::store::{GraphStore, InMemoryStore, ShardedStore};
     pub use crate::graph::{Graph, GraphBuilder, NodeId, Weight};
     pub use crate::partitioning::config::{PartitionConfig, Preset};

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   partition  — partition a graph (file or named instance)
+//!   serve      — batching service: many requests through one queue
 //!   generate   — write a synthetic instance to a file
 //!   stats      — print instance statistics (Table-1 style)
 //!   offload    — demo the PJRT dense-LPA offload on a small graph
@@ -10,22 +11,29 @@
 //! Examples:
 //!   sclap partition --instance tiny-rmat --k 8 --preset UFast --reps 10
 //!   sclap partition --graph my.graph --k 16 --preset UStrong --output part.txt
+//!   sclap serve --requests jobs.txt --workers 8 --max-pending 32
 //!   sclap generate --kind rmat --scale 18 --edges 2000000 --out web.bin
 //!   sclap stats --instance uk2002-sim
 
 use sclap::bail;
 use sclap::coordinator::cli::Args;
+use sclap::coordinator::queue::spec::{
+    parse_request_line, render_error_line, render_result_line, RequestSource, RequestSpec,
+};
+use sclap::coordinator::queue::{BatchService, GraphHandle, Request, ServiceConfig};
 use sclap::coordinator::service::{default_seeds, Coordinator};
 use sclap::generators;
 use sclap::graph::csr::Graph;
 use sclap::graph::store::{
     convert_metis_to_shards, write_sharded, GraphStore, InMemoryStore, ShardedStore,
 };
-use sclap::partitioning::config::{parse_memory_budget, PartitionConfig, Preset};
+use sclap::partitioning::config::{PartitionConfig, Preset, CONFIG_OPTION_KEYS};
 use sclap::partitioning::external::OutOfCoreResult;
 use sclap::util::error::{Context, Result};
 use sclap::util::rng::Rng;
-use std::path::Path;
+use std::collections::HashMap;
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 fn main() {
@@ -49,6 +57,7 @@ fn main() {
 fn run(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "partition" => cmd_partition(args),
+        "serve" => cmd_serve(args),
         "evaluate" => cmd_evaluate(args),
         "generate" => cmd_generate(args),
         "shard" => cmd_shard(args),
@@ -75,6 +84,8 @@ fn print_usage() {
                      [--workers W] [--threads T] [--epsilon E]\n\
                      [--output FILE] [--memory-budget BYTES]\n\
                      [--parallel-coarsening] [--parallel-refinement]\n\
+           serve     [--requests FILE|-] [--workers W]\n\
+                     [--max-pending N] [--timing]\n\
            generate  --kind rmat|ba|ws|er|grid|lfr --out FILE\n\
                      [--scale S] [--n N] [--edges M] [--seed S]\n\
                      [--avg-degree D] [--mu MU]\n\
@@ -88,6 +99,18 @@ fn print_usage() {
          \n\
          --shards DIR: read topology from a shard directory (see the\n\
            `shard` command) instead of one graph file.\n\
+         \n\
+         serve: the batching service front end. Reads one request per\n\
+           line (key=value tokens: id=, graph=/instance=/shards=, k=,\n\
+           preset=, seeds=1,2,3 or reps=N seed=S, output=, plus any\n\
+           config key such as memory-budget=) from --requests FILE or\n\
+           stdin, batches repetitions from all requests onto one\n\
+           worker pool (a 1-seed request is never starved behind a\n\
+           10-seed request), and writes one JSON result line per\n\
+           request to stdout in input order. The bounded queue\n\
+           (--max-pending) pushes back on the input stream. Without\n\
+           --timing the output is byte-identical for any --workers\n\
+           value and any request interleaving.\n\
          --memory-budget BYTES (k/m/g suffixes; env\n\
            SCLAP_MEMORY_BUDGET): RAM budget for holding a CSR. Inputs\n\
            beyond it are partitioned out-of-core: semi-external SCLaP\n\
@@ -129,17 +152,11 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let preset = Preset::from_name(preset_name)
         .with_context(|| format!("unknown preset {preset_name:?} (see `sclap presets`)"))?;
     let mut config = PartitionConfig::preset(preset, k);
-    config.epsilon = args.get_f64("epsilon", 0.03)?;
-    if let Some(l) = args.get("lpa-iterations") {
-        config.lpa_iterations = l.parse().context("--lpa-iterations")?;
-    }
-    config.threads = args.get_usize("threads", config.threads)?;
-    config.parallel_coarsening |= args.flag("parallel-coarsening");
-    config.parallel_refinement |= args.flag("parallel-refinement");
-    if let Some(v) = args.get("memory-budget") {
-        config.memory_budget_bytes = parse_memory_budget(Some(v));
-        if config.memory_budget_bytes.is_none() && v != "0" {
-            bail!("--memory-budget: bad value {v:?} (bytes, or k/m/g suffix)");
+    // One shared option path for `partition` flags and `serve` request
+    // specs: `PartitionConfig::apply_option`.
+    for key in CONFIG_OPTION_KEYS {
+        if let Some(v) = args.get(key) {
+            config.apply_option(key, v)?;
         }
     }
     let reps = args.get_usize("reps", 1)?;
@@ -194,10 +211,13 @@ fn cmd_partition(args: &Args) -> Result<()> {
 
     if let Some(out) = args.get("output") {
         write_partition_file(out, &agg.best_blocks)?;
+        println!("wrote best partition to {out}");
     }
     Ok(())
 }
 
+/// Write one block id per line (quiet — callers report; `serve` must
+/// keep stdout pure JSON).
 fn write_partition_file(out: &str, blocks: &[u32]) -> Result<()> {
     let mut text = String::new();
     for b in blocks {
@@ -205,7 +225,6 @@ fn write_partition_file(out: &str, blocks: &[u32]) -> Result<()> {
         text.push('\n');
     }
     std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
-    println!("wrote best partition to {out}");
     Ok(())
 }
 
@@ -269,8 +288,174 @@ fn run_partition_store(
     );
     if let Some(out) = args.get("output") {
         write_partition_file(out, &best.blocks)?;
+        println!("wrote best partition to {out}");
     }
     Ok(())
+}
+
+/// `serve`: the batching service front end. Reads newline-delimited
+/// request specs (`coordinator::queue::spec`) from `--requests FILE`
+/// or stdin, submits them to a [`BatchService`] (bounded queue:
+/// `--max-pending`, blocking submits apply backpressure to the input
+/// stream), and writes **one JSON result line per request to stdout in
+/// input order**. Result lines carry only deterministic fields unless
+/// `--timing` is set, so the output is byte-identical for any
+/// `--workers` value and any scheduling interleaving; diagnostics go
+/// to stderr.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let workers = args.get_usize("workers", 0)?;
+    let max_pending = args.get_usize("max-pending", 16)?;
+    if max_pending == 0 {
+        bail!("--max-pending must be at least 1");
+    }
+    let timing = args.flag("timing");
+    let requests_path = args.get_or("requests", "-");
+    let input: Box<dyn BufRead> = if requests_path == "-" {
+        Box::new(std::io::BufReader::new(std::io::stdin()))
+    } else {
+        let file = std::fs::File::open(requests_path)
+            .with_context(|| format!("opening {requests_path}"))?;
+        Box::new(std::io::BufReader::new(file))
+    };
+
+    let service = BatchService::new(ServiceConfig {
+        workers,
+        max_pending,
+    });
+    // Requests naming the same graph file / instance share one loaded
+    // copy — the batching win the queue exists for.
+    let mut graphs: HashMap<String, Arc<Graph>> = HashMap::new();
+
+    /// One input line's fate, kept in input order.
+    enum Entry {
+        /// Rejected before submission (parse or load failure).
+        Failed { id: String, message: String },
+        /// Submitted; the ticket resolves to the result.
+        Submitted {
+            ticket: sclap::coordinator::queue::Ticket,
+            spec: RequestSpec,
+        },
+    }
+
+    let mut entries: Vec<Entry> = Vec::new();
+    for (idx, line) in input.lines().enumerate() {
+        let line = line.with_context(|| format!("reading {requests_path}"))?;
+        let default_id = format!("req{}", idx + 1);
+        let spec = match parse_request_line(&line, &default_id) {
+            Ok(None) => continue,
+            Ok(Some(spec)) => spec,
+            Err(message) => {
+                entries.push(Entry::Failed {
+                    id: default_id,
+                    message: format!("line {}: {message}", idx + 1),
+                });
+                continue;
+            }
+        };
+        match build_request(&spec, &mut graphs) {
+            Ok(request) => {
+                // Blocking submit: the bounded queue pushes back on how
+                // fast we consume the input stream.
+                match service.submit(request) {
+                    Ok(ticket) => entries.push(Entry::Submitted { ticket, spec }),
+                    Err(e) => entries.push(Entry::Failed {
+                        id: spec.id,
+                        message: e.to_string(),
+                    }),
+                }
+            }
+            Err(message) => entries.push(Entry::Failed {
+                id: spec.id,
+                message,
+            }),
+        }
+    }
+
+    let total = entries.len();
+    let mut failed = 0usize;
+    for entry in entries {
+        match entry {
+            Entry::Failed { id, message } => {
+                failed += 1;
+                println!("{}", render_error_line(&id, &message));
+            }
+            Entry::Submitted { ticket, spec } => match ticket.wait() {
+                Ok(agg) => {
+                    // A failing output= write fails THIS request's line
+                    // only — per-request fault isolation extends to the
+                    // output stage; the stream keeps flowing.
+                    let write_err = spec.output.as_ref().and_then(|out| {
+                        match write_partition_file(out, &agg.best_blocks) {
+                            Ok(()) => {
+                                eprintln!("{}: wrote best partition to {out}", spec.id);
+                                None
+                            }
+                            Err(e) => Some(e.to_string()),
+                        }
+                    });
+                    match write_err {
+                        None => println!("{}", render_result_line(&spec.id, &agg, timing)),
+                        Some(message) => {
+                            failed += 1;
+                            println!("{}", render_error_line(&spec.id, &message));
+                        }
+                    }
+                }
+                Err(e) => {
+                    failed += 1;
+                    println!("{}", render_error_line(&e.id, &e.message));
+                }
+            },
+        }
+    }
+    service.shutdown();
+    eprintln!("served {total} request(s), {failed} failed");
+    Ok(())
+}
+
+/// Materialize one request spec: load (or reuse) the graph for
+/// in-memory sources; shard directories are handed to the service by
+/// path and opened by its scheduler.
+fn build_request(
+    spec: &RequestSpec,
+    graphs: &mut HashMap<String, Arc<Graph>>,
+) -> std::result::Result<Request, String> {
+    let config = spec.build_config()?;
+    let graph = match &spec.source {
+        RequestSource::Shards(dir) => GraphHandle::Shards(PathBuf::from(dir)),
+        RequestSource::GraphFile(path) => {
+            let key = format!("graph:{path}");
+            if let Some(g) = graphs.get(&key) {
+                GraphHandle::InMemory(g.clone())
+            } else {
+                let g = Arc::new(
+                    sclap::graph::io::load_path(Path::new(path))
+                        .map_err(|e| format!("loading {path}: {e}"))?,
+                );
+                graphs.insert(key, g.clone());
+                GraphHandle::InMemory(g)
+            }
+        }
+        RequestSource::Instance(name) => {
+            let key = format!("instance:{name}");
+            if let Some(g) = graphs.get(&key) {
+                GraphHandle::InMemory(g.clone())
+            } else {
+                let built = generators::instances::by_name(name)
+                    .ok_or_else(|| format!("unknown instance {name:?}"))?
+                    .build();
+                let g = Arc::new(built);
+                graphs.insert(key, g.clone());
+                GraphHandle::InMemory(g)
+            }
+        }
+    };
+    Ok(Request {
+        id: spec.id.clone(),
+        graph,
+        config,
+        seeds: spec.seeds.clone(),
+    })
 }
 
 /// `shard`: convert a graph to an on-disk shard directory. METIS inputs

@@ -148,6 +148,28 @@ pub fn parse_memory_budget(value: Option<&str>) -> Option<u64> {
         .filter(|&x| x > 0)
 }
 
+/// The configuration keys [`PartitionConfig::apply_option`]
+/// understands — shared between the `partition` CLI flags and the
+/// `serve` request-spec lines so the two front ends can never drift.
+pub const CONFIG_OPTION_KEYS: &[&str] = &[
+    "epsilon",
+    "lpa-iterations",
+    "threads",
+    "parallel-coarsening",
+    "parallel-refinement",
+    "memory-budget",
+];
+
+/// Parse a boolean option value (`true`/`1`/`yes` vs `false`/`0`/`no`,
+/// case-insensitive).
+fn parse_bool_option(key: &str, value: &str) -> Result<bool, String> {
+    match value.to_ascii_lowercase().as_str() {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        _ => Err(format!("--{key}: bad boolean {value:?} (true/false)")),
+    }
+}
+
 /// Named presets: the paper's configurations and the baselines.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Preset {
@@ -398,6 +420,49 @@ impl PartitionConfig {
         self.ensemble
             .then(|| crate::clustering::ensemble::ensemble_size_for_k(self.k))
     }
+
+    /// Apply one `key=value` configuration option (see
+    /// [`CONFIG_OPTION_KEYS`]). The single code path behind both the
+    /// `partition` CLI flags and the `serve` request-spec lines;
+    /// unknown keys and malformed values error instead of being
+    /// silently ignored.
+    pub fn apply_option(&mut self, key: &str, value: &str) -> Result<(), String> {
+        match key {
+            "epsilon" => {
+                self.epsilon = value
+                    .parse()
+                    .map_err(|_| format!("--epsilon: bad float {value:?}"))?;
+            }
+            "lpa-iterations" => {
+                self.lpa_iterations = value
+                    .parse()
+                    .map_err(|_| format!("--lpa-iterations: bad integer {value:?}"))?;
+            }
+            "threads" => {
+                self.threads = value
+                    .parse()
+                    .map_err(|_| format!("--threads: bad integer {value:?}"))?;
+            }
+            "parallel-coarsening" => {
+                self.parallel_coarsening = parse_bool_option(key, value)?;
+            }
+            "parallel-refinement" => {
+                self.parallel_refinement = parse_bool_option(key, value)?;
+            }
+            "memory-budget" => {
+                self.memory_budget_bytes = parse_memory_budget(Some(value));
+                if self.memory_budget_bytes.is_none() && value.trim() != "0" {
+                    return Err(format!(
+                        "--memory-budget: bad value {value:?} (bytes, or k/m/g suffix)"
+                    ));
+                }
+            }
+            other => {
+                return Err(format!("unknown configuration option {other:?}"));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -485,6 +550,42 @@ mod tests {
         assert_eq!(parse_memory_budget(Some("3M")), Some(3 << 20));
         assert_eq!(parse_memory_budget(Some("1G")), Some(1 << 30));
         assert_eq!(parse_memory_budget(Some(" 8 ")), Some(8));
+    }
+
+    #[test]
+    fn apply_option_covers_every_advertised_key() {
+        let mut c = PartitionConfig::preset(Preset::CFast, 4);
+        for key in CONFIG_OPTION_KEYS {
+            let value = match *key {
+                "epsilon" => "0.05",
+                "lpa-iterations" => "7",
+                "threads" => "3",
+                "memory-budget" => "2k",
+                _ => "true",
+            };
+            c.apply_option(key, value)
+                .unwrap_or_else(|e| panic!("--{key}: {e}"));
+        }
+        assert!((c.epsilon - 0.05).abs() < 1e-12);
+        assert_eq!(c.lpa_iterations, 7);
+        assert_eq!(c.threads, 3);
+        assert!(c.parallel_coarsening);
+        assert!(c.parallel_refinement);
+        assert_eq!(c.memory_budget_bytes, Some(2048));
+    }
+
+    #[test]
+    fn apply_option_rejects_bad_input() {
+        let mut c = PartitionConfig::preset(Preset::CFast, 4);
+        assert!(c.apply_option("epsilon", "lots").is_err());
+        assert!(c.apply_option("parallel-coarsening", "maybe").is_err());
+        assert!(c.apply_option("memory-budget", "1q").is_err());
+        assert!(c.apply_option("memory-bugdet", "1g").is_err()); // typo'd key
+        // explicit opt-outs parse
+        c.apply_option("parallel-coarsening", "false").unwrap();
+        assert!(!c.parallel_coarsening);
+        c.apply_option("memory-budget", "0").unwrap();
+        assert_eq!(c.memory_budget_bytes, None);
     }
 
     #[test]

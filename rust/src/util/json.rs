@@ -1,0 +1,37 @@
+//! Minimal JSON string escaping, shared by every JSON emitter in the
+//! crate (`bench::harness::JsonReport`, the serve result lines in
+//! `coordinator::queue::spec`) so an escaping fix can never apply to
+//! one emitter and miss another.
+
+/// Escape a string for embedding inside a JSON string literal
+/// (quotes, backslashes, and control characters per RFC 8259).
+pub fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_specials_and_controls() {
+        assert_eq!(escape_json("plain"), "plain");
+        assert_eq!(escape_json("a \"b\" \\ c"), "a \\\"b\\\" \\\\ c");
+        assert_eq!(escape_json("x\ny\r\tz"), "x\\ny\\r\\tz");
+        assert_eq!(escape_json("\u{1}"), "\\u0001");
+        // non-ASCII passes through (JSON strings are UTF-8)
+        assert_eq!(escape_json("ε=0.03"), "ε=0.03");
+    }
+}

@@ -9,6 +9,7 @@ pub mod bucket_queue;
 pub mod error;
 pub mod exec;
 pub mod fast_reset;
+pub mod json;
 pub mod pool;
 pub mod proptest;
 pub mod rng;

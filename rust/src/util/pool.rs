@@ -134,6 +134,11 @@ struct JobCtrl {
     count: usize,
     next: AtomicUsize,
     remaining: AtomicUsize,
+    /// Any task of **this job** panicked. Job-scoped by construction: a
+    /// fresh `JobCtrl` is allocated per [`ThreadPool::run`] call, so a
+    /// contained panic in one batch can never poison a later, unrelated
+    /// batch on the same long-lived pool (regression test:
+    /// `panic_flag_is_scoped_to_its_job`).
     panicked: AtomicBool,
 }
 
@@ -545,6 +550,32 @@ mod tests {
         // The pool must still execute later jobs.
         let out = pool.map_indexed(8, |_w, i| i + 1);
         assert_eq!(out, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn panic_flag_is_scoped_to_its_job() {
+        // The panic marker lives on the per-job `JobCtrl`, not on the
+        // pool: after a batch with a contained task panic, a clean batch
+        // submitted to the same long-lived pool must complete without a
+        // spurious "a pool task panicked" report — the service
+        // coordinator keeps one pool alive across many client batches.
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for round in 0..3 {
+                let bad = catch_unwind(AssertUnwindSafe(|| {
+                    pool.run(8, |_w, i| assert!(i != 3, "task 3 exploded"));
+                }));
+                assert!(bad.is_err(), "threads={threads} round={round}: panic must surface");
+                let clean = catch_unwind(AssertUnwindSafe(|| {
+                    pool.map_indexed(8, |_w, i| i)
+                }));
+                assert_eq!(
+                    clean.ok(),
+                    Some((0..8).collect::<Vec<_>>()),
+                    "threads={threads} round={round}: clean job poisoned by earlier panic"
+                );
+            }
+        }
     }
 
     #[test]

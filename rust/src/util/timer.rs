@@ -39,11 +39,25 @@ impl Default for Timer {
 /// Online mean/min/max/geomean accumulator used by the paper-table
 /// harness (§5: arithmetic average per instance, geometric mean across
 /// instances).
+///
+/// Zero samples are legal (a cut of 0 on a disconnected instance) and
+/// are handled *explicitly* rather than smuggled into the log-sum via a
+/// tiny epsilon (which silently skewed the reported geometric mean):
+/// [`geomean`](Stats::geomean) is the true geometric mean — 0 the
+/// moment any sample is non-positive — while
+/// [`positive_geomean`](Stats::positive_geomean) aggregates only the
+/// strictly positive samples and
+/// [`nonpositive_count`](Stats::nonpositive_count) says how many were
+/// excluded, so callers can report "geomean over the nonzero cells
+/// (N excluded)" honestly.
 #[derive(Debug, Clone, Default)]
 pub struct Stats {
     n: usize,
     sum: f64,
+    /// Sum of `ln(x)` over the strictly positive samples only.
     log_sum: f64,
+    /// Samples with `x <= 0` (excluded from the log-sum).
+    nonpositive: usize,
     min: f64,
     max: f64,
 }
@@ -54,6 +68,7 @@ impl Stats {
             n: 0,
             sum: 0.0,
             log_sum: 0.0,
+            nonpositive: 0,
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
         }
@@ -62,17 +77,23 @@ impl Stats {
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         self.sum += x;
-        // Geometric mean over values that may legitimately be 0 (a cut of
-        // zero on a disconnected toy instance): clamp like the DIMACS
-        // challenge scripts do (add 1 inside the log? No — use max with
-        // tiny epsilon so a single zero doesn't zero the whole geomean).
-        self.log_sum += x.max(1e-12).ln();
+        if x > 0.0 {
+            self.log_sum += x.ln();
+        } else {
+            self.nonpositive += 1;
+        }
         self.min = self.min.min(x);
         self.max = self.max.max(x);
     }
 
     pub fn count(&self) -> usize {
         self.n
+    }
+
+    /// Number of samples that were `<= 0` and therefore excluded from
+    /// [`positive_geomean`](Stats::positive_geomean).
+    pub fn nonpositive_count(&self) -> usize {
+        self.nonpositive
     }
 
     pub fn mean(&self) -> f64 {
@@ -83,11 +104,26 @@ impl Stats {
         }
     }
 
+    /// True geometric mean: 0 if there are no samples or any sample is
+    /// non-positive (a single zero zeroes the product — report it,
+    /// don't fudge it).
     pub fn geomean(&self) -> f64 {
-        if self.n == 0 {
+        if self.n == 0 || self.nonpositive > 0 {
             0.0
         } else {
             (self.log_sum / self.n as f64).exp()
+        }
+    }
+
+    /// Geometric mean over the strictly positive samples only (0 if
+    /// there are none); pair with
+    /// [`nonpositive_count`](Stats::nonpositive_count) when reporting.
+    pub fn positive_geomean(&self) -> f64 {
+        let positives = self.n - self.nonpositive;
+        if positives == 0 {
+            0.0
+        } else {
+            (self.log_sum / positives as f64).exp()
         }
     }
 
@@ -138,6 +174,46 @@ mod tests {
         let s = Stats::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.geomean(), 0.0);
+        assert_eq!(s.positive_geomean(), 0.0);
+        assert_eq!(s.nonpositive_count(), 0);
+    }
+
+    #[test]
+    fn stats_zero_samples_zero_the_geomean() {
+        // A run that cut 0 (disconnected instance) must not be fudged
+        // into the log-sum via an epsilon: the true geomean is 0, and
+        // the positive-only geomean excludes the zero with a count.
+        let mut s = Stats::new();
+        for x in [0.0, 2.0, 8.0] {
+            s.add(x);
+        }
+        assert_eq!(s.geomean(), 0.0);
+        assert_eq!(s.nonpositive_count(), 1);
+        assert!((s.positive_geomean() - 4.0).abs() < 1e-9);
+        // mean/min/max still see every sample
+        assert!((s.mean() - 10.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 8.0);
+    }
+
+    #[test]
+    fn stats_all_nonpositive() {
+        let mut s = Stats::new();
+        s.add(0.0);
+        s.add(-1.0); // negative samples count as non-positive too
+        assert_eq!(s.geomean(), 0.0);
+        assert_eq!(s.positive_geomean(), 0.0);
+        assert_eq!(s.nonpositive_count(), 2);
+    }
+
+    #[test]
+    fn stats_geomean_positive_only_matches_geomean() {
+        // With no zeros the two aggregations agree.
+        let mut s = Stats::new();
+        for x in [2.0, 4.0, 8.0] {
+            s.add(x);
+        }
+        assert!((s.geomean() - s.positive_geomean()).abs() < 1e-12);
     }
 
     #[test]
