@@ -1,0 +1,165 @@
+//! Service-layer throughput: requests/sec and per-request latency
+//! through the batching service with the content-addressed result
+//! cache cold vs. warm, plus the single-flight fan-in case — the perf
+//! trajectory seed for the network service layer. Emits
+//! `BENCH_serve_throughput.json` (`bench::harness::JsonReport`).
+//!
+//!     cargo bench --bench serve_throughput [-- --full]
+
+use sclap::bench::harness::JsonReport;
+use sclap::coordinator::net::CachedService;
+use sclap::coordinator::queue::{GraphHandle, Request, ServiceConfig};
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::util::rng::Rng;
+use sclap::util::timer::Timer;
+use std::sync::Arc;
+
+fn request(graph: &Arc<sclap::graph::csr::Graph>, k: usize, seed: u64) -> Request {
+    Request {
+        id: format!("bench-k{k}-s{seed}"),
+        graph: GraphHandle::InMemory(graph.clone()),
+        config: PartitionConfig::preset(Preset::CFast, k),
+        seeds: vec![seed],
+    }
+}
+
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let (n, avg_degree) = if quick { (20_000, 8.0) } else { (100_000, 10.0) };
+    let distinct = if quick { 8usize } else { 24 };
+    let warm_rounds = if quick { 3usize } else { 5 };
+
+    let mut rng = Rng::new(1);
+    println!("building LFR-like instance: n={n}, avg degree {avg_degree}...");
+    let (g, _) = sclap::generators::lfr::lfr_like(n, avg_degree, 0.15, &mut rng);
+    let graph = Arc::new(g);
+    println!("n={} m={}\n", graph.n(), graph.m());
+
+    let mut report = JsonReport::new("serve_throughput");
+    report.record(
+        "instance",
+        &[
+            ("kind", "lfr".into()),
+            ("n", graph.n().into()),
+            ("m", graph.m().into()),
+            ("quick", quick.into()),
+            ("distinct_requests", distinct.into()),
+        ],
+    );
+
+    let service = CachedService::new(
+        ServiceConfig {
+            workers: 0,
+            max_pending: 64,
+        },
+        128,
+    );
+
+    // ---- cold: every request is a distinct key (seed sweep) ----
+    let mut cold_lat = Vec::with_capacity(distinct);
+    let t = Timer::start();
+    for seed in 0..distinct as u64 {
+        let t1 = Timer::start();
+        let (_, cached) = service.run(request(&graph, 8, seed + 1), true).unwrap();
+        assert!(!cached);
+        cold_lat.push(t1.elapsed_s());
+    }
+    let cold_total = t.elapsed_s();
+    let cold_rps = distinct as f64 / cold_total;
+    let cold_mean = cold_lat.iter().sum::<f64>() / cold_lat.len() as f64;
+    println!(
+        "cold : {distinct} requests in {:>7.2} ms  ({cold_rps:>8.1} req/s, mean latency {:>7.2} ms)",
+        cold_total * 1e3,
+        cold_mean * 1e3
+    );
+
+    // ---- warm: the same requests again, repeatedly — pure hits ----
+    let warm_n = distinct * warm_rounds;
+    let mut warm_lat = Vec::with_capacity(warm_n);
+    let t = Timer::start();
+    for round in 0..warm_rounds {
+        for seed in 0..distinct as u64 {
+            let t1 = Timer::start();
+            let (_, cached) = service.run(request(&graph, 8, seed + 1), true).unwrap();
+            assert!(cached, "round {round}: warm request must hit");
+            warm_lat.push(t1.elapsed_s());
+        }
+    }
+    let warm_total = t.elapsed_s();
+    let warm_rps = warm_n as f64 / warm_total;
+    let warm_mean = warm_lat.iter().sum::<f64>() / warm_lat.len() as f64;
+    println!(
+        "warm : {warm_n} requests in {:>7.2} ms  ({warm_rps:>8.1} req/s, mean latency {:>7.2} ms)",
+        warm_total * 1e3,
+        warm_mean * 1e3
+    );
+    // A warm hit still streams the graph fingerprint — that is the
+    // floor on hit latency and worth tracking on its own.
+    println!(
+        "       speedup {:.1}x (hit latency ≈ fingerprint stream)",
+        cold_mean / warm_mean.max(1e-12)
+    );
+
+    // ---- fan-in: N concurrent identical requests, one computation ----
+    let fan = if quick { 8usize } else { 32 };
+    let fan_service = CachedService::new(
+        ServiceConfig {
+            workers: 0,
+            max_pending: 64,
+        },
+        128,
+    );
+    let fan_service = Arc::new(fan_service);
+    let t = Timer::start();
+    let threads: Vec<_> = (0..fan)
+        .map(|i| {
+            let svc = fan_service.clone();
+            let graph = graph.clone();
+            std::thread::spawn(move || {
+                let (_, cached) = svc
+                    .run(request(&graph, 8, 999), true)
+                    .expect("fan-in request succeeds");
+                (i, cached)
+            })
+        })
+        .collect();
+    let mut cached_count = 0usize;
+    for t in threads {
+        if t.join().unwrap().1 {
+            cached_count += 1;
+        }
+    }
+    let fan_total = t.elapsed_s();
+    let stats = fan_service.stats();
+    println!(
+        "fan-in: {fan} identical concurrent requests in {:>7.2} ms — {} computation(s), {cached_count} served by single-flight/cache",
+        fan_total * 1e3,
+        stats.misses
+    );
+
+    report.record(
+        "throughput",
+        &[
+            ("cold_requests", distinct.into()),
+            ("cold_seconds", cold_total.into()),
+            ("cold_req_per_s", cold_rps.into()),
+            ("cold_mean_latency_s", cold_mean.into()),
+            ("warm_requests", warm_n.into()),
+            ("warm_seconds", warm_total.into()),
+            ("warm_req_per_s", warm_rps.into()),
+            ("warm_mean_latency_s", warm_mean.into()),
+            ("warm_speedup", (cold_mean / warm_mean.max(1e-12)).into()),
+        ],
+    );
+    report.record(
+        "fan_in",
+        &[
+            ("threads", fan.into()),
+            ("seconds", fan_total.into()),
+            ("computations", (stats.misses as usize).into()),
+            ("dedup_served", cached_count.into()),
+        ],
+    );
+    let path = report.write().expect("write BENCH_serve_throughput.json");
+    println!("\nwrote {}", path.display());
+}

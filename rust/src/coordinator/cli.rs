@@ -52,8 +52,13 @@ pub const COMMANDS: &[CommandSpec] = &[
     },
     CommandSpec {
         name: "serve",
-        value_keys: &["requests", "workers", "max-pending"],
+        value_keys: &["requests", "workers", "max-pending", "listen", "cache"],
         flag_keys: &["timing"],
+    },
+    CommandSpec {
+        name: "client",
+        value_keys: &["connect", "requests", "timeout"],
+        flag_keys: &["quiet"],
     },
     CommandSpec {
         name: "generate",

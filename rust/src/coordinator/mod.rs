@@ -2,13 +2,17 @@
 //! batching, aggregation — the paper's §5 protocol), the batching
 //! service front end ([`queue`]: bounded multi-producer request queue,
 //! repetition-interleaved scheduling, backpressure, graceful shutdown),
-//! and the CLI front end.
+//! the network service layer ([`net`]: TCP server/client over the
+//! queue with a content-addressed partition cache), and the CLI front
+//! end.
 
 pub mod cli;
+pub mod net;
 pub mod queue;
 pub mod service;
 
 pub use cli::Args;
+pub use net::{CachedService, NetClient, NetServer, NetServerConfig};
 pub use queue::{
     BatchService, GraphHandle, Request, RequestError, ServiceConfig, SubmitError, Ticket,
 };

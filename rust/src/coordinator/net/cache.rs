@@ -1,0 +1,763 @@
+//! Content-addressed result cache in front of the batching scheduler.
+//!
+//! Heavy service traffic repeats itself: the same graph partitioned
+//! with the same configuration and seeds, submitted by many clients.
+//! [`CachedService`] wraps a [`BatchService`] so such repeats cost zero
+//! recomputation:
+//!
+//! - **Content-addressed keys** — a request is identified by
+//!   ([`store_fingerprints`] of its topology, [`config_cache_key`] of
+//!   its configuration, its sorted seed list). The fingerprint pair
+//!   streams the CSR through the
+//!   [`GraphStore`](crate::graph::store::GraphStore) cursor, so
+//!   in-memory graphs and on-disk shard directories of the same
+//!   topology share cache entries without materialization — the
+//!   determinism contract guarantees both backends produce identical
+//!   partitions, cuts, and rendered result lines. Fingerprints are
+//!   memoized (per live graph allocation; per shard directory,
+//!   validated against `meta.bin`'s stamp), so repeated admissions do
+//!   not re-stream the CSR. The request `id` and `output=` destination
+//!   are labels, never key material.
+//! - **Canonical configs** — [`config_cache_key`] renders every
+//!   *algorithmic* field of [`PartitionConfig`] and deliberately omits
+//!   `threads`: the crate-wide thread-count-invariance contract makes
+//!   the pool size unobservable in results, so requests differing only
+//!   in `threads` hit the same entry. Seed lists are sorted in the key
+//!   because [`Aggregate::from_runs`] orders runs by seed — `seeds=1,2`
+//!   and `seeds=2,1` are the same computation.
+//! - **Single-flight** — N concurrent identical requests trigger
+//!   exactly one computation: the first becomes the *leader* and
+//!   submits to the queue; the rest *join* its in-flight slot and wait
+//!   on a condvar. A leader's failure (including `Busy` backpressure)
+//!   propagates to its joiners and is never cached.
+//! - **Bounded LRU** — at most `capacity` completed aggregates stay
+//!   resident; the least-recently-used entry is evicted on overflow.
+//!   In-flight slots are never evicted. Capacity 0 disables caching
+//!   entirely (every request passes straight through).
+//!
+//! Admission ([`CachedService::admit`]) is synchronous and cheap (a
+//! memoized fingerprint lookup, plus one CSR stream the first time a
+//! topology is seen) and also claims the queue slot for leaders;
+//! completion ([`CachedService::complete`]) blocks until the aggregate
+//! exists. The TCP server keeps the two phases apart — its
+//! per-connection reader admits requests *in line order* (so a
+//! duplicated request deterministically joins or hits its predecessor
+//! and busy refusals are reproducible) and hands completion to a
+//! waiter thread so responses may finish out of order. A Lead
+//! admission dropped without completion fails its slot (instead of
+//! wedging the key), so joiners always unblock.
+
+use crate::coordinator::queue::{
+    BatchService, GraphHandle, Request, RequestError, ServiceConfig, SubmitError,
+};
+use crate::coordinator::service::Aggregate;
+use crate::graph::csr::Graph;
+use crate::graph::store::{store_fingerprints, InMemoryStore, ShardedStore};
+use crate::partitioning::config::PartitionConfig;
+use crate::util::exec::ExecutionCtx;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::SystemTime;
+
+/// Why a cached-service request produced no aggregate.
+#[derive(Debug, Clone)]
+pub enum ServeError {
+    /// The bounded queue is at `max_pending` (non-blocking admission).
+    Busy,
+    /// The service is shutting down.
+    ShutDown,
+    /// The request itself failed (bad config, unopenable shards, ...).
+    Failed(RequestError),
+}
+
+impl From<SubmitError> for ServeError {
+    fn from(e: SubmitError) -> Self {
+        match e {
+            SubmitError::Busy => ServeError::Busy,
+            SubmitError::ShutDown => ServeError::ShutDown,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Busy => write!(f, "service queue is full"),
+            ServeError::ShutDown => write!(f, "service is shutting down"),
+            ServeError::Failed(e) => write!(f, "{}", e.message),
+        }
+    }
+}
+
+/// Canonical cache rendering of a [`PartitionConfig`]: every field that
+/// can change the computed partition, and **only** those — `threads` is
+/// omitted (thread-count invariance makes it unobservable in results),
+/// so requests differing only in worker count share cache entries.
+/// The exhaustive destructuring (no `..` rest pattern) is deliberate:
+/// adding a config field without deciding its cache-key role becomes a
+/// compile error instead of a silent stale-result bug.
+pub fn config_cache_key(c: &PartitionConfig) -> String {
+    let PartitionConfig {
+        k,
+        epsilon,
+        lpa_iterations,
+        size_factor,
+        ordering,
+        active_nodes_coarsening,
+        ensemble,
+        vcycles,
+        coarse_imbalance,
+        scheme,
+        initial,
+        refinement,
+        fm,
+        tolerate_imbalance,
+        deep_coarsening,
+        threads: _, // execution knob: unobservable in results
+        parallel_refinement,
+        parallel_coarsening,
+        memory_budget_bytes,
+    } = c;
+    let crate::refinement::fm::FmConfig {
+        max_passes,
+        max_negative_moves,
+        seed_fraction,
+    } = fm;
+    format!(
+        "k={k} eps={epsilon:?} lpa={lpa_iterations} f={size_factor:?} ord={ordering:?} \
+         active={active_nodes_coarsening} ens={ensemble} v={vcycles} cimb={coarse_imbalance:?} \
+         scheme={scheme:?} init={initial:?} refine={refinement:?} \
+         fm=({max_passes},{max_negative_moves},{seed_fraction:?}) tol={tolerate_imbalance} \
+         deep={deep_coarsening} prefine={parallel_refinement} pcoarse={parallel_coarsening} \
+         budget={memory_budget_bytes:?}"
+    )
+}
+
+/// The content address of one request's result. The graph component is
+/// the [`store_fingerprints`] **pair** (two independent 64-bit mixers
+/// over the CSR stream), so a collision must defeat both at once.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    graph: (u64, u64),
+    config: String,
+    seeds: Vec<u64>,
+}
+
+/// Memo of already-computed topology fingerprints, so repeated
+/// requests — the whole point of the cache — do not re-stream the CSR
+/// (for shard directories that is a full disk scan) on every
+/// admission.
+///
+/// - In-memory graphs are keyed by allocation address and validated
+///   with a [`Weak`] upgrade + [`Arc::ptr_eq`] against the request's
+///   handle: an entry is only ever reused while the *original*
+///   allocation is still alive, so address reuse after a drop cannot
+///   alias (graphs are immutable once built).
+/// - Shard directories are keyed by path and validated against
+///   `meta.bin`'s (length, mtime): shard stores are write-once in this
+///   system (the converter creates them, nothing mutates them), so a
+///   changed stamp means a rewritten store and forces a re-stream.
+#[derive(Default)]
+struct FingerprintMemo {
+    mem: HashMap<usize, (Weak<Graph>, (u64, u64))>,
+    shards: HashMap<PathBuf, (ShardStamp, (u64, u64))>,
+}
+
+type ShardStamp = (u64, Option<SystemTime>);
+
+impl FingerprintMemo {
+    fn graph_fp(memo: &Mutex<FingerprintMemo>, g: &Arc<Graph>) -> (u64, u64) {
+        let key = Arc::as_ptr(g) as usize;
+        {
+            let m = memo.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some((weak, fp)) = m.mem.get(&key) {
+                if let Some(live) = weak.upgrade() {
+                    if Arc::ptr_eq(&live, g) {
+                        return *fp;
+                    }
+                }
+            }
+        }
+        let fp = store_fingerprints(&InMemoryStore::new(g))
+            .expect("in-memory fingerprint cannot fail");
+        let mut m = memo.lock().unwrap_or_else(|p| p.into_inner());
+        if m.mem.len() >= 256 {
+            m.mem.retain(|_, entry| entry.0.strong_count() > 0);
+        }
+        m.mem.insert(key, (Arc::downgrade(g), fp));
+        fp
+    }
+
+    fn shard_fp(
+        memo: &Mutex<FingerprintMemo>,
+        dir: &std::path::Path,
+    ) -> std::io::Result<(u64, u64)> {
+        let meta = std::fs::metadata(dir.join("meta.bin"))?;
+        let stamp: ShardStamp = (meta.len(), meta.modified().ok());
+        {
+            let m = memo.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some((seen, fp)) = m.shards.get(dir) {
+                if *seen == stamp {
+                    return Ok(*fp);
+                }
+            }
+        }
+        let store = ShardedStore::open(dir)?;
+        let fp = store_fingerprints(&store)?;
+        let mut m = memo.lock().unwrap_or_else(|p| p.into_inner());
+        m.shards.insert(dir.to_path_buf(), (stamp, fp));
+        Ok(fp)
+    }
+}
+
+enum SlotState {
+    Pending,
+    Resolved(Result<Arc<Aggregate>, ServeError>),
+}
+
+/// One in-flight or completed computation; joiners park on `cond`.
+struct Slot {
+    state: Mutex<SlotState>,
+    cond: Condvar,
+}
+
+impl Slot {
+    fn pending() -> Arc<Slot> {
+        Arc::new(Slot {
+            state: Mutex::new(SlotState::Pending),
+            cond: Condvar::new(),
+        })
+    }
+
+    fn resolve(&self, result: Result<Arc<Aggregate>, ServeError>) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        *st = SlotState::Resolved(result);
+        self.cond.notify_all();
+    }
+
+    fn wait(&self) -> Result<Arc<Aggregate>, ServeError> {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            match &*st {
+                SlotState::Resolved(result) => return result.clone(),
+                SlotState::Pending => {
+                    st = self.cond.wait(st).unwrap_or_else(|p| p.into_inner());
+                }
+            }
+        }
+    }
+}
+
+struct CacheEntry {
+    slot: Arc<Slot>,
+    last_used: u64,
+}
+
+struct CacheMap {
+    entries: HashMap<CacheKey, CacheEntry>,
+    /// Logical LRU clock.
+    tick: u64,
+    stats: CacheStats,
+}
+
+/// Cache observability counters (monotonic since service start).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Admissions served from a completed entry.
+    pub hits: u64,
+    /// Admissions that became computation leaders.
+    pub misses: u64,
+    /// Admissions that joined an in-flight leader (single-flight dedup).
+    pub joined: u64,
+    /// Admissions that bypassed the cache (disabled, or topology
+    /// unreadable at fingerprint time).
+    pub uncached: u64,
+    /// Completed entries evicted by the LRU bound.
+    pub evictions: u64,
+}
+
+/// Cleanup guard carried by a Lead admission: if the admission is
+/// dropped before [`CachedService::complete`] resolves its slot (the
+/// waiter thread failed to spawn, or the caller panicked between the
+/// two phases), the guard fails the slot so joiners unblock and the
+/// key is not wedged Pending forever. After a normal completion the
+/// slot is already resolved and the guard is a no-op.
+struct LeadGuard {
+    map: Arc<Mutex<CacheMap>>,
+    key: CacheKey,
+    slot: Arc<Slot>,
+}
+
+impl Drop for LeadGuard {
+    fn drop(&mut self) {
+        let abandoned = {
+            let mut st = self.slot.state.lock().unwrap_or_else(|p| p.into_inner());
+            if matches!(*st, SlotState::Pending) {
+                *st = SlotState::Resolved(Err(ServeError::Failed(RequestError {
+                    id: String::new(),
+                    message: "request abandoned before completion".to_string(),
+                })));
+                self.slot.cond.notify_all();
+                true
+            } else {
+                false
+            }
+        };
+        // Slot lock released before the map lock: the map→slot order
+        // used everywhere else is never inverted while both are held.
+        if abandoned {
+            let mut map = lock_map(&self.map);
+            if let Some(entry) = map.entries.get(&self.key) {
+                if Arc::ptr_eq(&entry.slot, &self.slot) {
+                    map.entries.remove(&self.key);
+                }
+            }
+        }
+    }
+}
+
+enum AdmissionKind {
+    /// Cache disabled or key not computable: submitted straight to the
+    /// queue (ticket held).
+    Bypass(crate::coordinator::queue::Ticket),
+    /// Completed entry: the aggregate is already resident.
+    Hit(Arc<Aggregate>),
+    /// An identical request is in flight: wait for its result.
+    Join(Arc<Slot>),
+    /// First of its kind: submitted (ticket held); completion resolves
+    /// the slot for the joiners (the guard resolves it on abandonment).
+    Lead {
+        ticket: crate::coordinator::queue::Ticket,
+        guard: LeadGuard,
+    },
+}
+
+/// A request after cache admission, ready to [`CachedService::complete`].
+pub struct Admission {
+    kind: AdmissionKind,
+}
+
+/// A [`BatchService`] behind a content-addressed single-flight LRU
+/// result cache. See the module docs for the model.
+pub struct CachedService {
+    service: BatchService,
+    capacity: usize,
+    map: Arc<Mutex<CacheMap>>,
+    fp_memo: Mutex<FingerprintMemo>,
+}
+
+impl CachedService {
+    /// Service owning a fresh pool, caching up to `cache_entries`
+    /// completed aggregates (0 = caching disabled).
+    pub fn new(config: ServiceConfig, cache_entries: usize) -> Self {
+        Self::wrap(BatchService::new(config), cache_entries)
+    }
+
+    /// Cached service on an existing shared execution context.
+    pub fn with_ctx(config: ServiceConfig, ctx: Arc<ExecutionCtx>, cache_entries: usize) -> Self {
+        Self::wrap(BatchService::with_ctx(config, ctx), cache_entries)
+    }
+
+    fn wrap(service: BatchService, cache_entries: usize) -> Self {
+        CachedService {
+            service,
+            capacity: cache_entries,
+            map: Arc::new(Mutex::new(CacheMap {
+                entries: HashMap::new(),
+                tick: 0,
+                stats: CacheStats::default(),
+            })),
+            fp_memo: Mutex::new(FingerprintMemo::default()),
+        }
+    }
+
+    /// The wrapped batching service.
+    pub fn service(&self) -> &BatchService {
+        &self.service
+    }
+
+    /// Total worker count of the shared pool.
+    pub fn worker_count(&self) -> usize {
+        self.service.worker_count()
+    }
+
+    /// Stop activating new requests (see [`BatchService::pause`]) —
+    /// also the lever that makes single-flight observable in tests.
+    pub fn pause(&self) {
+        self.service.pause();
+    }
+
+    /// Undo [`CachedService::pause`].
+    pub fn resume(&self) {
+        self.service.resume();
+    }
+
+    /// Current cache counters.
+    pub fn stats(&self) -> CacheStats {
+        lock_map(&self.map).stats
+    }
+
+    /// Number of completed entries currently resident.
+    pub fn resident_entries(&self) -> usize {
+        let map = lock_map(&self.map);
+        map.entries
+            .values()
+            .filter(|e| {
+                let state = e.slot.state.lock().unwrap_or_else(|p| p.into_inner());
+                !matches!(*state, SlotState::Pending)
+            })
+            .count()
+    }
+
+    /// Phase 1: compute the content address, register against the
+    /// cache, and — for leaders and bypassed requests — claim a queue
+    /// slot. Synchronous and deterministic: callers that admit
+    /// requests in a fixed order get fixed hit/join/lead outcomes
+    /// **and** a fixed queue order, which is what makes both the
+    /// `cached` marker and the `busy` backpressure signal reproducible
+    /// over the wire. `block` selects blocking vs `Busy`-reporting
+    /// submission; joins and hits never consume a queue slot and never
+    /// report `Busy`.
+    pub fn admit(&self, request: Request, block: bool) -> Result<Admission, ServeError> {
+        if self.capacity == 0 {
+            lock_map(&self.map).stats.uncached += 1;
+            let ticket = self.submit(request, block)?;
+            return Ok(Admission {
+                kind: AdmissionKind::Bypass(ticket),
+            });
+        }
+        let graph = match self.fingerprint(&request) {
+            Ok(fp) => fp,
+            // Unreadable topology: bypass — the queue fails the request
+            // with the real I/O error, and nothing is cached.
+            Err(_) => {
+                lock_map(&self.map).stats.uncached += 1;
+                let ticket = self.submit(request, block)?;
+                return Ok(Admission {
+                    kind: AdmissionKind::Bypass(ticket),
+                });
+            }
+        };
+        let mut seeds = request.seeds.clone();
+        seeds.sort_unstable();
+        let key = CacheKey {
+            graph,
+            config: config_cache_key(&request.config),
+            seeds,
+        };
+        let slot = {
+            let mut map = lock_map(&self.map);
+            map.tick += 1;
+            let tick = map.tick;
+            if let Some(entry) = map.entries.get_mut(&key) {
+                let slot = entry.slot.clone();
+                entry.last_used = tick;
+                let state = slot.state.lock().unwrap_or_else(|p| p.into_inner());
+                match &*state {
+                    SlotState::Resolved(Ok(agg)) => {
+                        let agg = agg.clone();
+                        drop(state);
+                        map.stats.hits += 1;
+                        return Ok(Admission {
+                            kind: AdmissionKind::Hit(agg),
+                        });
+                    }
+                    SlotState::Pending => {
+                        drop(state);
+                        map.stats.joined += 1;
+                        return Ok(Admission {
+                            kind: AdmissionKind::Join(slot),
+                        });
+                    }
+                    // A failed slot between resolution and removal:
+                    // treat as absent and lead a fresh computation.
+                    SlotState::Resolved(Err(_)) => drop(state),
+                }
+            }
+            let slot = Slot::pending();
+            map.stats.misses += 1;
+            map.entries.insert(
+                key.clone(),
+                CacheEntry {
+                    slot: slot.clone(),
+                    last_used: tick,
+                },
+            );
+            slot
+        };
+        match self.submit(request, block) {
+            Ok(ticket) => Ok(Admission {
+                kind: AdmissionKind::Lead {
+                    ticket,
+                    guard: LeadGuard {
+                        map: self.map.clone(),
+                        key,
+                        slot,
+                    },
+                },
+            }),
+            Err(e) => {
+                // The leader could not even enqueue (backpressure or
+                // shutdown): joiners inherit the refusal, nothing is
+                // cached.
+                self.resolve_err(&key, &slot, e.clone());
+                Err(e)
+            }
+        }
+    }
+
+    /// The memoized topology fingerprint of a request's graph handle.
+    fn fingerprint(&self, request: &Request) -> std::io::Result<(u64, u64)> {
+        match &request.graph {
+            GraphHandle::InMemory(g) => Ok(FingerprintMemo::graph_fp(&self.fp_memo, g)),
+            GraphHandle::Shards(dir) => FingerprintMemo::shard_fp(&self.fp_memo, dir),
+        }
+    }
+
+    /// Phase 2: produce the aggregate for an admission. Returns the
+    /// aggregate and whether it came from the cache (a hit or a
+    /// single-flight join — anything that did not cost a computation).
+    pub fn complete(&self, admission: Admission) -> Result<(Arc<Aggregate>, bool), ServeError> {
+        match admission.kind {
+            AdmissionKind::Bypass(ticket) => {
+                let agg = ticket.wait().map_err(ServeError::Failed)?;
+                Ok((Arc::new(agg), false))
+            }
+            AdmissionKind::Hit(agg) => Ok((agg, true)),
+            AdmissionKind::Join(slot) => slot.wait().map(|agg| (agg, true)),
+            AdmissionKind::Lead { ticket, guard } => match ticket.wait() {
+                Ok(agg) => {
+                    let agg = Arc::new(agg);
+                    self.resolve_ok(&guard.key, &guard.slot, agg.clone());
+                    Ok((agg, false))
+                }
+                Err(e) => {
+                    let e = ServeError::Failed(e);
+                    self.resolve_err(&guard.key, &guard.slot, e.clone());
+                    Err(e)
+                }
+            },
+        }
+    }
+
+    /// [`admit`](CachedService::admit) + [`complete`](CachedService::complete)
+    /// in one call — the API for in-process users (tests, benches, the
+    /// stdin front end if it ever wants caching).
+    pub fn run(
+        &self,
+        request: Request,
+        block: bool,
+    ) -> Result<(Arc<Aggregate>, bool), ServeError> {
+        let admission = self.admit(request, block)?;
+        self.complete(admission)
+    }
+
+    fn submit(
+        &self,
+        request: Request,
+        block: bool,
+    ) -> Result<crate::coordinator::queue::Ticket, ServeError> {
+        if block {
+            self.service.submit(request)
+        } else {
+            self.service.try_submit(request)
+        }
+        .map_err(ServeError::from)
+    }
+
+    fn resolve_ok(&self, key: &CacheKey, slot: &Arc<Slot>, agg: Arc<Aggregate>) {
+        let mut map = lock_map(&self.map);
+        slot.resolve(Ok(agg));
+        map.tick += 1;
+        let tick = map.tick;
+        if let Some(entry) = map.entries.get_mut(key) {
+            entry.last_used = tick;
+        }
+        // LRU bound: evict completed entries, never in-flight ones.
+        loop {
+            let resolved: Vec<(&CacheKey, u64)> = map
+                .entries
+                .iter()
+                .filter(|(_, e)| {
+                    !matches!(
+                        *e.slot.state.lock().unwrap_or_else(|p| p.into_inner()),
+                        SlotState::Pending
+                    )
+                })
+                .map(|(k, e)| (k, e.last_used))
+                .collect();
+            if resolved.len() <= self.capacity {
+                break;
+            }
+            let victim = resolved
+                .iter()
+                .min_by_key(|(_, used)| *used)
+                .map(|(k, _)| (*k).clone())
+                .expect("resolved set is non-empty");
+            map.entries.remove(&victim);
+            map.stats.evictions += 1;
+        }
+    }
+
+    fn resolve_err(&self, key: &CacheKey, slot: &Arc<Slot>, error: ServeError) {
+        let mut map = lock_map(&self.map);
+        slot.resolve(Err(error));
+        // Failures are never cached: drop the entry (if it is still
+        // ours) so the next identical request leads a fresh attempt.
+        if let Some(entry) = map.entries.get(key) {
+            if Arc::ptr_eq(&entry.slot, slot) {
+                map.entries.remove(key);
+            }
+        }
+    }
+}
+
+fn lock_map(m: &Mutex<CacheMap>) -> std::sync::MutexGuard<'_, CacheMap> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::karate_club;
+    use crate::partitioning::config::Preset;
+
+    fn karate_request(id: &str, seeds: Vec<u64>) -> Request {
+        Request {
+            id: id.to_string(),
+            graph: GraphHandle::InMemory(Arc::new(karate_club())),
+            config: PartitionConfig::preset(Preset::CFast, 2),
+            seeds,
+        }
+    }
+
+    #[test]
+    fn hit_returns_the_same_aggregate() {
+        let svc = CachedService::new(
+            ServiceConfig {
+                workers: 2,
+                max_pending: 4,
+            },
+            8,
+        );
+        let (first, cached) = svc.run(karate_request("a", vec![1, 2]), true).unwrap();
+        assert!(!cached);
+        let (second, cached) = svc.run(karate_request("b", vec![1, 2]), true).unwrap();
+        assert!(cached, "identical request must hit");
+        assert!(Arc::ptr_eq(&first, &second), "hits share the aggregate");
+        let stats = svc.stats();
+        assert_eq!((stats.misses, stats.hits), (1, 1));
+    }
+
+    #[test]
+    fn thread_knob_and_seed_order_do_not_split_entries() {
+        let svc = CachedService::new(ServiceConfig::default(), 8);
+        let mut req = karate_request("a", vec![2, 1]);
+        req.config.threads = 1;
+        svc.run(req, true).unwrap();
+        let mut req = karate_request("b", vec![1, 2]);
+        req.config.threads = 4; // execution knob, not key material
+        let (_, cached) = svc.run(req, true).unwrap();
+        assert!(cached);
+        assert_eq!(svc.stats().misses, 1);
+    }
+
+    #[test]
+    fn config_key_omits_threads_but_covers_algorithmic_fields() {
+        let a = PartitionConfig::preset(Preset::CFast, 4);
+        let mut b = a.clone();
+        b.threads = 7;
+        assert_eq!(config_cache_key(&a), config_cache_key(&b));
+        let mut c = a.clone();
+        c.epsilon = 0.05;
+        assert_ne!(config_cache_key(&a), config_cache_key(&c));
+        let mut d = a.clone();
+        d.parallel_coarsening = true; // a *different algorithm*
+        assert_ne!(config_cache_key(&a), config_cache_key(&d));
+        let mut e = a.clone();
+        e.memory_budget_bytes = Some(1);
+        assert_ne!(config_cache_key(&a), config_cache_key(&e));
+    }
+
+    #[test]
+    fn capacity_zero_disables_caching() {
+        let svc = CachedService::new(ServiceConfig::default(), 0);
+        let (_, cached) = svc.run(karate_request("a", vec![1]), true).unwrap();
+        assert!(!cached);
+        let (_, cached) = svc.run(karate_request("b", vec![1]), true).unwrap();
+        assert!(!cached);
+        let stats = svc.stats();
+        assert_eq!(stats.uncached, 2);
+        assert_eq!(stats.misses + stats.hits + stats.joined, 0);
+    }
+
+    #[test]
+    fn abandoned_lead_admission_unwedges_its_key_and_joiners() {
+        let svc = Arc::new(CachedService::new(ServiceConfig::default(), 8));
+        svc.pause(); // the leader cannot complete while we abandon it
+        let admission = svc
+            .admit(karate_request("dropped", vec![1]), true)
+            .unwrap();
+        let joiner = {
+            let svc = svc.clone();
+            std::thread::spawn(move || svc.run(karate_request("joiner", vec![1]), true))
+        };
+        while svc.stats().joined == 0 {
+            std::thread::yield_now();
+        }
+        // Dropping a Lead admission without completing it (the failure
+        // mode of a waiter thread that never spawned) must fail the
+        // slot — not wedge the key and its joiners forever.
+        drop(admission);
+        let err = joiner.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("abandoned"), "{err}");
+        svc.resume();
+        let (_, cached) = svc.run(karate_request("retry", vec![1]), true).unwrap();
+        assert!(!cached, "the key must be free for a fresh computation");
+        assert_eq!(svc.stats().misses, 2);
+    }
+
+    #[test]
+    fn fingerprints_are_memoized_per_graph_allocation() {
+        let svc = CachedService::new(ServiceConfig::default(), 8);
+        let karate = Arc::new(karate_club());
+        let same = |id: &str| Request {
+            id: id.to_string(),
+            graph: GraphHandle::InMemory(karate.clone()),
+            config: PartitionConfig::preset(Preset::CFast, 2),
+            seeds: vec![1],
+        };
+        svc.run(same("a"), true).unwrap();
+        let (_, cached) = svc.run(same("b"), true).unwrap();
+        assert!(cached);
+        // A different allocation of identical content still hits (the
+        // memo validates by liveness, the key by content).
+        let other = Arc::new(karate_club());
+        let (_, cached) = svc
+            .run(
+                Request {
+                    id: "c".to_string(),
+                    graph: GraphHandle::InMemory(other),
+                    config: PartitionConfig::preset(Preset::CFast, 2),
+                    seeds: vec![1],
+                },
+                true,
+            )
+            .unwrap();
+        assert!(cached, "content addressing is allocation-independent");
+    }
+
+    #[test]
+    fn failures_are_not_cached() {
+        let svc = CachedService::new(ServiceConfig::default(), 8);
+        let err = svc
+            .run(karate_request("no-seeds", vec![]), true)
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Failed(_)), "{err}");
+        assert_eq!(svc.resident_entries(), 0, "failed entry must be dropped");
+        // the same key computes (and fails) again — still a miss
+        svc.run(karate_request("again", vec![]), true).unwrap_err();
+        assert_eq!(svc.stats().misses, 2);
+    }
+}

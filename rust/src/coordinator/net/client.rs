@@ -1,0 +1,287 @@
+//! The TCP client: line-oriented connection plus structural response
+//! validation (via [`parse_json`]) so consumers check shape and
+//! fields, never raw strings. Used by `sclap client` and the wire
+//! tests.
+
+use crate::util::json::{parse_json, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::{Duration, Instant};
+
+/// The write half of a connection (usable from a sender thread after
+/// [`NetClient::split`]).
+pub struct NetSender {
+    stream: TcpStream,
+}
+
+impl NetSender {
+    /// Send one line (request spec, comment, or `!` control command).
+    pub fn send_line(&mut self, line: &str) -> std::io::Result<()> {
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()
+    }
+
+    /// Half-close the write side: the server sees EOF and closes the
+    /// connection once the remaining responses have drained.
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        self.stream.shutdown(Shutdown::Write)
+    }
+}
+
+/// The read half of a connection.
+pub struct NetReceiver {
+    reader: BufReader<TcpStream>,
+}
+
+impl NetReceiver {
+    /// Receive one response line (`None` on server EOF).
+    pub fn recv_line(&mut self) -> std::io::Result<Option<String>> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            return Ok(None);
+        }
+        while line.ends_with('\n') || line.ends_with('\r') {
+            line.pop();
+        }
+        Ok(Some(line))
+    }
+}
+
+/// One line-framed connection to a [`NetServer`](super::NetServer).
+pub struct NetClient {
+    sender: NetSender,
+    receiver: NetReceiver,
+}
+
+impl NetClient {
+    /// Connect once.
+    pub fn connect(addr: &str) -> std::io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(NetClient {
+            sender: NetSender { stream },
+            receiver: NetReceiver { reader },
+        })
+    }
+
+    /// Connect, retrying until `timeout` elapses — for scripts that
+    /// race a freshly spawned server (the CI smoke job).
+    pub fn connect_retry(addr: &str, timeout: Duration) -> std::io::Result<NetClient> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match Self::connect(addr) {
+                Ok(client) => return Ok(client),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    /// Send one line (request spec, comment, or `!` control command).
+    pub fn send_line(&mut self, line: &str) -> std::io::Result<()> {
+        self.sender.send_line(line)
+    }
+
+    /// Half-close the write side: the server sees EOF and will close
+    /// the connection after the remaining responses drain.
+    pub fn finish_sending(&mut self) -> std::io::Result<()> {
+        self.sender.finish()
+    }
+
+    /// Receive one response line (`None` on server EOF).
+    pub fn recv_line(&mut self) -> std::io::Result<Option<String>> {
+        self.receiver.recv_line()
+    }
+
+    /// Split into independent send/receive halves, so a sender thread
+    /// can stream requests while this thread drains responses —
+    /// full-duplex pipelining without a deadlock risk on large
+    /// streams.
+    pub fn split(self) -> (NetSender, NetReceiver) {
+        (self.sender, self.receiver)
+    }
+
+    /// Send one line, then block for the next response line. Only
+    /// meaningful when no other responses are outstanding (responses
+    /// complete out of order).
+    pub fn request(&mut self, line: &str) -> std::io::Result<String> {
+        self.send_line(line)?;
+        match self.recv_line()? {
+            Some(response) => Ok(response),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection before responding",
+            )),
+        }
+    }
+}
+
+/// A structurally validated response line.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// The echoed request id (control responses have none).
+    pub id: Option<String>,
+    /// `ok`, `error`, `busy`, `pong`, or `shutdown`.
+    pub status: String,
+    /// Whether the result came from the content-addressed cache.
+    pub cached: bool,
+    /// The full parsed object, for field-level assertions.
+    pub json: Json,
+}
+
+impl Response {
+    /// `best_blocks_fnv` of an ok response — the partition fingerprint
+    /// the determinism tests compare.
+    pub fn blocks_fnv(&self) -> Option<&str> {
+        self.json.get("best_blocks_fnv").and_then(Json::as_str)
+    }
+
+    /// `best_cut` of an ok response.
+    pub fn best_cut(&self) -> Option<i64> {
+        self.json.get("best_cut").and_then(Json::as_i64)
+    }
+}
+
+/// Parse and validate one response line against the wire protocol: it
+/// must be a JSON object with a string `status`, and each status's
+/// required fields must be present with the right types. This is the
+/// structural check `sclap client` runs on every line it relays.
+pub fn parse_response(line: &str) -> Result<Response, String> {
+    let json = parse_json(line).map_err(|e| format!("bad response JSON: {e}"))?;
+    if !matches!(json, Json::Obj(_)) {
+        return Err("response is not a JSON object".to_string());
+    }
+    let status = json
+        .get("status")
+        .and_then(Json::as_str)
+        .ok_or("response missing string \"status\"")?
+        .to_string();
+    let id = json
+        .get("id")
+        .and_then(Json::as_str)
+        .map(|s| s.to_string());
+    let cached = json
+        .get("cached")
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    match status.as_str() {
+        "ok" => {
+            if id.is_none() {
+                return Err("ok response missing \"id\"".to_string());
+            }
+            for (field, want_num) in [
+                ("n", true),
+                ("reps", true),
+                ("avg_cut", true),
+                ("best_cut", true),
+                ("infeasible_runs", true),
+                ("best_blocks_fnv", false),
+            ] {
+                let value = json
+                    .get(field)
+                    .ok_or_else(|| format!("ok response missing \"{field}\""))?;
+                let typed = if want_num {
+                    value.as_f64().is_some()
+                } else {
+                    value.as_str().is_some()
+                };
+                if !typed {
+                    return Err(format!("ok response field \"{field}\" has the wrong type"));
+                }
+            }
+            let reps = json.get("reps").and_then(Json::as_i64).unwrap_or(0);
+            for list in ["seeds", "cuts"] {
+                let items = json
+                    .get(list)
+                    .and_then(Json::as_array)
+                    .ok_or_else(|| format!("ok response missing array \"{list}\""))?;
+                if items.len() as i64 != reps {
+                    return Err(format!(
+                        "ok response \"{list}\" has {} entries for reps={reps}",
+                        items.len()
+                    ));
+                }
+                if items.iter().any(|v| v.as_f64().is_none()) {
+                    return Err(format!("ok response \"{list}\" has a non-number entry"));
+                }
+            }
+        }
+        "error" => {
+            json.get("error")
+                .and_then(Json::as_str)
+                .ok_or("error response missing string \"error\"")?;
+        }
+        "busy" => {
+            if id.is_none() {
+                return Err("busy response missing \"id\"".to_string());
+            }
+        }
+        "pong" | "shutdown" => {}
+        other => return Err(format!("unknown response status {other:?}")),
+    }
+    Ok(Response {
+        id,
+        status,
+        cached,
+        json,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates_ok_lines() {
+        let line = "{\"id\":\"a\",\"status\":\"ok\",\"n\":34,\"reps\":2,\"seeds\":[1,2],\
+                    \"cuts\":[10,30],\"avg_cut\":20,\"best_cut\":10,\"infeasible_runs\":0,\
+                    \"best_blocks_fnv\":\"32d748215c66e845\"}";
+        let r = parse_response(line).unwrap();
+        assert_eq!(r.status, "ok");
+        assert_eq!(r.id.as_deref(), Some("a"));
+        assert!(!r.cached);
+        assert_eq!(r.blocks_fnv(), Some("32d748215c66e845"));
+        assert_eq!(r.best_cut(), Some(10));
+        let cached_line = line.replace("}", ",\"cached\":true}");
+        assert!(parse_response(&cached_line).unwrap().cached);
+    }
+
+    #[test]
+    fn validates_control_error_and_busy_lines() {
+        assert_eq!(parse_response("{\"status\":\"pong\"}").unwrap().status, "pong");
+        assert_eq!(
+            parse_response("{\"status\":\"shutdown\"}").unwrap().status,
+            "shutdown"
+        );
+        let e = parse_response("{\"id\":\"x\",\"status\":\"error\",\"error\":\"boom\"}").unwrap();
+        assert_eq!(e.status, "error");
+        let b = parse_response("{\"id\":\"x\",\"status\":\"busy\"}").unwrap();
+        assert_eq!(b.status, "busy");
+        assert_eq!(b.id.as_deref(), Some("x"));
+    }
+
+    #[test]
+    fn rejects_malformed_responses() {
+        for bad in [
+            "not json",
+            "[1,2]",
+            "{}",
+            "{\"status\":\"wat\"}",
+            "{\"status\":\"busy\"}",
+            "{\"id\":\"x\",\"status\":\"error\"}",
+            // ok with a missing field
+            "{\"id\":\"a\",\"status\":\"ok\",\"n\":34}",
+            // ok with mismatched seed count
+            "{\"id\":\"a\",\"status\":\"ok\",\"n\":1,\"reps\":2,\"seeds\":[1],\"cuts\":[1,2],\
+             \"avg_cut\":1,\"best_cut\":1,\"infeasible_runs\":0,\"best_blocks_fnv\":\"00\"}",
+        ] {
+            assert!(parse_response(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+}

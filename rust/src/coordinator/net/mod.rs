@@ -1,0 +1,106 @@
+//! Network service layer: a zero-dependency TCP front end
+//! (`std::net::TcpListener` + threads) over the batching queue
+//! ([`crate::coordinator::queue`]), with a content-addressed partition
+//! cache ([`cache`]) in front of the scheduler.
+//!
+//! Many machines, many clients, one deterministic service: `sclap
+//! serve --listen ADDR` stands up a [`NetServer`]; `sclap client
+//! --connect ADDR` (or a [`NetClient`], or `nc`) submits request lines
+//! and streams result lines back. Every connection feeds the same
+//! bounded queue, the same shared worker pool, and the same result
+//! cache — repeated requests, the defining trait of heavy traffic,
+//! cost zero recomputation.
+//!
+//! # Wire protocol
+//!
+//! **Framing** — UTF-8 lines, `\n`-terminated, both directions. No
+//! binary headers, no length prefixes: the protocol is `nc`-debuggable
+//! by design.
+//!
+//! **Requests** — each client line is one of:
+//!
+//! - a *request spec* in the [`queue::spec`](crate::coordinator::queue::spec)
+//!   grammar — whitespace-separated `key=value` tokens, exactly the
+//!   lines `sclap serve` reads from stdin:
+//!   `id=r1 graph=/data/web.graph k=8 preset=CFast seeds=1,2,3`
+//!   (`instance=NAME` and `shards=DIR` select the other topology
+//!   sources; any [`CONFIG_OPTION_KEYS`](crate::partitioning::config::CONFIG_OPTION_KEYS)
+//!   key rides along; `output=PATH` writes the best partition
+//!   server-side). The `id` is echoed in the response — clients that
+//!   pipeline pick their own unique ids; lines without `id=` get a
+//!   per-connection default `c<conn>-req<line>`.
+//! - a *blank line or `#` comment* — skipped, exactly as on stdin.
+//! - a *control command* starting with `!`:
+//!   - `!ping` → `{"status":"pong"}` (liveness),
+//!   - `!shutdown` → `{"status":"shutdown"}`, then graceful
+//!     drain-then-close of the whole server (below).
+//!
+//! **Responses** — one JSON object per line, **in completion order,
+//! not request order** (responses are pipelined; match them to
+//! requests by `id`):
+//!
+//! - success: the same deterministic rendering as offline `serve`
+//!   (`{"id":…,"status":"ok","n":…,"reps":…,"seeds":[…],"cuts":[…],
+//!   "avg_cut":…,"best_cut":…,"infeasible_runs":…,
+//!   "best_blocks_fnv":"…"}`), plus a trailing `"cached":true` iff the
+//!   aggregate came from the result cache. Timing fields appear only
+//!   when the server runs with `--timing` (they are the one
+//!   nondeterministic rendering).
+//! - failure: `{"id":…,"status":"error","error":"…"}` — parse errors,
+//!   unknown instances, unopenable shard directories, and failed
+//!   repetitions all answer this way; one bad request never affects
+//!   the connection or other requests.
+//! - backpressure: `{"id":…,"status":"busy"}` when the bounded queue
+//!   is at `max_pending` — the server maps `try_submit → Busy` into a
+//!   structured refusal instead of blocking the connection; clients
+//!   resubmit when ready. (Stdin `serve` blocks instead: a file is
+//!   happy to wait, a remote client should decide for itself.)
+//!
+//! **Shutdown** — on `!shutdown` (or [`NetServerHandle::shutdown`])
+//! the server stops accepting connections, EOFs every connection's
+//! read half (no new requests), lets every admitted request finish,
+//! writes the remaining responses, then closes each connection and
+//! returns from [`NetServer::run`]. Clients observe: their pending
+//! responses, then EOF.
+//!
+//! # Determinism across the wire
+//!
+//! A request answered by the server is **bit-identical** to the same
+//! request run offline (`sclap serve` from a file, or a
+//! [`Coordinator`](crate::coordinator::service::Coordinator) call) —
+//! for any client count, any interleaving, any worker count, and any
+//! cache state. This holds because every layer below is deterministic
+//! (repetitions are pure functions of (graph, config, seed)), the
+//! response rendering contains only deterministic fields, and the
+//! cache returns the byte-identical [`Aggregate`]. The only observable
+//! cache effect is the `"cached":true` marker (`rust/tests/net_service.rs`;
+//! CI `net-smoke`).
+//!
+//! # Cache key
+//!
+//! An entry is addressed by content, never by name:
+//!
+//! - [`store_fingerprints`](crate::graph::store::store_fingerprints)
+//!   of the topology — a pair of independent 64-bit hashes over the
+//!   logical CSR stream, invariant to storage backend and shard
+//!   count, streamed without materialization and memoized per live
+//!   graph allocation / per shard directory;
+//! - [`config_cache_key`] — every algorithmic [`PartitionConfig`]
+//!   field, with the `threads` execution knob deliberately excluded
+//!   (thread-count invariance makes it unobservable);
+//! - the sorted seed list.
+//!
+//! Hits return the cached aggregate; identical in-flight requests are
+//! deduplicated single-flight (N concurrent identical requests, one
+//! computation). See [`cache`] for the full model.
+//!
+//! [`PartitionConfig`]: crate::partitioning::config::PartitionConfig
+//! [`Aggregate`]: crate::coordinator::service::Aggregate
+
+pub mod cache;
+pub mod client;
+pub mod server;
+
+pub use cache::{config_cache_key, CacheStats, CachedService, ServeError};
+pub use client::{parse_response, NetClient, Response};
+pub use server::{GraphCatalog, NetServer, NetServerConfig, NetServerHandle};

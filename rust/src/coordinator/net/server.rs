@@ -1,0 +1,417 @@
+//! The TCP server: accept loop, per-connection reader/writer pairs,
+//! and the shared graph catalog. See [`super`] for the wire protocol.
+
+use super::cache::{CacheStats, CachedService, ServeError};
+use crate::coordinator::queue::spec::{
+    parse_request_line, render_busy_line, render_error_line, render_result_line_cached,
+    write_partition_file, RequestSource, RequestSpec,
+};
+use crate::coordinator::queue::{GraphHandle, Request, ServiceConfig};
+use crate::graph::csr::Graph;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Server knobs (superset of [`ServiceConfig`]).
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Worker threads of the one shared pool (0 = available
+    /// parallelism).
+    pub workers: usize,
+    /// Queue bound; beyond it new requests get `busy` responses.
+    pub max_pending: usize,
+    /// Result-cache capacity in completed aggregates (0 = disabled).
+    pub cache_entries: usize,
+    /// Emit wall-clock fields in result lines (nondeterministic —
+    /// off by default so responses are byte-reproducible).
+    pub timing: bool,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            workers: 0,
+            max_pending: 16,
+            cache_entries: 64,
+            timing: false,
+        }
+    }
+}
+
+/// One catalog entry: a per-key single-flight cell. Concurrent
+/// requests for the *same* graph block on the cell (one load, shared
+/// result); requests for other graphs only touch the catalog map for
+/// the brief entry lookup, never for the load I/O itself.
+type CatalogCell = Arc<std::sync::OnceLock<Result<Arc<Graph>, String>>>;
+
+/// Graphs materialized for request specs, shared across connections so
+/// every request naming the same file/instance reuses one loaded copy
+/// (the batching win the service exists for). Shard directories pass
+/// through by path — the scheduler opens them per request.
+#[derive(Default)]
+pub struct GraphCatalog {
+    graphs: Mutex<HashMap<String, CatalogCell>>,
+}
+
+impl GraphCatalog {
+    pub fn new() -> GraphCatalog {
+        GraphCatalog::default()
+    }
+
+    /// Turn a parsed spec into a submittable [`Request`]: build the
+    /// config and load (or reuse) the topology. Loads are per-key
+    /// single-flight: N concurrent requests for one graph perform one
+    /// load, while loads of different graphs proceed independently.
+    pub fn materialize(&self, spec: &RequestSpec) -> Result<Request, String> {
+        let config = spec.build_config()?;
+        let graph = match &spec.source {
+            RequestSource::Shards(dir) => GraphHandle::Shards(PathBuf::from(dir)),
+            RequestSource::GraphFile(path) => self.load(&format!("graph:{path}"), || {
+                crate::graph::io::load_path(Path::new(path))
+                    .map_err(|e| format!("loading {path}: {e}"))
+            })?,
+            RequestSource::Instance(name) => self.load(&format!("instance:{name}"), || {
+                crate::generators::instances::by_name(name)
+                    .map(|instance| instance.build())
+                    .ok_or_else(|| format!("unknown instance {name:?}"))
+            })?,
+        };
+        Ok(Request {
+            id: spec.id.clone(),
+            graph,
+            config,
+            seeds: spec.seeds.clone(),
+        })
+    }
+
+    fn load<F>(&self, key: &str, build: F) -> Result<GraphHandle, String>
+    where
+        F: FnOnce() -> Result<Graph, String>,
+    {
+        let cell = {
+            let mut graphs = self.graphs.lock().unwrap_or_else(|p| p.into_inner());
+            graphs.entry(key.to_string()).or_default().clone()
+        };
+        let result = cell.get_or_init(|| build().map(Arc::new)).clone();
+        if result.is_err() {
+            // Failures are not cached: a later request may find the
+            // file. Remove the cell (if it is still ours) so the next
+            // attempt loads afresh.
+            let mut graphs = self.graphs.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some(existing) = graphs.get(key) {
+                if Arc::ptr_eq(existing, &cell) {
+                    graphs.remove(key);
+                }
+            }
+        }
+        result.map(GraphHandle::InMemory)
+    }
+}
+
+struct ServerShared {
+    service: CachedService,
+    catalog: GraphCatalog,
+    timing: bool,
+    shutting_down: AtomicBool,
+    /// Read-half clones of every live connection, for drain-then-close:
+    /// shutdown EOFs each reader, in-flight work finishes, writers
+    /// drain, connections close.
+    conns: Mutex<HashMap<usize, TcpStream>>,
+    addr: SocketAddr,
+}
+
+impl ServerShared {
+    fn begin_shutdown(&self) {
+        if self.shutting_down.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // EOF every connection's read half: readers stop accepting new
+        // requests; everything already admitted still completes.
+        let conns = self.conns.lock().unwrap_or_else(|p| p.into_inner());
+        for stream in conns.values() {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        drop(conns);
+        // Wake the accept loop (it blocks in `accept`).
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// Control handle onto a running [`NetServer`] — shutdown from another
+/// thread, scheduler pause/resume, and cache observability. Cloneable
+/// and usable while `run` blocks.
+#[derive(Clone)]
+pub struct NetServerHandle {
+    shared: Arc<ServerShared>,
+}
+
+impl NetServerHandle {
+    /// The bound listen address (with the real port when bound to 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Initiate graceful drain-then-close shutdown (same as a client's
+    /// `!shutdown` control command).
+    pub fn shutdown(&self) {
+        self.shared.begin_shutdown();
+    }
+
+    /// Pause the scheduler ([`CachedService::pause`]) — nothing new is
+    /// activated; queued and newly admitted work waits.
+    pub fn pause(&self) {
+        self.shared.service.pause();
+    }
+
+    /// Undo [`NetServerHandle::pause`].
+    pub fn resume(&self) {
+        self.shared.service.resume();
+    }
+
+    /// Result-cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.shared.service.stats()
+    }
+}
+
+/// The batching service behind a TCP listener. Construct with
+/// [`NetServer::bind`], then [`NetServer::run`] the accept loop (it
+/// blocks until shutdown). See the module docs for the protocol.
+pub struct NetServer {
+    listener: TcpListener,
+    shared: Arc<ServerShared>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7643"`, port 0 for ephemeral) and
+    /// stand up the service stack behind it: one [`CachedService`]
+    /// (bounded queue + content-addressed cache) shared by every
+    /// connection.
+    pub fn bind(addr: &str, config: NetServerConfig) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let service = CachedService::new(
+            ServiceConfig {
+                workers: config.workers,
+                max_pending: config.max_pending.max(1),
+            },
+            config.cache_entries,
+        );
+        Ok(NetServer {
+            listener,
+            shared: Arc::new(ServerShared {
+                service,
+                catalog: GraphCatalog::new(),
+                timing: config.timing,
+                shutting_down: AtomicBool::new(false),
+                conns: Mutex::new(HashMap::new()),
+                addr: local,
+            }),
+        })
+    }
+
+    /// The bound address (with the real port when bound to port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// A control handle usable while (and after) `run` blocks.
+    pub fn handle(&self) -> NetServerHandle {
+        NetServerHandle {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// Run the accept loop until shutdown (a `!shutdown` control line
+    /// or [`NetServerHandle::shutdown`]), then drain: every accepted
+    /// connection finishes its in-flight requests, receives its
+    /// remaining responses, and is closed before this returns.
+    pub fn run(self) -> std::io::Result<()> {
+        let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+        let mut conn_id = 0usize;
+        loop {
+            let accepted = self.listener.accept();
+            if self.shared.shutting_down.load(Ordering::SeqCst) {
+                // A late stream (possibly the shutdown wake-up
+                // connection) is dropped unserved.
+                break;
+            }
+            let stream = match accepted {
+                Ok((stream, _peer)) => stream,
+                Err(_) => {
+                    // Accept errors (e.g. EMFILE under fd pressure)
+                    // tend to persist for a while — back off instead
+                    // of busy-spinning the loop at full speed.
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    continue;
+                }
+            };
+            conn_id += 1;
+            let shared = self.shared.clone();
+            let id = conn_id;
+            handlers.push(std::thread::spawn(move || {
+                handle_connection(&shared, stream, id);
+            }));
+            // Reap finished connections so a long-lived server does
+            // not accumulate one JoinHandle per connection ever made.
+            if handlers.len() >= 64 {
+                handlers.retain(|h| !h.is_finished());
+            }
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+        // Dropping the shared service drains anything still queued.
+        Ok(())
+    }
+}
+
+/// One connection: a reader loop on this thread, a dedicated writer
+/// thread, and one short-lived waiter thread per admitted request so
+/// responses complete out of order (pipelining). The reader admits
+/// requests in line order — that is what makes the `cached` markers of
+/// duplicated requests deterministic.
+fn handle_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usize) {
+    if let Ok(clone) = stream.try_clone() {
+        let mut conns = shared.conns.lock().unwrap_or_else(|p| p.into_inner());
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            return; // raced with shutdown: refuse
+        }
+        conns.insert(conn_id, clone);
+    } else {
+        return;
+    }
+    serve_connection(shared, stream, conn_id);
+    let mut conns = shared.conns.lock().unwrap_or_else(|p| p.into_inner());
+    conns.remove(&conn_id);
+}
+
+fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usize) {
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let (tx, rx) = mpsc::channel::<String>();
+    let writer = std::thread::spawn(move || writer_loop(stream, &rx));
+    let mut waiters: Vec<JoinHandle<()>> = Vec::new();
+    let reader = BufReader::new(read_half);
+    for (idx, line) in reader.lines().enumerate() {
+        let Ok(line) = line else { break };
+        let trimmed = line.trim();
+        // Blank lines and `#` comments are legal in every spec stream.
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        if let Some(command) = trimmed.strip_prefix('!') {
+            match command.trim() {
+                "ping" => {
+                    let _ = tx.send("{\"status\":\"pong\"}".to_string());
+                }
+                "shutdown" => {
+                    let _ = tx.send("{\"status\":\"shutdown\"}".to_string());
+                    shared.begin_shutdown();
+                    // Our own read half was EOF'd too; the loop ends on
+                    // the next read. In-flight waiters still resolve.
+                }
+                other => {
+                    let _ = tx.send(format!(
+                        "{{\"status\":\"error\",\"error\":\"unknown control command !{}\"}}",
+                        crate::util::json::escape_json(other)
+                    ));
+                }
+            }
+            continue;
+        }
+        let default_id = format!("c{conn_id}-req{}", idx + 1);
+        let spec = match parse_request_line(trimmed, &default_id) {
+            Ok(Some(spec)) => spec,
+            Ok(None) => continue,
+            Err(message) => {
+                let _ = tx.send(render_error_line(&default_id, &message));
+                continue;
+            }
+        };
+        let request = match shared.catalog.materialize(&spec) {
+            Ok(request) => request,
+            Err(message) => {
+                let _ = tx.send(render_error_line(&spec.id, &message));
+                continue;
+            }
+        };
+        // Admission (cache lookup + queue-slot claim) is synchronous,
+        // so hit/join/lead outcomes and busy refusals follow line
+        // order deterministically; only the wait moves off this
+        // thread.
+        let admission = match shared.service.admit(request, false) {
+            Ok(admission) => admission,
+            Err(ServeError::Busy) => {
+                let _ = tx.send(render_busy_line(&spec.id));
+                continue;
+            }
+            Err(e) => {
+                let _ = tx.send(render_error_line(&spec.id, &e.to_string()));
+                continue;
+            }
+        };
+        let shared = shared.clone();
+        let tx = tx.clone();
+        waiters.push(std::thread::spawn(move || {
+            let line = match shared.service.complete(admission) {
+                Ok((agg, cached)) => {
+                    // A failing output= write fails THIS request's line
+                    // only — fault isolation extends to the output
+                    // stage, exactly like the stdin front end.
+                    let write_err = spec.output.as_ref().and_then(|out| {
+                        write_partition_file(out, &agg.best_blocks)
+                            .err()
+                            .map(|e| format!("writing {out}: {e}"))
+                    });
+                    match write_err {
+                        None => {
+                            render_result_line_cached(&spec.id, &agg, shared.timing, cached)
+                        }
+                        Some(message) => render_error_line(&spec.id, &message),
+                    }
+                }
+                // A joiner inherits its leader's refusal as `busy` too.
+                Err(ServeError::Busy) => render_busy_line(&spec.id),
+                Err(e) => render_error_line(&spec.id, &e.to_string()),
+            };
+            let _ = tx.send(line);
+        }));
+        // Reap finished waiters so a pipelining connection does not
+        // accumulate one JoinHandle per request it ever sent.
+        if waiters.len() >= 128 {
+            waiters.retain(|w| !w.is_finished());
+        }
+    }
+    // Drain-then-close: stop feeding the writer only after every
+    // admitted request has sent its response.
+    drop(tx);
+    for w in waiters {
+        let _ = w.join();
+    }
+    let _ = writer.join();
+}
+
+/// The write half: one JSON line per completed response, flushed
+/// eagerly (clients pipeline and read while sending). On exit the
+/// write side is shut down so clients see EOF after the last response.
+fn writer_loop(stream: TcpStream, rx: &mpsc::Receiver<String>) {
+    let mut w = BufWriter::new(&stream);
+    while let Ok(line) = rx.recv() {
+        let ok = w
+            .write_all(line.as_bytes())
+            .and_then(|()| w.write_all(b"\n"))
+            .and_then(|()| w.flush());
+        if ok.is_err() {
+            break; // client gone; waiters' sends are simply dropped
+        }
+    }
+    let _ = w.flush();
+    drop(w);
+    let _ = stream.shutdown(Shutdown::Write);
+}

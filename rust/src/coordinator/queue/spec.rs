@@ -1,6 +1,9 @@
-//! Request specs for the `serve` subcommand: one request per line,
-//! whitespace-separated `key=value` tokens, `#` comments and blank
-//! lines skipped —
+//! Request specs for the batching-service front ends: one request per
+//! line, whitespace-separated `key=value` tokens. **Blank lines and
+//! `#`-comment lines are skipped in every spec stream** — `serve`'s
+//! stdin/`--requests` input and the TCP wire protocol
+//! (`coordinator::net`) share this grammar and this parser, so the two
+//! transports can never drift. Example stream —
 //!
 //! ```text
 //! id=r1 graph=/tmp/web.graph k=8 preset=CFast seeds=1,2,3 output=/tmp/r1.txt
@@ -32,7 +35,7 @@ pub enum RequestSource {
 /// One parsed request line (pure data — materializing graphs and
 /// submitting is the caller's job, so parsing stays I/O-free and
 /// testable).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RequestSpec {
     pub id: String,
     pub source: RequestSource,
@@ -55,6 +58,37 @@ impl RequestSpec {
             config.apply_option(key, value)?;
         }
         Ok(config)
+    }
+
+    /// Render this spec as one canonical request line:
+    /// `id= <source>= k= preset= seeds= [config options…] [output=]`.
+    /// Seeds are always explicit (a `reps=/seed=` shorthand parses into
+    /// the same canonical list), and the preset name is emitted without
+    /// `/` separators so the line stays whitespace-token clean.
+    /// `parse_request_line ∘ to_line` is the identity on valid specs —
+    /// the round-trip property the unit tests enforce — which is what
+    /// lets the network client re-emit parsed requests verbatim.
+    pub fn to_line(&self) -> String {
+        let (source_key, source_value) = match &self.source {
+            RequestSource::GraphFile(p) => ("graph", p),
+            RequestSource::Instance(n) => ("instance", n),
+            RequestSource::Shards(d) => ("shards", d),
+        };
+        let seeds: Vec<String> = self.seeds.iter().map(|s| s.to_string()).collect();
+        let mut line = format!(
+            "id={} {source_key}={source_value} k={} preset={} seeds={}",
+            self.id,
+            self.k,
+            self.preset.name().replace('/', ""),
+            seeds.join(",")
+        );
+        for (key, value) in &self.config_options {
+            line.push_str(&format!(" {key}={value}"));
+        }
+        if let Some(out) = &self.output {
+            line.push_str(&format!(" output={out}"));
+        }
+        line
     }
 }
 
@@ -202,6 +236,17 @@ pub fn blocks_fingerprint(blocks: &[u32]) -> u64 {
 /// timing fields, emitted only when `timing` is set (they vary run to
 /// run, so the default output is bit-for-bit reproducible).
 pub fn render_result_line(id: &str, agg: &Aggregate, timing: bool) -> String {
+    render_result_line_cached(id, agg, timing, false)
+}
+
+/// [`render_result_line`] with the service-layer cache marker: when
+/// `cached` is set, a trailing `"cached":true` field records that the
+/// aggregate came out of the content-addressed result cache
+/// (`coordinator::net::cache`) instead of a fresh computation. A
+/// non-cached line carries **no** `cached` field, so it stays
+/// byte-identical to the offline `serve` rendering — the wire
+/// determinism contract compares exactly these bytes.
+pub fn render_result_line_cached(id: &str, agg: &Aggregate, timing: bool, cached: bool) -> String {
     let seeds: Vec<String> = agg.runs.iter().map(|r| r.seed.to_string()).collect();
     let cuts: Vec<String> = agg.runs.iter().map(|r| r.cut.to_string()).collect();
     let mut line = format!(
@@ -219,6 +264,9 @@ pub fn render_result_line(id: &str, agg: &Aggregate, timing: bool) -> String {
     if timing {
         line.push_str(&format!(",\"avg_seconds\":{}", agg.avg_seconds));
     }
+    if cached {
+        line.push_str(",\"cached\":true");
+    }
     line.push('}');
     line
 }
@@ -230,6 +278,26 @@ pub fn render_error_line(id: &str, message: &str) -> String {
         escape_json(id),
         escape_json(message)
     )
+}
+
+/// Render one refused request (bounded queue at `max_pending`) as a
+/// JSON line — the wire protocol's structured backpressure signal
+/// (`coordinator::net`: `try_submit → Busy` maps here instead of
+/// blocking the connection).
+pub fn render_busy_line(id: &str) -> String {
+    format!("{{\"id\":\"{}\",\"status\":\"busy\"}}", escape_json(id))
+}
+
+/// Write one block id per line to `out` (the `output=` request key and
+/// the `partition --output` flag; quiet — callers report, because
+/// `serve` must keep stdout pure JSON).
+pub fn write_partition_file(out: &str, blocks: &[u32]) -> std::io::Result<()> {
+    let mut text = String::new();
+    for b in blocks {
+        text.push_str(&b.to_string());
+        text.push('\n');
+    }
+    std::fs::write(out, text)
 }
 
 #[cfg(test)]
@@ -341,6 +409,154 @@ mod tests {
             line,
             "{\"id\":\"r1\",\"status\":\"error\",\"error\":\"bad \\\"value\\\"\\n\"}"
         );
+    }
+
+    #[test]
+    fn to_line_round_trips_and_is_canonical() {
+        let line = "id=r1 graph=/tmp/g.graph k=8 preset=UFast seeds=3,1,2 \
+                    epsilon=0.05 output=/tmp/o.txt";
+        let spec = parse(line);
+        assert_eq!(spec.to_line(), line);
+        // reps/seed shorthand parses into the same canonical seeds= form
+        let spec = parse("instance=tiny-rmat k=4 reps=3 seed=5");
+        assert_eq!(spec.to_line(), "id=d instance=tiny-rmat k=4 preset=CFast seeds=5,6,7");
+        // slash-named presets are emitted slash-free (token-clean)
+        let spec = parse("shards=/tmp/dir k=2 preset=CFastVB");
+        assert!(spec.to_line().contains("preset=CFastVB"), "{}", spec.to_line());
+        assert_eq!(parse(&spec.to_line()), spec);
+    }
+
+    /// Random valid spec generator for the round-trip property.
+    fn random_spec(rng: &mut crate::util::rng::Rng, size: usize) -> RequestSpec {
+        let token = |rng: &mut crate::util::rng::Rng, prefix: &str| {
+            let len = 1 + rng.below(6);
+            let mut s = String::from(prefix);
+            for _ in 0..len {
+                let alphabet = b"abcdefghijklmnopqrstuvwxyz0123456789-_./";
+                s.push(alphabet[rng.below(alphabet.len())] as char);
+            }
+            s
+        };
+        let source = match rng.below(3) {
+            0 => RequestSource::GraphFile(token(rng, "/g/")),
+            1 => RequestSource::Instance(token(rng, "i-")),
+            _ => RequestSource::Shards(token(rng, "/s/")),
+        };
+        let preset = *rng.choose(&Preset::ALL);
+        let seeds: Vec<u64> = (0..1 + rng.below(size.max(1)))
+            .map(|_| rng.next_u64() % 1_000_000)
+            .collect();
+        let mut config_options = Vec::new();
+        for key in CONFIG_OPTION_KEYS {
+            if !rng.chance(0.4) {
+                continue;
+            }
+            let value = match *key {
+                "epsilon" => format!("0.{:02}", 1 + rng.below(98)),
+                "lpa-iterations" => format!("{}", 1 + rng.below(20)),
+                "threads" => format!("{}", rng.below(8)),
+                "memory-budget" => format!("{}k", 1 + rng.below(100)),
+                _ => (if rng.chance(0.5) { "true" } else { "false" }).to_string(),
+            };
+            config_options.push((key.to_string(), value));
+        }
+        rng.shuffle(&mut config_options);
+        RequestSpec {
+            id: token(rng, "r"),
+            source,
+            k: 1 + rng.below(64),
+            preset,
+            seeds,
+            config_options,
+            output: rng.chance(0.3).then(|| token(rng, "/o/")),
+        }
+    }
+
+    #[test]
+    fn property_format_parse_format_is_identity() {
+        crate::util::proptest::for_random_cases(
+            &crate::util::proptest::PropConfig::default(),
+            |rng, size| {
+                let spec = random_spec(rng, size);
+                let line = spec.to_line();
+                let parsed = parse_request_line(&line, "fallback")
+                    .unwrap_or_else(|e| panic!("canonical line {line:?} rejected: {e}"))
+                    .expect("canonical line is not blank");
+                assert_eq!(parsed, spec, "round trip changed the spec for {line:?}");
+                assert_eq!(parsed.to_line(), line);
+                // and the config materializes (every generated option is valid)
+                parsed.build_config().unwrap();
+            },
+        );
+    }
+
+    #[test]
+    fn property_adversarial_lines_error_but_never_panic() {
+        // Handwritten nasties first: huge numbers, NULs, truncations,
+        // duplicates — each must produce Ok(None)/Ok(..)/Err(..), never
+        // a panic, and the definite malformations must be errors.
+        for line in [
+            "k=99999999999999999999999999 graph=g",
+            "graph=g k=2 seeds=99999999999999999999999999",
+            "graph=g k=2 seed=-1",
+            "graph=g\0withnul k=2",
+            "graph=g k=2 epsilon=\0",
+            "graph=",
+            "k=",
+            "=value",
+            "graph=g k=2 preset=",
+            "graph=g k=2 k=3",
+            "id=a id=b graph=g k=2",
+            "graph=g k=2 reps=0",
+            "\u{7f}\u{1}=x",
+        ] {
+            let _ = parse_request_line(line, "d");
+        }
+        assert!(parse_request_line("k=", "d").is_err());
+        assert!(parse_request_line("graph=g k=99999999999999999999999999", "d").is_err());
+        // Random garbage: arbitrary bytes from a hostile alphabet.
+        crate::util::proptest::for_random_cases(
+            &crate::util::proptest::PropConfig::default(),
+            |rng, size| {
+                let alphabet: Vec<char> =
+                    "abk= ,.#!\t\0\u{1}\u{7f}=123-\\\"/émoji🦀".chars().collect();
+                let line: String = (0..size * 4)
+                    .map(|_| *rng.choose(&alphabet))
+                    .collect();
+                // must return, not panic; blank/comment lines are None
+                match parse_request_line(&line, "d") {
+                    Ok(Some(spec)) => {
+                        // anything that parses must round-trip
+                        assert_eq!(
+                            parse_request_line(&spec.to_line(), "d").unwrap().unwrap(),
+                            spec
+                        );
+                    }
+                    Ok(None) => assert!(
+                        line.trim().is_empty() || line.trim_start().starts_with('#')
+                    ),
+                    Err(e) => assert!(!e.is_empty()),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn busy_and_cached_renderings() {
+        assert_eq!(
+            render_busy_line("q\"7\""),
+            "{\"id\":\"q\\\"7\\\"\",\"status\":\"busy\"}"
+        );
+        let agg = tiny_aggregate();
+        let plain = render_result_line("x", &agg, false);
+        let tagged = render_result_line_cached("x", &agg, false, true);
+        // the cached marker is the ONLY difference — wire determinism
+        // compares non-cached lines byte-for-byte with offline serve
+        assert_eq!(
+            tagged,
+            format!("{},\"cached\":true}}", &plain[..plain.len() - 1])
+        );
+        assert_eq!(render_result_line_cached("x", &agg, false, false), plain);
     }
 
     #[test]

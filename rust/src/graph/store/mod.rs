@@ -203,6 +203,79 @@ pub fn shard_bounds(n: usize, shards: usize) -> Vec<usize> {
     (0..=s).map(|i| i * n / s).collect()
 }
 
+/// FNV-1a 64 offset basis / prime (the crate-wide fingerprint hash —
+/// same constants as `coordinator::queue::spec::blocks_fingerprint`).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+#[inline]
+fn fnv_u64(h: u64, x: u64) -> u64 {
+    let mut h = h;
+    for byte in x.to_le_bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Content fingerprint of a stored graph: a **pair** of independent
+/// 64-bit hashes over the logical CSR stream — `n`, `arc_count`, then
+/// per node its weight and degree, then the node's arcs as
+/// `(target, weight)` pairs — every value as a little-endian `u64`.
+/// The first hash is FNV-1a 64; the second chains
+/// [`splitmix64`](crate::util::rng::splitmix64) over the same stream,
+/// so a crafted or accidental collision must defeat both mixers on the
+/// identical value sequence (~2^128 work, vs ~2^32 birthday pairs for
+/// one 64-bit hash on a long-lived server).
+///
+/// Because shards are contiguous node ranges streamed in increasing
+/// order, the stream (and hence the pair) is **invariant to the shard
+/// count and the storage backend**: the same topology fingerprints
+/// identically as an [`InMemoryStore`] or as any [`ShardedStore`]
+/// layout, without ever materializing the graph (O(1) topology state
+/// beyond one shard). One streaming pass computes both halves.
+///
+/// This is the graph half of the service layer's content-addressed
+/// cache key (`coordinator::net::cache`): two requests hit the same
+/// cache entry exactly when their topologies are arc-for-arc equal.
+pub fn store_fingerprints(store: &dyn GraphStore) -> io::Result<(u64, u64)> {
+    let mut h = FNV_OFFSET;
+    let mut h2: u64 = 0x5CA1_AB1E_0DD5_EED5;
+    let mix = |h: &mut u64, h2: &mut u64, x: u64| {
+        *h = fnv_u64(*h, x);
+        *h2 = crate::util::rng::splitmix64(*h2 ^ x);
+    };
+    mix(&mut h, &mut h2, store.n() as u64);
+    mix(&mut h, &mut h2, store.arc_count() as u64);
+    let weights = store.node_weights();
+    let mut cursor = store.cursor();
+    for s in 0..store.num_shards() {
+        let view = cursor.load(s)?;
+        let (lo, hi) = view.span();
+        for v in lo..hi {
+            mix(&mut h, &mut h2, weights[v] as u64);
+            let (adj, ws) = view.adjacent(v as NodeId);
+            mix(&mut h, &mut h2, adj.len() as u64);
+            for (&u, &w) in adj.iter().zip(ws) {
+                mix(&mut h, &mut h2, u as u64);
+                mix(&mut h, &mut h2, w as u64);
+            }
+        }
+    }
+    Ok((h, h2))
+}
+
+/// The FNV-1a half of [`store_fingerprints`], for callers that want a
+/// single compact value (reports, logs).
+pub fn store_fingerprint(store: &dyn GraphStore) -> io::Result<u64> {
+    store_fingerprints(store).map(|(h, _)| h)
+}
+
+/// [`store_fingerprints`] of an in-memory graph (zero-copy view).
+pub fn graph_fingerprint(graph: &Graph) -> u64 {
+    store_fingerprint(&InMemoryStore::new(graph)).expect("in-memory fingerprint cannot fail")
+}
+
 /// Total weight of cut edges of a labelling, computed in one streaming
 /// pass over the shards (each arc read once; labels resident).
 pub fn streaming_cut(store: &dyn GraphStore, labels: &[u32]) -> io::Result<Weight> {
@@ -241,6 +314,63 @@ mod tests {
         assert_eq!(tiny.len(), 6);
         assert_eq!(*tiny.last().unwrap(), 2);
         assert_eq!(shard_bounds(0, 4), vec![0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn fingerprint_is_backend_and_shard_count_invariant() {
+        let g = crate::graph::karate_club();
+        let reference = graph_fingerprint(&g);
+        let pair = store_fingerprints(&InMemoryStore::new(&g)).unwrap();
+        assert_eq!(pair.0, reference, "first half is the FNV hash");
+        assert_ne!(pair.0, pair.1, "halves are independent mixers");
+        for shards in [1usize, 2, 3, 7, 50] {
+            let mem = InMemoryStore::with_shards(&g, shards);
+            assert_eq!(
+                store_fingerprints(&mem).unwrap(),
+                pair,
+                "virtual shard count {shards} changed the fingerprint"
+            );
+        }
+        let dir = std::env::temp_dir().join(format!(
+            "sclap-fp-{}-{:x}",
+            std::process::id(),
+            reference
+        ));
+        for shards in [1usize, 3] {
+            let store = write_sharded(&g, &dir, shards).unwrap();
+            assert_eq!(store_fingerprints(&store).unwrap(), pair);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_equal_sized_graphs() {
+        use crate::graph::builder::GraphBuilder;
+        // Same n, same m, different topology: a 6-cycle vs two triangles.
+        let mut cycle = GraphBuilder::new(6);
+        for v in 0..6u32 {
+            cycle.add_edge(v, (v + 1) % 6, 1);
+        }
+        let mut triangles = GraphBuilder::new(6);
+        for base in [0u32, 3] {
+            triangles.add_edge(base, base + 1, 1);
+            triangles.add_edge(base + 1, base + 2, 1);
+            triangles.add_edge(base + 2, base, 1);
+        }
+        let (a, b) = (cycle.build(), triangles.build());
+        assert_eq!((a.n(), a.m()), (b.n(), b.m()));
+        assert_ne!(graph_fingerprint(&a), graph_fingerprint(&b));
+        // Same topology, different edge weight: distinguished.
+        let w1 = GraphBuilder::new(2).edge(0, 1).build();
+        let mut w2 = GraphBuilder::new(2);
+        w2.add_edge(0, 1, 5);
+        assert_ne!(graph_fingerprint(&w1), graph_fingerprint(&w2.build()));
+        // Same topology, different node weight: distinguished.
+        let nw = GraphBuilder::new(2)
+            .node_weights(vec![2, 1])
+            .edge(0, 1)
+            .build();
+        assert_ne!(graph_fingerprint(&w1), graph_fingerprint(&nw));
     }
 
     #[test]

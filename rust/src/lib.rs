@@ -158,6 +158,63 @@
 //! let agg = ticket.wait().expect("request succeeds");
 //! println!("avg cut = {}", agg.avg_cut);
 //! ```
+//!
+//! # coordinator::net: the network service layer
+//!
+//! The full service stack, from a TCP client down to the pool:
+//!
+//! ```text
+//!  sclap client ─┐
+//!  sclap client ─┼── TCP, line-framed request specs (queue::spec)
+//!  nc, tests   ──┘                 │
+//!                                  ▼
+//!  NetServer ── per-connection reader ──► CachedService ──► BatchService
+//!                     │               content-addressed     bounded queue,
+//!                     │               single-flight LRU     scheduler waves
+//!                     ▼                                          │
+//!       per-connection writer ◄── waiter threads (out-of-order) ◄┘
+//!       one JSON line per request                                │
+//!                                            ExecutionCtx: the one pool
+//! ```
+//!
+//! [`coordinator::net::NetServer`] wraps the batching queue behind a
+//! zero-dependency TCP wire protocol (std `TcpListener` + threads):
+//! line-framed request specs in (the same `queue::spec` grammar as
+//! stdin `serve`, blank lines and `#` comments included), pipelined
+//! one-JSON-line-per-request responses out, in completion order with
+//! client-supplied ids. Backpressure is structural (`try_submit →
+//! Busy` becomes a `{"status":"busy"}` response instead of a blocked
+//! connection), faults are per-request, and `!shutdown` drains every
+//! accepted request before closing. In front of the scheduler sits
+//! [`coordinator::net::CachedService`] — a content-addressed result
+//! cache keyed by ([`graph::store::store_fingerprint`] of the CSR
+//! stream, canonical config, sorted seeds) with single-flight dedup
+//! and a bounded LRU, so N concurrent identical requests cost one
+//! computation and repeats cost none.
+//!
+//! The determinism contract extends across the wire: a request
+//! answered by the server is **bit-identical** to the same request run
+//! offline, for any client count, interleaving, worker count, and
+//! cache state — the only cache-observable byte is the
+//! `"cached":true` response field (`rust/tests/net_service.rs`, CI
+//! `net-smoke`).
+//!
+//! ```no_run
+//! use sclap::coordinator::net::{NetClient, NetServer, NetServerConfig};
+//!
+//! let server = NetServer::bind("127.0.0.1:0", NetServerConfig::default()).unwrap();
+//! let addr = server.local_addr().to_string();
+//! let handle = server.handle();
+//! std::thread::spawn(move || server.run());
+//!
+//! let mut client = NetClient::connect(&addr).unwrap();
+//! let line = client
+//!     .request("id=job instance=tiny-rmat k=8 preset=UFast seeds=1,2,3")
+//!     .unwrap();
+//! let response = sclap::coordinator::net::parse_response(&line).unwrap();
+//! println!("best cut = {:?}", response.best_cut());
+//! handle.shutdown();
+//! ```
 
 pub mod bench;
 pub mod clustering;
@@ -173,6 +230,7 @@ pub mod util;
 
 /// Convenience re-exports for downstream users.
 pub mod prelude {
+    pub use crate::coordinator::net::{CachedService, NetClient, NetServer, NetServerConfig};
     pub use crate::coordinator::queue::{BatchService, ServiceConfig};
     pub use crate::graph::store::{GraphStore, InMemoryStore, ShardedStore};
     pub use crate::graph::{Graph, GraphBuilder, NodeId, Weight};

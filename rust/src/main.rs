@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   partition  — partition a graph (file or named instance)
-//!   serve      — batching service: many requests through one queue
+//!   serve      — batching service: stdin/file requests, or a TCP
+//!                server (--listen) with a content-addressed cache
+//!   client     — submit request lines to a serve --listen server
 //!   generate   — write a synthetic instance to a file
 //!   stats      — print instance statistics (Table-1 style)
 //!   offload    — demo the PJRT dense-LPA offload on a small graph
@@ -12,15 +14,18 @@
 //!   sclap partition --instance tiny-rmat --k 8 --preset UFast --reps 10
 //!   sclap partition --graph my.graph --k 16 --preset UStrong --output part.txt
 //!   sclap serve --requests jobs.txt --workers 8 --max-pending 32
+//!   sclap serve --listen 127.0.0.1:7643 --workers 8 --cache 128
+//!   sclap client --connect 127.0.0.1:7643 --requests jobs.txt
 //!   sclap generate --kind rmat --scale 18 --edges 2000000 --out web.bin
 //!   sclap stats --instance uk2002-sim
 
 use sclap::bail;
 use sclap::coordinator::cli::Args;
+use sclap::coordinator::net::{parse_response, NetClient, NetServer, NetServerConfig};
 use sclap::coordinator::queue::spec::{
-    parse_request_line, render_error_line, render_result_line, RequestSource, RequestSpec,
+    parse_request_line, render_error_line, render_result_line, write_partition_file, RequestSpec,
 };
-use sclap::coordinator::queue::{BatchService, GraphHandle, Request, ServiceConfig};
+use sclap::coordinator::queue::{BatchService, ServiceConfig};
 use sclap::coordinator::service::{default_seeds, Coordinator};
 use sclap::generators;
 use sclap::graph::csr::Graph;
@@ -31,10 +36,10 @@ use sclap::partitioning::config::{PartitionConfig, Preset, CONFIG_OPTION_KEYS};
 use sclap::partitioning::external::OutOfCoreResult;
 use sclap::util::error::{Context, Result};
 use sclap::util::rng::Rng;
-use std::collections::HashMap;
 use std::io::BufRead;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args = match Args::parse_env() {
@@ -58,6 +63,7 @@ fn run(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "partition" => cmd_partition(args),
         "serve" => cmd_serve(args),
+        "client" => cmd_client(args),
         "evaluate" => cmd_evaluate(args),
         "generate" => cmd_generate(args),
         "shard" => cmd_shard(args),
@@ -86,6 +92,9 @@ fn print_usage() {
                      [--parallel-coarsening] [--parallel-refinement]\n\
            serve     [--requests FILE|-] [--workers W]\n\
                      [--max-pending N] [--timing]\n\
+                     [--listen ADDR [--cache N]]\n\
+           client    --connect ADDR [--requests FILE|-]\n\
+                     [--timeout SECS] [--quiet]\n\
            generate  --kind rmat|ba|ws|er|grid|lfr --out FILE\n\
                      [--scale S] [--n N] [--edges M] [--seed S]\n\
                      [--avg-degree D] [--mu MU]\n\
@@ -111,6 +120,20 @@ fn print_usage() {
            (--max-pending) pushes back on the input stream. Without\n\
            --timing the output is byte-identical for any --workers\n\
            value and any request interleaving.\n\
+         serve --listen ADDR: the same service as a TCP server (one\n\
+           request line in, one JSON line out, pipelined out of\n\
+           order; blank lines and # comments accepted; !ping and\n\
+           !shutdown control commands). A full queue answers\n\
+           {{\"status\":\"busy\"}} instead of blocking the connection,\n\
+           and a content-addressed result cache (--cache N entries,\n\
+           0 disables) serves repeated requests without\n\
+           recomputation — responses gain \"cached\":true and are\n\
+           otherwise byte-identical to an offline run.\n\
+         client: submit spec lines to a serve --listen server and\n\
+           stream the JSON result lines to stdout (responses are\n\
+           validated structurally; summary on stderr). --timeout\n\
+           bounds the connect retry only — established connections\n\
+           wait as long as the partition takes.\n\
          --memory-budget BYTES (k/m/g suffixes; env\n\
            SCLAP_MEMORY_BUDGET): RAM budget for holding a CSR. Inputs\n\
            beyond it are partitioned out-of-core: semi-external SCLaP\n\
@@ -210,21 +233,9 @@ fn cmd_partition(args: &Args) -> Result<()> {
     );
 
     if let Some(out) = args.get("output") {
-        write_partition_file(out, &agg.best_blocks)?;
+        write_partition_file(out, &agg.best_blocks).with_context(|| format!("writing {out}"))?;
         println!("wrote best partition to {out}");
     }
-    Ok(())
-}
-
-/// Write one block id per line (quiet — callers report; `serve` must
-/// keep stdout pure JSON).
-fn write_partition_file(out: &str, blocks: &[u32]) -> Result<()> {
-    let mut text = String::new();
-    for b in blocks {
-        text.push_str(&b.to_string());
-        text.push('\n');
-    }
-    std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
     Ok(())
 }
 
@@ -287,7 +298,7 @@ fn run_partition_store(
         best.external_levels, best.handoff_n, best.handoff_m, best.external_seconds
     );
     if let Some(out) = args.get("output") {
-        write_partition_file(out, &best.blocks)?;
+        write_partition_file(out, &best.blocks).with_context(|| format!("writing {out}"))?;
         println!("wrote best partition to {out}");
     }
     Ok(())
@@ -309,6 +320,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("--max-pending must be at least 1");
     }
     let timing = args.flag("timing");
+    if let Some(listen) = args.get("listen") {
+        if args.get("requests").is_some() {
+            bail!("--requests reads a spec stream (stdin mode); --listen serves TCP clients — use one or the other");
+        }
+        let cache_entries = args.get_usize("cache", 64)?;
+        let server = NetServer::bind(
+            listen,
+            NetServerConfig {
+                workers,
+                max_pending,
+                cache_entries,
+                timing,
+            },
+        )
+        .with_context(|| format!("binding {listen}"))?;
+        eprintln!(
+            "sclap serve: listening on {} (workers={workers}, max-pending={max_pending}, cache={cache_entries})",
+            server.local_addr()
+        );
+        server.run().context("running the server")?;
+        eprintln!("sclap serve: drained and shut down");
+        return Ok(());
+    }
+    if args.get("cache").is_some() {
+        bail!("--cache applies to --listen mode (stdin serve computes every request)");
+    }
     let requests_path = args.get_or("requests", "-");
     let input: Box<dyn BufRead> = if requests_path == "-" {
         Box::new(std::io::BufReader::new(std::io::stdin()))
@@ -323,8 +360,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_pending,
     });
     // Requests naming the same graph file / instance share one loaded
-    // copy — the batching win the queue exists for.
-    let mut graphs: HashMap<String, Arc<Graph>> = HashMap::new();
+    // copy — the batching win the queue exists for (the same catalog
+    // type the TCP server shares across connections).
+    let catalog = sclap::coordinator::net::GraphCatalog::new();
 
     /// One input line's fate, kept in input order.
     enum Entry {
@@ -352,7 +390,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 continue;
             }
         };
-        match build_request(&spec, &mut graphs) {
+        match catalog.materialize(&spec) {
             Ok(request) => {
                 // Blocking submit: the bounded queue pushes back on how
                 // fast we consume the input stream.
@@ -390,7 +428,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                                 eprintln!("{}: wrote best partition to {out}", spec.id);
                                 None
                             }
-                            Err(e) => Some(e.to_string()),
+                            Err(e) => Some(format!("writing {out}: {e}")),
                         }
                     });
                     match write_err {
@@ -413,49 +451,94 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Materialize one request spec: load (or reuse) the graph for
-/// in-memory sources; shard directories are handed to the service by
-/// path and opened by its scheduler.
-fn build_request(
-    spec: &RequestSpec,
-    graphs: &mut HashMap<String, Arc<Graph>>,
-) -> std::result::Result<Request, String> {
-    let config = spec.build_config()?;
-    let graph = match &spec.source {
-        RequestSource::Shards(dir) => GraphHandle::Shards(PathBuf::from(dir)),
-        RequestSource::GraphFile(path) => {
-            let key = format!("graph:{path}");
-            if let Some(g) = graphs.get(&key) {
-                GraphHandle::InMemory(g.clone())
-            } else {
-                let g = Arc::new(
-                    sclap::graph::io::load_path(Path::new(path))
-                        .map_err(|e| format!("loading {path}: {e}"))?,
-                );
-                graphs.insert(key, g.clone());
-                GraphHandle::InMemory(g)
-            }
-        }
-        RequestSource::Instance(name) => {
-            let key = format!("instance:{name}");
-            if let Some(g) = graphs.get(&key) {
-                GraphHandle::InMemory(g.clone())
-            } else {
-                let built = generators::instances::by_name(name)
-                    .ok_or_else(|| format!("unknown instance {name:?}"))?
-                    .build();
-                let g = Arc::new(built);
-                graphs.insert(key, g.clone());
-                GraphHandle::InMemory(g)
-            }
-        }
+/// `client`: submit request lines to a `serve --listen` server and
+/// stream its JSON result lines to stdout (in completion order —
+/// responses carry ids). A sender thread pipelines the input while
+/// this thread drains responses; every line is validated structurally
+/// ([`parse_response`]) before being relayed, and a mismatch between
+/// lines sent and responses received is an error. `--timeout` bounds
+/// only the connect retry — once connected, the client waits for
+/// responses as long as the partitions take (requests are unbounded
+/// work by design, so there is no read deadline).
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get("connect").context("need --connect ADDR")?;
+    let timeout = args.get_f64("timeout", 10.0)?;
+    let quiet = args.flag("quiet");
+    let requests_path = args.get_or("requests", "-");
+    let input: Box<dyn BufRead> = if requests_path == "-" {
+        Box::new(std::io::BufReader::new(std::io::stdin()))
+    } else {
+        let file = std::fs::File::open(requests_path)
+            .with_context(|| format!("opening {requests_path}"))?;
+        Box::new(std::io::BufReader::new(file))
     };
-    Ok(Request {
-        id: spec.id.clone(),
-        graph,
-        config,
-        seeds: spec.seeds.clone(),
-    })
+    let lines: Vec<String> = input
+        .lines()
+        .collect::<std::io::Result<_>>()
+        .with_context(|| format!("reading {requests_path}"))?;
+    // Every non-blank, non-comment line — request spec, malformed
+    // garbage, or ! control — elicits exactly one response line.
+    let expected = lines
+        .iter()
+        .filter(|l| {
+            let t = l.trim();
+            !t.is_empty() && !t.starts_with('#')
+        })
+        .count();
+
+    let client = NetClient::connect_retry(addr, Duration::from_secs_f64(timeout.max(0.0)))
+        .with_context(|| format!("connecting to {addr}"))?;
+    let (mut sender, mut receiver) = client.split();
+    let sender_thread = std::thread::spawn(move || -> std::result::Result<(), String> {
+        for line in &lines {
+            sender
+                .send_line(line)
+                .map_err(|e| format!("sending request: {e}"))?;
+        }
+        let _ = sender.finish();
+        Ok(())
+    });
+
+    let mut received = 0usize;
+    let mut by_status: std::collections::BTreeMap<String, usize> = Default::default();
+    let mut invalid = 0usize;
+    while let Some(line) = receiver
+        .recv_line()
+        .with_context(|| format!("reading from {addr}"))?
+    {
+        match parse_response(&line) {
+            Ok(response) => *by_status.entry(response.status).or_default() += 1,
+            Err(message) => {
+                invalid += 1;
+                eprintln!("sclap client: invalid response line: {message}");
+            }
+        }
+        println!("{line}");
+        received += 1;
+    }
+    sender_thread
+        .join()
+        .map_err(|_| "sender thread panicked".to_string())??;
+    if !quiet {
+        let summary: Vec<String> = by_status
+            .iter()
+            .map(|(status, count)| format!("{status}={count}"))
+            .collect();
+        eprintln!(
+            "sclap client: sent {expected} line(s), received {received} response(s) [{}]",
+            summary.join(" ")
+        );
+    }
+    if invalid > 0 {
+        bail!("{invalid} response line(s) failed structural validation");
+    }
+    // `!shutdown` drains the server: it may close before unrelated
+    // responses exist, but OUR responses are always delivered first —
+    // anything short means the transport failed mid-stream.
+    if received != expected {
+        bail!("expected {expected} response(s), received {received} (connection cut short?)");
+    }
+    Ok(())
 }
 
 /// `shard`: convert a graph to an on-disk shard directory. METIS inputs

@@ -1,7 +1,11 @@
-//! Minimal JSON string escaping, shared by every JSON emitter in the
-//! crate (`bench::harness::JsonReport`, the serve result lines in
-//! `coordinator::queue::spec`) so an escaping fix can never apply to
-//! one emitter and miss another.
+//! Minimal JSON support, shared by every JSON producer and consumer in
+//! the crate: string escaping for the emitters
+//! (`bench::harness::JsonReport`, the serve result lines in
+//! `coordinator::queue::spec`) and a small recursive-descent value
+//! parser ([`parse_json`]) for the consumers (the network client in
+//! `coordinator::net::client` and the wire-protocol tests), so
+//! responses can be validated *structurally* instead of by string
+//! comparison. Std-only (DESIGN.md §3 — no serde offline).
 
 /// Escape a string for embedding inside a JSON string literal
 /// (quotes, backslashes, and control characters per RFC 8259).
@@ -21,6 +25,327 @@ pub fn escape_json(s: &str) -> String {
     out
 }
 
+/// One parsed JSON value. Objects preserve key order (and keep
+/// duplicate keys — [`Json::get`] returns the first), which is exactly
+/// what validating a deterministically-rendered response line needs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// All JSON numbers, including integers (f64 holds every integer
+    /// the emitters in this crate produce exactly up to 2^53).
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// First value under `key` when this is an object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// The number as an integer, when it is one exactly.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(x) if x.fract() == 0.0 && x.abs() <= 2f64.powi(53) => Some(*x as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Nesting bound for the recursive-descent parser: adversarial inputs
+/// like `[[[[…` must error, not overflow the stack.
+const MAX_DEPTH: usize = 128;
+
+/// Parse one complete JSON value. Strict where it matters for a
+/// protocol consumer: escapes (including `\uXXXX` with surrogate
+/// pairs), full number grammar, no trailing garbage, bounded nesting
+/// depth. Errors carry the byte offset.
+pub fn parse_json(input: &str) -> Result<Json, String> {
+    let mut p = Parser {
+        bytes: input.as_bytes(),
+        pos: 0,
+    };
+    p.skip_ws();
+    let value = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(format!("trailing garbage at byte {}", p.pos));
+    }
+    Ok(value)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, byte: u8) -> Result<(), String> {
+        if self.peek() == Some(byte) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected {:?} at byte {}",
+                byte as char, self.pos
+            ))
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH}"));
+        }
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(c) => Err(format!("unexpected {:?} at byte {}", c as char, self.pos)),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value(depth + 1)?;
+            pairs.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            // Fast path: run of plain UTF-8 up to the next quote/escape.
+            while let Some(&b) = self.bytes.get(self.pos) {
+                if b == b'"' || b == b'\\' || b < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            if self.pos > start {
+                // Safe: the input is a &str and we only stopped on
+                // ASCII boundaries, so this slice is valid UTF-8.
+                out.push_str(std::str::from_utf8(&self.bytes[start..self.pos]).unwrap());
+            }
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    out.push(self.escape()?);
+                }
+                Some(_) => {
+                    return Err(format!("raw control character at byte {}", self.pos))
+                }
+                None => return Err("unterminated string".to_string()),
+            }
+        }
+    }
+
+    fn escape(&mut self) -> Result<char, String> {
+        let c = self
+            .peek()
+            .ok_or_else(|| "unterminated escape".to_string())?;
+        self.pos += 1;
+        Ok(match c {
+            b'"' => '"',
+            b'\\' => '\\',
+            b'/' => '/',
+            b'b' => '\u{8}',
+            b'f' => '\u{c}',
+            b'n' => '\n',
+            b'r' => '\r',
+            b't' => '\t',
+            b'u' => {
+                let hi = self.hex4()?;
+                if (0xD800..0xDC00).contains(&hi) {
+                    // High surrogate: a low surrogate escape must follow.
+                    if self.peek() == Some(b'\\') {
+                        self.pos += 1;
+                        self.expect(b'u')?;
+                        let lo = self.hex4()?;
+                        if !(0xDC00..0xE000).contains(&lo) {
+                            return Err(format!("bad low surrogate before byte {}", self.pos));
+                        }
+                        let code = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                        char::from_u32(code)
+                            .ok_or_else(|| format!("bad surrogate pair before byte {}", self.pos))?
+                    } else {
+                        return Err(format!("lone high surrogate before byte {}", self.pos));
+                    }
+                } else if (0xDC00..0xE000).contains(&hi) {
+                    return Err(format!("lone low surrogate before byte {}", self.pos));
+                } else {
+                    char::from_u32(hi).expect("BMP code point outside surrogate range")
+                }
+            }
+            other => return Err(format!("bad escape {:?} at byte {}", other as char, self.pos)),
+        })
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut value = 0u32;
+        for _ in 0..4 {
+            let c = self
+                .peek()
+                .ok_or_else(|| "unterminated \\u escape".to_string())?;
+            let digit = (c as char)
+                .to_digit(16)
+                .ok_or_else(|| format!("bad hex digit at byte {}", self.pos))?;
+            value = value * 16 + digit;
+            self.pos += 1;
+        }
+        Ok(value)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        // Integer part: 0, or a nonzero-led digit run (no leading zeros).
+        match self.peek() {
+            Some(b'0') => self.pos += 1,
+            Some(b'1'..=b'9') => {
+                while matches!(self.peek(), Some(b'0'..=b'9')) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(format!("bad number at byte {start}")),
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(format!("bad number at byte {start}"));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(format!("bad number at byte {start}"));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number at byte {start}"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -33,5 +358,133 @@ mod tests {
         assert_eq!(escape_json("\u{1}"), "\\u0001");
         // non-ASCII passes through (JSON strings are UTF-8)
         assert_eq!(escape_json("ε=0.03"), "ε=0.03");
+    }
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse_json("null").unwrap(), Json::Null);
+        assert_eq!(parse_json("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse_json(" false ").unwrap(), Json::Bool(false));
+        assert_eq!(parse_json("42").unwrap(), Json::Num(42.0));
+        assert_eq!(parse_json("-0.5e2").unwrap(), Json::Num(-50.0));
+        assert_eq!(parse_json("0").unwrap(), Json::Num(0.0));
+        assert_eq!(parse_json("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested_structures() {
+        let v = parse_json(r#"{"a":[1,{"b":"c"},[]],"d":{"e":null}}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(
+            v.get("a").unwrap().as_array().unwrap()[1]
+                .get("b")
+                .unwrap()
+                .as_str(),
+            Some("c")
+        );
+        assert_eq!(v.get("d").unwrap().get("e"), Some(&Json::Null));
+        assert_eq!(parse_json("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(parse_json("{}").unwrap(), Json::Obj(vec![]));
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let v = parse_json("\"a \\\"b\\\" \\\\ \\n \\t \\u0041 \\u00e9\"").unwrap();
+        assert_eq!(v.as_str(), Some("a \"b\" \\ \n \t A é"));
+        // surrogate pair: U+1F600
+        assert_eq!(
+            parse_json("\"\\ud83d\\ude00\"").unwrap().as_str(),
+            Some("😀")
+        );
+        // escape_json output parses back to the original
+        let nasty = "quote \" slash \\ newline \n ctrl \u{1} ε";
+        let parsed = parse_json(&format!("\"{}\"", escape_json(nasty))).unwrap();
+        assert_eq!(parsed.as_str(), Some(nasty));
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        for bad in [
+            "",
+            "   ",
+            "tru",
+            "nul",
+            "01",
+            "1.",
+            "1e",
+            "+1",
+            "-",
+            "\"unterminated",
+            "\"bad \\q escape\"",
+            "\"lone \\ud800 surrogate\"",
+            "\"raw \u{1} control\"",
+            "[1,]",
+            "[1 2]",
+            "{\"a\"}",
+            "{\"a\":}",
+            "{a:1}",
+            "{\"a\":1,}",
+            "}",
+        ] {
+            assert!(parse_json(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        assert!(parse_json("1 2").is_err());
+        assert!(parse_json("{} x").is_err());
+        assert!(parse_json("[1]]").is_err());
+        assert!(parse_json("null,").is_err());
+        // whitespace is not garbage
+        assert!(parse_json(" {\"a\":1} \n").is_ok());
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        let bomb = "[".repeat(100_000);
+        assert!(parse_json(&bomb).is_err());
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(parse_json(&ok).is_ok());
+    }
+
+    #[test]
+    fn duplicate_keys_kept_first_wins_on_get() {
+        let v = parse_json(r#"{"k":1,"k":2}"#).unwrap();
+        assert_eq!(v.get("k").unwrap().as_i64(), Some(1));
+        match &v {
+            Json::Obj(pairs) => assert_eq!(pairs.len(), 2),
+            _ => panic!("object expected"),
+        }
+    }
+
+    #[test]
+    fn accessor_conversions() {
+        assert_eq!(parse_json("7").unwrap().as_i64(), Some(7));
+        assert_eq!(parse_json("7.5").unwrap().as_i64(), None);
+        assert_eq!(parse_json("7").unwrap().as_str(), None);
+        assert_eq!(parse_json("\"7\"").unwrap().as_f64(), None);
+        assert_eq!(parse_json("true").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_a_real_result_line() {
+        let line = "{\"id\":\"r1\",\"status\":\"ok\",\"n\":34,\"reps\":2,\"seeds\":[1,2],\
+                    \"cuts\":[10,30],\"avg_cut\":20,\"best_cut\":10,\"infeasible_runs\":0,\
+                    \"best_blocks_fnv\":\"32d748215c66e845\",\"cached\":true}";
+        let v = parse_json(line).unwrap();
+        assert_eq!(v.get("id").unwrap().as_str(), Some("r1"));
+        assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(v.get("best_cut").unwrap().as_i64(), Some(10));
+        assert_eq!(v.get("cached").unwrap().as_bool(), Some(true));
+        let seeds: Vec<i64> = v
+            .get("seeds")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|s| s.as_i64().unwrap())
+            .collect();
+        assert_eq!(seeds, vec![1, 2]);
     }
 }

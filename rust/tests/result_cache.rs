@@ -1,0 +1,253 @@
+//! Integration: the content-addressed result cache
+//! (`coordinator::net::cache`).
+//!
+//! Under test: content addressing (equal-size distinct graphs never
+//! collide into one entry; the same topology through either storage
+//! backend shares one), key sensitivity (any algorithmic config change
+//! misses; the `threads` execution knob does not), single-flight
+//! deduplication (N concurrent identical requests, exactly one
+//! computation — proven deterministically with the pause/resume
+//! technique from `tests/batch_queue.rs`), and the bounded LRU.
+
+use sclap::coordinator::net::{CachedService, ServeError};
+use sclap::coordinator::queue::spec::render_result_line_cached;
+use sclap::coordinator::queue::{GraphHandle, Request, ServiceConfig};
+use sclap::graph::csr::Graph;
+use sclap::graph::karate_club;
+use sclap::graph::store::write_sharded;
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("sclap-cache-{tag}-{}", std::process::id()))
+}
+
+fn request(id: &str, graph: Arc<Graph>, config: PartitionConfig, seeds: Vec<u64>) -> Request {
+    Request {
+        id: id.to_string(),
+        graph: GraphHandle::InMemory(graph),
+        config,
+        seeds,
+    }
+}
+
+/// A community graph large enough for the budget-1 external path (the
+/// same parameters `tests/batch_queue.rs` uses).
+fn lfr() -> Graph {
+    let mut rng = sclap::util::rng::Rng::new(4);
+    sclap::generators::lfr::lfr_like(1200, 6.0, 0.15, &mut rng).0
+}
+
+#[test]
+fn equal_sized_distinct_graphs_get_distinct_entries() {
+    use sclap::graph::GraphBuilder;
+    // Same n, same m — only the arcs differ. A name- or size-keyed
+    // cache would serve one graph's partition for the other.
+    let mut cycle = GraphBuilder::new(6);
+    for v in 0..6u32 {
+        cycle.add_edge(v, (v + 1) % 6, 1);
+    }
+    let mut triangles = GraphBuilder::new(6);
+    for base in [0u32, 3] {
+        triangles.add_edge(base, base + 1, 1);
+        triangles.add_edge(base + 1, base + 2, 1);
+        triangles.add_edge(base + 2, base, 1);
+    }
+    let (a, b) = (Arc::new(cycle.build()), Arc::new(triangles.build()));
+    assert_eq!((a.n(), a.m()), (b.n(), b.m()));
+    let svc = CachedService::new(
+        ServiceConfig {
+            workers: 2,
+            max_pending: 4,
+        },
+        8,
+    );
+    let config = PartitionConfig::preset(Preset::CFast, 2);
+    let (ra, cached_a) = svc.run(request("a", a, config.clone(), vec![1]), true).unwrap();
+    let (rb, cached_b) = svc.run(request("b", b, config, vec![1]), true).unwrap();
+    assert!(!cached_a && !cached_b, "distinct content must both miss");
+    assert_eq!(svc.stats().misses, 2);
+    // The two triangle components are clean halves; the cycle's best
+    // 2-cut differs — regardless, the aggregates are independent.
+    assert_eq!(ra.best_blocks.len(), 6);
+    assert_eq!(rb.best_blocks.len(), 6);
+}
+
+#[test]
+fn config_change_misses_thread_change_hits() {
+    let svc = CachedService::new(ServiceConfig::default(), 8);
+    let karate = Arc::new(karate_club());
+    let base = PartitionConfig::preset(Preset::CFast, 2);
+    let (_, cached) = svc
+        .run(request("r1", karate.clone(), base.clone(), vec![1, 2]), true)
+        .unwrap();
+    assert!(!cached);
+    // A different imbalance is a different computation.
+    let mut wider = base.clone();
+    wider.epsilon = 0.10;
+    let (_, cached) = svc
+        .run(request("r2", karate.clone(), wider, vec![1, 2]), true)
+        .unwrap();
+    assert!(!cached, "epsilon change must miss");
+    // A different k, seed list, or algorithm toggle likewise.
+    let (_, cached) = svc
+        .run(request("r3", karate.clone(), base.clone(), vec![1, 2, 3]), true)
+        .unwrap();
+    assert!(!cached, "seed change must miss");
+    let mut parallel = base.clone();
+    parallel.parallel_coarsening = true;
+    let (_, cached) = svc
+        .run(request("r4", karate.clone(), parallel, vec![1, 2]), true)
+        .unwrap();
+    assert!(!cached, "algorithm toggle must miss");
+    // The original again — now resident — and with a different thread
+    // count (an execution knob, unobservable in results).
+    let mut threaded = base.clone();
+    threaded.threads = 3;
+    let (_, cached) = svc
+        .run(request("r5", karate.clone(), threaded, vec![2, 1]), true)
+        .unwrap();
+    assert!(cached, "threads + seed order must not split the entry");
+    let stats = svc.stats();
+    assert_eq!((stats.misses, stats.hits), (4, 1));
+}
+
+#[test]
+fn backends_share_entries_and_rendered_lines_are_identical() {
+    let community = Arc::new(lfr());
+    let dir = temp_dir("backends");
+    write_sharded(&community, &dir, 3).unwrap();
+    let mut config = PartitionConfig::preset(Preset::CFast, 4);
+    config.memory_budget_bytes = Some(1); // both backends take the external path
+    let svc = CachedService::new(
+        ServiceConfig {
+            workers: 2,
+            max_pending: 4,
+        },
+        8,
+    );
+    let (mem, cached) = svc
+        .run(
+            request("mem", community.clone(), config.clone(), vec![3, 4]),
+            true,
+        )
+        .unwrap();
+    assert!(!cached);
+    let (sharded, cached) = svc
+        .run(
+            Request {
+                id: "sharded".to_string(),
+                graph: GraphHandle::Shards(dir.clone()),
+                config,
+                seeds: vec![3, 4],
+            },
+            true,
+        )
+        .unwrap();
+    assert!(
+        cached,
+        "same topology through the on-disk backend must hit the in-memory entry"
+    );
+    assert!(Arc::ptr_eq(&mem, &sharded));
+    // The deterministic rendering of the shared aggregate is what goes
+    // over the wire — identical under either id's request.
+    assert_eq!(
+        render_result_line_cached("x", &mem, false, false),
+        render_result_line_cached("x", &sharded, false, false),
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn single_flight_dedups_concurrent_identical_requests() {
+    let svc = Arc::new(CachedService::new(
+        ServiceConfig {
+            workers: 2,
+            max_pending: 1, // one queue slot: joiners must not consume any
+        },
+        8,
+    ));
+    let karate = Arc::new(karate_club());
+    let config = PartitionConfig::preset(Preset::CFast, 2);
+    // Pause the scheduler so the leader's computation cannot finish:
+    // every concurrent duplicate deterministically *joins* in flight.
+    svc.pause();
+    let leader = {
+        let svc = svc.clone();
+        let req = request("leader", karate.clone(), config.clone(), vec![1, 2]);
+        std::thread::spawn(move || svc.run(req, true))
+    };
+    // Wait until the leader holds the in-flight slot.
+    while svc.stats().misses == 0 {
+        std::thread::yield_now();
+    }
+    let followers: Vec<_> = (0..4)
+        .map(|i| {
+            let svc = svc.clone();
+            let req = request(&format!("f{i}"), karate.clone(), config.clone(), vec![1, 2]);
+            std::thread::spawn(move || svc.run(req, true))
+        })
+        .collect();
+    while svc.stats().joined < 4 {
+        std::thread::yield_now();
+    }
+    // All five identical requests, one queue slot consumed: with
+    // max_pending = 1 a second submission would have been refused, so
+    // a distinct request's non-blocking admission reports Busy — the
+    // deterministic proof that the joiners never submitted.
+    let distinct = request("other", karate.clone(), config.clone(), vec![9]);
+    match svc.run(distinct, false) {
+        Err(ServeError::Busy) => {}
+        other => panic!("queue must hold exactly the leader, got {other:?}"),
+    }
+    svc.resume();
+    let (lead_agg, lead_cached) = leader.join().unwrap().unwrap();
+    assert!(!lead_cached, "the leader computes");
+    for f in followers {
+        let (agg, cached) = f.join().unwrap().unwrap();
+        assert!(cached, "joiners are served from the in-flight slot");
+        assert!(Arc::ptr_eq(&agg, &lead_agg), "one computation, one aggregate");
+    }
+    let stats = svc.stats();
+    assert_eq!(
+        (stats.misses, stats.joined),
+        (2, 4),
+        "leader + refused-distinct misses; 4 joins: {stats:?}"
+    );
+    // Later identical requests hit the completed entry.
+    let (_, cached) = svc
+        .run(request("late", karate, config, vec![1, 2]), true)
+        .unwrap();
+    assert!(cached);
+    assert_eq!(svc.stats().hits, 1);
+}
+
+#[test]
+fn lru_bound_evicts_least_recently_used() {
+    let svc = CachedService::new(ServiceConfig::default(), 2);
+    let karate = Arc::new(karate_club());
+    let config = |k: usize| PartitionConfig::preset(Preset::CFast, k);
+    svc.run(request("a", karate.clone(), config(2), vec![1]), true)
+        .unwrap();
+    svc.run(request("b", karate.clone(), config(3), vec![1]), true)
+        .unwrap();
+    // Touch `a` so `b` is the least recently used…
+    let (_, cached) = svc
+        .run(request("a2", karate.clone(), config(2), vec![1]), true)
+        .unwrap();
+    assert!(cached);
+    // …then overflow the two-entry bound.
+    svc.run(request("c", karate.clone(), config(4), vec![1]), true)
+        .unwrap();
+    assert_eq!(svc.stats().evictions, 1);
+    assert_eq!(svc.resident_entries(), 2);
+    let (_, cached) = svc
+        .run(request("a3", karate.clone(), config(2), vec![1]), true)
+        .unwrap();
+    assert!(cached, "recently used entry survived");
+    let (_, cached) = svc
+        .run(request("b2", karate, config(3), vec![1]), true)
+        .unwrap();
+    assert!(!cached, "least recently used entry was evicted");
+}
