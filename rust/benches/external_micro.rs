@@ -1,8 +1,11 @@
 //! Microbenchmarks of the out-of-core path: external vs in-memory
-//! level-0 coarsening wall time at shard counts {1, 2, 4, 8}, plus the
-//! IO report — raw shard streaming throughput (MB/s) and semi-external
-//! LPA round time — emitted as `BENCH_external_micro.json` and
-//! `BENCH_external_io.json` (`bench::harness::JsonReport`).
+//! level-0 coarsening wall time at shard counts {1, 2, 4, 8} **per
+//! shard format** (`v1` raw u64 CSR vs `v2` SCLAPS2 delta+varint),
+//! plus the IO report — raw shard streaming throughput (MB/s),
+//! semi-external LPA round time, and a `v2_vs_v1` summary (level-0
+//! speedup, streaming speedup, on-disk size ratio) per shard count —
+//! emitted as `BENCH_external_micro.json` and `BENCH_external_io.json`
+//! (`bench::harness::JsonReport`).
 //!
 //!     cargo bench --bench external_micro [-- --full]
 
@@ -11,7 +14,7 @@ use sclap::clustering::external_lpa::{dense_from_labels, external_sclap};
 use sclap::clustering::label_propagation::{size_constrained_lpa, LpaConfig, NodeOrdering};
 use sclap::coarsening::contract::{contract, contract_store};
 use sclap::graph::csr::Graph;
-use sclap::graph::store::{write_sharded, GraphStore, ShardedStore};
+use sclap::graph::store::{write_sharded_as, GraphStore, ShardFormat, ShardedStore};
 use sclap::util::exec::ExecutionCtx;
 use sclap::util::rng::Rng;
 use sclap::util::timer::Timer;
@@ -86,81 +89,116 @@ fn main() {
         ],
     );
 
-    // ---- external level-0 at shard counts {1, 2, 4, 8} ----
+    // ---- external level-0 at shard counts {1, 2, 4, 8} × {v1, v2} ----
     for shards in SHARD_COUNTS {
-        let dir = temp_dir(&format!("s{shards}"));
-        let _ = std::fs::remove_dir_all(&dir);
-        let store: ShardedStore = write_sharded(&g, &dir, shards).unwrap();
-        let disk_bytes = store.disk_bytes().unwrap();
+        // Per-format numbers this shard count, indexed like ALL
+        // ([v1, v2]), feeding the `v2_vs_v1` summary record.
+        let mut level0_secs = [0.0f64; 2];
+        let mut streaming_secs = [0.0f64; 2];
+        let mut size_bytes = [0u64; 2];
+        for (fi, format) in ShardFormat::ALL.into_iter().enumerate() {
+            let fmt = format.name();
+            let dir = temp_dir(&format!("{fmt}-s{shards}"));
+            let _ = std::fs::remove_dir_all(&dir);
+            let store: ShardedStore = write_sharded_as(&g, &dir, shards, format).unwrap();
+            let disk_bytes = store.disk_bytes().unwrap();
+            size_bytes[fi] = disk_bytes;
 
-        // level-0 coarsening: semi-external SCLaP + streaming contract
-        let (secs, sink) = time(iters, || {
-            let (labels, _) =
-                external_sclap(&store, upper, &cfg, None, &ctx, &mut Rng::new(7)).unwrap();
-            let clustering = dense_from_labels(store.node_weights(), labels);
-            let contraction = contract_store(&store, &clustering).unwrap();
-            contraction.coarse.n() as u64
-        });
-        println!(
-            "external level-0, {shards} shard(s)                 {:>8.1} ms (coarse n {sink})",
-            secs * 1e3
-        );
-        report.record(
-            "external_level0",
-            &[
+            // level-0 coarsening: semi-external SCLaP + streaming contract
+            let (secs, sink) = time(iters, || {
+                let (labels, _) =
+                    external_sclap(&store, upper, &cfg, None, &ctx, &mut Rng::new(7)).unwrap();
+                let clustering = dense_from_labels(store.node_weights(), labels);
+                let contraction = contract_store(&store, &clustering).unwrap();
+                contraction.coarse.n() as u64
+            });
+            level0_secs[fi] = secs;
+            println!(
+                "external level-0, {fmt}, {shards} shard(s)             {:>8.1} ms (coarse n {sink})",
+                secs * 1e3
+            );
+            let level0_fields = [
+                ("format", fmt.into()),
                 ("shards", shards.into()),
                 ("secs", secs.into()),
                 ("medges_per_s", (g.m() as f64 * lpa_rounds as f64 / secs / 1e6).into()),
-            ],
-        );
+            ];
+            report.record("external_level0", &level0_fields);
+            let mut io_fields = level0_fields.to_vec();
+            io_fields.push(("disk_bytes", (disk_bytes as usize).into()));
+            io_report.record("external_level0", &io_fields);
 
-        // raw shard streaming throughput: one full pass over the shards
-        let (secs, arcs) = time(iters, || {
-            let mut cursor = store.cursor();
-            let mut total = 0u64;
-            for s in 0..store.num_shards() {
-                let view = cursor.load(s).unwrap();
-                total += view.arc_count() as u64;
-            }
-            total
-        });
-        let mb_per_s = disk_bytes as f64 / secs / (1 << 20) as f64;
+            // raw shard streaming throughput: one full pass over the shards
+            let (secs, arcs) = time(iters, || {
+                let mut cursor = store.cursor();
+                let mut total = 0u64;
+                for s in 0..store.num_shards() {
+                    let view = cursor.load(s).unwrap();
+                    total += view.arc_count() as u64;
+                }
+                total
+            });
+            streaming_secs[fi] = secs;
+            let mb_per_s = disk_bytes as f64 / secs / (1 << 20) as f64;
+            println!(
+                "shard streaming, {fmt}, {shards} shard(s)              {:>8.1} ms   {:>7.1} MB/s ({arcs} arcs)",
+                secs * 1e3,
+                mb_per_s
+            );
+            io_report.record(
+                "shard_streaming",
+                &[
+                    ("format", fmt.into()),
+                    ("shards", shards.into()),
+                    ("secs", secs.into()),
+                    ("disk_bytes", (disk_bytes as usize).into()),
+                    ("mb_per_s", mb_per_s.into()),
+                ],
+            );
+
+            // one semi-external LPA round
+            let round_cfg = LpaConfig::clustering(1, NodeOrdering::Degree);
+            let (secs, _) = time(iters, || {
+                external_sclap(&store, upper, &round_cfg, None, &ctx, &mut Rng::new(7))
+                    .unwrap()
+                    .1 as u64
+            });
+            println!(
+                "external LPA round, {fmt}, {shards} shard(s)           {:>8.1} ms",
+                secs * 1e3
+            );
+            io_report.record(
+                "external_lpa_round",
+                &[
+                    ("format", fmt.into()),
+                    ("shards", shards.into()),
+                    ("round_secs", secs.into()),
+                    ("medges_per_s", (g.m() as f64 / secs / 1e6).into()),
+                ],
+            );
+
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+
+        // v2-vs-v1 summary: the ratios the CI regression gate checks
+        // (ISSUE acceptance: level0_speedup ≥ 1.5 and size_ratio ≤ 0.6
+        // at shards {2, 4, 8}).
+        let level0_speedup = level0_secs[0] / level0_secs[1];
+        let streaming_speedup = streaming_secs[0] / streaming_secs[1];
+        let size_ratio = size_bytes[1] as f64 / size_bytes[0] as f64;
         println!(
-            "shard streaming, {shards} shard(s)                  {:>8.1} ms   {:>7.1} MB/s ({arcs} arcs)",
-            secs * 1e3,
-            mb_per_s
+            "v2 vs v1, {shards} shard(s): level-0 {level0_speedup:.2}x, streaming \
+             {streaming_speedup:.2}x, size {size_ratio:.3}x\n"
         );
         io_report.record(
-            "shard_streaming",
+            "v2_vs_v1",
             &[
                 ("shards", shards.into()),
-                ("secs", secs.into()),
-                ("disk_bytes", (disk_bytes as usize).into()),
-                ("mb_per_s", mb_per_s.into()),
+                ("level0_speedup", level0_speedup.into()),
+                ("streaming_speedup", streaming_speedup.into()),
+                ("size_ratio", size_ratio.into()),
             ],
         );
-
-        // one semi-external LPA round
-        let round_cfg = LpaConfig::clustering(1, NodeOrdering::Degree);
-        let (secs, _) = time(iters, || {
-            external_sclap(&store, upper, &round_cfg, None, &ctx, &mut Rng::new(7))
-                .unwrap()
-                .1 as u64
-        });
-        println!(
-            "external LPA round, {shards} shard(s)               {:>8.1} ms",
-            secs * 1e3
-        );
-        io_report.record(
-            "external_lpa_round",
-            &[
-                ("shards", shards.into()),
-                ("round_secs", secs.into()),
-                ("medges_per_s", (g.m() as f64 / secs / 1e6).into()),
-            ],
-        );
-
-        let _ = std::fs::remove_dir_all(&dir);
     }
 
     let path = report.write().expect("write BENCH_external_micro.json");

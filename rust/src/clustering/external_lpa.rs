@@ -22,11 +22,26 @@
 //!    runs, candidates visited in ascending label order), not an
 //!    O(n) per-worker table — per-worker memory stays O(max degree),
 //!    preserving the O(n)-node-state budget at any thread count.
-//! 2. **Apply** the chunk's proposals sequentially in node order
-//!    against the live size table, re-checking eligibility (a target
-//!    that filled up since scoring is skipped), so the bound holds
-//!    exactly after every chunk — the same proposal/apply discipline as
-//!    `clustering::async_lpa`.
+//! 2. **Apply** the chunk's proposals sequentially against the live
+//!    size table in **degree order** (highest scored degree first, ties
+//!    by node id — the sequential engine's degree-order heuristic,
+//!    applied per chunk: well-connected nodes claim cluster capacity
+//!    before leaves do), re-checking eligibility (a target that filled
+//!    up since scoring is skipped), so the bound holds exactly after
+//!    every chunk — the same proposal/apply discipline as
+//!    `clustering::async_lpa`. Degrees come from the scoring pass, so
+//!    the ordering adds no extra shard traffic.
+//!
+//! The scoring pass is cache-conscious: proposals and degrees land in
+//! two flat chunk-sized `u32` arrays through disjoint per-slice windows
+//! ([`DisjointSlice`]) — no per-slice `Vec`s, no gather step, no
+//! allocation anywhere in the round loop once the per-worker scratch
+//! has warmed up. [`score_node`] aggregates neighbor labels by sorting
+//! the gathered pairs and compressing equal-label runs in place, then
+//! scans the compressed runs once, branch-light; its tie-break RNG is
+//! constructed lazily ([`Rng::new`] is a pure seed expansion, so a
+//! node whose scan never reaches a tie skips the expansion entirely
+//! without perturbing the draw sequence of one that does).
 //!
 //! A chunk whose node range crosses a shard boundary is scored in two
 //! sub-ranges (old shard, then new shard) with **no applies in
@@ -39,16 +54,17 @@
 //! versus [`ShardedStore`](crate::graph::store) backends.
 //!
 //! Like the other parallel engines this is a *different algorithm* from
-//! the sequential `size_constrained_lpa` (natural order instead of
-//! degree order, chunk-snapshot eligibility): it is selected by
-//! configuration (`PartitionConfig::memory_budget_bytes`), never by
-//! input size probing, thread count, or storage backend.
+//! the sequential `size_constrained_lpa` (natural-order chunk streaming
+//! with per-chunk degree-ordered applies instead of one global degree
+//! order, chunk-snapshot eligibility): it is selected by configuration
+//! (`PartitionConfig::memory_budget_bytes`), never by input size
+//! probing, thread count, or storage backend.
 
 use crate::clustering::label_propagation::{Clustering, LpaConfig, LpaMode};
 use crate::graph::csr::{NodeId, Weight};
 use crate::graph::store::{GraphStore, ShardView};
 use crate::util::exec::{derive_seed, ExecutionCtx};
-use crate::util::pool::{ThreadPool, WorkerLocal};
+use crate::util::pool::{DisjointSlice, ThreadPool, WorkerLocal};
 use crate::util::rng::Rng;
 use std::io;
 
@@ -60,6 +76,13 @@ pub const STREAM_CHUNK: usize = 2048;
 /// per-node RNG streams the slicing is unobservable anyway, this only
 /// sizes the dispatch.
 const SCORE_CHUNK: usize = 256;
+
+/// "No proposal" marker in the flat proposal array. Safe as a sentinel:
+/// labels are node ids (< n ≤ `u32::MAX`, so ids stop at
+/// `u32::MAX - 1`) or block ids (< k ≤ n) — a real label never equals
+/// `u32::MAX`, which would require a 2^32-entry resident cluster table
+/// anyway.
+const STAY: u32 = u32::MAX;
 
 /// Run semi-external SCLaP on `store`.
 ///
@@ -115,8 +138,14 @@ pub fn external_sclap(
     // adjacency seen) — never O(n) per worker.
     let scratch: WorkerLocal<Vec<(u32, Weight)>> = WorkerLocal::new(pool.threads(), Vec::new);
 
+    // Flat chunk-sized proposal/degree arrays plus the apply order,
+    // allocated once here and reused by every chunk of every round —
+    // the round loop is allocation-free after warm-up.
+    let mut prop_target: Vec<u32> = vec![STAY; STREAM_CHUNK];
+    let mut prop_degree: Vec<u32> = vec![0; STREAM_CHUNK];
+    let mut order: Vec<u32> = Vec::with_capacity(STREAM_CHUNK);
+
     let mut cursor = store.cursor();
-    let mut proposals: Vec<(NodeId, u32)> = Vec::new();
     let mut rounds = 0usize;
     while rounds < config.max_iterations {
         rounds += 1;
@@ -126,36 +155,56 @@ pub fn external_sclap(
         let mut chunk_lo = 0usize;
         while chunk_lo < n {
             let chunk_hi = (chunk_lo + STREAM_CHUNK).min(n);
-            proposals.clear();
+            let chunk_len = chunk_hi - chunk_lo;
             // ---- score (possibly split at shard boundaries; the state
             // is identical for every split, so the split is invisible).
-            let mut start = chunk_lo;
-            while start < chunk_hi {
-                while store.shard_span(shard).1 <= start {
-                    shard += 1;
+            // Every slot in 0..chunk_len is written, so no reset needed.
+            {
+                let proposals = DisjointSlice::new(&mut prop_target[..chunk_len]);
+                let degrees = DisjointSlice::new(&mut prop_degree[..chunk_len]);
+                let mut start = chunk_lo;
+                while start < chunk_hi {
+                    while store.shard_span(shard).1 <= start {
+                        shard += 1;
+                    }
+                    let stop = chunk_hi.min(store.shard_span(shard).1);
+                    let view = cursor.load(shard)?;
+                    score_range(
+                        &view,
+                        node_weights,
+                        &labels,
+                        &cluster_weight,
+                        &cluster_count,
+                        upper_bound,
+                        config.mode,
+                        start,
+                        stop,
+                        chunk_lo,
+                        round_seed,
+                        pool,
+                        &scratch,
+                        &proposals,
+                        &degrees,
+                    );
+                    start = stop;
                 }
-                let stop = chunk_hi.min(store.shard_span(shard).1);
-                let view = cursor.load(shard)?;
-                score_range(
-                    &view,
-                    node_weights,
-                    &labels,
-                    &cluster_weight,
-                    &cluster_count,
-                    upper_bound,
-                    config.mode,
-                    start,
-                    stop,
-                    round_seed,
-                    pool,
-                    &scratch,
-                    &mut proposals,
-                );
-                start = stop;
             }
-            // ---- apply in node order against the live size table.
-            for &(v, target) in &proposals {
-                let vi = v as usize;
+            // ---- apply against the live size table, movers in degree
+            // order (highest first, ties by node id — deterministic).
+            order.clear();
+            for (i, &target) in prop_target[..chunk_len].iter().enumerate() {
+                if target != STAY {
+                    order.push(i as u32);
+                }
+            }
+            order.sort_unstable_by(|&a, &b| {
+                prop_degree[b as usize]
+                    .cmp(&prop_degree[a as usize])
+                    .then(a.cmp(&b))
+            });
+            for &i in &order {
+                let vi = chunk_lo + i as usize;
+                let target = prop_target[i as usize];
                 let cur = labels[vi];
                 if cur == target {
                     continue;
@@ -188,7 +237,10 @@ pub fn external_sclap(
 }
 
 /// Score nodes `start..stop` (all inside `view`'s span) on the pool,
-/// appending accepted proposals in node order.
+/// writing each node's proposal ([`STAY`] for none) and degree into the
+/// chunk-relative slots `start - chunk_lo ..` of the flat output
+/// arrays. Slices write disjoint windows — no per-slice allocation, no
+/// gather.
 #[allow(clippy::too_many_arguments)]
 fn score_range(
     view: &ShardView<'_>,
@@ -200,20 +252,25 @@ fn score_range(
     mode: LpaMode,
     start: usize,
     stop: usize,
+    chunk_lo: usize,
     round_seed: u64,
     pool: &ThreadPool,
     scratch: &WorkerLocal<Vec<(u32, Weight)>>,
-    out: &mut Vec<(NodeId, u32)>,
+    proposals: &DisjointSlice<'_, u32>,
+    degrees: &DisjointSlice<'_, u32>,
 ) {
     let len = stop - start;
     let num_slices = len.div_ceil(SCORE_CHUNK);
-    let parts: Vec<Vec<(NodeId, u32)>> = pool.map_indexed(num_slices, |worker, slice| {
+    pool.run(num_slices, |worker, slice| {
         let lo = start + slice * SCORE_CHUNK;
         let hi = (lo + SCORE_CHUNK).min(stop);
         // SAFETY: `worker` is the pool-provided id (WorkerLocal contract).
         let pairs = unsafe { scratch.get_mut(worker) };
-        let mut part = Vec::new();
-        for v in lo..hi {
+        // SAFETY: slices cover disjoint node ranges of the chunk, so
+        // their chunk-relative windows are disjoint too.
+        let props = unsafe { proposals.range_mut(lo - chunk_lo, hi - chunk_lo) };
+        let degs = unsafe { degrees.range_mut(lo - chunk_lo, hi - chunk_lo) };
+        for (off, v) in (lo..hi).enumerate() {
             let proposal = score_node(
                 view,
                 node_weights,
@@ -226,15 +283,10 @@ fn score_range(
                 derive_seed(round_seed, v as u64),
                 pairs,
             );
-            if let Some(target) = proposal {
-                part.push((v as NodeId, target));
-            }
+            props[off] = proposal.unwrap_or(STAY);
+            degs[off] = view.degree(v as NodeId) as u32;
         }
-        part
     });
-    for p in parts {
-        out.extend(p);
-    }
 }
 
 /// The sequential engine's move rule as a pure function: strongest
@@ -242,11 +294,16 @@ fn score_range(
 /// reservoir sampling on a per-node RNG stream. Returns the proposed
 /// target, or `None` to stay.
 ///
-/// Connection aggregation is degree-bounded: neighbor (label, weight)
-/// pairs are gathered into `pairs` (worker scratch), sorted by label,
-/// and scanned as runs — candidates appear in ascending label order, a
-/// pure function of the inputs, with O(max degree) scratch instead of
-/// an O(n) per-worker table.
+/// Connection aggregation is degree-bounded and branch-light: neighbor
+/// (label, weight) pairs are gathered into `pairs` (worker scratch),
+/// sorted by label, and equal-label runs are **compressed in place**,
+/// so the candidate scan is one pass over at most `degree` compressed
+/// runs with no inner accumulation loop; the stay connection comes from
+/// a binary search over the sorted runs. O(max degree) scratch instead
+/// of an O(n) per-worker table; candidates appear in ascending label
+/// order, a pure function of the inputs. The tie-break RNG is built
+/// lazily at the first tie — [`Rng::new`] is a pure seed expansion, so
+/// the draw sequence is identical to eager construction.
 #[allow(clippy::too_many_arguments)]
 fn score_node(
     view: &ShardView<'_>,
@@ -273,31 +330,35 @@ fn score_node(
     pairs.clear();
     pairs.extend(adj.iter().zip(ws).map(|(&u, &w)| (labels[u as usize], w)));
     pairs.sort_unstable_by_key(|&(label, _)| label);
+    // In-place run compression: pairs[..runs] becomes one
+    // (label, total connection) entry per distinct neighbor label,
+    // still ascending by label.
+    let mut runs = 0usize;
+    let mut i = 0usize;
+    while i < pairs.len() {
+        let (label, w) = pairs[i];
+        if runs > 0 && pairs[runs - 1].0 == label {
+            pairs[runs - 1].1 += w;
+        } else {
+            pairs[runs] = (label, w);
+            runs += 1;
+        }
+        i += 1;
+    }
     let overloaded = mode == LpaMode::Refinement && cluster_weight[cur as usize] > upper_bound;
     // Overloaded-block rule: an overloaded block's nodes must consider
     // only other blocks; otherwise staying is an option with the
     // connection to `cur`.
-    let stay: Weight = pairs
-        .iter()
-        .filter(|&&(label, _)| label == cur)
-        .map(|&(_, w)| w)
-        .sum();
-    let mut rng = Rng::new(seed);
+    let stay: Weight = match pairs[..runs].binary_search_by_key(&cur, |&(label, _)| label) {
+        Ok(idx) => pairs[idx].1,
+        Err(_) => 0,
+    };
+    let mut rng: Option<Rng> = None;
     let mut best_conn: i64 = if overloaded { i64::MIN } else { stay };
     let mut best: u32 = cur;
     let mut ties: u32 = 1;
-    let mut i = 0usize;
-    while i < pairs.len() {
-        let label = pairs[i].0;
-        let mut conn: Weight = 0;
-        while i < pairs.len() && pairs[i].0 == label {
-            conn += pairs[i].1;
-            i += 1;
-        }
-        if label == cur {
-            continue;
-        }
-        if cluster_weight[label as usize] + vw > upper_bound {
+    for &(label, conn) in &pairs[..runs] {
+        if label == cur || cluster_weight[label as usize] + vw > upper_bound {
             continue;
         }
         if conn > best_conn {
@@ -306,7 +367,7 @@ fn score_node(
             ties = 1;
         } else if conn == best_conn && best_conn > i64::MIN {
             ties += 1;
-            if rng.below(ties as usize) == 0 {
+            if rng.get_or_insert_with(|| Rng::new(seed)).below(ties as usize) == 0 {
                 best = label;
             }
         }

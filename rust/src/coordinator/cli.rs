@@ -81,7 +81,7 @@ pub const COMMANDS: &[CommandSpec] = &[
     },
     CommandSpec {
         name: "shard",
-        value_keys: &["graph", "instance", "out", "shards"],
+        value_keys: &["graph", "instance", "out", "shards", "in", "format"],
         flag_keys: &[],
     },
     CommandSpec {

@@ -52,13 +52,12 @@ use crate::coordinator::queue::{
 };
 use crate::coordinator::service::Aggregate;
 use crate::graph::csr::Graph;
-use crate::graph::store::{store_fingerprints, InMemoryStore, ShardedStore};
+use crate::graph::store::{meta_stamp, store_fingerprints, InMemoryStore, MetaStamp, ShardedStore};
 use crate::partitioning::config::PartitionConfig;
 use crate::util::exec::ExecutionCtx;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex, Weak};
-use std::time::SystemTime;
 
 /// Why a cached-service request produced no aggregate.
 #[derive(Debug, Clone)]
@@ -155,16 +154,18 @@ struct CacheKey {
 ///   allocation is still alive, so address reuse after a drop cannot
 ///   alias (graphs are immutable once built).
 /// - Shard directories are keyed by path and validated against
-///   `meta.bin`'s (length, mtime): shard stores are write-once in this
-///   system (the converter creates them, nothing mutates them), so a
-///   changed stamp means a rewritten store and forces a re-stream.
+///   `meta.bin`'s [`MetaStamp`] — length, mtime, declared format
+///   version, *and* a content hash of the file. Length + mtime alone
+///   were not enough: a rewrite landing within mtime granularity at
+///   equal length (a `shard recompress`, or same-n regeneration with
+///   different node weights) would have validated a stale fingerprint
+///   and served a cached result for the wrong graph. Any changed stamp
+///   component forces a re-stream.
 #[derive(Default)]
 struct FingerprintMemo {
     mem: HashMap<usize, (Weak<Graph>, (u64, u64))>,
-    shards: HashMap<PathBuf, (ShardStamp, (u64, u64))>,
+    shards: HashMap<PathBuf, (MetaStamp, (u64, u64))>,
 }
-
-type ShardStamp = (u64, Option<SystemTime>);
 
 impl FingerprintMemo {
     fn graph_fp(memo: &Mutex<FingerprintMemo>, g: &Arc<Graph>) -> (u64, u64) {
@@ -193,8 +194,7 @@ impl FingerprintMemo {
         memo: &Mutex<FingerprintMemo>,
         dir: &std::path::Path,
     ) -> std::io::Result<(u64, u64)> {
-        let meta = std::fs::metadata(dir.join("meta.bin"))?;
-        let stamp: ShardStamp = (meta.len(), meta.modified().ok());
+        let stamp = meta_stamp(dir)?;
         {
             let m = memo.lock().unwrap_or_else(|p| p.into_inner());
             if let Some((seen, fp)) = m.shards.get(dir) {

@@ -372,6 +372,28 @@ pub(crate) fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
+/// Read exactly `len` bytes into `buf` (cleared first), pre-reserving
+/// at most `cap` — a header-declared length from a hostile file must
+/// surface as an `UnexpectedEof` error, never an allocation abort.
+/// Shared with the `graph::store` `SCLAPS2` shard reader.
+pub(crate) fn read_bytes_capped<R: Read>(
+    r: &mut R,
+    len: u64,
+    cap: usize,
+    buf: &mut Vec<u8>,
+) -> io::Result<()> {
+    buf.clear();
+    buf.reserve(len.min(cap as u64) as usize);
+    let got = r.take(len).read_to_end(buf)?;
+    if (got as u64) != len {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "file shorter than its declared payload length",
+        ));
+    }
+    Ok(())
+}
+
 /// Load a graph by file extension (.graph/.metis, .el, .bin).
 pub fn load_path(path: &Path) -> io::Result<Graph> {
     let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("");

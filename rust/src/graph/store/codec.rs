@@ -1,0 +1,407 @@
+//! `SCLAPS2` adjacency codec — canonical LEB128 varints, zigzag
+//! signed mapping, and the per-node delta encoding of the compressed
+//! shard format (byte layout in the `graph::store` module docs).
+//!
+//! # Encoding
+//!
+//! Arc lists arrive in the crate's canonical form (targets strictly
+//! ascending, duplicates merged, weights in `1..=i64::MAX`), which the
+//! codec exploits:
+//!
+//! - the first target is stored as `zigzag(t0 − v)` (neighbors cluster
+//!   around the node id on locality-ordered graphs, so the magnitude is
+//!   small either side of `v`);
+//! - every later target as the gap `t[i] − t[i−1] − 1` (strict ascent
+//!   makes the −1 free, so consecutive ids encode as 0);
+//! - the first weight verbatim, later weights as zigzag deltas
+//!   (unweighted graphs — all 1s — cost one byte for the first arc and
+//!   one zero byte per arc after).
+//!
+//! # Canonical varints, hostile input
+//!
+//! [`read_varint`] accepts **only** the minimal LEB128 encoding (no
+//! overlong forms, at most 10 bytes, final byte's payload within
+//! `u64`). Every decoder entry point returns a structured
+//! [`io::ErrorKind::InvalidData`]/[`io::ErrorKind::UnexpectedEof`]
+//! error on malformed bytes — never a panic, and never an allocation
+//! sized from untrusted input ([`decode_node`] bounds the claimed
+//! degree by the caller's remaining arc budget before touching its
+//! output buffers). One encoding per value also means re-encoding a
+//! decode is byte-identical, which the round-trip property tests pin.
+
+use crate::graph::csr::{NodeId, Weight};
+use std::io;
+
+/// Longest canonical LEB128 encoding of a `u64` (⌈64 / 7⌉ bytes).
+pub const MAX_VARINT_BYTES: usize = 10;
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+fn truncated(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::UnexpectedEof, msg.to_string())
+}
+
+/// Map a signed value onto the unsigned varint domain so small
+/// magnitudes of either sign stay small: 0, −1, 1, −2, … → 0, 1, 2, 3, …
+#[inline]
+pub fn zigzag_encode(x: i64) -> u64 {
+    ((x << 1) ^ (x >> 63)) as u64
+}
+
+/// Inverse of [`zigzag_encode`].
+#[inline]
+pub fn zigzag_decode(x: u64) -> i64 {
+    ((x >> 1) as i64) ^ -((x & 1) as i64)
+}
+
+/// Append the canonical (minimal) LEB128 encoding of `x`.
+#[inline]
+pub fn write_varint(out: &mut Vec<u8>, mut x: u64) {
+    loop {
+        let byte = (x & 0x7f) as u8;
+        x >>= 7;
+        if x == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Decode one canonical LEB128 varint from `buf` at `*pos`, advancing
+/// `*pos` past it. Rejects truncation, encodings longer than
+/// [`MAX_VARINT_BYTES`], a final byte overflowing `u64`, and overlong
+/// (non-minimal) encodings such as `0x80 0x00`.
+#[inline]
+pub fn read_varint(buf: &[u8], pos: &mut usize) -> io::Result<u64> {
+    let mut x: u64 = 0;
+    let mut shift: u32 = 0;
+    let mut i = *pos;
+    loop {
+        let Some(&b) = buf.get(i) else {
+            return Err(truncated("varint truncated"));
+        };
+        i += 1;
+        let payload = (b & 0x7f) as u64;
+        if shift == 63 && payload > 1 {
+            return Err(bad("varint overflows u64"));
+        }
+        x |= payload << shift;
+        if b & 0x80 == 0 {
+            if b == 0 && shift != 0 {
+                return Err(bad("overlong varint encoding"));
+            }
+            *pos = i;
+            return Ok(x);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(bad("varint longer than 10 bytes"));
+        }
+    }
+}
+
+/// Append node `v`'s arc list (canonical form: targets strictly
+/// ascending, weights positive) in the `SCLAPS2` per-node encoding:
+/// degree, target deltas, then weight deltas.
+pub fn encode_node(out: &mut Vec<u8>, v: NodeId, arcs: &[(NodeId, Weight)]) {
+    debug_assert!(arcs.windows(2).all(|w| w[0].0 < w[1].0), "targets not strictly ascending");
+    debug_assert!(arcs.iter().all(|&(_, w)| w >= 1), "non-positive edge weight");
+    write_varint(out, arcs.len() as u64);
+    if arcs.is_empty() {
+        return;
+    }
+    write_varint(out, zigzag_encode(arcs[0].0 as i64 - v as i64));
+    for w in arcs.windows(2) {
+        write_varint(out, (w[1].0 - w[0].0 - 1) as u64);
+    }
+    write_varint(out, arcs[0].1 as u64);
+    for w in arcs.windows(2) {
+        write_varint(out, zigzag_encode(w[1].1 - w[0].1));
+    }
+}
+
+/// Decode one node's arc list from `buf` at `*pos`, pushing targets and
+/// weights onto the caller's (shared, pre-reserved) buffers. Returns
+/// the decoded degree.
+///
+/// Validation (all structured errors, no panics):
+/// - the claimed degree must not exceed `max_arcs` (the shard's
+///   remaining arc budget — the unclamped-preallocation guard);
+/// - every target must land in `0..n` and ascend strictly;
+/// - every weight must stay in `1..=i64::MAX`;
+/// - all arithmetic is checked (a hostile delta cannot wrap).
+pub fn decode_node(
+    buf: &[u8],
+    pos: &mut usize,
+    v: NodeId,
+    n: usize,
+    max_arcs: usize,
+    targets: &mut Vec<NodeId>,
+    weights: &mut Vec<Weight>,
+) -> io::Result<usize> {
+    let degree64 = read_varint(buf, pos)?;
+    if degree64 > max_arcs as u64 {
+        return Err(bad("node degree exceeds the shard's remaining arc budget"));
+    }
+    let degree = degree64 as usize;
+    if degree == 0 {
+        return Ok(0);
+    }
+    let first = zigzag_decode(read_varint(buf, pos)?);
+    let t0 = (v as i64)
+        .checked_add(first)
+        .ok_or_else(|| bad("first target delta overflows"))?;
+    if t0 < 0 || (t0 as u64) >= n as u64 {
+        return Err(bad("shard arc target out of range"));
+    }
+    targets.push(t0 as NodeId);
+    let mut prev = t0 as u64;
+    for _ in 1..degree {
+        let gap = read_varint(buf, pos)?;
+        let t = prev
+            .checked_add(gap)
+            .and_then(|x| x.checked_add(1))
+            .ok_or_else(|| bad("target delta overflows"))?;
+        if t >= n as u64 {
+            return Err(bad("shard arc target out of range"));
+        }
+        targets.push(t as NodeId);
+        prev = t;
+    }
+    let w0 = read_varint(buf, pos)?;
+    if w0 == 0 || w0 > i64::MAX as u64 {
+        return Err(bad("shard edge weight out of range"));
+    }
+    weights.push(w0 as Weight);
+    let mut prev_w = w0 as Weight;
+    for _ in 1..degree {
+        let delta = zigzag_decode(read_varint(buf, pos)?);
+        let w = prev_w
+            .checked_add(delta)
+            .ok_or_else(|| bad("weight delta overflows"))?;
+        if w <= 0 {
+            return Err(bad("shard edge weight out of range"));
+        }
+        weights.push(w);
+        prev_w = w;
+    }
+    Ok(degree)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{for_random_cases, PropConfig};
+
+    #[test]
+    fn zigzag_boundary_values() {
+        for x in [0i64, 1, -1, 2, -2, 63, -64, i64::MAX, i64::MIN, i64::MIN + 1] {
+            assert_eq!(zigzag_decode(zigzag_encode(x)), x, "{x}");
+        }
+        // Small magnitudes of either sign map to small codes.
+        assert_eq!(zigzag_encode(0), 0);
+        assert_eq!(zigzag_encode(-1), 1);
+        assert_eq!(zigzag_encode(1), 2);
+        assert_eq!(zigzag_encode(i64::MIN), u64::MAX);
+    }
+
+    #[test]
+    fn varint_known_encodings() {
+        let enc = |x: u64| {
+            let mut b = Vec::new();
+            write_varint(&mut b, x);
+            b
+        };
+        assert_eq!(enc(0), vec![0x00]);
+        assert_eq!(enc(1), vec![0x01]);
+        assert_eq!(enc(127), vec![0x7f]);
+        assert_eq!(enc(128), vec![0x80, 0x01]);
+        assert_eq!(enc(300), vec![0xac, 0x02]);
+        assert_eq!(enc(u64::MAX).len(), MAX_VARINT_BYTES);
+    }
+
+    /// Satellite: the codec round-trips arbitrary `(u64, i64)` sequences
+    /// including boundary values, and re-encoding the parse is
+    /// byte-identical (the `queue::spec` format→parse→format identity
+    /// style, here format→parse→format on the byte stream).
+    #[test]
+    fn varint_zigzag_roundtrip_property() {
+        let boundary_u = [0u64, 1, 2, 127, 128, 16_383, 16_384, u64::MAX - 1, u64::MAX];
+        let boundary_i = [0i64, 1, -1, 63, -64, 64, i64::MAX, i64::MIN, i64::MIN + 1];
+        for_random_cases(&PropConfig::default(), |rng, size| {
+            let mut us: Vec<u64> = Vec::with_capacity(size);
+            let mut is: Vec<i64> = Vec::with_capacity(size);
+            for j in 0..size {
+                if j % 3 == 0 {
+                    // boundary values, including sign flips next to them
+                    us.push(boundary_u[rng.below(boundary_u.len())]);
+                    is.push(boundary_i[rng.below(boundary_i.len())]);
+                } else {
+                    // random magnitudes across the whole width spectrum
+                    let shift = rng.below(64) as u32;
+                    us.push(rng.next_u64() >> shift);
+                    is.push((rng.next_u64() as i64) >> shift);
+                }
+            }
+            let mut buf = Vec::new();
+            for &u in &us {
+                write_varint(&mut buf, u);
+            }
+            for &i in &is {
+                write_varint(&mut buf, zigzag_encode(i));
+            }
+            let mut pos = 0usize;
+            let mut reencoded = Vec::new();
+            for &u in &us {
+                let got = read_varint(&buf, &mut pos).expect("decode u64");
+                assert_eq!(got, u);
+                write_varint(&mut reencoded, got);
+            }
+            for &i in &is {
+                let got = zigzag_decode(read_varint(&buf, &mut pos).expect("decode i64"));
+                assert_eq!(got, i);
+                write_varint(&mut reencoded, zigzag_encode(got));
+            }
+            assert_eq!(pos, buf.len(), "decoder must consume exactly the stream");
+            assert_eq!(reencoded, buf, "canonical encoding must be unique");
+        });
+    }
+
+    #[test]
+    fn read_varint_rejects_hostile_bytes() {
+        // Truncated: continuation bit set, no next byte.
+        let mut pos = 0;
+        let err = read_varint(&[0x80], &mut pos).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // Empty input.
+        let mut pos = 0;
+        assert!(read_varint(&[], &mut pos).is_err());
+        // Overlong: 0x80 0x00 encodes 0 in two bytes (minimal is 0x00).
+        let mut pos = 0;
+        let err = read_varint(&[0x80, 0x00], &mut pos).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // 11 continuation bytes: longer than any u64 encoding.
+        let mut pos = 0;
+        let long = [0xffu8; 11];
+        assert!(read_varint(&long, &mut pos).is_err());
+        // 10th byte carrying more than the top u64 bit: value overflow.
+        let mut pos = 0;
+        let mut overflow = [0xffu8; 10];
+        overflow[9] = 0x02;
+        assert!(read_varint(&overflow, &mut pos).is_err());
+        // ...while the genuine u64::MAX encoding is accepted.
+        let mut buf = Vec::new();
+        write_varint(&mut buf, u64::MAX);
+        let mut pos = 0;
+        assert_eq!(read_varint(&buf, &mut pos).unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn node_roundtrip_and_degree_budget() {
+        let arcs: Vec<(NodeId, Weight)> = vec![(2, 5), (3, 1), (17, i64::MAX), (90, 7)];
+        let mut buf = Vec::new();
+        encode_node(&mut buf, 10, &arcs);
+        let (mut targets, mut weights) = (Vec::new(), Vec::new());
+        let mut pos = 0;
+        let d = decode_node(&buf, &mut pos, 10, 100, arcs.len(), &mut targets, &mut weights)
+            .unwrap();
+        assert_eq!(d, arcs.len());
+        assert_eq!(pos, buf.len());
+        let decoded: Vec<(NodeId, Weight)> =
+            targets.into_iter().zip(weights).collect();
+        assert_eq!(decoded, arcs);
+        // The same bytes with a tighter arc budget: structured error,
+        // nothing pushed beyond the check.
+        let (mut t2, mut w2) = (Vec::new(), Vec::new());
+        let mut pos = 0;
+        let err = decode_node(&buf, &mut pos, 10, 100, 3, &mut t2, &mut w2).unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+        assert!(t2.is_empty() && w2.is_empty());
+    }
+
+    #[test]
+    fn empty_adjacency_is_one_byte() {
+        let mut buf = Vec::new();
+        encode_node(&mut buf, 4, &[]);
+        assert_eq!(buf, vec![0x00]);
+        let (mut t, mut w) = (Vec::new(), Vec::new());
+        let mut pos = 0;
+        assert_eq!(decode_node(&buf, &mut pos, 4, 8, 0, &mut t, &mut w).unwrap(), 0);
+        assert!(t.is_empty() && w.is_empty());
+    }
+
+    #[test]
+    fn node_property_roundtrip() {
+        // Random canonical arc lists (sorted unique targets, positive
+        // weights) round-trip exactly for random node ids.
+        for_random_cases(&PropConfig::default(), |rng, size| {
+            let n = 2 * size + 8;
+            let v = rng.below(n) as NodeId;
+            let mut targets: Vec<NodeId> =
+                (0..size).map(|_| rng.below(n) as NodeId).collect();
+            targets.sort_unstable();
+            targets.dedup();
+            let arcs: Vec<(NodeId, Weight)> = targets
+                .into_iter()
+                .map(|t| (t, 1 + rng.below(1 << 30) as Weight))
+                .collect();
+            let mut buf = Vec::new();
+            encode_node(&mut buf, v, &arcs);
+            let (mut t, mut w) = (Vec::new(), Vec::new());
+            let mut pos = 0;
+            let d = decode_node(&buf, &mut pos, v, n, arcs.len(), &mut t, &mut w).unwrap();
+            assert_eq!(d, arcs.len());
+            assert_eq!(pos, buf.len());
+            assert_eq!(t, arcs.iter().map(|&(t, _)| t).collect::<Vec<_>>());
+            assert_eq!(w, arcs.iter().map(|&(_, w)| w).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn decode_node_rejects_corrupt_streams() {
+        let n = 100usize;
+        let check_err = |bytes: &[u8], max_arcs: usize| {
+            let (mut t, mut w) = (Vec::new(), Vec::new());
+            let mut pos = 0;
+            decode_node(bytes, &mut pos, 50, n, max_arcs, &mut t, &mut w)
+                .expect_err("hostile bytes must error")
+        };
+        // Degree claims more than the budget (huge claimed length).
+        let mut huge = Vec::new();
+        write_varint(&mut huge, u64::MAX);
+        assert!(check_err(&huge, 10).to_string().contains("budget"));
+        // Target out of range: first target beyond n.
+        let mut far = Vec::new();
+        write_varint(&mut far, 1);
+        write_varint(&mut far, zigzag_encode(n as i64)); // 50 + 100 >= n
+        check_err(&far, 10);
+        // Gap pushing a later target past n.
+        let mut gap = Vec::new();
+        write_varint(&mut gap, 2);
+        write_varint(&mut gap, zigzag_encode(0)); // t0 = 50
+        write_varint(&mut gap, n as u64); // t1 = 50 + n + 1
+        check_err(&gap, 10);
+        // Zero weight.
+        let mut zero_w = Vec::new();
+        write_varint(&mut zero_w, 1);
+        write_varint(&mut zero_w, zigzag_encode(1));
+        write_varint(&mut zero_w, 0);
+        assert!(check_err(&zero_w, 10).to_string().contains("weight"));
+        // Weight delta driving the running weight non-positive.
+        let mut neg = Vec::new();
+        write_varint(&mut neg, 2);
+        write_varint(&mut neg, zigzag_encode(1));
+        write_varint(&mut neg, 0);
+        write_varint(&mut neg, 3); // w0 = 3
+        write_varint(&mut neg, zigzag_encode(-3)); // w1 = 0
+        check_err(&neg, 10);
+        // Truncated mid-list.
+        let mut trunc = Vec::new();
+        write_varint(&mut trunc, 3);
+        write_varint(&mut trunc, zigzag_encode(1));
+        check_err(&trunc, 10);
+    }
+}

@@ -12,16 +12,23 @@
 //!   `load` — at most one shard resident, allocation-free once the
 //!   buffers have grown to the largest shard.
 
-use super::{shard_bounds, GraphStore, ShardCursor, ShardView, SHARD_FORMAT_VERSION};
+use super::{codec, fnv1a_bytes, shard_bounds, GraphStore, ShardCursor, ShardFormat, ShardView};
 use crate::graph::csr::{csr_footprint_bytes, EdgeId, Graph, NodeId, Weight};
-use crate::graph::io::{read_u64, MetisReader, MetisRow};
+use crate::graph::io::{read_bytes_capped, read_u64, MetisReader, MetisRow};
 use crate::util::rng::splitmix64;
 use std::fs::File;
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
+use std::time::SystemTime;
 
 const META_MAGIC: &[u8; 8] = b"SCLAPM1\0";
 const SHARD_MAGIC: &[u8; 8] = b"SCLAPS1\0";
+const SHARD_MAGIC_V2: &[u8; 8] = b"SCLAPS2\0";
+
+/// Nodes per `SCLAPS2` block-index entry. 1024 nodes keeps the index
+/// tiny (16 bytes per KiNode) while bounding how far a random-access
+/// reader would ever have to decode past an index point.
+pub const BLOCK_NODES: usize = 1024;
 
 fn bad(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
@@ -42,6 +49,7 @@ pub struct ShardedStore {
     node_weights: Vec<Weight>,
     total_node_weight: Weight,
     max_node_weight: Weight,
+    format: ShardFormat,
 }
 
 impl ShardedStore {
@@ -56,9 +64,9 @@ impl ShardedStore {
             return Err(bad("bad shard-store meta magic"));
         }
         let version = read_u64(&mut r)?;
-        if version != SHARD_FORMAT_VERSION {
+        let Some(format) = ShardFormat::from_version(version) else {
             return Err(bad(&format!("unsupported shard format version {version}")));
-        }
+        };
         let n_raw = read_u64(&mut r)?;
         if n_raw > u32::MAX as u64 {
             return Err(bad("node count out of range"));
@@ -93,12 +101,22 @@ impl ShardedStore {
             node_weights,
             total_node_weight,
             max_node_weight,
+            format,
         })
     }
 
     /// Directory this store lives in.
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// The format declared by `meta.bin`. Individual shard files are
+    /// still auto-detected per magic on load (a partially-recompressed
+    /// directory with mixed shard versions reads fine), so this is the
+    /// *advertised* format, used for reporting and as the recompress
+    /// default.
+    pub fn format(&self) -> ShardFormat {
+        self.format
     }
 
     fn shard_path(&self, shard: usize) -> PathBuf {
@@ -147,14 +165,7 @@ impl GraphStore for ShardedStore {
     }
 
     fn cursor(&self) -> Box<dyn ShardCursor + '_> {
-        Box::new(ShardFileCursor {
-            store: self,
-            xadj: Vec::new(),
-            targets: Vec::new(),
-            weights: Vec::new(),
-            loaded: None,
-            loads: 0,
-        })
+        Box::new(ShardFileCursor::new(self))
     }
 
     fn memory_bytes(&self) -> u64 {
@@ -185,18 +196,39 @@ impl GraphStore for ShardedStore {
     }
 }
 
-/// Streaming cursor over a [`ShardedStore`]: one shard resident, three
-/// reusable buffers, no allocation after warm-up (see module docs).
+/// Streaming cursor over a [`ShardedStore`]: one shard resident,
+/// reusable grow-only buffers, no allocation after warm-up (see module
+/// docs). The on-disk format is detected per shard file from its magic
+/// (`SCLAPS1` raw / `SCLAPS2` compressed), so one cursor reads either —
+/// or a mixed directory.
 pub struct ShardFileCursor<'a> {
     store: &'a ShardedStore,
     xadj: Vec<EdgeId>,
     targets: Vec<NodeId>,
     weights: Vec<Weight>,
+    /// v2 only: raw compressed payload of the resident shard.
+    payload: Vec<u8>,
+    /// v2 only: decoded block index of the resident shard.
+    index: Vec<(u64, u64)>,
     loaded: Option<usize>,
     loads: usize,
 }
 
-impl ShardFileCursor<'_> {
+impl<'a> ShardFileCursor<'a> {
+    /// Fresh cursor with empty (grow-only) buffers.
+    pub fn new(store: &'a ShardedStore) -> ShardFileCursor<'a> {
+        ShardFileCursor {
+            store,
+            xadj: Vec::new(),
+            targets: Vec::new(),
+            weights: Vec::new(),
+            payload: Vec::new(),
+            index: Vec::new(),
+            loaded: None,
+            loads: 0,
+        }
+    }
+
     /// Number of shard files read from disk so far (re-loading the
     /// resident shard is free and not counted) — the observable for
     /// "each pass touches each shard once".
@@ -210,17 +242,24 @@ impl ShardFileCursor<'_> {
         let mut r = BufReader::new(file);
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
-        if &magic != SHARD_MAGIC {
-            return Err(bad("bad shard magic"));
+        if &magic == SHARD_MAGIC {
+            self.read_shard_v1(&mut r, lo, hi)
+        } else if &magic == SHARD_MAGIC_V2 {
+            self.read_shard_v2(&mut r, lo, hi)
+        } else {
+            Err(bad("bad shard magic"))
         }
-        if read_u64(&mut r)? != SHARD_FORMAT_VERSION {
+    }
+
+    fn read_shard_v1<R: Read>(&mut self, r: &mut R, lo: usize, hi: usize) -> io::Result<()> {
+        if read_u64(r)? != ShardFormat::V1.version() {
             return Err(bad("unsupported shard format version"));
         }
-        let (flo, fhi) = (read_u64(&mut r)? as usize, read_u64(&mut r)? as usize);
+        let (flo, fhi) = (read_u64(r)? as usize, read_u64(r)? as usize);
         if (flo, fhi) != (lo, hi) {
             return Err(bad("shard span disagrees with meta"));
         }
-        let arcs = read_u64(&mut r)? as usize;
+        let arcs = read_u64(r)? as usize;
         if arcs > self.store.arcs {
             return Err(bad("shard arc count exceeds store total"));
         }
@@ -229,7 +268,7 @@ impl ShardFileCursor<'_> {
         self.xadj.reserve(hi - lo + 1);
         self.xadj.push(0);
         for _ in lo..hi {
-            let d = read_u64(&mut r)? as usize;
+            let d = read_u64(r)? as usize;
             let next = self
                 .xadj
                 .last()
@@ -249,16 +288,100 @@ impl ShardFileCursor<'_> {
         self.weights.clear();
         self.weights.reserve(arcs.min(1 << 26));
         for _ in 0..arcs {
-            let t = read_u64(&mut r)?;
+            let t = read_u64(r)?;
             if t >= n as u64 {
                 return Err(bad("shard arc target out of range"));
             }
             self.targets.push(t as NodeId);
-            let w = read_u64(&mut r)?;
+            let w = read_u64(r)?;
             if w == 0 || w > i64::MAX as u64 {
                 return Err(bad("shard edge weight out of range"));
             }
             self.weights.push(w as Weight);
+        }
+        Ok(())
+    }
+
+    /// `SCLAPS2` body: header + block index + compressed payload
+    /// (layout in the module docs). Every header quantity is bounded
+    /// against meta-validated state before any allocation, and the
+    /// block index is cross-checked against the running decode position
+    /// at every block boundary, so a lying index or a corrupt payload
+    /// is always a structured error.
+    fn read_shard_v2<R: Read>(&mut self, r: &mut R, lo: usize, hi: usize) -> io::Result<()> {
+        if read_u64(r)? != ShardFormat::V2.version() {
+            return Err(bad("unsupported shard format version"));
+        }
+        let (flo, fhi) = (read_u64(r)? as usize, read_u64(r)? as usize);
+        if (flo, fhi) != (lo, hi) {
+            return Err(bad("shard span disagrees with meta"));
+        }
+        let arcs = read_u64(r)? as usize;
+        if arcs > self.store.arcs {
+            return Err(bad("shard arc count exceeds store total"));
+        }
+        let block_nodes = read_u64(r)? as usize;
+        if block_nodes == 0 {
+            return Err(bad("shard block size must be positive"));
+        }
+        let nblocks = read_u64(r)? as usize;
+        // The span is meta-validated, so this also bounds nblocks.
+        if nblocks != (hi - lo).div_ceil(block_nodes) {
+            return Err(bad("shard block count disagrees with span"));
+        }
+        let payload_len = read_u64(r)?;
+        self.index.clear();
+        self.index.reserve(nblocks);
+        for b in 0..nblocks {
+            let off = read_u64(r)?;
+            let arc_start = read_u64(r)?;
+            if off > payload_len || arc_start > arcs as u64 {
+                return Err(bad("shard block index entry out of range"));
+            }
+            if b == 0 && (off, arc_start) != (0, 0) {
+                return Err(bad("shard block index must start at (0, 0)"));
+            }
+            if let Some(&(prev_off, prev_arc)) = self.index.last() {
+                if off < prev_off || arc_start < prev_arc {
+                    return Err(bad("shard block index not monotone"));
+                }
+            }
+            self.index.push((off, arc_start));
+        }
+        read_bytes_capped(r, payload_len, 1 << 26, &mut self.payload)?;
+        let n = self.store.n();
+        self.xadj.clear();
+        self.xadj.reserve(hi - lo + 1);
+        self.xadj.push(0);
+        self.targets.clear();
+        self.targets.reserve(arcs.min(1 << 26));
+        self.weights.clear();
+        self.weights.reserve(arcs.min(1 << 26));
+        let mut pos = 0usize;
+        for (i, v) in (lo..hi).enumerate() {
+            if i % block_nodes == 0 {
+                let (off, arc_start) = self.index[i / block_nodes];
+                if pos as u64 != off || self.targets.len() as u64 != arc_start {
+                    return Err(bad("shard block index disagrees with payload"));
+                }
+            }
+            let remaining = arcs - self.targets.len();
+            codec::decode_node(
+                &self.payload,
+                &mut pos,
+                v as NodeId,
+                n,
+                remaining,
+                &mut self.targets,
+                &mut self.weights,
+            )?;
+            self.xadj.push(self.targets.len());
+        }
+        if pos != self.payload.len() {
+            return Err(bad("trailing bytes after shard payload"));
+        }
+        if self.targets.len() != arcs {
+            return Err(bad("shard degree sum != arc count"));
         }
         Ok(())
     }
@@ -288,13 +411,28 @@ fn write_shard_file(
     hi: usize,
     degrees: &[u64],
     arcs: &[(NodeId, Weight)],
+    format: ShardFormat,
 ) -> io::Result<()> {
     debug_assert_eq!(degrees.len(), hi - lo);
     debug_assert_eq!(degrees.iter().sum::<u64>() as usize, arcs.len());
+    match format {
+        ShardFormat::V1 => write_shard_file_v1(dir, shard, lo, hi, degrees, arcs),
+        ShardFormat::V2 => write_shard_file_v2(dir, shard, lo, hi, degrees, arcs),
+    }
+}
+
+fn write_shard_file_v1(
+    dir: &Path,
+    shard: usize,
+    lo: usize,
+    hi: usize,
+    degrees: &[u64],
+    arcs: &[(NodeId, Weight)],
+) -> io::Result<()> {
     let file = File::create(dir.join(format!("shard_{shard}.bin")))?;
     let mut out = BufWriter::new(file);
     out.write_all(SHARD_MAGIC)?;
-    write_u64(&mut out, SHARD_FORMAT_VERSION)?;
+    write_u64(&mut out, ShardFormat::V1.version())?;
     write_u64(&mut out, lo as u64)?;
     write_u64(&mut out, hi as u64)?;
     write_u64(&mut out, arcs.len() as u64)?;
@@ -308,17 +446,58 @@ fn write_shard_file(
     out.flush()
 }
 
+fn write_shard_file_v2(
+    dir: &Path,
+    shard: usize,
+    lo: usize,
+    hi: usize,
+    degrees: &[u64],
+    arcs: &[(NodeId, Weight)],
+) -> io::Result<()> {
+    let nblocks = (hi - lo).div_ceil(BLOCK_NODES);
+    let mut payload: Vec<u8> = Vec::new();
+    let mut index: Vec<(u64, u64)> = Vec::with_capacity(nblocks);
+    let mut arc_pos = 0usize;
+    for (i, &d) in degrees.iter().enumerate() {
+        if i % BLOCK_NODES == 0 {
+            index.push((payload.len() as u64, arc_pos as u64));
+        }
+        let d = d as usize;
+        codec::encode_node(&mut payload, (lo + i) as NodeId, &arcs[arc_pos..arc_pos + d]);
+        arc_pos += d;
+    }
+    debug_assert_eq!(arc_pos, arcs.len());
+    debug_assert_eq!(index.len(), nblocks);
+    let file = File::create(dir.join(format!("shard_{shard}.bin")))?;
+    let mut out = BufWriter::new(file);
+    out.write_all(SHARD_MAGIC_V2)?;
+    write_u64(&mut out, ShardFormat::V2.version())?;
+    write_u64(&mut out, lo as u64)?;
+    write_u64(&mut out, hi as u64)?;
+    write_u64(&mut out, arcs.len() as u64)?;
+    write_u64(&mut out, BLOCK_NODES as u64)?;
+    write_u64(&mut out, nblocks as u64)?;
+    write_u64(&mut out, payload.len() as u64)?;
+    for &(off, arc_start) in &index {
+        write_u64(&mut out, off)?;
+        write_u64(&mut out, arc_start)?;
+    }
+    out.write_all(&payload)?;
+    out.flush()
+}
+
 fn write_meta(
     dir: &Path,
     n: usize,
     arcs: u64,
     bounds: &[usize],
     node_weights: &[Weight],
+    format: ShardFormat,
 ) -> io::Result<()> {
     let file = File::create(dir.join("meta.bin"))?;
     let mut out = BufWriter::new(file);
     out.write_all(META_MAGIC)?;
-    write_u64(&mut out, SHARD_FORMAT_VERSION)?;
+    write_u64(&mut out, format.version())?;
     write_u64(&mut out, n as u64)?;
     write_u64(&mut out, arcs)?;
     write_u64(&mut out, (bounds.len() - 1) as u64)?;
@@ -331,10 +510,71 @@ fn write_meta(
     out.flush()
 }
 
-/// Write `graph` as a shard directory with `shards` contiguous shards
-/// (for `.bin`/edge-list inputs and benches; METIS files should go
-/// through the streaming [`convert_metis_to_shards`] instead).
+/// Validation stamp of a shard directory's `meta.bin`, used by
+/// `coordinator::net::cache` to decide whether a memoized fingerprint
+/// is still current. Beyond `(length, mtime)` it folds in the declared
+/// format version and an FNV-1a hash of the file's full content, so a
+/// rewrite that lands within mtime granularity at equal length (e.g. a
+/// recompress, or same-n regeneration with different node weights) can
+/// never validate a stale entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetaStamp {
+    len: u64,
+    mtime: Option<SystemTime>,
+    format_version: u64,
+    content_fnv: u64,
+}
+
+impl MetaStamp {
+    /// Format version declared by the stamped `meta.bin` (0 when the
+    /// file is not a shard meta at all).
+    pub fn format_version(&self) -> u64 {
+        self.format_version
+    }
+
+    /// FNV-1a 64 over the full `meta.bin` bytes.
+    pub fn content_fnv(&self) -> u64 {
+        self.content_fnv
+    }
+}
+
+/// Compute the [`MetaStamp`] of `dir`'s `meta.bin`. Reads the whole
+/// file — O(n) bytes, cheap next to re-streaming every shard, which is
+/// exactly what a valid stamp lets the fingerprint memo skip.
+pub fn meta_stamp(dir: &Path) -> io::Result<MetaStamp> {
+    let path = dir.join("meta.bin");
+    let meta = std::fs::metadata(&path)?;
+    let bytes = std::fs::read(&path)?;
+    let format_version = if bytes.len() >= 16 && bytes[0..8] == META_MAGIC[..] {
+        u64::from_le_bytes(bytes[8..16].try_into().unwrap())
+    } else {
+        0
+    };
+    Ok(MetaStamp {
+        len: meta.len(),
+        mtime: meta.modified().ok(),
+        format_version,
+        content_fnv: fnv1a_bytes(&bytes),
+    })
+}
+
+/// [`write_sharded_as`] in the v1 format (the library default — keeps
+/// existing callers and their on-disk expectations unchanged; the CLI
+/// defaults to v2).
 pub fn write_sharded(graph: &Graph, dir: &Path, shards: usize) -> io::Result<ShardedStore> {
+    write_sharded_as(graph, dir, shards, ShardFormat::V1)
+}
+
+/// Write `graph` as a shard directory with `shards` contiguous shards
+/// in the requested format (for `.bin`/edge-list inputs and benches;
+/// METIS files should go through the streaming
+/// [`convert_metis_to_shards_as`] instead).
+pub fn write_sharded_as(
+    graph: &Graph,
+    dir: &Path,
+    shards: usize,
+    format: ShardFormat,
+) -> io::Result<ShardedStore> {
     if graph.n() > u32::MAX as usize {
         return Err(bad("node count out of range"));
     }
@@ -352,7 +592,7 @@ pub fn write_sharded(graph: &Graph, dir: &Path, shards: usize) -> io::Result<Sha
                 arcs.push((u, w));
             }
         }
-        write_shard_file(dir, s, lo, hi, &degrees, &arcs)?;
+        write_shard_file(dir, s, lo, hi, &degrees, &arcs, format)?;
     }
     write_meta(
         dir,
@@ -360,8 +600,67 @@ pub fn write_sharded(graph: &Graph, dir: &Path, shards: usize) -> io::Result<Sha
         graph.arc_count() as u64,
         &bounds,
         graph.node_weights(),
+        format,
     )?;
     ShardedStore::open(dir)
+}
+
+/// Rewrite the shard directory at `src` into `dst`, optionally
+/// re-sharding, in the requested format — the `shard recompress` CLI
+/// verb. Streams `src` one shard at a time (peak memory: one input
+/// shard + one output shard), so recompressing a store that never fit
+/// in RAM stays out-of-core. The logical CSR stream is preserved
+/// exactly, so the result has identical [`store_fingerprints`] and
+/// yields byte-identical partitions.
+pub fn recompress_store(
+    src: &Path,
+    dst: &Path,
+    shards: Option<usize>,
+    format: ShardFormat,
+) -> io::Result<ShardedStore> {
+    let store = ShardedStore::open(src)?;
+    std::fs::create_dir_all(dst)?;
+    if let (Ok(a), Ok(b)) = (std::fs::canonicalize(src), std::fs::canonicalize(dst)) {
+        if a == b {
+            return Err(bad("recompress target must differ from the source directory"));
+        }
+    }
+    let out_shards = shards.unwrap_or_else(|| store.num_shards());
+    let bounds = shard_bounds(store.n(), out_shards);
+    let num_shards = bounds.len() - 1;
+    let mut degrees: Vec<u64> = Vec::new();
+    let mut arcs: Vec<(NodeId, Weight)> = Vec::new();
+    let mut shard = 0usize;
+    let mut total_arcs: u64 = 0;
+    let mut cursor = store.cursor();
+    for s in 0..store.num_shards() {
+        let view = cursor.load(s)?;
+        let (lo, hi) = view.span();
+        for v in lo..hi {
+            while v >= bounds[shard + 1] {
+                write_shard_file(dst, shard, bounds[shard], bounds[shard + 1], &degrees, &arcs, format)?;
+                degrees.clear();
+                arcs.clear();
+                shard += 1;
+            }
+            let (adj, ws) = view.adjacent(v as NodeId);
+            degrees.push(adj.len() as u64);
+            for (&t, &w) in adj.iter().zip(ws) {
+                arcs.push((t, w));
+            }
+            total_arcs += adj.len() as u64;
+        }
+    }
+    while shard < num_shards {
+        write_shard_file(dst, shard, bounds[shard], bounds[shard + 1], &degrees, &arcs, format)?;
+        degrees.clear();
+        arcs.clear();
+        shard += 1;
+    }
+    drop(cursor);
+    debug_assert_eq!(total_arcs as usize, store.arc_count());
+    write_meta(dst, store.n(), total_arcs, &bounds, store.node_weights(), format)?;
+    ShardedStore::open(dst)
 }
 
 /// Streaming METIS → shard-directory converter. Reads the file once,
@@ -384,6 +683,16 @@ pub fn convert_metis_to_shards<R: BufRead>(
     dir: &Path,
     shards: usize,
 ) -> io::Result<ShardedStore> {
+    convert_metis_to_shards_as(reader, dir, shards, ShardFormat::V1)
+}
+
+/// [`convert_metis_to_shards`] with an explicit output format.
+pub fn convert_metis_to_shards_as<R: BufRead>(
+    reader: R,
+    dir: &Path,
+    shards: usize,
+    format: ShardFormat,
+) -> io::Result<ShardedStore> {
     let mut metis = MetisReader::new(reader)?;
     let n = metis.n;
     if n > u32::MAX as usize {
@@ -402,7 +711,7 @@ pub fn convert_metis_to_shards<R: BufRead>(
     let mut v = 0usize;
     while metis.next_row(&mut row)? {
         while v >= bounds[shard + 1] {
-            write_shard_file(dir, shard, bounds[shard], bounds[shard + 1], &degrees, &arcs)?;
+            write_shard_file(dir, shard, bounds[shard], bounds[shard + 1], &degrees, &arcs, format)?;
             degrees.clear();
             arcs.clear();
             shard += 1;
@@ -423,7 +732,7 @@ pub fn convert_metis_to_shards<R: BufRead>(
         v += 1;
     }
     while shard < num_shards {
-        write_shard_file(dir, shard, bounds[shard], bounds[shard + 1], &degrees, &arcs)?;
+        write_shard_file(dir, shard, bounds[shard], bounds[shard + 1], &degrees, &arcs, format)?;
         degrees.clear();
         arcs.clear();
         shard += 1;
@@ -435,7 +744,7 @@ pub fn convert_metis_to_shards<R: BufRead>(
         ));
     }
     metis.check_edge_count((total_arcs / 2) as usize)?;
-    write_meta(dir, n, total_arcs, &bounds, &node_weights)?;
+    write_meta(dir, n, total_arcs, &bounds, &node_weights, format)?;
     ShardedStore::open(dir)
 }
 
@@ -501,14 +810,7 @@ mod tests {
         let g = sample();
         let dir = temp_dir("passes");
         let store = write_sharded(&g, &dir, 4).unwrap();
-        let mut cursor = ShardFileCursor {
-            store: &store,
-            xadj: Vec::new(),
-            targets: Vec::new(),
-            weights: Vec::new(),
-            loaded: None,
-            loads: 0,
-        };
+        let mut cursor = ShardFileCursor::new(&store);
         for s in 0..4 {
             // repeated loads of the resident shard hit the buffer
             let a = cursor.load(s).unwrap().arc_count();
@@ -517,6 +819,97 @@ mod tests {
         }
         assert_eq!(cursor.disk_loads(), 4);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v2_roundtrip_and_size() {
+        let g = sample();
+        for shards in [1usize, 2, 5] {
+            let dir1 = temp_dir(&format!("v2a{shards}"));
+            let dir2 = temp_dir(&format!("v2b{shards}"));
+            let v1 = write_sharded_as(&g, &dir1, shards, ShardFormat::V1).unwrap();
+            let v2 = write_sharded_as(&g, &dir2, shards, ShardFormat::V2).unwrap();
+            assert_eq!(v1.format(), ShardFormat::V1);
+            assert_eq!(v2.format(), ShardFormat::V2);
+            assert_eq!(v2.to_graph().unwrap(), g, "shards={shards}");
+            assert_eq!(ShardedStore::open(&dir2).unwrap().to_graph().unwrap(), g);
+            assert!(
+                v2.disk_bytes().unwrap() < v1.disk_bytes().unwrap(),
+                "shards={shards}: v2 must be smaller on disk"
+            );
+            let _ = std::fs::remove_dir_all(&dir1);
+            let _ = std::fs::remove_dir_all(&dir2);
+        }
+    }
+
+    #[test]
+    fn mixed_format_directory_reads_per_shard_magic() {
+        // A partially-recompressed directory: shard 0 rewritten as v2,
+        // shard 1 still v1; one cursor must read both.
+        let g = sample();
+        let dir = temp_dir("mixed");
+        let store = write_sharded_as(&g, &dir, 2, ShardFormat::V1).unwrap();
+        let (lo, hi) = store.shard_span(0);
+        let mut degrees: Vec<u64> = Vec::new();
+        let mut arcs: Vec<(NodeId, Weight)> = Vec::new();
+        for v in lo..hi {
+            degrees.push(g.degree(v as NodeId) as u64);
+            for (u, w) in g.neighbors(v as NodeId) {
+                arcs.push((u, w));
+            }
+        }
+        write_shard_file_v2(&dir, 0, lo, hi, &degrees, &arcs).unwrap();
+        assert_eq!(ShardedStore::open(&dir).unwrap().to_graph().unwrap(), g);
+    }
+
+    #[test]
+    fn recompress_preserves_graph_and_fingerprints() {
+        use crate::graph::store::store_fingerprints;
+        let g = sample();
+        let src = temp_dir("rc-src");
+        let v1 = write_sharded_as(&g, &src, 3, ShardFormat::V1).unwrap();
+        let fp = store_fingerprints(&v1).unwrap();
+        // v1 → v2, re-sharded.
+        let dst = temp_dir("rc-dst");
+        let v2 = recompress_store(&src, &dst, Some(5), ShardFormat::V2).unwrap();
+        assert_eq!(v2.format(), ShardFormat::V2);
+        assert_eq!(v2.num_shards(), 5);
+        assert_eq!(v2.to_graph().unwrap(), g);
+        assert_eq!(store_fingerprints(&v2).unwrap(), fp);
+        // v2 → v1, default shard count carries over.
+        let back = temp_dir("rc-back");
+        let rt = recompress_store(&dst, &back, None, ShardFormat::V1).unwrap();
+        assert_eq!(rt.format(), ShardFormat::V1);
+        assert_eq!(rt.num_shards(), 5);
+        assert_eq!(rt.to_graph().unwrap(), g);
+        assert_eq!(store_fingerprints(&rt).unwrap(), fp);
+        // Same directory refused.
+        let err = recompress_store(&src, &src, None, ShardFormat::V2).unwrap_err();
+        assert!(err.to_string().contains("differ"), "{err}");
+        for d in [&src, &dst, &back] {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+
+    #[test]
+    fn meta_stamp_tracks_version_and_content() {
+        let g = sample();
+        let d1 = temp_dir("stamp1");
+        let d2 = temp_dir("stamp2");
+        write_sharded_as(&g, &d1, 2, ShardFormat::V1).unwrap();
+        write_sharded_as(&g, &d2, 2, ShardFormat::V2).unwrap();
+        let s1 = meta_stamp(&d1).unwrap();
+        let s2 = meta_stamp(&d2).unwrap();
+        assert_eq!(s1.format_version(), 1);
+        assert_eq!(s2.format_version(), 2);
+        // meta.bin differs only in the version field: equal length,
+        // different content hash — exactly what (len, mtime) missed.
+        assert_ne!(s1, s2);
+        assert_ne!(s1.content_fnv(), s2.content_fnv());
+        assert_eq!(meta_stamp(&d1).unwrap(), s1, "stamp must be reproducible");
+        assert!(meta_stamp(Path::new("/definitely/not/here")).is_err());
+        let _ = std::fs::remove_dir_all(&d1);
+        let _ = std::fs::remove_dir_all(&d2);
     }
 
     #[test]

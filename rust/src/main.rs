@@ -30,7 +30,8 @@ use sclap::coordinator::service::{default_seeds, Coordinator};
 use sclap::generators;
 use sclap::graph::csr::Graph;
 use sclap::graph::store::{
-    convert_metis_to_shards, write_sharded, GraphStore, InMemoryStore, ShardedStore,
+    convert_metis_to_shards_as, recompress_store, write_sharded_as, GraphStore, InMemoryStore,
+    ShardFormat, ShardedStore,
 };
 use sclap::partitioning::config::{PartitionConfig, Preset, CONFIG_OPTION_KEYS};
 use sclap::partitioning::external::OutOfCoreResult;
@@ -99,7 +100,9 @@ fn print_usage() {
                      [--scale S] [--n N] [--edges M] [--seed S]\n\
                      [--avg-degree D] [--mu MU]\n\
            shard     --graph FILE | --instance NAME --out DIR\n\
-                     [--shards S]\n\
+                     [--shards S] [--format v1|v2]\n\
+           shard     recompress --in DIR --out DIR\n\
+                     [--shards S] [--format v1|v2]\n\
            evaluate  --graph FILE | --instance NAME --partition FILE\n\
                      [--epsilon E]\n\
            stats     --graph FILE | --instance NAME\n\
@@ -541,15 +544,32 @@ fn cmd_client(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--format` (default: v2, the compressed format — the CLI
+/// writes the better format unless asked otherwise; the library
+/// default stays v1 for back-compat).
+fn parse_shard_format(args: &Args) -> Result<ShardFormat> {
+    match args.get("format") {
+        None => Ok(ShardFormat::V2),
+        Some(s) => ShardFormat::parse(s)
+            .ok_or_else(|| format!("unknown shard format {s:?} (expected v1 or v2)").into()),
+    }
+}
+
 /// `shard`: convert a graph to an on-disk shard directory. METIS inputs
-/// stream through `convert_metis_to_shards` (bounded memory — never the
-/// whole graph); other formats load and re-shard.
+/// stream through `convert_metis_to_shards_as` (bounded memory — never
+/// the whole graph); other formats load and re-shard. The `recompress`
+/// verb rewrites an existing directory (format and/or shard count)
+/// streaming one shard at a time.
 fn cmd_shard(args: &Args) -> Result<()> {
+    if args.positional.first().map(String::as_str) == Some("recompress") {
+        return cmd_shard_recompress(args);
+    }
     let out = args.get("out").context("need --out DIR")?;
     let shards = args.get_usize("shards", 4)?;
     if shards == 0 {
         bail!("--shards must be at least 1");
     }
+    let format = parse_shard_format(args)?;
     let store = if let Some(path) = args.get("graph") {
         let p = Path::new(path);
         let ext = p.extension().and_then(|e| e.to_str()).unwrap_or("");
@@ -557,24 +577,57 @@ fn cmd_shard(args: &Args) -> Result<()> {
             "bin" | "el" | "edges" | "txt" => {
                 let g = sclap::graph::io::load_path(p)
                     .with_context(|| format!("loading {path}"))?;
-                write_sharded(&g, Path::new(out), shards)?
+                write_sharded_as(&g, Path::new(out), shards, format)?
             }
             // METIS and anything else METIS-shaped: streaming.
             _ => {
                 let file = std::fs::File::open(p).with_context(|| format!("opening {path}"))?;
-                convert_metis_to_shards(std::io::BufReader::new(file), Path::new(out), shards)
-                    .with_context(|| format!("converting {path}"))?
+                convert_metis_to_shards_as(
+                    std::io::BufReader::new(file),
+                    Path::new(out),
+                    shards,
+                    format,
+                )
+                .with_context(|| format!("converting {path}"))?
             }
         }
     } else if args.get("instance").is_some() {
         let g = load_graph(args)?;
-        write_sharded(&g, Path::new(out), shards)?
+        write_sharded_as(&g, Path::new(out), shards, format)?
     } else {
         bail!("need --graph FILE or --instance NAME");
     };
     println!(
-        "wrote {} shard(s), n={} m={} ({} bytes on disk) to {out}",
+        "wrote {} {} shard(s), n={} m={} ({} bytes on disk) to {out}",
         store.num_shards(),
+        store.format().name(),
+        store.n(),
+        store.m(),
+        store.disk_bytes().unwrap_or(0),
+    );
+    Ok(())
+}
+
+/// `shard recompress --in DIR --out DIR [--shards S] [--format v1|v2]`.
+fn cmd_shard_recompress(args: &Args) -> Result<()> {
+    let src = args.get("in").context("need --in DIR (source shard directory)")?;
+    let out = args.get("out").context("need --out DIR")?;
+    let shards = if args.get("shards").is_some() {
+        let s = args.get_usize("shards", 0)?;
+        if s == 0 {
+            bail!("--shards must be at least 1");
+        }
+        Some(s)
+    } else {
+        None
+    };
+    let format = parse_shard_format(args)?;
+    let store = recompress_store(Path::new(src), Path::new(out), shards, format)
+        .with_context(|| format!("recompressing {src}"))?;
+    println!(
+        "recompressed {src} -> {out}: {} {} shard(s), n={} m={} ({} bytes on disk)",
+        store.num_shards(),
+        store.format().name(),
         store.n(),
         store.m(),
         store.disk_bytes().unwrap_or(0),

@@ -40,9 +40,13 @@
 //! The budget selects the *algorithm*; storage is an execution detail.
 //! For a fixed config (including the budget) the result is a pure
 //! function of (graph, seed): byte-identical for any shard count, any
-//! thread count, and for `InMemoryStore` vs `ShardedStore` backends —
-//! so "the in-memory run" of the external path is the reference the
-//! CI out-of-core smoke job compares the shard-streamed run against
+//! thread count, for `InMemoryStore` vs `ShardedStore` backends, and
+//! for either on-disk shard encoding (`SCLAPS1` raw u64 vs `SCLAPS2`
+//! delta+varint — a `ShardedStore` decodes to the same logical CSR
+//! stream regardless of format, see `graph::store`). So "the in-memory
+//! run" of the external path is the reference the CI out-of-core smoke
+//! job compares every shard-streamed run — both formats plus a
+//! `shard recompress` re-encode — against
 //! (`rust/tests/sharded_store.rs`, `.github/workflows/ci.yml`).
 
 use crate::clustering::external_lpa::{dense_from_labels, external_sclap};

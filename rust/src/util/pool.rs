@@ -466,6 +466,65 @@ impl<T> WorkerLocal<T> {
     }
 }
 
+/// Disjoint-range writer for pool tasks: a lifetime-tracked courier
+/// that lets tasks write non-overlapping ranges of one caller-owned
+/// slice without per-task allocation or a post-job gather — the
+/// "decompose by index, write your own slot" pattern of the module
+/// contract, generalized from single slots ([`ThreadPool::map_indexed`])
+/// to ranges.
+///
+/// # Safety contract
+///
+/// [`DisjointSlice::range_mut`] hands out `&mut [T]` windows. The
+/// *caller's task decomposition* must guarantee that ranges requested
+/// by concurrently running tasks never overlap (e.g. fixed-size chunks
+/// by task index). The pool guarantees each task index is claimed once,
+/// so index-derived ranges are exclusive by construction.
+pub struct DisjointSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is partitioned into caller-guaranteed disjoint ranges;
+// T crosses thread boundaries, hence Send.
+unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
+
+impl<'a, T> DisjointSlice<'a, T> {
+    /// Wrap `slice` for disjoint-range access from pool tasks.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        DisjointSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Length of the wrapped slice.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the wrapped slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exclusive access to `start..end` of the wrapped slice.
+    ///
+    /// # Safety
+    /// No other live borrow (from this or any thread) may overlap
+    /// `start..end` — the caller's task decomposition must make ranges
+    /// of concurrent tasks disjoint. Bounds are checked (`start <= end
+    /// <= len`), overlap is not.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, start: usize, end: usize) -> &mut [T] {
+        assert!(start <= end && end <= self.len, "range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -658,6 +717,29 @@ mod tests {
             .flat_map(|i| (0..3u64).flat_map(move |j| (0..2u64).map(move |l| i + j + l)))
             .sum();
         assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn disjoint_slice_chunked_writes() {
+        let n = 1000;
+        let chunk = 64;
+        let mut out = vec![0u64; n];
+        let pool = ThreadPool::new(4);
+        let slots = DisjointSlice::new(&mut out);
+        assert_eq!(slots.len(), n);
+        assert!(!slots.is_empty());
+        let tasks = n.div_ceil(chunk);
+        pool.run(tasks, |_w, t| {
+            let (start, end) = (t * chunk, ((t + 1) * chunk).min(n));
+            // SAFETY: chunks are disjoint by task index.
+            let window = unsafe { slots.range_mut(start, end) };
+            for (off, slot) in window.iter_mut().enumerate() {
+                *slot = (start + off) as u64 + 1;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64 + 1);
+        }
     }
 
     #[test]

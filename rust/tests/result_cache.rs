@@ -14,8 +14,9 @@ use sclap::coordinator::queue::spec::render_result_line_cached;
 use sclap::coordinator::queue::{GraphHandle, Request, ServiceConfig};
 use sclap::graph::csr::Graph;
 use sclap::graph::karate_club;
-use sclap::graph::store::write_sharded;
+use sclap::graph::store::{write_sharded, write_sharded_as, ShardFormat, ShardedStore};
 use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::partitioning::external::partition_store;
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -250,4 +251,108 @@ fn lru_bound_evicts_least_recently_used() {
         .run(request("b2", karate, config(3), vec![1]), true)
         .unwrap();
     assert!(!cached, "least recently used entry was evicted");
+}
+
+/// Regression (stale-stamp bug): the fingerprint memo used to stamp a
+/// shard directory by `meta.bin`'s (len, mtime) alone. Rewriting the
+/// directory with a same-length `meta.bin` at a forced-equal mtime then
+/// served the OLD graph's cached partition for the new content. The
+/// stamp now folds in the format version and a content hash, so the
+/// rewrite must recompute the fingerprint and miss.
+#[test]
+fn rewritten_shard_dir_with_same_len_and_mtime_is_not_served_stale() {
+    use sclap::graph::GraphBuilder;
+    // Same topology, different node weights: meta.bin keeps the same
+    // byte length (n, arcs, bounds, and the weight array's size are all
+    // unchanged) while the logical graph differs.
+    let build = |w0: i64| {
+        let mut b = GraphBuilder::new(12);
+        for v in 0..12u32 {
+            b.set_node_weight(v, if v == 0 { w0 } else { 1 });
+            if v > 0 {
+                b.add_edge(v - 1, v, 1);
+            }
+        }
+        b.build()
+    };
+    let (ga, gb) = (build(1), build(9));
+    assert_ne!(ga, gb);
+    let dir = temp_dir("stamp");
+    std::fs::remove_dir_all(&dir).ok();
+    write_sharded(&ga, &dir, 2).unwrap();
+    let meta = dir.join("meta.bin");
+    let len_a = std::fs::metadata(&meta).unwrap().len();
+    let mtime_a = std::fs::metadata(&meta).unwrap().modified().unwrap();
+
+    let svc = CachedService::new(
+        ServiceConfig {
+            workers: 2,
+            max_pending: 4,
+        },
+        8,
+    );
+    let config = PartitionConfig::preset(Preset::CFast, 2);
+    let shard_req = |id: &str| Request {
+        id: id.to_string(),
+        graph: GraphHandle::Shards(dir.clone()),
+        config: config.clone(),
+        seeds: vec![7],
+    };
+    let (ra, cached) = svc.run(shard_req("old"), true).unwrap();
+    assert!(!cached);
+
+    // The adversarial rewrite: identical length, identical mtime.
+    std::fs::remove_dir_all(&dir).unwrap();
+    write_sharded(&gb, &dir, 2).unwrap();
+    assert_eq!(std::fs::metadata(&meta).unwrap().len(), len_a);
+    let f = std::fs::File::options().write(true).open(&meta).unwrap();
+    f.set_modified(mtime_a).unwrap();
+    drop(f);
+    assert_eq!(std::fs::metadata(&meta).unwrap().modified().unwrap(), mtime_a);
+
+    let (rb, cached) = svc.run(shard_req("new"), true).unwrap();
+    assert!(!cached, "stale (len, mtime) stamp served the old graph");
+    assert!(!Arc::ptr_eq(&ra, &rb));
+    let expected = partition_store(&ShardedStore::open(&dir).unwrap(), &config, 7).unwrap();
+    assert_eq!(
+        rb.best_blocks, expected.blocks,
+        "the fresh entry must reflect the rewritten graph"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The shard *format* must be invisible to the cache: re-encoding the
+/// same graph from v1 to v2 (here with a different shard count too)
+/// changes the stamp, the fingerprint is recomputed — and the
+/// recomputed key hits the entry the v1 run produced.
+#[test]
+fn v1_and_v2_encodings_of_one_graph_share_a_cache_entry() {
+    let g = lfr();
+    let dir = temp_dir("fmt-share");
+    std::fs::remove_dir_all(&dir).ok();
+    write_sharded_as(&g, &dir, 3, ShardFormat::V1).unwrap();
+    let svc = CachedService::new(
+        ServiceConfig {
+            workers: 2,
+            max_pending: 4,
+        },
+        8,
+    );
+    let mut config = PartitionConfig::preset(Preset::CFast, 4);
+    config.memory_budget_bytes = Some(1);
+    let shard_req = |id: &str| Request {
+        id: id.to_string(),
+        graph: GraphHandle::Shards(dir.clone()),
+        config: config.clone(),
+        seeds: vec![3],
+    };
+    let (v1, cached) = svc.run(shard_req("v1"), true).unwrap();
+    assert!(!cached);
+    std::fs::remove_dir_all(&dir).unwrap();
+    write_sharded_as(&g, &dir, 5, ShardFormat::V2).unwrap();
+    let (v2, cached) = svc.run(shard_req("v2"), true).unwrap();
+    assert!(cached, "a v2 re-encoding of identical content must hit");
+    assert!(Arc::ptr_eq(&v1, &v2));
+    assert_eq!(svc.stats().hits, 1);
+    std::fs::remove_dir_all(&dir).ok();
 }

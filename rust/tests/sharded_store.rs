@@ -13,13 +13,15 @@ use sclap::coarsening::contract::{contract, contract_store};
 use sclap::graph::csr::Graph;
 use sclap::graph::io::{read_metis, write_metis};
 use sclap::graph::store::{
-    convert_metis_to_shards, streaming_cut, write_sharded, GraphStore, InMemoryStore,
+    convert_metis_to_shards, recompress_store, store_fingerprints, streaming_cut, write_sharded,
+    write_sharded_as, GraphStore, InMemoryStore, ShardFormat, ShardedStore,
 };
 use sclap::partitioning::config::{PartitionConfig, Preset};
 use sclap::partitioning::external::partition_store;
 use sclap::partitioning::metrics::cut_value;
 use sclap::partitioning::multilevel::MultilevelPartitioner;
 use sclap::util::exec::ExecutionCtx;
+use sclap::util::proptest::{for_random_cases, PropConfig};
 use sclap::util::rng::Rng;
 use std::io::Cursor;
 use std::path::PathBuf;
@@ -229,4 +231,141 @@ fn external_partition_quality_and_metrics() {
     }
     assert_eq!(r.max_block_weight, *weights.iter().max().unwrap());
     assert_eq!(r.min_block_weight, *weights.iter().min().unwrap());
+}
+
+/// SCLAPS2 tentpole: the shard *format* is an encoding knob, never an
+/// algorithmic one. v1, v2, and the in-memory backend must produce
+/// byte-identical partitions across shard counts {1, 3, 8} × threads
+/// {1, 4}, and v1/v2 stores of the same graph must report identical
+/// `store_fingerprints` — that is what lets `net::cache` serve one
+/// cached result for both encodings.
+#[test]
+fn partition_is_invariant_across_shard_formats() {
+    let g = lfr();
+    let base = {
+        let mut c = PartitionConfig::preset(Preset::CFast, 4);
+        c.memory_budget_bytes = Some(1);
+        c
+    };
+    let seed = 29;
+    let reference = {
+        let mut cfg = base.clone();
+        cfg.threads = 1;
+        partition_store(&InMemoryStore::with_shards(&g, 1), &cfg, seed).unwrap()
+    };
+    assert!(reference.external_levels >= 1, "budget 1 must force the external path");
+
+    let mem_fp = store_fingerprints(&InMemoryStore::new(&g)).unwrap();
+    for format in ShardFormat::ALL {
+        for shards in [1usize, 3, 8] {
+            let dir = temp_dir(&format!("fmt-{}-{shards}", format.name()));
+            let store = write_sharded_as(&g, &dir, shards, format).unwrap();
+            assert_eq!(store.format(), format);
+            assert_eq!(
+                store_fingerprints(&store).unwrap(),
+                mem_fp,
+                "{} shards={shards}: fingerprint must be format-invariant",
+                format.name()
+            );
+            for threads in [1usize, 4] {
+                let mut cfg = base.clone();
+                cfg.threads = threads;
+                let r = partition_store(&store, &cfg, seed).unwrap();
+                assert_eq!(
+                    reference.blocks,
+                    r.blocks,
+                    "{} shards={shards} threads={threads}: partition diverged",
+                    format.name()
+                );
+                assert_eq!(reference.cut, r.cut);
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    // `shard recompress` output is pipeline-equivalent to a direct
+    // write: v1 → v2 with a reshard must still partition identically.
+    let src = temp_dir("fmt-recompress-src");
+    let dst = temp_dir("fmt-recompress-dst");
+    write_sharded_as(&g, &src, 3, ShardFormat::V1).unwrap();
+    let store = recompress_store(&src, &dst, Some(8), ShardFormat::V2).unwrap();
+    assert_eq!(store_fingerprints(&store).unwrap(), mem_fp);
+    let mut cfg = base.clone();
+    cfg.threads = 4;
+    let r = partition_store(&store, &cfg, seed).unwrap();
+    assert_eq!(reference.blocks, r.blocks, "recompressed store diverged");
+    let _ = std::fs::remove_dir_all(&src);
+    let _ = std::fs::remove_dir_all(&dst);
+}
+
+/// Hostile-bytes satellite: corrupting a v2 shard file must surface as
+/// a structured `io::Error` from open/to_graph — never a panic and
+/// never an unclamped allocation driven by attacker-controlled lengths.
+#[test]
+fn corrupt_v2_shards_error_instead_of_panicking() {
+    let g = lfr();
+    let dir = temp_dir("hostile-v2");
+    write_sharded_as(&g, &dir, 1, ShardFormat::V2).unwrap();
+    let shard = dir.join("shard_0.bin");
+    let pristine = std::fs::read(&shard).unwrap();
+    assert_eq!(&pristine[..8], b"SCLAPS2\0");
+    // Fixed layout this test indexes into: header = magic, version, lo,
+    // hi, arcs, block_nodes, nblocks, payload_len (8 B each, ends at
+    // 64), then nblocks × (offset, arc_start) index entries (16 B
+    // each), then the varint payload. span 1500 / 1024-node blocks →
+    // exactly 2 index entries, payload at byte 96.
+    let nblocks = u64::from_le_bytes(pristine[48..56].try_into().unwrap());
+    assert_eq!(nblocks, 2, "layout assumption behind the offsets below");
+
+    let open = |bytes: &[u8]| -> std::io::Result<Graph> {
+        std::fs::write(&shard, bytes).unwrap();
+        ShardedStore::open(&dir).and_then(|s| s.to_graph())
+    };
+    assert_eq!(open(&pristine).unwrap(), g, "pristine file must round-trip");
+
+    // Truncation at every structural boundary (and mid-field, and
+    // mid-varint) is an error, not a panic.
+    let half = pristine.len() / 2;
+    let last = pristine.len() - 1;
+    for cut in [0, 1, 7, 8, 15, 16, 40, 56, 63, 64, 79, 80, 95, 96, 97, half, last] {
+        assert!(open(&pristine[..cut]).is_err(), "truncation at {cut} accepted");
+    }
+
+    // A payload length of u64::MAX must hit the capped read, not a
+    // pre-allocation of the claimed size.
+    let mut t = pristine.clone();
+    t[56..64].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(open(&t).is_err(), "huge claimed payload accepted");
+
+    // Index entry 0 must be exactly (0, 0).
+    let mut t = pristine.clone();
+    t[64..72].copy_from_slice(&7u64.to_le_bytes());
+    assert!(open(&t).is_err(), "lying first index entry accepted");
+
+    // Entry 1 lying about the payload offset or the arc prefix must be
+    // caught by the cross-check at the block boundary.
+    let mut t = pristine.clone();
+    t[80..88].copy_from_slice(&1u64.to_le_bytes());
+    assert!(open(&t).is_err(), "lying block offset accepted");
+    let mut t = pristine.clone();
+    t[88..96].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(open(&t).is_err(), "lying arc_start accepted");
+
+    // A non-canonical (overlong) varint smuggled into the payload is
+    // rejected even though it decodes to the right value.
+    let mut t = pristine.clone();
+    t[96] = 0x80;
+    t.insert(97, 0x00);
+    assert!(open(&t).is_err(), "overlong varint accepted");
+
+    // Random single-byte corruption: any Result is acceptable, a panic
+    // is not (for_random_cases catches panics and reports the seed).
+    for_random_cases(&PropConfig::quick(), |rng, _| {
+        let mut t = pristine.clone();
+        let pos = rng.below(t.len());
+        t[pos] ^= (1 + rng.below(255)) as u8;
+        let _ = open(&t);
+    });
+
+    let _ = std::fs::remove_dir_all(&dir);
 }

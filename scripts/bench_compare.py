@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_*.json against a committed baseline.
+
+Usage:
+    bench_compare.py [--gate-external-io] BASELINE.json FRESH.json
+
+Records (flat ``{"section": ..., key: scalar, ...}`` maps, see
+``bench::harness::JsonReport``) are matched by section plus whatever
+identity keys they carry (shards, format, threads, engine, label, kind,
+k).  For every matched pair, higher-is-better throughput fields
+(``medges_per_s``, ``mb_per_s``, ``speedup``, ``level0_speedup``,
+``streaming_speedup``) are compared:
+
+  * FAIL  if fresh < 0.75 x baseline (>25% regression)
+  * WARN  if fresh < 0.90 x baseline (>10% regression)
+
+Lower-is-better ``size_ratio`` fails when fresh > baseline / 0.75.
+
+The committed baselines come from a quiet dedicated machine; CI runners
+are slower and noisier, which is why ratios — not absolute times — are
+compared, and why the fail threshold is generous.  Fresh-only or
+baseline-only records are reported but never fail the run (benches grow
+new sections over time).
+
+With ``--gate-external-io`` the FRESH report must additionally clear the
+SCLAPS2 acceptance gates natively (no baseline involved): every
+``v2_vs_v1`` record at shards >= 2 needs ``size_ratio <= 0.6`` and
+``level0_speedup >= 1.2`` (warn below 1.5 — the committed-baseline
+target — to absorb CI noise without letting a real regression through).
+"""
+
+import json
+import sys
+
+IDENTITY_KEYS = ("shards", "format", "threads", "engine", "label", "kind", "k")
+HIGHER_IS_BETTER = (
+    "medges_per_s",
+    "mb_per_s",
+    "speedup",
+    "level0_speedup",
+    "streaming_speedup",
+)
+FAIL_RATIO = 0.75
+WARN_RATIO = 0.90
+
+
+def load_records(path):
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for rec in doc.get("records", []):
+        key = (rec.get("section"),) + tuple(
+            (k, rec[k]) for k in IDENTITY_KEYS if k in rec
+        )
+        if key in out:
+            raise SystemExit(f"{path}: duplicate record identity {key}")
+        out[key] = rec
+    return out
+
+
+def fmt_key(key):
+    section = key[0]
+    rest = " ".join(f"{k}={v}" for k, v in key[1:])
+    return f"{section}[{rest}]" if rest else section
+
+
+def compare(baseline_path, fresh_path):
+    baseline = load_records(baseline_path)
+    fresh = load_records(fresh_path)
+    failures, warnings = [], []
+
+    for key in sorted(set(baseline) - set(fresh), key=fmt_key):
+        print(f"note: baseline-only record {fmt_key(key)} (not in fresh run)")
+    for key in sorted(set(fresh) - set(baseline), key=fmt_key):
+        print(f"note: fresh-only record {fmt_key(key)} (no baseline yet)")
+
+    for key in sorted(set(baseline) & set(fresh), key=fmt_key):
+        base_rec, fresh_rec = baseline[key], fresh[key]
+        for field in HIGHER_IS_BETTER:
+            b, f = base_rec.get(field), fresh_rec.get(field)
+            if not isinstance(b, (int, float)) or not isinstance(f, (int, float)):
+                continue
+            if b <= 0:
+                continue
+            ratio = f / b
+            line = (
+                f"{fmt_key(key)} {field}: fresh {f:.3f} vs baseline {b:.3f} "
+                f"({ratio:.2f}x)"
+            )
+            if ratio < FAIL_RATIO:
+                failures.append(line)
+            elif ratio < WARN_RATIO:
+                warnings.append(line)
+            else:
+                print(f"ok:   {line}")
+        # size_ratio: lower is better (v2 bytes / v1 bytes).
+        b, f = base_rec.get("size_ratio"), fresh_rec.get("size_ratio")
+        if isinstance(b, (int, float)) and isinstance(f, (int, float)) and b > 0:
+            line = f"{fmt_key(key)} size_ratio: fresh {f:.3f} vs baseline {b:.3f}"
+            if f > b / FAIL_RATIO:
+                failures.append(line)
+            elif f > b / WARN_RATIO:
+                warnings.append(line)
+            else:
+                print(f"ok:   {line}")
+
+    return failures, warnings
+
+
+def gate_external_io(fresh_path):
+    """SCLAPS2 acceptance gates on the fresh report alone."""
+    failures, warnings = [], []
+    for key, rec in load_records(fresh_path).items():
+        if key[0] != "v2_vs_v1" or rec.get("shards", 0) < 2:
+            continue
+        name = fmt_key(key)
+        size = rec.get("size_ratio")
+        speed = rec.get("level0_speedup")
+        if not isinstance(size, (int, float)) or size > 0.6:
+            failures.append(f"{name}: size_ratio {size} exceeds the 0.6 gate")
+        else:
+            print(f"ok:   {name} size_ratio {size:.3f} <= 0.6")
+        if not isinstance(speed, (int, float)) or speed < 1.2:
+            failures.append(f"{name}: level0_speedup {speed} below the 1.2 gate")
+        elif speed < 1.5:
+            warnings.append(f"{name}: level0_speedup {speed:.2f} below the 1.5 target")
+        else:
+            print(f"ok:   {name} level0_speedup {speed:.2f} >= 1.5")
+    return failures, warnings
+
+
+def main(argv):
+    args = list(argv[1:])
+    gate = "--gate-external-io" in args
+    if gate:
+        args.remove("--gate-external-io")
+    if len(args) != 2:
+        raise SystemExit(__doc__)
+    baseline_path, fresh_path = args
+
+    failures, warnings = compare(baseline_path, fresh_path)
+    if gate:
+        gf, gw = gate_external_io(fresh_path)
+        failures += gf
+        warnings += gw
+
+    for line in warnings:
+        print(f"WARN: {line}")
+    for line in failures:
+        print(f"FAIL: {line}")
+    if failures:
+        print(f"{len(failures)} bench regression(s) beyond the 25% budget")
+        return 1
+    print(f"bench comparison clean ({len(warnings)} warning(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
