@@ -1,0 +1,205 @@
+//! End-to-end V-cycle benchmark for the zero-steady-state-allocation
+//! workspace (`partitioning::workspace`): wall-clock throughput of warm
+//! V-cycled partitioning — in-memory at thread counts {1, 4} and
+//! out-of-core through the sharded store — on one shared
+//! [`ExecutionCtx`], after a cold run has stocked the arena. Alongside
+//! the timings, the workspace's own counters are reported as a
+//! peak-scratch-RSS proxy: `peak_lease_bytes` (high-water mark of
+//! simultaneously leased scratch) and `leases_created` vs
+//! `fresh_allocations` (steady-state reuse ratio). Emitted as
+//! `BENCH_vcycle_e2e.json` (`bench::harness::JsonReport`); the
+//! committed baseline is deliberately conservative so the CI
+//! regression gate (scripts/bench_compare.py) only trips on real
+//! slowdowns.
+//!
+//!     cargo bench --bench vcycle_e2e [-- --full]
+
+use sclap::bench::harness::JsonReport;
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::partitioning::external::partition_store_with_ctx;
+use sclap::partitioning::multilevel::MultilevelPartitioner;
+use sclap::util::exec::ExecutionCtx;
+use sclap::util::rng::Rng;
+use sclap::util::timer::Timer;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const K: usize = 32;
+
+fn temp_dir(label: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("sclap-vcycle-{}-{label}", std::process::id()))
+}
+
+/// Mean seconds per iteration of `f` (the caller does the warmup).
+fn time<F: FnMut() -> u64>(iters: usize, mut f: F) -> (f64, u64) {
+    let mut sink = 0u64;
+    let t = Timer::start();
+    for _ in 0..iters {
+        sink = sink.wrapping_add(f());
+    }
+    (t.elapsed_s() / iters as f64, sink)
+}
+
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let (n, avg_degree) = if quick { (30_000, 8.0) } else { (200_000, 10.0) };
+    let iters = if quick { 3 } else { 5 };
+
+    let mut rng = Rng::new(1);
+    println!("building LFR-like instance: n={n}, avg degree {avg_degree}...");
+    let (g, _) = sclap::generators::lfr::lfr_like(n, avg_degree, 0.15, &mut rng);
+    println!("n={} m={}\n", g.n(), g.m());
+
+    let mut report = JsonReport::new("vcycle_e2e");
+    report.record(
+        "instance",
+        &[
+            ("kind", "lfr".into()),
+            ("n", g.n().into()),
+            ("m", g.m().into()),
+            ("quick", quick.into()),
+        ],
+    );
+
+    // ---- in-memory V-cycles (CFastV: 3 cycles) at threads {1, 4} ----
+    for threads in [1usize, 4] {
+        let ctx = Arc::new(ExecutionCtx::new(threads));
+        let mut config = PartitionConfig::preset(Preset::CFastV, K);
+        if threads > 1 {
+            // Exercise the per-worker arena shards, not just the
+            // caller's: parallel engines lease scratch lock-free from
+            // their own shard.
+            config.parallel_coarsening = true;
+            config.parallel_refinement = true;
+        }
+        let partitioner = MultilevelPartitioner::with_ctx(config, ctx.clone());
+
+        // Cold run: stocks the arena (and is itself worth a record —
+        // the cold/warm delta is what the workspace buys).
+        let t = Timer::start();
+        let cold_cut = partitioner.partition(&g, 42).metrics.cut;
+        let cold_secs = t.elapsed_s();
+        let cold_stats = ctx.workspace().stats();
+
+        let (secs, sink) = time(iters, || partitioner.partition(&g, 42).metrics.cut as u64);
+        let warm_stats = ctx.workspace().stats();
+        assert_eq!(
+            sink,
+            cold_cut as u64 * iters as u64,
+            "warm runs must reproduce the cold partition bit for bit"
+        );
+        if threads == 1 {
+            // Sequential pipeline: lease traffic is deterministic, so
+            // steady state is exact — warm runs fresh-allocate nothing.
+            assert_eq!(
+                warm_stats.fresh_allocations, cold_stats.fresh_allocations,
+                "warm V-cycle runs fresh-allocated scratch"
+            );
+        }
+        let medges = g.m() as f64 / secs / 1e6;
+        println!(
+            "in-memory CFastV k={K}, {threads} thread(s)   cold {:>8.1} ms, warm {:>8.1} ms \
+             ({medges:.2} Medges/s, peak lease {} KiB, {} leases / {} fresh)",
+            cold_secs * 1e3,
+            secs * 1e3,
+            warm_stats.peak_lease_bytes / 1024,
+            warm_stats.leases_created,
+            warm_stats.fresh_allocations,
+        );
+        report.record(
+            "vcycle_cold",
+            &[
+                ("engine", "in_memory".into()),
+                ("threads", threads.into()),
+                ("k", K.into()),
+                ("secs", cold_secs.into()),
+            ],
+        );
+        report.record(
+            "vcycle_warm",
+            &[
+                ("engine", "in_memory".into()),
+                ("threads", threads.into()),
+                ("k", K.into()),
+                ("secs", secs.into()),
+                ("medges_per_s", medges.into()),
+            ],
+        );
+        report.record(
+            "workspace",
+            &[
+                ("engine", "in_memory".into()),
+                ("threads", threads.into()),
+                ("k", K.into()),
+                ("peak_lease_bytes", warm_stats.peak_lease_bytes.into()),
+                ("leases_created", (warm_stats.leases_created as usize).into()),
+                (
+                    "fresh_allocations",
+                    (warm_stats.fresh_allocations as usize).into(),
+                ),
+            ],
+        );
+    }
+
+    // ---- out-of-core: the same instance through SCLAPS2 shards ----
+    {
+        let dir = temp_dir("shards");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = sclap::graph::store::write_sharded_as(
+            &g,
+            &dir,
+            4,
+            sclap::graph::store::ShardFormat::V2,
+        )
+        .unwrap();
+        let ctx = Arc::new(ExecutionCtx::new(4));
+        let mut config = PartitionConfig::preset(Preset::CFast, K);
+        config.memory_budget_bytes = Some(1); // force the external path
+
+        let t = Timer::start();
+        let cold = partition_store_with_ctx(&store, &config, 42, &ctx).unwrap();
+        let cold_secs = t.elapsed_s();
+        assert!(cold.external_levels >= 1, "external path not taken");
+
+        let (secs, _) = time(iters, || {
+            partition_store_with_ctx(&store, &config, 42, &ctx).unwrap().cut as u64
+        });
+        let warm_stats = ctx.workspace().stats();
+        let medges = g.m() as f64 / secs / 1e6;
+        println!(
+            "out-of-core CFast k={K}, 4 shards (v2)       cold {:>8.1} ms, warm {:>8.1} ms \
+             ({medges:.2} Medges/s, peak lease {} KiB)",
+            cold_secs * 1e3,
+            secs * 1e3,
+            warm_stats.peak_lease_bytes / 1024,
+        );
+        report.record(
+            "vcycle_warm",
+            &[
+                ("engine", "out_of_core".into()),
+                ("threads", 4usize.into()),
+                ("k", K.into()),
+                ("secs", secs.into()),
+                ("medges_per_s", medges.into()),
+            ],
+        );
+        report.record(
+            "workspace",
+            &[
+                ("engine", "out_of_core".into()),
+                ("threads", 4usize.into()),
+                ("k", K.into()),
+                ("peak_lease_bytes", warm_stats.peak_lease_bytes.into()),
+                ("leases_created", (warm_stats.leases_created as usize).into()),
+                (
+                    "fresh_allocations",
+                    (warm_stats.fresh_allocations as usize).into(),
+                ),
+            ],
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    let path = report.write().expect("write BENCH_vcycle_e2e.json");
+    println!("\nwrote {}", path.display());
+}

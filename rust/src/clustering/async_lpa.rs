@@ -38,11 +38,10 @@
 //! (`crate::partitioning::config`), selected by configuration, never by
 //! thread count.
 
-use crate::clustering::label_propagation::{build_order, Clustering, LpaConfig, LpaMode};
+use crate::clustering::label_propagation::{build_order_into, Clustering, LpaConfig, LpaMode};
 use crate::graph::csr::{Graph, NodeId, Weight};
 use crate::util::exec::{derive_seed, ExecutionCtx};
 use crate::util::fast_reset::FastResetArray;
-use crate::util::pool::WorkerLocal;
 use crate::util::rng::Rng;
 
 /// Class members per scoring chunk. Fixed (never derived from the
@@ -189,15 +188,18 @@ pub fn parallel_async_sclap(
         assert_eq!(r.len(), n);
     }
 
+    let ws = ctx.workspace();
     let mut labels: Vec<u32> = (0..n as u32).collect();
-    let mut cluster_weight: Vec<Weight> = g.node_weights().to_vec();
-    let order = build_order(g, config.ordering, rng);
+    // The size table and visit order are round scratch (labels escape
+    // into the clustering, these do not) — leased from the workspace.
+    let mut cluster_weight = ws.caller().lease::<Vec<Weight>>(n);
+    cluster_weight.extend_from_slice(g.node_weights());
+    let mut order = ws.caller().lease::<Vec<NodeId>>(n);
+    build_order_into(g, config.ordering, rng, &mut order);
     // The coloring depends only on the graph and the order, so it is
     // computed once and reused across rounds.
     let classes = greedy_color_classes(g, &order);
     let pool = ctx.pool();
-    let scratch: WorkerLocal<FastResetArray<i64>> =
-        WorkerLocal::new(pool.threads(), || FastResetArray::new(n.max(1)));
 
     let mut rounds = 0usize;
     while rounds < config.max_iterations {
@@ -212,9 +214,10 @@ pub fn parallel_async_sclap(
                 pool.map_indexed(num_chunks, |worker, chunk| {
                     let lo = chunk * COLOR_CHUNK;
                     let hi = (lo + COLOR_CHUNK).min(class.len());
-                    // SAFETY: `worker` is the pool-provided worker id; at
-                    // most one task runs per id (WorkerLocal contract).
-                    let conn = unsafe { scratch.get_mut(worker) };
+                    // Leased from the executing worker's arena shard: in
+                    // the steady state the shard hands back the same
+                    // buffer every chunk, so rounds allocate nothing.
+                    let mut conn = ws.worker(worker).lease::<FastResetArray<i64>>(n.max(1));
                     score_members(
                         g,
                         labels_ref,
@@ -223,7 +226,7 @@ pub fn parallel_async_sclap(
                         &class[lo..hi],
                         derive_seed(round_seed, ((ci as u64) << 32) ^ chunk as u64),
                         respect,
-                        conn,
+                        &mut conn,
                     )
                 })
             };

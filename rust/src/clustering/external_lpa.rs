@@ -63,8 +63,9 @@
 use crate::clustering::label_propagation::{Clustering, LpaConfig, LpaMode};
 use crate::graph::csr::{NodeId, Weight};
 use crate::graph::store::{GraphStore, ShardView};
+use crate::partitioning::workspace::VcycleWorkspace;
 use crate::util::exec::{derive_seed, ExecutionCtx};
-use crate::util::pool::{DisjointSlice, ThreadPool, WorkerLocal};
+use crate::util::pool::{DisjointSlice, ThreadPool};
 use crate::util::rng::Rng;
 use std::io;
 
@@ -123,27 +124,32 @@ pub fn external_sclap(
         }
     };
 
-    // Resident cluster state, indexed by (possibly sparse) label.
+    // Resident cluster state, indexed by (possibly sparse) label. Pure
+    // working state (only `labels` escapes), so it leases from the
+    // workspace — a `serve` daemon's warm requests reuse the same
+    // tables instead of re-allocating O(n) per request.
+    let ws = ctx.workspace();
     let max_label = labels.iter().copied().max().unwrap_or(0) as usize;
     let table = (max_label + 1).max(n).max(1);
-    let mut cluster_weight: Vec<Weight> = vec![0; table];
-    let mut cluster_count: Vec<u32> = vec![0; table];
+    let mut cluster_weight = ws.caller().lease::<Vec<Weight>>(table);
+    cluster_weight.resize(table, 0);
+    let mut cluster_count = ws.caller().lease::<Vec<u32>>(table);
+    cluster_count.resize(table, 0);
     for v in 0..n {
         cluster_weight[labels[v] as usize] += node_weights[v];
         cluster_count[labels[v] as usize] += 1;
     }
 
     let pool = ctx.pool();
-    // Per-worker scoring scratch, degree-bounded (grows to the largest
-    // adjacency seen) — never O(n) per worker.
-    let scratch: WorkerLocal<Vec<(u32, Weight)>> = WorkerLocal::new(pool.threads(), Vec::new);
 
     // Flat chunk-sized proposal/degree arrays plus the apply order,
-    // allocated once here and reused by every chunk of every round —
-    // the round loop is allocation-free after warm-up.
-    let mut prop_target: Vec<u32> = vec![STAY; STREAM_CHUNK];
-    let mut prop_degree: Vec<u32> = vec![0; STREAM_CHUNK];
-    let mut order: Vec<u32> = Vec::with_capacity(STREAM_CHUNK);
+    // leased once here and reused by every chunk of every round — the
+    // round loop is allocation-free after warm-up.
+    let mut prop_target = ws.caller().lease::<Vec<u32>>(STREAM_CHUNK);
+    prop_target.resize(STREAM_CHUNK, STAY);
+    let mut prop_degree = ws.caller().lease::<Vec<u32>>(STREAM_CHUNK);
+    prop_degree.resize(STREAM_CHUNK, 0);
+    let mut order = ws.caller().lease::<Vec<u32>>(STREAM_CHUNK);
 
     let mut cursor = store.cursor();
     let mut rounds = 0usize;
@@ -182,7 +188,7 @@ pub fn external_sclap(
                         chunk_lo,
                         round_seed,
                         pool,
-                        &scratch,
+                        ws,
                         &proposals,
                         &degrees,
                     );
@@ -202,7 +208,7 @@ pub fn external_sclap(
                     .cmp(&prop_degree[a as usize])
                     .then(a.cmp(&b))
             });
-            for &i in &order {
+            for &i in order.iter() {
                 let vi = chunk_lo + i as usize;
                 let target = prop_target[i as usize];
                 let cur = labels[vi];
@@ -255,7 +261,7 @@ fn score_range(
     chunk_lo: usize,
     round_seed: u64,
     pool: &ThreadPool,
-    scratch: &WorkerLocal<Vec<(u32, Weight)>>,
+    ws: &VcycleWorkspace,
     proposals: &DisjointSlice<'_, u32>,
     degrees: &DisjointSlice<'_, u32>,
 ) {
@@ -264,8 +270,10 @@ fn score_range(
     pool.run(num_slices, |worker, slice| {
         let lo = start + slice * SCORE_CHUNK;
         let hi = (lo + SCORE_CHUNK).min(stop);
-        // SAFETY: `worker` is the pool-provided id (WorkerLocal contract).
-        let pairs = unsafe { scratch.get_mut(worker) };
+        // Degree-bounded gather scratch, leased from the executing
+        // worker's arena shard (steady state: same buffer every slice,
+        // no allocation) — never O(n) per worker.
+        let mut pairs = ws.worker(worker).lease::<Vec<(u32, Weight)>>(0);
         // SAFETY: slices cover disjoint node ranges of the chunk, so
         // their chunk-relative windows are disjoint too.
         let props = unsafe { proposals.range_mut(lo - chunk_lo, hi - chunk_lo) };
@@ -281,7 +289,7 @@ fn score_range(
                 mode,
                 v as NodeId,
                 derive_seed(round_seed, v as u64),
-                pairs,
+                &mut pairs,
             );
             props[off] = proposal.unwrap_or(STAY);
             degs[off] = view.degree(v as NodeId) as u32;

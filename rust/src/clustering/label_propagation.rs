@@ -18,6 +18,8 @@
 //! cut edges are never contracted).
 
 use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::partitioning::workspace::VcycleWorkspace;
+use crate::util::arena::scratch;
 use crate::util::fast_reset::{BitVec, FastResetArray};
 use crate::util::rng::Rng;
 use std::collections::VecDeque;
@@ -166,6 +168,25 @@ pub fn size_constrained_lpa(
     respect: Option<&[u32]>,
     rng: &mut Rng,
 ) -> (Clustering, usize) {
+    size_constrained_lpa_ws(g, upper_bound, config, initial, respect, None, rng)
+}
+
+/// [`size_constrained_lpa`] with round scratch (cluster tables, node
+/// order, connection accumulator, active-node queues/bit vectors)
+/// leased from a workspace when one is supplied. Bit-identical output
+/// either way — leases hand out cleared buffers, so only allocation
+/// traffic changes (the multilevel driver's steady-state levels stop
+/// allocating).
+#[allow(clippy::too_many_arguments)]
+pub fn size_constrained_lpa_ws(
+    g: &Graph,
+    upper_bound: Weight,
+    config: &LpaConfig,
+    initial: Option<Vec<u32>>,
+    respect: Option<&[u32]>,
+    ws: Option<&VcycleWorkspace>,
+    rng: &mut Rng,
+) -> (Clustering, usize) {
     let n = g.n();
     assert!(
         upper_bound >= g.max_node_weight(),
@@ -176,6 +197,7 @@ pub fn size_constrained_lpa(
     if let Some(r) = respect {
         assert_eq!(r.len(), n);
     }
+    let arena = ws.map(|w| w.caller());
 
     let mut labels: Vec<u32> = match initial {
         Some(init) => {
@@ -188,10 +210,19 @@ pub fn size_constrained_lpa(
         }
     };
 
-    // Cluster weight table, indexed by (sparse) label.
+    // Cluster weight table, indexed by (sparse) label. Pure working
+    // state — `make_dense` recomputes dense weights at the end — so it
+    // leases.
     let max_label = labels.iter().copied().max().unwrap_or(0) as usize;
-    let mut cluster_weight: Vec<Weight> = vec![0; (max_label + 1).max(n)];
-    let mut cluster_count: Vec<u32> = vec![0; cluster_weight.len()];
+    let table = (max_label + 1).max(n);
+    let mut cw_l = arena.map(|a| a.lease::<Vec<Weight>>(table));
+    let mut cw_o = Vec::new();
+    let cluster_weight = scratch(&mut cw_l, &mut cw_o);
+    cluster_weight.resize(table, 0);
+    let mut cc_l = arena.map(|a| a.lease::<Vec<u32>>(table));
+    let mut cc_o = Vec::new();
+    let cluster_count = scratch(&mut cc_l, &mut cc_o);
+    cluster_count.resize(table, 0);
     for v in g.nodes() {
         cluster_weight[labels[v as usize] as usize] += g.node_weight(v);
         cluster_count[labels[v as usize] as usize] += 1;
@@ -201,17 +232,34 @@ pub fn size_constrained_lpa(
             || cluster_weight.iter().all(|&w| w <= upper_bound)
     );
 
-    let order = build_order(g, config.ordering, rng);
-    let mut conn: FastResetArray<i64> = FastResetArray::new(cluster_weight.len());
+    let mut order_l = arena.map(|a| a.lease::<Vec<NodeId>>(n));
+    let mut order_o = Vec::new();
+    let order = scratch(&mut order_l, &mut order_o);
+    build_order_into(g, config.ordering, rng, order);
+    let mut conn_l = arena.map(|a| a.lease::<FastResetArray<i64>>(table));
+    let mut conn_o = FastResetArray::new(0);
+    let conn = scratch(&mut conn_l, &mut conn_o);
+    conn.ensure_capacity(table);
     let mut rounds = 0usize;
 
     if config.active_nodes {
         // §B.2: two FIFO queues + two bit vectors swapped per round.
-        let mut current: VecDeque<NodeId> = order.iter().copied().collect();
-        let mut next: VecDeque<NodeId> = VecDeque::new();
-        let mut in_current = BitVec::new(n);
-        let mut in_next = BitVec::new(n);
-        for &v in &order {
+        let mut cur_l = arena.map(|a| a.lease::<VecDeque<NodeId>>(n));
+        let mut cur_o = VecDeque::new();
+        let current = scratch(&mut cur_l, &mut cur_o);
+        current.extend(order.iter().copied());
+        let mut next_l = arena.map(|a| a.lease::<VecDeque<NodeId>>(n));
+        let mut next_o = VecDeque::new();
+        let next = scratch(&mut next_l, &mut next_o);
+        let mut inc_l = arena.map(|a| a.lease::<BitVec>(n));
+        let mut inc_o = BitVec::new(0);
+        let in_current = scratch(&mut inc_l, &mut inc_o);
+        in_current.reset_len(n);
+        let mut inn_l = arena.map(|a| a.lease::<BitVec>(n));
+        let mut inn_o = BitVec::new(0);
+        let in_next = scratch(&mut inn_l, &mut inn_o);
+        in_next.reset_len(n);
+        for &v in order.iter() {
             in_current.set(v as usize, true);
         }
         while rounds < config.max_iterations && !current.is_empty() {
@@ -223,12 +271,12 @@ pub fn size_constrained_lpa(
                     g,
                     v,
                     &mut labels,
-                    &mut cluster_weight,
-                    &mut cluster_count,
+                    cluster_weight,
+                    cluster_count,
                     upper_bound,
                     config.mode,
                     respect,
-                    &mut conn,
+                    conn,
                     rng,
                 );
                 if moved {
@@ -246,28 +294,28 @@ pub fn size_constrained_lpa(
                     }
                 }
             }
-            std::mem::swap(&mut current, &mut next);
-            std::mem::swap(&mut in_current, &mut in_next);
+            std::mem::swap(current, next);
+            std::mem::swap(in_current, in_next);
             if (changed as f64) < config.convergence_fraction * n as f64 {
                 break;
             }
         }
     } else {
-        let mut order = order;
         while rounds < config.max_iterations {
             rounds += 1;
             let mut changed = 0usize;
-            for &v in &order {
+            for i in 0..order.len() {
+                let v = order[i];
                 if try_move(
                     g,
                     v,
                     &mut labels,
-                    &mut cluster_weight,
-                    &mut cluster_count,
+                    cluster_weight,
+                    cluster_count,
                     upper_bound,
                     config.mode,
                     respect,
-                    &mut conn,
+                    conn,
                     rng,
                 ) {
                     changed += 1;
@@ -277,7 +325,7 @@ pub fn size_constrained_lpa(
                 break;
             }
             if config.ordering == NodeOrdering::Random {
-                rng.shuffle(&mut order);
+                rng.shuffle(&mut order[..]);
             }
         }
     }
@@ -390,22 +438,29 @@ fn try_move(
     true
 }
 
-/// Build the node visit order for round one (shared with the parallel
-/// asynchronous engine, `clustering::async_lpa`).
-pub(crate) fn build_order(g: &Graph, ordering: NodeOrdering, rng: &mut Rng) -> Vec<NodeId> {
-    let mut order: Vec<NodeId> = g.nodes().collect();
+/// Build the node visit order for round one into a caller-provided
+/// (typically leased) buffer. Shared with the parallel asynchronous
+/// engine, `clustering::async_lpa`.
+pub(crate) fn build_order_into(
+    g: &Graph,
+    ordering: NodeOrdering,
+    rng: &mut Rng,
+    order: &mut Vec<NodeId>,
+) {
+    order.clear();
+    order.extend(g.nodes());
     match ordering {
-        NodeOrdering::Random => rng.shuffle(&mut order),
+        NodeOrdering::Random => rng.shuffle(order),
         NodeOrdering::Degree => {
             // Shuffle first so equal-degree nodes appear in random order,
             // then counting-sort by degree (stable, O(n + maxdeg) — a
             // comparison sort here costs ~15% of a 3-round run, §Perf
             // iteration 2).
-            rng.shuffle(&mut order);
-            counting_sort_by(&mut order, g.max_degree(), |v| g.degree(v));
+            rng.shuffle(order);
+            counting_sort_by(order, g.max_degree(), |v| g.degree(v));
         }
         NodeOrdering::WeightedDegree => {
-            rng.shuffle(&mut order);
+            rng.shuffle(order);
             let max_wd = g
                 .nodes()
                 .map(|v| g.weighted_degree(v))
@@ -413,13 +468,12 @@ pub(crate) fn build_order(g: &Graph, ordering: NodeOrdering, rng: &mut Rng) -> V
                 .unwrap_or(0)
                 .max(0) as usize;
             if max_wd <= 4 * g.n() {
-                counting_sort_by(&mut order, max_wd, |v| g.weighted_degree(v) as usize);
+                counting_sort_by(order, max_wd, |v| g.weighted_degree(v) as usize);
             } else {
                 order.sort_by_key(|&v| g.weighted_degree(v));
             }
         }
     }
-    order
 }
 
 /// Stable counting sort of `order` by `key(v) ∈ [0, max_key]`.

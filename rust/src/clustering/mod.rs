@@ -15,5 +15,6 @@ pub use async_lpa::parallel_async_sclap;
 pub use ensemble::overlay_clustering;
 pub use external_lpa::{dense_from_labels, external_sclap};
 pub use label_propagation::{
-    size_constrained_lpa, Clustering, LpaConfig, LpaMode, NodeOrdering,
+    size_constrained_lpa, size_constrained_lpa_ws, Clustering, LpaConfig, LpaMode,
+    NodeOrdering,
 };

@@ -18,6 +18,7 @@
 //! this.
 
 use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::partitioning::workspace::VcycleWorkspace;
 use crate::util::exec::ExecutionCtx;
 use crate::util::fast_reset::FastResetArray;
 use crate::util::pool::{ThreadPool, WorkerLocal};
@@ -177,11 +178,23 @@ fn apply_proposals(
     applied
 }
 
+/// Where a synchronous round gets its per-worker connection
+/// accumulators from.
+///
+/// `Workspace` leases one accumulator per scoring chunk from the
+/// executing worker's arena shard — in the steady state the shard hands
+/// the same buffer back every round, so repeated rounds allocate
+/// nothing. `Local` is the caller-owned [`WorkerLocal`] pool (the
+/// pre-workspace contract: one accumulator per pool worker, each with
+/// capacity ≥ the number of distinct labels).
+#[derive(Clone, Copy)]
+pub enum RoundScratch<'a> {
+    Workspace(&'a VcycleWorkspace),
+    Local(&'a WorkerLocal<FastResetArray<i64>>),
+}
+
 /// One synchronous SCLaP round on the pool: snapshot-score all nodes in
 /// fixed chunks, then reconcile sequentially. Returns applied moves.
-///
-/// `scratch` must have one accumulator per pool worker, each with
-/// capacity ≥ the number of distinct labels.
 #[allow(clippy::too_many_arguments)]
 pub fn synchronous_round(
     g: &Graph,
@@ -191,10 +204,11 @@ pub fn synchronous_round(
     upper_bound: Weight,
     mode: SyncMode,
     pool: &ThreadPool,
-    scratch: &WorkerLocal<FastResetArray<i64>>,
+    scratch: RoundScratch<'_>,
     round_seed: u64,
 ) -> usize {
     let n = g.n();
+    let table = cluster_weight.len().max(1);
     let num_chunks = n.div_ceil(SCORING_CHUNK).max(1);
     let per_chunk: Vec<Vec<Proposal>> = {
         let labels_ref: &[u32] = labels;
@@ -202,9 +216,20 @@ pub fn synchronous_round(
         pool.map_indexed(num_chunks, |worker, chunk| {
             let lo = chunk * SCORING_CHUNK;
             let hi = (lo + SCORING_CHUNK).min(n);
-            // SAFETY: `worker` is the pool-provided worker id; at most
-            // one task runs per id at a time (WorkerLocal contract).
-            let conn = unsafe { scratch.get_mut(worker) };
+            let mut conn_l = match scratch {
+                RoundScratch::Workspace(ws) => {
+                    Some(ws.worker(worker).lease::<FastResetArray<i64>>(table))
+                }
+                RoundScratch::Local(_) => None,
+            };
+            let conn: &mut FastResetArray<i64> = match (conn_l.as_mut(), scratch) {
+                (Some(l), _) => &mut **l,
+                // SAFETY: `worker` is the pool-provided worker id; at
+                // most one task runs per id at a time (WorkerLocal
+                // contract).
+                (None, RoundScratch::Local(wl)) => unsafe { wl.get_mut(worker) },
+                (None, RoundScratch::Workspace(_)) => unreachable!(),
+            };
             score_range(
                 g,
                 labels_ref,
@@ -243,8 +268,10 @@ pub fn parallel_sclap(
     let pool = ctx.pool();
     assert!(upper_bound >= g.max_node_weight());
     let mut labels: Vec<u32> = (0..n as u32).collect();
-    let mut cluster_weight: Vec<Weight> = g.node_weights().to_vec();
-    let scratch = WorkerLocal::new(pool.threads(), || FastResetArray::new(n.max(1)));
+    // The size table is round scratch (labels escape, the table does
+    // not), so it leases from the context workspace.
+    let mut cluster_weight = ctx.workspace().caller().lease::<Vec<Weight>>(n);
+    cluster_weight.extend_from_slice(g.node_weights());
 
     for _round in 0..max_iterations {
         let round_seed = rng.next_u64();
@@ -256,7 +283,7 @@ pub fn parallel_sclap(
             upper_bound,
             SyncMode::Clustering,
             pool,
-            &scratch,
+            RoundScratch::Workspace(ctx.workspace()),
             round_seed,
         );
         debug_assert!(cluster_weight.iter().all(|&w| w <= upper_bound));
@@ -361,7 +388,7 @@ mod tests {
                 20,
                 SyncMode::Refinement,
                 &pool,
-                &scratch,
+                RoundScratch::Local(&scratch),
                 round,
             );
             assert!(weight.iter().all(|&w| w <= 20), "{weight:?}");

@@ -16,6 +16,8 @@
 
 use crate::clustering::label_propagation::Clustering;
 use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::partitioning::workspace::VcycleWorkspace;
+use crate::util::arena::{scratch, Arena};
 use crate::util::fast_reset::FastResetArray;
 use crate::util::pool::{ThreadPool, WorkerLocal};
 
@@ -39,23 +41,34 @@ const CONTRACT_CHUNK: usize = 1024;
 const CONTRACT_PARALLEL_MIN_ARCS: usize = 1 << 15;
 
 /// Bucket fine nodes by coarse id (counting sort) so each coarse node's
-/// edges are accumulated in one sweep. Returns (prefix counts, members).
-fn bucket_members(g: &Graph, labels: &[u32], nc: usize) -> (Vec<usize>, Vec<NodeId>) {
-    let mut counts = vec![0usize; nc + 1];
+/// edges are accumulated in one sweep, filling caller-supplied (leased
+/// or owned) buffers: `counts` becomes the prefix counts, `members` the
+/// bucketed node list; `cursor` is pure scratch.
+fn bucket_members_into(
+    g: &Graph,
+    labels: &[u32],
+    nc: usize,
+    counts: &mut Vec<usize>,
+    members: &mut Vec<NodeId>,
+    cursor: &mut Vec<usize>,
+) {
+    counts.clear();
+    counts.resize(nc + 1, 0);
     for &l in labels.iter() {
         counts[l as usize + 1] += 1;
     }
     for i in 0..nc {
         counts[i + 1] += counts[i];
     }
-    let mut members = vec![0 as NodeId; g.n()];
-    let mut cursor = counts.clone();
+    members.clear();
+    members.resize(g.n(), 0 as NodeId);
+    cursor.clear();
+    cursor.extend_from_slice(counts.as_slice());
     for v in g.nodes() {
         let l = labels[v as usize] as usize;
         members[cursor[l]] = v;
         cursor[l] += 1;
     }
-    (counts, members)
 }
 
 /// Aggregate the coarse CSR rows for coarse ids `lo..hi`. The inner loop
@@ -100,25 +113,47 @@ fn aggregate_range(
 
 /// Contract `clustering` (labels must be dense `0..num_clusters`).
 pub fn contract(g: &Graph, clustering: &Clustering) -> Contraction {
+    contract_leased(g, clustering, None)
+}
+
+/// [`contract`] with bucket/accumulator scratch leased from `arena`
+/// when one is supplied — the workspace path the multilevel driver
+/// takes so steady-state levels reuse capacity instead of allocating.
+/// The CSR output buffers stay owned (they escape into the coarse
+/// [`Graph`]).
+pub fn contract_leased(g: &Graph, clustering: &Clustering, arena: Option<&Arena>) -> Contraction {
     let nc = clustering.num_clusters;
     let labels = &clustering.labels;
-    let (counts, members) = bucket_members(g, labels, nc);
+
+    let mut counts_l = arena.map(|a| a.lease::<Vec<usize>>(nc + 1));
+    let mut counts_o = Vec::new();
+    let counts = scratch(&mut counts_l, &mut counts_o);
+    let mut members_l = arena.map(|a| a.lease::<Vec<NodeId>>(g.n()));
+    let mut members_o = Vec::new();
+    let members = scratch(&mut members_l, &mut members_o);
+    let mut cursor_l = arena.map(|a| a.lease::<Vec<usize>>(nc + 1));
+    let mut cursor_o = Vec::new();
+    let cursor = scratch(&mut cursor_l, &mut cursor_o);
+    bucket_members_into(g, labels, nc, counts, members, cursor);
 
     let mut xadj: Vec<usize> = Vec::with_capacity(nc + 1);
     xadj.push(0);
     let mut targets: Vec<NodeId> = Vec::new();
     let mut edge_weights: Vec<Weight> = Vec::new();
     let mut node_weights: Vec<Weight> = Vec::with_capacity(nc);
-    let mut acc: FastResetArray<i64> = FastResetArray::new(nc);
+    let mut acc_l = arena.map(|a| a.lease::<FastResetArray<i64>>(nc.max(1)));
+    let mut acc_o = FastResetArray::new(0);
+    let acc = scratch(&mut acc_l, &mut acc_o);
+    acc.ensure_capacity(nc);
 
     aggregate_range(
         g,
         labels,
-        &counts,
-        &members,
+        counts,
+        members,
         0,
         nc,
-        &mut acc,
+        acc,
         &mut xadj,
         &mut targets,
         &mut edge_weights,
@@ -145,17 +180,63 @@ struct ChunkCsr {
 /// pool workers and concatenate in chunk order. Output is bit-identical
 /// to [`contract`] for every pool size.
 pub fn contract_parallel(g: &Graph, clustering: &Clustering, pool: &ThreadPool) -> Contraction {
+    contract_parallel_ws(g, clustering, pool, None)
+}
+
+/// [`contract_parallel`] with scratch leased from a workspace when one
+/// is supplied: bucket buffers from the caller shard, per-chunk
+/// accumulators from each worker's own shard (uncontended in the steady
+/// state). Falls back to per-call [`WorkerLocal`] scratch otherwise.
+pub fn contract_parallel_ws(
+    g: &Graph,
+    clustering: &Clustering,
+    pool: &ThreadPool,
+    ws: Option<&VcycleWorkspace>,
+) -> Contraction {
     let nc = clustering.num_clusters;
     let labels = &clustering.labels;
-    let (counts, members) = bucket_members(g, labels, nc);
+
+    let caller = ws.map(|w| w.caller());
+    let mut counts_l = caller.map(|a| a.lease::<Vec<usize>>(nc + 1));
+    let mut counts_o = Vec::new();
+    let mut members_l = caller.map(|a| a.lease::<Vec<NodeId>>(g.n()));
+    let mut members_o = Vec::new();
+    {
+        let counts = scratch(&mut counts_l, &mut counts_o);
+        let members = scratch(&mut members_l, &mut members_o);
+        let mut cursor_l = caller.map(|a| a.lease::<Vec<usize>>(nc + 1));
+        let mut cursor_o = Vec::new();
+        let cursor = scratch(&mut cursor_l, &mut cursor_o);
+        bucket_members_into(g, labels, nc, counts, members, cursor);
+    }
+    // Re-borrow shared for the pool closure below.
+    let counts: &[usize] = match counts_l.as_ref() {
+        Some(l) => l.as_slice(),
+        None => counts_o.as_slice(),
+    };
+    let members: &[NodeId] = match members_l.as_ref() {
+        Some(l) => l.as_slice(),
+        None => members_o.as_slice(),
+    };
 
     let num_chunks = nc.div_ceil(CONTRACT_CHUNK).max(1);
-    let scratch = WorkerLocal::new(pool.threads(), || FastResetArray::new(nc.max(1)));
+    let worker_scratch = match ws {
+        Some(_) => None,
+        None => Some(WorkerLocal::new(pool.threads(), || {
+            FastResetArray::new(nc.max(1))
+        })),
+    };
     let chunks: Vec<ChunkCsr> = pool.map_indexed(num_chunks, |worker, chunk| {
         let lo = chunk * CONTRACT_CHUNK;
         let hi = (lo + CONTRACT_CHUNK).min(nc);
-        // SAFETY: `worker` is the pool-provided id (WorkerLocal contract).
-        let acc = unsafe { scratch.get_mut(worker) };
+        let mut acc_l = ws.map(|w| w.worker(worker).lease::<FastResetArray<i64>>(nc.max(1)));
+        let acc = match acc_l.as_mut() {
+            Some(l) => &mut **l,
+            // SAFETY: `worker` is the pool-provided id (WorkerLocal
+            // contract); this arm only runs when `ws` is None, so
+            // `worker_scratch` is Some.
+            None => unsafe { worker_scratch.as_ref().unwrap().get_mut(worker) },
+        };
         let mut xadj = Vec::with_capacity(hi - lo + 1);
         xadj.push(0);
         let mut out = ChunkCsr {
@@ -167,8 +248,8 @@ pub fn contract_parallel(g: &Graph, clustering: &Clustering, pool: &ThreadPool) 
         aggregate_range(
             g,
             labels,
-            &counts,
-            &members,
+            counts,
+            members,
             lo,
             hi,
             acc,
@@ -224,12 +305,21 @@ pub fn contract_with_pool(
 
 /// [`contract_with_pool`] through a shared [`ExecutionCtx`] — the
 /// multilevel driver's entry point after the ExecutionCtx refactor.
+/// With a context, both the parallel and the sequential path lease
+/// their scratch from the context's workspace, so repeated levels
+/// reuse capacity.
 pub fn contract_with_ctx(
     g: &Graph,
     clustering: &Clustering,
     ctx: Option<&crate::util::exec::ExecutionCtx>,
 ) -> Contraction {
-    contract_with_pool(g, clustering, ctx.map(|c| c.pool()))
+    match ctx {
+        Some(c) if c.threads() > 1 && g.arc_count() >= CONTRACT_PARALLEL_MIN_ARCS => {
+            contract_parallel_ws(g, clustering, c.pool(), Some(c.workspace()))
+        }
+        Some(c) => contract_leased(g, clustering, Some(c.workspace().caller())),
+        None => contract(g, clustering),
+    }
 }
 
 /// Streaming contraction over a [`GraphStore`]: one pass over the
@@ -248,19 +338,43 @@ pub fn contract_store(
     store: &dyn crate::graph::store::GraphStore,
     clustering: &Clustering,
 ) -> std::io::Result<Contraction> {
+    contract_store_with_ctx(store, clustering, None)
+}
+
+/// [`contract_store`] with aggregation scratch leased from the
+/// context's workspace when one is supplied (the out-of-core driver's
+/// path — every external level reuses the same flat buffers).
+pub fn contract_store_with_ctx(
+    store: &dyn crate::graph::store::GraphStore,
+    clustering: &Clustering,
+    ctx: Option<&crate::util::exec::ExecutionCtx>,
+) -> std::io::Result<Contraction> {
     use std::collections::hash_map::Entry;
     use std::collections::HashMap;
 
     let nc = clustering.num_clusters;
     let labels = &clustering.labels;
     assert_eq!(labels.len(), store.n());
+    let arena = ctx.map(|c| c.workspace().caller());
 
-    // Per-coarse-node arc rows in first-touch order; `slot` locates the
-    // accumulator of an existing (row, target) pair. Never iterated —
-    // output order comes from `rows` alone, so the HashMap cannot leak
-    // nondeterminism.
-    let mut rows: Vec<Vec<(NodeId, Weight)>> = vec![Vec::new(); nc];
-    let mut slot: HashMap<(u32, u32), usize> = HashMap::new();
+    // Aggregated coarse arcs as one flat `(row, target, weight)` run in
+    // global first-touch order — a single growing buffer instead of one
+    // `Vec` per coarse node. `slot` locates the accumulator of an
+    // existing (row, target) pair; it is never iterated — output order
+    // comes from the flat run alone, so the HashMap cannot leak
+    // nondeterminism. `row_len[c + 1]` counts row `c`'s arcs for the
+    // counting sort below.
+    let mut arcs_l = arena.map(|a| a.lease::<Vec<(u32, NodeId, Weight)>>(nc));
+    let mut arcs_o = Vec::new();
+    let arcs = scratch(&mut arcs_l, &mut arcs_o);
+    let mut slot_l = arena.map(|a| a.lease::<HashMap<(u32, u32), usize>>(nc));
+    let mut slot_o = HashMap::new();
+    let slot = scratch(&mut slot_l, &mut slot_o);
+    let mut row_len_l = arena.map(|a| a.lease::<Vec<usize>>(nc + 1));
+    let mut row_len_o = Vec::new();
+    let row_len = scratch(&mut row_len_l, &mut row_len_o);
+    row_len.resize(nc + 1, 0);
+
     let mut cursor = store.cursor();
     for s in 0..store.num_shards() {
         let view = cursor.load(s)?;
@@ -274,27 +388,38 @@ pub fn contract_store(
                     continue;
                 }
                 match slot.entry((c, cu)) {
-                    Entry::Occupied(e) => rows[c as usize][*e.get()].1 += w,
+                    Entry::Occupied(e) => arcs[*e.get()].2 += w,
                     Entry::Vacant(e) => {
-                        e.insert(rows[c as usize].len());
-                        rows[c as usize].push((cu as NodeId, w));
+                        e.insert(arcs.len());
+                        arcs.push((c, cu as NodeId, w));
+                        row_len[c as usize + 1] += 1;
                     }
                 }
             }
         }
     }
 
-    let total_arcs: usize = rows.iter().map(|r| r.len()).sum();
-    let mut xadj: Vec<usize> = Vec::with_capacity(nc + 1);
-    xadj.push(0);
-    let mut targets: Vec<NodeId> = Vec::with_capacity(total_arcs);
-    let mut edge_weights: Vec<Weight> = Vec::with_capacity(total_arcs);
-    for row in &rows {
-        for &(cu, w) in row {
-            targets.push(cu);
-            edge_weights.push(w);
-        }
-        xadj.push(targets.len());
+    // Emit the CSR with a stable counting sort by row: prefix-sum the
+    // per-row counts into start offsets, then place arcs in their
+    // global first-touch order. Stability preserves each row's
+    // first-touch order exactly, so the output is bit-identical to the
+    // old per-row representation (and hence to `contract` — see the
+    // doc contract above). `row_len` doubles as the placement cursor;
+    // `xadj` is cloned from the pristine offsets because it escapes
+    // into the coarse graph.
+    for c in 0..nc {
+        row_len[c + 1] += row_len[c];
+    }
+    let xadj: Vec<usize> = row_len.clone();
+    let total_arcs = arcs.len();
+    debug_assert_eq!(xadj[nc], total_arcs);
+    let mut targets: Vec<NodeId> = vec![0; total_arcs];
+    let mut edge_weights: Vec<Weight> = vec![0; total_arcs];
+    for &(row, target, weight) in arcs.iter() {
+        let pos = row_len[row as usize];
+        targets[pos] = target;
+        edge_weights[pos] = weight;
+        row_len[row as usize] += 1;
     }
     // Coarse node weights are the cluster weights (what `contract`
     // computes by summing members).

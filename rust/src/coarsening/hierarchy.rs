@@ -8,7 +8,7 @@
 
 use crate::clustering::async_lpa::parallel_async_sclap;
 use crate::clustering::ensemble::ensemble_sclap;
-use crate::clustering::label_propagation::{size_constrained_lpa, Clustering, LpaConfig};
+use crate::clustering::label_propagation::{size_constrained_lpa_ws, Clustering, LpaConfig};
 use crate::coarsening::contract::{contract_with_ctx, Contraction};
 use crate::coarsening::matching::heavy_edge_matching;
 use crate::graph::csr::{Graph, Weight};
@@ -106,7 +106,10 @@ fn cluster_once(
                     };
                     parallel_async_sclap(g, upper, lpa, respect, ctx, rng).0
                 }
-                None => size_constrained_lpa(g, upper, lpa, None, respect, rng).0,
+                None => {
+                    let ws = params.ctx.as_deref().map(|c| c.workspace());
+                    size_constrained_lpa_ws(g, upper, lpa, None, respect, ws, rng).0
+                }
             }
         }
         CoarseningScheme::Matching { two_hop } => {

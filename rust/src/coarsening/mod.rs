@@ -6,8 +6,9 @@ pub mod hierarchy;
 pub mod matching;
 
 pub use contract::{
-    contract, contract_parallel, contract_store, contract_with_ctx, contract_with_pool,
-    project_partition, Contraction,
+    contract, contract_leased, contract_parallel, contract_parallel_ws, contract_store,
+    contract_store_with_ctx, contract_with_ctx, contract_with_pool, project_partition,
+    Contraction,
 };
 pub use hierarchy::{
     coarsen, coarsest_size_threshold, l_max, CoarseningParams, CoarseningScheme, Hierarchy,

@@ -3,7 +3,7 @@
 
 use super::cache::{CacheStats, CachedService, ServeError};
 use crate::coordinator::queue::spec::{
-    parse_request_line, render_busy_line, render_error_line, render_result_line_cached,
+    parse_request_line, render_busy_line, render_error_line, render_result_line_full,
     write_partition_file, RequestSource, RequestSpec,
 };
 use crate::coordinator::queue::{GraphHandle, Request, ServiceConfig};
@@ -371,7 +371,14 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
                     });
                     match write_err {
                         None => {
-                            render_result_line_cached(&spec.id, &agg, shared.timing, cached)
+                            let lease = shared.service.service().ctx().workspace().stats();
+                            render_result_line_full(
+                                &spec.id,
+                                &agg,
+                                shared.timing,
+                                cached,
+                                Some((lease.leases_created, lease.peak_lease_bytes)),
+                            )
                         }
                         Some(message) => render_error_line(&spec.id, &message),
                     }

@@ -247,6 +247,23 @@ pub fn render_result_line(id: &str, agg: &Aggregate, timing: bool) -> String {
 /// byte-identical to the offline `serve` rendering — the wire
 /// determinism contract compares exactly these bytes.
 pub fn render_result_line_cached(id: &str, agg: &Aggregate, timing: bool, cached: bool) -> String {
+    render_result_line_full(id, agg, timing, cached, None)
+}
+
+/// [`render_result_line_cached`] with optional workspace lease stats
+/// `(leases_created, peak_lease_bytes)` from the service context's
+/// [`VcycleWorkspace`](crate::partitioning::workspace::VcycleWorkspace).
+/// Like `avg_seconds` they are emitted **only when `timing` is set**
+/// (they accumulate across the daemon's lifetime, so the default output
+/// stays bit-for-bit reproducible — the wire determinism contract
+/// compares exactly those bytes).
+pub fn render_result_line_full(
+    id: &str,
+    agg: &Aggregate,
+    timing: bool,
+    cached: bool,
+    workspace: Option<(u64, usize)>,
+) -> String {
     let seeds: Vec<String> = agg.runs.iter().map(|r| r.seed.to_string()).collect();
     let cuts: Vec<String> = agg.runs.iter().map(|r| r.cut.to_string()).collect();
     let mut line = format!(
@@ -263,6 +280,11 @@ pub fn render_result_line_cached(id: &str, agg: &Aggregate, timing: bool, cached
     );
     if timing {
         line.push_str(&format!(",\"avg_seconds\":{}", agg.avg_seconds));
+        if let Some((leases_created, peak_lease_bytes)) = workspace {
+            line.push_str(&format!(
+                ",\"leases_created\":{leases_created},\"peak_lease_bytes\":{peak_lease_bytes}"
+            ));
+        }
     }
     if cached {
         line.push_str(",\"cached\":true");
@@ -400,6 +422,33 @@ mod tests {
         assert_eq!(line, render_result_line("r\"1\"", &agg, false));
         // timing is opt-in (and the only nondeterministic field)
         assert!(render_result_line("x", &agg, true).contains("avg_seconds"));
+    }
+
+    #[test]
+    fn workspace_stats_ride_the_timing_gate() {
+        let agg = tiny_aggregate();
+        // Without timing, lease stats never appear — the default line
+        // stays byte-identical whether or not stats were supplied.
+        let plain = render_result_line("x", &agg, false);
+        assert_eq!(
+            render_result_line_full("x", &agg, false, false, Some((7, 4096))),
+            plain
+        );
+        // With timing they append after avg_seconds, in fixed order.
+        let timed = render_result_line_full("x", &agg, true, false, Some((7, 4096)));
+        assert!(
+            timed.contains(",\"leases_created\":7,\"peak_lease_bytes\":4096"),
+            "{timed}"
+        );
+        assert!(
+            timed.find("avg_seconds").unwrap() < timed.find("leases_created").unwrap(),
+            "{timed}"
+        );
+        // No stats supplied: the timing line is unchanged from before.
+        assert_eq!(
+            render_result_line_full("x", &agg, true, false, None),
+            render_result_line("x", &agg, true)
+        );
     }
 
     #[test]

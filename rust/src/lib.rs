@@ -71,6 +71,35 @@
 //! }
 //! ```
 //!
+//! # partitioning::workspace: zero-steady-state-allocation V-cycles
+//!
+//! Riding on the context is the multilevel workspace
+//! ([`partitioning::workspace::VcycleWorkspace`]): one typed buffer
+//! arena ([`util::arena::Arena`]) per pool worker plus one for the
+//! caller, all feeding a shared stats sink. Every phase of the
+//! pipeline — LPA round scratch ([`clustering::label_propagation`],
+//! [`clustering::parallel_lpa`], [`clustering::async_lpa`],
+//! [`clustering::external_lpa`]), cluster contraction
+//! ([`coarsening::contract`]), and refinement
+//! ([`refinement::lpa_refine`], [`refinement::fm`]) — leases its
+//! scratch ([`util::arena::Lease`]) instead of allocating it: the
+//! lease hands out a *cleared but capacitated* buffer and returns the
+//! capacity on drop. Parallel engines lease from their own worker's
+//! shard, so pool jobs take no shared lock in the steady state.
+//!
+//! The effect: the first V-cycle of the first request pays the O(n)
+//! scratch allocations once, and every later cycle, repetition
+//! ([`coordinator::service::Coordinator::partition_repeated`]), and
+//! warm `serve` request on the same context fresh-allocates **zero**
+//! scratch buffers (`rust/tests/alloc_budget.rs` proves this with a
+//! counting global allocator; `rust/benches/vcycle_e2e.rs` tracks the
+//! cold/warm wall-clock delta). Because leases recycle capacity and
+//! never contents, reuse is invisible to results — the determinism
+//! contract below is unchanged — and the high-water mark of leased
+//! bytes is a faithful peak-scratch-RSS proxy, exposed per arena via
+//! [`partitioning::workspace::VcycleWorkspace::stats`] and on the wire
+//! through `serve --timing` (`leases_created`, `peak_lease_bytes`).
+//!
 //! # graph::store: out-of-core instances beyond RAM
 //!
 //! Inputs whose CSR exceeds

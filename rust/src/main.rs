@@ -23,7 +23,8 @@ use sclap::bail;
 use sclap::coordinator::cli::Args;
 use sclap::coordinator::net::{parse_response, NetClient, NetServer, NetServerConfig};
 use sclap::coordinator::queue::spec::{
-    parse_request_line, render_error_line, render_result_line, write_partition_file, RequestSpec,
+    parse_request_line, render_error_line, render_result_line_full, write_partition_file,
+    RequestSpec,
 };
 use sclap::coordinator::queue::{BatchService, ServiceConfig};
 use sclap::coordinator::service::{default_seeds, Coordinator};
@@ -435,7 +436,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         }
                     });
                     match write_err {
-                        None => println!("{}", render_result_line(&spec.id, &agg, timing)),
+                        None => {
+                            let lease = service.ctx().workspace().stats();
+                            println!(
+                                "{}",
+                                render_result_line_full(
+                                    &spec.id,
+                                    &agg,
+                                    timing,
+                                    false,
+                                    Some((lease.leases_created, lease.peak_lease_bytes)),
+                                )
+                            );
+                        }
                         Some(message) => {
                             failed += 1;
                             println!("{}", render_error_line(&spec.id, &message));

@@ -10,7 +10,8 @@
 //! semi-external recipe (arXiv 1404.4887) end to end:
 //!
 //! 1. **out-of-core coarsening** — semi-external SCLaP
-//!    ([`external_sclap`]) + streaming contraction ([`contract_store`])
+//!    ([`external_sclap`]) + streaming contraction
+//!    ([`contract_store_with_ctx`])
 //!    build level 0 (and, if the contracted graph still exceeds the
 //!    budget, further levels through an in-memory store view) with at
 //!    most one shard of adjacency resident;
@@ -51,7 +52,7 @@
 
 use crate::clustering::external_lpa::{dense_from_labels, external_sclap};
 use crate::clustering::label_propagation::{LpaConfig, LpaMode, NodeOrdering};
-use crate::coarsening::contract::{contract_store, project_partition, Contraction};
+use crate::coarsening::contract::{contract_store_with_ctx, project_partition, Contraction};
 use crate::coarsening::hierarchy::l_max;
 use crate::graph::csr::{Graph, Weight};
 use crate::graph::store::{streaming_cut, GraphStore, InMemoryStore};
@@ -322,7 +323,7 @@ fn external_coarsen_once(
     if clustering.num_clusters as f64 > EXTERNAL_MIN_SHRINK * n as f64 {
         return Ok(None);
     }
-    Ok(Some(contract_store(store, &clustering)?))
+    Ok(Some(contract_store_with_ctx(store, &clustering, Some(ctx))?))
 }
 
 #[cfg(test)]

@@ -1,16 +1,31 @@
 //! The partitioning system: partition type, quality metrics, named
-//! configurations (paper §5.1 + baselines), the multilevel driver, and
-//! the out-of-core driver ([`external`]) for inputs beyond the memory
-//! budget.
+//! configurations (paper §5.1 + baselines), the multilevel driver, the
+//! out-of-core driver ([`external`]) for inputs beyond the memory
+//! budget, and the reusable scratch pool ([`workspace`]) every phase
+//! leases from.
+//!
+//! # Workspace lifecycle
+//!
+//! The [`workspace::VcycleWorkspace`] rides inside the shared
+//! `ExecutionCtx`, so its lifetime is the context's: one per process
+//! pool, warm across V-cycle levels, repetitions, and service
+//! requests. Phases lease scratch (`ws.worker(w).lease::<T>(n)`),
+//! getting cleared-but-capacitated buffers that shelve themselves on
+//! drop. Leases hand back **capacity, never contents**, which is why
+//! reuse cannot perturb the determinism contract — see the
+//! [`workspace`] module docs for the full argument and the per-worker
+//! sharding that keeps steady-state leases lock-uncontended.
 
 pub mod config;
 pub mod external;
 pub mod metrics;
 pub mod multilevel;
 pub mod partition;
+pub mod workspace;
 
 pub use config::{PartitionConfig, Preset};
 pub use external::{partition_store, OutOfCoreResult};
 pub use metrics::{cut_value, evaluate, PartitionMetrics};
 pub use multilevel::{MultilevelPartitioner, PartitionResult};
 pub use partition::Partition;
+pub use workspace::VcycleWorkspace;

@@ -15,8 +15,8 @@ use crate::partitioning::config::{InitialKind, PartitionConfig, RefinementKind, 
 use crate::partitioning::metrics::{cut_value, evaluate, PartitionMetrics};
 use crate::partitioning::partition::Partition;
 use crate::refinement::balance::rebalance;
-use crate::refinement::fm::kway_fm;
-use crate::refinement::lpa_refine::{lpa_refine, parallel_lpa_refine};
+use crate::refinement::fm::kway_fm_ws;
+use crate::refinement::lpa_refine::{lpa_refine_ws, parallel_lpa_refine};
 use crate::util::exec::ExecutionCtx;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -189,7 +189,7 @@ impl MultilevelPartitioner {
         if self.config.parallel_refinement {
             parallel_lpa_refine(g, p, lmax, self.config.lpa_iterations, ctx, rng);
         } else {
-            lpa_refine(g, p, lmax, self.config.lpa_iterations, rng);
+            lpa_refine_ws(g, p, lmax, self.config.lpa_iterations, Some(ctx.workspace()), rng);
         }
     }
 
@@ -202,17 +202,18 @@ impl MultilevelPartitioner {
         lmax: Weight,
         rng: &mut Rng,
     ) {
+        let ws = Some(ctx.workspace());
         match self.config.refinement {
             RefinementKind::Lpa => {
                 self.lpa_stage(ctx, g, p, lmax, rng);
             }
             RefinementKind::Eco => {
                 self.lpa_stage(ctx, g, p, lmax, rng);
-                kway_fm(g, p, lmax, &self.config.fm, rng);
+                kway_fm_ws(g, p, lmax, &self.config.fm, ws, rng);
             }
             RefinementKind::Strong => {
                 self.lpa_stage(ctx, g, p, lmax, rng);
-                kway_fm(g, p, lmax, &self.config.fm, rng);
+                kway_fm_ws(g, p, lmax, &self.config.fm, ws, rng);
                 // KaFFPa's "more-localized" pairwise search (§2.2): only
                 // affordable on the smaller levels of the hierarchy.
                 if g.n() <= 50_000 {
@@ -222,7 +223,7 @@ impl MultilevelPartitioner {
                 }
             }
             RefinementKind::Greedy => {
-                kway_fm(g, p, lmax, &self.config.fm, rng);
+                kway_fm_ws(g, p, lmax, &self.config.fm, ws, rng);
             }
         }
     }

@@ -1,0 +1,141 @@
+//! `VcycleWorkspace` — the multilevel pipeline's reusable scratch pool.
+//!
+//! One workspace lives inside every [`ExecutionCtx`]
+//! (`crate::util::exec`), so all phases that share a pool also share
+//! retired scratch buffers: a V-cycle's level `l+1` re-leases what
+//! level `l` just returned, the next repetition the batching service
+//! fans out re-leases what the previous one used, and a warm `serve`
+//! request runs with (near-)zero new heap allocations.
+//!
+//! # Layout and locking
+//!
+//! The workspace holds one [`Arena`] *shard* per pool worker
+//! ([`worker`](VcycleWorkspace::worker) maps a worker index to its
+//! shard; the caller thread is worker 0). Each shard has its own
+//! mutex, so in the steady state — every pool job leasing from its own
+//! worker's shard — leases are uncontended. A plain worker-indexed
+//! array *without* locks would be unsound: the pool runs nested jobs
+//! inline under worker index 0, so two top-level jobs that both
+//! re-enter the pool execute "worker 0" code on different OS threads
+//! concurrently. The per-shard mutex makes that collision merely a
+//! moment of contention instead of a data race.
+//!
+//! # Lease lifecycle
+//!
+//! `ws.worker(w).lease::<Vec<u32>>(n)` pops the largest shelved buffer
+//! of that type (or allocates fresh on a cold start), re-dimensions it
+//! for `n`, and hands it out **cleared**; dropping the lease clears it
+//! again and shelves it. See `util::arena` for the `Reusable`
+//! contract.
+//!
+//! # Why reuse cannot affect determinism
+//!
+//! A lease is observationally identical to a fresh allocation — same
+//! length/emptiness, same contents (none) — differing only in
+//! *capacity*, which no algorithm observes. Which shard a buffer comes
+//! from follows the deterministic task decomposition (worker indices
+//! name schedule positions, not threads), and even a "wrong"-shard
+//! lease under re-entrant collision yields the same cleared buffer.
+//! `tests/determinism.rs` pins the end-to-end guarantee: byte-identical
+//! partitions across threads, shards, backends, and formats — workspace
+//! on or off the hot path.
+
+use crate::util::arena::{Arena, ArenaStats, LeaseStatsSnapshot};
+use std::sync::Arc;
+
+/// Per-worker arena shards plus a shared lease-stats sink. Cheap to
+/// create (empty shelves); buffers accrete on first use.
+#[derive(Debug)]
+pub struct VcycleWorkspace {
+    shards: Vec<Arena>,
+    stats: Arc<ArenaStats>,
+}
+
+impl VcycleWorkspace {
+    /// Workspace with one arena shard per pool worker (at least one —
+    /// shard 0 serves sequential callers).
+    pub fn new(workers: usize) -> Self {
+        let stats = Arc::new(ArenaStats::default());
+        let shards = (0..workers.max(1))
+            .map(|_| Arena::new(stats.clone()))
+            .collect();
+        VcycleWorkspace { shards, stats }
+    }
+
+    /// The arena shard for pool worker `worker` (wraps, so any index is
+    /// safe — nested jobs always land on a valid shard).
+    #[inline]
+    pub fn worker(&self, worker: usize) -> &Arena {
+        &self.shards[worker % self.shards.len()]
+    }
+
+    /// The caller thread's shard (worker 0) — the one sequential code
+    /// leases from.
+    #[inline]
+    pub fn caller(&self) -> &Arena {
+        &self.shards[0]
+    }
+
+    /// Number of arena shards (== pool workers).
+    #[inline]
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Snapshot of the shared lease stats: `leases_created`,
+    /// `fresh_allocations` (what the steady state drives to zero), and
+    /// current/peak outstanding lease bytes — the high-water mark is
+    /// the pipeline's peak-scratch-RSS proxy reported by
+    /// `serve --timing` and the `vcycle_e2e` bench.
+    pub fn stats(&self) -> LeaseStatsSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_share_one_stats_sink() {
+        let ws = VcycleWorkspace::new(3);
+        assert_eq!(ws.shards(), 3);
+        {
+            let _a: crate::util::Lease<'_, Vec<u32>> = ws.worker(0).lease(8);
+            let _b: crate::util::Lease<'_, Vec<u32>> = ws.worker(2).lease(8);
+        }
+        let s = ws.stats();
+        assert_eq!(s.leases_created, 2);
+        assert_eq!(s.fresh_allocations, 2);
+        assert_eq!(s.current_lease_bytes, 0);
+        assert!(s.peak_lease_bytes >= 2 * 8 * 4);
+    }
+
+    #[test]
+    fn worker_index_wraps() {
+        let ws = VcycleWorkspace::new(2);
+        assert!(std::ptr::eq(ws.worker(0), ws.worker(4)));
+        assert!(std::ptr::eq(ws.worker(1), ws.worker(5)));
+        assert!(std::ptr::eq(ws.caller(), ws.worker(0)));
+    }
+
+    #[test]
+    fn zero_workers_still_yields_a_shard() {
+        let ws = VcycleWorkspace::new(0);
+        assert_eq!(ws.shards(), 1);
+        let v: crate::util::Lease<'_, Vec<u8>> = ws.caller().lease(4);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn steady_state_stops_allocating() {
+        let ws = VcycleWorkspace::new(1);
+        for _ in 0..10 {
+            let mut v: crate::util::Lease<'_, Vec<u64>> = ws.caller().lease(64);
+            v.extend(0..64);
+        }
+        let s = ws.stats();
+        assert_eq!(s.leases_created, 10);
+        assert_eq!(s.fresh_allocations, 1, "warm leases reuse the shelf");
+    }
+}

@@ -9,6 +9,8 @@
 
 use crate::graph::csr::{Graph, NodeId, Weight};
 use crate::partitioning::partition::Partition;
+use crate::partitioning::workspace::VcycleWorkspace;
+use crate::util::arena::scratch;
 use crate::util::bucket_queue::BucketQueue;
 use crate::util::fast_reset::{BitVec, FastResetArray};
 use crate::util::rng::Rng;
@@ -126,8 +128,27 @@ pub fn kway_fm(
     config: &FmConfig,
     rng: &mut Rng,
 ) -> FmResult {
-    let bounds = vec![lmax; p.k];
-    kway_fm_bounded(g, p, &bounds, config, rng)
+    kway_fm_ws(g, p, lmax, config, None, rng)
+}
+
+/// [`kway_fm`] with pass scratch (bucket queue, lock bits, boundary
+/// seed list, move log, block tables) leased from a workspace when one
+/// is supplied — bit-identical result either way, only allocation
+/// traffic changes.
+pub fn kway_fm_ws(
+    g: &Graph,
+    p: &mut Partition,
+    lmax: Weight,
+    config: &FmConfig,
+    ws: Option<&VcycleWorkspace>,
+    rng: &mut Rng,
+) -> FmResult {
+    let k = p.k;
+    let mut bounds_l = ws.map(|w| w.caller().lease::<Vec<Weight>>(k));
+    let mut bounds_o = Vec::new();
+    let bounds = scratch(&mut bounds_l, &mut bounds_o);
+    bounds.resize(k, lmax);
+    kway_fm_frozen_ws(g, p, bounds, config, None, ws, rng)
 }
 
 /// K-way boundary FM with a per-block weight bound (`bounds[b]`).
@@ -151,47 +172,85 @@ pub fn kway_fm_frozen(
     frozen: Option<&BitVec>,
     rng: &mut Rng,
 ) -> FmResult {
+    kway_fm_frozen_ws(g, p, bounds, config, frozen, None, rng)
+}
+
+/// [`kway_fm_frozen`] with all pass scratch leased from a workspace
+/// when one is supplied. The per-pass buffers (bucket queue, lock bit
+/// vector, boundary list, move log) are additionally hoisted out of the
+/// pass loop — they are re-*dimensioned* per pass, never re-allocated —
+/// so repeated passes and repeated V-cycle levels run allocation-free
+/// once the workspace is warm.
+pub fn kway_fm_frozen_ws(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[Weight],
+    config: &FmConfig,
+    frozen: Option<&BitVec>,
+    ws: Option<&VcycleWorkspace>,
+    rng: &mut Rng,
+) -> FmResult {
     assert_eq!(bounds.len(), p.k);
+    let arena = ws.map(|w| w.caller());
     let initial_cut = crate::partitioning::metrics::cut_value(g, &p.blocks);
     let mut current_cut = initial_cut;
-    let mut conn: FastResetArray<i64> = FastResetArray::new(p.k);
+    let mut conn_l = arena.map(|a| a.lease::<FastResetArray<i64>>(p.k.max(1)));
+    let mut conn_o = FastResetArray::new(0);
+    let conn = scratch(&mut conn_l, &mut conn_o);
+    conn.ensure_capacity(p.k.max(1));
     let max_gain = (g.max_degree() as i64 + 1).max(8);
     let mut passes = 0;
     let mut total_moves = 0usize;
 
-    let mut block_counts = vec![0u32; p.k];
+    let mut counts_l = arena.map(|a| a.lease::<Vec<u32>>(p.k));
+    let mut counts_o = Vec::new();
+    let block_counts = scratch(&mut counts_l, &mut counts_o);
+    block_counts.resize(p.k, 0);
     for &b in &p.blocks {
         block_counts[b as usize] += 1;
     }
 
+    // Pass scratch, hoisted: cleared or re-dimensioned at the top of
+    // every pass, allocated (at most) once.
+    let mut queue_l = arena.map(|a| a.lease::<BucketQueue>(g.n()));
+    let mut queue_o = BucketQueue::new(0, 8);
+    let queue = scratch(&mut queue_l, &mut queue_o);
+    let mut locked_l = arena.map(|a| a.lease::<BitVec>(g.n()));
+    let mut locked_o = BitVec::new(0);
+    let locked = scratch(&mut locked_l, &mut locked_o);
+    let mut boundary_l = arena.map(|a| a.lease::<Vec<NodeId>>(g.n()));
+    let mut boundary_o = Vec::new();
+    let boundary = scratch(&mut boundary_l, &mut boundary_o);
+    let mut log_l = arena.map(|a| a.lease::<Vec<(NodeId, u32)>>(g.n()));
+    let mut log_o = Vec::new();
+    // Move log for rollback: (node, from_block).
+    let log = scratch(&mut log_l, &mut log_o);
+
     for _ in 0..config.max_passes {
         passes += 1;
         // Seed queue with boundary nodes.
-        let mut queue = BucketQueue::new(g.n(), max_gain);
-        let mut locked = BitVec::new(g.n());
-        let mut boundary: Vec<NodeId> = g
-            .nodes()
-            .filter(|&v| {
-                let bv = p.blocks[v as usize];
-                g.adjacent(v).iter().any(|&u| p.blocks[u as usize] != bv)
-            })
-            .collect();
+        queue.reset(g.n(), max_gain);
+        locked.reset_len(g.n());
+        boundary.clear();
+        boundary.extend(g.nodes().filter(|&v| {
+            let bv = p.blocks[v as usize];
+            g.adjacent(v).iter().any(|&u| p.blocks[u as usize] != bv)
+        }));
         if config.seed_fraction < 1.0 {
-            rng.shuffle(&mut boundary);
+            rng.shuffle(boundary);
             let keep = ((boundary.len() as f64) * config.seed_fraction).ceil() as usize;
             boundary.truncate(keep.max(1).min(boundary.len()));
         }
-        for &v in &boundary {
+        for &v in boundary.iter() {
             if frozen.map(|f| f.get(v as usize)).unwrap_or(false) {
                 continue;
             }
-            if let Some((_, gain)) = best_move(g, p, v, bounds, &mut conn, rng) {
+            if let Some((_, gain)) = best_move(g, p, v, bounds, conn, rng) {
                 queue.push(v as usize, gain);
             }
         }
 
-        // Move log for rollback: (node, from_block).
-        let mut log: Vec<(NodeId, u32)> = Vec::new();
+        log.clear();
         let mut best_cut = current_cut;
         let mut best_len = 0usize;
         let mut running_cut = current_cut;
@@ -203,7 +262,7 @@ pub fn kway_fm_frozen(
                 continue;
             }
             // Revalidate lazily: the stored gain may be stale.
-            let Some((target, gain)) = best_move(g, p, v, bounds, &mut conn, rng) else {
+            let Some((target, gain)) = best_move(g, p, v, bounds, conn, rng) else {
                 continue;
             };
             let from = p.block_of(v);
@@ -235,7 +294,7 @@ pub fn kway_fm_frozen(
                 if locked.get(uu) || frozen.map(|f| f.get(uu)).unwrap_or(false) {
                     continue;
                 }
-                match best_move(g, p, u, bounds, &mut conn, rng) {
+                match best_move(g, p, u, bounds, conn, rng) {
                     Some((_, ug)) => queue.update(uu, ug),
                     None => queue.remove(uu),
                 }

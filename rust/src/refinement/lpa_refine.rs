@@ -5,13 +5,12 @@
 //! at *re*-balancing (the paper observes exactly that in §5.1, CFastV vs
 //! CFastV/B — reproduced in `benches/ablations.rs`).
 
-use crate::clustering::label_propagation::{size_constrained_lpa, LpaConfig};
-use crate::clustering::parallel_lpa::{synchronous_round, SyncMode};
+use crate::clustering::label_propagation::{size_constrained_lpa_ws, LpaConfig};
+use crate::clustering::parallel_lpa::{synchronous_round, RoundScratch, SyncMode};
 use crate::graph::csr::{Graph, Weight};
 use crate::partitioning::partition::Partition;
+use crate::partitioning::workspace::VcycleWorkspace;
 use crate::util::exec::ExecutionCtx;
-use crate::util::fast_reset::FastResetArray;
-use crate::util::pool::WorkerLocal;
 use crate::util::rng::Rng;
 
 /// Refine `p` in place with SCLaP (active-nodes rounds, §B.2).
@@ -23,14 +22,28 @@ pub fn lpa_refine(
     iterations: usize,
     rng: &mut Rng,
 ) -> (Weight, Weight) {
+    lpa_refine_ws(g, p, lmax, iterations, None, rng)
+}
+
+/// [`lpa_refine`] with LPA round scratch leased from a workspace when
+/// one is supplied — bit-identical output either way.
+pub fn lpa_refine_ws(
+    g: &Graph,
+    p: &mut Partition,
+    lmax: Weight,
+    iterations: usize,
+    ws: Option<&VcycleWorkspace>,
+    rng: &mut Rng,
+) -> (Weight, Weight) {
     let before = crate::partitioning::metrics::cut_value(g, &p.blocks);
     let config = LpaConfig::refinement(iterations);
-    let (clustering, _) = size_constrained_lpa(
+    let (clustering, _) = size_constrained_lpa_ws(
         g,
         lmax,
         &config,
         Some(p.blocks.clone()),
         None,
+        ws,
         rng,
     );
     // Refinement mode never merges blocks out of existence, but the
@@ -76,12 +89,16 @@ pub fn parallel_lpa_refine(
     let k = p.k;
     let n = g.n();
     let mut labels = p.blocks.clone();
-    let mut cluster_weight = p.block_weights.clone();
-    let mut cluster_count = vec![0u32; k];
+    // Block tables are round scratch (labels escape into the partition,
+    // the tables do not) — leased, so warm V-cycles stop allocating here.
+    let arena = ctx.workspace().caller();
+    let mut cluster_weight = arena.lease::<Vec<Weight>>(k);
+    cluster_weight.extend_from_slice(&p.block_weights);
+    let mut cluster_count = arena.lease::<Vec<u32>>(k);
+    cluster_count.resize(k, 0);
     for &b in &labels {
         cluster_count[b as usize] += 1;
     }
-    let scratch = WorkerLocal::new(pool.threads(), || FastResetArray::new(k.max(1)));
 
     for _ in 0..iterations {
         let round_seed = rng.next_u64();
@@ -93,7 +110,7 @@ pub fn parallel_lpa_refine(
             lmax,
             SyncMode::Refinement,
             pool,
-            &scratch,
+            RoundScratch::Workspace(ctx.workspace()),
             round_seed,
         );
         if (applied as f64) < 0.05 * n as f64 {

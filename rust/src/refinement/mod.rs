@@ -8,6 +8,9 @@ pub mod lpa_refine;
 pub mod quotient;
 
 pub use balance::rebalance;
-pub use fm::{kway_fm, kway_fm_bounded, kway_fm_frozen, FmConfig, FmResult};
-pub use lpa_refine::{lpa_refine, parallel_lpa_refine};
+pub use fm::{
+    kway_fm, kway_fm_bounded, kway_fm_frozen, kway_fm_frozen_ws, kway_fm_ws, FmConfig,
+    FmResult,
+};
+pub use lpa_refine::{lpa_refine, lpa_refine_ws, parallel_lpa_refine};
 pub use quotient::quotient_pair_refine;

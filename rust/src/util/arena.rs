@@ -1,0 +1,461 @@
+//! Typed, size-tagged buffer reuse for the multilevel V-cycle.
+//!
+//! Every phase of the pipeline needs short-lived scratch — cluster
+//! weight tables, proposal vectors, FIFO queues, bit vectors, gain
+//! buckets. Allocating them fresh per level (or per request, once the
+//! batching service fans repetitions out) makes the steady-state
+//! V-cycle allocator-bound instead of cache-bound. An [`Arena`] keeps
+//! retired buffers on per-type shelves; a [`Lease`] hands one out
+//! *cleared but capacitated* and returns it on drop.
+//!
+//! # Determinism
+//!
+//! Reuse can never change results: [`Reusable::recycle`] clears
+//! contents on return and [`Reusable::ensure`] re-dimensions on grant,
+//! so a leased buffer is observationally identical to a freshly
+//! allocated one — only its *capacity* (never visible to algorithms)
+//! is recycled. The shelf policy (largest footprint first) affects
+//! which allocation backs a lease, not what the lease contains.
+//!
+//! # Locking
+//!
+//! Each arena guards its shelves with one `Mutex`. The intended use —
+//! see `partitioning::workspace` — is one arena per pool worker, so
+//! steady-state leases are uncontended; the lock is what keeps the
+//! design sound when pool re-entrancy runs two nested jobs under the
+//! same worker index on different OS threads.
+
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::fast_reset::{BitVec, FastResetArray};
+
+/// A buffer type an [`Arena`] can shelve and re-issue.
+///
+/// The contract that keeps reuse invisible: after `recycle` the buffer
+/// holds **no observable contents** (only capacity), and after
+/// `ensure(hint)` it is ready for a use sized by `hint` exactly as a
+/// `fresh(hint)` instance would be.
+pub trait Reusable: Send + 'static {
+    /// Allocate a new instance sized for `hint`.
+    fn fresh(hint: usize) -> Self;
+    /// Clear contents, keeping capacity (called when a lease ends).
+    fn recycle(&mut self);
+    /// Re-dimension for a use sized by `hint` (called when a lease is
+    /// granted, after `recycle` has already run).
+    fn ensure(&mut self, hint: usize);
+    /// Approximate heap bytes held (drives shelf policy and stats).
+    fn footprint(&self) -> usize;
+}
+
+impl<T: Send + 'static> Reusable for Vec<T> {
+    fn fresh(hint: usize) -> Self {
+        Vec::with_capacity(hint)
+    }
+
+    fn recycle(&mut self) {
+        self.clear();
+    }
+
+    fn ensure(&mut self, hint: usize) {
+        debug_assert!(self.is_empty());
+        if self.capacity() < hint {
+            self.reserve(hint);
+        }
+    }
+
+    fn footprint(&self) -> usize {
+        self.capacity() * std::mem::size_of::<T>()
+    }
+}
+
+impl<T: Send + 'static> Reusable for VecDeque<T> {
+    fn fresh(hint: usize) -> Self {
+        VecDeque::with_capacity(hint)
+    }
+
+    fn recycle(&mut self) {
+        self.clear();
+    }
+
+    fn ensure(&mut self, hint: usize) {
+        debug_assert!(self.is_empty());
+        if self.capacity() < hint {
+            self.reserve(hint);
+        }
+    }
+
+    fn footprint(&self) -> usize {
+        self.capacity() * std::mem::size_of::<T>()
+    }
+}
+
+impl<T: Copy + Default + Send + 'static> Reusable for FastResetArray<T> {
+    fn fresh(hint: usize) -> Self {
+        FastResetArray::new(hint)
+    }
+
+    fn recycle(&mut self) {
+        self.clear();
+    }
+
+    fn ensure(&mut self, hint: usize) {
+        self.ensure_capacity(hint);
+    }
+
+    fn footprint(&self) -> usize {
+        self.capacity() * (std::mem::size_of::<T>() + std::mem::size_of::<u32>())
+    }
+}
+
+impl<K, V, S> Reusable for HashMap<K, V, S>
+where
+    K: Eq + std::hash::Hash + Send + 'static,
+    V: Send + 'static,
+    S: std::hash::BuildHasher + Default + Send + 'static,
+{
+    fn fresh(hint: usize) -> Self {
+        HashMap::with_capacity_and_hasher(hint, S::default())
+    }
+
+    fn recycle(&mut self) {
+        self.clear();
+    }
+
+    fn ensure(&mut self, hint: usize) {
+        debug_assert!(self.is_empty());
+        if self.capacity() < hint {
+            self.reserve(hint - self.len());
+        }
+    }
+
+    fn footprint(&self) -> usize {
+        // Approximate: buckets hold (K, V) plus ~1 byte of control
+        // metadata each.
+        self.capacity() * (std::mem::size_of::<K>() + std::mem::size_of::<V>() + 1)
+    }
+}
+
+impl Reusable for BitVec {
+    fn fresh(hint: usize) -> Self {
+        BitVec::new(hint)
+    }
+
+    fn recycle(&mut self) {
+        self.clear();
+    }
+
+    fn ensure(&mut self, hint: usize) {
+        self.reset_len(hint);
+    }
+
+    fn footprint(&self) -> usize {
+        self.len().div_ceil(64) * std::mem::size_of::<u64>()
+    }
+}
+
+/// Lease accounting shared by every shard of a workspace: how many
+/// leases were granted, how many had to allocate fresh (the number the
+/// steady state drives to zero), and the live/peak bytes charged to
+/// outstanding leases.
+#[derive(Debug, Default)]
+pub struct ArenaStats {
+    leases_created: AtomicU64,
+    fresh_allocations: AtomicU64,
+    current_lease_bytes: AtomicUsize,
+    peak_lease_bytes: AtomicUsize,
+}
+
+/// One point-in-time read of an [`ArenaStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LeaseStatsSnapshot {
+    pub leases_created: u64,
+    pub fresh_allocations: u64,
+    pub current_lease_bytes: usize,
+    pub peak_lease_bytes: usize,
+}
+
+impl ArenaStats {
+    pub fn snapshot(&self) -> LeaseStatsSnapshot {
+        LeaseStatsSnapshot {
+            leases_created: self.leases_created.load(Ordering::Relaxed),
+            fresh_allocations: self.fresh_allocations.load(Ordering::Relaxed),
+            current_lease_bytes: self.current_lease_bytes.load(Ordering::Relaxed),
+            peak_lease_bytes: self.peak_lease_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    fn charge(&self, bytes: usize, fresh: bool) {
+        self.leases_created.fetch_add(1, Ordering::Relaxed);
+        if fresh {
+            self.fresh_allocations.fetch_add(1, Ordering::Relaxed);
+        }
+        let now = self
+            .current_lease_bytes
+            .fetch_add(bytes, Ordering::Relaxed)
+            .wrapping_add(bytes);
+        self.peak_lease_bytes.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn release(&self, bytes: usize) {
+        self.current_lease_bytes.fetch_sub(bytes, Ordering::Relaxed);
+    }
+}
+
+/// Retired buffers of one type: `(footprint, buffer)` pairs.
+type Shelf = Vec<(usize, Box<dyn Any + Send>)>;
+
+/// A shelf of retired scratch buffers, keyed by type.
+pub struct Arena {
+    shelves: Mutex<HashMap<TypeId, Shelf>>,
+    stats: Arc<ArenaStats>,
+}
+
+impl Arena {
+    /// Arena reporting into a shared stats sink (the workspace path).
+    pub fn new(stats: Arc<ArenaStats>) -> Self {
+        Arena {
+            shelves: Mutex::new(HashMap::new()),
+            stats,
+        }
+    }
+
+    /// Arena with its own private stats (tests and one-off callers).
+    pub fn standalone() -> Self {
+        Self::new(Arc::new(ArenaStats::default()))
+    }
+
+    /// The stats sink this arena charges leases to.
+    pub fn stats(&self) -> &ArenaStats {
+        &self.stats
+    }
+
+    /// Lease a cleared buffer dimensioned for `hint`. Reuses the
+    /// largest shelved buffer of the type if one exists (the biggest
+    /// retired buffer serves every smaller request, so a shrinking
+    /// V-cycle settles on one buffer per type); allocates fresh
+    /// otherwise. The buffer returns to this arena when the lease
+    /// drops.
+    pub fn lease<R: Reusable>(&self, hint: usize) -> Lease<'_, R> {
+        let (mut buf, fresh) = match self.take::<R>() {
+            Some(b) => (b, false),
+            None => (R::fresh(hint), true),
+        };
+        buf.ensure(hint);
+        let charged = buf.footprint();
+        self.stats.charge(charged, fresh);
+        Lease {
+            buf: Some(buf),
+            home: self,
+            charged,
+        }
+    }
+
+    fn take<R: Reusable>(&self) -> Option<R> {
+        let mut shelves = self.shelves.lock().unwrap_or_else(|p| p.into_inner());
+        let shelf = shelves.get_mut(&TypeId::of::<R>())?;
+        let best = shelf
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, (footprint, _))| *footprint)?
+            .0;
+        let (_, boxed) = shelf.swap_remove(best);
+        Some(*boxed.downcast::<R>().expect("shelf is keyed by TypeId"))
+    }
+
+    fn put_back<R: Reusable>(&self, buf: R, footprint: usize) {
+        let mut shelves = self.shelves.lock().unwrap_or_else(|p| p.into_inner());
+        shelves
+            .entry(TypeId::of::<R>())
+            .or_default()
+            .push((footprint, Box::new(buf)));
+    }
+}
+
+impl std::fmt::Debug for Arena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let shelves = self.shelves.lock().unwrap_or_else(|p| p.into_inner());
+        let shelved: usize = shelves.values().map(Vec::len).sum();
+        f.debug_struct("Arena").field("shelved", &shelved).finish()
+    }
+}
+
+/// An exclusive borrow of an arena buffer. Dereferences to the buffer;
+/// on drop the buffer is recycled (contents cleared, capacity kept)
+/// and shelved back in its home arena.
+pub struct Lease<'a, R: Reusable> {
+    buf: Option<R>,
+    home: &'a Arena,
+    charged: usize,
+}
+
+impl<R: Reusable> Deref for Lease<'_, R> {
+    type Target = R;
+
+    #[inline]
+    fn deref(&self) -> &R {
+        self.buf.as_ref().expect("lease buffer present until drop")
+    }
+}
+
+impl<R: Reusable> DerefMut for Lease<'_, R> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut R {
+        self.buf.as_mut().expect("lease buffer present until drop")
+    }
+}
+
+impl<R: Reusable> Drop for Lease<'_, R> {
+    fn drop(&mut self) {
+        if let Some(mut buf) = self.buf.take() {
+            buf.recycle();
+            let footprint = buf.footprint();
+            self.home.put_back(buf, footprint);
+            self.home.stats.release(self.charged);
+        }
+    }
+}
+
+/// Leased-or-owned scratch selection, for code paths that lease when a
+/// workspace is available and fall back to a plain buffer otherwise:
+///
+/// ```ignore
+/// let mut leased = arena.map(|a| a.lease::<Vec<u32>>(n));
+/// let mut owned = Vec::new();
+/// let buf = scratch(&mut leased, &mut owned);
+/// ```
+///
+/// Callers keep the fallback default-constructed (allocation-free) and
+/// size the chosen buffer afterwards, so nothing is allocated on the
+/// road not taken.
+#[inline]
+pub fn scratch<'a, R: Reusable>(
+    lease: &'a mut Option<Lease<'_, R>>,
+    fallback: &'a mut R,
+) -> &'a mut R {
+    match lease.as_mut() {
+        Some(l) => &mut **l,
+        None => fallback,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_reuses_capacity_but_never_contents() {
+        let arena = Arena::standalone();
+        let ptr;
+        {
+            let mut v: Lease<'_, Vec<u64>> = arena.lease(100);
+            assert!(v.is_empty());
+            assert!(v.capacity() >= 100);
+            v.push(7);
+            ptr = v.as_ptr();
+        }
+        // Second lease gets the same allocation back, cleared.
+        let v: Lease<'_, Vec<u64>> = arena.lease(50);
+        assert!(v.is_empty());
+        assert!(v.capacity() >= 100);
+        assert_eq!(v.as_ptr(), ptr);
+        let s = arena.stats().snapshot();
+        assert_eq!(s.leases_created, 2);
+        assert_eq!(s.fresh_allocations, 1);
+    }
+
+    #[test]
+    fn distinct_types_do_not_collide() {
+        let arena = Arena::standalone();
+        {
+            let mut a: Lease<'_, Vec<u32>> = arena.lease(8);
+            let mut b: Lease<'_, Vec<u64>> = arena.lease(8);
+            a.push(1);
+            b.push(2);
+        }
+        let a: Lease<'_, Vec<u32>> = arena.lease(4);
+        let b: Lease<'_, Vec<u64>> = arena.lease(4);
+        assert!(a.is_empty() && b.is_empty());
+        assert_eq!(arena.stats().snapshot().fresh_allocations, 2);
+    }
+
+    #[test]
+    fn largest_shelved_buffer_serves_first() {
+        let arena = Arena::standalone();
+        {
+            let _small: Lease<'_, Vec<u8>> = arena.lease(16);
+            let _large: Lease<'_, Vec<u8>> = arena.lease(4096);
+        }
+        let v: Lease<'_, Vec<u8>> = arena.lease(1);
+        assert!(v.capacity() >= 4096, "largest-first policy");
+    }
+
+    #[test]
+    fn fast_reset_and_bitvec_come_back_cleared() {
+        let arena = Arena::standalone();
+        {
+            let mut f: Lease<'_, FastResetArray<i64>> = arena.lease(10);
+            f.accumulate(3, 42);
+            let mut b: Lease<'_, BitVec> = arena.lease(70);
+            b.set(65, true);
+            let mut q: Lease<'_, VecDeque<u32>> = arena.lease(4);
+            q.push_back(9);
+        }
+        let f: Lease<'_, FastResetArray<i64>> = arena.lease(10);
+        assert!(!f.contains(3));
+        assert_eq!(f.get(3), 0);
+        let b: Lease<'_, BitVec> = arena.lease(70);
+        assert_eq!(b.len(), 70);
+        assert_eq!(b.count_ones(), 0);
+        let q: Lease<'_, VecDeque<u32>> = arena.lease(4);
+        assert!(q.is_empty());
+        assert_eq!(arena.stats().snapshot().fresh_allocations, 3);
+    }
+
+    #[test]
+    fn bitvec_lease_redimensions() {
+        let arena = Arena::standalone();
+        {
+            let _b: Lease<'_, BitVec> = arena.lease(256);
+        }
+        let b: Lease<'_, BitVec> = arena.lease(13);
+        assert_eq!(b.len(), 13);
+        assert_eq!(b.count_ones(), 0);
+    }
+
+    #[test]
+    fn hashmap_leases_and_scratch_helper() {
+        let arena = Arena::standalone();
+        {
+            let mut m: Lease<'_, HashMap<(u32, u32), usize>> = arena.lease(16);
+            m.insert((1, 2), 3);
+        }
+        let mut leased = Some(arena.lease::<HashMap<(u32, u32), usize>>(4));
+        let mut owned = HashMap::new();
+        let m = scratch(&mut leased, &mut owned);
+        assert!(m.is_empty(), "recycled leases hand back no contents");
+        drop(leased);
+        let mut none: Option<Lease<'_, Vec<u8>>> = None;
+        let mut owned_v = Vec::new();
+        scratch(&mut none, &mut owned_v).push(1u8);
+        assert_eq!(owned_v, vec![1]);
+    }
+
+    #[test]
+    fn stats_track_peak_and_release() {
+        let arena = Arena::standalone();
+        {
+            let _v: Lease<'_, Vec<u64>> = arena.lease(128);
+            let s = arena.stats().snapshot();
+            assert!(s.current_lease_bytes >= 128 * 8);
+            assert!(s.peak_lease_bytes >= s.current_lease_bytes);
+        }
+        let s = arena.stats().snapshot();
+        assert_eq!(s.current_lease_bytes, 0);
+        assert!(s.peak_lease_bytes >= 128 * 8);
+    }
+}

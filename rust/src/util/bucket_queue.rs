@@ -144,6 +144,53 @@ impl BucketQueue {
         self.max_bucket = 0;
         self.len = 0;
     }
+
+    /// Re-dimension to `n` elements with priorities in
+    /// `[-max_prio, max_prio]`, emptying the queue but reusing the
+    /// backing allocations (no allocation when capacities suffice) —
+    /// lets FM refinement keep one queue across passes and, via
+    /// `util::arena`, across calls.
+    pub fn reset(&mut self, n: usize, max_prio: i64) {
+        let nb = (2 * max_prio + 1) as usize;
+        self.buckets.clear();
+        self.buckets.resize(nb, NIL);
+        self.next.clear();
+        self.next.resize(n, NIL);
+        self.prev.clear();
+        self.prev.resize(n, NIL);
+        self.prio.clear();
+        self.prio.resize(n, i64::MIN);
+        self.max_prio = max_prio;
+        self.max_bucket = 0;
+        self.len = 0;
+    }
+}
+
+impl crate::util::arena::Reusable for BucketQueue {
+    fn fresh(hint: usize) -> Self {
+        BucketQueue::new(hint, 8)
+    }
+
+    fn recycle(&mut self) {
+        self.clear();
+    }
+
+    fn ensure(&mut self, hint: usize) {
+        // The gain bound is per-use state a single lease hint cannot
+        // carry, so lessees call `reset(n, max_prio)` right after
+        // leasing; here we only guarantee element capacity so that
+        // reset is allocation-free in the steady state.
+        if self.next.len() < hint {
+            let max_prio = self.max_prio;
+            self.reset(hint, max_prio);
+        }
+    }
+
+    fn footprint(&self) -> usize {
+        (self.buckets.capacity() + self.next.capacity() + self.prev.capacity())
+            * std::mem::size_of::<usize>()
+            + self.prio.capacity() * std::mem::size_of::<i64>()
+    }
 }
 
 #[cfg(test)]

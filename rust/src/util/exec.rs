@@ -25,6 +25,7 @@
 //! thread-count-invariance contract, and the seed derivation is pure.
 //! It only changes wall-clock and observability.
 
+use crate::partitioning::workspace::VcycleWorkspace;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::splitmix64;
 use std::collections::BTreeMap;
@@ -55,6 +56,7 @@ pub struct PhaseStat {
 pub struct ExecutionCtx {
     pool: Arc<ThreadPool>,
     stats: Mutex<BTreeMap<&'static str, PhaseStat>>,
+    workspace: VcycleWorkspace,
 }
 
 impl ExecutionCtx {
@@ -75,9 +77,11 @@ impl ExecutionCtx {
     /// Context wrapping an existing shared pool (the coordinator handoff
     /// path: one process pool through every phase).
     pub fn with_pool(pool: Arc<ThreadPool>) -> Self {
+        let workspace = VcycleWorkspace::new(pool.threads());
         ExecutionCtx {
             pool,
             stats: Mutex::new(BTreeMap::new()),
+            workspace,
         }
     }
 
@@ -91,6 +95,14 @@ impl ExecutionCtx {
     #[inline]
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// The reusable multilevel scratch pool shared by every phase on
+    /// this context — one arena shard per pool worker; leases hand out
+    /// cleared-but-capacitated buffers (see `partitioning::workspace`).
+    #[inline]
+    pub fn workspace(&self) -> &VcycleWorkspace {
+        &self.workspace
     }
 
     /// Accumulate `seconds` of wall-clock into the named phase.

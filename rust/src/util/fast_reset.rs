@@ -190,6 +190,15 @@ impl BitVec {
         self.words.fill(0);
     }
 
+    /// Re-dimension to `len` bits, all zero, reusing the word buffer's
+    /// capacity (no allocation when it suffices) — the arena-lease
+    /// re-dimension hook (`util::arena`).
+    pub fn reset_len(&mut self, len: usize) {
+        self.words.clear();
+        self.words.resize(len.div_ceil(64), 0);
+        self.len = len;
+    }
+
     pub fn count_ones(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }

@@ -5,6 +5,7 @@
 //! (`exec`) that hands one pool + per-phase RNG streams + a stats sink
 //! through every layer of the pipeline. All std-only (see DESIGN.md §3).
 
+pub mod arena;
 pub mod bucket_queue;
 pub mod error;
 pub mod exec;
@@ -16,6 +17,7 @@ pub mod rng;
 pub mod timer;
 pub mod union_find;
 
+pub use arena::{Arena, Lease};
 pub use bucket_queue::BucketQueue;
 pub use error::{Context, Error};
 pub use exec::ExecutionCtx;

@@ -1,0 +1,169 @@
+//! Steady-state allocation budget for the V-cycle workspace
+//! (`partitioning::workspace`): once a shared [`ExecutionCtx`] has run
+//! one cold partition, every later run on the same context must lease
+//! all of its scratch from the warm arena — **zero** fresh scratch
+//! allocations — and its total heap traffic must drop below the cold
+//! run's. Measured two ways at once: exactly, via the workspace's own
+//! `fresh_allocations` counter, and end-to-end, via a counting
+//! `#[global_allocator]` wrapped around `System`.
+//!
+//! The tests share one process-global allocator, so they serialize on a
+//! mutex; assertions on the global counters use the cold run as their
+//! own baseline (ratios, not absolutes) to stay robust against harness
+//! noise, while the arena counters — private to each test's context —
+//! are asserted exactly.
+
+use sclap::coordinator::service::Coordinator;
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::partitioning::multilevel::MultilevelPartitioner;
+use sclap::util::exec::ExecutionCtx;
+use sclap::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// Counts allocation events and requested bytes; frees are not tracked
+/// (the budget is about *new* heap traffic, not residency).
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// One test at a time: the allocator counters are process-global.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Run `f` and return (result, allocation calls, allocated bytes).
+fn measure<R>(f: impl FnOnce() -> R) -> (R, u64, u64) {
+    let calls0 = ALLOC_CALLS.load(Ordering::Relaxed);
+    let bytes0 = ALLOC_BYTES.load(Ordering::Relaxed);
+    let r = f();
+    let calls = ALLOC_CALLS.load(Ordering::Relaxed) - calls0;
+    let bytes = ALLOC_BYTES.load(Ordering::Relaxed) - bytes0;
+    (r, calls, bytes)
+}
+
+fn instance() -> sclap::graph::csr::Graph {
+    let mut rng = Rng::new(1);
+    sclap::generators::lfr::lfr_like(1200, 6.0, 0.15, &mut rng).0
+}
+
+/// A V-cycled partitioner on a shared context: the first run stocks the
+/// arena; from then on every cycle of every run leases warm buffers.
+#[test]
+fn steady_state_vcycle_reuses_scratch() {
+    let _serial = SERIAL.lock().unwrap_or_else(PoisonError::into_inner);
+    let g = instance();
+    let ctx = Arc::new(ExecutionCtx::new(2));
+    let mut config = PartitionConfig::preset(Preset::CFast, 4);
+    config.vcycles = 3;
+    let partitioner = MultilevelPartitioner::with_ctx(config, ctx.clone());
+
+    let s0 = ctx.workspace().stats();
+    let (cold, cold_calls, cold_bytes) = measure(|| partitioner.partition(&g, 42));
+    let s1 = ctx.workspace().stats();
+    assert!(
+        s1.leases_created > s0.leases_created,
+        "the V-cycle pipeline never touched the workspace"
+    );
+    assert!(
+        s1.fresh_allocations > s0.fresh_allocations,
+        "a cold arena must allocate its shelves"
+    );
+
+    let (warm, warm_calls, warm_bytes) = measure(|| partitioner.partition(&g, 42));
+    let s2 = ctx.workspace().stats();
+
+    // Reuse must be invisible in results: leases hand back capacity,
+    // never contents.
+    assert_eq!(cold.metrics.cut, warm.metrics.cut);
+    assert_eq!(cold.partition.blocks, warm.partition.blocks);
+
+    // The steady-state budget, exact: the warm run leased scratch
+    // (plenty of it) and fresh-allocated none.
+    assert!(s2.leases_created > s1.leases_created);
+    assert_eq!(
+        s2.fresh_allocations, s1.fresh_allocations,
+        "warm V-cycle run fresh-allocated scratch buffers"
+    );
+
+    // End to end the warm run must be strictly cheaper — it skips every
+    // O(n) scratch allocation the cold run paid for.
+    assert!(
+        warm_bytes < cold_bytes,
+        "warm run allocated {warm_bytes} bytes vs cold {cold_bytes}"
+    );
+    assert!(
+        warm_calls <= cold_calls,
+        "warm run made {warm_calls} allocations vs cold {cold_calls}"
+    );
+    // Backstop: if lease reuse silently broke, per-round scratch would
+    // add O(levels x rounds x buffers) allocations and blow this cap.
+    assert!(
+        warm_calls < 50_000,
+        "warm V-cycle run made {warm_calls} allocations"
+    );
+}
+
+/// Serve-style steady state: repeated aggregate requests on one
+/// coordinator context. After the first request the arena is warm for
+/// every later one — including across *different* seeds, because leases
+/// are sized by capacity, not content.
+#[test]
+fn warm_repeated_requests_fresh_allocate_nothing() {
+    let _serial = SERIAL.lock().unwrap_or_else(PoisonError::into_inner);
+    let g = Arc::new(instance());
+    let ctx = Arc::new(ExecutionCtx::new(1));
+    let coordinator = Coordinator::with_ctx(ctx.clone());
+    let config = PartitionConfig::preset(Preset::CFast, 4);
+    let seeds = [3u64, 4, 5];
+
+    let (cold_agg, _cold_calls, cold_bytes) =
+        measure(|| coordinator.partition_repeated(g.clone(), &config, &seeds));
+    let s1 = ctx.workspace().stats();
+
+    let (warm_agg, _warm_calls, warm_bytes) =
+        measure(|| coordinator.partition_repeated(g.clone(), &config, &seeds));
+    let s2 = ctx.workspace().stats();
+
+    assert_eq!(cold_agg.best_cut, warm_agg.best_cut);
+    assert_eq!(cold_agg.avg_cut, warm_agg.avg_cut);
+
+    assert!(s2.leases_created > s1.leases_created);
+    assert_eq!(
+        s2.fresh_allocations, s1.fresh_allocations,
+        "warm repeated request fresh-allocated scratch buffers"
+    );
+    assert!(
+        warm_bytes < cold_bytes,
+        "warm request allocated {warm_bytes} bytes vs cold {cold_bytes}"
+    );
+
+    // A third round must hold the line too (no slow leak of fresh
+    // allocations as requests repeat).
+    let (_, _, third_bytes) =
+        measure(|| coordinator.partition_repeated(g.clone(), &config, &seeds));
+    let s3 = ctx.workspace().stats();
+    assert_eq!(s3.fresh_allocations, s2.fresh_allocations);
+    assert!(third_bytes < cold_bytes);
+}
