@@ -40,6 +40,7 @@
 
 use crate::clustering::label_propagation::{build_order_into, Clustering, LpaConfig, LpaMode};
 use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::obs::trace;
 use crate::util::exec::{derive_seed, ExecutionCtx};
 use crate::util::fast_reset::FastResetArray;
 use crate::util::rng::Rng;
@@ -246,6 +247,12 @@ pub fn parallel_async_sclap(
             }
         }
         debug_assert!(cluster_weight.iter().all(|&w| w <= upper_bound));
+        // Driver-thread emission after the class barrier: deterministic
+        // for any pool size (the apply order above already is).
+        trace::counter(
+            "async_lpa_round",
+            &[("round", rounds as i64), ("moved", moved as i64)],
+        );
         if (moved as f64) < config.convergence_fraction * n as f64 {
             break;
         }

@@ -63,6 +63,7 @@
 use crate::clustering::label_propagation::{Clustering, LpaConfig, LpaMode};
 use crate::graph::csr::{NodeId, Weight};
 use crate::graph::store::{GraphStore, ShardView};
+use crate::obs::trace;
 use crate::partitioning::workspace::VcycleWorkspace;
 use crate::util::exec::{derive_seed, ExecutionCtx};
 use crate::util::pool::{DisjointSlice, ThreadPool};
@@ -234,6 +235,10 @@ pub fn external_sclap(
         debug_assert!(
             config.mode == LpaMode::Refinement
                 || cluster_weight.iter().all(|&w| w <= upper_bound)
+        );
+        trace::counter(
+            "external_lpa_round",
+            &[("round", rounds as i64), ("moved", changed as i64)],
         );
         if (changed as f64) < config.convergence_fraction * n as f64 {
             break;

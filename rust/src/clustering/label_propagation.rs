@@ -18,6 +18,7 @@
 //! cut edges are never contracted).
 
 use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::obs::trace;
 use crate::partitioning::workspace::VcycleWorkspace;
 use crate::util::arena::scratch;
 use crate::util::fast_reset::{BitVec, FastResetArray};
@@ -294,6 +295,10 @@ pub fn size_constrained_lpa_ws(
                     }
                 }
             }
+            trace::counter(
+                "lpa_round",
+                &[("round", rounds as i64), ("moved", changed as i64)],
+            );
             std::mem::swap(current, next);
             std::mem::swap(in_current, in_next);
             if (changed as f64) < config.convergence_fraction * n as f64 {
@@ -321,6 +326,10 @@ pub fn size_constrained_lpa_ws(
                     changed += 1;
                 }
             }
+            trace::counter(
+                "lpa_round",
+                &[("round", rounds as i64), ("moved", changed as i64)],
+            );
             if (changed as f64) < config.convergence_fraction * n as f64 {
                 break;
             }

@@ -18,6 +18,7 @@
 //! this.
 
 use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::obs::trace;
 use crate::partitioning::workspace::VcycleWorkspace;
 use crate::util::exec::ExecutionCtx;
 use crate::util::fast_reset::FastResetArray;
@@ -273,7 +274,7 @@ pub fn parallel_sclap(
     let mut cluster_weight = ctx.workspace().caller().lease::<Vec<Weight>>(n);
     cluster_weight.extend_from_slice(g.node_weights());
 
-    for _round in 0..max_iterations {
+    for round in 0..max_iterations {
         let round_seed = rng.next_u64();
         let applied = synchronous_round(
             g,
@@ -287,6 +288,12 @@ pub fn parallel_sclap(
             round_seed,
         );
         debug_assert!(cluster_weight.iter().all(|&w| w <= upper_bound));
+        // Emitted on the driver thread, after the synchronous round's
+        // barrier — deterministic for any pool size.
+        trace::counter(
+            "parallel_lpa_round",
+            &[("round", round as i64), ("moved", applied as i64)],
+        );
         if (applied as f64) < 0.05 * n as f64 {
             break;
         }

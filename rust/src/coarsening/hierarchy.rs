@@ -12,6 +12,7 @@ use crate::clustering::label_propagation::{size_constrained_lpa_ws, Clustering, 
 use crate::coarsening::contract::{contract_with_ctx, Contraction};
 use crate::coarsening::matching::heavy_edge_matching;
 use crate::graph::csr::{Graph, Weight};
+use crate::obs::trace;
 use crate::util::exec::ExecutionCtx;
 use crate::util::rng::Rng;
 use std::sync::Arc;
@@ -203,12 +204,26 @@ pub fn coarsen(
         if current.n() <= threshold || levels.len() >= params.max_levels {
             break;
         }
+        let level_span = trace::span(
+            "coarsen_level",
+            &[("level", levels.len() as i64), ("n", current.n() as i64)],
+        );
         let clustering = cluster_once(current, params, partition.as_deref(), rng);
         if clustering.num_clusters as f64 > params.min_shrink * current.n() as f64 {
-            break; // stalled
+            break; // stalled (span guard closes the open level)
         }
         let Contraction { coarse, map } =
             contract_with_ctx(current, &clustering, params.ctx.as_deref());
+        drop(level_span);
+        trace::counter(
+            "contraction",
+            &[
+                ("level", levels.len() as i64),
+                ("clusters", clustering.num_clusters as i64),
+                ("coarse_n", coarse.n() as i64),
+                ("coarse_m", coarse.m() as i64),
+            ],
+        );
         // Project the partition: every cluster is inside one block.
         partition = partition.map(|p| {
             let mut coarse_part = vec![u32::MAX; coarse.n()];

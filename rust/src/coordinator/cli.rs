@@ -47,12 +47,13 @@ pub const COMMANDS: &[CommandSpec] = &[
             "workers",
             "memory-budget",
             "output",
+            "trace",
         ],
         flag_keys: &["parallel-coarsening", "parallel-refinement"],
     },
     CommandSpec {
         name: "serve",
-        value_keys: &["requests", "workers", "max-pending", "listen", "cache"],
+        value_keys: &["requests", "workers", "max-pending", "listen", "cache", "trace"],
         flag_keys: &["timing"],
     },
     CommandSpec {

@@ -53,6 +53,7 @@ use crate::coordinator::queue::{
 use crate::coordinator::service::Aggregate;
 use crate::graph::csr::Graph;
 use crate::graph::store::{meta_stamp, store_fingerprints, InMemoryStore, MetaStamp, ShardedStore};
+use crate::obs::metrics::Counter;
 use crate::partitioning::config::PartitionConfig;
 use crate::util::exec::ExecutionCtx;
 use std::collections::HashMap;
@@ -338,6 +339,20 @@ pub struct Admission {
     kind: AdmissionKind,
 }
 
+/// Registry mirrors of [`CacheStats`]: the same monotonic tallies,
+/// exported through the context's
+/// [`MetricsRegistry`](crate::obs::metrics::MetricsRegistry) so the
+/// wire `!stats` command sees them without reaching into the cache.
+/// Handles are resolved once at construction and updated lock-free at
+/// the same points the struct fields are bumped under the map lock.
+struct CacheCounters {
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    joined: Arc<Counter>,
+    uncached: Arc<Counter>,
+    evictions: Arc<Counter>,
+}
+
 /// A [`BatchService`] behind a content-addressed single-flight LRU
 /// result cache. See the module docs for the model.
 pub struct CachedService {
@@ -345,6 +360,7 @@ pub struct CachedService {
     capacity: usize,
     map: Arc<Mutex<CacheMap>>,
     fp_memo: Mutex<FingerprintMemo>,
+    counters: CacheCounters,
 }
 
 impl CachedService {
@@ -360,6 +376,14 @@ impl CachedService {
     }
 
     fn wrap(service: BatchService, cache_entries: usize) -> Self {
+        let registry = service.ctx().metrics();
+        let counters = CacheCounters {
+            hits: registry.counter("cache_hits"),
+            misses: registry.counter("cache_misses"),
+            joined: registry.counter("cache_joined"),
+            uncached: registry.counter("cache_uncached"),
+            evictions: registry.counter("cache_evictions"),
+        };
         CachedService {
             service,
             capacity: cache_entries,
@@ -369,6 +393,7 @@ impl CachedService {
                 stats: CacheStats::default(),
             })),
             fp_memo: Mutex::new(FingerprintMemo::default()),
+            counters,
         }
     }
 
@@ -422,6 +447,7 @@ impl CachedService {
     pub fn admit(&self, request: Request, block: bool) -> Result<Admission, ServeError> {
         if self.capacity == 0 {
             lock_map(&self.map).stats.uncached += 1;
+            self.counters.uncached.inc();
             let ticket = self.submit(request, block)?;
             return Ok(Admission {
                 kind: AdmissionKind::Bypass(ticket),
@@ -433,6 +459,7 @@ impl CachedService {
             // with the real I/O error, and nothing is cached.
             Err(_) => {
                 lock_map(&self.map).stats.uncached += 1;
+                self.counters.uncached.inc();
                 let ticket = self.submit(request, block)?;
                 return Ok(Admission {
                     kind: AdmissionKind::Bypass(ticket),
@@ -459,6 +486,7 @@ impl CachedService {
                         let agg = agg.clone();
                         drop(state);
                         map.stats.hits += 1;
+                        self.counters.hits.inc();
                         return Ok(Admission {
                             kind: AdmissionKind::Hit(agg),
                         });
@@ -466,6 +494,7 @@ impl CachedService {
                     SlotState::Pending => {
                         drop(state);
                         map.stats.joined += 1;
+                        self.counters.joined.inc();
                         return Ok(Admission {
                             kind: AdmissionKind::Join(slot),
                         });
@@ -477,6 +506,7 @@ impl CachedService {
             }
             let slot = Slot::pending();
             map.stats.misses += 1;
+            self.counters.misses.inc();
             map.entries.insert(
                 key.clone(),
                 CacheEntry {
@@ -597,6 +627,7 @@ impl CachedService {
                 .expect("resolved set is non-empty");
             map.entries.remove(&victim);
             map.stats.evictions += 1;
+            self.counters.evictions.inc();
         }
     }
 

@@ -127,7 +127,7 @@ impl NetClient {
 pub struct Response {
     /// The echoed request id (control responses have none).
     pub id: Option<String>,
-    /// `ok`, `error`, `busy`, `pong`, or `shutdown`.
+    /// `ok`, `error`, `busy`, `pong`, `stats`, or `shutdown`.
     pub status: String,
     /// Whether the result came from the content-addressed cache.
     pub cached: bool,
@@ -223,6 +223,15 @@ pub fn parse_response(line: &str) -> Result<Response, String> {
             }
         }
         "pong" | "shutdown" => {}
+        "stats" => {
+            // The introspection snapshot: the registry sections must be
+            // present (objects/arrays render even when empty).
+            for field in ["uptime_seconds", "counters", "gauges", "histograms", "phases"] {
+                if json.get(field).is_none() {
+                    return Err(format!("stats response missing \"{field}\""));
+                }
+            }
+        }
         other => return Err(format!("unknown response status {other:?}")),
     }
     Ok(Response {
@@ -250,6 +259,16 @@ mod tests {
         assert_eq!(r.best_cut(), Some(10));
         let cached_line = line.replace("}", ",\"cached\":true}");
         assert!(parse_response(&cached_line).unwrap().cached);
+    }
+
+    #[test]
+    fn validates_stats_lines() {
+        let line = "{\"status\":\"stats\",\"uptime_seconds\":1.234,\"connection\":1,\
+                    \"connection_requests\":3,\"counters\":{\"cache_hits\":2},\"gauges\":{},\
+                    \"histograms\":{},\"phases\":[]}";
+        let r = parse_response(line).unwrap();
+        assert_eq!(r.status, "stats");
+        assert!(parse_response("{\"status\":\"stats\"}").is_err());
     }
 
     #[test]

@@ -31,7 +31,21 @@
 //!   per-connection default `c<conn>-req<line>`.
 //! - a *blank line or `#` comment* — skipped, exactly as on stdin.
 //! - a *control command* starting with `!`:
-//!   - `!ping` → `{"status":"pong"}` (liveness),
+//!   - `!ping` → `{"status":"pong","version":"…","uptime_seconds":…}`
+//!     (liveness, the crate version, and seconds since the service
+//!     registry was created — the same clock `!stats` reports),
+//!   - `!stats` → one JSON line introspecting the live server:
+//!     `{"status":"stats","uptime_seconds":…,"connection":N,
+//!     "connection_requests":N,"counters":{…},"gauges":{…},
+//!     "histograms":{…},"phases":[…]}` — the whole
+//!     [`MetricsRegistry`](crate::obs::metrics::MetricsRegistry) of the
+//!     service context (cache hits/misses/joins, queue depth and busy
+//!     rejections, scheduler waves, arena lease gauges, per-phase
+//!     wall-clock), rendered in sorted name order. `connection` /
+//!     `connection_requests` identify the asking connection and count
+//!     its submitted request lines (control commands excluded).
+//!     Histograms render as `{"count":…,"sum":…,"buckets":[[i,c],…]}`
+//!     over log₂ bins (`obs::metrics::bucket_index`),
 //!   - `!shutdown` → `{"status":"shutdown"}`, then graceful
 //!     drain-then-close of the whole server (below).
 //!
@@ -74,7 +88,11 @@
 //! response rendering contains only deterministic fields, and the
 //! cache returns the byte-identical [`Aggregate`]. The only observable
 //! cache effect is the `"cached":true` marker (`rust/tests/net_service.rs`;
-//! CI `net-smoke`).
+//! CI `net-smoke`). Observability rides along without weakening this:
+//! `serve --listen --trace FILE` records structured spans of every
+//! repetition and writes a Chrome `trace_event` file at shutdown, and
+//! `!stats` snapshots the metrics registry — neither changes a single
+//! response byte (`rust/tests/observability.rs`).
 //!
 //! # Cache key
 //!

@@ -8,6 +8,7 @@ use crate::coordinator::queue::spec::{
 };
 use crate::coordinator::queue::{GraphHandle, Request, ServiceConfig};
 use crate::graph::csr::Graph;
+use crate::obs::trace::Tracer;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -29,6 +30,12 @@ pub struct NetServerConfig {
     /// Emit wall-clock fields in result lines (nondeterministic —
     /// off by default so responses are byte-reproducible).
     pub timing: bool,
+    /// Collect a structured trace of every partitioning phase and
+    /// write it (Chrome `trace_event` JSON) here when the accept loop
+    /// exits. `None` keeps tracing disabled — the zero-cost default.
+    /// Tracing never changes responses or partitions (the crate-wide
+    /// observability invariant, pinned in `tests/observability.rs`).
+    pub trace: Option<PathBuf>,
 }
 
 impl Default for NetServerConfig {
@@ -38,6 +45,7 @@ impl Default for NetServerConfig {
             max_pending: 16,
             cache_entries: 64,
             timing: false,
+            trace: None,
         }
     }
 }
@@ -184,6 +192,9 @@ impl NetServerHandle {
 pub struct NetServer {
     listener: TcpListener,
     shared: Arc<ServerShared>,
+    /// Installed tracer and its output path; the trace file is written
+    /// once, after the accept loop has fully drained.
+    trace: Option<(PathBuf, Arc<Tracer>)>,
 }
 
 impl NetServer {
@@ -201,8 +212,14 @@ impl NetServer {
             },
             config.cache_entries,
         );
+        let trace = config.trace.map(|path| {
+            let tracer = Arc::new(Tracer::new());
+            service.service().ctx().set_tracer(tracer.clone());
+            (path, tracer)
+        });
         Ok(NetServer {
             listener,
+            trace,
             shared: Arc::new(ServerShared {
                 service,
                 catalog: GraphCatalog::new(),
@@ -265,6 +282,12 @@ impl NetServer {
         for h in handlers {
             let _ = h.join();
         }
+        // Every connection has drained, so every traced repetition has
+        // flushed its span buffer: write the trace file now, before the
+        // shared service is dropped.
+        if let Some((path, tracer)) = &self.trace {
+            tracer.write_chrome_trace_file(path)?;
+        }
         // Dropping the shared service drains anything still queued.
         Ok(())
     }
@@ -285,6 +308,13 @@ fn handle_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usi
     } else {
         return;
     }
+    shared
+        .service
+        .service()
+        .ctx()
+        .metrics()
+        .counter("net_connections")
+        .inc();
     serve_connection(shared, stream, conn_id);
     let mut conns = shared.conns.lock().unwrap_or_else(|p| p.into_inner());
     conns.remove(&conn_id);
@@ -298,6 +328,9 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
     let writer = std::thread::spawn(move || writer_loop(stream, &rx));
     let mut waiters: Vec<JoinHandle<()>> = Vec::new();
     let reader = BufReader::new(read_half);
+    // Request lines this connection has submitted (control commands and
+    // comments excluded) — reported by `!stats` as `connection_requests`.
+    let mut conn_requests = 0u64;
     for (idx, line) in reader.lines().enumerate() {
         let Ok(line) = line else { break };
         let trimmed = line.trim();
@@ -308,7 +341,40 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
         if let Some(command) = trimmed.strip_prefix('!') {
             match command.trim() {
                 "ping" => {
-                    let _ = tx.send("{\"status\":\"pong\"}".to_string());
+                    let registry = shared.service.service().ctx().metrics();
+                    let _ = tx.send(format!(
+                        "{{\"status\":\"pong\",\"version\":\"{}\",\"uptime_seconds\":{:.3}}}",
+                        env!("CARGO_PKG_VERSION"),
+                        registry.uptime_seconds()
+                    ));
+                }
+                "stats" => {
+                    // Snapshot the whole registry as one JSON line. The
+                    // arena gauges are set here, at snapshot time — the
+                    // workspace keeps its own atomics; the registry view
+                    // is refreshed on demand rather than double-counted.
+                    let ctx = shared.service.service().ctx();
+                    let registry = ctx.metrics();
+                    let lease = ctx.workspace().stats();
+                    registry
+                        .gauge("arena_leases_created")
+                        .set(lease.leases_created as i64);
+                    registry
+                        .gauge("arena_fresh_allocations")
+                        .set(lease.fresh_allocations as i64);
+                    registry
+                        .gauge("arena_current_lease_bytes")
+                        .set(lease.current_lease_bytes as i64);
+                    registry
+                        .gauge("arena_peak_lease_bytes")
+                        .set(lease.peak_lease_bytes as i64);
+                    let _ = tx.send(format!(
+                        "{{\"status\":\"stats\",\"uptime_seconds\":{:.3},\
+                         \"connection\":{conn_id},\
+                         \"connection_requests\":{conn_requests},{}}}",
+                        registry.uptime_seconds(),
+                        registry.render_json_fields()
+                    ));
                 }
                 "shutdown" => {
                     let _ = tx.send("{\"status\":\"shutdown\"}".to_string());
@@ -325,6 +391,14 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
             }
             continue;
         }
+        conn_requests += 1;
+        shared
+            .service
+            .service()
+            .ctx()
+            .metrics()
+            .counter("net_requests")
+            .inc();
         let default_id = format!("c{conn_id}-req{}", idx + 1);
         let spec = match parse_request_line(trimmed, &default_id) {
             Ok(Some(spec)) => spec,

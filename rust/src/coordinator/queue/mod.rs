@@ -260,8 +260,11 @@ impl BatchService {
     }
 
     fn submit_inner(&self, request: Request, block: bool) -> Result<Ticket, SubmitError> {
+        let metrics = self.ctx.metrics();
         let (tx, rx) = mpsc::channel();
         let id = request.id.clone();
+        let wait_start = std::time::Instant::now();
+        let mut waited = false;
         let mut st = lock(&self.shared.state);
         loop {
             if st.shutting_down {
@@ -271,15 +274,24 @@ impl BatchService {
                 break;
             }
             if !block {
+                metrics.counter("queue_busy_rejections").inc();
                 return Err(SubmitError::Busy);
             }
+            waited = true;
             st = self
                 .shared
                 .not_full
                 .wait(st)
                 .unwrap_or_else(|p| p.into_inner());
         }
+        if waited {
+            metrics
+                .histogram("queue_wait_us")
+                .observe(wait_start.elapsed().as_micros() as u64);
+        }
         st.pending.push_back((request, tx));
+        metrics.counter("queue_submitted").inc();
+        metrics.gauge("queue_depth").set(st.pending.len() as i64);
         drop(st);
         self.shared.not_empty.notify_all();
         Ok(Ticket { id, rx })

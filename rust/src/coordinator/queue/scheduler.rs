@@ -8,6 +8,7 @@ use super::{lock, GraphHandle, QueueShared, Reply, Request, RequestError};
 use crate::coordinator::service::{run_repetition, Aggregate, RunOutcome};
 use crate::graph::csr::Graph;
 use crate::graph::store::{InMemoryStore, ShardedStore};
+use crate::obs::metrics::MetricsRegistry;
 use crate::partitioning::config::PartitionConfig;
 use crate::partitioning::external::partition_store_with_ctx;
 use crate::util::exec::ExecutionCtx;
@@ -89,6 +90,13 @@ struct Unit {
 /// The scheduler thread body: intake → wave → record → reap, until
 /// shutdown has drained everything.
 pub(super) fn scheduler_loop(shared: &Arc<QueueShared>, ctx: &Arc<ExecutionCtx>) {
+    let metrics = ctx.metrics().clone();
+    // Instrument handles resolved once; the loop updates them lock-free.
+    let activated = metrics.counter("requests_activated");
+    let waves = metrics.counter("scheduler_waves");
+    let repetitions = metrics.counter("scheduler_repetitions");
+    let wave_size = metrics.histogram("scheduler_wave_size");
+    let depth = metrics.gauge("queue_depth");
     let mut active: Vec<ActiveRequest> = Vec::new();
     // Rotating fairness offset: each wave starts its round-robin one
     // request further along, so even a 1-wide wave (workers = 1) — or
@@ -117,6 +125,7 @@ pub(super) fn scheduler_loop(shared: &Arc<QueueShared>, ctx: &Arc<ExecutionCtx>)
             if !st.paused || st.shutting_down {
                 let drained: Vec<_> = st.pending.drain(..).collect();
                 if !drained.is_empty() {
+                    depth.set(st.pending.len() as i64);
                     shared.not_full.notify_all();
                 }
                 drained
@@ -124,12 +133,13 @@ pub(super) fn scheduler_loop(shared: &Arc<QueueShared>, ctx: &Arc<ExecutionCtx>)
                 Vec::new()
             }
         };
+        activated.add(newly.len() as u64);
         for (req, reply) in newly {
             active.push(ActiveRequest::activate(req, reply));
         }
         // Activation failures (unopenable shard dir, no seeds) reply
         // immediately, before any wave is spent on them.
-        reap(&mut active);
+        reap(&mut active, &metrics);
         if active.is_empty() {
             continue;
         }
@@ -137,6 +147,9 @@ pub(super) fn scheduler_loop(shared: &Arc<QueueShared>, ctx: &Arc<ExecutionCtx>)
         // One wave of repetitions, interleaved across requests.
         let wave = build_wave(&active, ctx.threads().max(1), rotate % active.len());
         rotate = rotate.wrapping_add(1);
+        waves.inc();
+        repetitions.add(wave.len() as u64);
+        wave_size.observe(wave.len() as u64);
         let units: Vec<Unit> = wave
             .iter()
             .map(|&(ri, si)| Unit {
@@ -163,7 +176,7 @@ pub(super) fn scheduler_loop(shared: &Arc<QueueShared>, ctx: &Arc<ExecutionCtx>)
                 }
             }
         }
-        reap(&mut active);
+        reap(&mut active, &metrics);
     }
 }
 
@@ -255,9 +268,10 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 /// Reply to and drop every finished request: failed ones with their
 /// error, completed ones with an [`Aggregate`] over the seed-ordered
 /// runs. A dropped ticket (client gone) is not an error.
-fn reap(active: &mut Vec<ActiveRequest>) {
+fn reap(active: &mut Vec<ActiveRequest>, metrics: &MetricsRegistry) {
     active.retain_mut(|a| {
         if let Some(message) = a.failed.take() {
+            metrics.counter("requests_failed").inc();
             let _ = a.reply.send(Err(RequestError {
                 id: a.id.clone(),
                 message,
@@ -270,6 +284,7 @@ fn reap(active: &mut Vec<ActiveRequest>) {
                 .drain(..)
                 .map(|r| r.expect("all slots filled"))
                 .collect();
+            metrics.counter("requests_completed").inc();
             let _ = a.reply.send(Ok(Aggregate::from_runs(runs)));
             return false;
         }

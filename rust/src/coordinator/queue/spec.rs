@@ -280,6 +280,16 @@ pub fn render_result_line_full(
     );
     if timing {
         line.push_str(&format!(",\"avg_seconds\":{}", agg.avg_seconds));
+        // Per-phase wall-clock breakdown (summed across the request's
+        // repetitions). Names and order are deterministic — only the
+        // seconds vary — and like every timing field it is gated so the
+        // default line stays byte-reproducible.
+        let phases: Vec<String> = agg
+            .phase_seconds
+            .iter()
+            .map(|(name, s)| format!("{{\"name\":\"{name}\",\"seconds\":{s:.6}}}"))
+            .collect();
+        line.push_str(&format!(",\"phases\":[{}]", phases.join(",")));
         if let Some((leases_created, peak_lease_bytes)) = workspace {
             line.push_str(&format!(
                 ",\"leases_created\":{leases_created},\"peak_lease_bytes\":{peak_lease_bytes}"
@@ -405,6 +415,12 @@ mod tests {
             levels: 1,
             coarsest_n: 4,
             blocks: vec![0, 1, 0, 1],
+            // Exact binary fractions so the summed rendering is stable.
+            phase_seconds: vec![
+                ("coarsening", 0.25),
+                ("initial", 0.125),
+                ("uncoarsening", 0.5),
+            ],
         };
         Aggregate::from_runs(vec![mk(2, 30), mk(1, 10)])
     }
@@ -419,9 +435,21 @@ mod tests {
         assert!(line.contains("\"best_cut\":10"), "{line}");
         assert!(line.contains("\"avg_cut\":20"), "{line}");
         assert!(!line.contains("avg_seconds"), "{line}");
+        assert!(!line.contains("phases"), "{line}");
         assert_eq!(line, render_result_line("r\"1\"", &agg, false));
-        // timing is opt-in (and the only nondeterministic field)
-        assert!(render_result_line("x", &agg, true).contains("avg_seconds"));
+        // timing is opt-in (and the only nondeterministic field set)
+        let timed = render_result_line("x", &agg, true);
+        assert!(timed.contains("avg_seconds"), "{timed}");
+        // phases ride the timing gate: fixed names/order, summed across
+        // the two runs (0.25+0.25, 0.125+0.125, 0.5+0.5)
+        assert!(
+            timed.contains(
+                ",\"phases\":[{\"name\":\"coarsening\",\"seconds\":0.500000},\
+                 {\"name\":\"initial\",\"seconds\":0.250000},\
+                 {\"name\":\"uncoarsening\",\"seconds\":1.000000}]"
+            ),
+            "{timed}"
+        );
     }
 
     #[test]

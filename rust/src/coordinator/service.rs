@@ -43,6 +43,12 @@ pub struct RunOutcome {
     pub levels: usize,
     pub coarsest_n: usize,
     pub blocks: Vec<u32>,
+    /// Per-phase wall-clock of this repetition, in pipeline order.
+    /// In-memory runs report `coarsening`/`initial`/`uncoarsening`;
+    /// out-of-core runs report `external` (streaming phases) plus
+    /// `in_memory` (the handed-off pipeline). The names and their
+    /// order are deterministic; only the seconds vary.
+    pub phase_seconds: Vec<(&'static str, f64)>,
 }
 
 impl RunOutcome {
@@ -57,6 +63,11 @@ impl RunOutcome {
             levels: r.levels,
             coarsest_n: r.coarsest_n,
             blocks: r.partition.blocks.clone(),
+            phase_seconds: vec![
+                ("coarsening", r.coarsening_seconds),
+                ("initial", r.initial_seconds),
+                ("uncoarsening", r.uncoarsening_seconds),
+            ],
         }
     }
 
@@ -64,8 +75,9 @@ impl RunOutcome {
     /// path). The external driver does not track an initial cut, so
     /// `initial_cut` reports 0; `levels` carries the external level
     /// count and `coarsest_n` the size of the graph handed to the
-    /// in-memory pipeline. All fields except `seconds` are
-    /// deterministic for a fixed (store, config, seed).
+    /// in-memory pipeline. All fields except `seconds` and
+    /// `phase_seconds` are deterministic for a fixed (store, config,
+    /// seed).
     pub fn from_out_of_core(
         seed: u64,
         r: &crate::partitioning::external::OutOfCoreResult,
@@ -80,6 +92,10 @@ impl RunOutcome {
             levels: r.external_levels,
             coarsest_n: r.handoff_n,
             blocks: r.blocks.clone(),
+            phase_seconds: vec![
+                ("external", r.external_seconds),
+                ("in_memory", (r.seconds - r.external_seconds).max(0.0)),
+            ],
         }
     }
 }
@@ -112,6 +128,10 @@ pub struct Aggregate {
     pub infeasible_runs: usize,
     /// Blocks of the best run.
     pub best_blocks: Vec<u32>,
+    /// Total seconds per phase name, summed across runs in the fixed
+    /// per-run phase order (first-seen order over seed-sorted runs —
+    /// deterministic names/order, wall-clock values).
+    pub phase_seconds: Vec<(&'static str, f64)>,
 }
 
 impl Aggregate {
@@ -121,10 +141,17 @@ impl Aggregate {
         let mut cut = Stats::new();
         let mut secs = Stats::new();
         let mut init = Stats::new();
+        let mut phase_seconds: Vec<(&'static str, f64)> = Vec::new();
         for r in &runs {
             cut.add(r.cut as f64);
             secs.add(r.seconds);
             init.add(r.initial_cut as f64);
+            for &(name, s) in &r.phase_seconds {
+                match phase_seconds.iter_mut().find(|(n, _)| *n == name) {
+                    Some(entry) => entry.1 += s,
+                    None => phase_seconds.push((name, s)),
+                }
+            }
         }
         let best = runs
             .iter()
@@ -137,6 +164,7 @@ impl Aggregate {
             avg_initial_cut: init.mean(),
             infeasible_runs: runs.iter().filter(|r| !r.feasible).count(),
             best_blocks: best.blocks.clone(),
+            phase_seconds,
             runs,
         }
     }

@@ -244,6 +244,48 @@
 //! println!("best cut = {:?}", response.best_cut());
 //! handle.shutdown();
 //! ```
+//!
+//! # obs: structured tracing and the metrics registry
+//!
+//! Observability is one std-only layer ([`obs`]) with two halves, both
+//! reached through the same [`util::exec::ExecutionCtx`] that already
+//! carries the pool and the workspace:
+//!
+//! - **Spans and counters** ([`obs::trace`]): when a [`obs::trace::Tracer`]
+//!   is installed ([`util::exec::ExecutionCtx::set_tracer`], CLI
+//!   `--trace FILE` on `partition` and `serve`), each repetition enters
+//!   a *logical track* derived from its seed and the pipeline emits
+//!   hierarchical spans (`vcycle` → `coarsening` / `initial` /
+//!   `uncoarsening` → `refine_level level=…`) and structured counters
+//!   (`cycle_cut`, `level_quality` with per-level cut and imbalance,
+//!   `hierarchy`, LPA/FM round counts) into per-worker fixed-capacity
+//!   buffers — no locks, no allocation in the steady state. The merged
+//!   stream is ordered by (track, instance, sequence), so it is
+//!   **byte-identical for any worker count**
+//!   ([`obs::trace::Tracer::logical_stream`]), and exports as a Chrome
+//!   `trace_event` JSON file openable in Perfetto / `chrome://tracing`
+//!   ([`obs::trace::Tracer::write_chrome_trace_file`]; schema in the
+//!   [`obs::trace`] module docs, validated by
+//!   `scripts/trace_validate.py` in CI `obs-smoke`).
+//! - **The metrics registry** ([`obs::metrics::MetricsRegistry`]): one
+//!   process-wide home for typed counters, gauges, and log₂-bucketed
+//!   histograms — queue depth/busy rejections/wait, cache
+//!   hits/misses/single-flight joins/evictions, scheduler waves and
+//!   wave sizes, arena lease gauges — plus per-phase wall-clock keyed
+//!   by `(phase, Option<level>)`
+//!   ([`util::exec::ExecutionCtx::phase_stats_by_level`]), so
+//!   `refine_level` at level 0 and level 5 no longer collapse into one
+//!   row. `serve --timing` and the wire `!stats` command (grammar in
+//!   [`coordinator::net`]) are thin snapshots of this registry; `!ping`
+//!   answers with the crate version and the registry's uptime clock.
+//!
+//! The governing invariant: **observability never changes results.**
+//! Tracing on vs. off, `--timing` on vs. off, and any number of
+//! `!stats` probes produce byte-identical partitions and response
+//! lines; disabled instrumentation costs one `Option`/TLS check per
+//! site (`rust/tests/observability.rs`;
+//! `rust/benches/vcycle_e2e.rs` gates warm throughput with tracing
+//! compiled in but disabled).
 
 pub mod bench;
 pub mod clustering;
@@ -252,6 +294,7 @@ pub mod coordinator;
 pub mod generators;
 pub mod graph;
 pub mod initial_partitioning;
+pub mod obs;
 pub mod partitioning;
 pub mod refinement;
 pub mod runtime;

@@ -34,6 +34,7 @@ use sclap::graph::store::{
     convert_metis_to_shards_as, recompress_store, write_sharded_as, GraphStore, InMemoryStore,
     ShardFormat, ShardedStore,
 };
+use sclap::obs::trace::Tracer;
 use sclap::partitioning::config::{PartitionConfig, Preset, CONFIG_OPTION_KEYS};
 use sclap::partitioning::external::OutOfCoreResult;
 use sclap::util::error::{Context, Result};
@@ -160,6 +161,33 @@ fn print_usage() {
     );
 }
 
+/// Install a tracer on the shared execution context when `--trace FILE`
+/// was given. Tracing never changes results (the observability
+/// invariant); the returned pair is handed to [`write_trace`] after the
+/// run so the file is written exactly once, when all spans have
+/// drained.
+fn install_tracer(
+    args: &Args,
+    ctx: &sclap::util::exec::ExecutionCtx,
+) -> Option<(Arc<Tracer>, String)> {
+    args.get("trace").map(|path| {
+        let tracer = Arc::new(Tracer::new());
+        ctx.set_tracer(tracer.clone());
+        (tracer, path.to_string())
+    })
+}
+
+fn write_trace(trace: Option<(Arc<Tracer>, String)>) -> Result<()> {
+    if let Some((tracer, path)) = trace {
+        let events = tracer.events().len();
+        tracer
+            .write_chrome_trace_file(Path::new(&path))
+            .with_context(|| format!("writing trace {path}"))?;
+        println!("wrote trace to {path} ({events} events)");
+    }
+    Ok(())
+}
+
 fn load_graph(args: &Args) -> Result<Graph> {
     if let Some(name) = args.get("instance") {
         let spec = generators::instances::by_name(name)
@@ -217,8 +245,10 @@ fn cmd_partition(args: &Args) -> Result<()> {
     // else auto. Every phase of every repetition shares this pool.
     let pool_threads = if workers != 0 { workers } else { config.threads };
     let coordinator = Coordinator::new(pool_threads);
+    let trace = install_tracer(args, coordinator.ctx());
     let seeds: Vec<u64> = default_seeds(reps).iter().map(|s| s + seed - 1).collect();
     let agg = coordinator.partition_repeated(graph.clone(), &config, &seeds);
+    write_trace(trace)?;
 
     println!("avg cut    : {:.1}", agg.avg_cut);
     println!("best cut   : {}", agg.best_cut);
@@ -267,6 +297,7 @@ fn run_partition_store(
     );
     let pool_threads = if workers != 0 { workers } else { config.threads };
     let coordinator = Coordinator::new(pool_threads);
+    let trace = install_tracer(args, coordinator.ctx());
     let reps = reps.max(1);
     // Repetitions fan out across the coordinator pool (like the normal
     // path's partition_repeated); each job's nested phases re-enter
@@ -277,6 +308,7 @@ fn run_partition_store(
         .map_indexed(reps, |_worker, i| {
             coordinator.partition_store(store, config, seed + i as u64)
         });
+    write_trace(trace)?;
     let mut best: Option<OutOfCoreResult> = None;
     let mut cut_sum = 0.0;
     let mut secs_sum = 0.0;
@@ -336,6 +368,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_pending,
                 cache_entries,
                 timing,
+                trace: args.get("trace").map(std::path::PathBuf::from),
             },
         )
         .with_context(|| format!("binding {listen}"))?;
@@ -363,6 +396,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers,
         max_pending,
     });
+    let trace = install_tracer(args, service.ctx());
     // Requests naming the same graph file / instance share one loaded
     // copy — the batching win the queue exists for (the same catalog
     // type the TCP server shares across connections).
@@ -463,6 +497,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     service.shutdown();
+    // Shutdown drained every accepted request, so all span buffers have
+    // flushed — the trace is complete.
+    write_trace(trace)?;
     eprintln!("served {total} request(s), {failed} failed");
     Ok(())
 }

@@ -1,0 +1,420 @@
+//! The unified metrics registry: typed counters, gauges, and
+//! log-bucketed histograms behind one handle.
+//!
+//! Before this existed every layer kept private tallies — the net cache
+//! its `CacheStats` under the map lock, the arena its `ArenaStats`
+//! atomics, `ExecutionCtx` a flat phase-timing table — and `serve
+//! --timing` / bench reports each hand-picked fields from whichever
+//! struct they could reach. The [`MetricsRegistry`] absorbs all of
+//! them: instruments are registered once by `&'static str` name,
+//! updated lock-free (plain atomics), and snapshotted deterministically
+//! (sorted by name) for the wire `!stats` command and for tests.
+//!
+//! The registry is **instantiable, not a process global**: every
+//! [`ExecutionCtx`](crate::util::exec::ExecutionCtx) owns one
+//! (`Arc`-shared with the queue, cache, and server built on that
+//! context), so tests and embedded services get isolated counter
+//! spaces for free.
+//!
+//! # Instruments
+//!
+//! - [`Counter`] — monotonically increasing `u64` (events, rejections,
+//!   cache hits).
+//! - [`Gauge`] — last-write-wins `i64` (queue depth, uptime).
+//! - [`Histogram`] — fixed-bin log₂ histogram of `u64` samples: bucket
+//!   0 holds exactly the value 0 and bucket `i ≥ 1` holds
+//!   `2^(i-1) ≤ v < 2^i`, so 65 bins cover the full `u64` range with
+//!   no configuration and no allocation per sample.
+//!
+//! Lookup takes the registry lock; updates touch only the instrument's
+//! atomics. Hot paths therefore resolve their instrument handle once
+//! (`Arc<Counter>`) and increment it lock-free forever after.
+//!
+//! # Phase table
+//!
+//! The phase-timing sink that used to live inside `ExecutionCtx` moved
+//! here, keyed by `(&'static str, Option<u32>)` — name **plus an
+//! optional level index**. Drivers that reuse one phase name across
+//! hierarchy levels (`external_coarsening` per out-of-core level,
+//! `uncoarsening` per V-cycle level) record with
+//! [`record_phase`](MetricsRegistry::record_phase)`(name, Some(level),
+//! secs)` and no longer collapse into one bucket;
+//! [`phase_stats`](MetricsRegistry::phase_stats) still aggregates
+//! across levels for the old flat view.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Number of histogram bins: bucket 0 (the value 0) plus one power-of-
+/// two bucket per bit of `u64`.
+pub const HISTOGRAM_BINS: usize = 65;
+
+/// Log₂ bucket index of a sample: 0 for 0, else `i` with
+/// `2^(i-1) ≤ v < 2^i` (i.e. `64 - v.leading_zeros()`).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    (u64::BITS - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `i` (`0` for bucket 0, else
+/// `2^i − 1`); the boundaries [`bucket_index`] sorts against.
+#[inline]
+pub fn bucket_upper_bound(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bin log₂ histogram (module docs). All updates are relaxed
+/// atomics; `count`/`sum`/bucket totals are therefore each exact, and
+/// mutually consistent whenever the histogram is quiescent (the only
+/// time snapshots are compared in tests).
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HISTOGRAM_BINS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Histogram {
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// `(bucket_index, count)` for every non-empty bucket, ascending.
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Ordering::Relaxed);
+                (c > 0).then_some((i, c))
+            })
+            .collect()
+    }
+}
+
+/// Aggregate wall-clock of one named phase (the type
+/// `util::exec::PhaseStat` re-exports).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseStat {
+    pub calls: usize,
+    pub seconds: f64,
+}
+
+#[derive(Default)]
+struct Instruments {
+    counters: BTreeMap<&'static str, Arc<Counter>>,
+    gauges: BTreeMap<&'static str, Arc<Gauge>>,
+    histograms: BTreeMap<&'static str, Arc<Histogram>>,
+    phases: BTreeMap<(&'static str, Option<u32>), PhaseStat>,
+}
+
+/// The typed instrument registry (module docs). Cheap to share via
+/// `Arc`; one per [`ExecutionCtx`](crate::util::exec::ExecutionCtx).
+pub struct MetricsRegistry {
+    start: Instant,
+    inner: Mutex<Instruments>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry {
+            start: Instant::now(),
+            inner: Mutex::new(Instruments::default()),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Instruments> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Seconds since the registry (≈ its owning service) was created —
+    /// the uptime the wire `!ping` / `!stats` responses report.
+    pub fn uptime_seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Get-or-register the named counter. Lookup locks the registry;
+    /// hold the returned handle to update lock-free.
+    pub fn counter(&self, name: &'static str) -> Arc<Counter> {
+        self.lock().counters.entry(name).or_default().clone()
+    }
+
+    /// Get-or-register the named gauge.
+    pub fn gauge(&self, name: &'static str) -> Arc<Gauge> {
+        self.lock().gauges.entry(name).or_default().clone()
+    }
+
+    /// Get-or-register the named histogram.
+    pub fn histogram(&self, name: &'static str) -> Arc<Histogram> {
+        self.lock().histograms.entry(name).or_default().clone()
+    }
+
+    /// Accumulate `seconds` of wall-clock into phase `name`, optionally
+    /// attributed to one hierarchy `level` (module docs).
+    pub fn record_phase(&self, name: &'static str, level: Option<u32>, seconds: f64) {
+        let mut inner = self.lock();
+        let entry = inner.phases.entry((name, level)).or_default();
+        entry.calls += 1;
+        entry.seconds += seconds;
+    }
+
+    /// Flat phase view: stats aggregated across levels, sorted by phase
+    /// name — the shape `ExecutionCtx::phase_stats` has always returned.
+    pub fn phase_stats(&self) -> Vec<(&'static str, PhaseStat)> {
+        let inner = self.lock();
+        let mut flat: BTreeMap<&'static str, PhaseStat> = BTreeMap::new();
+        for (&(name, _level), stat) in &inner.phases {
+            let e = flat.entry(name).or_default();
+            e.calls += stat.calls;
+            e.seconds += stat.seconds;
+        }
+        flat.into_iter().collect()
+    }
+
+    /// Per-level phase view: `(name, level)` keys verbatim, sorted by
+    /// name then level (levelless entries first).
+    pub fn phase_stats_by_level(&self) -> Vec<((&'static str, Option<u32>), PhaseStat)> {
+        let inner = self.lock();
+        inner.phases.iter().map(|(k, v)| (*k, *v)).collect()
+    }
+
+    /// Render the whole registry as the inner fields of one JSON object
+    /// (no surrounding braces): `"counters":{...},"gauges":{...},
+    /// "histograms":{...},"phases":[...]`. Key order is sorted name
+    /// order — deterministic for a quiescent registry, so tests can
+    /// compare snapshots byte-for-byte.
+    pub fn render_json_fields(&self) -> String {
+        let inner = self.lock();
+        let mut out = String::new();
+        out.push_str("\"counters\":{");
+        for (i, (name, c)) in inner.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{name}\":{}", c.get()));
+        }
+        out.push_str("},\"gauges\":{");
+        for (i, (name, g)) in inner.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{name}\":{}", g.get()));
+        }
+        out.push_str("},\"histograms\":{");
+        for (i, (name, h)) in inner.histograms.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let buckets: Vec<String> = h
+                .nonzero_buckets()
+                .iter()
+                .map(|(b, c)| format!("[{b},{c}]"))
+                .collect();
+            out.push_str(&format!(
+                "\"{name}\":{{\"count\":{},\"sum\":{},\"buckets\":[{}]}}",
+                h.count(),
+                h.sum(),
+                buckets.join(",")
+            ));
+        }
+        out.push_str("},\"phases\":[");
+        for (i, (&(name, level), stat)) in inner.phases.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let level = match level {
+                None => "null".to_string(),
+                Some(l) => l.to_string(),
+            };
+            out.push_str(&format!(
+                "{{\"name\":\"{name}\",\"level\":{level},\"calls\":{},\"seconds\":{:.6}}}",
+                stat.calls, stat.seconds
+            ));
+        }
+        out.push(']');
+        out
+    }
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.lock();
+        f.debug_struct("MetricsRegistry")
+            .field("counters", &inner.counters.len())
+            .field("gauges", &inner.gauges.len())
+            .field("histograms", &inner.histograms.len())
+            .field("phases", &inner.phases.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        // Bucket 0 is exactly the value 0.
+        assert_eq!(bucket_index(0), 0);
+        // Bucket i holds 2^(i-1) ≤ v < 2^i: check both edges of every
+        // bucket that has them.
+        for i in 1..=63usize {
+            let lo = 1u64 << (i - 1);
+            let hi = (1u64 << i) - 1;
+            assert_eq!(bucket_index(lo), i, "low edge of bucket {i}");
+            assert_eq!(bucket_index(hi), i, "high edge of bucket {i}");
+        }
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_index(1u64 << 63), 64);
+        // Upper bounds are consistent with the index function.
+        assert_eq!(bucket_upper_bound(0), 0);
+        assert_eq!(bucket_upper_bound(1), 1);
+        assert_eq!(bucket_upper_bound(4), 15);
+        assert_eq!(bucket_upper_bound(64), u64::MAX);
+        for i in 0..64usize {
+            assert_eq!(bucket_index(bucket_upper_bound(i)), i);
+        }
+    }
+
+    #[test]
+    fn histogram_observes_into_the_right_bins() {
+        let h = Histogram::default();
+        for v in [0u64, 1, 2, 3, 4, 1024, u64::MAX] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum(), 0u64.wrapping_add(1 + 2 + 3 + 4 + 1024).wrapping_add(u64::MAX));
+        assert_eq!(
+            h.nonzero_buckets(),
+            vec![(0, 1), (1, 1), (2, 2), (3, 1), (11, 1), (64, 1)]
+        );
+    }
+
+    #[test]
+    fn registry_handles_are_shared() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.inc();
+        b.add(2);
+        assert_eq!(r.counter("x").get(), 3);
+        r.gauge("depth").set(5);
+        assert_eq!(r.gauge("depth").get(), 5);
+    }
+
+    #[test]
+    fn phase_table_keeps_levels_apart_and_flat_view_aggregates() {
+        let r = MetricsRegistry::new();
+        r.record_phase("uncoarsening", Some(0), 1.0);
+        r.record_phase("uncoarsening", Some(1), 2.0);
+        r.record_phase("uncoarsening", Some(1), 3.0);
+        r.record_phase("coarsening", None, 4.0);
+        let by_level = r.phase_stats_by_level();
+        assert_eq!(by_level.len(), 3);
+        assert_eq!(by_level[1].0, ("uncoarsening", Some(0)));
+        assert_eq!(by_level[2].0, ("uncoarsening", Some(1)));
+        assert_eq!(by_level[2].1.calls, 2);
+        assert!((by_level[2].1.seconds - 5.0).abs() < 1e-12);
+        let flat = r.phase_stats();
+        assert_eq!(flat.len(), 2);
+        assert_eq!(flat[1].0, "uncoarsening");
+        assert_eq!(flat[1].1.calls, 3);
+        assert!((flat[1].1.seconds - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_fields_render_deterministically() {
+        let r = MetricsRegistry::new();
+        r.counter("b").add(2);
+        r.counter("a").inc();
+        r.gauge("g").set(-7);
+        r.histogram("h").observe(3);
+        r.record_phase("p", Some(2), 0.5);
+        let s = format!("{{{}}}", r.render_json_fields());
+        assert_eq!(
+            s,
+            "{\"counters\":{\"a\":1,\"b\":2},\"gauges\":{\"g\":-7},\
+             \"histograms\":{\"h\":{\"count\":1,\"sum\":3,\"buckets\":[[2,1]]}},\
+             \"phases\":[{\"name\":\"p\",\"level\":2,\"calls\":1,\"seconds\":0.500000}]}"
+        );
+        // And it parses as JSON.
+        crate::util::json::parse_json(&s).expect("valid json");
+    }
+}

@@ -1,0 +1,32 @@
+//! Observability: deterministic tracing ([`trace`]) and the unified
+//! metrics registry ([`metrics`]).
+//!
+//! The two pieces split along the *when* axis. **Tracing** answers
+//! "what did this run do, in order": hierarchical spans and counter
+//! events on per-repetition logical tracks, merged into one
+//! deterministic stream and exported as Chrome `trace_event` JSON
+//! (`partition --trace FILE`, `serve --trace FILE`). **Metrics**
+//! answer "how much, so far": typed counters/gauges/histograms plus
+//! the per-phase wall-clock table, snapshotted on demand by `serve
+//! --timing`, benches, and the wire `!stats` command.
+//!
+//! Both hang off [`ExecutionCtx`](crate::util::exec::ExecutionCtx):
+//! every context owns a [`MetricsRegistry`] (so all layers built on
+//! the context — queue, cache, net server — share one instrument
+//! space) and optionally carries a [`Tracer`]. The crate-wide
+//! invariant: **observability never changes results.** Tracing on or
+//! off, the partition bytes and every deterministic wire field are
+//! identical (`rust/tests/observability.rs`); with no tracer attached
+//! the instrumentation points cost one thread-local `Option` check and
+//! take no locks.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    bucket_index, bucket_upper_bound, Counter, Gauge, Histogram, MetricsRegistry, PhaseStat,
+    HISTOGRAM_BINS,
+};
+pub use trace::{
+    counter, span, tracing_active, EventKind, SpanGuard, TraceEvent, Tracer, TrackScope,
+};

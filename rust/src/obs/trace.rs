@@ -1,0 +1,578 @@
+//! Deterministic hierarchical tracing: spans, counter events, and the
+//! Chrome `trace_event` exporter behind `partition --trace` / `serve
+//! --trace`.
+//!
+//! # Design: logical tracks, ambient emission
+//!
+//! The determinism contract (same seed + config ⇒ byte-identical
+//! partition for any thread count) extends to the trace's *logical*
+//! content. A global append log would interleave concurrent
+//! repetitions nondeterministically, so events are organized into
+//! **tracks** — one per repetition, with an id derived from the
+//! repetition seed (`splitmix64(seed)` truncated to 31 bits), never
+//! from the executing worker. A driver *enters* its track
+//! ([`Tracer::enter`]) at the top of a repetition; the scope parks the
+//! track state in thread-local storage, and every instrumentation
+//! point in the phases below it ([`span`], [`counter`]) emits into the
+//! ambient track with **no context plumbing and no locks** — one TLS
+//! `Option` check when tracing is off, one `Vec` push when it is on.
+//! Pool workers running nested parallel chunks have no ambient track
+//! and emit nothing, which is exactly what keeps the stream
+//! worker-count-invariant: emission happens only at deterministic
+//! control points on the thread that owns the repetition.
+//!
+//! Within a track every event carries a sequence number, so the merged
+//! stream sorted by `(track, instance, seq)` is deterministic up to
+//! timestamps; [`Tracer::logical_stream`] renders exactly that
+//! ts-free view for tests.
+//!
+//! # Buffers: arena-style reuse, fixed capacity
+//!
+//! Track buffers are fixed-capacity `Vec<TraceEvent>`s recycled
+//! through the tracer's shelf exactly like workspace leases
+//! (`util::arena` semantics: cleared but capacitated), so steady-state
+//! tracing allocates nothing after the first repetition per
+//! concurrency slot. (A `Lease` proper borrows its arena, which would
+//! make a tracer stored on `ExecutionCtx` self-referential — hence the
+//! tracer owns its shelf.) When a track buffer is full, **newest
+//! events are dropped and counted**, with one invariant: a span's End
+//! is emitted iff its Begin was recorded, so the exported trace always
+//! has balanced B/E pairs per lane.
+//!
+//! # Trace-file schema (`--trace FILE`)
+//!
+//! The export is Chrome `trace_event` JSON ("JSON object format"),
+//! openable in Perfetto / `chrome://tracing`:
+//!
+//! ```text
+//! {"traceEvents":[E0,E1,...],"displayTimeUnit":"ms","otherData":{...}}
+//!
+//! Ei (metadata)  {"name":"process_name","ph":"M","pid":1,"tid":0,
+//!                 "args":{"name":"sclap"}}
+//! Ei (span)      {"name":NAME,"ph":"B"|"E","ts":MICROS,"pid":1,
+//!                 "tid":TID,"args":{K:V,...}}
+//! Ei (counter)   {"name":NAME,"ph":"C","ts":MICROS,"pid":1,
+//!                 "tid":TID,"args":{K:V,...}}
+//! ```
+//!
+//! - `TID = track + (instance << 32)`: the low 31 bits identify the
+//!   logical track (repetition seed), the high bits disambiguate
+//!   re-entries of the same track so every lane has monotone
+//!   timestamps and balanced B/E pairs.
+//! - `ts` is microseconds since the tracer was created; events of one
+//!   lane appear in emission (= seq) order, so per-lane `ts` is
+//!   non-decreasing. `scripts/trace_validate.py` checks the schema,
+//!   per-lane monotonicity, and B/E balance in CI.
+//! - span/counter names are static strings (`vcycle`, `coarsening`,
+//!   `uncoarsen_level`, `lpa_round`, ...); args carry the structured
+//!   payload (level index, round, moved nodes, cut, imbalance).
+
+use crate::util::rng::splitmix64;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::io::{self, Write};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Maximum args on one event (level, round, moved, cut… — widest user
+/// takes 4).
+pub const MAX_ARGS: usize = 4;
+
+/// Default per-track event-buffer capacity. Deep hierarchies emit a
+/// few hundred events per V-cycle; 1<<16 leaves headroom while keeping
+/// a shelved buffer under 4 MiB.
+pub const DEFAULT_TRACK_CAPACITY: usize = 1 << 16;
+
+/// Event flavor, mapping 1:1 onto Chrome `ph` values B/E/C.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Begin,
+    End,
+    Counter,
+}
+
+impl EventKind {
+    fn ph(self) -> char {
+        match self {
+            EventKind::Begin => 'B',
+            EventKind::End => 'E',
+            EventKind::Counter => 'C',
+        }
+    }
+}
+
+/// One recorded event. `Copy` and fixed-size so track buffers recycle
+/// without touching the allocator.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub track: u32,
+    pub instance: u32,
+    pub seq: u32,
+    pub ts_us: u64,
+    pub kind: EventKind,
+    pub name: &'static str,
+    pub args: [(&'static str, i64); MAX_ARGS],
+    pub nargs: u8,
+}
+
+impl TraceEvent {
+    /// The Chrome lane id: track in the low bits, re-entry instance in
+    /// the high bits (module docs).
+    pub fn tid(&self) -> u64 {
+        self.track as u64 | ((self.instance as u64) << 32)
+    }
+
+    pub fn args(&self) -> &[(&'static str, i64)] {
+        &self.args[..self.nargs as usize]
+    }
+}
+
+#[derive(Default)]
+struct TracerInner {
+    events: Vec<TraceEvent>,
+    shelf: Vec<Vec<TraceEvent>>,
+    /// Next instance number per track id (how many times each track
+    /// has been entered).
+    instances: BTreeMap<u32, u32>,
+    dropped: u64,
+}
+
+/// The trace sink: hands out track scopes, collects their buffers,
+/// exports Chrome JSON. Shared via `Arc` on the `ExecutionCtx`.
+pub struct Tracer {
+    epoch: Instant,
+    capacity: usize,
+    inner: Mutex<TracerInner>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_TRACK_CAPACITY)
+    }
+
+    /// Tracer whose track buffers hold at most `capacity` events each
+    /// (overflow drops newest, keeping B/E balanced — module docs).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Tracer {
+            epoch: Instant::now(),
+            capacity: capacity.max(2),
+            inner: Mutex::new(TracerInner::default()),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, TracerInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The logical track id of a repetition seed: `splitmix64(seed)`
+    /// truncated to 31 bits (a positive Chrome tid component).
+    pub fn track_of(seed: u64) -> u32 {
+        (splitmix64(seed) & 0x7fff_ffff) as u32
+    }
+
+    /// Enter the track for `seed` on the current thread; every
+    /// [`span`]/[`counter`] until the returned scope drops lands on
+    /// this track. Re-entrant enters (a nested driver on the same
+    /// thread, e.g. the in-memory pipeline inside the out-of-core
+    /// driver) are inert: events keep attaching to the outer track.
+    pub fn enter(self: &Arc<Self>, seed: u64) -> TrackScope {
+        let already_active = ACTIVE.with(|a| a.borrow().is_some());
+        if already_active {
+            return TrackScope { entered: false };
+        }
+        let track = Self::track_of(seed);
+        let (instance, buf) = {
+            let mut inner = self.lock();
+            let slot = inner.instances.entry(track).or_insert(0);
+            let instance = *slot;
+            *slot += 1;
+            let buf = inner.shelf.pop().unwrap_or_default();
+            (instance, buf)
+        };
+        ACTIVE.with(|a| {
+            *a.borrow_mut() = Some(TrackState {
+                tracer: self.clone(),
+                epoch: self.epoch,
+                capacity: self.capacity,
+                track,
+                instance,
+                seq: 0,
+                dropped: 0,
+                buf,
+            });
+        });
+        TrackScope { entered: true }
+    }
+
+    /// All recorded events, merged and sorted by `(track, instance,
+    /// seq)` — the deterministic logical order (timestamps ride along).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let inner = self.lock();
+        let mut events = inner.events.clone();
+        events.sort_by_key(|e| (e.track, e.instance, e.seq));
+        events
+    }
+
+    /// Events dropped to capacity overflow across all tracks so far.
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+
+    /// The ts-free rendering of [`events`](Self::events): one line per
+    /// event, `track/instance seq kind name k=v ...`. Two runs of the
+    /// same workload are line-identical for any worker count.
+    pub fn logical_stream(&self) -> Vec<String> {
+        self.events()
+            .iter()
+            .map(|e| {
+                let mut line = format!(
+                    "{:08x}/{} {} {} {}",
+                    e.track,
+                    e.instance,
+                    e.seq,
+                    e.kind.ph(),
+                    e.name
+                );
+                for (k, v) in e.args() {
+                    line.push_str(&format!(" {k}={v}"));
+                }
+                line
+            })
+            .collect()
+    }
+
+    /// Write the Chrome `trace_event` JSON export (module docs).
+    pub fn write_chrome_trace<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        let events = self.events();
+        let dropped = self.dropped();
+        write!(
+            w,
+            "{{\"traceEvents\":[{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\
+             \"tid\":0,\"args\":{{\"name\":\"sclap\"}}}}"
+        )?;
+        for e in &events {
+            write!(
+                w,
+                ",{{\"name\":\"{}\",\"ph\":\"{}\",\"ts\":{},\"pid\":1,\"tid\":{}",
+                e.name,
+                e.kind.ph(),
+                e.ts_us,
+                e.tid()
+            )?;
+            let args = e.args();
+            if !args.is_empty() || e.kind == EventKind::Counter {
+                write!(w, ",\"args\":{{")?;
+                for (i, (k, v)) in args.iter().enumerate() {
+                    if i > 0 {
+                        write!(w, ",")?;
+                    }
+                    write!(w, "\"{k}\":{v}")?;
+                }
+                write!(w, "}}")?;
+            }
+            write!(w, "}}")?;
+        }
+        write!(
+            w,
+            "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"events\":{},\"dropped\":{}}}}}",
+            events.len(),
+            dropped
+        )
+    }
+
+    /// [`write_chrome_trace`](Self::write_chrome_trace) to a file path.
+    pub fn write_chrome_trace_file(&self, path: &std::path::Path) -> io::Result<()> {
+        let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_chrome_trace(&mut f)?;
+        f.flush()
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.lock();
+        f.debug_struct("Tracer")
+            .field("events", &inner.events.len())
+            .field("dropped", &inner.dropped)
+            .finish()
+    }
+}
+
+struct TrackState {
+    tracer: Arc<Tracer>,
+    epoch: Instant,
+    capacity: usize,
+    track: u32,
+    instance: u32,
+    seq: u32,
+    dropped: u64,
+    buf: Vec<TraceEvent>,
+}
+
+impl TrackState {
+    fn ts_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn pack(args: &[(&'static str, i64)]) -> ([(&'static str, i64); MAX_ARGS], u8) {
+        let n = args.len().min(MAX_ARGS);
+        let mut packed = [("", 0i64); MAX_ARGS];
+        packed[..n].copy_from_slice(&args[..n]);
+        (packed, n as u8)
+    }
+
+    /// Record one event; `force` bypasses the capacity check (Ends of
+    /// recorded Begins — keeps B/E balanced at overflow).
+    fn emit(
+        &mut self,
+        kind: EventKind,
+        name: &'static str,
+        args: &[(&'static str, i64)],
+        force: bool,
+    ) -> bool {
+        if !force && self.buf.len() >= self.capacity {
+            self.dropped += 1;
+            // seq still advances: the sequence numbering is part of the
+            // deterministic logical schedule, dropped or not.
+            self.seq = self.seq.wrapping_add(1);
+            return false;
+        }
+        let (packed, nargs) = Self::pack(args);
+        self.buf.push(TraceEvent {
+            track: self.track,
+            instance: self.instance,
+            seq: self.seq,
+            ts_us: self.ts_us(),
+            kind,
+            name,
+            args: packed,
+            nargs,
+        });
+        self.seq = self.seq.wrapping_add(1);
+        true
+    }
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<TrackState>> = const { RefCell::new(None) };
+}
+
+/// RAII guard for one entered track ([`Tracer::enter`]). Dropping it
+/// drains the thread's buffer into the tracer and shelves the buffer
+/// for reuse.
+#[must_use = "the track closes when this scope drops"]
+pub struct TrackScope {
+    entered: bool,
+}
+
+impl Drop for TrackScope {
+    fn drop(&mut self) {
+        if !self.entered {
+            return;
+        }
+        let state = ACTIVE.with(|a| a.borrow_mut().take());
+        if let Some(mut state) = state {
+            let mut inner = state.tracer.lock();
+            inner.events.extend_from_slice(&state.buf);
+            inner.dropped += state.dropped;
+            state.buf.clear();
+            inner.shelf.push(std::mem::take(&mut state.buf));
+        }
+    }
+}
+
+/// RAII span guard: [`span`] emits the Begin, dropping the guard emits
+/// the matching End. Inert (a no-op on drop) when no track is active
+/// or the Begin was dropped to overflow.
+#[must_use = "a span ends when this guard drops"]
+pub struct SpanGuard {
+    name: &'static str,
+    recorded: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.recorded {
+            return;
+        }
+        ACTIVE.with(|a| {
+            if let Some(state) = a.borrow_mut().as_mut() {
+                state.emit(EventKind::End, self.name, &[], true);
+            }
+        });
+    }
+}
+
+/// Open a span on the ambient track (one TLS check; a no-op guard when
+/// tracing is off). Args beyond [`MAX_ARGS`] are truncated.
+pub fn span(name: &'static str, args: &[(&'static str, i64)]) -> SpanGuard {
+    ACTIVE.with(|a| {
+        let mut borrow = a.borrow_mut();
+        match borrow.as_mut() {
+            None => SpanGuard {
+                name,
+                recorded: false,
+            },
+            Some(state) => {
+                let recorded = state.emit(EventKind::Begin, name, args, false);
+                SpanGuard { name, recorded }
+            }
+        }
+    })
+}
+
+/// Emit a counter event on the ambient track (one TLS check when
+/// tracing is off).
+pub fn counter(name: &'static str, args: &[(&'static str, i64)]) {
+    ACTIVE.with(|a| {
+        if let Some(state) = a.borrow_mut().as_mut() {
+            state.emit(EventKind::Counter, name, args, false);
+        }
+    });
+}
+
+/// Whether the current thread has an active track — instrumentation
+/// that must *compute* a payload (a cut, an imbalance) gates on this
+/// so the disabled path never pays for values nobody records.
+pub fn tracing_active() -> bool {
+    ACTIVE.with(|a| a.borrow().is_some())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_and_balance() {
+        let t = Arc::new(Tracer::new());
+        {
+            let _scope = t.enter(7);
+            let _outer = span("vcycle", &[("cycle", 0)]);
+            {
+                let _inner = span("coarsening", &[("level", 1)]);
+                counter("lpa_round", &[("round", 3), ("moved", 42)]);
+            }
+        }
+        let events = t.events();
+        assert_eq!(events.len(), 5);
+        let kinds: Vec<EventKind> = events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::Begin,
+                EventKind::Begin,
+                EventKind::Counter,
+                EventKind::End,
+                EventKind::End
+            ]
+        );
+        assert_eq!(events[3].name, "coarsening");
+        assert_eq!(events[4].name, "vcycle");
+        assert_eq!(events[2].args(), &[("round", 3), ("moved", 42)]);
+        // seq is contiguous and ts non-decreasing within the lane.
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(e.seq as usize, i);
+        }
+        assert!(events.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+    }
+
+    #[test]
+    fn emission_without_a_track_is_inert() {
+        let _g = span("nobody", &[("x", 1)]);
+        counter("nothing", &[]);
+        assert!(!tracing_active());
+    }
+
+    #[test]
+    fn nested_enter_is_inert_and_buffers_recycle() {
+        let t = Arc::new(Tracer::new());
+        {
+            let _outer = t.enter(1);
+            let _inner = t.enter(2); // same thread: inert
+            counter("c", &[]);
+        }
+        {
+            let _again = t.enter(1); // second instance of track 1
+            counter("c", &[]);
+        }
+        let events = t.events();
+        assert_eq!(events.len(), 2);
+        // Both events landed on track_of(1); the nested enter created
+        // no second track.
+        assert!(events.iter().all(|e| e.track == Tracer::track_of(1)));
+        assert_eq!(events[0].instance, 0);
+        assert_eq!(events[1].instance, 1);
+        assert_ne!(events[0].tid(), events[1].tid());
+        // The second scope reused the shelved buffer.
+        assert_eq!(t.lock().shelf.len(), 1);
+    }
+
+    #[test]
+    fn overflow_drops_newest_but_balances_ends() {
+        let t = Arc::new(Tracer::with_capacity(3));
+        {
+            let _scope = t.enter(9);
+            let _a = span("a", &[]); // recorded (1)
+            let _b = span("b", &[]); // recorded (2)
+            counter("x", &[]); // recorded (3) — buffer full
+            counter("y", &[]); // dropped
+            let _c = span("c", &[]); // Begin dropped → End suppressed
+        } // Ends of a and b force-emitted past capacity
+        let events = t.events();
+        assert_eq!(t.dropped(), 2);
+        let names: Vec<&str> = events.iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["a", "b", "x", "b", "a"]);
+        let mut depth = 0i64;
+        for e in &events {
+            match e.kind {
+                EventKind::Begin => depth += 1,
+                EventKind::End => depth -= 1,
+                EventKind::Counter => {}
+            }
+            assert!(depth >= 0);
+        }
+        assert_eq!(depth, 0);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json() {
+        let t = Arc::new(Tracer::new());
+        {
+            let _scope = t.enter(3);
+            let _s = span("vcycle", &[("cycle", 0)]);
+            counter("cut", &[("level", 2), ("cut", 123)]);
+        }
+        let mut out = Vec::new();
+        t.write_chrome_trace(&mut out).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        let parsed = crate::util::json::parse_json(&s).expect("valid trace json");
+        let events = parsed
+            .get("traceEvents")
+            .and_then(|v| v.as_array())
+            .expect("traceEvents array");
+        // metadata + B + C + E
+        assert_eq!(events.len(), 4);
+    }
+
+    #[test]
+    fn logical_stream_ignores_time() {
+        let t = Arc::new(Tracer::new());
+        {
+            let _scope = t.enter(5);
+            let _s = span("phase", &[("level", 1)]);
+        }
+        assert_eq!(
+            t.logical_stream(),
+            vec![
+                format!("{:08x}/0 0 B phase level=1", Tracer::track_of(5)),
+                format!("{:08x}/0 1 E phase", Tracer::track_of(5)),
+            ]
+        );
+    }
+}

@@ -56,6 +56,7 @@ use crate::coarsening::contract::{contract_store_with_ctx, project_partition, Co
 use crate::coarsening::hierarchy::l_max;
 use crate::graph::csr::{Graph, Weight};
 use crate::graph::store::{streaming_cut, GraphStore, InMemoryStore};
+use crate::obs::trace;
 use crate::partitioning::config::PartitionConfig;
 use crate::partitioning::multilevel::MultilevelPartitioner;
 use crate::util::exec::ExecutionCtx;
@@ -122,6 +123,11 @@ pub fn partition_store_with_ctx(
     assert!(k >= 1);
     let total_timer = Timer::start();
 
+    // This repetition's logical trace track (inert without a tracer).
+    // The in-memory pipeline below re-enters on the same thread, which
+    // is a no-op: all spans land on this track.
+    let _track = ctx.tracer().map(|t| t.enter(seed));
+
     let fits = match config.memory_budget_bytes {
         None => true,
         Some(budget) => store.memory_bytes() <= budget,
@@ -166,6 +172,9 @@ pub fn partition_store_with_ctx(
     let mut maps: Vec<Vec<u32>> = Vec::new();
     let mut current: Option<Graph> = None;
     while maps.len() < EXTERNAL_MAX_LEVELS {
+        let level = maps.len();
+        let level_timer = Timer::start();
+        let level_span = trace::span("external_coarsen_level", &[("level", level as i64)]);
         let step = {
             let holder;
             let level_store: &dyn GraphStore = match &current {
@@ -177,9 +186,19 @@ pub fn partition_store_with_ctx(
             };
             external_coarsen_once(level_store, config, ctx, &mut rng)?
         };
+        drop(level_span);
+        ctx.record_level("external_coarsen_level", level as u32, level_timer.elapsed_s());
         match step {
             None => break, // stalled: no useful shrink left
             Some(Contraction { coarse, map }) => {
+                trace::counter(
+                    "external_level",
+                    &[
+                        ("level", level as i64),
+                        ("coarse_n", coarse.n() as i64),
+                        ("coarse_m", coarse.m() as i64),
+                    ],
+                );
                 maps.push(map);
                 let done = coarse.memory_bytes() <= budget;
                 current = Some(coarse);
@@ -248,6 +267,7 @@ pub fn partition_store_with_ctx(
     );
     let refine_timer = Timer::start();
     if external_levels > 0 && k > 1 {
+        let refine_span = trace::span("external_refinement", &[]);
         let refine_cfg = LpaConfig {
             max_iterations: config.lpa_iterations,
             ordering: NodeOrdering::Degree, // streaming engine: natural order
@@ -258,6 +278,7 @@ pub fn partition_store_with_ctx(
         let (refined, _) =
             external_sclap(store, final_lmax, &refine_cfg, Some(blocks), ctx, &mut rng)?;
         blocks = refined;
+        drop(refine_span);
     }
     let refine_seconds = refine_timer.elapsed_s();
     ctx.record("external_refinement", refine_seconds);
@@ -274,6 +295,10 @@ pub fn partition_store_with_ctx(
     let max_w = block_weights.iter().copied().max().unwrap_or(0);
     let min_w = block_weights.iter().copied().min().unwrap_or(0);
     let avg = (store.total_node_weight() as f64 / k as f64).ceil();
+    trace::counter(
+        "external_result",
+        &[("cut", cut as i64), ("external_levels", external_levels as i64)],
+    );
     Ok(OutOfCoreResult {
         blocks,
         cut,

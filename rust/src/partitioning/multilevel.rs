@@ -11,6 +11,7 @@ use crate::graph::csr::{Graph, Weight};
 use crate::initial_partitioning::recursive_bisection::{
     recursive_bisection, InitialPartitionConfig,
 };
+use crate::obs::trace;
 use crate::partitioning::config::{InitialKind, PartitionConfig, RefinementKind, SchemeKind};
 use crate::partitioning::metrics::{cut_value, evaluate, PartitionMetrics};
 use crate::partitioning::partition::Partition;
@@ -44,6 +45,32 @@ pub struct PartitionResult {
     pub initial_cut: Weight,
     /// Shrink factor of the first contraction (n_input / n_level0).
     pub first_shrink: f64,
+}
+
+/// Emit the per-level `level_quality` trace counter (cut + imbalance
+/// after refining one hierarchy level). The cut is an O(m) scan, so
+/// the whole payload computation gates on an active track — with
+/// tracing off this is a single TLS check, and with it on the extra
+/// scan affects wall-clock only, never results.
+fn level_quality_counter(g: &Graph, k: usize, p: &Partition, level: usize) {
+    if !trace::tracing_active() {
+        return;
+    }
+    let cut = cut_value(g, &p.blocks);
+    let avg = (g.total_node_weight() as f64 / k as f64).ceil();
+    let imbalance_milli = if avg > 0.0 {
+        ((p.max_block_weight() as f64 / avg - 1.0) * 1000.0).round() as i64
+    } else {
+        0
+    };
+    trace::counter(
+        "level_quality",
+        &[
+            ("level", level as i64),
+            ("cut", cut as i64),
+            ("imbalance_milli", imbalance_milli),
+        ],
+    );
 }
 
 /// Arc-count threshold below which the driver runs on an inline
@@ -249,6 +276,12 @@ impl MultilevelPartitioner {
         // are identical either way.
         let ctx: &Arc<ExecutionCtx> = self.ctx_for(input);
 
+        // Tracing: this repetition's logical track, derived from the
+        // seed (inert when no tracer is attached, or when an outer
+        // driver — e.g. the out-of-core path — already entered one on
+        // this thread). Tracing never changes results.
+        let _track = ctx.tracer().map(|t| t.enter(seed));
+
         let mut best_blocks: Option<Vec<u32>> = None;
         let mut best_cut: Weight = Weight::MAX;
         let mut coarsening_seconds = 0.0;
@@ -261,8 +294,10 @@ impl MultilevelPartitioner {
         let mut first_shrink = 1.0f64;
 
         for cycle in 0..cfg.vcycles.max(1) {
+            let vcycle_span = trace::span("vcycle", &[("cycle", cycle as i64)]);
             // ---- Coarsening ----
             let t = Timer::start();
+            let coarsen_span = trace::span("coarsening", &[("cycle", cycle as i64)]);
             let mut params =
                 CoarseningParams::new(k, cfg.epsilon, self.coarsening_scheme());
             if cfg.deep_coarsening {
@@ -272,11 +307,21 @@ impl MultilevelPartitioner {
             params.parallel_lpa = cfg.parallel_coarsening;
             let respect = best_blocks.clone();
             let h: Hierarchy = coarsen(input, &params, respect.as_deref(), &mut rng);
+            drop(coarsen_span);
             let secs = t.elapsed_s();
             coarsening_seconds += secs;
             ctx.record("coarsening", secs);
             let q = h.levels.len();
             let coarsest = h.coarsest(input);
+            trace::counter(
+                "hierarchy",
+                &[
+                    ("cycle", cycle as i64),
+                    ("levels", q as i64),
+                    ("coarsest_n", coarsest.n() as i64),
+                    ("coarsest_m", coarsest.m() as i64),
+                ],
+            );
             if cycle == 0 {
                 levels_first = q;
                 coarsest_n = coarsest.n();
@@ -287,6 +332,7 @@ impl MultilevelPartitioner {
 
             // ---- Initial partitioning ----
             let t = Timer::start();
+            let initial_span = trace::span("initial", &[("cycle", cycle as i64)]);
             let mut blocks = match &h.coarsest_partition {
                 Some(projected) => projected.clone(),
                 None => {
@@ -309,17 +355,24 @@ impl MultilevelPartitioner {
                 }
                 initial_cut = cut_value(input, &proj);
             }
+            drop(initial_span);
             let secs = t.elapsed_s();
             initial_seconds += secs;
             ctx.record("initial", secs);
 
             // ---- Uncoarsening with refinement ----
             let t = Timer::start();
+            let uncoarsen_span = trace::span("uncoarsening", &[("cycle", cycle as i64)]);
             // Imbalance schedule (§4): extra ε̂ on coarse levels, first
             // cycle only, decreasing to 0 at the finest level.
             let delta = if cycle == 0 { cfg.coarse_imbalance } else { 0.0 };
             // Refine the coarsest level (level index q → ε̂ = δ).
             {
+                let level_timer = Timer::start();
+                let level_span = trace::span(
+                    "refine_level",
+                    &[("level", q as i64), ("n", coarsest.n() as i64)],
+                );
                 let eps_here = cfg.epsilon + if q > 0 { delta } else { 0.0 };
                 let lmax_here = l_max(
                     input.total_node_weight(),
@@ -329,7 +382,10 @@ impl MultilevelPartitioner {
                 );
                 let mut p = Partition::from_blocks(coarsest, k, blocks);
                 self.refine(ctx, coarsest, &mut p, lmax_here, &mut rng);
+                drop(level_span);
+                level_quality_counter(coarsest, k, &p, q);
                 blocks = p.blocks;
+                ctx.record_level("refine_level", q as u32, level_timer.elapsed_s());
             }
             for i in (0..h.levels.len()).rev() {
                 let finer: &Graph = if i == 0 { input } else { &h.levels[i - 1].graph };
@@ -348,9 +404,17 @@ impl MultilevelPartitioner {
                     cfg.epsilon + eps_hat,
                     finer.max_node_weight(),
                 );
+                let level_timer = Timer::start();
+                let level_span = trace::span(
+                    "refine_level",
+                    &[("level", i as i64), ("n", finer.n() as i64)],
+                );
                 let mut p = Partition::from_blocks(finer, k, blocks);
                 self.refine(ctx, finer, &mut p, lmax_here, &mut rng);
+                drop(level_span);
+                level_quality_counter(finer, k, &p, i);
                 blocks = p.blocks;
+                ctx.record_level("refine_level", i as u32, level_timer.elapsed_s());
             }
 
             // Final feasibility repair on the input graph.
@@ -363,11 +427,14 @@ impl MultilevelPartitioner {
                     let _ = rebalance(input, &mut p, final_lmax);
                 }
             }
+            drop(uncoarsen_span);
             let secs = t.elapsed_s();
             uncoarsening_seconds += secs;
             ctx.record("uncoarsening", secs);
 
             let cut = cut_value(input, &p.blocks);
+            trace::counter("cycle_cut", &[("cycle", cycle as i64), ("cut", cut as i64)]);
+            drop(vcycle_span);
             if cut < best_cut || best_blocks.is_none() {
                 best_cut = cut;
                 best_blocks = Some(p.blocks);

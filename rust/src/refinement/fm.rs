@@ -8,6 +8,7 @@
 //! greedy refinement and why the Strong configs cut deeper.
 
 use crate::graph::csr::{Graph, NodeId, Weight};
+use crate::obs::trace;
 use crate::partitioning::partition::Partition;
 use crate::partitioning::workspace::VcycleWorkspace;
 use crate::util::arena::scratch;
@@ -314,6 +315,14 @@ pub fn kway_fm_frozen_ws(
         );
 
         let improved = best_cut < current_cut;
+        trace::counter(
+            "fm_pass",
+            &[
+                ("pass", passes as i64),
+                ("kept_moves", best_len as i64),
+                ("cut", best_cut),
+            ],
+        );
         current_cut = best_cut;
         if !improved {
             break;

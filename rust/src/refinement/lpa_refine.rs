@@ -8,6 +8,7 @@
 use crate::clustering::label_propagation::{size_constrained_lpa_ws, LpaConfig};
 use crate::clustering::parallel_lpa::{synchronous_round, RoundScratch, SyncMode};
 use crate::graph::csr::{Graph, Weight};
+use crate::obs::trace;
 use crate::partitioning::partition::Partition;
 use crate::partitioning::workspace::VcycleWorkspace;
 use crate::util::exec::ExecutionCtx;
@@ -100,7 +101,7 @@ pub fn parallel_lpa_refine(
         cluster_count[b as usize] += 1;
     }
 
-    for _ in 0..iterations {
+    for round in 0..iterations {
         let round_seed = rng.next_u64();
         let applied = synchronous_round(
             g,
@@ -112,6 +113,10 @@ pub fn parallel_lpa_refine(
             pool,
             RoundScratch::Workspace(ctx.workspace()),
             round_seed,
+        );
+        trace::counter(
+            "lpa_refine_round",
+            &[("round", round as i64), ("moved", applied as i64)],
         );
         if (applied as f64) < 0.05 * n as f64 {
             break;

@@ -25,11 +25,14 @@
 //! thread-count-invariance contract, and the seed derivation is pure.
 //! It only changes wall-clock and observability.
 
+use crate::obs::metrics::MetricsRegistry;
+use crate::obs::trace::Tracer;
 use crate::partitioning::workspace::VcycleWorkspace;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::splitmix64;
-use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
+
+pub use crate::obs::metrics::PhaseStat;
 
 /// Derive an independent seed for a tagged sub-stream. Pure function of
 /// `(seed, tag)` — the backbone of deterministic parallelism: a split
@@ -42,20 +45,20 @@ pub fn derive_seed(seed: u64, tag: u64) -> u64 {
     splitmix64(seed ^ splitmix64(tag))
 }
 
-/// Aggregate wall-clock of one named phase.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
-pub struct PhaseStat {
-    pub calls: usize,
-    pub seconds: f64,
-}
-
-/// Shared execution context: one pool plus a phase-timing sink (stream
-/// derivation is the sibling [`derive_seed`] — a free function, since it
-/// needs no shared state). Cheap to share via `Arc`; see the module docs
-/// for what it replaces.
+/// Shared execution context: one pool plus the observability handles
+/// (stream derivation is the sibling [`derive_seed`] — a free function,
+/// since it needs no shared state). Cheap to share via `Arc`; see the
+/// module docs for what it replaces.
+///
+/// The phase-timing sink that used to live here is now a view over the
+/// context's [`MetricsRegistry`] (`obs::metrics`) — one instrument
+/// space shared by every layer built on this context (queue, cache,
+/// net server), so the stdin and TCP serve paths report from the same
+/// table and cannot drift.
 pub struct ExecutionCtx {
     pool: Arc<ThreadPool>,
-    stats: Mutex<BTreeMap<&'static str, PhaseStat>>,
+    metrics: Arc<MetricsRegistry>,
+    tracer: Mutex<Option<Arc<Tracer>>>,
     workspace: VcycleWorkspace,
 }
 
@@ -80,7 +83,8 @@ impl ExecutionCtx {
         let workspace = VcycleWorkspace::new(pool.threads());
         ExecutionCtx {
             pool,
-            stats: Mutex::new(BTreeMap::new()),
+            metrics: Arc::new(MetricsRegistry::new()),
+            tracer: Mutex::new(None),
             workspace,
         }
     }
@@ -105,19 +109,51 @@ impl ExecutionCtx {
         &self.workspace
     }
 
-    /// Accumulate `seconds` of wall-clock into the named phase.
-    pub fn record(&self, phase: &'static str, seconds: f64) {
-        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
-        let entry = stats.entry(phase).or_default();
-        entry.calls += 1;
-        entry.seconds += seconds;
+    /// The context's metrics registry — the one instrument space every
+    /// layer built on this context shares (`obs::metrics`).
+    #[inline]
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
     }
 
-    /// Snapshot of the phase-timing table, sorted by phase name
-    /// (deterministic iteration order).
+    /// Attach a tracer: subsequent repetitions entered on this context
+    /// record spans/counters into it (`obs::trace`). Attaching (or
+    /// never attaching) a tracer must not change results — only the
+    /// trace output exists or not.
+    pub fn set_tracer(&self, tracer: Arc<Tracer>) {
+        *self.tracer.lock().unwrap_or_else(|p| p.into_inner()) = Some(tracer);
+    }
+
+    /// The attached tracer, if any. Cloning the `Arc` here happens once
+    /// per repetition (track enter), never on the event hot path.
+    pub fn tracer(&self) -> Option<Arc<Tracer>> {
+        self.tracer.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Accumulate `seconds` of wall-clock into the named phase (a thin
+    /// view over [`metrics`](Self::metrics); levelless — see
+    /// [`record_level`](Self::record_level)).
+    pub fn record(&self, phase: &'static str, seconds: f64) {
+        self.metrics.record_phase(phase, None, seconds);
+    }
+
+    /// [`record`](Self::record) attributed to one hierarchy level, so
+    /// drivers that reuse a phase name across levels no longer collapse
+    /// into one bucket. The flat [`phase_stats`](Self::phase_stats)
+    /// still aggregates across levels.
+    pub fn record_level(&self, phase: &'static str, level: u32, seconds: f64) {
+        self.metrics.record_phase(phase, Some(level), seconds);
+    }
+
+    /// Snapshot of the phase-timing table, aggregated across levels and
+    /// sorted by phase name (deterministic iteration order).
     pub fn phase_stats(&self) -> Vec<(&'static str, PhaseStat)> {
-        let stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
-        stats.iter().map(|(k, v)| (*k, *v)).collect()
+        self.metrics.phase_stats()
+    }
+
+    /// The per-level phase view: `(name, level)` keys verbatim.
+    pub fn phase_stats_by_level(&self) -> Vec<((&'static str, Option<u32>), PhaseStat)> {
+        self.metrics.phase_stats_by_level()
     }
 }
 
@@ -169,6 +205,23 @@ mod tests {
         assert_eq!(name, "coarsening");
         assert_eq!(s.calls, 2);
         assert!((s.seconds - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_level_records_stay_apart() {
+        let ctx = ExecutionCtx::sequential();
+        ctx.record_level("uncoarsening", 0, 0.5);
+        ctx.record_level("uncoarsening", 1, 0.25);
+        ctx.record_level("uncoarsening", 1, 0.25);
+        let by_level = ctx.phase_stats_by_level();
+        assert_eq!(by_level.len(), 2);
+        assert_eq!(by_level[1].0, ("uncoarsening", Some(1)));
+        assert_eq!(by_level[1].1.calls, 2);
+        // The flat view still aggregates (the pre-registry shape).
+        let flat = ctx.phase_stats();
+        assert_eq!(flat.len(), 1);
+        assert_eq!(flat[0].1.calls, 3);
+        assert!((flat[0].1.seconds - 1.0).abs() < 1e-12);
     }
 
     #[test]

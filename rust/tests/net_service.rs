@@ -187,6 +187,7 @@ fn wire_results_are_byte_identical_to_offline_for_any_workers_and_cache_state() 
                 max_pending: 16,
                 cache_entries,
                 timing: false,
+                trace: None,
             });
             // Two concurrent clients, interleaved: client A carries the
             // duplicate pair (same connection ⇒ deterministic cache
@@ -245,6 +246,7 @@ fn busy_backpressure_is_structured_and_deterministic() {
         max_pending: 1,
         cache_entries: 8,
         timing: false,
+        trace: None,
     });
     // Pause the scheduler: the single queue slot fills and stays full.
     handle.pause();

@@ -1,0 +1,404 @@
+//! Integration: the observability layer (`obs::trace` + `obs::metrics`)
+//! and its hard invariants.
+//!
+//! The contract under test:
+//!
+//! 1. **Tracing never changes results** — partitions and rendered
+//!    result lines are byte-identical with tracing on vs. off, across
+//!    worker counts {1, 4} and both backends (in-memory multilevel and
+//!    the out-of-core shard driver).
+//! 2. **The merged span stream is deterministic** — the ts-free
+//!    [`logical_stream`](sclap::obs::trace::Tracer::logical_stream) is
+//!    line-identical for any worker count.
+//! 3. **`!stats` reconciles with the client** — the wire snapshot's
+//!    cache/queue/scheduler counters match a scripted session's
+//!    observed hits, busy refusals, and single-flight joins exactly.
+//! 4. **`serve --trace` exports valid Chrome `trace_event` JSON** with
+//!    balanced B/E spans, while responses stay byte-identical to the
+//!    offline rendering.
+//! 5. **Histogram bucket boundaries** are the documented log₂ bins.
+
+use sclap::coordinator::net::{parse_response, NetClient, NetServer, NetServerConfig};
+use sclap::coordinator::queue::spec::render_result_line;
+use sclap::coordinator::service::{Aggregate, Coordinator, RunOutcome};
+use sclap::graph::csr::Graph;
+use sclap::graph::store::{write_sharded, ShardedStore};
+use sclap::obs::metrics::{bucket_index, bucket_upper_bound, Histogram};
+use sclap::obs::trace::Tracer;
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::util::json::{parse_json, Json};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("sclap-obs-{}-{tag}", std::process::id()))
+}
+
+/// A community instance with a real multilevel hierarchy.
+fn lfr(n: usize) -> Graph {
+    let mut rng = sclap::util::rng::Rng::new(4);
+    sclap::generators::lfr::lfr_like(n, 6.0, 0.15, &mut rng).0
+}
+
+/// Coordinator with (optionally) a tracer attached to its context.
+fn traced_coordinator(workers: usize, traced: bool) -> (Coordinator, Option<Arc<Tracer>>) {
+    let coord = Coordinator::new(workers);
+    let tracer = traced.then(|| {
+        let t = Arc::new(Tracer::new());
+        coord.ctx().set_tracer(t.clone());
+        t
+    });
+    (coord, tracer)
+}
+
+/// `ph` of every span/counter event in a trace-file export.
+fn phases_of(events: &[Json]) -> Vec<&str> {
+    events
+        .iter()
+        .filter_map(|e| e.get("ph").and_then(Json::as_str))
+        .collect()
+}
+
+#[test]
+fn tracing_never_changes_in_memory_results_and_streams_are_worker_invariant() {
+    let g = Arc::new(lfr(800));
+    let config = PartitionConfig::preset(Preset::CFast, 4);
+    let seeds = [1u64, 2];
+    let mut lines = Vec::new();
+    let mut streams = Vec::new();
+    for workers in [1usize, 4] {
+        for traced in [false, true] {
+            let (coord, tracer) = traced_coordinator(workers, traced);
+            let agg = coord.partition_repeated(g.clone(), &config, &seeds);
+            lines.push(render_result_line("t", &agg, false));
+            if let Some(t) = tracer {
+                assert_eq!(t.dropped(), 0, "workload must fit the track buffers");
+                streams.push(t.logical_stream());
+            }
+        }
+    }
+    // Byte-identical rendered results: trace off/on × workers 1/4.
+    assert!(
+        lines.iter().all(|l| *l == lines[0]),
+        "tracing or worker count changed result bytes: {lines:#?}"
+    );
+    // The merged logical stream is worker-count-invariant...
+    assert_eq!(streams[0], streams[1], "span stream must not depend on workers");
+    // ...and actually contains the hierarchy: V-cycle spans, per-level
+    // refinement spans with level indices, and cut counters.
+    let stream = &streams[0];
+    assert!(!stream.is_empty());
+    for needle in [
+        " B vcycle",
+        " B coarsening",
+        " B initial",
+        " B uncoarsening",
+        " B refine_level",
+        " C level_quality",
+        " C cycle_cut",
+        " C hierarchy",
+    ] {
+        assert!(
+            stream.iter().any(|l| l.contains(needle)),
+            "missing {needle:?} in logical stream"
+        );
+    }
+    assert!(
+        stream.iter().any(|l| l.contains(" B refine_level level=")),
+        "refine spans must carry their level index"
+    );
+    // Every Begin has its End (per-lane balance holds in the merge too,
+    // because lanes are contiguous under the (track, instance, seq) sort).
+    let begins = stream.iter().filter(|l| l.split_whitespace().nth(2) == Some("B")).count();
+    let ends = stream.iter().filter(|l| l.split_whitespace().nth(2) == Some("E")).count();
+    assert_eq!(begins, ends, "unbalanced spans in the logical stream");
+    // Two seeds ⇒ two logical tracks.
+    let tracks: std::collections::BTreeSet<&str> = stream
+        .iter()
+        .filter_map(|l| l.split_whitespace().next())
+        .collect();
+    assert_eq!(tracks.len(), 2, "one track per repetition seed");
+}
+
+#[test]
+fn tracing_never_changes_out_of_core_results() {
+    let g = lfr(1000);
+    let dir = temp_path("shards");
+    write_sharded(&g, &dir, 3).unwrap();
+    let mut config = PartitionConfig::preset(Preset::CFast, 4);
+    config.memory_budget_bytes = Some(1); // force the external path
+    let seeds = [3u64, 4];
+    let mut lines = Vec::new();
+    let mut streams = Vec::new();
+    for workers in [1usize, 4] {
+        for traced in [false, true] {
+            let (coord, tracer) = traced_coordinator(workers, traced);
+            let store = ShardedStore::open(&dir).unwrap();
+            let runs: Vec<RunOutcome> = seeds
+                .iter()
+                .map(|&s| {
+                    RunOutcome::from_out_of_core(
+                        s,
+                        &coord.partition_store(&store, &config, s).unwrap(),
+                    )
+                })
+                .collect();
+            let agg = Aggregate::from_runs(runs);
+            lines.push(render_result_line("t", &agg, false));
+            if let Some(t) = tracer {
+                streams.push(t.logical_stream());
+            }
+        }
+    }
+    assert!(
+        lines.iter().all(|l| *l == lines[0]),
+        "tracing or worker count changed out-of-core result bytes: {lines:#?}"
+    );
+    assert_eq!(streams[0], streams[1], "external span stream must not depend on workers");
+    for needle in [" B external_coarsen_level", " B external_refinement", " C external_level"] {
+        assert!(
+            streams[0].iter().any(|l| l.contains(needle)),
+            "missing {needle:?} in external logical stream"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn phase_timings_attribute_per_level_without_collapsing() {
+    let g = Arc::new(lfr(800));
+    let coord = Coordinator::new(2);
+    let agg = coord.partition_repeated(g, &PartitionConfig::preset(Preset::CFast, 4), &[1]);
+    assert_eq!(agg.runs.len(), 1);
+    // The per-level view keeps one (name, level) entry per hierarchy
+    // level — the old `&'static str`-only table collapsed all of these
+    // into a single "refine_level" bucket.
+    let by_level = coord.ctx().phase_stats_by_level();
+    let refine_levels: Vec<u32> = by_level
+        .iter()
+        .filter(|((name, _), _)| *name == "refine_level")
+        .map(|((_, level), _)| level.expect("refine_level records carry a level"))
+        .collect();
+    assert!(
+        refine_levels.len() >= 2,
+        "a multilevel run must attribute refinement to ≥ 2 levels, got {refine_levels:?}"
+    );
+    // The flat view still aggregates across levels (the legacy shape).
+    let flat = coord.ctx().phase_stats();
+    let refine_flat: Vec<_> = flat.iter().filter(|(n, _)| *n == "refine_level").collect();
+    assert_eq!(refine_flat.len(), 1);
+    let per_level_calls: usize = by_level
+        .iter()
+        .filter(|((name, _), _)| *name == "refine_level")
+        .map(|(_, stat)| stat.calls)
+        .sum();
+    assert_eq!(refine_flat[0].1.calls, per_level_calls);
+}
+
+fn spawn_server(
+    config: NetServerConfig,
+) -> (
+    sclap::coordinator::net::NetServerHandle,
+    std::thread::JoinHandle<std::io::Result<()>>,
+    String,
+) {
+    let server = NetServer::bind("127.0.0.1:0", config).unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = server.handle();
+    let runner = std::thread::spawn(move || server.run());
+    (handle, runner, addr)
+}
+
+#[test]
+fn stats_and_ping_reconcile_with_a_scripted_session() {
+    let (handle, runner, addr) = spawn_server(NetServerConfig {
+        workers: 1,
+        max_pending: 1,
+        cache_entries: 8,
+        timing: false,
+        trace: None,
+    });
+    let mut client = NetClient::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    // `!ping` reports the server version and the registry's uptime.
+    let pong = parse_response(&client.request("!ping").unwrap()).unwrap();
+    assert_eq!(pong.status, "pong");
+    assert_eq!(
+        pong.json.get("version").and_then(Json::as_str),
+        Some(env!("CARGO_PKG_VERSION"))
+    );
+    assert!(pong.json.get("uptime_seconds").and_then(Json::as_f64).unwrap() >= 0.0);
+
+    // A scripted session with a fully predictable counter trail:
+    // - "first" leads a computation (1 miss, 1 queue submission);
+    // - "second" is distinct and hits the full 1-slot queue while the
+    //   scheduler is paused (1 more miss, then 1 busy rejection);
+    // - "firstdup" joins "first" in flight (1 single-flight join).
+    handle.pause();
+    client
+        .send_line("id=first instance=tiny-ba k=2 preset=CFast seeds=1")
+        .unwrap();
+    let busy = parse_response(
+        &client
+            .request("id=second instance=tiny-ba k=2 preset=CFast seeds=2")
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!((busy.status.as_str(), busy.id.as_deref()), ("busy", Some("second")));
+    client
+        .send_line("id=firstdup instance=tiny-ba k=2 preset=CFast seeds=1")
+        .unwrap();
+    handle.resume();
+    client.finish_sending().unwrap();
+    let mut seen = HashMap::new();
+    while let Some(line) = client.recv_line().unwrap() {
+        let r = parse_response(&line).unwrap();
+        seen.insert(r.id.clone().expect("request responses carry ids"), r);
+    }
+    assert_eq!(seen["first"].status, "ok");
+    assert_eq!(seen["firstdup"].status, "ok");
+    assert!(seen["firstdup"].cached, "the joiner is served from the leader");
+
+    // A fresh connection snapshots the registry; every counter must
+    // equal what the scripted session observed.
+    let mut probe = NetClient::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    let stats = parse_response(&probe.request("!stats").unwrap()).unwrap();
+    assert_eq!(stats.status, "stats");
+    assert!(stats.json.get("uptime_seconds").and_then(Json::as_f64).unwrap() >= 0.0);
+    assert_eq!(stats.json.get("connection").and_then(Json::as_i64), Some(2));
+    assert_eq!(
+        stats.json.get("connection_requests").and_then(Json::as_i64),
+        Some(0),
+        "control commands are not requests"
+    );
+    let counters = stats.json.get("counters").expect("counters section");
+    let counter = |name: &str| counters.get(name).and_then(Json::as_i64).unwrap_or(0);
+    assert_eq!(counter("net_connections"), 2);
+    assert_eq!(counter("net_requests"), 3, "first + second + firstdup");
+    assert_eq!(counter("cache_misses"), 2, "first and second both led");
+    assert_eq!(counter("cache_joined"), 1, "firstdup joined in flight");
+    assert_eq!(counter("cache_hits"), 0);
+    assert_eq!(counter("cache_uncached"), 0);
+    assert_eq!(counter("cache_evictions"), 0);
+    assert_eq!(counter("queue_submitted"), 1, "only the leader took a slot");
+    assert_eq!(counter("queue_busy_rejections"), 1);
+    assert_eq!(counter("requests_activated"), 1);
+    assert_eq!(counter("requests_completed"), 1);
+    assert_eq!(counter("requests_failed"), 0);
+    assert_eq!(counter("scheduler_waves"), 1);
+    assert_eq!(counter("scheduler_repetitions"), 1, "seeds=1 is one repetition");
+    // The wire snapshot and the in-process cache view agree.
+    let cs = handle.cache_stats();
+    assert_eq!((cs.hits, cs.misses, cs.joined, cs.uncached), (0, 2, 1, 0));
+    let gauges = stats.json.get("gauges").expect("gauges section");
+    assert_eq!(gauges.get("queue_depth").and_then(Json::as_i64), Some(0));
+    assert!(
+        gauges.get("arena_leases_created").and_then(Json::as_i64).unwrap() >= 0,
+        "arena gauges are refreshed at snapshot time"
+    );
+    let wave = stats
+        .json
+        .get("histograms")
+        .and_then(|h| h.get("scheduler_wave_size"))
+        .expect("wave-size histogram");
+    assert_eq!(wave.get("count").and_then(Json::as_i64), Some(1));
+    assert_eq!(wave.get("sum").and_then(Json::as_i64), Some(1));
+    // Phase timings recorded by "first" surface in the same snapshot.
+    let phases = stats.json.get("phases").and_then(Json::as_array).unwrap();
+    assert!(
+        phases
+            .iter()
+            .any(|p| p.get("name").and_then(Json::as_str) == Some("coarsening")),
+        "phase table must surface in !stats"
+    );
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+#[test]
+fn serve_trace_exports_chrome_json_and_responses_stay_identical() {
+    let trace_path = temp_path("serve-trace.json");
+    // Offline reference: the same request through the plain coordinator.
+    let offline = {
+        let g = Arc::new(
+            sclap::generators::instances::by_name("tiny-ba")
+                .unwrap()
+                .build(),
+        );
+        let agg = Coordinator::new(2).partition_repeated(
+            g,
+            &PartitionConfig::preset(Preset::CFast, 2),
+            &[1, 2],
+        );
+        render_result_line("t1", &agg, false)
+    };
+    let (handle, runner, addr) = spawn_server(NetServerConfig {
+        workers: 2,
+        max_pending: 16,
+        cache_entries: 8,
+        timing: false,
+        trace: Some(trace_path.clone()),
+    });
+    let mut client = NetClient::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    let line = client
+        .request("id=t1 instance=tiny-ba k=2 preset=CFast seeds=1,2")
+        .unwrap();
+    assert_eq!(line, offline, "tracing must not change response bytes");
+    drop(client);
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+    // The trace file is written after the accept loop drains.
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let json = parse_json(&text).expect("trace file is valid JSON");
+    let events = json
+        .get("traceEvents")
+        .and_then(Json::as_array)
+        .expect("traceEvents array");
+    let phs = phases_of(events);
+    assert_eq!(phs.first(), Some(&"M"), "metadata record leads the export");
+    let begins = phs.iter().filter(|p| **p == "B").count();
+    let ends = phs.iter().filter(|p| **p == "E").count();
+    assert!(begins > 0, "server-side repetitions must record spans");
+    assert_eq!(begins, ends, "exported spans must balance");
+    let vcycles = events
+        .iter()
+        .filter(|e| {
+            e.get("name").and_then(Json::as_str) == Some("vcycle")
+                && e.get("ph").and_then(Json::as_str) == Some("B")
+        })
+        .count();
+    assert!(vcycles >= 2, "one vcycle span per repetition, got {vcycles}");
+    // otherData's bookkeeping matches the event list (metadata excluded).
+    let other = json.get("otherData").expect("otherData section");
+    assert_eq!(
+        other.get("events").and_then(Json::as_i64),
+        Some((events.len() - 1) as i64)
+    );
+    assert_eq!(other.get("dropped").and_then(Json::as_i64), Some(0));
+    std::fs::remove_file(&trace_path).ok();
+}
+
+#[test]
+fn histogram_buckets_follow_the_documented_log2_boundaries() {
+    // Bucket 0 is exactly the value 0; bucket i ≥ 1 holds 2^(i-1) ≤ v < 2^i.
+    assert_eq!(bucket_index(0), 0);
+    for i in 1..=16usize {
+        let lo = 1u64 << (i - 1);
+        let hi = (1u64 << i) - 1;
+        assert_eq!(bucket_index(lo), i, "low edge of bucket {i}");
+        assert_eq!(bucket_index(hi), i, "high edge of bucket {i}");
+        assert_eq!(bucket_index(bucket_upper_bound(i)), i);
+        assert_eq!(bucket_index(bucket_upper_bound(i) + 1), i + 1);
+    }
+    assert_eq!(bucket_upper_bound(0), 0);
+    assert_eq!(bucket_index(u64::MAX), 64);
+    assert_eq!(bucket_upper_bound(64), u64::MAX);
+    let h = Histogram::default();
+    for v in [0u64, 1, 2, 3, 8, 9] {
+        h.observe(v);
+    }
+    assert_eq!(h.count(), 6);
+    assert_eq!(h.sum(), 23);
+    assert_eq!(h.nonzero_buckets(), vec![(0, 1), (1, 1), (2, 2), (4, 2)]);
+}

@@ -95,10 +95,16 @@ fn aggregate_from_runs_sorts_by_seed() {
         levels: 1,
         coarsest_n: 10,
         blocks: vec![0, 1],
+        phase_seconds: vec![("coarsening", 0.25), ("uncoarsening", 0.5)],
     };
     let agg = Aggregate::from_runs(vec![mk(3, 30), mk(1, 10), mk(2, 20)]);
     let seeds: Vec<u64> = agg.runs.iter().map(|r| r.seed).collect();
     assert_eq!(seeds, vec![1, 2, 3]);
     assert_eq!(agg.best_cut, 10);
     assert!((agg.avg_cut - 20.0).abs() < 1e-9);
+    // phase totals sum across runs in fixed first-seen order
+    assert_eq!(
+        agg.phase_seconds,
+        vec![("coarsening", 0.75), ("uncoarsening", 1.5)]
+    );
 }

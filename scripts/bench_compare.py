@@ -9,7 +9,8 @@ Records (flat ``{"section": ..., key: scalar, ...}`` maps, see
 identity keys they carry (shards, format, threads, engine, label, kind,
 k).  For every matched pair, higher-is-better throughput fields
 (``medges_per_s``, ``mb_per_s``, ``speedup``, ``level0_speedup``,
-``streaming_speedup``) are compared:
+``streaming_speedup``, and the service-layer ``cold_req_per_s``,
+``warm_req_per_s``, ``warm_speedup``) are compared:
 
   * FAIL  if fresh < 0.75 x baseline (>25% regression)
   * WARN  if fresh < 0.90 x baseline (>10% regression)
@@ -39,6 +40,9 @@ HIGHER_IS_BETTER = (
     "speedup",
     "level0_speedup",
     "streaming_speedup",
+    "cold_req_per_s",
+    "warm_req_per_s",
+    "warm_speedup",
 )
 FAIL_RATIO = 0.75
 WARN_RATIO = 0.90

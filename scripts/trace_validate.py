@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""Validate a sclap `--trace FILE` Chrome trace_event export.
+
+Usage:
+    trace_validate.py [--expect-span NAME]... [--min-spans N] TRACE.json
+
+Checks (schema documented in `rust/src/obs/trace.rs`):
+
+  * the document is a JSON object with a ``traceEvents`` array,
+    ``displayTimeUnit`` and an ``otherData`` object;
+  * the first event is the ``process_name`` metadata record (ph "M");
+  * every other event has ph "B", "E" or "C", a string ``name``,
+    integer ``ts``/``pid``/``tid``, and (for counters) an ``args``
+    object with numeric values;
+  * per ``tid`` (one lane per logical track instance) timestamps are
+    monotone non-decreasing and "B"/"E" events balance like
+    parentheses — never more Ends than Begins, zero depth at the end;
+  * ``otherData.events`` equals the non-metadata event count and
+    ``otherData.dropped`` is 0 (a dropped event means the fixed
+    per-worker buffers overflowed — a real trace should never drop).
+
+``--expect-span NAME`` (repeatable) requires at least one "B" event
+with that name; ``--min-spans N`` requires at least N "B" events in
+total.  CI (`obs-smoke`) uses both to assert that a partition run
+traced at least one span per V-cycle level.
+
+Standard library only; exit 0 on success, 1 with a report otherwise.
+"""
+
+import json
+import sys
+
+REQUIRED_PHASES = {"B", "E", "C"}
+
+
+def fail(errors):
+    for line in errors:
+        print(f"FAIL: {line}")
+    print(f"{len(errors)} trace validation error(s)")
+    return 1
+
+
+def validate(doc, expect_spans, min_spans):
+    errors = []
+    if not isinstance(doc, dict):
+        return ["top level is not a JSON object"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["traceEvents missing, not an array, or empty"]
+    if doc.get("displayTimeUnit") != "ms":
+        errors.append("displayTimeUnit is not 'ms'")
+    other = doc.get("otherData")
+    if not isinstance(other, dict):
+        errors.append("otherData missing or not an object")
+        other = {}
+
+    meta = events[0]
+    if meta.get("ph") != "M" or meta.get("name") != "process_name":
+        errors.append(f"first event is not the process_name metadata: {meta}")
+
+    last_ts = {}  # tid -> last seen ts
+    depth = {}  # tid -> open span depth
+    span_names = {}  # name -> count of "B" events
+    begins = ends = 0
+    for i, e in enumerate(events[1:], start=1):
+        where = f"event {i}"
+        ph = e.get("ph")
+        if ph not in REQUIRED_PHASES:
+            errors.append(f"{where}: unexpected ph {ph!r}")
+            continue
+        name = e.get("name")
+        if not isinstance(name, str) or not name:
+            errors.append(f"{where}: missing name")
+        for field in ("ts", "pid", "tid"):
+            if not isinstance(e.get(field), int):
+                errors.append(f"{where}: {field} missing or not an integer")
+        tid, ts = e.get("tid"), e.get("ts")
+        if isinstance(tid, int) and isinstance(ts, int):
+            if ts < last_ts.get(tid, 0):
+                errors.append(
+                    f"{where}: ts {ts} goes backwards on tid {tid} "
+                    f"(last {last_ts[tid]})"
+                )
+            last_ts[tid] = ts
+        if ph == "C":
+            args = e.get("args")
+            if not isinstance(args, dict) or not args:
+                errors.append(f"{where}: counter without args")
+            elif not all(isinstance(v, (int, float)) for v in args.values()):
+                errors.append(f"{where}: counter args are not all numeric")
+        elif ph == "B":
+            begins += 1
+            depth[tid] = depth.get(tid, 0) + 1
+            if isinstance(name, str):
+                span_names[name] = span_names.get(name, 0) + 1
+        else:  # "E"
+            ends += 1
+            depth[tid] = depth.get(tid, 0) - 1
+            if depth[tid] < 0:
+                errors.append(f"{where}: E without matching B on tid {tid}")
+
+    for tid, d in sorted(depth.items()):
+        if d > 0:
+            errors.append(f"tid {tid}: {d} span(s) never ended")
+    if begins != ends:
+        errors.append(f"unbalanced spans: {begins} B vs {ends} E")
+
+    declared = other.get("events")
+    if declared != len(events) - 1:
+        errors.append(
+            f"otherData.events {declared!r} != {len(events) - 1} actual events"
+        )
+    if other.get("dropped") != 0:
+        errors.append(f"otherData.dropped {other.get('dropped')!r} != 0")
+
+    for name in expect_spans:
+        if span_names.get(name, 0) == 0:
+            errors.append(f"expected span {name!r} never begins")
+    if begins < min_spans:
+        errors.append(f"only {begins} span(s), expected at least {min_spans}")
+
+    if not errors:
+        lanes = len(last_ts)
+        print(
+            f"ok: {len(events) - 1} events ({begins} spans, "
+            f"{len(span_names)} distinct names) across {lanes} lane(s), "
+            "0 dropped"
+        )
+    return errors
+
+
+def main(argv):
+    args = list(argv[1:])
+    expect_spans, min_spans = [], 0
+    while "--expect-span" in args:
+        i = args.index("--expect-span")
+        expect_spans.append(args[i + 1])
+        del args[i : i + 2]
+    if "--min-spans" in args:
+        i = args.index("--min-spans")
+        min_spans = int(args[i + 1])
+        del args[i : i + 2]
+    if len(args) != 1:
+        raise SystemExit(__doc__)
+    with open(args[0]) as f:
+        doc = json.load(f)
+    errors = validate(doc, expect_spans, min_spans)
+    return fail(errors) if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
