@@ -15,12 +15,12 @@ use sclap::util::timer::Timer;
 use std::sync::Arc;
 
 fn request(graph: &Arc<sclap::graph::csr::Graph>, k: usize, seed: u64) -> Request {
-    Request {
-        id: format!("bench-k{k}-s{seed}"),
-        graph: GraphHandle::InMemory(graph.clone()),
-        config: PartitionConfig::preset(Preset::CFast, k),
-        seeds: vec![seed],
-    }
+    Request::new(
+        format!("bench-k{k}-s{seed}"),
+        GraphHandle::InMemory(graph.clone()),
+        PartitionConfig::preset(Preset::CFast, k),
+        vec![seed],
+    )
 }
 
 fn main() {

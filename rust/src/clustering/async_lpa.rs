@@ -204,6 +204,7 @@ pub fn parallel_async_sclap(
 
     let mut rounds = 0usize;
     while rounds < config.max_iterations {
+        crate::util::cancel::checkpoint();
         rounds += 1;
         let round_seed = rng.next_u64();
         let mut moved = 0usize;

@@ -155,6 +155,7 @@ pub fn external_sclap(
     let mut cursor = store.cursor();
     let mut rounds = 0usize;
     while rounds < config.max_iterations {
+        crate::util::cancel::checkpoint();
         rounds += 1;
         let round_seed = rng.next_u64();
         let mut changed = 0usize;

@@ -264,6 +264,7 @@ pub fn size_constrained_lpa_ws(
             in_current.set(v as usize, true);
         }
         while rounds < config.max_iterations && !current.is_empty() {
+            crate::util::cancel::checkpoint();
             rounds += 1;
             let mut changed = 0usize;
             while let Some(v) = current.pop_front() {
@@ -307,6 +308,7 @@ pub fn size_constrained_lpa_ws(
         }
     } else {
         while rounds < config.max_iterations {
+            crate::util::cancel::checkpoint();
             rounds += 1;
             let mut changed = 0usize;
             for i in 0..order.len() {

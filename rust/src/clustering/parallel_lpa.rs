@@ -275,6 +275,7 @@ pub fn parallel_sclap(
     cluster_weight.extend_from_slice(g.node_weights());
 
     for round in 0..max_iterations {
+        crate::util::cancel::checkpoint();
         let round_seed = rng.next_u64();
         let applied = synchronous_round(
             g,

@@ -122,6 +122,9 @@ pub fn contract(g: &Graph, clustering: &Clustering) -> Contraction {
 /// The CSR output buffers stay owned (they escape into the coarse
 /// [`Graph`]).
 pub fn contract_leased(g: &Graph, clustering: &Clustering, arena: Option<&Arena>) -> Contraction {
+    // A contraction pass is one of the long units between cancellation
+    // checkpoints: poll once on entry (no-op when no token is ambient).
+    crate::util::cancel::checkpoint();
     let nc = clustering.num_clusters;
     let labels = &clustering.labels;
 
@@ -193,6 +196,7 @@ pub fn contract_parallel_ws(
     pool: &ThreadPool,
     ws: Option<&VcycleWorkspace>,
 ) -> Contraction {
+    crate::util::cancel::checkpoint();
     let nc = clustering.num_clusters;
     let labels = &clustering.labels;
 
@@ -377,6 +381,9 @@ pub fn contract_store_with_ctx(
 
     let mut cursor = store.cursor();
     for s in 0..store.num_shards() {
+        // Streaming contraction checkpoints per shard — the natural
+        // chunk boundary of the semi-external pass.
+        crate::util::cancel::checkpoint();
         let view = cursor.load(s)?;
         let (lo, hi) = view.span();
         for v in lo..hi {

@@ -29,7 +29,12 @@
 //!   exactly one computation: the first becomes the *leader* and
 //!   submits to the queue; the rest *join* its in-flight slot and wait
 //!   on a condvar. A leader's failure (including `Busy` backpressure)
-//!   propagates to its joiners and is never cached.
+//!   propagates to its joiners and is never cached. Cancellation
+//!   fate-shares the same way: a cancelled leader (timeout, client
+//!   disconnect, race loss) resolves its joiners with the same
+//!   `cancelled` error and drops the entry, so the next identical
+//!   request leads a fresh computation instead of inheriting a stale
+//!   verdict.
 //! - **Bounded LRU** — at most `capacity` completed aggregates stay
 //!   resident; the least-recently-used entry is evicted on overflow.
 //!   In-flight slots are never evicted. Capacity 0 disables caching
@@ -295,10 +300,10 @@ impl Drop for LeadGuard {
         let abandoned = {
             let mut st = self.slot.state.lock().unwrap_or_else(|p| p.into_inner());
             if matches!(*st, SlotState::Pending) {
-                *st = SlotState::Resolved(Err(ServeError::Failed(RequestError {
-                    id: String::new(),
-                    message: "request abandoned before completion".to_string(),
-                })));
+                *st = SlotState::Resolved(Err(ServeError::Failed(RequestError::new(
+                    String::new(),
+                    "request abandoned before completion",
+                ))));
                 self.slot.cond.notify_all();
                 true
             } else {
@@ -468,9 +473,22 @@ impl CachedService {
         };
         let mut seeds = request.seeds.clone();
         seeds.sort_unstable();
+        // Races ARE key material: a race request's result is the wave
+        // winner over its whole config list, which is a different
+        // computation from any single config run (and from a race over
+        // a different list). Racer *names* are labels — each racer's
+        // canonical config key is what is appended. `timeout_ms` is
+        // deliberately NOT key material: a deadline bounds how long
+        // the caller waits, never what is computed, and a cache hit
+        // returns before any deadline could fire.
+        let mut config = config_cache_key(&request.config);
+        for entry in &request.race {
+            config.push_str(" race:");
+            config.push_str(&config_cache_key(&entry.config));
+        }
         let key = CacheKey {
             graph,
-            config: config_cache_key(&request.config),
+            config,
             seeds,
         };
         let slot = {
@@ -655,12 +673,12 @@ mod tests {
     use crate::partitioning::config::Preset;
 
     fn karate_request(id: &str, seeds: Vec<u64>) -> Request {
-        Request {
-            id: id.to_string(),
-            graph: GraphHandle::InMemory(Arc::new(karate_club())),
-            config: PartitionConfig::preset(Preset::CFast, 2),
+        Request::new(
+            id,
+            GraphHandle::InMemory(Arc::new(karate_club())),
+            PartitionConfig::preset(Preset::CFast, 2),
             seeds,
-        }
+        )
     }
 
     #[test]
@@ -712,6 +730,31 @@ mod tests {
     }
 
     #[test]
+    fn race_is_cache_key_material_but_timeout_is_not() {
+        use crate::coordinator::queue::RaceEntry;
+        let svc = CachedService::new(ServiceConfig::default(), 8);
+        svc.run(karate_request("plain", vec![1]), true).unwrap();
+        let mut req = karate_request("timed", vec![1]);
+        req.timeout_ms = Some(3_600_000); // a deadline never changes the key
+        let (_, cached) = svc.run(req, true).unwrap();
+        assert!(cached, "timeout_ms must not split cache entries");
+        let mut req = karate_request("race", vec![1]);
+        req.race = vec![
+            RaceEntry {
+                name: "CFast".to_string(),
+                config: PartitionConfig::preset(Preset::CFast, 2),
+            },
+            RaceEntry {
+                name: "UFast".to_string(),
+                config: PartitionConfig::preset(Preset::UFast, 2),
+            },
+        ];
+        let (_, cached) = svc.run(req, true).unwrap();
+        assert!(!cached, "a race over configs is a different computation");
+        assert_eq!(svc.stats().misses, 2);
+    }
+
+    #[test]
     fn capacity_zero_disables_caching() {
         let svc = CachedService::new(ServiceConfig::default(), 0);
         let (_, cached) = svc.run(karate_request("a", vec![1]), true).unwrap();
@@ -753,11 +796,13 @@ mod tests {
     fn fingerprints_are_memoized_per_graph_allocation() {
         let svc = CachedService::new(ServiceConfig::default(), 8);
         let karate = Arc::new(karate_club());
-        let same = |id: &str| Request {
-            id: id.to_string(),
-            graph: GraphHandle::InMemory(karate.clone()),
-            config: PartitionConfig::preset(Preset::CFast, 2),
-            seeds: vec![1],
+        let same = |id: &str| {
+            Request::new(
+                id,
+                GraphHandle::InMemory(karate.clone()),
+                PartitionConfig::preset(Preset::CFast, 2),
+                vec![1],
+            )
         };
         svc.run(same("a"), true).unwrap();
         let (_, cached) = svc.run(same("b"), true).unwrap();
@@ -767,12 +812,12 @@ mod tests {
         let other = Arc::new(karate_club());
         let (_, cached) = svc
             .run(
-                Request {
-                    id: "c".to_string(),
-                    graph: GraphHandle::InMemory(other),
-                    config: PartitionConfig::preset(Preset::CFast, 2),
-                    seeds: vec![1],
-                },
+                Request::new(
+                    "c",
+                    GraphHandle::InMemory(other),
+                    PartitionConfig::preset(Preset::CFast, 2),
+                    vec![1],
+                ),
                 true,
             )
             .unwrap();

@@ -127,7 +127,8 @@ impl NetClient {
 pub struct Response {
     /// The echoed request id (control responses have none).
     pub id: Option<String>,
-    /// `ok`, `error`, `busy`, `pong`, `stats`, or `shutdown`.
+    /// `ok`, `error`, `busy`, `cancelled`, `pong`, `stats`, or
+    /// `shutdown`.
     pub status: String,
     /// Whether the result came from the content-addressed cache.
     pub cached: bool,
@@ -222,6 +223,14 @@ pub fn parse_response(line: &str) -> Result<Response, String> {
                 return Err("busy response missing \"id\"".to_string());
             }
         }
+        "cancelled" => {
+            if id.is_none() {
+                return Err("cancelled response missing \"id\"".to_string());
+            }
+            json.get("reason")
+                .and_then(Json::as_str)
+                .ok_or("cancelled response missing string \"reason\"")?;
+        }
         "pong" | "shutdown" => {}
         "stats" => {
             // The introspection snapshot: the registry sections must be
@@ -283,6 +292,11 @@ mod tests {
         let b = parse_response("{\"id\":\"x\",\"status\":\"busy\"}").unwrap();
         assert_eq!(b.status, "busy");
         assert_eq!(b.id.as_deref(), Some("x"));
+        let c =
+            parse_response("{\"id\":\"x\",\"status\":\"cancelled\",\"reason\":\"timeout\"}")
+                .unwrap();
+        assert_eq!(c.status, "cancelled");
+        assert_eq!(c.json.get("reason").and_then(Json::as_str), Some("timeout"));
     }
 
     #[test]
@@ -293,6 +307,8 @@ mod tests {
             "{}",
             "{\"status\":\"wat\"}",
             "{\"status\":\"busy\"}",
+            "{\"status\":\"cancelled\"}",
+            "{\"id\":\"x\",\"status\":\"cancelled\"}",
             "{\"id\":\"x\",\"status\":\"error\"}",
             // ok with a missing field
             "{\"id\":\"a\",\"status\":\"ok\",\"n\":34}",

@@ -28,7 +28,16 @@
 //!   key rides along; `output=PATH` writes the best partition
 //!   server-side). The `id` is echoed in the response — clients that
 //!   pipeline pick their own unique ids; lines without `id=` get a
-//!   per-connection default `c<conn>-req<line>`.
+//!   per-connection default `c<conn>-req<line>`. Two keys drive the
+//!   cancellation layer: `timeout_ms=MS` arms an end-to-end deadline
+//!   at submission (queue wait counts; overdue work is cancelled
+//!   cooperatively and answers `status=cancelled`), and
+//!   `race=P1,P2,…` (two or more preset names) runs the request's
+//!   first seed under every named preset as one scheduler wave —
+//!   lowest cut wins, ties break on list order, the winner's config
+//!   finishes the remaining seeds, and the losing repetitions are
+//!   cancelled. The winning aggregate is byte-identical to running
+//!   the winner's preset alone.
 //! - a *blank line or `#` comment* — skipped, exactly as on stdin.
 //! - a *control command* starting with `!`:
 //!   - `!ping` → `{"status":"pong","version":"…","uptime_seconds":…}`
@@ -69,6 +78,23 @@
 //!   structured refusal instead of blocking the connection; clients
 //!   resubmit when ready. (Stdin `serve` blocks instead: a file is
 //!   happy to wait, a remote client should decide for itself.)
+//! - cancellation: `{"id":…,"status":"cancelled","reason":"…"}` when
+//!   the request's cancel token fired before it completed. Reasons:
+//!   `timeout` (its `timeout_ms=` deadline passed), `disconnect`
+//!   (the client vanished — see below), `race_lost` (an ensemble
+//!   race picked another config), `abandoned` (the submitter dropped
+//!   the ticket without waiting). A cancelled request frees its
+//!   queue slot and arena leases; nothing about it is ever cached,
+//!   and every other request's bytes are untouched.
+//!
+//! **Disconnect-abort** — a vanished client (a failed response write,
+//! or a mid-line read *error*; EOF and half-close are normal ends)
+//! fires every in-flight request token of that connection with
+//! `disconnect`: workers abandon the doomed computations at their
+//! next checkpoint instead of finishing results nobody will read.
+//! The server stays healthy — subsequent requests from other
+//! connections compute byte-identical results (CI `net-smoke`
+//! exercises exactly this).
 //!
 //! **Shutdown** — on `!shutdown` (or [`NetServerHandle::shutdown`])
 //! the server stops accepting connections, EOFs every connection's
@@ -105,7 +131,10 @@
 //!   graph allocation / per shard directory;
 //! - [`config_cache_key`] — every algorithmic [`PartitionConfig`]
 //!   field, with the `threads` execution knob deliberately excluded
-//!   (thread-count invariance makes it unobservable);
+//!   (thread-count invariance makes it unobservable), plus each
+//!   racer's config key when the request carries `race=` (a race is
+//!   a different computation; `timeout_ms=` is excluded — deadlines
+//!   bound waiting, never results);
 //! - the sorted seed list.
 //!
 //! Hits return the cached aggregate; identical in-flight requests are

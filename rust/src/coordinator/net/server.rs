@@ -3,12 +3,13 @@
 
 use super::cache::{CacheStats, CachedService, ServeError};
 use crate::coordinator::queue::spec::{
-    parse_request_line, render_busy_line, render_error_line, render_result_line_full,
-    write_partition_file, RequestSource, RequestSpec,
+    parse_request_line, render_busy_line, render_cancelled_line, render_error_line,
+    render_result_line_full, write_partition_file, RequestSource, RequestSpec,
 };
-use crate::coordinator::queue::{GraphHandle, Request, ServiceConfig};
+use crate::coordinator::queue::{GraphHandle, RaceEntry, Request, ServiceConfig};
 use crate::graph::csr::Graph;
 use crate::obs::trace::Tracer;
+use crate::util::cancel::{CancelReason, CancelToken};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -88,12 +89,17 @@ impl GraphCatalog {
                     .ok_or_else(|| format!("unknown instance {name:?}"))
             })?,
         };
-        Ok(Request {
-            id: spec.id.clone(),
-            graph,
-            config,
-            seeds: spec.seeds.clone(),
-        })
+        let mut request = Request::new(spec.id.clone(), graph, config, spec.seeds.clone());
+        // `timeout_ms=` was armed against wall time the moment the
+        // request is submitted (inside `submit`), so queue wait counts
+        // toward the deadline — the key is an end-to-end bound.
+        request.timeout_ms = spec.timeout_ms;
+        request.race = spec
+            .racer_configs()?
+            .into_iter()
+            .map(|(name, config)| RaceEntry { name, config })
+            .collect();
+        Ok(request)
     }
 
     fn load<F>(&self, key: &str, build: F) -> Result<GraphHandle, String>
@@ -325,14 +331,31 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
         return;
     };
     let (tx, rx) = mpsc::channel::<String>();
-    let writer = std::thread::spawn(move || writer_loop(stream, &rx));
+    // Cancel tokens of this connection's in-flight requests, keyed by
+    // line index. A vanished client — a write failure in the writer
+    // loop, or a read *error* (not EOF: half-close and graceful
+    // shutdown are normal ends) — fires every live token with
+    // `Disconnect`, so workers abandon doomed computations at their
+    // next checkpoint instead of finishing results nobody will read.
+    let cancels: Arc<Mutex<HashMap<u64, CancelToken>>> = Arc::new(Mutex::new(HashMap::new()));
+    let writer = {
+        let cancels = cancels.clone();
+        std::thread::spawn(move || writer_loop(stream, &rx, &cancels))
+    };
     let mut waiters: Vec<JoinHandle<()>> = Vec::new();
     let reader = BufReader::new(read_half);
     // Request lines this connection has submitted (control commands and
     // comments excluded) — reported by `!stats` as `connection_requests`.
     let mut conn_requests = 0u64;
+    let mut read_error = false;
     for (idx, line) in reader.lines().enumerate() {
-        let Ok(line) = line else { break };
+        let line = match line {
+            Ok(line) => line,
+            Err(_) => {
+                read_error = true;
+                break;
+            }
+        };
         let trimmed = line.trim();
         // Blank lines and `#` comments are legal in every spec stream.
         if trimmed.is_empty() || trimmed.starts_with('#') {
@@ -419,6 +442,7 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
         // so hit/join/lead outcomes and busy refusals follow line
         // order deterministically; only the wait moves off this
         // thread.
+        let cancel = request.cancel.clone();
         let admission = match shared.service.admit(request, false) {
             Ok(admission) => admission,
             Err(ServeError::Busy) => {
@@ -430,8 +454,14 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
                 continue;
             }
         };
+        let req_key = idx as u64;
+        cancels
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .insert(req_key, cancel);
         let shared = shared.clone();
         let tx = tx.clone();
+        let cancels = cancels.clone();
         waiters.push(std::thread::spawn(move || {
             let line = match shared.service.complete(admission) {
                 Ok((agg, cached)) => {
@@ -459,15 +489,30 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
                 }
                 // A joiner inherits its leader's refusal as `busy` too.
                 Err(ServeError::Busy) => render_busy_line(&spec.id),
+                // Cancellation (deadline, disconnect, race loss) is a
+                // structured outcome, not an error: its own status.
+                Err(ServeError::Failed(e)) => match e.cancelled {
+                    Some(reason) => render_cancelled_line(&spec.id, reason),
+                    None => render_error_line(&spec.id, &e.message),
+                },
                 Err(e) => render_error_line(&spec.id, &e.to_string()),
             };
             let _ = tx.send(line);
+            cancels
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .remove(&req_key);
         }));
         // Reap finished waiters so a pipelining connection does not
         // accumulate one JoinHandle per request it ever sent.
         if waiters.len() >= 128 {
             waiters.retain(|w| !w.is_finished());
         }
+    }
+    if read_error {
+        // The socket broke mid-line: the client is gone, not merely
+        // done sending. Abandon its in-flight work.
+        fire_all(&cancels, CancelReason::Disconnect);
     }
     // Drain-then-close: stop feeding the writer only after every
     // admitted request has sent its response.
@@ -478,10 +523,26 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
     let _ = writer.join();
 }
 
+/// Fire every live request token of a connection with `reason`.
+/// Cooperative: workers observe the verdict at their next checkpoint.
+fn fire_all(cancels: &Mutex<HashMap<u64, CancelToken>>, reason: CancelReason) {
+    let cancels = cancels.lock().unwrap_or_else(|p| p.into_inner());
+    for token in cancels.values() {
+        token.fire(reason);
+    }
+}
+
 /// The write half: one JSON line per completed response, flushed
 /// eagerly (clients pipeline and read while sending). On exit the
 /// write side is shut down so clients see EOF after the last response.
-fn writer_loop(stream: TcpStream, rx: &mpsc::Receiver<String>) {
+/// A write failure means the client vanished — every in-flight request
+/// of the connection is cancelled with `Disconnect` so workers stop
+/// computing results nobody will read.
+fn writer_loop(
+    stream: TcpStream,
+    rx: &mpsc::Receiver<String>,
+    cancels: &Mutex<HashMap<u64, CancelToken>>,
+) {
     let mut w = BufWriter::new(&stream);
     while let Ok(line) = rx.recv() {
         let ok = w
@@ -489,7 +550,10 @@ fn writer_loop(stream: TcpStream, rx: &mpsc::Receiver<String>) {
             .and_then(|()| w.write_all(b"\n"))
             .and_then(|()| w.flush());
         if ok.is_err() {
-            break; // client gone; waiters' sends are simply dropped
+            // Client gone: cancel in-flight work; remaining waiter
+            // sends are simply dropped.
+            fire_all(cancels, CancelReason::Disconnect);
+            break;
         }
     }
     let _ = w.flush();

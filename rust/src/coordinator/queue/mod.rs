@@ -52,12 +52,14 @@ pub mod spec;
 use crate::coordinator::service::Aggregate;
 use crate::graph::csr::Graph;
 use crate::partitioning::config::PartitionConfig;
+use crate::util::cancel::{CancelReason, CancelToken};
 use crate::util::exec::ExecutionCtx;
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Service knobs.
 #[derive(Debug, Clone)]
@@ -94,10 +96,34 @@ pub enum GraphHandle {
     Shards(PathBuf),
 }
 
+/// One named configuration competing in a [`Request::race`]: the
+/// scheduler runs every entry on the request's first seed, keeps the
+/// one with the lowest cut (ties broken by race-list order — never by
+/// timing), and cancels the rest.
+#[derive(Debug, Clone)]
+pub struct RaceEntry {
+    /// Display name — for spec-driven requests this is the preset
+    /// name. Deliberately *not* echoed in the response: the winning
+    /// aggregate renders byte-identically to running that config
+    /// alone, and an extra field would break that invariant.
+    pub name: String,
+    pub config: PartitionConfig,
+}
+
 /// One unit of client work: partition `graph` once per seed under
 /// `config`, aggregated exactly like
 /// [`Coordinator::partition_repeated`](crate::coordinator::service::Coordinator::partition_repeated).
-#[derive(Debug, Clone)]
+///
+/// # Cancellation
+///
+/// Every request carries a [`CancelToken`]. The scheduler derives a
+/// child token per repetition, so firing `cancel` (or arming
+/// `timeout_ms`, or dropping the [`Ticket`] unwaited) cancels the
+/// whole request: queued repetitions are never dispatched, running
+/// ones exit at their next checkpoint, and the ticket resolves to a
+/// [`RequestError`] with [`RequestError::cancelled`] set. A token that
+/// never fires changes no result byte.
+#[derive(Debug)]
 pub struct Request {
     /// Client-chosen label, echoed in errors and the `serve` output.
     pub id: String,
@@ -105,6 +131,58 @@ pub struct Request {
     pub config: PartitionConfig,
     /// One repetition per seed; must be non-empty.
     pub seeds: Vec<u64>,
+    /// End-to-end deadline in milliseconds, armed at submission (queue
+    /// wait counts). `None` = no deadline.
+    pub timeout_ms: Option<u64>,
+    /// Ensemble race: when non-empty (two or more entries), the
+    /// scheduler runs each entry's config on `seeds[0]`, picks the
+    /// winner (lowest cut, race-order tie-break), completes the
+    /// remaining seeds under the winning config only, and cancels the
+    /// losers. `config` is the base the entries were derived from; the
+    /// winner's config replaces it for the surviving repetitions. The
+    /// winning aggregate is byte-identical to running that config
+    /// alone.
+    pub race: Vec<RaceEntry>,
+    /// Cooperative cancellation root for this request (see above).
+    pub cancel: CancelToken,
+}
+
+impl Request {
+    /// A plain request: no deadline, no race, a fresh (unfired) cancel
+    /// token.
+    pub fn new(
+        id: impl Into<String>,
+        graph: GraphHandle,
+        config: PartitionConfig,
+        seeds: Vec<u64>,
+    ) -> Self {
+        Request {
+            id: id.into(),
+            graph,
+            config,
+            seeds,
+            timeout_ms: None,
+            race: Vec::new(),
+            cancel: CancelToken::new(),
+        }
+    }
+}
+
+impl Clone for Request {
+    /// A clone is a *fresh submission* of the same work, not the same
+    /// submission twice: it gets its own unfired token, so cancelling
+    /// (or abandoning the ticket of) one never leaks into the other.
+    fn clone(&self) -> Self {
+        Request {
+            id: self.id.clone(),
+            graph: self.graph.clone(),
+            config: self.config.clone(),
+            seeds: self.seeds.clone(),
+            timeout_ms: self.timeout_ms,
+            race: self.race.clone(),
+            cancel: CancelToken::new(),
+        }
+    }
 }
 
 /// Why a submission was refused.
@@ -127,11 +205,36 @@ impl std::fmt::Display for SubmitError {
 }
 
 /// A request that failed (bad config panicking in the partitioner, an
-/// unopenable shard directory, I/O errors on the external path, ...).
+/// unopenable shard directory, I/O errors on the external path, ...)
+/// or was cancelled ([`RequestError::cancelled`] set).
 #[derive(Debug, Clone)]
 pub struct RequestError {
     pub id: String,
     pub message: String,
+    /// `Some(reason)` when the request was cancelled rather than
+    /// failed: the wire layer renders `status=cancelled` instead of
+    /// `status=error`, and nothing about the request is cached.
+    pub cancelled: Option<CancelReason>,
+}
+
+impl RequestError {
+    /// A plain (non-cancelled) failure.
+    pub fn new(id: impl Into<String>, message: impl Into<String>) -> Self {
+        RequestError {
+            id: id.into(),
+            message: message.into(),
+            cancelled: None,
+        }
+    }
+
+    /// A cancellation outcome.
+    pub fn cancelled_with(id: impl Into<String>, reason: CancelReason) -> Self {
+        RequestError {
+            id: id.into(),
+            message: format!("cancelled: {reason}"),
+            cancelled: Some(reason),
+        }
+    }
 }
 
 impl std::fmt::Display for RequestError {
@@ -143,10 +246,20 @@ impl std::fmt::Display for RequestError {
 pub(crate) type Reply = Result<Aggregate, RequestError>;
 
 /// Handle to one submitted request's eventual result.
+///
+/// Dropping a ticket **without** calling [`Ticket::wait`] fires the
+/// request's cancel token with [`CancelReason::Abandoned`]: nobody can
+/// observe the result any more, so still-queued repetitions are
+/// cancelled instead of silently computed (the scheduler reaps the
+/// request as cancelled and its arena leases return). This is how
+/// shutdown drains abandoned work and how the net server aborts the
+/// requests of a disconnected client.
 #[derive(Debug)]
 pub struct Ticket {
     id: String,
     rx: mpsc::Receiver<Reply>,
+    cancel: CancelToken,
+    armed: bool,
 }
 
 impl Ticket {
@@ -155,18 +268,35 @@ impl Ticket {
         &self.id
     }
 
-    /// Block until the request completes (or fails). Requests already
-    /// accepted are always drained — even across service shutdown — so
-    /// this resolves rather than hangs.
-    pub fn wait(self) -> Reply {
+    /// The request's cancel token (fire it to abort the request; safe
+    /// to call at any time, before or after completion).
+    pub fn cancel_token(&self) -> &CancelToken {
+        &self.cancel
+    }
+
+    /// Block until the request completes (or fails, or is cancelled).
+    /// Requests already accepted are always drained — even across
+    /// service shutdown — so this resolves rather than hangs. Calling
+    /// `wait` disarms the drop-abandon behaviour: the caller committed
+    /// to observing the result.
+    pub fn wait(mut self) -> Reply {
+        self.armed = false;
         match self.rx.recv() {
             Ok(reply) => reply,
             // Scheduler gone without replying (it panicked — it never
             // drops a live request otherwise): surface, don't hang.
-            Err(_) => Err(RequestError {
-                message: "batching service terminated before the request completed".to_string(),
-                id: self.id,
-            }),
+            Err(_) => Err(RequestError::new(
+                self.id.clone(),
+                "batching service terminated before the request completed",
+            )),
+        }
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        if self.armed {
+            self.cancel.fire(CancelReason::Abandoned);
         }
     }
 }
@@ -263,6 +393,15 @@ impl BatchService {
         let metrics = self.ctx.metrics();
         let (tx, rx) = mpsc::channel();
         let id = request.id.clone();
+        // Arm the deadline before queueing: `timeout_ms` is an
+        // end-to-end bound, so time spent waiting for a worker counts
+        // against it.
+        if let Some(ms) = request.timeout_ms {
+            request
+                .cancel
+                .set_deadline(Instant::now() + Duration::from_millis(ms));
+        }
+        let cancel = request.cancel.clone();
         let wait_start = std::time::Instant::now();
         let mut waited = false;
         let mut st = lock(&self.shared.state);
@@ -294,7 +433,12 @@ impl BatchService {
         metrics.gauge("queue_depth").set(st.pending.len() as i64);
         drop(st);
         self.shared.not_empty.notify_all();
-        Ok(Ticket { id, rx })
+        Ok(Ticket {
+            id,
+            rx,
+            cancel,
+            armed: true,
+        })
     }
 
     /// Stop activating new requests (in-flight repetitions finish;
@@ -351,12 +495,12 @@ mod tests {
     use crate::partitioning::config::Preset;
 
     fn karate_request(id: &str, k: usize, seeds: Vec<u64>) -> Request {
-        Request {
-            id: id.to_string(),
-            graph: GraphHandle::InMemory(Arc::new(karate_club())),
-            config: PartitionConfig::preset(Preset::CFast, k),
+        Request::new(
+            id,
+            GraphHandle::InMemory(Arc::new(karate_club())),
+            PartitionConfig::preset(Preset::CFast, k),
             seeds,
-        }
+        )
     }
 
     #[test]
@@ -384,12 +528,12 @@ mod tests {
         );
         let service = BatchService::new(ServiceConfig::default());
         let agg = service
-            .submit(Request {
-                id: "x".into(),
-                graph: GraphHandle::InMemory(g),
+            .submit(Request::new(
+                "x",
+                GraphHandle::InMemory(g),
                 config,
-                seeds: vec![5, 6, 7],
-            })
+                vec![5, 6, 7],
+            ))
             .unwrap()
             .wait()
             .unwrap();
@@ -418,12 +562,12 @@ mod tests {
     fn missing_shard_directory_fails_cleanly() {
         let service = BatchService::new(ServiceConfig::default());
         let t = service
-            .submit(Request {
-                id: "ghost".into(),
-                graph: GraphHandle::Shards(PathBuf::from("/definitely/not/a/dir")),
-                config: PartitionConfig::preset(Preset::CFast, 2),
-                seeds: vec![1],
-            })
+            .submit(Request::new(
+                "ghost",
+                GraphHandle::Shards(PathBuf::from("/definitely/not/a/dir")),
+                PartitionConfig::preset(Preset::CFast, 2),
+                vec![1],
+            ))
             .unwrap();
         let err = t.wait().unwrap_err();
         assert_eq!(err.id, "ghost");

@@ -3,14 +3,36 @@
 //! pool in round-robin waves, reassembling results per request in seed
 //! order. See the module docs in [`super`] for the model and the
 //! determinism contract.
+//!
+//! # Cancellation and races
+//!
+//! Each activated request's [`CancelToken`] is polled between waves
+//! (and each dispatched unit carries a child token it enters
+//! ambiently, so checkpoints inside the partitioning pipeline see it).
+//! A fired token reaps the request with a cancelled reply instead of
+//! completing it — queued repetitions are never dispatched, running
+//! ones exit at their next checkpoint — and frees its queue slot and
+//! arena leases like any other reap.
+//!
+//! A request with a non-empty `race` list first runs **every** racer
+//! config on `seeds[0]` (the decision wave, interleaved like ordinary
+//! repetitions). Once all racers have reported, the winner — lowest
+//! cut, ties broken by race-list order, never by timing — keeps its
+//! `seeds[0]` outcome and completes the remaining seeds; the losers'
+//! remaining repetitions are cancelled (never dispatched — decisions
+//! happen between synchronous waves, so no timing dependence exists).
+//! The winning aggregate is byte-identical to running the winning
+//! config alone.
 
 use super::{lock, GraphHandle, QueueShared, Reply, Request, RequestError};
 use crate::coordinator::service::{run_repetition, Aggregate, RunOutcome};
 use crate::graph::csr::Graph;
 use crate::graph::store::{InMemoryStore, ShardedStore};
 use crate::obs::metrics::MetricsRegistry;
+use crate::obs::trace;
 use crate::partitioning::config::PartitionConfig;
 use crate::partitioning::external::partition_store_with_ctx;
+use crate::util::cancel::{self, CancelReason, CancelToken, Cancelled};
 use crate::util::exec::ExecutionCtx;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{mpsc, Arc};
@@ -21,6 +43,22 @@ use std::sync::{mpsc, Arc};
 enum Backend {
     Mem(Arc<Graph>),
     Store(Arc<ShardedStore>),
+}
+
+/// An undecided ensemble race: one result slot per racer config, all
+/// evaluated on the request's first seed.
+struct RaceState {
+    /// `(name, config)` in race-list order — the deterministic
+    /// tie-break order.
+    entries: Vec<(String, Arc<PartitionConfig>)>,
+    /// Racer outcomes on `seeds[0]`, indexed like `entries`.
+    first_results: Vec<Option<RunOutcome>>,
+    /// First racer index not yet dispatched (synchronous waves:
+    /// dispatched implies completed by the next wave build).
+    next_racer: usize,
+    /// Set by [`decide_races`]; afterwards the request schedules like a
+    /// plain one under the winning config.
+    winner: Option<usize>,
 }
 
 /// One accepted request being scheduled: per-seed result slots plus the
@@ -37,6 +75,13 @@ struct ActiveRequest {
     results: Vec<Option<RunOutcome>>,
     reply: mpsc::Sender<Reply>,
     failed: Option<String>,
+    /// Request-root cancellation token; units run under child tokens.
+    cancel: CancelToken,
+    /// `Some` while an ensemble race is undecided (or decided — see
+    /// [`RaceState::winner`]); `None` for plain requests.
+    race: Option<RaceState>,
+    /// A fired token reaps the request with this reason.
+    cancelled: Option<CancelReason>,
 }
 
 impl ActiveRequest {
@@ -46,6 +91,9 @@ impl ActiveRequest {
             graph,
             config,
             seeds,
+            timeout_ms: _, // armed on the token at submission
+            race,
+            cancel,
         } = req;
         let mut failed = None;
         if seeds.is_empty() {
@@ -66,6 +114,21 @@ impl ActiveRequest {
                 }
             },
         };
+        let race = if race.is_empty() {
+            None
+        } else {
+            let entries: Vec<(String, Arc<PartitionConfig>)> = race
+                .into_iter()
+                .map(|e| (e.name, Arc::new(e.config)))
+                .collect();
+            let slots = entries.len();
+            Some(RaceState {
+                entries,
+                first_results: vec![None; slots],
+                next_racer: 0,
+                winner: None,
+            })
+        };
         let slots = seeds.len();
         ActiveRequest {
             id,
@@ -76,15 +139,58 @@ impl ActiveRequest {
             results: vec![None; slots],
             reply,
             failed,
+            cancel,
+            race,
+            cancelled: None,
         }
+    }
+
+    /// Whether this request still races (racers pending, no winner).
+    fn race_undecided(&self) -> bool {
+        matches!(&self.race, Some(r) if r.winner.is_none())
+    }
+
+    /// Dispatch cursor: racer index while the race is undecided, seed
+    /// index otherwise.
+    fn cursor(&self) -> usize {
+        match &self.race {
+            Some(r) if r.winner.is_none() => r.next_racer,
+            _ => self.next_seed,
+        }
+    }
+
+    /// Number of dispatchable units in the current mode (racers while
+    /// undecided, seeds otherwise).
+    fn unit_count(&self) -> usize {
+        match &self.race {
+            Some(r) if r.winner.is_none() => r.entries.len(),
+            _ => self.seeds.len(),
+        }
+    }
+
+    /// Whether the wave builder may dispatch units for this request.
+    fn schedulable(&self) -> bool {
+        self.failed.is_none() && self.cancelled.is_none()
     }
 }
 
-/// One repetition ready to execute: a pure function of its fields.
+/// One repetition ready to execute: a pure function of `backend` ×
+/// `config` × `seed` (the token only decides *whether* it runs to
+/// completion, never what it computes).
 struct Unit {
     backend: Backend,
     config: Arc<PartitionConfig>,
     seed: u64,
+    /// Child of the owning request's token, entered ambiently for the
+    /// duration of the unit.
+    cancel: CancelToken,
+}
+
+/// What became of one dispatched unit.
+enum UnitOutcome {
+    Done(RunOutcome),
+    Failed(String),
+    Cancelled(CancelReason),
 }
 
 /// The scheduler thread body: intake → wave → record → reap, until
@@ -137,14 +243,18 @@ pub(super) fn scheduler_loop(shared: &Arc<QueueShared>, ctx: &Arc<ExecutionCtx>)
         for (req, reply) in newly {
             active.push(ActiveRequest::activate(req, reply));
         }
-        // Activation failures (unopenable shard dir, no seeds) reply
-        // immediately, before any wave is spent on them.
+        // Cancellations (abandoned tickets, deadlines that expired in
+        // the queue) and activation failures (unopenable shard dir, no
+        // seeds) reply immediately, before any wave is spent on them.
+        poll_cancellations(&mut active);
         reap(&mut active, &metrics);
         if active.is_empty() {
             continue;
         }
 
-        // One wave of repetitions, interleaved across requests.
+        // One wave of repetitions, interleaved across requests. While
+        // a request's race is undecided, its units are racer configs
+        // on its first seed instead of seeds under its own config.
         let wave = build_wave(&active, ctx.threads().max(1), rotate % active.len());
         rotate = rotate.wrapping_add(1);
         waves.inc();
@@ -152,52 +262,150 @@ pub(super) fn scheduler_loop(shared: &Arc<QueueShared>, ctx: &Arc<ExecutionCtx>)
         wave_size.observe(wave.len() as u64);
         let units: Vec<Unit> = wave
             .iter()
-            .map(|&(ri, si)| Unit {
-                backend: active[ri]
-                    .backend
-                    .clone()
-                    .expect("live request has a backend"),
-                config: active[ri].config.clone(),
-                seed: active[ri].seeds[si],
+            .map(|&(ri, ui)| {
+                let a = &active[ri];
+                let (config, seed) = if a.race_undecided() {
+                    let race = a.race.as_ref().expect("undecided race present");
+                    (race.entries[ui].1.clone(), a.seeds[0])
+                } else {
+                    (a.config.clone(), a.seeds[ui])
+                };
+                Unit {
+                    backend: a.backend.clone().expect("live request has a backend"),
+                    config,
+                    seed,
+                    cancel: a.cancel.child(),
+                }
             })
             .collect();
         let results = run_wave(ctx, &units);
-        for (&(ri, si), result) in wave.iter().zip(results) {
+        for (&(ri, ui), outcome) in wave.iter().zip(results) {
             let a = &mut active[ri];
-            a.next_seed = a.next_seed.max(si + 1);
-            match result {
-                Ok(run) => a.results[si] = Some(run),
-                // First failure wins (wave order is deterministic); the
-                // request's remaining repetitions are not dispatched.
-                Err(message) => {
-                    if a.failed.is_none() {
-                        a.failed = Some(message);
+            if a.race_undecided() {
+                {
+                    let race = a.race.as_mut().expect("undecided race present");
+                    race.next_racer = race.next_racer.max(ui + 1);
+                }
+                match outcome {
+                    UnitOutcome::Done(run) => {
+                        a.race.as_mut().expect("undecided race present").first_results[ui] =
+                            Some(run);
+                    }
+                    // A failing or cancelled racer takes the whole
+                    // request with it — first cause wins (wave order
+                    // is deterministic).
+                    UnitOutcome::Failed(message) => {
+                        if a.failed.is_none() {
+                            a.failed = Some(message);
+                        }
+                    }
+                    UnitOutcome::Cancelled(reason) => {
+                        if a.cancelled.is_none() {
+                            a.cancelled = Some(reason);
+                        }
+                    }
+                }
+            } else {
+                a.next_seed = a.next_seed.max(ui + 1);
+                match outcome {
+                    UnitOutcome::Done(run) => a.results[ui] = Some(run),
+                    // First failure wins (wave order is deterministic);
+                    // the request's remaining repetitions are not
+                    // dispatched.
+                    UnitOutcome::Failed(message) => {
+                        if a.failed.is_none() {
+                            a.failed = Some(message);
+                        }
+                    }
+                    UnitOutcome::Cancelled(reason) => {
+                        if a.cancelled.is_none() {
+                            a.cancelled = Some(reason);
+                        }
                     }
                 }
             }
         }
+        // Race decisions happen here — strictly between synchronous
+        // waves — so the winner never depends on unit timing.
+        decide_races(&mut active, &metrics);
+        poll_cancellations(&mut active);
         reap(&mut active, &metrics);
     }
 }
 
-/// Round-robin wave builder: one repetition per live request per cycle,
+/// Mark requests whose token has fired (deadline passed, ticket
+/// dropped, client disconnected, explicit fire) as cancelled so the
+/// next reap replies and the wave builder skips them. Never overrides
+/// an earlier failure or cancellation.
+fn poll_cancellations(active: &mut [ActiveRequest]) {
+    for a in active.iter_mut() {
+        if a.failed.is_none() && a.cancelled.is_none() {
+            if let Some(reason) = a.cancel.poll() {
+                a.cancelled = Some(reason);
+            }
+        }
+    }
+}
+
+/// Resolve every race whose racers have all reported: lowest cut wins,
+/// ties break on race-list order (never timing). The winner's
+/// first-seed outcome becomes the request's `results[0]` and its
+/// config replaces the request config for the remaining seeds; the
+/// losers' remaining repetitions are cancelled by never being
+/// dispatched.
+fn decide_races(active: &mut [ActiveRequest], metrics: &MetricsRegistry) {
+    for a in active.iter_mut() {
+        if a.failed.is_some() || a.cancelled.is_some() {
+            continue;
+        }
+        let Some(race) = &mut a.race else { continue };
+        if race.winner.is_some() || !race.first_results.iter().all(|r| r.is_some()) {
+            continue;
+        }
+        let mut win = 0usize;
+        for i in 1..race.first_results.len() {
+            let best = race.first_results[win].as_ref().expect("all reported").cut;
+            let cand = race.first_results[i].as_ref().expect("all reported").cut;
+            if cand < best {
+                win = i;
+            }
+        }
+        race.winner = Some(win);
+        let losers = race.entries.len().saturating_sub(1);
+        metrics.counter("race_losers_cancelled").add(losers as u64);
+        trace::counter(
+            "race_decided",
+            &[("winner", win as i64), ("losers", losers as i64)],
+        );
+        a.config = race.entries[win].1.clone();
+        a.results[0] = race.first_results[win].take();
+        a.next_seed = 1;
+    }
+}
+
+/// Round-robin wave builder: one unit per live request per cycle,
 /// starting at request index `start` and wrapping, until the wave is
 /// `target`-sized or nothing is left. With the caller's rotating
 /// `start`, a 1-seed request rides a near-immediate wave instead of
 /// queueing behind a bigger request's full seed list — even when the
 /// wave is narrower than the active request count (e.g. workers = 1).
+///
+/// Each pair is `(request index, unit index)`; the unit index is a
+/// **racer** index while the request's race is undecided and a **seed**
+/// index otherwise (the mode cannot change inside a wave — decisions
+/// happen strictly between waves).
 fn build_wave(active: &[ActiveRequest], target: usize, start: usize) -> Vec<(usize, usize)> {
     let mut wave = Vec::new();
-    let mut cursor: Vec<usize> = active.iter().map(|a| a.next_seed).collect();
+    let mut cursor: Vec<usize> = active.iter().map(|a| a.cursor()).collect();
     loop {
         let mut took = false;
         for step in 0..active.len() {
             let ri = (start + step) % active.len();
             let a = &active[ri];
-            if a.failed.is_some() {
+            if !a.schedulable() {
                 continue;
             }
-            if cursor[ri] < a.seeds.len() {
+            if cursor[ri] < a.unit_count() {
                 wave.push((ri, cursor[ri]));
                 cursor[ri] += 1;
                 took = true;
@@ -213,9 +421,10 @@ fn build_wave(active: &[ActiveRequest], target: usize, start: usize) -> Vec<(usi
 }
 
 /// Execute one wave. Results come back in wave order; a repetition's
-/// panic or I/O error becomes an `Err` for its own request only —
-/// other requests' units in the same wave are unaffected.
-fn run_wave(ctx: &Arc<ExecutionCtx>, units: &[Unit]) -> Vec<Result<RunOutcome, String>> {
+/// panic, I/O error, or cancellation becomes an outcome for its own
+/// request only — other requests' units in the same wave are
+/// unaffected.
+fn run_wave(ctx: &Arc<ExecutionCtx>, units: &[Unit]) -> Vec<UnitOutcome> {
     if units.len() == 1 {
         // Single unit: run on the scheduler thread so the repetition's
         // own parallel phases fan out across the pool instead of
@@ -227,9 +436,19 @@ fn run_wave(ctx: &Arc<ExecutionCtx>, units: &[Unit]) -> Vec<Result<RunOutcome, S
         .map_indexed(units.len(), |_worker, i| run_unit(ctx, &units[i]))
 }
 
-/// Execute one repetition; contains panics (a poisoned config must fail
-/// its request, not the wave, the pool, or the service).
-fn run_unit(ctx: &Arc<ExecutionCtx>, unit: &Unit) -> Result<RunOutcome, String> {
+/// Execute one repetition under its cancel token; contains panics (a
+/// poisoned config must fail its request, not the wave, the pool, or
+/// the service) and downcasts the typed [`Cancelled`] payload so
+/// cancellation is an outcome, not an error.
+fn run_unit(ctx: &Arc<ExecutionCtx>, unit: &Unit) -> UnitOutcome {
+    // A unit whose token fired before it started never computes.
+    if let Some(reason) = unit.cancel.poll() {
+        return UnitOutcome::Cancelled(reason);
+    }
+    // Ambient for the whole repetition: every checkpoint inside the
+    // pipeline (and every pool job the repetition dispatches) sees
+    // this unit's token.
+    let _scope = cancel::enter(unit.cancel.clone());
     let outcome = catch_unwind(AssertUnwindSafe(|| match &unit.backend {
         Backend::Mem(graph) => {
             if unit.config.memory_budget_bytes.is_some() {
@@ -250,8 +469,12 @@ fn run_unit(ctx: &Arc<ExecutionCtx>, unit: &Unit) -> Result<RunOutcome, String> 
         }
     }));
     match outcome {
-        Ok(result) => result,
-        Err(payload) => Err(panic_message(&payload)),
+        Ok(Ok(run)) => UnitOutcome::Done(run),
+        Ok(Err(message)) => UnitOutcome::Failed(message),
+        Err(payload) => match payload.downcast_ref::<Cancelled>() {
+            Some(c) => UnitOutcome::Cancelled(c.reason),
+            None => UnitOutcome::Failed(panic_message(&payload)),
+        },
     }
 }
 
@@ -266,17 +489,31 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 }
 
 /// Reply to and drop every finished request: failed ones with their
-/// error, completed ones with an [`Aggregate`] over the seed-ordered
-/// runs. A dropped ticket (client gone) is not an error.
+/// error, cancelled ones with a cancelled [`RequestError`], completed
+/// ones with an [`Aggregate`] over the seed-ordered runs. A dropped
+/// ticket (client gone) is not an error.
 fn reap(active: &mut Vec<ActiveRequest>, metrics: &MetricsRegistry) {
     active.retain_mut(|a| {
         if let Some(message) = a.failed.take() {
             metrics.counter("requests_failed").inc();
-            let _ = a.reply.send(Err(RequestError {
-                id: a.id.clone(),
-                message,
-            }));
+            let _ = a
+                .reply
+                .send(Err(RequestError::new(a.id.clone(), message)));
             return false;
+        }
+        if let Some(reason) = a.cancelled.take() {
+            metrics.counter("requests_cancelled").inc();
+            metrics.counter(reason.counter_name()).inc();
+            trace::counter("request_cancelled", &[("reason", reason.code() as i64)]);
+            let _ = a
+                .reply
+                .send(Err(RequestError::cancelled_with(a.id.clone(), reason)));
+            return false;
+        }
+        if a.race_undecided() {
+            // Racers still pending: the per-seed slots cannot be
+            // complete yet (decision fills `results[0]`).
+            return true;
         }
         if a.results.iter().all(|r| r.is_some()) {
             let runs: Vec<RunOutcome> = a
@@ -296,22 +533,57 @@ fn reap(active: &mut Vec<ActiveRequest>, metrics: &MetricsRegistry) {
 mod tests {
     use super::*;
 
+    fn cfast() -> Arc<PartitionConfig> {
+        Arc::new(crate::partitioning::config::PartitionConfig::preset(
+            crate::partitioning::config::Preset::CFast,
+            2,
+        ))
+    }
+
     fn dummy(seeds: usize, next: usize) -> ActiveRequest {
         // The receiver is dropped: these wave-shape tests never reply
         // (and `reap` tolerates a gone client anyway).
         let (tx, _rx) = mpsc::channel();
         ActiveRequest {
             id: "t".into(),
-            config: Arc::new(crate::partitioning::config::PartitionConfig::preset(
-                crate::partitioning::config::Preset::CFast,
-                2,
-            )),
+            config: cfast(),
             seeds: (1..=seeds as u64).collect(),
             backend: None,
             next_seed: next,
             results: vec![None; seeds],
             reply: tx,
             failed: None,
+            cancel: CancelToken::new(),
+            race: None,
+            cancelled: None,
+        }
+    }
+
+    fn racing(seeds: usize, racers: usize) -> ActiveRequest {
+        let mut a = dummy(seeds, 0);
+        a.race = Some(RaceState {
+            entries: (0..racers)
+                .map(|i| (format!("cfg{i}"), cfast()))
+                .collect(),
+            first_results: vec![None; racers],
+            next_racer: 0,
+            winner: None,
+        });
+        a
+    }
+
+    fn run_with_cut(seed: u64, cut: crate::graph::csr::Weight) -> RunOutcome {
+        RunOutcome {
+            seed,
+            cut,
+            seconds: 0.0,
+            imbalance: 0.0,
+            feasible: true,
+            initial_cut: 0,
+            levels: 1,
+            coarsest_n: 1,
+            blocks: vec![0, 1],
+            phase_seconds: Vec::new(),
         }
     }
 
@@ -355,6 +627,77 @@ mod tests {
         let active = vec![dummy(2, 2), dummy(3, 0)]; // request 0 drained
         assert_eq!(build_wave(&active, 1, 0), vec![(1, 0)]);
         assert_eq!(build_wave(&active, 2, 1), vec![(1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn undecided_race_dispatches_racers_not_seeds() {
+        // 3 racers × seeds[0] before any ordinary seed unit; a plain
+        // request interleaves as usual.
+        let active = vec![racing(5, 3), dummy(2, 0)];
+        let wave = build_wave(&active, 8, 0);
+        assert_eq!(wave, vec![(0, 0), (1, 0), (0, 1), (1, 1), (0, 2)]);
+    }
+
+    #[test]
+    fn decided_race_schedules_remaining_seeds_under_the_winner() {
+        let mut active = vec![racing(3, 2)];
+        {
+            let race = active[0].race.as_mut().unwrap();
+            race.next_racer = 2;
+            race.first_results = vec![Some(run_with_cut(1, 10)), Some(run_with_cut(1, 7))];
+        }
+        let metrics = MetricsRegistry::new();
+        decide_races(&mut active, &metrics);
+        let a = &active[0];
+        assert_eq!(a.race.as_ref().unwrap().winner, Some(1));
+        assert_eq!(a.results[0].as_ref().unwrap().cut, 7);
+        assert_eq!(a.next_seed, 1);
+        assert!(!a.race_undecided());
+        // Remaining units are now ordinary seed indices 1..3.
+        assert_eq!(build_wave(&active, 8, 0), vec![(0, 1), (0, 2)]);
+        assert_eq!(metrics.counter("race_losers_cancelled").get(), 1);
+    }
+
+    #[test]
+    fn race_ties_break_on_race_list_order() {
+        let mut active = vec![racing(1, 3)];
+        {
+            let race = active[0].race.as_mut().unwrap();
+            race.next_racer = 3;
+            race.first_results = vec![
+                Some(run_with_cut(1, 9)),
+                Some(run_with_cut(1, 5)),
+                Some(run_with_cut(1, 5)), // same cut, later in the list
+            ];
+        }
+        let metrics = MetricsRegistry::new();
+        decide_races(&mut active, &metrics);
+        assert_eq!(active[0].race.as_ref().unwrap().winner, Some(1));
+    }
+
+    #[test]
+    fn cancelled_requests_get_no_wave_units() {
+        let mut active = vec![dummy(4, 0), dummy(4, 0)];
+        active[0].cancelled = Some(CancelReason::Timeout);
+        assert_eq!(build_wave(&active, 8, 0), vec![(1, 0), (1, 1), (1, 2), (1, 3)]);
+    }
+
+    #[test]
+    fn fired_token_is_observed_and_reaped_as_cancelled() {
+        let (tx, rx) = mpsc::channel();
+        let mut a = dummy(2, 0);
+        a.reply = tx;
+        a.cancel.fire(CancelReason::Abandoned);
+        let mut active = vec![a];
+        poll_cancellations(&mut active);
+        assert_eq!(active[0].cancelled, Some(CancelReason::Abandoned));
+        let metrics = MetricsRegistry::new();
+        reap(&mut active, &metrics);
+        assert!(active.is_empty());
+        let err = rx.recv().expect("cancelled reply sent").unwrap_err();
+        assert_eq!(err.cancelled, Some(CancelReason::Abandoned));
+        assert_eq!(metrics.counter("requests_cancelled").get(), 1);
+        assert_eq!(metrics.counter("cancel_reason_abandoned").get(), 1);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! id=r1 graph=/tmp/web.graph k=8 preset=CFast seeds=1,2,3 output=/tmp/r1.txt
 //! id=r2 shards=/tmp/web-shards k=4 reps=3 seed=5 memory-budget=1
 //! id=r3 instance=tiny-rmat k=8 epsilon=0.05 parallel-coarsening=true
+//! id=r4 instance=tiny-rmat k=8 race=CFast,UFast seeds=1,2 timeout_ms=60000
 //! ```
 //!
 //! plus the matching one-JSON-line-per-request result rendering. The
@@ -48,6 +49,22 @@ pub struct RequestSpec {
     pub config_options: Vec<(String, String)>,
     /// Optional path to write the best partition to.
     pub output: Option<String>,
+    /// End-to-end deadline (`timeout_ms=N`, N ≥ 1): the service arms
+    /// the request's cancel token at submission and a deadline that
+    /// passes anywhere — queued, mid-repetition — cancels the request
+    /// (`{"status":"cancelled","reason":"timeout"}`). Deliberately
+    /// **not** cache-key material: a cache hit returns long before any
+    /// plausible deadline, and two requests differing only in
+    /// `timeout_ms` want the same partition.
+    pub timeout_ms: Option<u64>,
+    /// Ensemble race (`race=PresetA,PresetB[,...]`, two or more): each
+    /// named preset becomes a racer config (the line's shared config
+    /// options applied on top of each), the scheduler decides the
+    /// winner on the first seed, and only the winner completes. The
+    /// result line is byte-identical to requesting the winning preset
+    /// alone — and race membership IS cache-key material (see
+    /// `coordinator::net::cache`).
+    pub race: Vec<Preset>,
 }
 
 impl RequestSpec {
@@ -60,11 +77,29 @@ impl RequestSpec {
         Ok(config)
     }
 
+    /// Racer configs for a `race=` spec, in race-list order (the
+    /// deterministic tie-break order): each named preset with this
+    /// line's shared `config_options` applied on top. Empty for plain
+    /// requests; an option a racer's config rejects is an error.
+    pub fn racer_configs(&self) -> Result<Vec<(String, PartitionConfig)>, String> {
+        self.race
+            .iter()
+            .map(|p| {
+                let mut config = PartitionConfig::preset(*p, self.k);
+                for (key, value) in &self.config_options {
+                    config.apply_option(key, value)?;
+                }
+                Ok((p.name().replace('/', ""), config))
+            })
+            .collect()
+    }
+
     /// Render this spec as one canonical request line:
-    /// `id= <source>= k= preset= seeds= [config options…] [output=]`.
-    /// Seeds are always explicit (a `reps=/seed=` shorthand parses into
-    /// the same canonical list), and the preset name is emitted without
-    /// `/` separators so the line stays whitespace-token clean.
+    /// `id= <source>= k= preset= [race=] seeds= [timeout_ms=]
+    /// [config options…] [output=]`. Seeds are always explicit (a
+    /// `reps=/seed=` shorthand parses into the same canonical list),
+    /// and preset names are emitted without `/` separators so the line
+    /// stays whitespace-token clean.
     /// `parse_request_line ∘ to_line` is the identity on valid specs —
     /// the round-trip property the unit tests enforce — which is what
     /// lets the network client re-emit parsed requests verbatim.
@@ -76,12 +111,23 @@ impl RequestSpec {
         };
         let seeds: Vec<String> = self.seeds.iter().map(|s| s.to_string()).collect();
         let mut line = format!(
-            "id={} {source_key}={source_value} k={} preset={} seeds={}",
+            "id={} {source_key}={source_value} k={} preset={}",
             self.id,
             self.k,
             self.preset.name().replace('/', ""),
-            seeds.join(",")
         );
+        if !self.race.is_empty() {
+            let racers: Vec<String> = self
+                .race
+                .iter()
+                .map(|p| p.name().replace('/', ""))
+                .collect();
+            line.push_str(&format!(" race={}", racers.join(",")));
+        }
+        line.push_str(&format!(" seeds={}", seeds.join(",")));
+        if let Some(ms) = self.timeout_ms {
+            line.push_str(&format!(" timeout_ms={ms}"));
+        }
         for (key, value) in &self.config_options {
             line.push_str(&format!(" {key}={value}"));
         }
@@ -94,7 +140,18 @@ impl RequestSpec {
 
 /// Keys a request line may use besides [`CONFIG_OPTION_KEYS`].
 const SPEC_KEYS: &[&str] = &[
-    "id", "graph", "instance", "shards", "k", "preset", "seeds", "reps", "seed", "output",
+    "id",
+    "graph",
+    "instance",
+    "shards",
+    "k",
+    "preset",
+    "seeds",
+    "reps",
+    "seed",
+    "output",
+    "timeout_ms",
+    "race",
 ];
 
 fn known_key(key: &str) -> bool {
@@ -119,6 +176,8 @@ pub fn parse_request_line(line: &str, default_id: &str) -> Result<Option<Request
     let mut reps: Option<usize> = None;
     let mut seed: Option<u64> = None;
     let mut output = None;
+    let mut timeout_ms: Option<u64> = None;
+    let mut race: Vec<Preset> = Vec::new();
     let mut config_options = Vec::new();
     let mut seen: Vec<String> = Vec::new();
 
@@ -176,6 +235,27 @@ pub fn parse_request_line(line: &str, default_id: &str) -> Result<Option<Request
                 );
             }
             "output" => output = Some(value.to_string()),
+            "timeout_ms" => {
+                let ms: u64 = value
+                    .parse()
+                    .map_err(|_| format!("timeout_ms: bad integer {value:?}"))?;
+                if ms == 0 {
+                    return Err("timeout_ms must be at least 1".to_string());
+                }
+                timeout_ms = Some(ms);
+            }
+            "race" => {
+                for name in value.split(',') {
+                    let name = name.trim();
+                    race.push(
+                        Preset::from_name(name)
+                            .ok_or_else(|| format!("race: unknown preset {name:?}"))?,
+                    );
+                }
+                if race.len() < 2 {
+                    return Err("race needs at least two presets".to_string());
+                }
+            }
             // everything else is a config key by `known_key`
             other => config_options.push((other.to_string(), value.to_string())),
         }
@@ -213,6 +293,8 @@ pub fn parse_request_line(line: &str, default_id: &str) -> Result<Option<Request
         seeds,
         config_options,
         output,
+        timeout_ms,
+        race,
     }))
 }
 
@@ -318,6 +400,20 @@ pub fn render_error_line(id: &str, message: &str) -> String {
 /// blocking the connection).
 pub fn render_busy_line(id: &str) -> String {
     format!("{{\"id\":\"{}\",\"status\":\"busy\"}}", escape_json(id))
+}
+
+/// Render one cancelled request as a JSON line: `reason` is the stable
+/// wire string of
+/// [`CancelReason::as_str`](crate::util::cancel::CancelReason::as_str)
+/// (`timeout` / `disconnect` / `race_lost` / `abandoned`). Distinct
+/// from [`render_error_line`] so clients can tell "the service chose
+/// to stop" from "the request is broken".
+pub fn render_cancelled_line(id: &str, reason: crate::util::cancel::CancelReason) -> String {
+    format!(
+        "{{\"id\":\"{}\",\"status\":\"cancelled\",\"reason\":\"{}\"}}",
+        escape_json(id),
+        reason.as_str()
+    )
 }
 
 /// Write one block id per line to `out` (the `output=` request key and
@@ -489,6 +585,50 @@ mod tests {
     }
 
     #[test]
+    fn timeout_and_race_parse_and_canonicalize() {
+        let s = parse("graph=g k=4 timeout_ms=1500 race=CFast,UFast seeds=1,2");
+        assert_eq!(s.timeout_ms, Some(1500));
+        assert_eq!(s.race, vec![Preset::CFast, Preset::UFast]);
+        // canonical order: race after preset, timeout_ms after seeds
+        assert_eq!(
+            s.to_line(),
+            "id=d graph=g k=4 preset=CFast race=CFast,UFast seeds=1,2 timeout_ms=1500"
+        );
+        assert_eq!(parse(&s.to_line()), s);
+        // racer configs are preset + shared options, in race order
+        let s = parse("graph=g k=4 race=CFast,UFast epsilon=0.07");
+        let racers = s.racer_configs().unwrap();
+        assert_eq!(racers.len(), 2);
+        assert_eq!(racers[0].0, "CFast");
+        assert_eq!(racers[1].0, "UFast");
+        for (_, c) in &racers {
+            assert_eq!(c.k, 4);
+            assert!((c.epsilon - 0.07).abs() < 1e-12);
+        }
+        // plain spec: no racers
+        assert!(parse("graph=g k=2").racer_configs().unwrap().is_empty());
+        // malformed values are loud
+        assert!(parse_err("graph=g k=2 timeout_ms=0").contains("at least 1"));
+        assert!(parse_err("graph=g k=2 timeout_ms=abc").contains("bad integer"));
+        assert!(parse_err("graph=g k=2 race=CFast").contains("at least two"));
+        assert!(parse_err("graph=g k=2 race=CFast,Bogus").contains("unknown preset"));
+        assert!(parse_err("graph=g k=2 race=").contains("unknown preset"));
+    }
+
+    #[test]
+    fn cancelled_line_renders_reason() {
+        use crate::util::cancel::CancelReason;
+        assert_eq!(
+            render_cancelled_line("r\"1\"", CancelReason::Timeout),
+            "{\"id\":\"r\\\"1\\\"\",\"status\":\"cancelled\",\"reason\":\"timeout\"}"
+        );
+        assert_eq!(
+            render_cancelled_line("x", CancelReason::Disconnect),
+            "{\"id\":\"x\",\"status\":\"cancelled\",\"reason\":\"disconnect\"}"
+        );
+    }
+
+    #[test]
     fn to_line_round_trips_and_is_canonical() {
         let line = "id=r1 graph=/tmp/g.graph k=8 preset=UFast seeds=3,1,2 \
                     epsilon=0.05 output=/tmp/o.txt";
@@ -538,6 +678,11 @@ mod tests {
             config_options.push((key.to_string(), value));
         }
         rng.shuffle(&mut config_options);
+        let race = if rng.chance(0.3) {
+            (0..2 + rng.below(3)).map(|_| *rng.choose(&Preset::ALL)).collect()
+        } else {
+            Vec::new()
+        };
         RequestSpec {
             id: token(rng, "r"),
             source,
@@ -546,6 +691,8 @@ mod tests {
             seeds,
             config_options,
             output: rng.chance(0.3).then(|| token(rng, "/o/")),
+            timeout_ms: rng.chance(0.3).then(|| 1 + rng.next_u64() % 3_600_000),
+            race,
         }
     }
 
@@ -586,6 +733,11 @@ mod tests {
             "id=a id=b graph=g k=2",
             "graph=g k=2 reps=0",
             "\u{7f}\u{1}=x",
+            "graph=g k=2 timeout_ms=99999999999999999999999999",
+            "graph=g k=2 timeout_ms=-5",
+            "graph=g k=2 race=,,,",
+            "graph=g k=2 race=CFast,CFast,CFast,CFast,CFast,CFast,CFast,CFast",
+            "graph=g k=2 race=\0",
         ] {
             let _ = parse_request_line(line, "d");
         }

@@ -237,8 +237,16 @@ impl Coordinator {
                 Err(payload) => {
                     // Name the failing repetition so the operator can
                     // reproduce it directly, then let the pool's panic
-                    // containment report the batch failure.
-                    eprintln!("sclap coordinator: repetition seed={seed} panicked");
+                    // containment report the batch failure. Cooperative
+                    // cancellation also travels as a panic payload
+                    // (`util::cancel::Cancelled`) — that one is not a
+                    // bug, so no stderr noise for it.
+                    if payload
+                        .downcast_ref::<crate::util::cancel::Cancelled>()
+                        .is_none()
+                    {
+                        eprintln!("sclap coordinator: repetition seed={seed} panicked");
+                    }
                     std::panic::resume_unwind(payload)
                 }
             }

@@ -177,16 +177,62 @@
 //! let service = BatchService::new(ServiceConfig { workers: 8, max_pending: 32 });
 //! let graph = Arc::new(sclap::generators::instances::by_name("tiny-rmat").unwrap().build());
 //! let ticket = service
-//!     .submit(Request {
-//!         id: "job-1".into(),
-//!         graph: GraphHandle::InMemory(graph),
-//!         config: PartitionConfig::preset(Preset::UFast, 8),
-//!         seeds: (1..=10).collect(),
-//!     })
+//!     .submit(Request::new(
+//!         "job-1",
+//!         GraphHandle::InMemory(graph),
+//!         PartitionConfig::preset(Preset::UFast, 8),
+//!         (1..=10).collect(),
+//!     ))
 //!     .expect("queue accepts while below max_pending");
 //! let agg = ticket.wait().expect("request succeeds");
 //! println!("avg cut = {}", agg.avg_cut);
 //! ```
+//!
+//! # util::cancel: deterministic cooperative cancellation
+//!
+//! Every layer above shares one cancellation fabric
+//! ([`util::cancel`]): a [`util::cancel::CancelToken`] is a
+//! fire-once verdict cell (first [`util::cancel::CancelReason`] wins,
+//! optionally armed with a wall-clock deadline) with cheap
+//! hierarchical children — a child observes its parent's verdict, so
+//! cancelling a request cancels every repetition spawned under it
+//! without touching the siblings. The scheduler enters a per-unit
+//! child token *ambiently* (thread-local, propagated to pool workers
+//! per job by [`util::pool`]), and the long-running inner loops —
+//! SCLaP rounds in all four engines, contraction passes, FM and LPA
+//! refinement passes, V-cycle and out-of-core drivers — poll it at
+//! deterministic checkpoints via [`util::cancel::checkpoint`], which
+//! unwinds with a typed payload that the scheduler catches and maps
+//! to a structured `Cancelled` outcome (never an error, never a bug
+//! report).
+//!
+//! Two invariants anchor the design. **Zero impact:** a token that
+//! never fires changes no result byte — checkpoints cost one
+//! thread-local check plus an atomic load, and cancellation state
+//! (a request's deadline) is never key material for the
+//! result cache (`rust/tests/cancellation.rs`). **Determinism at the
+//! boundary:** *whether* a request is cancelled depends on wall
+//! clock (deadlines) or I/O (disconnects), but a cancelled request
+//! always yields the same structured reply
+//! (`{"status":"cancelled","reason":…}` on the wire), frees its
+//! queue slot and arena leases, and leaves every other request's
+//! bytes untouched.
+//!
+//! Cancellation sources, all funnelled through the same token:
+//! - **deadlines** — `timeout_ms=` in a request spec (or `sclap
+//!   client --timeout`), armed at submission so queue wait counts;
+//! - **disconnects** — the TCP server fires a connection's live
+//!   request tokens when the client vanishes;
+//! - **abandonment** — dropping an unwaited
+//!   [`coordinator::queue::Ticket`] fires its token, so work nobody
+//!   will read is cancelled instead of computed (including at
+//!   shutdown drain);
+//! - **races** — `race=P1,P2,…` runs one request's first seed under
+//!   several configs as one scheduler wave; the best cut wins (ties
+//!   break on race-list order, never timing), the winner's config
+//!   takes over the remaining seeds, and the losers are cancelled.
+//!   The winning aggregate is byte-identical to running the winning
+//!   config alone.
 //!
 //! # coordinator::net: the network service layer
 //!

@@ -23,8 +23,8 @@ use sclap::bail;
 use sclap::coordinator::cli::Args;
 use sclap::coordinator::net::{parse_response, NetClient, NetServer, NetServerConfig};
 use sclap::coordinator::queue::spec::{
-    parse_request_line, render_error_line, render_result_line_full, write_partition_file,
-    RequestSpec,
+    parse_request_line, render_cancelled_line, render_error_line, render_result_line_full,
+    write_partition_file, RequestSpec,
 };
 use sclap::coordinator::queue::{BatchService, ServiceConfig};
 use sclap::coordinator::service::{default_seeds, Coordinator};
@@ -116,8 +116,11 @@ fn print_usage() {
          \n\
          serve: the batching service front end. Reads one request per\n\
            line (key=value tokens: id=, graph=/instance=/shards=, k=,\n\
-           preset=, seeds=1,2,3 or reps=N seed=S, output=, plus any\n\
-           config key such as memory-budget=) from --requests FILE or\n\
+           preset=, seeds=1,2,3 or reps=N seed=S, output=,\n\
+           timeout_ms=MS (cancel when the deadline passes),\n\
+           race=P1,P2 (run the presets as an ensemble race: best cut\n\
+           wins, losers are cancelled), plus any config key such as\n\
+           memory-budget=) from --requests FILE or\n\
            stdin, batches repetitions from all requests onto one\n\
            worker pool (a 1-seed request is never starved behind a\n\
            10-seed request), and writes one JSON result line per\n\
@@ -136,9 +139,12 @@ fn print_usage() {
            otherwise byte-identical to an offline run.\n\
          client: submit spec lines to a serve --listen server and\n\
            stream the JSON result lines to stdout (responses are\n\
-           validated structurally; summary on stderr). --timeout\n\
-           bounds the connect retry only — established connections\n\
-           wait as long as the partition takes.\n\
+           validated structurally; summary on stderr). An explicit\n\
+           --timeout SECS is an end-to-end deadline: it bounds the\n\
+           connect retry and is attached to every request line as\n\
+           timeout_ms=, so the server cancels overdue work and\n\
+           answers {{\"status\":\"cancelled\"}}. The default bounds\n\
+           only the connect retry.\n\
          --memory-budget BYTES (k/m/g suffixes; env\n\
            SCLAP_MEMORY_BUDGET): RAM budget for holding a CSR. Inputs\n\
            beyond it are partitioned out-of-core: semi-external SCLaP\n\
@@ -491,7 +497,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 }
                 Err(e) => {
                     failed += 1;
-                    println!("{}", render_error_line(&e.id, &e.message));
+                    // Cancellation (a `timeout_ms=` deadline firing) is
+                    // a structured outcome with its own status line.
+                    match e.cancelled {
+                        Some(reason) => println!("{}", render_cancelled_line(&e.id, reason)),
+                        None => println!("{}", render_error_line(&e.id, &e.message)),
+                    }
                 }
             },
         }
@@ -509,13 +520,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// responses carry ids). A sender thread pipelines the input while
 /// this thread drains responses; every line is validated structurally
 /// ([`parse_response`]) before being relayed, and a mismatch between
-/// lines sent and responses received is an error. `--timeout` bounds
-/// only the connect retry — once connected, the client waits for
-/// responses as long as the partitions take (requests are unbounded
-/// work by design, so there is no read deadline).
+/// lines sent and responses received is an error.
+///
+/// An **explicit** `--timeout SECS` is an end-to-end deadline: it
+/// bounds the connect retry AND is attached to every request line as
+/// `timeout_ms=` (lines already carrying one keep theirs), so the
+/// server cancels work that outlives it and answers
+/// `{"status":"cancelled","reason":"timeout"}`. Without the flag the
+/// default (10s) bounds only the connect retry — established
+/// connections wait as long as the partitions take.
 fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.get("connect").context("need --connect ADDR")?;
     let timeout = args.get_f64("timeout", 10.0)?;
+    let explicit_timeout = args.get("timeout").is_some();
     let quiet = args.flag("quiet");
     let requests_path = args.get_or("requests", "-");
     let input: Box<dyn BufRead> = if requests_path == "-" {
@@ -529,6 +546,31 @@ fn cmd_client(args: &Args) -> Result<()> {
         .lines()
         .collect::<std::io::Result<_>>()
         .with_context(|| format!("reading {requests_path}"))?;
+    // An explicit --timeout becomes a per-request `timeout_ms=` key on
+    // every spec line that does not already carry one (blank lines,
+    // comments, and ! control commands pass through untouched). The
+    // deadline is armed at server-side submission, so queue wait
+    // counts — this is an end-to-end bound, not a transport knob.
+    let lines: Vec<String> = if explicit_timeout {
+        let ms = ((timeout.max(0.0) * 1000.0).ceil() as u64).max(1);
+        lines
+            .into_iter()
+            .map(|line| {
+                let t = line.trim();
+                if t.is_empty()
+                    || t.starts_with('#')
+                    || t.starts_with('!')
+                    || t.contains("timeout_ms=")
+                {
+                    line
+                } else {
+                    format!("{line} timeout_ms={ms}")
+                }
+            })
+            .collect()
+    } else {
+        lines
+    };
     // Every non-blank, non-comment line — request spec, malformed
     // garbage, or ! control — elicits exactly one response line.
     let expected = lines

@@ -30,6 +30,19 @@
 //! atomics. Hot paths therefore resolve their instrument handle once
 //! (`Arc<Counter>`) and increment it lock-free forever after.
 //!
+//! # Cancellation counters
+//!
+//! The cooperative-cancellation layer (`util::cancel`,
+//! `queue::scheduler`) reports through this registry:
+//! `requests_cancelled` counts every request reaped with a cancelled
+//! reply, one of `cancel_reason_timeout` / `cancel_reason_disconnect` /
+//! `cancel_reason_race_lost` / `cancel_reason_abandoned` (fixed names —
+//! counter names must be `&'static str`, see
+//! [`CancelReason::counter_name`](crate::util::cancel::CancelReason::counter_name))
+//! records why, and `race_losers_cancelled` counts ensemble-race
+//! configs whose remaining repetitions were cancelled after the
+//! decision wave. All are visible over the wire via `!stats`.
+//!
 //! # Phase table
 //!
 //! The phase-timing sink that used to live inside `ExecutionCtx` moved

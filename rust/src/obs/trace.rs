@@ -66,6 +66,14 @@
 //! - span/counter names are static strings (`vcycle`, `coarsening`,
 //!   `uncoarsen_level`, `lpa_round`, ...); args carry the structured
 //!   payload (level index, round, moved nodes, cut, imbalance).
+//! - Cancellation instrumentation uses the same ambient API:
+//!   `request_cancelled` (args: `reason` — the numeric `CancelReason`
+//!   code) when the scheduler reaps a cancelled request, and
+//!   `race_decided` (args: `winner`, `losers`) when an ensemble race
+//!   picks its winner. Like every ambient emission they record only
+//!   when the emitting thread has an entered track; a token that
+//!   never fires emits nothing — the zero-impact invariant extends to
+//!   the trace stream.
 
 use crate::util::rng::splitmix64;
 use std::cell::RefCell;

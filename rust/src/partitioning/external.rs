@@ -172,6 +172,9 @@ pub fn partition_store_with_ctx(
     let mut maps: Vec<Vec<u32>> = Vec::new();
     let mut current: Option<Graph> = None;
     while maps.len() < EXTERNAL_MAX_LEVELS {
+        // An external coarsening level streams every shard once — the
+        // natural cancellation checkpoint for the out-of-core path.
+        crate::util::cancel::checkpoint();
         let level = maps.len();
         let level_timer = Timer::start();
         let level_span = trace::span("external_coarsen_level", &[("level", level as i64)]);
@@ -267,6 +270,7 @@ pub fn partition_store_with_ctx(
     );
     let refine_timer = Timer::start();
     if external_levels > 0 && k > 1 {
+        crate::util::cancel::checkpoint();
         let refine_span = trace::span("external_refinement", &[]);
         let refine_cfg = LpaConfig {
             max_iterations: config.lpa_iterations,

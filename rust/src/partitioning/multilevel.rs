@@ -18,6 +18,7 @@ use crate::partitioning::partition::Partition;
 use crate::refinement::balance::rebalance;
 use crate::refinement::fm::kway_fm_ws;
 use crate::refinement::lpa_refine::{lpa_refine_ws, parallel_lpa_refine};
+use crate::util::cancel;
 use crate::util::exec::ExecutionCtx;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -294,6 +295,10 @@ impl MultilevelPartitioner {
         let mut first_shrink = 1.0f64;
 
         for cycle in 0..cfg.vcycles.max(1) {
+            // Cancellation checkpoint per V-cycle (and per refine level
+            // below): a fired ambient token exits here with the typed
+            // `Cancelled` payload; an unfired one changes nothing.
+            cancel::checkpoint();
             let vcycle_span = trace::span("vcycle", &[("cycle", cycle as i64)]);
             // ---- Coarsening ----
             let t = Timer::start();
@@ -388,6 +393,7 @@ impl MultilevelPartitioner {
                 ctx.record_level("refine_level", q as u32, level_timer.elapsed_s());
             }
             for i in (0..h.levels.len()).rev() {
+                cancel::checkpoint();
                 let finer: &Graph = if i == 0 { input } else { &h.levels[i - 1].graph };
                 blocks = project_partition(&h.levels[i].map, &blocks);
                 // Level i of `levels` is graph G_{i+2} in paper numbering

@@ -228,6 +228,7 @@ pub fn kway_fm_frozen_ws(
     let log = scratch(&mut log_l, &mut log_o);
 
     for _ in 0..config.max_passes {
+        crate::util::cancel::checkpoint();
         passes += 1;
         // Seed queue with boundary nodes.
         queue.reset(g.n(), max_gain);

@@ -102,6 +102,7 @@ pub fn parallel_lpa_refine(
     }
 
     for round in 0..iterations {
+        crate::util::cancel::checkpoint();
         let round_seed = rng.next_u64();
         let applied = synchronous_round(
             g,

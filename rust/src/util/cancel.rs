@@ -1,0 +1,359 @@
+//! Deterministic cooperative cancellation.
+//!
+//! A [`CancelToken`] is a cheap, cloneable flag that long-running work
+//! polls at natural checkpoints (pool task boundaries, LPA/FM rounds,
+//! contraction passes, V-cycle levels, external levels). Tokens form a
+//! shallow hierarchy: a request token is the parent of one child token
+//! per repetition ([`CancelToken::child`]), so firing the request
+//! cancels every repetition without the scheduler tracking them
+//! individually.
+//!
+//! The governing invariant (same contract shape as tracing): **a token
+//! that never fires changes no result byte.** Checkpoints only act on a
+//! fired token; polling an unfired token is one relaxed atomic load
+//! (plus one parent load, plus one clock read only when a deadline was
+//! armed), so the partitioning pipeline is bit-identical with
+//! cancellation compiled in, ambient, and dormant.
+//!
+//! # The ambient token and `checkpoint()`
+//!
+//! Like the tracer's thread-local track, the *current* token is
+//! ambient: the scheduler enters a repetition's child token with
+//! [`enter`] (a RAII scope), and every checkpoint in the pipeline calls
+//! the free function [`checkpoint`] without any signature threading.
+//! When the ambient token has fired, `checkpoint()` unwinds with a
+//! typed [`Cancelled`] panic payload; the repetition boundary (the
+//! scheduler's per-unit `catch_unwind`, the pool's per-task harness)
+//! downcasts it into a structured cancelled outcome instead of an
+//! error. Code with no ambient token (direct library calls, the CLI
+//! `partition` path) polls nothing and can never unwind here.
+//!
+//! The thread pool cooperates at task granularity:
+//! [`ThreadPool::run`](crate::util::pool::ThreadPool::run) captures the
+//! submitter's ambient token into the job, workers re-enter it around
+//! each task (so nested checkpoints see it) and skip still-unclaimed
+//! tasks once it fires — the job drains normally and `run` re-raises
+//! the typed payload on the submitting thread.
+//!
+//! # Reasons
+//!
+//! [`CancelReason`] records *why* work stopped — a request deadline
+//! ([`CancelToken::set_deadline`], wired from the `timeout_ms=` spec
+//! key), a client disconnect, losing an ensemble race, or an abandoned
+//! ticket. The first fire wins; later fires (and the deadline) never
+//! overwrite it. The reason is rendered on the wire as
+//! `{"status":"cancelled","reason":"…"}`.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// Why a computation was cancelled. Rendered lowercase on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelReason {
+    /// The request's `timeout_ms=` deadline passed.
+    Timeout,
+    /// The submitting client's connection went away.
+    Disconnect,
+    /// An ensemble race decided for a different config.
+    RaceLost,
+    /// The submitter dropped its ticket before the result existed.
+    Abandoned,
+}
+
+impl CancelReason {
+    /// Stable wire string (`{"status":"cancelled","reason":…}`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CancelReason::Timeout => "timeout",
+            CancelReason::Disconnect => "disconnect",
+            CancelReason::RaceLost => "race_lost",
+            CancelReason::Abandoned => "abandoned",
+        }
+    }
+
+    /// The per-reason metrics counter name (counter names must be
+    /// `&'static str`, so each reason owns a fixed counter).
+    pub fn counter_name(self) -> &'static str {
+        match self {
+            CancelReason::Timeout => "cancel_reason_timeout",
+            CancelReason::Disconnect => "cancel_reason_disconnect",
+            CancelReason::RaceLost => "cancel_reason_race_lost",
+            CancelReason::Abandoned => "cancel_reason_abandoned",
+        }
+    }
+
+    pub(crate) fn code(self) -> u8 {
+        match self {
+            CancelReason::Timeout => 1,
+            CancelReason::Disconnect => 2,
+            CancelReason::RaceLost => 3,
+            CancelReason::Abandoned => 4,
+        }
+    }
+
+    pub(crate) fn from_code(code: u8) -> Option<CancelReason> {
+        match code {
+            1 => Some(CancelReason::Timeout),
+            2 => Some(CancelReason::Disconnect),
+            3 => Some(CancelReason::RaceLost),
+            4 => Some(CancelReason::Abandoned),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for CancelReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The typed panic payload [`checkpoint`] unwinds with. Boundaries
+/// (`queue::scheduler::run_unit`, the pool's task harness) downcast the
+/// caught payload to this type to tell cancellation apart from a bug.
+#[derive(Debug, Clone, Copy)]
+pub struct Cancelled {
+    pub reason: CancelReason,
+}
+
+struct Inner {
+    /// 0 = live; otherwise a [`CancelReason`] code. First store wins.
+    state: AtomicU8,
+    /// Armed at most once ([`CancelToken::set_deadline`]); checked by
+    /// every poll, firing `Timeout` the first time the clock passes it.
+    deadline: OnceLock<Instant>,
+    /// Request token for repetition children (depth ≤ 1 in practice).
+    parent: Option<Arc<Inner>>,
+}
+
+impl Inner {
+    fn fire(&self, reason: CancelReason) {
+        // First reason wins; a later deadline never overwrites an
+        // explicit fire (and vice versa).
+        let _ = self
+            .state
+            .compare_exchange(0, reason.code(), Ordering::AcqRel, Ordering::Acquire);
+    }
+
+    fn poll(&self) -> Option<CancelReason> {
+        let state = self.state.load(Ordering::Acquire);
+        if let Some(reason) = CancelReason::from_code(state) {
+            return Some(reason);
+        }
+        if let Some(deadline) = self.deadline.get() {
+            if Instant::now() >= *deadline {
+                self.fire(CancelReason::Timeout);
+                return CancelReason::from_code(self.state.load(Ordering::Acquire));
+            }
+        }
+        if let Some(parent) = &self.parent {
+            if let Some(reason) = parent.poll() {
+                // Cache the verdict locally so later polls stop walking.
+                self.fire(reason);
+                return CancelReason::from_code(self.state.load(Ordering::Acquire));
+            }
+        }
+        None
+    }
+}
+
+/// A cheap, cloneable cancellation flag (an `Arc` of two atomics).
+/// Clones observe the same fire; [`child`](CancelToken::child) tokens
+/// additionally observe their parent's.
+#[derive(Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        CancelToken::new()
+    }
+}
+
+impl fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CancelToken")
+            .field("fired", &self.poll())
+            .finish()
+    }
+}
+
+impl CancelToken {
+    /// A live token that will never fire unless asked to.
+    pub fn new() -> Self {
+        CancelToken {
+            inner: Arc::new(Inner {
+                state: AtomicU8::new(0),
+                deadline: OnceLock::new(),
+                parent: None,
+            }),
+        }
+    }
+
+    /// A child token: fires when either it or its parent fires. The
+    /// scheduler hands one child per repetition, so cancelling a
+    /// request cancels all its repetitions.
+    pub fn child(&self) -> CancelToken {
+        CancelToken {
+            inner: Arc::new(Inner {
+                state: AtomicU8::new(0),
+                deadline: OnceLock::new(),
+                parent: Some(self.inner.clone()),
+            }),
+        }
+    }
+
+    /// Fire the token. The first reason wins; firing an already-fired
+    /// token is a no-op.
+    pub fn fire(&self, reason: CancelReason) {
+        self.inner.fire(reason);
+    }
+
+    /// Arm a wall-clock deadline (at most once). Any poll past the
+    /// deadline fires `Timeout`.
+    pub fn set_deadline(&self, deadline: Instant) {
+        let _ = self.inner.deadline.set(deadline);
+    }
+
+    /// Has the token (or an ancestor, or the deadline) fired?
+    pub fn poll(&self) -> Option<CancelReason> {
+        self.inner.poll()
+    }
+}
+
+thread_local! {
+    /// The ambient token stack — entered per repetition by the
+    /// scheduler and re-entered by pool workers around each task.
+    static AMBIENT: RefCell<Vec<CancelToken>> = const { RefCell::new(Vec::new()) };
+}
+
+/// RAII guard for an ambient token scope (see [`enter`]).
+pub struct CancelScope {
+    _private: (),
+}
+
+impl Drop for CancelScope {
+    fn drop(&mut self) {
+        AMBIENT.with(|stack| {
+            stack.borrow_mut().pop();
+        });
+    }
+}
+
+/// Make `token` the ambient token on this thread until the returned
+/// scope drops. Scopes nest; the innermost token is the one
+/// [`checkpoint`] polls.
+pub fn enter(token: CancelToken) -> CancelScope {
+    AMBIENT.with(|stack| stack.borrow_mut().push(token));
+    CancelScope { _private: () }
+}
+
+/// The innermost ambient token, if any (cloned — used by the pool to
+/// carry the submitter's token into its job).
+pub fn current() -> Option<CancelToken> {
+    AMBIENT.with(|stack| stack.borrow().last().cloned())
+}
+
+/// Poll the ambient token without unwinding. `None` when no token is
+/// ambient or it has not fired.
+pub fn ambient_poll() -> Option<CancelReason> {
+    AMBIENT.with(|stack| stack.borrow().last().map(|t| t.poll()))?
+}
+
+/// The cooperative checkpoint: if the ambient token has fired, emit a
+/// `cancelled` trace counter (so Perfetto shows where the repetition
+/// stopped) and unwind with the typed [`Cancelled`] payload. With no
+/// ambient token, or an unfired one, this is a no-op — the pipeline is
+/// byte-identical.
+#[inline]
+pub fn checkpoint() {
+    if let Some(reason) = ambient_poll() {
+        crate::obs::trace::counter("cancelled", &[("reason", reason.code() as i64)]);
+        std::panic::panic_any(Cancelled { reason });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn unfired_token_polls_none() {
+        let t = CancelToken::new();
+        assert_eq!(t.poll(), None);
+        assert_eq!(t.child().poll(), None);
+    }
+
+    #[test]
+    fn first_fire_wins() {
+        let t = CancelToken::new();
+        t.fire(CancelReason::Disconnect);
+        t.fire(CancelReason::Timeout);
+        assert_eq!(t.poll(), Some(CancelReason::Disconnect));
+    }
+
+    #[test]
+    fn child_sees_parent_fire_and_caches_it() {
+        let parent = CancelToken::new();
+        let child = parent.child();
+        assert_eq!(child.poll(), None);
+        parent.fire(CancelReason::RaceLost);
+        assert_eq!(child.poll(), Some(CancelReason::RaceLost));
+        // A child's own earlier fire wins over a later parent fire.
+        let parent2 = CancelToken::new();
+        let child2 = parent2.child();
+        child2.fire(CancelReason::Abandoned);
+        parent2.fire(CancelReason::Timeout);
+        assert_eq!(child2.poll(), Some(CancelReason::Abandoned));
+        assert_eq!(parent2.poll(), Some(CancelReason::Timeout));
+    }
+
+    #[test]
+    fn deadline_fires_timeout() {
+        let t = CancelToken::new();
+        t.set_deadline(Instant::now() - Duration::from_millis(1));
+        assert_eq!(t.poll(), Some(CancelReason::Timeout));
+        // Deadline on the parent reaches children too.
+        let p = CancelToken::new();
+        let c = p.child();
+        p.set_deadline(Instant::now() - Duration::from_millis(1));
+        assert_eq!(c.poll(), Some(CancelReason::Timeout));
+    }
+
+    #[test]
+    fn ambient_scope_nests_and_restores() {
+        assert!(current().is_none());
+        let outer = CancelToken::new();
+        let inner = CancelToken::new();
+        inner.fire(CancelReason::Timeout);
+        let _a = enter(outer.clone());
+        assert_eq!(ambient_poll(), None);
+        {
+            let _b = enter(inner);
+            assert_eq!(ambient_poll(), Some(CancelReason::Timeout));
+        }
+        assert_eq!(ambient_poll(), None);
+        drop(_a);
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn checkpoint_unwinds_with_typed_payload() {
+        let t = CancelToken::new();
+        t.fire(CancelReason::Disconnect);
+        let _scope = enter(t);
+        let err = std::panic::catch_unwind(checkpoint).unwrap_err();
+        let cancelled = err.downcast_ref::<Cancelled>().expect("typed payload");
+        assert_eq!(cancelled.reason, CancelReason::Disconnect);
+    }
+
+    #[test]
+    fn checkpoint_without_ambient_token_is_a_no_op() {
+        checkpoint(); // must not panic
+    }
+}

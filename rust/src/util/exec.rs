@@ -28,6 +28,7 @@
 use crate::obs::metrics::MetricsRegistry;
 use crate::obs::trace::Tracer;
 use crate::partitioning::workspace::VcycleWorkspace;
+use crate::util::cancel::{self, CancelScope, CancelToken};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::splitmix64;
 use std::sync::{Arc, Mutex};
@@ -128,6 +129,18 @@ impl ExecutionCtx {
     /// per repetition (track enter), never on the event hot path.
     pub fn tracer(&self) -> Option<Arc<Tracer>> {
         self.tracer.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Enter `token` as the ambient cancellation token for work run on
+    /// this context's thread until the returned scope drops — the
+    /// cancellation sibling of the tracer's track enter. Checkpoints in
+    /// the pipeline ([`crate::util::cancel::checkpoint`]) and the
+    /// pool's task boundaries poll it; a token that never fires changes
+    /// no result byte. Tokens are hierarchical: the scheduler enters
+    /// one [`CancelToken::child`] per repetition, so cancelling the
+    /// request token cancels every repetition.
+    pub fn cancel_scope(&self, token: CancelToken) -> CancelScope {
+        cancel::enter(token)
     }
 
     /// Accumulate `seconds` of wall-clock into the named phase (a thin

@@ -7,6 +7,7 @@
 
 pub mod arena;
 pub mod bucket_queue;
+pub mod cancel;
 pub mod error;
 pub mod exec;
 pub mod fast_reset;
@@ -19,6 +20,7 @@ pub mod union_find;
 
 pub use arena::{Arena, Lease};
 pub use bucket_queue::BucketQueue;
+pub use cancel::{CancelReason, CancelToken};
 pub use error::{Context, Error};
 pub use exec::ExecutionCtx;
 pub use fast_reset::{BitVec, FastResetArray};

@@ -62,9 +62,10 @@
 //! and every later job — down) and re-raised on the caller after the
 //! job drains.
 
+use crate::util::cancel::{self, CancelToken, Cancelled};
 use std::cell::RefCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
@@ -140,6 +141,32 @@ struct JobCtrl {
     /// batch on the same long-lived pool (regression test:
     /// `panic_flag_is_scoped_to_its_job`).
     panicked: AtomicBool,
+    /// The submitter's ambient [`CancelToken`] at dispatch time, carried
+    /// into the job so workers poll it at task boundaries and re-enter
+    /// it around each task (nested checkpoints see it). `None` when the
+    /// submitter had no ambient token — zero per-task overhead then.
+    cancel: Option<CancelToken>,
+    /// Nonzero once the token fired mid-job: the `CancelReason` code.
+    /// Remaining tasks are skipped (the job still drains normally) and
+    /// `run` re-raises the typed [`Cancelled`] payload on the caller.
+    cancelled: AtomicU8,
+}
+
+impl JobCtrl {
+    /// Store the cancellation verdict (first reason wins, like the token).
+    fn mark_cancelled(&self, reason: cancel::CancelReason) {
+        let _ = self.cancelled.compare_exchange(
+            0,
+            reason.code(),
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+    }
+
+    /// The cancellation verdict, if any task boundary observed a fire.
+    fn cancelled_reason(&self) -> Option<cancel::CancelReason> {
+        cancel::CancelReason::from_code(self.cancelled.load(Ordering::Acquire))
+    }
 }
 
 struct PoolState {
@@ -255,6 +282,9 @@ impl ThreadPool {
         // scratch inside the nesting task (module docs, re-entrancy).
         if pool_entered(self.id) {
             for i in 0..count {
+                // Inline jobs poll the ambient token at the same task
+                // granularity as dispatched ones (no-op when unfired).
+                cancel::checkpoint();
                 f(0, i);
             }
             return;
@@ -273,6 +303,7 @@ impl ThreadPool {
         if self.workers.is_empty() || count == 1 {
             // Sequential fast path: same schedule, no worker dispatch.
             for i in 0..count {
+                cancel::checkpoint();
                 f(0, i);
             }
             return;
@@ -289,6 +320,8 @@ impl ThreadPool {
             next: AtomicUsize::new(0),
             remaining: AtomicUsize::new(count),
             panicked: AtomicBool::new(false),
+            cancel: cancel::current(),
+            cancelled: AtomicU8::new(0),
         });
 
         {
@@ -314,6 +347,12 @@ impl ThreadPool {
 
         if ctrl.panicked.load(Ordering::Relaxed) {
             panic!("sclap::util::pool: a pool task panicked (see stderr above)");
+        }
+        if let Some(reason) = ctrl.cancelled_reason() {
+            // Some tasks were skipped (or unwound) because the token
+            // fired mid-job: the partial job result is meaningless, so
+            // re-raise the typed payload for the repetition boundary.
+            std::panic::panic_any(Cancelled { reason });
         }
     }
 
@@ -399,13 +438,39 @@ fn work_on(ctrl: &JobCtrl, worker: usize, shared: &Shared) {
         if i >= ctrl.count {
             return;
         }
-        let result = catch_unwind(AssertUnwindSafe(|| (ctrl.task)(worker, i)));
-        if result.is_err() {
-            // Context for batch operators: which task blew up (callers
-            // add their own domain context, e.g. the coordinator prints
-            // the repetition seed before rethrowing).
-            eprintln!("sclap pool worker {worker}: task {i} panicked");
-            ctrl.panicked.store(true, Ordering::Relaxed);
+        // Cooperative cancellation at task granularity: once the
+        // submitter's token fires, remaining tasks are skipped — but the
+        // claim/decrement protocol is unchanged, so the job drains and
+        // the caller wakes normally (no deadlock, no leaked state).
+        let skip = match &ctrl.cancel {
+            Some(token) => {
+                let fired = ctrl.cancelled_reason().or_else(|| token.poll());
+                if let Some(reason) = fired {
+                    ctrl.mark_cancelled(reason);
+                }
+                fired.is_some()
+            }
+            None => false,
+        };
+        if !skip {
+            // Re-enter the submitter's token ambiently so checkpoints
+            // inside the task (nested pool use, inner loops) see it.
+            let _scope = ctrl.cancel.clone().map(cancel::enter);
+            let result = catch_unwind(AssertUnwindSafe(|| (ctrl.task)(worker, i)));
+            if let Err(payload) = result {
+                if let Some(c) = payload.downcast_ref::<Cancelled>() {
+                    // A checkpoint inside the task unwound: cancellation,
+                    // not a bug — no stderr noise, no panic flag.
+                    ctrl.mark_cancelled(c.reason);
+                } else {
+                    // Context for batch operators: which task blew up
+                    // (callers add their own domain context, e.g. the
+                    // coordinator prints the repetition seed before
+                    // rethrowing).
+                    eprintln!("sclap pool worker {worker}: task {i} panicked");
+                    ctrl.panicked.store(true, Ordering::Relaxed);
+                }
+            }
         }
         if ctrl.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
             // Last task: wake the caller. Lock pairs the notify with the
@@ -635,6 +700,71 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn unfired_ambient_token_changes_nothing() {
+        // The cancellation invariant at the pool level: a live-but-
+        // unfired ambient token is unobservable in results.
+        for threads in [1usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let reference = pool.map_indexed(100, |_w, i| i * 3);
+            let token = cancel::CancelToken::new();
+            let _scope = cancel::enter(token);
+            let out = pool.map_indexed(100, |_w, i| i * 3);
+            assert_eq!(out, reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fired_token_cancels_job_with_typed_payload_and_pool_survives() {
+        for threads in [1usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let token = cancel::CancelToken::new();
+            let executed = AtomicUsize::new(0);
+            let err = {
+                let _scope = cancel::enter(token.clone());
+                token.fire(cancel::CancelReason::Timeout);
+                catch_unwind(AssertUnwindSafe(|| {
+                    pool.run(64, |_w, _i| {
+                        executed.fetch_add(1, Ordering::Relaxed);
+                    });
+                }))
+                .unwrap_err()
+            };
+            let cancelled = err
+                .downcast_ref::<Cancelled>()
+                .unwrap_or_else(|| panic!("threads={threads}: expected typed payload"));
+            assert_eq!(cancelled.reason, cancel::CancelReason::Timeout);
+            // A pre-fired token stops the job at the first boundary.
+            assert_eq!(executed.load(Ordering::Relaxed), 0, "threads={threads}");
+            // The pool is healthy for later jobs (no ambient token now).
+            let out = pool.map_indexed(8, |_w, i| i + 1);
+            assert_eq!(out, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        }
+    }
+
+    #[test]
+    fn checkpoint_inside_a_task_cancels_the_whole_job() {
+        // A mid-task checkpoint (workers re-enter the submitter's token)
+        // unwinds as cancellation, not as a task panic: the job drains,
+        // the caller gets the typed payload, no "task panicked" report.
+        let pool = ThreadPool::new(3);
+        let token = cancel::CancelToken::new();
+        let _scope = cancel::enter(token.clone());
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(32, |_w, i| {
+                if i == 0 {
+                    token.fire(cancel::CancelReason::RaceLost);
+                }
+                cancel::checkpoint();
+            });
+        }))
+        .unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<Cancelled>().expect("typed payload").reason,
+            cancel::CancelReason::RaceLost
+        );
     }
 
     #[test]

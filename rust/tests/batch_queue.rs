@@ -84,12 +84,7 @@ fn in_memory_case(id: &str, graph: Arc<Graph>, config: PartitionConfig, seeds: V
         det(&Coordinator::new(2).partition_repeated(graph.clone(), &config, &seeds))
     };
     Case {
-        request: Request {
-            id: id.to_string(),
-            graph: GraphHandle::InMemory(graph),
-            config,
-            seeds,
-        },
+        request: Request::new(id, GraphHandle::InMemory(graph), config, seeds),
         expected,
     }
 }
@@ -104,12 +99,7 @@ fn sharded_case(id: &str, dir: &Path, config: PartitionConfig, seeds: Vec<u64>) 
         })
         .collect();
     Case {
-        request: Request {
-            id: id.to_string(),
-            graph: GraphHandle::Shards(dir.to_path_buf()),
-            config,
-            seeds,
-        },
+        request: Request::new(id, GraphHandle::Shards(dir.to_path_buf()), config, seeds),
         expected: det(&Aggregate::from_runs(runs)),
     }
 }
@@ -197,11 +187,13 @@ fn backpressure_bounds_the_queue() {
         max_pending: 2,
     });
     let karate = Arc::new(karate_club());
-    let request = |id: &str| Request {
-        id: id.to_string(),
-        graph: GraphHandle::InMemory(karate.clone()),
-        config: PartitionConfig::preset(Preset::CFast, 2),
-        seeds: vec![1, 2],
+    let request = |id: &str| {
+        Request::new(
+            id,
+            GraphHandle::InMemory(karate.clone()),
+            PartitionConfig::preset(Preset::CFast, 2),
+            vec![1, 2],
+        )
     };
     // Pause the scheduler so nothing drains: the bound is deterministic.
     service.pause();
@@ -240,11 +232,13 @@ fn panicking_request_is_isolated() {
         max_pending: 8,
     });
     let karate = Arc::new(karate_club());
-    let good = |id: &str| Request {
-        id: id.to_string(),
-        graph: GraphHandle::InMemory(karate.clone()),
-        config: PartitionConfig::preset(Preset::CFast, 2),
-        seeds: vec![1, 2, 3],
+    let good = |id: &str| {
+        Request::new(
+            id,
+            GraphHandle::InMemory(karate.clone()),
+            PartitionConfig::preset(Preset::CFast, 2),
+            vec![1, 2, 3],
+        )
     };
     // k = 0 violates the partitioner's precondition and panics inside
     // the repetition.
@@ -252,12 +246,12 @@ fn panicking_request_is_isolated() {
     poisoned.k = 0;
     let before = service.submit(good("before")).unwrap();
     let bad = service
-        .submit(Request {
-            id: "poisoned".to_string(),
-            graph: GraphHandle::InMemory(karate.clone()),
-            config: poisoned,
-            seeds: vec![1, 2],
-        })
+        .submit(Request::new(
+            "poisoned",
+            GraphHandle::InMemory(karate.clone()),
+            poisoned,
+            vec![1, 2],
+        ))
         .unwrap();
     let after = service.submit(good("after")).unwrap();
 
@@ -283,12 +277,12 @@ fn shutdown_drains_accepted_requests() {
     let tickets: Vec<_> = (0..4u64)
         .map(|i| {
             service
-                .submit(Request {
-                    id: format!("drain-{i}"),
-                    graph: GraphHandle::InMemory(karate.clone()),
-                    config: PartitionConfig::preset(Preset::CFast, 2),
-                    seeds: vec![i + 1],
-                })
+                .submit(Request::new(
+                    format!("drain-{i}"),
+                    GraphHandle::InMemory(karate.clone()),
+                    PartitionConfig::preset(Preset::CFast, 2),
+                    vec![i + 1],
+                ))
                 .unwrap()
         })
         .collect();
@@ -316,23 +310,68 @@ fn sharded_and_in_memory_backends_agree_through_the_queue() {
         max_pending: 4,
     });
     let mem = service
-        .submit(Request {
-            id: "mem".into(),
-            graph: GraphHandle::InMemory(community.clone()),
-            config: config.clone(),
-            seeds: vec![3, 4],
-        })
+        .submit(Request::new(
+            "mem",
+            GraphHandle::InMemory(community.clone()),
+            config.clone(),
+            vec![3, 4],
+        ))
         .unwrap();
     let sharded = service
-        .submit(Request {
-            id: "sharded".into(),
-            graph: GraphHandle::Shards(dir.clone()),
+        .submit(Request::new(
+            "sharded",
+            GraphHandle::Shards(dir.clone()),
             config,
-            seeds: vec![3, 4],
-        })
+            vec![3, 4],
+        ))
         .unwrap();
     let a = mem.wait().unwrap();
     let b = sharded.wait().unwrap();
     assert_eq!(det(&a), det(&b));
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Regression: the shutdown drain used to *compute* still-queued
+/// repetitions of requests whose submitter had dropped the ticket —
+/// work nobody would ever read. Dropping an unwaited ticket now fires
+/// the request's token (`Abandoned`), so the drain reaps it as
+/// cancelled instead, while every still-wanted request completes.
+#[test]
+fn shutdown_drain_cancels_abandoned_requests_instead_of_computing() {
+    let service = BatchService::new(ServiceConfig {
+        workers: 2,
+        max_pending: 8,
+    });
+    let ctx = service.ctx().clone();
+    let karate = Arc::new(karate_club());
+    // Pause the scheduler so both requests are still queued when the
+    // ticket is dropped — the abandonment deterministically precedes
+    // any dispatch.
+    service.pause();
+    let abandoned = service
+        .submit(Request::new(
+            "abandoned",
+            GraphHandle::InMemory(karate.clone()),
+            PartitionConfig::preset(Preset::CFast, 2),
+            vec![1, 2, 3],
+        ))
+        .unwrap();
+    drop(abandoned); // submitter walks away without waiting
+    let kept = service
+        .submit(Request::new(
+            "kept",
+            GraphHandle::InMemory(karate.clone()),
+            PartitionConfig::preset(Preset::CFast, 2),
+            vec![5],
+        ))
+        .unwrap();
+    service.resume();
+    service.shutdown();
+    // The still-wanted request drains normally...
+    assert_eq!(kept.wait().unwrap().runs.len(), 1);
+    // ...and the abandoned one was cancelled, not silently computed.
+    let metrics = ctx.metrics();
+    assert_eq!(metrics.counter("requests_cancelled").get(), 1);
+    assert_eq!(metrics.counter("cancel_reason_abandoned").get(), 1);
+    assert_eq!(metrics.counter("requests_completed").get(), 1);
 }

@@ -1,0 +1,324 @@
+//! Integration: deterministic cooperative cancellation (`util::cancel`
+//! threaded through the queue, the scheduler, and the net layer).
+//!
+//! The contract under test (ISSUE 9 acceptance):
+//!
+//! 1. a cancel token that never fires changes **no result byte** —
+//!    across worker counts {1, 4} and both storage backends, with or
+//!    without an armed (but unexpired) deadline;
+//! 2. an ensemble `race=` request's winning aggregate is
+//!    **byte-identical** to running the winning config alone;
+//! 3. cancellation — deadline timeout, abandoned ticket, race loss,
+//!    client disconnect — frees queue slots and arena leases, and the
+//!    service keeps serving deterministically afterward.
+
+use sclap::coordinator::net::{parse_response, NetClient, NetServer, NetServerConfig};
+use sclap::coordinator::queue::spec::render_result_line;
+use sclap::coordinator::queue::{
+    BatchService, GraphHandle, RaceEntry, Request, ServiceConfig, SubmitError,
+};
+use sclap::coordinator::service::{Aggregate, Coordinator, RunOutcome};
+use sclap::graph::csr::{Graph, Weight};
+use sclap::graph::karate_club;
+use sclap::graph::store::{write_sharded, ShardedStore};
+use sclap::partitioning::config::{PartitionConfig, Preset};
+use sclap::util::cancel::CancelReason;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The deterministic projection of an `Aggregate` (same shape as
+/// `tests/batch_queue.rs`): everything except the wall-clock fields.
+type Det = (
+    Vec<(u64, Weight, bool, Vec<u32>)>,
+    String, // avg_cut, via its exact decimal rendering
+    Weight, // best_cut
+    Vec<u32>,
+    usize, // infeasible_runs
+);
+
+fn det(agg: &Aggregate) -> Det {
+    (
+        agg.runs
+            .iter()
+            .map(|r| (r.seed, r.cut, r.feasible, r.blocks.clone()))
+            .collect(),
+        format!("{}", agg.avg_cut),
+        agg.best_cut,
+        agg.best_blocks.clone(),
+        agg.infeasible_runs,
+    )
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("sclap-cancel-{tag}-{}", std::process::id()))
+}
+
+/// Community instance big enough for the budget-1 external path (same
+/// parameters as `tests/batch_queue.rs`).
+fn lfr() -> Graph {
+    let mut rng = sclap::util::rng::Rng::new(4);
+    sclap::generators::lfr::lfr_like(1200, 6.0, 0.15, &mut rng).0
+}
+
+fn karate_request(id: &str, graph: &Arc<Graph>, seeds: Vec<u64>) -> Request {
+    Request::new(
+        id,
+        GraphHandle::InMemory(graph.clone()),
+        PartitionConfig::preset(Preset::CFast, 2),
+        seeds,
+    )
+}
+
+// ---------------------------------------------------------------------
+// Invariant 1: an unfired token changes no result byte.
+// ---------------------------------------------------------------------
+
+#[test]
+fn unfired_token_changes_no_result_byte() {
+    let karate = Arc::new(karate_club());
+    let community = Arc::new(lfr());
+    let dir = temp_dir("unfired");
+    write_sharded(&community, &dir, 3).unwrap();
+    let mut budgeted = PartitionConfig::preset(Preset::CFast, 4);
+    budgeted.memory_budget_bytes = Some(1); // force the external path
+
+    // Serial references, computed exactly like the queue computes them.
+    let mem_config = PartitionConfig::preset(Preset::CFast, 2);
+    let mem_seeds = vec![1u64, 2, 3];
+    let mem_expected = det(&Coordinator::new(2).partition_repeated(
+        karate.clone(),
+        &mem_config,
+        &mem_seeds,
+    ));
+    let coord = Coordinator::new(2);
+    let store = ShardedStore::open(&dir).unwrap();
+    let shard_seeds = vec![3u64, 4];
+    let shard_runs: Vec<RunOutcome> = shard_seeds
+        .iter()
+        .map(|&s| {
+            RunOutcome::from_out_of_core(s, &coord.partition_store(&store, &budgeted, s).unwrap())
+        })
+        .collect();
+    let shard_expected = det(&Aggregate::from_runs(shard_runs));
+    drop(store);
+
+    for workers in [1usize, 4] {
+        let service = BatchService::new(ServiceConfig {
+            workers,
+            max_pending: 8,
+        });
+        // Every request carries a live token; "armed" variants also
+        // carry a far-future deadline (one hour — never expires inside
+        // the test). Neither may change a byte of the result.
+        let mem_plain = karate_request("mem-plain", &karate, mem_seeds.clone());
+        let mut mem_armed = karate_request("mem-armed", &karate, mem_seeds.clone());
+        mem_armed.timeout_ms = Some(3_600_000);
+        let shard_plain = Request::new(
+            "shard-plain",
+            GraphHandle::Shards(dir.clone()),
+            budgeted.clone(),
+            shard_seeds.clone(),
+        );
+        let mut shard_armed = shard_plain.clone(); // clone = fresh token
+        shard_armed.id = "shard-armed".into();
+        shard_armed.timeout_ms = Some(3_600_000);
+
+        let tickets: Vec<_> = [mem_plain, mem_armed, shard_plain, shard_armed]
+            .into_iter()
+            .map(|r| service.submit(r).unwrap())
+            .collect();
+        let results: Vec<Det> = tickets
+            .into_iter()
+            .map(|t| det(&t.wait().unwrap_or_else(|e| panic!("workers={workers}: {e}"))))
+            .collect();
+        assert_eq!(results[0], mem_expected, "workers={workers}: plain mem");
+        assert_eq!(results[1], mem_expected, "workers={workers}: armed mem");
+        assert_eq!(results[2], shard_expected, "workers={workers}: plain shards");
+        assert_eq!(results[3], shard_expected, "workers={workers}: armed shards");
+        // No cancellation happened anywhere.
+        assert_eq!(service.ctx().metrics().counter("requests_cancelled").get(), 0);
+        service.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Invariant 2: the race winner is byte-identical to running it alone.
+// ---------------------------------------------------------------------
+
+#[test]
+fn race_winner_is_byte_identical_to_running_the_winner_alone() {
+    let karate = Arc::new(karate_club());
+    let seeds = vec![1u64, 2, 3];
+    let racers = [
+        ("CFast", PartitionConfig::preset(Preset::CFast, 2)),
+        ("UFast", PartitionConfig::preset(Preset::UFast, 2)),
+    ];
+
+    // Decide the winner offline, exactly like the scheduler does: each
+    // racer runs the first seed; lowest cut wins, ties break on race
+    // order. Then the whole-request reference is the winning config
+    // alone over every seed.
+    let coord = Coordinator::new(2);
+    let first_cuts: Vec<Weight> = racers
+        .iter()
+        .map(|(_, config)| {
+            coord
+                .partition_repeated(karate.clone(), config, &seeds[..1])
+                .best_cut
+        })
+        .collect();
+    let winner = (0..racers.len())
+        .min_by_key(|&i| (first_cuts[i], i))
+        .unwrap();
+    let expected = det(&coord.partition_repeated(karate.clone(), &racers[winner].1, &seeds));
+
+    for workers in [1usize, 4] {
+        let service = BatchService::new(ServiceConfig {
+            workers,
+            max_pending: 8,
+        });
+        let mut request = karate_request("race", &karate, seeds.clone());
+        request.race = racers
+            .iter()
+            .map(|(name, config)| RaceEntry {
+                name: (*name).to_string(),
+                config: config.clone(),
+            })
+            .collect();
+        let agg = service.submit(request).unwrap().wait().unwrap();
+        assert_eq!(
+            det(&agg),
+            expected,
+            "workers={workers}: race aggregate must be byte-identical to \
+             running the winning config alone"
+        );
+        let metrics = service.ctx().metrics();
+        assert_eq!(metrics.counter("race_losers_cancelled").get(), 1);
+        assert_eq!(metrics.counter("requests_cancelled").get(), 0, "the request itself completed");
+        service.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Invariant 3: cancellation frees queue slots and arena leases, and
+// the service keeps serving deterministically afterward.
+// ---------------------------------------------------------------------
+
+#[test]
+fn cancellation_frees_slots_and_leases_and_the_service_keeps_serving() {
+    let karate = Arc::new(karate_club());
+    let reference = det(&Coordinator::new(2).partition_repeated(
+        karate.clone(),
+        &PartitionConfig::preset(Preset::CFast, 2),
+        &[1, 2, 3],
+    ));
+
+    let service = BatchService::new(ServiceConfig {
+        workers: 2,
+        max_pending: 2,
+    });
+    let ctx = service.ctx().clone();
+    // Pause so both doomed requests are still queued when their tokens
+    // fire — cancellation deterministically precedes any dispatch.
+    service.pause();
+    let mut doomed = karate_request("doomed", &karate, vec![1, 2, 3]);
+    doomed.timeout_ms = Some(1); // armed at submission, expires below
+    let doomed = service.submit(doomed).unwrap();
+    let walkaway = service
+        .submit(karate_request("walkaway", &karate, vec![1, 2, 3]))
+        .unwrap();
+    drop(walkaway); // fires Abandoned
+    // Both slots are genuinely held until the scheduler reaps.
+    match service.try_submit(karate_request("overflow", &karate, vec![9])) {
+        Err(SubmitError::Busy) => {}
+        other => panic!("queue at max_pending must report Busy, got {other:?}"),
+    }
+    // Let the 1 ms deadline pass unambiguously, then release the
+    // scheduler: its pre-dispatch poll reaps both requests as cancelled.
+    let armed_at = Instant::now();
+    while armed_at.elapsed() < Duration::from_millis(20) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    service.resume();
+    let err = doomed.wait().unwrap_err();
+    assert_eq!(err.id, "doomed");
+    assert_eq!(err.cancelled, Some(CancelReason::Timeout), "{err}");
+    assert!(err.message.contains("timeout"), "{err}");
+
+    // The freed slots accept new work (blocking submit would deadlock
+    // the test if cancellation leaked slots), and results are
+    // byte-identical to the serial reference — cancelled neighbours
+    // never perturb live work.
+    let tickets: Vec<_> = (0..3)
+        .map(|i| {
+            service
+                .submit(karate_request(&format!("after-{i}"), &karate, vec![1, 2, 3]))
+                .unwrap()
+        })
+        .collect();
+    for t in tickets {
+        assert_eq!(det(&t.wait().unwrap()), reference);
+    }
+
+    let metrics = ctx.metrics();
+    assert_eq!(metrics.counter("requests_cancelled").get(), 2);
+    assert_eq!(metrics.counter("cancel_reason_timeout").get(), 1);
+    assert_eq!(metrics.counter("cancel_reason_abandoned").get(), 1);
+    assert_eq!(metrics.counter("requests_completed").get(), 3);
+    service.shutdown();
+    // Every arena lease returned — cancelled or completed alike.
+    assert_eq!(ctx.workspace().stats().current_lease_bytes, 0);
+}
+
+/// The net layer: an abruptly vanishing client must leave the server
+/// healthy, and later clients must receive responses byte-identical to
+/// the offline rendering. (The disconnect-abort *cancellation* itself
+/// is timing-dependent — the invariant here is that it is never
+/// observable in anyone else's bytes.)
+#[test]
+fn disconnect_leaves_the_server_healthy_and_deterministic() {
+    let tiny_ba = Arc::new(
+        sclap::generators::instances::by_name("tiny-ba")
+            .unwrap()
+            .build(),
+    );
+    let config = PartitionConfig::preset(Preset::CFast, 2);
+    let agg = Coordinator::new(2).partition_repeated(tiny_ba.clone(), &config, &[1, 2]);
+    let expected = render_result_line("after", &agg, false);
+
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        NetServerConfig {
+            workers: 2,
+            max_pending: 8,
+            cache_entries: 0, // no cache: every response is a fresh computation
+            timing: false,
+            trace: None,
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = server.handle();
+    let runner = std::thread::spawn(move || server.run());
+
+    // Client A submits work and vanishes without reading a byte.
+    let mut rude = NetClient::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    rude.send_line("id=vanishing instance=tiny-ba k=2 preset=CFast seeds=1,2")
+        .unwrap();
+    drop(rude);
+
+    // Client B (twice, to cover "keeps serving") gets byte-identical
+    // results regardless of what happened to client A's request.
+    for round in 0..2 {
+        let mut polite = NetClient::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+        let line = polite
+            .request("id=after instance=tiny-ba k=2 preset=CFast seeds=1,2")
+            .unwrap();
+        assert_eq!(line, expected, "round {round}");
+        assert_eq!(parse_response(&line).unwrap().status, "ok");
+    }
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}

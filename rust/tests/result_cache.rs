@@ -25,12 +25,7 @@ fn temp_dir(tag: &str) -> PathBuf {
 }
 
 fn request(id: &str, graph: Arc<Graph>, config: PartitionConfig, seeds: Vec<u64>) -> Request {
-    Request {
-        id: id.to_string(),
-        graph: GraphHandle::InMemory(graph),
-        config,
-        seeds,
-    }
+    Request::new(id, GraphHandle::InMemory(graph), config, seeds)
 }
 
 /// A community graph large enough for the budget-1 external path (the
@@ -137,12 +132,7 @@ fn backends_share_entries_and_rendered_lines_are_identical() {
     assert!(!cached);
     let (sharded, cached) = svc
         .run(
-            Request {
-                id: "sharded".to_string(),
-                graph: GraphHandle::Shards(dir.clone()),
-                config,
-                seeds: vec![3, 4],
-            },
+            Request::new("sharded", GraphHandle::Shards(dir.clone()), config, vec![3, 4]),
             true,
         )
         .unwrap();
@@ -292,12 +282,8 @@ fn rewritten_shard_dir_with_same_len_and_mtime_is_not_served_stale() {
         8,
     );
     let config = PartitionConfig::preset(Preset::CFast, 2);
-    let shard_req = |id: &str| Request {
-        id: id.to_string(),
-        graph: GraphHandle::Shards(dir.clone()),
-        config: config.clone(),
-        seeds: vec![7],
-    };
+    let shard_req =
+        |id: &str| Request::new(id, GraphHandle::Shards(dir.clone()), config.clone(), vec![7]);
     let (ra, cached) = svc.run(shard_req("old"), true).unwrap();
     assert!(!cached);
 
@@ -340,12 +326,8 @@ fn v1_and_v2_encodings_of_one_graph_share_a_cache_entry() {
     );
     let mut config = PartitionConfig::preset(Preset::CFast, 4);
     config.memory_budget_bytes = Some(1);
-    let shard_req = |id: &str| Request {
-        id: id.to_string(),
-        graph: GraphHandle::Shards(dir.clone()),
-        config: config.clone(),
-        seeds: vec![3],
-    };
+    let shard_req =
+        |id: &str| Request::new(id, GraphHandle::Shards(dir.clone()), config.clone(), vec![3]);
     let (v1, cached) = svc.run(shard_req("v1"), true).unwrap();
     assert!(!cached);
     std::fs::remove_dir_all(&dir).unwrap();
