@@ -203,6 +203,7 @@ pub fn parallel_async_sclap(
     let pool = ctx.pool();
 
     let mut rounds = 0usize;
+    let mut converged = false;
     while rounds < config.max_iterations {
         crate::util::cancel::checkpoint();
         rounds += 1;
@@ -255,9 +256,19 @@ pub fn parallel_async_sclap(
             &[("round", rounds as i64), ("moved", moved as i64)],
         );
         if (moved as f64) < config.convergence_fraction * n as f64 {
+            converged = true;
             break;
         }
     }
+    let reason = if converged {
+        crate::obs::quality::STOP_CONVERGED
+    } else {
+        crate::obs::quality::STOP_MAX_ITERATIONS
+    };
+    trace::counter(
+        "async_lpa_done",
+        &[("rounds", rounds as i64), ("reason", reason)],
+    );
 
     (Clustering::from_labels(g, labels), rounds)
 }

@@ -154,6 +154,7 @@ pub fn external_sclap(
 
     let mut cursor = store.cursor();
     let mut rounds = 0usize;
+    let mut converged = false;
     while rounds < config.max_iterations {
         crate::util::cancel::checkpoint();
         rounds += 1;
@@ -242,9 +243,19 @@ pub fn external_sclap(
             &[("round", rounds as i64), ("moved", changed as i64)],
         );
         if (changed as f64) < config.convergence_fraction * n as f64 {
+            converged = true;
             break;
         }
     }
+    let reason = if converged {
+        crate::obs::quality::STOP_CONVERGED
+    } else {
+        crate::obs::quality::STOP_MAX_ITERATIONS
+    };
+    trace::counter(
+        "external_lpa_done",
+        &[("rounds", rounds as i64), ("reason", reason)],
+    );
     Ok((labels, rounds))
 }
 

@@ -242,6 +242,7 @@ pub fn size_constrained_lpa_ws(
     let conn = scratch(&mut conn_l, &mut conn_o);
     conn.ensure_capacity(table);
     let mut rounds = 0usize;
+    let mut converged = false;
 
     if config.active_nodes {
         // §B.2: two FIFO queues + two bit vectors swapped per round.
@@ -303,9 +304,18 @@ pub fn size_constrained_lpa_ws(
             std::mem::swap(current, next);
             std::mem::swap(in_current, in_next);
             if (changed as f64) < config.convergence_fraction * n as f64 {
+                converged = true;
                 break;
             }
         }
+        let reason = if converged {
+            crate::obs::quality::STOP_CONVERGED
+        } else if rounds < config.max_iterations {
+            crate::obs::quality::STOP_EXHAUSTED
+        } else {
+            crate::obs::quality::STOP_MAX_ITERATIONS
+        };
+        trace::counter("lpa_done", &[("rounds", rounds as i64), ("reason", reason)]);
     } else {
         while rounds < config.max_iterations {
             crate::util::cancel::checkpoint();
@@ -333,12 +343,19 @@ pub fn size_constrained_lpa_ws(
                 &[("round", rounds as i64), ("moved", changed as i64)],
             );
             if (changed as f64) < config.convergence_fraction * n as f64 {
+                converged = true;
                 break;
             }
             if config.ordering == NodeOrdering::Random {
                 rng.shuffle(&mut order[..]);
             }
         }
+        let reason = if converged {
+            crate::obs::quality::STOP_CONVERGED
+        } else {
+            crate::obs::quality::STOP_MAX_ITERATIONS
+        };
+        trace::counter("lpa_done", &[("rounds", rounds as i64), ("reason", reason)]);
     }
 
     let mut clustering = Clustering {

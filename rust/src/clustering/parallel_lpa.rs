@@ -274,6 +274,8 @@ pub fn parallel_sclap(
     let mut cluster_weight = ctx.workspace().caller().lease::<Vec<Weight>>(n);
     cluster_weight.extend_from_slice(g.node_weights());
 
+    let mut rounds = 0usize;
+    let mut converged = false;
     for round in 0..max_iterations {
         crate::util::cancel::checkpoint();
         let round_seed = rng.next_u64();
@@ -289,6 +291,7 @@ pub fn parallel_sclap(
             round_seed,
         );
         debug_assert!(cluster_weight.iter().all(|&w| w <= upper_bound));
+        rounds = round + 1;
         // Emitted on the driver thread, after the synchronous round's
         // barrier — deterministic for any pool size.
         trace::counter(
@@ -296,9 +299,19 @@ pub fn parallel_sclap(
             &[("round", round as i64), ("moved", applied as i64)],
         );
         if (applied as f64) < 0.05 * n as f64 {
+            converged = true;
             break;
         }
     }
+    let reason = if converged {
+        crate::obs::quality::STOP_CONVERGED
+    } else {
+        crate::obs::quality::STOP_MAX_ITERATIONS
+    };
+    trace::counter(
+        "parallel_lpa_done",
+        &[("rounds", rounds as i64), ("reason", reason)],
+    );
 
     Clustering::from_labels(g, labels)
 }

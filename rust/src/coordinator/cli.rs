@@ -53,13 +53,26 @@ pub const COMMANDS: &[CommandSpec] = &[
     },
     CommandSpec {
         name: "serve",
-        value_keys: &["requests", "workers", "max-pending", "listen", "cache", "trace"],
+        value_keys: &[
+            "requests",
+            "workers",
+            "max-pending",
+            "listen",
+            "cache",
+            "trace",
+            "journal",
+        ],
         flag_keys: &["timing"],
     },
     CommandSpec {
         name: "client",
         value_keys: &["connect", "requests", "timeout"],
-        flag_keys: &["quiet"],
+        flag_keys: &["quiet", "stats"],
+    },
+    CommandSpec {
+        name: "report",
+        value_keys: &["instances", "presets", "k", "reps", "seed", "workers", "out"],
+        flag_keys: &[],
     },
     CommandSpec {
         name: "generate",

@@ -17,7 +17,9 @@
 //!   memoized (per live graph allocation; per shard directory,
 //!   validated against `meta.bin`'s stamp), so repeated admissions do
 //!   not re-stream the CSR. The request `id` and `output=` destination
-//!   are labels, never key material.
+//!   are labels, never key material; `race` membership and `explain`
+//!   ARE key material (each changes the cached artifact), `timeout_ms`
+//!   is not.
 //! - **Canonical configs** — [`config_cache_key`] renders every
 //!   *algorithmic* field of [`PartitionConfig`] and deliberately omits
 //!   `threads`: the crate-wide thread-count-invariance contract makes
@@ -53,7 +55,7 @@
 //! wedging the key), so joiners always unblock.
 
 use crate::coordinator::queue::{
-    BatchService, GraphHandle, Request, RequestError, ServiceConfig, SubmitError,
+    BatchService, EventHook, GraphHandle, Request, RequestError, ServiceConfig, SubmitError,
 };
 use crate::coordinator::service::Aggregate;
 use crate::graph::csr::Graph;
@@ -380,6 +382,20 @@ impl CachedService {
         Self::wrap(BatchService::with_ctx(config, ctx), cache_entries)
     }
 
+    /// [`CachedService::with_ctx`] plus a scheduler lifecycle hook —
+    /// how the net server journals `started` events (see [`EventHook`]).
+    pub fn with_ctx_and_hook(
+        config: ServiceConfig,
+        ctx: Arc<ExecutionCtx>,
+        cache_entries: usize,
+        on_event: Option<EventHook>,
+    ) -> Self {
+        Self::wrap(
+            BatchService::with_ctx_and_hook(config, ctx, on_event),
+            cache_entries,
+        )
+    }
+
     fn wrap(service: BatchService, cache_entries: usize) -> Self {
         let registry = service.ctx().metrics();
         let counters = CacheCounters {
@@ -485,6 +501,15 @@ impl CachedService {
         for entry in &request.race {
             config.push_str(" race:");
             config.push_str(&config_cache_key(&entry.config));
+        }
+        // `explain` IS key material: the cached artifact is the whole
+        // aggregate, and an explained aggregate carries the report
+        // string a plain one lacks. Sharing an entry across the two
+        // would make response bytes depend on which variant computed
+        // first — the one thing the cache must never do. (The partition
+        // itself is identical either way; only the attachment differs.)
+        if request.explain {
+            config.push_str(" explain");
         }
         let key = CacheKey {
             graph,
@@ -751,6 +776,24 @@ mod tests {
         ];
         let (_, cached) = svc.run(req, true).unwrap();
         assert!(!cached, "a race over configs is a different computation");
+        assert_eq!(svc.stats().misses, 2);
+    }
+
+    #[test]
+    fn explain_is_cache_key_material() {
+        let svc = CachedService::new(ServiceConfig::default(), 8);
+        svc.run(karate_request("plain", vec![1]), true).unwrap();
+        let mut req = karate_request("explained", vec![1]);
+        req.explain = true;
+        let (agg, cached) = svc.run(req, true).unwrap();
+        assert!(!cached, "an explained aggregate is a different artifact");
+        assert!(agg.explain.is_some());
+        // ...but identical explained requests share their entry.
+        let mut req = karate_request("explained-again", vec![1]);
+        req.explain = true;
+        let (again, cached) = svc.run(req, true).unwrap();
+        assert!(cached);
+        assert!(Arc::ptr_eq(&agg, &again));
         assert_eq!(svc.stats().misses, 2);
     }
 

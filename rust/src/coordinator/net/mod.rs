@@ -37,7 +37,16 @@
 //!   lowest cut wins, ties break on list order, the winner's config
 //!   finishes the remaining seeds, and the losing repetitions are
 //!   cancelled. The winning aggregate is byte-identical to running
-//!   the winner's preset alone.
+//!   the winner's preset alone. A third key, `explain=true`, asks for
+//!   a quality-explainability report: the response gains a trailing
+//!   `"explain":{"reps":[…]}` object narrating every repetition's
+//!   V-cycles — per-level hierarchy shrink, coarsening/refinement
+//!   round counts, FM pass trajectories, per-level cut and imbalance
+//!   (schema in [`crate::obs::quality`]). The report is assembled
+//!   from the deterministic trace stream, so it is **byte-identical
+//!   for any worker count or storage backend** and observation-only:
+//!   every field before it matches the unexplained response byte for
+//!   byte (`rust/tests/observability.rs`).
 //! - a *blank line or `#` comment* — skipped, exactly as on stdin.
 //! - a *control command* starting with `!`:
 //!   - `!ping` → `{"status":"pong","version":"…","uptime_seconds":…}`
@@ -53,8 +62,19 @@
 //!     wall-clock), rendered in sorted name order. `connection` /
 //!     `connection_requests` identify the asking connection and count
 //!     its submitted request lines (control commands excluded).
-//!     Histograms render as `{"count":…,"sum":…,"buckets":[[i,c],…]}`
-//!     over log₂ bins (`obs::metrics::bucket_index`),
+//!     Histograms render as `{"count":…,"sum":…,"p50":…,"p99":…,
+//!     "buckets":[[i,c],…]}` — quantiles are bucket upper bounds
+//!     ([`Histogram::quantile`](crate::obs::metrics::Histogram::quantile))
+//!     and `buckets` lists the populated log₂ bins
+//!     (`obs::metrics::bucket_index`) in index order,
+//!   - `!metrics` → the same registry in Prometheus text format,
+//!     framed for the line-oriented wire: a `# sclap metrics`
+//!     sentinel line opens the block, `# TYPE`/sample lines follow
+//!     (counters as `sclap_<name>_total`, histograms with cumulative
+//!     `_bucket{le="…"}` series, phase wall-clock as
+//!     `sclap_phase_*_total{phase="…",level="…"}` with escaped label
+//!     values), and `# EOF` closes it. `scripts/prom_validate.py`
+//!     checks the rendering in CI `obs-smoke`,
 //!   - `!shutdown` → `{"status":"shutdown"}`, then graceful
 //!     drain-then-close of the whole server (below).
 //!
@@ -102,6 +122,19 @@
 //! writes the remaining responses, then closes each connection and
 //! returns from [`NetServer::run`]. Clients observe: their pending
 //! responses, then EOF.
+//!
+//! # Ops journal
+//!
+//! `serve --journal FILE` (listen and stdin modes alike) appends one
+//! JSON line per request lifecycle event — admitted / started /
+//! completed / cancelled / busy / cache_hit / error, plus a final
+//! `shutdown` after the drain — with a monotone `seq` and wall-clock
+//! `ts_ms`, size-rotated `FILE` → `FILE.1` (format and rotation in
+//! [`crate::obs::journal`]). The journal is the durable complement to
+//! `!stats`: `scripts/journal_replay.py` replays it and reconciles
+//! the event counts against the live counters in CI `obs-smoke`.
+//! Like every observability surface here, it never changes a
+//! response byte.
 //!
 //! # Determinism across the wire
 //!

@@ -6,10 +6,13 @@ use crate::coordinator::queue::spec::{
     parse_request_line, render_busy_line, render_cancelled_line, render_error_line,
     render_result_line_full, write_partition_file, RequestSource, RequestSpec,
 };
-use crate::coordinator::queue::{GraphHandle, RaceEntry, Request, ServiceConfig};
+use crate::coordinator::queue::{EventHook, GraphHandle, RaceEntry, Request, ServiceConfig};
 use crate::graph::csr::Graph;
+use crate::obs::journal::{FieldValue, Journal, JournalConfig};
+use crate::obs::metrics::RollingWindow;
 use crate::obs::trace::Tracer;
 use crate::util::cancel::{CancelReason, CancelToken};
+use crate::util::exec::ExecutionCtx;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -17,6 +20,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Server knobs (superset of [`ServiceConfig`]).
 #[derive(Debug, Clone)]
@@ -37,6 +41,12 @@ pub struct NetServerConfig {
     /// Tracing never changes responses or partitions (the crate-wide
     /// observability invariant, pinned in `tests/observability.rs`).
     pub trace: Option<PathBuf>,
+    /// Durable ops journal (`serve --journal FILE`): one JSON line per
+    /// request lifecycle event — admitted / started / completed /
+    /// cancelled / busy / cache_hit / error / shutdown — with size-based
+    /// rotation (see [`JournalConfig`]). `None` disables journaling.
+    /// Like tracing, the journal never changes a response byte.
+    pub journal: Option<JournalConfig>,
 }
 
 impl Default for NetServerConfig {
@@ -47,6 +57,7 @@ impl Default for NetServerConfig {
             cache_entries: 64,
             timing: false,
             trace: None,
+            journal: None,
         }
     }
 }
@@ -94,6 +105,7 @@ impl GraphCatalog {
         // request is submitted (inside `submit`), so queue wait counts
         // toward the deadline — the key is an end-to-end bound.
         request.timeout_ms = spec.timeout_ms;
+        request.explain = spec.explain;
         request.race = spec
             .racer_configs()?
             .into_iter()
@@ -136,6 +148,35 @@ struct ServerShared {
     /// drain, connections close.
     conns: Mutex<HashMap<usize, TcpStream>>,
     addr: SocketAddr,
+    /// Durable lifecycle journal (`--journal`), shared with the
+    /// scheduler hook; `None` when journaling is off.
+    journal: Option<Arc<Journal>>,
+    /// Rolling 60 s request window behind the `net_window_*` gauges.
+    window: RollingWindow,
+}
+
+impl ServerShared {
+    /// Append one journal event (no-op without `--journal`).
+    fn journal_event(&self, event: &str, fields: &[(&str, FieldValue<'_>)]) {
+        if let Some(journal) = &self.journal {
+            journal.record(event, fields);
+        }
+    }
+
+    /// Refresh the `net_window_*` gauges from the rolling window — at
+    /// request completion and at `!stats`/`!metrics` render, so the
+    /// exposition always reflects the trailing window. Wall-clock
+    /// values, like `uptime_seconds`: never part of a result line.
+    fn update_window_gauges(&self) {
+        let snap = self.window.snapshot();
+        let registry = self.service.service().ctx().metrics();
+        registry.gauge("net_window_requests").set(snap.count as i64);
+        registry
+            .gauge("net_window_rps_milli")
+            .set(snap.rps_milli as i64);
+        registry.gauge("net_window_p50_micros").set(snap.p50 as i64);
+        registry.gauge("net_window_p99_micros").set(snap.p99 as i64);
+    }
 }
 
 impl ServerShared {
@@ -211,12 +252,28 @@ impl NetServer {
     pub fn bind(addr: &str, config: NetServerConfig) -> std::io::Result<NetServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        let service = CachedService::new(
+        let journal = match config.journal {
+            Some(jc) => Some(Arc::new(Journal::open(jc)?)),
+            None => None,
+        };
+        // The scheduler cannot see the journal; its lifecycle hook
+        // (today: `started` at activation) writes through the same
+        // shared sink as the net-layer events.
+        let on_event: Option<EventHook> = journal.as_ref().map(|journal| {
+            let journal = journal.clone();
+            Arc::new(move |event: &str, id: &str| {
+                journal.record(event, &[("id", FieldValue::Str(id))]);
+            }) as EventHook
+        });
+        let ctx = Arc::new(ExecutionCtx::new(config.workers));
+        let service = CachedService::with_ctx_and_hook(
             ServiceConfig {
                 workers: config.workers,
                 max_pending: config.max_pending.max(1),
             },
+            ctx,
             config.cache_entries,
+            on_event,
         );
         let trace = config.trace.map(|path| {
             let tracer = Arc::new(Tracer::new());
@@ -233,6 +290,8 @@ impl NetServer {
                 shutting_down: AtomicBool::new(false),
                 conns: Mutex::new(HashMap::new()),
                 addr: local,
+                journal,
+                window: RollingWindow::new(Duration::from_secs(60)),
             }),
         })
     }
@@ -293,6 +352,12 @@ impl NetServer {
         // shared service is dropped.
         if let Some((path, tracer)) = &self.trace {
             tracer.write_chrome_trace_file(path)?;
+        }
+        // Terminal journal line: everything admitted before this point
+        // has its completed/cancelled event on disk already.
+        if let Some(journal) = &self.shared.journal {
+            journal.record("shutdown", &[]);
+            journal.flush();
         }
         // Dropping the shared service drains anything still queued.
         Ok(())
@@ -376,6 +441,7 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
                     // arena gauges are set here, at snapshot time — the
                     // workspace keeps its own atomics; the registry view
                     // is refreshed on demand rather than double-counted.
+                    shared.update_window_gauges();
                     let ctx = shared.service.service().ctx();
                     let registry = ctx.metrics();
                     let lease = ctx.workspace().stats();
@@ -397,6 +463,20 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
                          \"connection_requests\":{conn_requests},{}}}",
                         registry.uptime_seconds(),
                         registry.render_json_fields()
+                    ));
+                }
+                "metrics" => {
+                    // Prometheus text exposition as ONE queued message:
+                    // the `# sclap metrics` sentinel opens the block,
+                    // `# EOF` closes it, so line-oriented clients can
+                    // relay the multi-line body as a single response.
+                    // Atomic through the writer channel — never
+                    // interleaved with other responses.
+                    shared.update_window_gauges();
+                    let registry = shared.service.service().ctx().metrics();
+                    let _ = tx.send(format!(
+                        "# sclap metrics\n{}# EOF",
+                        registry.render_prometheus()
                     ));
                 }
                 "shutdown" => {
@@ -427,6 +507,7 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
             Ok(Some(spec)) => spec,
             Ok(None) => continue,
             Err(message) => {
+                shared.journal_event("error", &[("id", FieldValue::Str(&default_id))]);
                 let _ = tx.send(render_error_line(&default_id, &message));
                 continue;
             }
@@ -434,6 +515,7 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
         let request = match shared.catalog.materialize(&spec) {
             Ok(request) => request,
             Err(message) => {
+                shared.journal_event("error", &[("id", FieldValue::Str(&spec.id))]);
                 let _ = tx.send(render_error_line(&spec.id, &message));
                 continue;
             }
@@ -443,17 +525,27 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
         // order deterministically; only the wait moves off this
         // thread.
         let cancel = request.cancel.clone();
+        let admitted_at = Instant::now();
         let admission = match shared.service.admit(request, false) {
             Ok(admission) => admission,
             Err(ServeError::Busy) => {
+                shared.journal_event("busy", &[("id", FieldValue::Str(&spec.id))]);
                 let _ = tx.send(render_busy_line(&spec.id));
                 continue;
             }
             Err(e) => {
+                shared.journal_event("error", &[("id", FieldValue::Str(&spec.id))]);
                 let _ = tx.send(render_error_line(&spec.id, &e.to_string()));
                 continue;
             }
         };
+        shared.journal_event(
+            "admitted",
+            &[
+                ("id", FieldValue::Str(&spec.id)),
+                ("connection", FieldValue::Int(conn_id as i64)),
+            ],
+        );
         let req_key = idx as u64;
         cancels
             .lock()
@@ -465,6 +557,21 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
         waiters.push(std::thread::spawn(move || {
             let line = match shared.service.complete(admission) {
                 Ok((agg, cached)) => {
+                    if cached {
+                        shared.journal_event("cache_hit", &[("id", FieldValue::Str(&spec.id))]);
+                    }
+                    let elapsed = admitted_at.elapsed();
+                    shared.window.record(elapsed.as_micros() as u64);
+                    shared.update_window_gauges();
+                    shared.journal_event(
+                        "completed",
+                        &[
+                            ("id", FieldValue::Str(&spec.id)),
+                            ("seconds", FieldValue::Float(elapsed.as_secs_f64())),
+                            ("cached", FieldValue::Bool(cached)),
+                            ("cut", FieldValue::Int(agg.best_cut)),
+                        ],
+                    );
                     // A failing output= write fails THIS request's line
                     // only — fault isolation extends to the output
                     // stage, exactly like the stdin front end.
@@ -488,14 +595,32 @@ fn serve_connection(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: usiz
                     }
                 }
                 // A joiner inherits its leader's refusal as `busy` too.
-                Err(ServeError::Busy) => render_busy_line(&spec.id),
+                Err(ServeError::Busy) => {
+                    shared.journal_event("busy", &[("id", FieldValue::Str(&spec.id))]);
+                    render_busy_line(&spec.id)
+                }
                 // Cancellation (deadline, disconnect, race loss) is a
                 // structured outcome, not an error: its own status.
                 Err(ServeError::Failed(e)) => match e.cancelled {
-                    Some(reason) => render_cancelled_line(&spec.id, reason),
-                    None => render_error_line(&spec.id, &e.message),
+                    Some(reason) => {
+                        shared.journal_event(
+                            "cancelled",
+                            &[
+                                ("id", FieldValue::Str(&spec.id)),
+                                ("reason", FieldValue::Str(reason.as_str())),
+                            ],
+                        );
+                        render_cancelled_line(&spec.id, reason)
+                    }
+                    None => {
+                        shared.journal_event("error", &[("id", FieldValue::Str(&spec.id))]);
+                        render_error_line(&spec.id, &e.message)
+                    }
                 },
-                Err(e) => render_error_line(&spec.id, &e.to_string()),
+                Err(e) => {
+                    shared.journal_event("error", &[("id", FieldValue::Str(&spec.id))]);
+                    render_error_line(&spec.id, &e.to_string())
+                }
             };
             let _ = tx.send(line);
             cancels

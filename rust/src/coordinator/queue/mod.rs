@@ -145,6 +145,15 @@ pub struct Request {
     pub race: Vec<RaceEntry>,
     /// Cooperative cancellation root for this request (see above).
     pub cancel: CancelToken,
+    /// Attach a quality explain report to the aggregate: the scheduler
+    /// runs the request under a per-request [`Tracer`] and renders a
+    /// [`QualityReport`] into [`Aggregate::explain`]. Observation-only
+    /// — the partition bytes are identical with the flag on or off,
+    /// for any worker count (`rust/tests/observability.rs`).
+    ///
+    /// [`Tracer`]: crate::obs::Tracer
+    /// [`QualityReport`]: crate::obs::QualityReport
+    pub explain: bool,
 }
 
 impl Request {
@@ -164,6 +173,7 @@ impl Request {
             timeout_ms: None,
             race: Vec::new(),
             cancel: CancelToken::new(),
+            explain: false,
         }
     }
 }
@@ -181,6 +191,7 @@ impl Clone for Request {
             timeout_ms: self.timeout_ms,
             race: self.race.clone(),
             cancel: CancelToken::new(),
+            explain: self.explain,
         }
     }
 }
@@ -244,6 +255,15 @@ impl std::fmt::Display for RequestError {
 }
 
 pub(crate) type Reply = Result<Aggregate, RequestError>;
+
+/// Lifecycle callback invoked by the scheduler with `(event,
+/// request_id)` — today only `"started"`, fired when a request is
+/// activated (leaves the pending queue and its first repetitions are
+/// eligible to run). The net layer uses it to journal scheduler-side
+/// lifecycle transitions it cannot observe itself. Called on the
+/// scheduler thread: implementations must be quick and must not call
+/// back into the service.
+pub type EventHook = Arc<dyn Fn(&str, &str) + Send + Sync>;
 
 /// Handle to one submitted request's eventual result.
 ///
@@ -316,6 +336,8 @@ pub(crate) struct QueueShared {
     /// The scheduler waits here for work (or shutdown/resume).
     pub(crate) not_empty: Condvar,
     pub(crate) max_pending: usize,
+    /// Optional lifecycle hook (see [`EventHook`]).
+    pub(crate) on_event: Option<EventHook>,
 }
 
 /// Poison-tolerant lock (a panicking repetition is contained inside the
@@ -342,6 +364,17 @@ impl BatchService {
     /// coordinator handoff: one process pool through every phase of
     /// every request).
     pub fn with_ctx(config: ServiceConfig, ctx: Arc<ExecutionCtx>) -> Self {
+        Self::with_ctx_and_hook(config, ctx, None)
+    }
+
+    /// [`BatchService::with_ctx`] plus a scheduler lifecycle hook —
+    /// how `serve --journal` records `started` events without the
+    /// scheduler knowing about journals.
+    pub fn with_ctx_and_hook(
+        config: ServiceConfig,
+        ctx: Arc<ExecutionCtx>,
+        on_event: Option<EventHook>,
+    ) -> Self {
         let shared = Arc::new(QueueShared {
             state: Mutex::new(QueueState {
                 pending: VecDeque::new(),
@@ -351,6 +384,7 @@ impl BatchService {
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             max_pending: config.max_pending.max(1),
+            on_event,
         });
         let scheduler = {
             let shared = shared.clone();

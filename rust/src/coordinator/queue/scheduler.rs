@@ -29,7 +29,8 @@ use crate::coordinator::service::{run_repetition, Aggregate, RunOutcome};
 use crate::graph::csr::Graph;
 use crate::graph::store::{InMemoryStore, ShardedStore};
 use crate::obs::metrics::MetricsRegistry;
-use crate::obs::trace;
+use crate::obs::quality::QualityReport;
+use crate::obs::trace::{self, Tracer};
 use crate::partitioning::config::PartitionConfig;
 use crate::partitioning::external::partition_store_with_ctx;
 use crate::util::cancel::{self, CancelReason, CancelToken, Cancelled};
@@ -82,6 +83,11 @@ struct ActiveRequest {
     race: Option<RaceState>,
     /// A fired token reaps the request with this reason.
     cancelled: Option<CancelReason>,
+    /// Per-request explain tracer ([`Request::explain`]): every unit of
+    /// this request runs under a deterministic lane of this tracer, and
+    /// the reap renders the collected events into
+    /// [`Aggregate::explain`]. `None` when explain was not requested.
+    explain: Option<Arc<Tracer>>,
 }
 
 impl ActiveRequest {
@@ -94,6 +100,7 @@ impl ActiveRequest {
             timeout_ms: _, // armed on the token at submission
             race,
             cancel,
+            explain,
         } = req;
         let mut failed = None;
         if seeds.is_empty() {
@@ -142,6 +149,7 @@ impl ActiveRequest {
             cancel,
             race,
             cancelled: None,
+            explain: explain.then(|| Arc::new(Tracer::new())),
         }
     }
 
@@ -184,6 +192,16 @@ struct Unit {
     /// Child of the owning request's token, entered ambiently for the
     /// duration of the unit.
     cancel: CancelToken,
+    /// The owning request's explain tracer, if any: the unit runs under
+    /// lane `(Tracer::track_of(seed), lane)` of it, so trace events
+    /// land in a slot that depends only on the request — never on
+    /// worker count or wave interleaving.
+    explain: Option<Arc<Tracer>>,
+    /// Deterministic lane coordinate: the racer index while the race is
+    /// undecided, `race.entries.len() + seed index` after a decision
+    /// (offset so a seed equal to `seeds[0]` cannot collide with a
+    /// racer lane on the same track), plain seed index otherwise.
+    lane: u32,
 }
 
 /// What became of one dispatched unit.
@@ -241,6 +259,9 @@ pub(super) fn scheduler_loop(shared: &Arc<QueueShared>, ctx: &Arc<ExecutionCtx>)
         };
         activated.add(newly.len() as u64);
         for (req, reply) in newly {
+            if let Some(hook) = &shared.on_event {
+                hook("started", &req.id);
+            }
             active.push(ActiveRequest::activate(req, reply));
         }
         // Cancellations (abandoned tickets, deadlines that expired in
@@ -264,17 +285,22 @@ pub(super) fn scheduler_loop(shared: &Arc<QueueShared>, ctx: &Arc<ExecutionCtx>)
             .iter()
             .map(|&(ri, ui)| {
                 let a = &active[ri];
-                let (config, seed) = if a.race_undecided() {
+                let (config, seed, lane) = if a.race_undecided() {
                     let race = a.race.as_ref().expect("undecided race present");
-                    (race.entries[ui].1.clone(), a.seeds[0])
+                    (race.entries[ui].1.clone(), a.seeds[0], ui)
                 } else {
-                    (a.config.clone(), a.seeds[ui])
+                    // Post-decision seed lanes are offset past the racer
+                    // lanes (see `Unit::lane`).
+                    let offset = a.race.as_ref().map_or(0, |r| r.entries.len());
+                    (a.config.clone(), a.seeds[ui], offset + ui)
                 };
                 Unit {
                     backend: a.backend.clone().expect("live request has a backend"),
                     config,
                     seed,
                     cancel: a.cancel.child(),
+                    explain: a.explain.clone(),
+                    lane: lane as u32,
                 }
             })
             .collect();
@@ -445,6 +471,17 @@ fn run_unit(ctx: &Arc<ExecutionCtx>, unit: &Unit) -> UnitOutcome {
     if let Some(reason) = unit.cancel.poll() {
         return UnitOutcome::Cancelled(reason);
     }
+    // Explain lane, ambient for the whole repetition: the pipeline's
+    // own `ctx.tracer().enter(seed)` finds the slot occupied and stays
+    // inert, so its spans and counters flow into this request's
+    // tracer at a (track, lane) coordinate that is a pure function of
+    // the request — worker-count-invariant by construction. (While a
+    // request carries both `--trace` and `explain=true`, the shared
+    // trace file loses that request's spans to the explain report.)
+    let _lane = unit
+        .explain
+        .as_ref()
+        .map(|t| t.enter_lane(Tracer::track_of(unit.seed), unit.lane));
     // Ambient for the whole repetition: every checkpoint inside the
     // pipeline (and every pool job the repetition dispatches) sees
     // this unit's token.
@@ -522,11 +559,42 @@ fn reap(active: &mut Vec<ActiveRequest>, metrics: &MetricsRegistry) {
                 .map(|r| r.expect("all slots filled"))
                 .collect();
             metrics.counter("requests_completed").inc();
-            let _ = a.reply.send(Ok(Aggregate::from_runs(runs)));
+            let mut agg = Aggregate::from_runs(runs);
+            if let Some(tracer) = a.explain.take() {
+                metrics.counter("requests_explained").inc();
+                let lanes = explain_lanes(&a.seeds, a.race.as_ref());
+                agg.explain = Some(QualityReport::from_lanes(&tracer, &lanes).to_json());
+            }
+            let _ = a.reply.send(Ok(agg));
             return false;
         }
         true
     });
+}
+
+/// The aggregate-contributing `(seed, lane)` coordinates of a completed
+/// request, mirroring the wave builder's lane assignment: plain
+/// requests contribute `(seeds[i], i)`; raced requests contribute the
+/// winning racer's lane for `seeds[0]` plus the offset seed lanes for
+/// the rest. Losers' lanes stay in the tracer but are not reported —
+/// the explain payload describes exactly the runs in the aggregate.
+fn explain_lanes(seeds: &[u64], race: Option<&RaceState>) -> Vec<(u64, u32)> {
+    match race {
+        Some(race) => {
+            let win = race.winner.expect("reaped race is decided") as u32;
+            let offset = race.entries.len();
+            std::iter::once((seeds[0], win))
+                .chain(
+                    seeds
+                        .iter()
+                        .enumerate()
+                        .skip(1)
+                        .map(|(i, &s)| (s, (offset + i) as u32)),
+                )
+                .collect()
+        }
+        None => seeds.iter().enumerate().map(|(i, &s)| (s, i as u32)).collect(),
+    }
 }
 
 #[cfg(test)]
@@ -556,6 +624,7 @@ mod tests {
             cancel: CancelToken::new(),
             race: None,
             cancelled: None,
+            explain: None,
         }
     }
 
@@ -698,6 +767,28 @@ mod tests {
         assert_eq!(err.cancelled, Some(CancelReason::Abandoned));
         assert_eq!(metrics.counter("requests_cancelled").get(), 1);
         assert_eq!(metrics.counter("cancel_reason_abandoned").get(), 1);
+    }
+
+    #[test]
+    fn explain_lanes_mirror_dispatch_lanes() {
+        // Plain request: lane = seed index, duplicates included.
+        assert_eq!(
+            explain_lanes(&[7, 7, 9], None),
+            vec![(7, 0), (7, 1), (9, 2)]
+        );
+        // Raced request: seeds[0] reports under the winning racer's
+        // lane; later seeds are offset past the racer lanes — so a
+        // seed equal to seeds[0] (here 5 again at index 1) lands on
+        // lane 3+1=4, never colliding with racer lanes 0..3.
+        let mut a = racing(3, 3);
+        a.seeds = vec![5, 5, 6];
+        a.race.as_mut().unwrap().winner = Some(2);
+        assert_eq!(
+            explain_lanes(&a.seeds, a.race.as_ref()),
+            vec![(5, 2), (5, 4), (6, 5)]
+        );
+        // ...and `from_lanes` orders by (seed, lane), matching the
+        // seed-sorted aggregate for distinct seeds.
     }
 
     #[test]

@@ -65,6 +65,13 @@ pub struct RequestSpec {
     /// alone — and race membership IS cache-key material (see
     /// `coordinator::net::cache`).
     pub race: Vec<Preset>,
+    /// `explain=true`: attach the per-repetition quality report
+    /// ([`crate::obs::QualityReport`]) to the result line as a trailing
+    /// `"explain"` field. Observation-only — every other byte of the
+    /// line is identical with the flag on or off — but it IS cache-key
+    /// material (an explained response and a plain response are
+    /// different bytes; see `coordinator::net::cache`).
+    pub explain: bool,
 }
 
 impl RequestSpec {
@@ -96,7 +103,8 @@ impl RequestSpec {
 
     /// Render this spec as one canonical request line:
     /// `id= <source>= k= preset= [race=] seeds= [timeout_ms=]
-    /// [config options…] [output=]`. Seeds are always explicit (a
+    /// [explain=true] [config options…] [output=]`. Seeds are always
+    /// explicit (a
     /// `reps=/seed=` shorthand parses into the same canonical list),
     /// and preset names are emitted without `/` separators so the line
     /// stays whitespace-token clean.
@@ -128,6 +136,9 @@ impl RequestSpec {
         if let Some(ms) = self.timeout_ms {
             line.push_str(&format!(" timeout_ms={ms}"));
         }
+        if self.explain {
+            line.push_str(" explain=true");
+        }
         for (key, value) in &self.config_options {
             line.push_str(&format!(" {key}={value}"));
         }
@@ -152,6 +163,7 @@ const SPEC_KEYS: &[&str] = &[
     "output",
     "timeout_ms",
     "race",
+    "explain",
 ];
 
 fn known_key(key: &str) -> bool {
@@ -178,6 +190,7 @@ pub fn parse_request_line(line: &str, default_id: &str) -> Result<Option<Request
     let mut output = None;
     let mut timeout_ms: Option<u64> = None;
     let mut race: Vec<Preset> = Vec::new();
+    let mut explain = false;
     let mut config_options = Vec::new();
     let mut seen: Vec<String> = Vec::new();
 
@@ -256,6 +269,13 @@ pub fn parse_request_line(line: &str, default_id: &str) -> Result<Option<Request
                     return Err("race needs at least two presets".to_string());
                 }
             }
+            "explain" => {
+                explain = match value {
+                    "true" => true,
+                    "false" => false,
+                    other => return Err(format!("explain: want true/false, got {other:?}")),
+                };
+            }
             // everything else is a config key by `known_key`
             other => config_options.push((other.to_string(), value.to_string())),
         }
@@ -295,6 +315,7 @@ pub fn parse_request_line(line: &str, default_id: &str) -> Result<Option<Request
         output,
         timeout_ms,
         race,
+        explain,
     }))
 }
 
@@ -360,6 +381,13 @@ pub fn render_result_line_full(
         agg.infeasible_runs,
         blocks_fingerprint(&agg.best_blocks),
     );
+    // The explain payload is deterministic (worker-count- and
+    // backend-invariant), so it renders before the timing gate: an
+    // `explain=true` line without `timing` is still byte-reproducible.
+    if let Some(explain) = &agg.explain {
+        line.push_str(",\"explain\":");
+        line.push_str(explain);
+    }
     if timing {
         line.push_str(&format!(",\"avg_seconds\":{}", agg.avg_seconds));
         // Per-phase wall-clock breakdown (summed across the request's
@@ -616,6 +644,49 @@ mod tests {
     }
 
     #[test]
+    fn explain_parses_and_canonicalizes() {
+        let s = parse("graph=g k=4 explain=true seeds=1,2");
+        assert!(s.explain);
+        // canonical order: explain after timeout_ms, before options
+        assert_eq!(s.to_line(), "id=d graph=g k=4 preset=CFast seeds=1,2 explain=true");
+        assert_eq!(parse(&s.to_line()), s);
+        // explain=false is accepted and canonically omitted
+        let s = parse("graph=g k=4 explain=false");
+        assert!(!s.explain);
+        assert_eq!(s.to_line(), "id=d graph=g k=4 preset=CFast seeds=1");
+        // anything else is loud
+        assert!(parse_err("graph=g k=4 explain=yes").contains("true/false"));
+        assert!(parse_err("graph=g k=4 explain=").contains("true/false"));
+    }
+
+    #[test]
+    fn explain_payload_renders_before_timing_fields() {
+        let mut agg = tiny_aggregate();
+        let plain = render_result_line("x", &agg, false);
+        agg.explain = Some("{\"reps\":[]}".to_string());
+        let explained = render_result_line("x", &agg, false);
+        // the explain field is the ONLY difference, appended after the
+        // deterministic prefix
+        assert_eq!(
+            explained,
+            format!(
+                "{},\"explain\":{{\"reps\":[]}}}}",
+                &plain[..plain.len() - 1]
+            )
+        );
+        // with timing, explain still precedes avg_seconds
+        let timed = render_result_line("x", &agg, true);
+        assert!(
+            timed.find("\"explain\"").unwrap() < timed.find("avg_seconds").unwrap(),
+            "{timed}"
+        );
+        // and the cached marker stays terminal
+        let cached = render_result_line_cached("x", &agg, false, true);
+        assert!(cached.ends_with(",\"cached\":true}"), "{cached}");
+        assert!(cached.contains("\"explain\""), "{cached}");
+    }
+
+    #[test]
     fn cancelled_line_renders_reason() {
         use crate::util::cancel::CancelReason;
         assert_eq!(
@@ -693,6 +764,7 @@ mod tests {
             output: rng.chance(0.3).then(|| token(rng, "/o/")),
             timeout_ms: rng.chance(0.3).then(|| 1 + rng.next_u64() % 3_600_000),
             race,
+            explain: rng.chance(0.3),
         }
     }
 

@@ -132,6 +132,11 @@ pub struct Aggregate {
     /// per-run phase order (first-seen order over seed-sorted runs —
     /// deterministic names/order, wall-clock values).
     pub phase_seconds: Vec<(&'static str, f64)>,
+    /// Pre-rendered [`QualityReport`](crate::obs::QualityReport) JSON,
+    /// set by the batching scheduler when the request asked for
+    /// `explain=true`; `None` otherwise. Deterministic and
+    /// worker-count-invariant, like every non-timing field here.
+    pub explain: Option<String>,
 }
 
 impl Aggregate {
@@ -165,6 +170,7 @@ impl Aggregate {
             infeasible_runs: runs.iter().filter(|r| !r.feasible).count(),
             best_blocks: best.blocks.clone(),
             phase_seconds,
+            explain: None,
             runs,
         }
     }

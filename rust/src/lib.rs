@@ -322,14 +322,46 @@
 //!   ([`util::exec::ExecutionCtx::phase_stats_by_level`]), so
 //!   `refine_level` at level 0 and level 5 no longer collapse into one
 //!   row. `serve --timing` and the wire `!stats` command (grammar in
-//!   [`coordinator::net`]) are thin snapshots of this registry; `!ping`
-//!   answers with the crate version and the registry's uptime clock.
+//!   [`coordinator::net`]) are thin snapshots of this registry —
+//!   `!stats` histograms carry `p50`/`p99` (bucket upper bounds via
+//!   [`obs::metrics::Histogram::quantile`]) and the populated log₂
+//!   `buckets` — and the wire `!metrics` command renders the same
+//!   registry as Prometheus text between `# sclap metrics` and `# EOF`
+//!   framing lines ([`obs::metrics::MetricsRegistry::render_prometheus`],
+//!   validated by `scripts/prom_validate.py` in CI `obs-smoke`);
+//!   `!ping` answers with the crate version and the registry's uptime
+//!   clock.
+//!
+//! Two explainability/ops layers build on those primitives:
+//!
+//! - **Per-request quality reports** ([`obs::quality`]): the spec key
+//!   `explain=true` makes the scheduler trace that request's
+//!   repetitions into per-seed logical lanes and distill them into a
+//!   [`obs::quality::QualityReport`] appended to the response as an
+//!   `"explain":{"reps":[…]}` object — coarsening lineage with
+//!   per-level shrink factors, LPA round/stop/moved telemetry, FM pass
+//!   cut trajectories, per-level cut and imbalance. Reports consume
+//!   only logical event content, so they are byte-identical for any
+//!   worker count, storage backend, or shard layout, and
+//!   observation-only: every response byte before the report matches
+//!   the unexplained response.
+//! - **Durable ops telemetry** ([`obs::journal`]): `serve --journal
+//!   FILE` appends one JSON line per lifecycle event (admitted /
+//!   started / completed / cancelled / busy / cache_hit / error /
+//!   shutdown) with a monotone `seq`, size-rotated `FILE` → `FILE.1`;
+//!   `scripts/journal_replay.py` replays a journal and reconciles it
+//!   against the `!stats` counters. The `sclap report` subcommand
+//!   drives a preset×instance matrix through the full service path and
+//!   emits a JSON document of per-cell and per-preset geometric means
+//!   that `scripts/make_tables.py` renders as paper-style result
+//!   tables next to the reference numbers of arXiv 1402.3281.
 //!
 //! The governing invariant: **observability never changes results.**
-//! Tracing on vs. off, `--timing` on vs. off, and any number of
-//! `!stats` probes produce byte-identical partitions and response
-//! lines; disabled instrumentation costs one `Option`/TLS check per
-//! site (`rust/tests/observability.rs`;
+//! Tracing on vs. off, `--timing` on vs. off, `explain=true` vs.
+//! absent, journaling on vs. off, and any number of `!stats` or
+//! `!metrics` probes produce byte-identical partitions and (up to the
+//! appended report) response lines; disabled instrumentation costs one
+//! `Option`/TLS check per site (`rust/tests/observability.rs`;
 //! `rust/benches/vcycle_e2e.rs` gates warm throughput with tracing
 //! compiled in but disabled).
 

@@ -5,6 +5,8 @@
 //!   serve      — batching service: stdin/file requests, or a TCP
 //!                server (--listen) with a content-addressed cache
 //!   client     — submit request lines to a serve --listen server
+//!   report     — run a preset×instance matrix through the service
+//!                path and emit paper-style geomean cut/time tables
 //!   generate   — write a synthetic instance to a file
 //!   stats      — print instance statistics (Table-1 style)
 //!   offload    — demo the PJRT dense-LPA offload on a small graph
@@ -20,13 +22,14 @@
 //!   sclap stats --instance uk2002-sim
 
 use sclap::bail;
+use sclap::bench::harness::{fmt as fmt_num, geomean_row};
 use sclap::coordinator::cli::Args;
 use sclap::coordinator::net::{parse_response, NetClient, NetServer, NetServerConfig};
 use sclap::coordinator::queue::spec::{
     parse_request_line, render_cancelled_line, render_error_line, render_result_line_full,
     write_partition_file, RequestSpec,
 };
-use sclap::coordinator::queue::{BatchService, ServiceConfig};
+use sclap::coordinator::queue::{BatchService, EventHook, ServiceConfig};
 use sclap::coordinator::service::{default_seeds, Coordinator};
 use sclap::generators;
 use sclap::graph::csr::Graph;
@@ -34,6 +37,7 @@ use sclap::graph::store::{
     convert_metis_to_shards_as, recompress_store, write_sharded_as, GraphStore, InMemoryStore,
     ShardFormat, ShardedStore,
 };
+use sclap::obs::journal::{FieldValue, Journal, JournalConfig};
 use sclap::obs::trace::Tracer;
 use sclap::partitioning::config::{PartitionConfig, Preset, CONFIG_OPTION_KEYS};
 use sclap::partitioning::external::OutOfCoreResult;
@@ -67,6 +71,7 @@ fn run(args: &Args) -> Result<()> {
         "partition" => cmd_partition(args),
         "serve" => cmd_serve(args),
         "client" => cmd_client(args),
+        "report" => cmd_report(args),
         "evaluate" => cmd_evaluate(args),
         "generate" => cmd_generate(args),
         "shard" => cmd_shard(args),
@@ -95,9 +100,13 @@ fn print_usage() {
                      [--parallel-coarsening] [--parallel-refinement]\n\
            serve     [--requests FILE|-] [--workers W]\n\
                      [--max-pending N] [--timing]\n\
+                     [--journal FILE]\n\
                      [--listen ADDR [--cache N]]\n\
            client    --connect ADDR [--requests FILE|-]\n\
-                     [--timeout SECS] [--quiet]\n\
+                     [--timeout SECS] [--quiet] [--stats]\n\
+           report    [--instances A,B,..] [--presets P1,P2,..]\n\
+                     [--k K] [--reps N] [--seed S]\n\
+                     [--workers W] [--out FILE]\n\
            generate  --kind rmat|ba|ws|er|grid|lfr --out FILE\n\
                      [--scale S] [--n N] [--edges M] [--seed S]\n\
                      [--avg-degree D] [--mu MU]\n\
@@ -130,13 +139,31 @@ fn print_usage() {
            value and any request interleaving.\n\
          serve --listen ADDR: the same service as a TCP server (one\n\
            request line in, one JSON line out, pipelined out of\n\
-           order; blank lines and # comments accepted; !ping and\n\
+           order; blank lines and # comments accepted; !ping, !stats,\n\
+           !metrics (Prometheus text block) and\n\
            !shutdown control commands). A full queue answers\n\
            {{\"status\":\"busy\"}} instead of blocking the connection,\n\
            and a content-addressed result cache (--cache N entries,\n\
            0 disables) serves repeated requests without\n\
            recomputation — responses gain \"cached\":true and are\n\
            otherwise byte-identical to an offline run.\n\
+         serve --journal FILE: durable ops telemetry — one JSON line\n\
+           per request lifecycle event (admitted / started /\n\
+           completed / cancelled / busy / cache_hit / error /\n\
+           shutdown) appended to FILE with size-based rotation\n\
+           (FILE -> FILE.1). Journaling never changes a result byte;\n\
+           scripts/journal_replay.py reconciles a journal against\n\
+           the !stats counters.\n\
+         report: run a preset x instance matrix through the batching\n\
+           service path and emit the paper-style result tables: one\n\
+           JSON document ({{k, reps, presets, instances, cells,\n\
+           geomeans}}) on stdout (or --out FILE) with per-cell\n\
+           avg/best cut and time plus per-preset cross-instance\n\
+           geomeans (zero cells excluded with a count), and a human\n\
+           geomean table on stderr. scripts/make_tables.py formats\n\
+           the JSON against the paper's reported numbers. Defaults\n\
+           are the quick CI matrix (tiny instances, CFast/CEco/\n\
+           UFast, k=4, 3 reps).\n\
          client: submit spec lines to a serve --listen server and\n\
            stream the JSON result lines to stdout (responses are\n\
            validated structurally; summary on stderr). An explicit\n\
@@ -145,6 +172,10 @@ fn print_usage() {
            timeout_ms=, so the server cancels overdue work and\n\
            answers {{\"status\":\"cancelled\"}}. The default bounds\n\
            only the connect retry.\n\
+         client --stats: ops snapshot instead of requests — fetch\n\
+           !stats (one JSON line) and !metrics (a Prometheus text\n\
+           block framed by `# sclap metrics` / `# EOF`) from the\n\
+           server, print both to stdout, and exit.\n\
          --memory-budget BYTES (k/m/g suffixes; env\n\
            SCLAP_MEMORY_BUDGET): RAM budget for holding a CSR. Inputs\n\
            beyond it are partitioned out-of-core: semi-external SCLaP\n\
@@ -375,6 +406,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 cache_entries,
                 timing,
                 trace: args.get("trace").map(std::path::PathBuf::from),
+                journal: args.get("journal").map(JournalConfig::new),
             },
         )
         .with_context(|| format!("binding {listen}"))?;
@@ -398,10 +430,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Box::new(std::io::BufReader::new(file))
     };
 
-    let service = BatchService::new(ServiceConfig {
-        workers,
-        max_pending,
+    // `--journal FILE` works in stdin mode too: this front end records
+    // admitted/completed/cancelled/error lines itself, and the
+    // scheduler's `started` events arrive via the lifecycle hook —
+    // the same durable trail a `--listen` server leaves.
+    let journal: Option<Arc<Journal>> = match args.get("journal") {
+        Some(path) => Some(Arc::new(
+            Journal::open(JournalConfig::new(path))
+                .with_context(|| format!("opening journal {path}"))?,
+        )),
+        None => None,
+    };
+    let on_event: Option<EventHook> = journal.as_ref().map(|journal| {
+        let journal = journal.clone();
+        Arc::new(move |event: &str, id: &str| {
+            journal.record(event, &[("id", FieldValue::Str(id))]);
+        }) as EventHook
     });
+    let service = BatchService::with_ctx_and_hook(
+        ServiceConfig {
+            workers,
+            max_pending,
+        },
+        Arc::new(sclap::util::exec::ExecutionCtx::new(workers)),
+        on_event,
+    );
     let trace = install_tracer(args, service.ctx());
     // Requests naming the same graph file / instance share one loaded
     // copy — the batching win the queue exists for (the same catalog
@@ -439,7 +492,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 // Blocking submit: the bounded queue pushes back on how
                 // fast we consume the input stream.
                 match service.submit(request) {
-                    Ok(ticket) => entries.push(Entry::Submitted { ticket, spec }),
+                    Ok(ticket) => {
+                        if let Some(journal) = &journal {
+                            journal.record("admitted", &[("id", FieldValue::Str(&spec.id))]);
+                        }
+                        entries.push(Entry::Submitted { ticket, spec });
+                    }
                     Err(e) => entries.push(Entry::Failed {
                         id: spec.id,
                         message: e.to_string(),
@@ -459,6 +517,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         match entry {
             Entry::Failed { id, message } => {
                 failed += 1;
+                if let Some(journal) = &journal {
+                    journal.record(
+                        "error",
+                        &[
+                            ("id", FieldValue::Str(&id)),
+                            ("message", FieldValue::Str(&message)),
+                        ],
+                    );
+                }
                 println!("{}", render_error_line(&id, &message));
             }
             Entry::Submitted { ticket, spec } => match ticket.wait() {
@@ -477,6 +544,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     });
                     match write_err {
                         None => {
+                            if let Some(journal) = &journal {
+                                journal.record(
+                                    "completed",
+                                    &[
+                                        ("id", FieldValue::Str(&spec.id)),
+                                        ("seconds", FieldValue::Float(agg.avg_seconds)),
+                                        ("cut", FieldValue::Int(agg.best_cut)),
+                                    ],
+                                );
+                            }
                             let lease = service.ctx().workspace().stats();
                             println!(
                                 "{}",
@@ -491,6 +568,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         }
                         Some(message) => {
                             failed += 1;
+                            if let Some(journal) = &journal {
+                                journal.record(
+                                    "error",
+                                    &[
+                                        ("id", FieldValue::Str(&spec.id)),
+                                        ("message", FieldValue::Str(&message)),
+                                    ],
+                                );
+                            }
                             println!("{}", render_error_line(&spec.id, &message));
                         }
                     }
@@ -500,14 +586,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     // Cancellation (a `timeout_ms=` deadline firing) is
                     // a structured outcome with its own status line.
                     match e.cancelled {
-                        Some(reason) => println!("{}", render_cancelled_line(&e.id, reason)),
-                        None => println!("{}", render_error_line(&e.id, &e.message)),
+                        Some(reason) => {
+                            if let Some(journal) = &journal {
+                                journal.record(
+                                    "cancelled",
+                                    &[
+                                        ("id", FieldValue::Str(&e.id)),
+                                        ("reason", FieldValue::Str(reason.as_str())),
+                                    ],
+                                );
+                            }
+                            println!("{}", render_cancelled_line(&e.id, reason));
+                        }
+                        None => {
+                            if let Some(journal) = &journal {
+                                journal.record(
+                                    "error",
+                                    &[
+                                        ("id", FieldValue::Str(&e.id)),
+                                        ("message", FieldValue::Str(&e.message)),
+                                    ],
+                                );
+                            }
+                            println!("{}", render_error_line(&e.id, &e.message));
+                        }
                     }
                 }
             },
         }
     }
     service.shutdown();
+    if let Some(journal) = &journal {
+        journal.record("shutdown", &[]);
+        journal.flush();
+    }
     // Shutdown drained every accepted request, so all span buffers have
     // flushed — the trace is complete.
     write_trace(trace)?;
@@ -534,6 +646,12 @@ fn cmd_client(args: &Args) -> Result<()> {
     let timeout = args.get_f64("timeout", 10.0)?;
     let explicit_timeout = args.get("timeout").is_some();
     let quiet = args.flag("quiet");
+    if args.flag("stats") {
+        if args.get("requests").is_some() {
+            bail!("--stats fetches the ops snapshot; it does not take --requests");
+        }
+        return cmd_client_stats(addr, timeout, quiet);
+    }
     let requests_path = args.get_or("requests", "-");
     let input: Box<dyn BufRead> = if requests_path == "-" {
         Box::new(std::io::BufReader::new(std::io::stdin()))
@@ -601,6 +719,29 @@ fn cmd_client(args: &Args) -> Result<()> {
         .recv_line()
         .with_context(|| format!("reading from {addr}"))?
     {
+        // A `!metrics` reply is a multi-line Prometheus text block
+        // framed by `# sclap metrics` … `# EOF`; the whole block
+        // counts as ONE response in the sent/received reconciliation.
+        if line == "# sclap metrics" {
+            println!("{line}");
+            let mut terminated = false;
+            while let Some(metric_line) = receiver
+                .recv_line()
+                .with_context(|| format!("reading from {addr}"))?
+            {
+                println!("{metric_line}");
+                if metric_line == "# EOF" {
+                    terminated = true;
+                    break;
+                }
+            }
+            if !terminated {
+                bail!("metrics block cut short (no `# EOF` terminator)");
+            }
+            *by_status.entry("metrics".to_string()).or_default() += 1;
+            received += 1;
+            continue;
+        }
         match parse_response(&line) {
             Ok(response) => *by_status.entry(response.status).or_default() += 1,
             Err(message) => {
@@ -632,6 +773,245 @@ fn cmd_client(args: &Args) -> Result<()> {
     // anything short means the transport failed mid-stream.
     if received != expected {
         bail!("expected {expected} response(s), received {received} (connection cut short?)");
+    }
+    Ok(())
+}
+
+/// `client --stats`: the ops-snapshot path. Fetches `!stats` (one
+/// JSON line, validated structurally like any response) and
+/// `!metrics` (the Prometheus text block framed by `# sclap metrics`
+/// / `# EOF`), prints both to stdout, and exits — the same
+/// sent/received reconciliation the request path has, applied to the
+/// two control commands.
+fn cmd_client_stats(addr: &str, timeout: f64, quiet: bool) -> Result<()> {
+    let mut client = NetClient::connect_retry(addr, Duration::from_secs_f64(timeout.max(0.0)))
+        .with_context(|| format!("connecting to {addr}"))?;
+    let stats_line = client
+        .request("!stats")
+        .with_context(|| format!("fetching !stats from {addr}"))?;
+    let stats = parse_response(&stats_line).map_err(|e| format!("invalid !stats response: {e}"))?;
+    if stats.status != "stats" {
+        bail!("expected a stats response, got status {:?}", stats.status);
+    }
+    println!("{stats_line}");
+    client
+        .send_line("!metrics")
+        .with_context(|| format!("sending !metrics to {addr}"))?;
+    let first = client
+        .recv_line()
+        .with_context(|| format!("reading from {addr}"))?
+        .context("connection closed before the metrics block")?;
+    if first != "# sclap metrics" {
+        bail!("expected a `# sclap metrics` block, got {first:?}");
+    }
+    println!("{first}");
+    let mut metric_lines = 0usize;
+    loop {
+        let line = client
+            .recv_line()
+            .with_context(|| format!("reading from {addr}"))?
+            .context("metrics block cut short (no `# EOF` terminator)")?;
+        println!("{line}");
+        if line == "# EOF" {
+            break;
+        }
+        metric_lines += 1;
+    }
+    if !quiet {
+        eprintln!("sclap client: fetched !stats and !metrics ({metric_lines} metric line(s))");
+    }
+    Ok(())
+}
+
+/// `["a","b"]` with JSON escaping — the `report` document's string
+/// arrays.
+fn json_str_array(items: &[String]) -> String {
+    let quoted: Vec<String> = items
+        .iter()
+        .map(|s| format!("\"{}\"", sclap::util::json::escape_json(s)))
+        .collect();
+    format!("[{}]", quoted.join(","))
+}
+
+/// `report`: the paper-style result tables, produced through the
+/// **service path** — every cell of the preset × instance matrix is a
+/// real request (spec line → parse → materialize → bounded queue →
+/// scheduler), so the numbers measure exactly the code the wire
+/// serves. Emits one JSON document
+/// (`{k, reps, seed, presets, instances, cells, geomeans}`) on stdout
+/// (or `--out FILE`) for `scripts/make_tables.py` to format against
+/// the paper's reported numbers, plus a human geomean table on
+/// stderr. Cut fields are deterministic (same seed ⇒ same table);
+/// the seconds fields are wall-clock. Defaults form the quick CI
+/// matrix: the tiny suite × CFast/CEco/UFast at k=4 with 3 reps.
+fn cmd_report(args: &Args) -> Result<()> {
+    let k = args.get_usize("k", 4)?;
+    if k < 2 {
+        bail!("--k must be at least 2");
+    }
+    let reps = args.get_usize("reps", 3)?.max(1);
+    let seed = args.get_u64("seed", 1)?;
+    let workers = args.get_usize("workers", 0)?;
+    let presets: Vec<String> = args
+        .get_or("presets", "CFast,CEco,UFast")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    if presets.is_empty() {
+        bail!("--presets needs at least one preset name");
+    }
+    for p in &presets {
+        Preset::from_name(p)
+            .with_context(|| format!("unknown preset {p:?} (see `sclap presets`)"))?;
+    }
+    let instances: Vec<String> = args
+        .get_or("instances", "karate,tiny-rmat,tiny-ba,tiny-ws,tiny-grid")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    if instances.is_empty() {
+        bail!("--instances needs at least one instance name");
+    }
+    for name in &instances {
+        generators::instances::by_name(name)
+            .with_context(|| format!("unknown instance {name:?} (see DESIGN.md §3)"))?;
+    }
+    let seeds: Vec<String> = default_seeds(reps)
+        .iter()
+        .map(|s| (s + seed - 1).to_string())
+        .collect();
+    let seeds_str = seeds.join(",");
+
+    // Submit the whole matrix up front (the queue is sized to hold
+    // it), then wait in matrix order: the scheduler interleaves
+    // repetitions from all cells across one worker pool — the batching
+    // behavior the service path exists for.
+    let cells_total = presets.len() * instances.len();
+    let service = BatchService::new(ServiceConfig {
+        workers,
+        max_pending: cells_total,
+    });
+    let catalog = sclap::coordinator::net::GraphCatalog::new();
+    let mut tickets = Vec::with_capacity(cells_total);
+    for preset in &presets {
+        for instance in &instances {
+            let line = format!(
+                "id={preset}/{instance} instance={instance} k={k} preset={preset} seeds={seeds_str}"
+            );
+            let spec = parse_request_line(&line, "report")
+                .map_err(|e| format!("building cell {preset}/{instance}: {e}"))?
+                .expect("a non-empty spec line");
+            let request = catalog
+                .materialize(&spec)
+                .map_err(|e| format!("loading {instance}: {e}"))?;
+            let ticket = service
+                .submit(request)
+                .map_err(|e| format!("submitting {preset}/{instance}: {e}"))?;
+            tickets.push((preset.clone(), instance.clone(), ticket));
+        }
+    }
+
+    struct Cell {
+        preset: String,
+        instance: String,
+        avg_cut: f64,
+        best_cut: i64,
+        seconds: f64,
+        infeasible: usize,
+        reps: usize,
+    }
+    let mut cells: Vec<Cell> = Vec::with_capacity(cells_total);
+    for (preset, instance, ticket) in tickets {
+        let agg = ticket
+            .wait()
+            .map_err(|e| format!("cell {preset}/{instance}: {}", e.message))?;
+        cells.push(Cell {
+            preset,
+            instance,
+            avg_cut: agg.avg_cut,
+            best_cut: agg.best_cut,
+            seconds: agg.avg_seconds,
+            infeasible: agg.infeasible_runs,
+            reps: agg.runs.len(),
+        });
+    }
+    service.shutdown();
+
+    // Per-preset cross-instance geomeans — the paper's aggregation,
+    // with zero cells excluded-and-counted (never epsilon-clamped).
+    let geomeans: Vec<(String, sclap::bench::harness::GeomeanRow)> = presets
+        .iter()
+        .map(|preset| {
+            let row: Vec<(f64, f64, f64)> = cells
+                .iter()
+                .filter(|c| &c.preset == preset)
+                .map(|c| (c.avg_cut, c.best_cut as f64, c.seconds))
+                .collect();
+            (preset.clone(), geomean_row(&row))
+        })
+        .collect();
+
+    eprintln!(
+        "report: geomeans over {} instance(s), k={k}, {reps} rep(s) ('*N' = N zero cells excluded):",
+        instances.len()
+    );
+    eprintln!(
+        "{:>14}  {:>10}  {:>10}  {:>10}",
+        "preset", "avg cut", "best cut", "seconds"
+    );
+    for (preset, g) in &geomeans {
+        eprintln!(
+            "{preset:>14}  {:>10}  {:>10}  {:>10}",
+            format!("{}{}", fmt_num(g.avg_cut), g.zero_marker()),
+            format!("{}{}", fmt_num(g.best_cut), g.zero_marker()),
+            format!("{:.3}{}", g.seconds, g.time_marker()),
+        );
+    }
+
+    let cell_objs: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                "{{\"preset\":\"{}\",\"instance\":\"{}\",\"avg_cut\":{:.6},\"best_cut\":{},\"seconds\":{:.6},\"infeasible\":{},\"reps\":{}}}",
+                sclap::util::json::escape_json(&c.preset),
+                sclap::util::json::escape_json(&c.instance),
+                c.avg_cut,
+                c.best_cut,
+                c.seconds,
+                c.infeasible,
+                c.reps,
+            )
+        })
+        .collect();
+    let geo_objs: Vec<String> = geomeans
+        .iter()
+        .map(|(preset, g)| {
+            format!(
+                "{{\"preset\":\"{}\",\"avg_cut\":{:.6},\"best_cut\":{:.6},\"seconds\":{:.6},\"zero_cut_cells\":{},\"zero_time_cells\":{}}}",
+                sclap::util::json::escape_json(preset),
+                g.avg_cut,
+                g.best_cut,
+                g.seconds,
+                g.zero_cut_cells,
+                g.zero_time_cells,
+            )
+        })
+        .collect();
+    let doc = format!(
+        "{{\"k\":{k},\"reps\":{reps},\"seed\":{seed},\"presets\":{},\"instances\":{},\"cells\":[{}],\"geomeans\":[{}]}}",
+        json_str_array(&presets),
+        json_str_array(&instances),
+        cell_objs.join(","),
+        geo_objs.join(","),
+    );
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, format!("{doc}\n")).with_context(|| format!("writing {path}"))?;
+            eprintln!("wrote report to {path}");
+        }
+        None => println!("{doc}"),
     }
     Ok(())
 }

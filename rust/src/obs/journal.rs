@@ -1,0 +1,293 @@
+//! Durable ops journal: one JSON line per request lifecycle event,
+//! written behind `serve --journal FILE`.
+//!
+//! The journal is the *durable* complement to the in-memory
+//! [`MetricsRegistry`](super::MetricsRegistry): counters answer "how
+//! many so far", the journal answers "what happened, when" across
+//! restarts. Events are admitted / started / completed / cancelled /
+//! busy / cache_hit / error / shutdown — emitted by the net layer and
+//! the scheduler, never by the partitioning pipeline, so journaling
+//! can never change a result byte (the same invariant tracing pins in
+//! `rust/tests/observability.rs`).
+//!
+//! # Line format
+//!
+//! Each line is a self-contained JSON object with a fixed field
+//! prefix, e.g.:
+//!
+//! ```text
+//! {"seq":3,"ts_ms":1754550000123,"event":"completed","id":"t1","seconds":0.42}
+//! ```
+//!
+//! `seq` is a process-monotonic sequence number (reconciliation key
+//! for `scripts/journal_replay.py`); `ts_ms` is wall-clock Unix
+//! milliseconds — fine here because journal lines are operator
+//! telemetry, never part of a deterministic response. Caller-supplied
+//! strings are JSON-escaped; floats render with `{:.6}`.
+//!
+//! # Rotation
+//!
+//! With `max_bytes > 0`, a line that would push the current file past
+//! the limit first rotates `FILE` → `FILE.1` (replacing any previous
+//! `FILE.1`) and starts a fresh `FILE` — bounded disk use with one
+//! generation of history. Every line is flushed on write: a crashed
+//! process loses at most the line being written.
+
+use crate::util::json::escape_json;
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Where the journal writes and when it rotates.
+#[derive(Debug, Clone)]
+pub struct JournalConfig {
+    pub path: PathBuf,
+    /// Rotate when a write would push the file past this size;
+    /// `0` disables rotation.
+    pub max_bytes: u64,
+}
+
+impl JournalConfig {
+    /// A journal at `path` with the default 16 MiB rotation threshold.
+    pub fn new<P: Into<PathBuf>>(path: P) -> JournalConfig {
+        JournalConfig {
+            path: path.into(),
+            max_bytes: 16 << 20,
+        }
+    }
+}
+
+/// One typed field value of a journal line.
+#[derive(Debug, Clone, Copy)]
+pub enum FieldValue<'a> {
+    Str(&'a str),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+struct JournalInner {
+    writer: BufWriter<File>,
+    written: u64,
+    seq: u64,
+}
+
+/// The durable event sink. Shared via `Arc` between the accept loop,
+/// per-connection threads, and the scheduler callback; a poisoned lock
+/// is recovered (a panicking connection thread must not silence the
+/// journal for everyone else).
+pub struct Journal {
+    config: JournalConfig,
+    inner: Mutex<JournalInner>,
+}
+
+impl Journal {
+    /// Open (append) the journal at `config.path`.
+    pub fn open(config: JournalConfig) -> io::Result<Journal> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&config.path)?;
+        let written = file.metadata()?.len();
+        Ok(Journal {
+            config,
+            inner: Mutex::new(JournalInner {
+                writer: BufWriter::new(file),
+                written,
+                seq: 0,
+            }),
+        })
+    }
+
+    /// The journal's file path.
+    pub fn path(&self) -> &Path {
+        &self.config.path
+    }
+
+    /// Append one event line (see the module docs for the format) and
+    /// flush it. I/O errors are swallowed: telemetry must never take
+    /// the service down.
+    pub fn record(&self, event: &str, fields: &[(&str, FieldValue<'_>)]) {
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let mut line = format!(
+            "{{\"seq\":{},\"ts_ms\":{ts_ms},\"event\":\"{}\"",
+            inner.seq,
+            escape_json(event)
+        );
+        inner.seq += 1;
+        for (key, value) in fields {
+            line.push_str(&format!(",\"{}\":", escape_json(key)));
+            match value {
+                FieldValue::Str(s) => {
+                    line.push('"');
+                    line.push_str(&escape_json(s));
+                    line.push('"');
+                }
+                FieldValue::Int(v) => line.push_str(&v.to_string()),
+                FieldValue::Float(v) => line.push_str(&format!("{v:.6}")),
+                FieldValue::Bool(v) => line.push_str(if *v { "true" } else { "false" }),
+            }
+        }
+        line.push_str("}\n");
+        let len = line.len() as u64;
+        if self.config.max_bytes > 0
+            && inner.written > 0
+            && inner.written + len > self.config.max_bytes
+        {
+            self.rotate(&mut inner);
+        }
+        if inner.writer.write_all(line.as_bytes()).is_ok() {
+            let _ = inner.writer.flush();
+            inner.written += len;
+        }
+    }
+
+    /// `FILE` → `FILE.1`, fresh `FILE`. On any failure the journal
+    /// keeps writing to the old file (bounded-disk is best-effort).
+    fn rotate(&self, inner: &mut JournalInner) {
+        let _ = inner.writer.flush();
+        let mut rotated = self.config.path.as_os_str().to_owned();
+        rotated.push(".1");
+        if std::fs::rename(&self.config.path, PathBuf::from(&rotated)).is_err() {
+            return;
+        }
+        match OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.config.path)
+        {
+            Ok(file) => {
+                inner.writer = BufWriter::new(file);
+                inner.written = 0;
+            }
+            Err(_) => {
+                // Keep the old handle (now FILE.1) rather than lose
+                // events entirely.
+            }
+        }
+    }
+
+    /// Flush buffered lines (called on shutdown; each record already
+    /// flushes, so this is belt-and-braces).
+    pub fn flush(&self) {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let _ = inner.writer.flush();
+    }
+}
+
+impl std::fmt::Debug for Journal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Journal")
+            .field("path", &self.config.path)
+            .field("max_bytes", &self.config.max_bytes)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{parse_json, Json};
+
+    fn temp_journal(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("sclap-journal-{}-{tag}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn lines_are_valid_json_with_monotonic_seq() {
+        let path = temp_journal("basic");
+        std::fs::remove_file(&path).ok();
+        let journal = Journal::open(JournalConfig::new(&path)).unwrap();
+        journal.record("admitted", &[("id", FieldValue::Str("t1"))]);
+        journal.record(
+            "completed",
+            &[
+                ("id", FieldValue::Str("t1")),
+                ("seconds", FieldValue::Float(0.25)),
+                ("cached", FieldValue::Bool(false)),
+                ("cut", FieldValue::Int(42)),
+            ],
+        );
+        journal.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (i, line) in lines.iter().enumerate() {
+            let json = parse_json(line).expect("journal line parses");
+            assert_eq!(json.get("seq").and_then(Json::as_i64), Some(i as i64));
+            assert!(json.get("ts_ms").and_then(Json::as_i64).unwrap() > 0);
+        }
+        let done = parse_json(lines[1]).unwrap();
+        assert_eq!(done.get("event").and_then(Json::as_str), Some("completed"));
+        assert_eq!(done.get("cut").and_then(Json::as_i64), Some(42));
+        assert_eq!(done.get("cached").and_then(Json::as_bool), Some(false));
+        assert_eq!(done.get("seconds").and_then(Json::as_f64), Some(0.25));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn hostile_strings_are_escaped() {
+        let path = temp_journal("escape");
+        std::fs::remove_file(&path).ok();
+        let journal = Journal::open(JournalConfig::new(&path)).unwrap();
+        let hostile = "a\"b\\c\nd\te";
+        journal.record("error", &[("id", FieldValue::Str(hostile))]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = parse_json(text.lines().next().unwrap()).expect("escaped line parses");
+        assert_eq!(json.get("id").and_then(Json::as_str), Some(hostile));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rotation_keeps_one_generation() {
+        let path = temp_journal("rotate");
+        let rotated = PathBuf::from(format!("{}.1", path.display()));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&rotated).ok();
+        let journal = Journal::open(JournalConfig {
+            path: path.clone(),
+            max_bytes: 200,
+        })
+        .unwrap();
+        for i in 0..20 {
+            journal.record("admitted", &[("i", FieldValue::Int(i))]);
+        }
+        assert!(rotated.exists(), "rotation must produce FILE.1");
+        let head = std::fs::metadata(&path).unwrap().len();
+        assert!(head <= 200, "head file stays under the threshold, got {head}");
+        // Every surviving line still parses, and seqs stay monotonic
+        // across the rotation boundary.
+        let mut seqs = Vec::new();
+        for file in [&rotated, &path] {
+            for line in std::fs::read_to_string(file).unwrap().lines() {
+                seqs.push(parse_json(line).unwrap().get("seq").and_then(Json::as_i64).unwrap());
+            }
+        }
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]), "seqs monotonic: {seqs:?}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&rotated).ok();
+    }
+
+    #[test]
+    fn reopen_appends_after_existing_content() {
+        let path = temp_journal("reopen");
+        std::fs::remove_file(&path).ok();
+        {
+            let journal = Journal::open(JournalConfig::new(&path)).unwrap();
+            journal.record("admitted", &[]);
+        }
+        {
+            let journal = Journal::open(JournalConfig::new(&path)).unwrap();
+            journal.record("shutdown", &[]);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2, "append, not truncate");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -55,10 +55,10 @@
 //! [`phase_stats`](MetricsRegistry::phase_stats) still aggregates
 //! across levels for the old flat view.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Number of histogram bins: bucket 0 (the value 0) plus one power-of-
 /// two bucket per bit of `u64`.
@@ -174,6 +174,157 @@ impl Histogram {
             })
             .collect()
     }
+
+    /// Estimate the `q`-quantile (`0.0 ≤ q ≤ 1.0`) from the log₂
+    /// buckets, with **upper-bound semantics**: the result is
+    /// [`bucket_upper_bound`] of the bucket containing the rank-⌈q·n⌉
+    /// sample, i.e. an inclusive upper bound on the true quantile that
+    /// is exact only when every sample in that bucket equals the bound.
+    /// The error is bounded by the bucket width (< 2× the true value
+    /// for nonzero samples). `None` when the histogram is empty.
+    ///
+    /// `quantile(0.0)` is the upper bound of the first non-empty
+    /// bucket; `quantile(1.0)` of the last.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                return Some(bucket_upper_bound(i));
+            }
+        }
+        // Unreachable for a quiescent histogram (cum ends at count);
+        // racing observers can leave buckets behind count momentarily.
+        Some(bucket_upper_bound(HISTOGRAM_BINS - 1))
+    }
+}
+
+/// Summary of a [`RollingWindow`] at one instant: how many samples the
+/// window currently holds, the implied rate, and exact (not bucketed)
+/// latency quantiles over those samples.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WindowSnapshot {
+    /// Samples inside the window.
+    pub count: u64,
+    /// `count / window`, scaled by 1000 (milli-requests per second) so
+    /// sub-1/s rates stay visible as integer gauges.
+    pub rps_milli: u64,
+    /// Exact median of the windowed values (0 when empty).
+    pub p50: u64,
+    /// Exact 99th percentile of the windowed values (0 when empty).
+    pub p99: u64,
+}
+
+/// A sliding time window over `(Instant, u64)` samples — the rolling
+/// req/s and latency view behind the `net_window_*` gauges, which the
+/// cumulative [`Histogram`]s cannot provide (they never forget).
+///
+/// Unlike the lock-free instruments this takes a mutex per update; it
+/// is fed once per completed network request, far off any hot path.
+/// Sample count is bounded ([`RollingWindow::MAX_SAMPLES`]); beyond the
+/// bound the oldest samples fall off early, biasing a flooded window
+/// toward recent traffic — acceptable for an ops gauge.
+///
+/// The `*_at` methods take an explicit `now` so tests inject time
+/// instead of sleeping.
+#[derive(Debug)]
+pub struct RollingWindow {
+    window: Duration,
+    samples: Mutex<VecDeque<(Instant, u64)>>,
+}
+
+impl RollingWindow {
+    /// Hard bound on retained samples.
+    pub const MAX_SAMPLES: usize = 4096;
+
+    /// A window covering the trailing `window` of wall time.
+    pub fn new(window: Duration) -> RollingWindow {
+        RollingWindow {
+            window: window.max(Duration::from_millis(1)),
+            samples: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Record `value` (e.g. a request latency in µs) now.
+    pub fn record(&self, value: u64) {
+        self.record_at(Instant::now(), value);
+    }
+
+    /// [`RollingWindow::record`] with an injected clock.
+    pub fn record_at(&self, now: Instant, value: u64) {
+        let mut samples = self.lock();
+        Self::prune(&mut samples, now, self.window);
+        if samples.len() >= Self::MAX_SAMPLES {
+            samples.pop_front();
+        }
+        samples.push_back((now, value));
+    }
+
+    /// Snapshot the window as of now.
+    pub fn snapshot(&self) -> WindowSnapshot {
+        self.snapshot_at(Instant::now())
+    }
+
+    /// [`RollingWindow::snapshot`] with an injected clock.
+    pub fn snapshot_at(&self, now: Instant) -> WindowSnapshot {
+        let mut samples = self.lock();
+        Self::prune(&mut samples, now, self.window);
+        let count = samples.len() as u64;
+        if count == 0 {
+            return WindowSnapshot::default();
+        }
+        let mut values: Vec<u64> = samples.iter().map(|&(_, v)| v).collect();
+        drop(samples);
+        values.sort_unstable();
+        let quantile = |q: f64| {
+            let rank = ((q * count as f64).ceil() as usize).clamp(1, values.len());
+            values[rank - 1]
+        };
+        let window_ms = self.window.as_millis().max(1) as u64;
+        WindowSnapshot {
+            count,
+            rps_milli: count.saturating_mul(1_000_000) / window_ms,
+            p50: quantile(0.5),
+            p99: quantile(0.99),
+        }
+    }
+
+    fn prune(samples: &mut VecDeque<(Instant, u64)>, now: Instant, window: Duration) {
+        while let Some(&(t, _)) = samples.front() {
+            // `duration_since` saturates to zero for t > now (clock
+            // skew between threads), which keeps such samples.
+            if now.duration_since(t) > window {
+                samples.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, VecDeque<(Instant, u64)>> {
+        self.samples.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Escape a Prometheus label value: backslash, double quote, and
+/// newline, per the text-format spec. Everything else passes through
+/// verbatim (UTF-8 label values are legal).
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
 }
 
 /// Aggregate wall-clock of one named phase (the type
@@ -269,10 +420,24 @@ impl MetricsRegistry {
     }
 
     /// Render the whole registry as the inner fields of one JSON object
-    /// (no surrounding braces): `"counters":{...},"gauges":{...},
-    /// "histograms":{...},"phases":[...]`. Key order is sorted name
-    /// order — deterministic for a quiescent registry, so tests can
-    /// compare snapshots byte-for-byte.
+    /// (no surrounding braces). **The ordering is a contract** (pinned
+    /// by a unit test) so journal/metrics diffs are stable across runs:
+    ///
+    /// - sections in fixed order: `"counters":{…},"gauges":{…},
+    ///   "histograms":{…},"phases":[…]`;
+    /// - within `counters`/`gauges`/`histograms`, keys in sorted
+    ///   (byte-order) name order;
+    /// - each histogram renders `{"count":…,"sum":…,"p50":…,"p99":…,
+    ///   "buckets":[[i,c],…]}` — `p50`/`p99` are
+    ///   [`Histogram::quantile`] upper bounds (`0` when empty), buckets
+    ///   are the non-empty `[bucket_index, count]` pairs ascending;
+    /// - `phases` entries sorted by `(name, level)` with levelless
+    ///   entries first, each `{"name":…,"level":…,"calls":…,
+    ///   "seconds":…}` (seconds to 6 decimal places — the one
+    ///   nondeterministic value).
+    ///
+    /// Deterministic for a quiescent registry, so tests can compare
+    /// snapshots byte-for-byte.
     pub fn render_json_fields(&self) -> String {
         let inner = self.lock();
         let mut out = String::new();
@@ -301,9 +466,11 @@ impl MetricsRegistry {
                 .map(|(b, c)| format!("[{b},{c}]"))
                 .collect();
             out.push_str(&format!(
-                "\"{name}\":{{\"count\":{},\"sum\":{},\"buckets\":[{}]}}",
+                "\"{name}\":{{\"count\":{},\"sum\":{},\"p50\":{},\"p99\":{},\"buckets\":[{}]}}",
                 h.count(),
                 h.sum(),
+                h.quantile(0.5).unwrap_or(0),
+                h.quantile(0.99).unwrap_or(0),
                 buckets.join(",")
             ));
         }
@@ -322,6 +489,82 @@ impl MetricsRegistry {
             ));
         }
         out.push(']');
+        out
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// (the wire `!metrics` payload). Layout, in order:
+    ///
+    /// - every counter as `sclap_<name>_total` (`# TYPE … counter`),
+    ///   sorted by name;
+    /// - every gauge as `sclap_<name>` (`# TYPE … gauge`), sorted;
+    /// - every histogram as `sclap_<name>` (`# TYPE … histogram`):
+    ///   cumulative `_bucket{le="…"}` series over the non-empty log₂
+    ///   buckets ([`bucket_upper_bound`] boundaries) plus the mandatory
+    ///   `le="+Inf"` bucket, then `_sum` and `_count`, then derived
+    ///   `sclap_<name>_p50` / `sclap_<name>_p99` helper gauges
+    ///   ([`Histogram::quantile`] upper bounds; omitted while empty);
+    /// - the phase table as `sclap_phase_calls_total` /
+    ///   `sclap_phase_seconds_total` labeled
+    ///   `{phase="…",level="…"}` (level `""` for levelless entries),
+    ///   label values escaped via [`escape_label_value`].
+    ///
+    /// Instrument names are `&'static str` idents (`[a-z0-9_]`), which
+    /// is exactly the legal Prometheus name alphabet — only label
+    /// *values* need escaping. Ordering is deterministic for a
+    /// quiescent registry, like [`render_json_fields`]
+    /// (`MetricsRegistry::render_json_fields`).
+    pub fn render_prometheus(&self) -> String {
+        let inner = self.lock();
+        let mut out = String::new();
+        for (name, c) in &inner.counters {
+            out.push_str(&format!(
+                "# TYPE sclap_{name}_total counter\nsclap_{name}_total {}\n",
+                c.get()
+            ));
+        }
+        for (name, g) in &inner.gauges {
+            out.push_str(&format!(
+                "# TYPE sclap_{name} gauge\nsclap_{name} {}\n",
+                g.get()
+            ));
+        }
+        for (name, h) in &inner.histograms {
+            out.push_str(&format!("# TYPE sclap_{name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, c) in h.nonzero_buckets() {
+                cum += c;
+                out.push_str(&format!(
+                    "sclap_{name}_bucket{{le=\"{}\"}} {cum}\n",
+                    bucket_upper_bound(i)
+                ));
+            }
+            out.push_str(&format!("sclap_{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+            out.push_str(&format!("sclap_{name}_sum {}\n", h.sum()));
+            out.push_str(&format!("sclap_{name}_count {}\n", h.count()));
+            if let (Some(p50), Some(p99)) = (h.quantile(0.5), h.quantile(0.99)) {
+                out.push_str(&format!(
+                    "# TYPE sclap_{name}_p50 gauge\nsclap_{name}_p50 {p50}\n\
+                     # TYPE sclap_{name}_p99 gauge\nsclap_{name}_p99 {p99}\n"
+                ));
+            }
+        }
+        if !inner.phases.is_empty() {
+            out.push_str("# TYPE sclap_phase_calls_total counter\n");
+            out.push_str("# TYPE sclap_phase_seconds_total counter\n");
+            for (&(name, level), stat) in &inner.phases {
+                let level = level.map(|l| l.to_string()).unwrap_or_default();
+                let labels = format!(
+                    "{{phase=\"{}\",level=\"{}\"}}",
+                    escape_label_value(name),
+                    escape_label_value(&level)
+                );
+                out.push_str(&format!(
+                    "sclap_phase_calls_total{labels} {}\nsclap_phase_seconds_total{labels} {:.6}\n",
+                    stat.calls, stat.seconds
+                ));
+            }
+        }
         out
     }
 }
@@ -424,10 +667,143 @@ mod tests {
         assert_eq!(
             s,
             "{\"counters\":{\"a\":1,\"b\":2},\"gauges\":{\"g\":-7},\
-             \"histograms\":{\"h\":{\"count\":1,\"sum\":3,\"buckets\":[[2,1]]}},\
+             \"histograms\":{\"h\":{\"count\":1,\"sum\":3,\"p50\":3,\"p99\":3,\"buckets\":[[2,1]]}},\
              \"phases\":[{\"name\":\"p\",\"level\":2,\"calls\":1,\"seconds\":0.500000}]}"
         );
         // And it parses as JSON.
         crate::util::json::parse_json(&s).expect("valid json");
+    }
+
+    #[test]
+    fn quantiles_report_bucket_upper_bounds() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.5), None, "empty histogram has no quantiles");
+        // Samples 1..=100: bucket i holds 2^(i-1)..2^i, so the median
+        // sample (rank 50) lands in bucket 6 (32..=63) whose upper
+        // bound is 63, and rank 99 in bucket 7 (64..=100 observed).
+        for v in 1..=100u64 {
+            h.observe(v);
+        }
+        assert_eq!(h.quantile(0.5), Some(63));
+        assert_eq!(h.quantile(0.99), Some(127));
+        assert_eq!(h.quantile(1.0), Some(127));
+        // q=0 pins to the first non-empty bucket's bound.
+        assert_eq!(h.quantile(0.0), Some(1));
+        // Exact at bucket boundaries when the bucket is a single value:
+        // all-zero samples sit in bucket 0, upper bound 0.
+        let z = Histogram::default();
+        z.observe(0);
+        z.observe(0);
+        assert_eq!(z.quantile(0.5), Some(0));
+        assert_eq!(z.quantile(0.99), Some(0));
+        // A single sample answers every quantile with its bucket bound.
+        let one = Histogram::default();
+        one.observe(1000); // bucket 10 (512..=1023)
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(one.quantile(q), Some(1023), "q={q}");
+        }
+        // Out-of-range q clamps rather than panicking.
+        assert_eq!(one.quantile(-3.0), Some(1023));
+        assert_eq!(one.quantile(7.0), Some(1023));
+    }
+
+    #[test]
+    fn rolling_window_forgets_old_samples() {
+        let w = RollingWindow::new(Duration::from_secs(10));
+        let t0 = Instant::now();
+        w.record_at(t0, 100);
+        w.record_at(t0 + Duration::from_secs(1), 200);
+        w.record_at(t0 + Duration::from_secs(2), 400);
+        // All three inside the window: count 3, exact quantiles.
+        let snap = w.snapshot_at(t0 + Duration::from_secs(2));
+        assert_eq!(snap.count, 3);
+        assert_eq!(snap.p50, 200);
+        assert_eq!(snap.p99, 400);
+        // 3 samples over 10 s = 0.3 req/s = 300 milli-rps.
+        assert_eq!(snap.rps_milli, 300);
+        // 11 s after t0 the first sample has aged out.
+        let snap = w.snapshot_at(t0 + Duration::from_secs(11));
+        assert_eq!(snap.count, 2);
+        assert_eq!(snap.p50, 200);
+        // And far in the future the window is empty again.
+        assert_eq!(
+            w.snapshot_at(t0 + Duration::from_secs(60)),
+            WindowSnapshot::default()
+        );
+    }
+
+    #[test]
+    fn rolling_window_bounds_memory() {
+        let w = RollingWindow::new(Duration::from_secs(3600));
+        let t0 = Instant::now();
+        for i in 0..(RollingWindow::MAX_SAMPLES as u64 + 100) {
+            w.record_at(t0 + Duration::from_millis(i), i);
+        }
+        let snap = w.snapshot_at(t0 + Duration::from_secs(1));
+        assert_eq!(snap.count, RollingWindow::MAX_SAMPLES as u64);
+        // Oldest samples were dropped, so the minimum retained value is
+        // the 100th.
+        assert!(snap.p50 >= 100);
+    }
+
+    #[test]
+    fn label_escaping_handles_hostile_values() {
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value("a\"b"), "a\\\"b");
+        assert_eq!(escape_label_value("a\\b"), "a\\\\b");
+        assert_eq!(escape_label_value("a\nb"), "a\\nb");
+        assert_eq!(
+            escape_label_value("\\\"\n"),
+            "\\\\\\\"\\n",
+            "each hostile char escapes independently"
+        );
+        // UTF-8 passes through.
+        assert_eq!(escape_label_value("émoji🦀"), "émoji🦀");
+    }
+
+    #[test]
+    fn prometheus_rendering_is_wellformed_and_cumulative() {
+        let r = MetricsRegistry::new();
+        r.counter("reqs").add(3);
+        r.gauge("depth").set(-2);
+        let h = r.histogram("lat");
+        for v in [0u64, 1, 5, 5, 300] {
+            h.observe(v);
+        }
+        r.record_phase("coarsening", Some(1), 0.25);
+        r.record_phase("initial", None, 0.5);
+        let text = r.render_prometheus();
+        assert_eq!(
+            text,
+            "# TYPE sclap_reqs_total counter\n\
+             sclap_reqs_total 3\n\
+             # TYPE sclap_depth gauge\n\
+             sclap_depth -2\n\
+             # TYPE sclap_lat histogram\n\
+             sclap_lat_bucket{le=\"0\"} 1\n\
+             sclap_lat_bucket{le=\"1\"} 2\n\
+             sclap_lat_bucket{le=\"7\"} 4\n\
+             sclap_lat_bucket{le=\"511\"} 5\n\
+             sclap_lat_bucket{le=\"+Inf\"} 5\n\
+             sclap_lat_sum 311\n\
+             sclap_lat_count 5\n\
+             # TYPE sclap_lat_p50 gauge\n\
+             sclap_lat_p50 7\n\
+             # TYPE sclap_lat_p99 gauge\n\
+             sclap_lat_p99 511\n\
+             # TYPE sclap_phase_calls_total counter\n\
+             # TYPE sclap_phase_seconds_total counter\n\
+             sclap_phase_calls_total{phase=\"coarsening\",level=\"1\"} 1\n\
+             sclap_phase_seconds_total{phase=\"coarsening\",level=\"1\"} 0.250000\n\
+             sclap_phase_calls_total{phase=\"initial\",level=\"\"} 1\n\
+             sclap_phase_seconds_total{phase=\"initial\",level=\"\"} 0.500000\n"
+        );
+        // Bucket series are cumulative (monotone non-decreasing).
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "{line}");
+            last = v;
+        }
     }
 }

@@ -10,6 +10,16 @@
 //! the per-phase wall-clock table, snapshotted on demand by `serve
 //! --timing`, benches, and the wire `!stats` command.
 //!
+//! Two quality/ops layers build on those primitives. **Quality
+//! explainability** ([`quality`]): `explain=true` on a request makes
+//! the scheduler collect that request's trace lanes into a
+//! deterministic, worker-count-invariant [`QualityReport`] — per-level
+//! coarsening lineage, LPA convergence telemetry, refinement gains —
+//! appended to the response JSON. **Ops telemetry**: the durable
+//! lifecycle [`Journal`] behind `serve --journal FILE` and the
+//! Prometheus text exposition behind the wire `!metrics` command
+//! ([`MetricsRegistry::render_prometheus`]).
+//!
 //! Both hang off [`ExecutionCtx`](crate::util::exec::ExecutionCtx):
 //! every context owns a [`MetricsRegistry`] (so all layers built on
 //! the context — queue, cache, net server — share one instrument
@@ -20,13 +30,17 @@
 //! the instrumentation points cost one thread-local `Option` check and
 //! take no locks.
 
+pub mod journal;
 pub mod metrics;
+pub mod quality;
 pub mod trace;
 
+pub use journal::{Journal, JournalConfig};
 pub use metrics::{
-    bucket_index, bucket_upper_bound, Counter, Gauge, Histogram, MetricsRegistry, PhaseStat,
-    HISTOGRAM_BINS,
+    bucket_index, bucket_upper_bound, escape_label_value, Counter, Gauge, Histogram,
+    MetricsRegistry, PhaseStat, RollingWindow, WindowSnapshot, HISTOGRAM_BINS,
 };
+pub use quality::QualityReport;
 pub use trace::{
     counter, span, tracing_active, EventKind, SpanGuard, TraceEvent, Tracer, TrackScope,
 };

@@ -1,0 +1,797 @@
+//! Quality explainability: deterministic per-request reports built
+//! from trace lanes (`queue::spec` key `explain=true`).
+//!
+//! The pipeline already narrates itself through [`trace`] spans and
+//! counters — coarsening lineage, LPA rounds, FM passes, per-level
+//! cuts. This module turns one repetition's *lane* (the `(track,
+//! instance)` slice of a [`Tracer`]) into a structured
+//! [`QualityReport`] and renders it as JSON with a fixed field order.
+//!
+//! # Determinism
+//!
+//! The report consumes only the logical content of events — names,
+//! integer args, and the per-lane `seq` order — never timestamps.
+//! Lane coordinates are pure functions of the request (`track =
+//! track_of(seed)`, `instance` = racer index), and the pool masks
+//! multi-task jobs ([`trace::mask`], `util::pool` contract rule 5), so
+//! the same request produces a byte-identical report for any worker
+//! count, backend, or shard layout. `rust/tests/observability.rs`
+//! pins exactly that.
+//!
+//! # Section attribution
+//!
+//! Events are attributed to report sections by the innermost open span
+//! at emission time: `coarsening` → the cycle's coarsening section,
+//! `initial` → the root-bisection section (deeper splits run as
+//! multi-task pool jobs and are masked), `refine_level` → that level's
+//! refinement section, `uncoarsening` outside any `refine_level` → the
+//! feasibility-repair section, and the `external_*` spans → the
+//! out-of-core driver's sections.
+
+use super::trace::{EventKind, TraceEvent, Tracer};
+use crate::util::json::escape_json;
+
+/// LPA stop reason: the round budget ran out (`max_iterations` in the
+/// paper's §3.1 loop).
+pub const STOP_MAX_ITERATIONS: i64 = 0;
+/// LPA stop reason: the moved fraction fell under the convergence
+/// threshold before the budget ran out.
+pub const STOP_CONVERGED: i64 = 1;
+/// LPA stop reason: the active-nodes queue drained (§B.2) — nothing
+/// left to visit, strictly stronger than threshold convergence.
+pub const STOP_EXHAUSTED: i64 = 2;
+
+/// Human-readable name of a `STOP_*` code (`"unknown"` for values the
+/// vocabulary does not define — forward compatibility, not an error).
+pub fn stop_reason_name(code: i64) -> &'static str {
+    match code {
+        STOP_MAX_ITERATIONS => "max_iterations",
+        STOP_CONVERGED => "converged",
+        STOP_EXHAUSTED => "exhausted",
+        _ => "unknown",
+    }
+}
+
+/// One closed LPA engine run: the per-round moved counts, the round
+/// total, and the stop reason, tagged with the engine variant
+/// (`lpa`, `parallel_lpa`, `async_lpa`, `external_lpa`, `lpa_refine`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LpaRun {
+    pub variant: &'static str,
+    pub rounds: i64,
+    pub stop: i64,
+    pub moved: Vec<i64>,
+}
+
+/// One closed FM run: pass count, cut trajectory endpoints, applied
+/// moves, and the per-pass best cuts (`fm_pass` trail).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FmRun {
+    pub passes: i64,
+    pub initial_cut: i64,
+    pub final_cut: i64,
+    pub moves: i64,
+    pub pass_cuts: Vec<i64>,
+}
+
+/// One cut-before/cut-after refinement gain (`lpa_refine_gain`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Gain {
+    pub before: i64,
+    pub after: i64,
+}
+
+/// The telemetry attributed to one pipeline section.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Section {
+    pub lpa: Vec<LpaRun>,
+    pub fm: Vec<FmRun>,
+    pub gains: Vec<Gain>,
+}
+
+impl Section {
+    fn is_empty(&self) -> bool {
+        self.lpa.is_empty() && self.fm.is_empty() && self.gains.is_empty()
+    }
+}
+
+/// One coarsening contraction (`coarsen_level`): the graph after
+/// contraction `level + 1` (level 0 = first contraction of the input).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LevelLineage {
+    pub level: i64,
+    pub n: i64,
+    pub m: i64,
+}
+
+/// One refined hierarchy level (`refine_level` span) and what ran
+/// inside it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RefineLevel {
+    pub level: i64,
+    pub n: i64,
+    pub section: Section,
+}
+
+/// Post-refinement quality of one level (`level_quality`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LevelQuality {
+    pub level: i64,
+    pub cut: i64,
+    pub imbalance_milli: i64,
+}
+
+/// One V-cycle of the in-memory pipeline.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CycleReport {
+    pub cycle: i64,
+    /// Hierarchy depth (`hierarchy.levels`).
+    pub levels: i64,
+    pub coarsest_n: i64,
+    pub coarsest_m: i64,
+    pub lineage: Vec<LevelLineage>,
+    pub coarsening: Section,
+    pub initial: Section,
+    pub refine: Vec<RefineLevel>,
+    /// Feasibility repair on the input graph (inside `uncoarsening`,
+    /// outside any `refine_level`).
+    pub repair: Section,
+    pub quality: Vec<LevelQuality>,
+    /// This cycle's cut on the input graph (`cycle_cut`).
+    pub cut: i64,
+}
+
+/// The out-of-core driver's sections (absent when the run never left
+/// the in-memory pipeline — including the store fast path, which emits
+/// no external events at all, keeping backends stream-identical).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ExternalReport {
+    /// `external_level` counters: (level, coarse_n, coarse_m).
+    pub levels: Vec<(i64, i64, i64)>,
+    pub coarsening: Section,
+    pub refinement: Section,
+    pub cut: i64,
+    pub external_levels: i64,
+}
+
+impl ExternalReport {
+    fn is_empty(&self) -> bool {
+        self.levels.is_empty()
+            && self.coarsening.is_empty()
+            && self.refinement.is_empty()
+            && self.cut == 0
+            && self.external_levels == 0
+    }
+}
+
+/// Everything one repetition's lane says about its run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RepReport {
+    pub seed: u64,
+    /// Dimensions of the graph handed to the in-memory pipeline
+    /// (`input_graph`). For out-of-core runs this is the contracted
+    /// graph the inner pipeline partitioned; the store-level lineage
+    /// lives in [`ExternalReport::levels`].
+    pub input_n: i64,
+    pub input_m: i64,
+    pub cycles: Vec<CycleReport>,
+    pub external: Option<ExternalReport>,
+}
+
+/// A full per-request report: one [`RepReport`] per aggregate-
+/// contributing repetition, in `(seed, instance)` order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct QualityReport {
+    pub reps: Vec<RepReport>,
+}
+
+/// In-flight LPA run state while walking a lane.
+#[derive(Default)]
+struct PendingLpa {
+    moved: Vec<i64>,
+}
+
+/// In-flight FM run state while walking a lane.
+#[derive(Default)]
+struct PendingFm {
+    pass_cuts: Vec<i64>,
+}
+
+fn arg(e: &TraceEvent, name: &str) -> i64 {
+    e.args()
+        .iter()
+        .find(|(k, _)| *k == name)
+        .map(|(_, v)| *v)
+        .unwrap_or(0)
+}
+
+/// `("lpa_round", "lpa")`-style mapping: the engine variant of a round
+/// or done counter, or `None` for unrelated counters.
+fn lpa_variant(name: &str) -> Option<&'static str> {
+    match name {
+        "lpa_round" | "lpa_done" => Some("lpa"),
+        "parallel_lpa_round" | "parallel_lpa_done" => Some("parallel_lpa"),
+        "async_lpa_round" | "async_lpa_done" => Some("async_lpa"),
+        "external_lpa_round" | "external_lpa_done" => Some("external_lpa"),
+        "lpa_refine_round" | "lpa_refine_done" => Some("lpa_refine"),
+        _ => None,
+    }
+}
+
+impl RepReport {
+    /// Build one repetition's report from its lane events (already in
+    /// `seq` order — [`Tracer::lane_events`]).
+    pub fn from_events(seed: u64, events: &[TraceEvent]) -> RepReport {
+        let mut rep = RepReport {
+            seed,
+            ..RepReport::default()
+        };
+        let mut input_seen = false;
+        // The innermost-open-span stack; `refine_level` entries double
+        // as the index into the current cycle's refine list.
+        let mut stack: Vec<&'static str> = Vec::new();
+        let mut pending_lpa: Vec<(&'static str, PendingLpa)> = Vec::new();
+        let mut pending_fm = PendingFm::default();
+        // Events outside every known section (vocabulary growth) are
+        // attributed here and dropped.
+        let mut floating = Section::default();
+        for e in events {
+            match e.kind {
+                EventKind::Begin => {
+                    stack.push(e.name);
+                    match e.name {
+                        "vcycle" => rep.cycles.push(CycleReport {
+                            cycle: arg(e, "cycle"),
+                            ..CycleReport::default()
+                        }),
+                        "refine_level" => {
+                            if let Some(c) = rep.cycles.last_mut() {
+                                c.refine.push(RefineLevel {
+                                    level: arg(e, "level"),
+                                    n: arg(e, "n"),
+                                    section: Section::default(),
+                                });
+                            }
+                        }
+                        "external_coarsen_level" | "external_refinement" => {
+                            rep.external.get_or_insert_with(ExternalReport::default);
+                        }
+                        _ => {}
+                    }
+                }
+                EventKind::End => {
+                    // Pop to the matching Begin; tolerate (don't crash
+                    // on) unbalanced streams from overflowing lanes.
+                    while let Some(top) = stack.pop() {
+                        if top == e.name {
+                            break;
+                        }
+                    }
+                }
+                EventKind::Counter => {
+                    if let Some(variant) = lpa_variant(e.name) {
+                        if e.name.ends_with("_done") {
+                            let moved = match pending_lpa
+                                .iter()
+                                .position(|(v, _)| *v == variant)
+                            {
+                                Some(i) => pending_lpa.remove(i).1.moved,
+                                None => Vec::new(),
+                            };
+                            let run = LpaRun {
+                                variant,
+                                rounds: arg(e, "rounds"),
+                                stop: arg(e, "reason"),
+                                moved,
+                            };
+                            section_mut(&stack, &mut rep, &mut floating)
+                                .lpa
+                                .push(run);
+                        } else {
+                            let slot = match pending_lpa
+                                .iter()
+                                .position(|(v, _)| *v == variant)
+                            {
+                                Some(i) => &mut pending_lpa[i].1,
+                                None => {
+                                    pending_lpa.push((variant, PendingLpa::default()));
+                                    &mut pending_lpa.last_mut().unwrap().1
+                                }
+                            };
+                            slot.moved.push(arg(e, "moved"));
+                        }
+                        continue;
+                    }
+                    match e.name {
+                        "input_graph" => {
+                            // First wins: for out-of-core runs only the
+                            // inner pipeline events this, so there is
+                            // exactly one either way.
+                            if !input_seen {
+                                rep.input_n = arg(e, "n");
+                                rep.input_m = arg(e, "m");
+                                input_seen = true;
+                            }
+                        }
+                        "hierarchy" => {
+                            if let Some(c) = rep.cycles.last_mut() {
+                                c.levels = arg(e, "levels");
+                                c.coarsest_n = arg(e, "coarsest_n");
+                                c.coarsest_m = arg(e, "coarsest_m");
+                            }
+                        }
+                        "coarsen_level" => {
+                            if let Some(c) = rep.cycles.last_mut() {
+                                c.lineage.push(LevelLineage {
+                                    level: arg(e, "level"),
+                                    n: arg(e, "n"),
+                                    m: arg(e, "m"),
+                                });
+                            }
+                        }
+                        "level_quality" => {
+                            if let Some(c) = rep.cycles.last_mut() {
+                                c.quality.push(LevelQuality {
+                                    level: arg(e, "level"),
+                                    cut: arg(e, "cut"),
+                                    imbalance_milli: arg(e, "imbalance_milli"),
+                                });
+                            }
+                        }
+                        "cycle_cut" => {
+                            if let Some(c) = rep.cycles.last_mut() {
+                                c.cut = arg(e, "cut");
+                            }
+                        }
+                        "fm_pass" => pending_fm.pass_cuts.push(arg(e, "cut")),
+                        "fm_done" => {
+                            let run = FmRun {
+                                passes: arg(e, "passes"),
+                                initial_cut: arg(e, "initial_cut"),
+                                final_cut: arg(e, "final_cut"),
+                                moves: arg(e, "moves"),
+                                pass_cuts: std::mem::take(&mut pending_fm.pass_cuts),
+                            };
+                            section_mut(&stack, &mut rep, &mut floating)
+                                .fm
+                                .push(run);
+                        }
+                        "lpa_refine_gain" => {
+                            section_mut(&stack, &mut rep, &mut floating)
+                                .gains
+                                .push(Gain {
+                                    before: arg(e, "before"),
+                                    after: arg(e, "after"),
+                                });
+                        }
+                        "external_level" => {
+                            let ext =
+                                rep.external.get_or_insert_with(ExternalReport::default);
+                            ext.levels.push((
+                                arg(e, "level"),
+                                arg(e, "coarse_n"),
+                                arg(e, "coarse_m"),
+                            ));
+                        }
+                        "external_result" => {
+                            let ext =
+                                rep.external.get_or_insert_with(ExternalReport::default);
+                            ext.cut = arg(e, "cut");
+                            ext.external_levels = arg(e, "external_levels");
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+        // A fast-path store run never emits external events; drop the
+        // empty shell if section attribution lazily created one.
+        if rep.external.as_ref().is_some_and(ExternalReport::is_empty) {
+            rep.external = None;
+        }
+        rep
+    }
+}
+
+/// The section the innermost open span attributes telemetry to. The
+/// borrow is resolved fresh per event, so the stack walk stays simple.
+fn section_mut<'a>(
+    stack: &[&'static str],
+    rep: &'a mut RepReport,
+    floating: &'a mut Section,
+) -> &'a mut Section {
+    for name in stack.iter().rev() {
+        match *name {
+            "refine_level" => {
+                if let Some(c) = rep.cycles.last_mut() {
+                    if let Some(r) = c.refine.last_mut() {
+                        return &mut r.section;
+                    }
+                }
+            }
+            "initial" => {
+                if let Some(c) = rep.cycles.last_mut() {
+                    return &mut c.initial;
+                }
+            }
+            "coarsening" => {
+                if let Some(c) = rep.cycles.last_mut() {
+                    return &mut c.coarsening;
+                }
+            }
+            "uncoarsening" => {
+                if let Some(c) = rep.cycles.last_mut() {
+                    return &mut c.repair;
+                }
+            }
+            "external_coarsen_level" => {
+                return &mut rep
+                    .external
+                    .get_or_insert_with(ExternalReport::default)
+                    .coarsening;
+            }
+            "external_refinement" => {
+                return &mut rep
+                    .external
+                    .get_or_insert_with(ExternalReport::default)
+                    .refinement;
+            }
+            _ => {}
+        }
+    }
+    floating
+}
+
+impl QualityReport {
+    /// Build the report for the aggregate-contributing lanes of
+    /// `tracer`: one `(seed, instance)` pair per repetition, where
+    /// `instance` is the deterministic lane the scheduler pinned with
+    /// [`Tracer::enter_lane`] (0 for plain units, the racer index for
+    /// config races). Reps are ordered by `(seed, instance)`.
+    pub fn from_lanes(tracer: &Tracer, lanes: &[(u64, u32)]) -> QualityReport {
+        let mut lanes: Vec<(u64, u32)> = lanes.to_vec();
+        lanes.sort_unstable();
+        lanes.dedup();
+        let reps = lanes
+            .iter()
+            .map(|&(seed, instance)| {
+                let events = tracer.lane_events(Tracer::track_of(seed), instance);
+                RepReport::from_events(seed, &events)
+            })
+            .collect();
+        QualityReport { reps }
+    }
+
+    /// Render as JSON with a fixed field order — the explain payload
+    /// appended to response lines. Byte-deterministic: every value is
+    /// an integer, an integer-derived `{:.4}` ratio, or a fixed string.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"reps\":[");
+        for (i, rep) in self.reps.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            render_rep(&mut out, rep);
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+fn render_rep(out: &mut String, rep: &RepReport) {
+    out.push_str(&format!(
+        "{{\"seed\":{},\"input\":{{\"n\":{},\"m\":{}}},\"cycles\":[",
+        rep.seed, rep.input_n, rep.input_m
+    ));
+    for (i, c) in rep.cycles.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        render_cycle(out, c, rep.input_n);
+    }
+    out.push(']');
+    if let Some(ext) = &rep.external {
+        out.push_str(",\"external\":");
+        render_external(out, ext);
+    }
+    out.push('}');
+}
+
+fn render_cycle(out: &mut String, c: &CycleReport, input_n: i64) {
+    out.push_str(&format!(
+        "{{\"cycle\":{},\"levels\":{},\"coarsest\":{{\"n\":{},\"m\":{}}},\"lineage\":[",
+        c.cycle, c.levels, c.coarsest_n, c.coarsest_m
+    ));
+    let mut prev_n = input_n;
+    for (i, l) in c.lineage.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        // Shrink factor of this contraction (finer n / coarser n) —
+        // deterministic: IEEE division of two integers, fixed format.
+        let shrink = if l.n > 0 { prev_n as f64 / l.n as f64 } else { 0.0 };
+        out.push_str(&format!(
+            "{{\"level\":{},\"n\":{},\"m\":{},\"shrink\":{:.4}}}",
+            l.level, l.n, l.m, shrink
+        ));
+        prev_n = l.n;
+    }
+    out.push_str("],\"coarsening\":");
+    render_section(out, &c.coarsening);
+    out.push_str(",\"initial\":");
+    render_section(out, &c.initial);
+    out.push_str(",\"refine\":[");
+    for (i, r) in c.refine.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{{\"level\":{},\"n\":{},\"section\":", r.level, r.n));
+        render_section(out, &r.section);
+        out.push('}');
+    }
+    out.push_str("],\"repair\":");
+    render_section(out, &c.repair);
+    out.push_str(",\"quality\":[");
+    for (i, q) in c.quality.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"level\":{},\"cut\":{},\"imbalance_milli\":{}}}",
+            q.level, q.cut, q.imbalance_milli
+        ));
+    }
+    out.push_str(&format!("],\"cut\":{}}}", c.cut));
+}
+
+fn render_section(out: &mut String, s: &Section) {
+    out.push_str("{\"lpa\":[");
+    for (i, run) in s.lpa.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"variant\":\"{}\",\"rounds\":{},\"stop\":\"{}\",\"moved\":[{}]}}",
+            escape_json(run.variant),
+            run.rounds,
+            stop_reason_name(run.stop),
+            join_i64(&run.moved)
+        ));
+    }
+    out.push_str("],\"fm\":[");
+    for (i, run) in s.fm.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"passes\":{},\"initial_cut\":{},\"final_cut\":{},\"moves\":{},\"pass_cuts\":[{}]}}",
+            run.passes,
+            run.initial_cut,
+            run.final_cut,
+            run.moves,
+            join_i64(&run.pass_cuts)
+        ));
+    }
+    out.push_str("],\"gains\":[");
+    for (i, g) in s.gains.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{{\"before\":{},\"after\":{}}}", g.before, g.after));
+    }
+    out.push_str("]}");
+}
+
+fn render_external(out: &mut String, ext: &ExternalReport) {
+    out.push_str("{\"levels\":[");
+    for (i, (level, n, m)) in ext.levels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{{\"level\":{level},\"n\":{n},\"m\":{m}}}"));
+    }
+    out.push_str("],\"coarsening\":");
+    render_section(out, &ext.coarsening);
+    out.push_str(",\"refinement\":");
+    render_section(out, &ext.refinement);
+    out.push_str(&format!(
+        ",\"cut\":{},\"external_levels\":{}}}",
+        ext.cut, ext.external_levels
+    ));
+}
+
+fn join_i64(values: &[i64]) -> String {
+    values
+        .iter()
+        .map(|v| v.to_string())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{counter, span};
+    use crate::util::json::parse_json;
+    use std::sync::Arc;
+
+    #[test]
+    fn stop_reasons_name_the_vocabulary() {
+        assert_eq!(stop_reason_name(STOP_MAX_ITERATIONS), "max_iterations");
+        assert_eq!(stop_reason_name(STOP_CONVERGED), "converged");
+        assert_eq!(stop_reason_name(STOP_EXHAUSTED), "exhausted");
+        assert_eq!(stop_reason_name(99), "unknown");
+    }
+
+    /// Emit a synthetic in-memory pipeline lane, mirroring the real
+    /// emission order in `partitioning::multilevel`.
+    fn synthetic_lane(tracer: &Arc<Tracer>, seed: u64, instance: u32) {
+        let _lane = tracer.enter_lane(Tracer::track_of(seed), instance);
+        counter("input_graph", &[("n", 100), ("m", 400)]);
+        let vcycle = span("vcycle", &[("cycle", 0)]);
+        {
+            let coarsening = span("coarsening", &[("cycle", 0)]);
+            counter("lpa_round", &[("round", 1), ("moved", 60)]);
+            counter("lpa_round", &[("round", 2), ("moved", 3)]);
+            counter("lpa_done", &[("rounds", 2), ("reason", STOP_CONVERGED)]);
+            drop(coarsening);
+        }
+        counter(
+            "hierarchy",
+            &[("cycle", 0), ("levels", 2), ("coarsest_n", 25), ("coarsest_m", 80)],
+        );
+        counter("coarsen_level", &[("level", 0), ("n", 50), ("m", 160)]);
+        counter("coarsen_level", &[("level", 1), ("n", 25), ("m", 80)]);
+        {
+            let initial = span("initial", &[("cycle", 0)]);
+            counter("fm_pass", &[("pass", 1), ("kept_moves", 4), ("cut", 30)]);
+            counter(
+                "fm_done",
+                &[("passes", 1), ("initial_cut", 35), ("final_cut", 30), ("moves", 4)],
+            );
+            drop(initial);
+        }
+        {
+            let uncoarsening = span("uncoarsening", &[("cycle", 0)]);
+            {
+                let rl = span("refine_level", &[("level", 2), ("n", 25)]);
+                counter("lpa_refine_round", &[("round", 0), ("moved", 5)]);
+                counter(
+                    "lpa_refine_done",
+                    &[("rounds", 1), ("reason", STOP_CONVERGED)],
+                );
+                counter("lpa_refine_gain", &[("before", 30), ("after", 28)]);
+                counter("fm_pass", &[("pass", 1), ("kept_moves", 2), ("cut", 27)]);
+                counter(
+                    "fm_done",
+                    &[("passes", 1), ("initial_cut", 28), ("final_cut", 27), ("moves", 2)],
+                );
+                drop(rl);
+            }
+            counter("level_quality", &[("level", 2), ("cut", 27), ("imbalance_milli", 12)]);
+            // Feasibility repair: a gain outside any refine_level span.
+            counter("lpa_refine_gain", &[("before", 27), ("after", 27)]);
+            drop(uncoarsening);
+        }
+        counter("cycle_cut", &[("cycle", 0), ("cut", 27)]);
+        drop(vcycle);
+    }
+
+    #[test]
+    fn builder_attributes_sections_by_innermost_span() {
+        let tracer = Arc::new(Tracer::new());
+        synthetic_lane(&tracer, 7, 0);
+        let report = QualityReport::from_lanes(&tracer, &[(7, 0)]);
+        assert_eq!(report.reps.len(), 1);
+        let rep = &report.reps[0];
+        assert_eq!((rep.input_n, rep.input_m), (100, 400));
+        assert!(rep.external.is_none(), "no external events, no section");
+        assert_eq!(rep.cycles.len(), 1);
+        let c = &rep.cycles[0];
+        assert_eq!((c.levels, c.coarsest_n, c.coarsest_m, c.cut), (2, 25, 80, 27));
+        assert_eq!(c.lineage.len(), 2);
+        assert_eq!(c.coarsening.lpa.len(), 1);
+        assert_eq!(c.coarsening.lpa[0].variant, "lpa");
+        assert_eq!(c.coarsening.lpa[0].moved, vec![60, 3]);
+        assert_eq!(c.coarsening.lpa[0].stop, STOP_CONVERGED);
+        assert_eq!(c.initial.fm.len(), 1);
+        assert_eq!(c.initial.fm[0].pass_cuts, vec![30]);
+        assert_eq!(c.refine.len(), 1);
+        let r = &c.refine[0];
+        assert_eq!((r.level, r.n), (2, 25));
+        assert_eq!(r.section.lpa[0].variant, "lpa_refine");
+        assert_eq!(r.section.gains, vec![Gain { before: 30, after: 28 }]);
+        assert_eq!(r.section.fm[0].final_cut, 27);
+        // The repair gain landed outside the refine_level span.
+        assert_eq!(c.repair.gains, vec![Gain { before: 27, after: 27 }]);
+        assert_eq!(c.quality.len(), 1);
+        assert_eq!(c.quality[0].imbalance_milli, 12);
+    }
+
+    #[test]
+    fn report_json_is_pinned_and_parses() {
+        let tracer = Arc::new(Tracer::new());
+        synthetic_lane(&tracer, 7, 0);
+        let json = QualityReport::from_lanes(&tracer, &[(7, 0)]).to_json();
+        // Byte-pinned: the explain payload's field order and number
+        // formatting are part of the wire contract.
+        assert_eq!(
+            json,
+            concat!(
+                "{\"reps\":[{\"seed\":7,\"input\":{\"n\":100,\"m\":400},\"cycles\":[",
+                "{\"cycle\":0,\"levels\":2,\"coarsest\":{\"n\":25,\"m\":80},",
+                "\"lineage\":[{\"level\":0,\"n\":50,\"m\":160,\"shrink\":2.0000},",
+                "{\"level\":1,\"n\":25,\"m\":80,\"shrink\":2.0000}],",
+                "\"coarsening\":{\"lpa\":[{\"variant\":\"lpa\",\"rounds\":2,",
+                "\"stop\":\"converged\",\"moved\":[60,3]}],\"fm\":[],\"gains\":[]},",
+                "\"initial\":{\"lpa\":[],\"fm\":[{\"passes\":1,\"initial_cut\":35,",
+                "\"final_cut\":30,\"moves\":4,\"pass_cuts\":[30]}],\"gains\":[]},",
+                "\"refine\":[{\"level\":2,\"n\":25,\"section\":{\"lpa\":[",
+                "{\"variant\":\"lpa_refine\",\"rounds\":1,\"stop\":\"converged\",",
+                "\"moved\":[5]}],\"fm\":[{\"passes\":1,\"initial_cut\":28,",
+                "\"final_cut\":27,\"moves\":2,\"pass_cuts\":[27]}],",
+                "\"gains\":[{\"before\":30,\"after\":28}]}}],",
+                "\"repair\":{\"lpa\":[],\"fm\":[],\"gains\":[{\"before\":27,\"after\":27}]},",
+                "\"quality\":[{\"level\":2,\"cut\":27,\"imbalance_milli\":12}],",
+                "\"cut\":27}]}]}"
+            )
+        );
+        parse_json(&json).expect("explain payload is valid JSON");
+    }
+
+    #[test]
+    fn external_events_populate_the_external_section() {
+        let tracer = Arc::new(Tracer::new());
+        {
+            let _lane = tracer.enter_lane(Tracer::track_of(3), 0);
+            {
+                let s = span("external_coarsen_level", &[("level", 0)]);
+                counter("external_lpa_round", &[("round", 1), ("moved", 40)]);
+                counter(
+                    "external_lpa_done",
+                    &[("rounds", 1), ("reason", STOP_MAX_ITERATIONS)],
+                );
+                drop(s);
+            }
+            counter("external_level", &[("level", 0), ("coarse_n", 50), ("coarse_m", 200)]);
+            counter("input_graph", &[("n", 50), ("m", 200)]);
+            {
+                let s = span("external_refinement", &[]);
+                counter("lpa_refine_gain", &[("before", 90), ("after", 80)]);
+                drop(s);
+            }
+            counter("external_result", &[("cut", 80), ("external_levels", 1)]);
+        }
+        let report = QualityReport::from_lanes(&tracer, &[(3, 0)]);
+        let ext = report.reps[0].external.as_ref().expect("external section");
+        assert_eq!(ext.levels, vec![(0, 50, 200)]);
+        assert_eq!(ext.coarsening.lpa[0].variant, "external_lpa");
+        assert_eq!(ext.coarsening.lpa[0].stop, STOP_MAX_ITERATIONS);
+        assert_eq!(ext.refinement.gains, vec![Gain { before: 90, after: 80 }]);
+        assert_eq!((ext.cut, ext.external_levels), (80, 1));
+        assert_eq!(report.reps[0].input_n, 50);
+        parse_json(&report.to_json()).expect("external payload is valid JSON");
+    }
+
+    #[test]
+    fn empty_lane_renders_an_empty_rep() {
+        let tracer = Arc::new(Tracer::new());
+        let report = QualityReport::from_lanes(&tracer, &[(1, 0)]);
+        assert_eq!(report.reps.len(), 1);
+        assert!(report.reps[0].cycles.is_empty());
+        assert_eq!(
+            report.to_json(),
+            "{\"reps\":[{\"seed\":1,\"input\":{\"n\":0,\"m\":0},\"cycles\":[]}]}"
+        );
+    }
+
+    #[test]
+    fn lanes_are_ordered_and_deduplicated() {
+        let tracer = Arc::new(Tracer::new());
+        synthetic_lane(&tracer, 9, 1);
+        synthetic_lane(&tracer, 2, 0);
+        let report = QualityReport::from_lanes(&tracer, &[(9, 1), (2, 0), (9, 1)]);
+        let seeds: Vec<u64> = report.reps.iter().map(|r| r.seed).collect();
+        assert_eq!(seeds, vec![2, 9], "reps sort by (seed, instance), deduped");
+    }
+}

@@ -218,6 +218,59 @@ impl Tracer {
         TrackScope { entered: true }
     }
 
+    /// Enter a track at **explicit** coordinates, bypassing the
+    /// arrival-order instance counter of [`enter`](Self::enter).
+    ///
+    /// This is the collection primitive behind per-request quality
+    /// reports (`obs::quality`): the scheduler owns a dedicated tracer
+    /// per `explain=true` request and wraps each repetition in a lane
+    /// whose coordinates are pure functions of the request —
+    /// `track = track_of(seed)`, `instance` = the racer index (0 for
+    /// plain repetitions). Arrival order — which thread happened to
+    /// pick the unit up first — never influences lane identity, so the
+    /// merged `(track, instance, seq)` stream is byte-identical for
+    /// any worker count. Like [`enter`](Self::enter) it is inert when
+    /// the thread already has an active track.
+    pub fn enter_lane(self: &Arc<Self>, track: u32, instance: u32) -> TrackScope {
+        let already_active = ACTIVE.with(|a| a.borrow().is_some());
+        if already_active {
+            return TrackScope { entered: false };
+        }
+        let buf = {
+            let mut inner = self.lock();
+            let slot = inner.instances.entry(track).or_insert(0);
+            *slot = (*slot).max(instance + 1);
+            inner.shelf.pop().unwrap_or_default()
+        };
+        ACTIVE.with(|a| {
+            *a.borrow_mut() = Some(TrackState {
+                tracer: self.clone(),
+                epoch: self.epoch,
+                capacity: self.capacity,
+                track,
+                instance,
+                seq: 0,
+                dropped: 0,
+                buf,
+            });
+        });
+        TrackScope { entered: true }
+    }
+
+    /// The events of one lane, in seq order — the per-repetition slice
+    /// of [`events`](Self::events) that `obs::quality` consumes.
+    pub fn lane_events(&self, track: u32, instance: u32) -> Vec<TraceEvent> {
+        let inner = self.lock();
+        let mut events: Vec<TraceEvent> = inner
+            .events
+            .iter()
+            .filter(|e| e.track == track && e.instance == instance)
+            .copied()
+            .collect();
+        events.sort_by_key(|e| e.seq);
+        events
+    }
+
     /// All recorded events, merged and sorted by `(track, instance,
     /// seq)` — the deterministic logical order (timestamps ride along).
     pub fn events(&self) -> Vec<TraceEvent> {
@@ -395,6 +448,46 @@ impl Drop for TrackScope {
     }
 }
 
+/// RAII guard for one masked region ([`mask`]): the thread's ambient
+/// track is parked for the guard's lifetime and restored on drop
+/// (including unwinds — the guard sits on the masking frame's stack).
+pub struct MaskGuard {
+    saved: Option<TrackState>,
+}
+
+impl Drop for MaskGuard {
+    fn drop(&mut self) {
+        if self.saved.is_none() {
+            return;
+        }
+        ACTIVE.with(|a| {
+            let mut borrow = a.borrow_mut();
+            debug_assert!(
+                borrow.is_none(),
+                "a masked region leaked an active track"
+            );
+            *borrow = self.saved.take();
+        });
+    }
+}
+
+/// Park the thread's ambient track until the returned guard drops:
+/// [`span`]/[`counter`] become inert and [`Tracer::enter`] starts a
+/// *fresh* track instead of nesting inertly.
+///
+/// This is the pool's invariance primitive (`util::pool`): tasks of a
+/// multi-task job are masked on **every** execution path — claimed by
+/// a background worker (no ambient track anyway), claimed by the
+/// calling thread participating as worker 0, or run inline under
+/// `threads = 1` / re-entrant submission. Which thread happens to claim
+/// a task therefore never decides whether its events exist, which is
+/// what keeps the merged logical stream worker-count-invariant.
+pub fn mask() -> MaskGuard {
+    MaskGuard {
+        saved: ACTIVE.with(|a| a.borrow_mut().take()),
+    }
+}
+
 /// RAII span guard: [`span`] emits the Begin, dropping the guard emits
 /// the matching End. Inert (a no-op on drop) when no track is active
 /// or the Begin was dropped to overflow.
@@ -546,6 +639,46 @@ mod tests {
             assert!(depth >= 0);
         }
         assert_eq!(depth, 0);
+    }
+
+    #[test]
+    fn enter_lane_pins_coordinates_and_nests_inert() {
+        let t = Arc::new(Tracer::new());
+        {
+            // Explicit coordinates land verbatim, regardless of entry
+            // order (instance 2 before instance 0).
+            let _lane = t.enter_lane(0xabc, 2);
+            let _inner = t.enter_lane(0xdef, 0); // same thread: inert
+            counter("c", &[("v", 1)]);
+        }
+        {
+            let _lane = t.enter_lane(0xabc, 0);
+            counter("c", &[("v", 2)]);
+        }
+        let events = t.events();
+        assert_eq!(events.len(), 2);
+        // Sorted order is (track, instance, seq): instance 0 first.
+        assert_eq!(events[0].instance, 0);
+        assert_eq!(events[0].args(), &[("v", 2)]);
+        assert_eq!(events[1].instance, 2);
+        assert_eq!(events[1].args(), &[("v", 1)]);
+        assert!(events.iter().all(|e| e.track == 0xabc));
+        // Lane extraction slices exactly one lane, in seq order.
+        let lane = t.lane_events(0xabc, 2);
+        assert_eq!(lane.len(), 1);
+        assert_eq!(lane[0].args(), &[("v", 1)]);
+        assert!(t.lane_events(0xabc, 1).is_empty());
+        // A later arrival-order enter() of the same track does not
+        // collide with the explicit instances.
+        {
+            let _scope = t.enter_lane(Tracer::track_of(7), 1);
+        }
+        {
+            let _scope = t.enter(7);
+            counter("c", &[("v", 3)]);
+        }
+        let lane = t.lane_events(Tracer::track_of(7), 2);
+        assert_eq!(lane.len(), 1, "enter() allocates past pinned lanes");
     }
 
     #[test]

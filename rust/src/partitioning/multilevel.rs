@@ -282,6 +282,13 @@ impl MultilevelPartitioner {
         // driver — e.g. the out-of-core path — already entered one on
         // this thread). Tracing never changes results.
         let _track = ctx.tracer().map(|t| t.enter(seed));
+        // Input dimensions, evented once per repetition: the quality
+        // report's level-0 contraction ratio needs them, and nothing
+        // else in the stream records the uncoarsened graph.
+        trace::counter(
+            "input_graph",
+            &[("n", input.n() as i64), ("m", input.m() as i64)],
+        );
 
         let mut best_blocks: Option<Vec<u32>> = None;
         let mut best_cut: Weight = Weight::MAX;
@@ -327,6 +334,21 @@ impl MultilevelPartitioner {
                     ("coarsest_m", coarsest.m() as i64),
                 ],
             );
+            // Per-level coarsening lineage (nodes/edges after each
+            // contraction) — the quality report derives contraction
+            // ratios from consecutive entries. Level i here is the
+            // graph after contraction i+1 (level 0 = first contraction
+            // of the input).
+            for (i, level) in h.levels.iter().enumerate() {
+                trace::counter(
+                    "coarsen_level",
+                    &[
+                        ("level", i as i64),
+                        ("n", level.graph.n() as i64),
+                        ("m", level.graph.m() as i64),
+                    ],
+                );
+            }
             if cycle == 0 {
                 levels_first = q;
                 coarsest_n = coarsest.n();

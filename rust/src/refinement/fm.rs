@@ -330,6 +330,15 @@ pub fn kway_fm_frozen_ws(
         }
     }
 
+    trace::counter(
+        "fm_done",
+        &[
+            ("passes", passes as i64),
+            ("initial_cut", initial_cut),
+            ("final_cut", current_cut),
+            ("moves", total_moves as i64),
+        ],
+    );
     FmResult {
         initial_cut,
         final_cut: current_cut,

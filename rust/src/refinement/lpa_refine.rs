@@ -58,6 +58,12 @@ pub fn lpa_refine_ws(
     let new_blocks = undense_blocks(&clustering.labels, &p.blocks, p.k);
     *p = Partition::from_blocks(g, p.k, new_blocks);
     let after = crate::partitioning::metrics::cut_value(g, &p.blocks);
+    // Per-pass refinement gain (both cuts are computed regardless, so
+    // this costs nothing beyond the inert-counter check).
+    trace::counter(
+        "lpa_refine_gain",
+        &[("before", before as i64), ("after", after as i64)],
+    );
     // Note: `after > before` is legitimate when the overloaded-block
     // rule fires — the paper trades cut for balance there ("at the cost
     // of the number of edges cut", §3.1) — and the repair may be only
@@ -101,6 +107,8 @@ pub fn parallel_lpa_refine(
         cluster_count[b as usize] += 1;
     }
 
+    let mut rounds = 0usize;
+    let mut converged = false;
     for round in 0..iterations {
         crate::util::cancel::checkpoint();
         let round_seed = rng.next_u64();
@@ -115,17 +123,32 @@ pub fn parallel_lpa_refine(
             RoundScratch::Workspace(ctx.workspace()),
             round_seed,
         );
+        rounds = round + 1;
         trace::counter(
             "lpa_refine_round",
             &[("round", round as i64), ("moved", applied as i64)],
         );
         if (applied as f64) < 0.05 * n as f64 {
+            converged = true;
             break;
         }
     }
+    let reason = if converged {
+        crate::obs::quality::STOP_CONVERGED
+    } else {
+        crate::obs::quality::STOP_MAX_ITERATIONS
+    };
+    trace::counter(
+        "lpa_refine_done",
+        &[("rounds", rounds as i64), ("reason", reason)],
+    );
 
     *p = Partition::from_blocks(g, k, labels);
     let after = crate::partitioning::metrics::cut_value(g, &p.blocks);
+    trace::counter(
+        "lpa_refine_gain",
+        &[("before", before as i64), ("after", after as i64)],
+    );
     (before, after)
 }
 

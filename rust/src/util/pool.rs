@@ -20,6 +20,15 @@
 //!    worker-local or time-derived source.
 //! 4. Reductions over task results happen on the caller in task-index
 //!    order.
+//! 5. Tasks of a **multi-task** job run with the ambient trace track
+//!    masked ([`crate::obs::trace::mask`]) on every path — dispatched
+//!    to a worker, claimed by the participating caller, or inline under
+//!    `threads = 1` / re-entrant submission. Whether a task's trace
+//!    events exist therefore never depends on which thread claimed it.
+//!    Single-task jobs run inline on the submitting thread for every
+//!    pool size, so they keep the submitter's track; tasks that own a
+//!    whole repetition open their *own* track (masking parks, it does
+//!    not forbid).
 //!
 //! Under this contract `threads = 1` and `threads = N` produce
 //! bit-identical results — the invariant `rust/tests/determinism.rs`
@@ -62,6 +71,7 @@
 //! and every later job — down) and re-raised on the caller after the
 //! job drains.
 
+use crate::obs::trace;
 use crate::util::cancel::{self, CancelToken, Cancelled};
 use std::cell::RefCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -285,6 +295,7 @@ impl ThreadPool {
                 // Inline jobs poll the ambient token at the same task
                 // granularity as dispatched ones (no-op when unfired).
                 cancel::checkpoint();
+                let _mask = (count > 1).then(trace::mask);
                 f(0, i);
             }
             return;
@@ -304,6 +315,7 @@ impl ThreadPool {
             // Sequential fast path: same schedule, no worker dispatch.
             for i in 0..count {
                 cancel::checkpoint();
+                let _mask = (count > 1).then(trace::mask);
                 f(0, i);
             }
             return;
@@ -456,6 +468,12 @@ fn work_on(ctrl: &JobCtrl, worker: usize, shared: &Shared) {
             // Re-enter the submitter's token ambiently so checkpoints
             // inside the task (nested pool use, inner loops) see it.
             let _scope = ctrl.cancel.clone().map(cancel::enter);
+            // Mask the ambient trace track (`obs::trace::mask`): only
+            // multi-task jobs reach dispatch, and their tasks must emit
+            // nothing no matter which thread claims them — the calling
+            // thread participates as worker 0 and *does* carry a track
+            // when a repetition fans work out from its own thread.
+            let _mask = trace::mask();
             let result = catch_unwind(AssertUnwindSafe(|| (ctrl.task)(worker, i)));
             if let Err(payload) = result {
                 if let Some(c) = payload.downcast_ref::<Cancelled>() {
@@ -674,6 +692,34 @@ mod tests {
         // The pool must still execute later jobs.
         let out = pool.map_indexed(8, |_w, i| i + 1);
         assert_eq!(out, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn multi_task_jobs_are_trace_masked_on_every_path() {
+        use crate::obs::trace::{self, Tracer};
+        // Contract rule 5: a multi-task job's tasks emit nothing no
+        // matter which thread claims them (the caller participates as
+        // worker 0 and would otherwise emit a racy subset), while a
+        // single-task job — inline on the submitter everywhere — keeps
+        // the ambient track. The streams must agree across pool sizes.
+        let mut streams = Vec::new();
+        for threads in [1usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let tracer = Arc::new(Tracer::new());
+            {
+                let _track = tracer.enter(7);
+                pool.run(1, |_w, _i| {
+                    trace::counter("solo", &[("i", 0)]);
+                });
+                pool.run(3, |_w, i| {
+                    trace::counter("fanned", &[("i", i as i64)]);
+                });
+            }
+            streams.push(tracer.logical_stream());
+        }
+        assert_eq!(streams[0], streams[1], "masking must not depend on pool size");
+        assert!(streams[0].iter().any(|l| l.contains(" C solo")));
+        assert!(streams[0].iter().all(|l| !l.contains("fanned")));
     }
 
     #[test]

@@ -296,6 +296,7 @@ fn disconnect_leaves_the_server_healthy_and_deterministic() {
             cache_entries: 0, // no cache: every response is a fresh computation
             timing: false,
             trace: None,
+            journal: None,
         },
     )
     .unwrap();

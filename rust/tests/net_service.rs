@@ -188,6 +188,7 @@ fn wire_results_are_byte_identical_to_offline_for_any_workers_and_cache_state() 
                 cache_entries,
                 timing: false,
                 trace: None,
+                journal: None,
             });
             // Two concurrent clients, interleaved: client A carries the
             // duplicate pair (same connection ⇒ deterministic cache
@@ -247,6 +248,7 @@ fn busy_backpressure_is_structured_and_deterministic() {
         cache_entries: 8,
         timing: false,
         trace: None,
+        journal: None,
     });
     // Pause the scheduler: the single queue slot fills and stays full.
     handle.pause();

@@ -17,13 +17,27 @@
 //!    balanced B/E spans, while responses stay byte-identical to the
 //!    offline rendering.
 //! 5. **Histogram bucket boundaries** are the documented log₂ bins.
+//! 6. **`explain=true` is observation-only and deterministic** — the
+//!    explained response is the plain response plus exactly one
+//!    appended field, byte-identical across worker counts {1, 4} and
+//!    across shard formats/layouts for the out-of-core backend.
+//! 7. **`--journal` records the full request lifecycle** — every line
+//!    parses, seqs strictly increase, per-id event order is coherent,
+//!    the final event is `shutdown`, and event counts reconcile with
+//!    the `!stats` counters — without changing a response byte.
+//! 8. **`!metrics` renders valid Prometheus text** — framed between
+//!    `# sclap metrics` and `# EOF` on the wire, with cumulative
+//!    histogram buckets and hostile label values escaped.
 
 use sclap::coordinator::net::{parse_response, NetClient, NetServer, NetServerConfig};
 use sclap::coordinator::queue::spec::render_result_line;
 use sclap::coordinator::service::{Aggregate, Coordinator, RunOutcome};
 use sclap::graph::csr::Graph;
-use sclap::graph::store::{write_sharded, ShardedStore};
-use sclap::obs::metrics::{bucket_index, bucket_upper_bound, Histogram};
+use sclap::graph::store::{write_sharded, write_sharded_as, ShardFormat, ShardedStore};
+use sclap::obs::journal::JournalConfig;
+use sclap::obs::metrics::{
+    bucket_index, bucket_upper_bound, escape_label_value, Histogram, MetricsRegistry,
+};
 use sclap::obs::trace::Tracer;
 use sclap::partitioning::config::{PartitionConfig, Preset};
 use sclap::util::json::{parse_json, Json};
@@ -219,6 +233,7 @@ fn stats_and_ping_reconcile_with_a_scripted_session() {
         cache_entries: 8,
         timing: false,
         trace: None,
+        journal: None,
     });
     let mut client = NetClient::connect_retry(&addr, Duration::from_secs(10)).unwrap();
     // `!ping` reports the server version and the registry's uptime.
@@ -339,6 +354,7 @@ fn serve_trace_exports_chrome_json_and_responses_stay_identical() {
         cache_entries: 8,
         timing: false,
         trace: Some(trace_path.clone()),
+        journal: None,
     });
     let mut client = NetClient::connect_retry(&addr, Duration::from_secs(10)).unwrap();
     let line = client
@@ -377,6 +393,318 @@ fn serve_trace_exports_chrome_json_and_responses_stay_identical() {
     );
     assert_eq!(other.get("dropped").and_then(Json::as_i64), Some(0));
     std::fs::remove_file(&trace_path).ok();
+}
+
+#[test]
+fn explain_reports_are_deterministic_and_observation_only() {
+    // Shard-backed fixture in both on-disk formats AND different shard
+    // counts: neither may be observable in the explain payload.
+    let g = lfr(1000);
+    let dir_v1 = temp_path("explain-v1");
+    let dir_v2 = temp_path("explain-v2");
+    write_sharded_as(&g, &dir_v1, 3, ShardFormat::V1).unwrap();
+    write_sharded_as(&g, &dir_v2, 4, ShardFormat::V2).unwrap();
+    let shard_line = |dir: &PathBuf| {
+        format!(
+            "id=x shards={} k=4 preset=CFast memory-budget=1 seeds=3 explain=true",
+            dir.display()
+        )
+    };
+    let mut per_worker = Vec::new();
+    for workers in [1usize, 4] {
+        let (handle, runner, addr) = spawn_server(NetServerConfig {
+            workers,
+            max_pending: 16,
+            cache_entries: 0,
+            timing: false,
+            trace: None,
+            journal: None,
+        });
+        let mut client = NetClient::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+        let plain = client
+            .request("id=p instance=tiny-ba k=2 preset=CFast seeds=1,2")
+            .unwrap();
+        let explained = client
+            .request("id=e instance=tiny-ba k=2 preset=CFast seeds=1,2 explain=true")
+            .unwrap();
+        let v1 = client.request(&shard_line(&dir_v1)).unwrap();
+        let v2 = client.request(&shard_line(&dir_v2)).unwrap();
+        assert_eq!(v1, v2, "workers={workers}: shard format/layout leaked into explain");
+        // explain= is observation-only: the explained response is the
+        // plain response (modulo id) with exactly one appended field.
+        let plain_as_e = plain.replacen("\"id\":\"p\"", "\"id\":\"e\"", 1);
+        let prefix = &plain_as_e[..plain_as_e.len() - 1];
+        assert!(
+            explained.starts_with(prefix) && explained.ends_with('}'),
+            "workers={workers}: explain must only append a field: {explained}"
+        );
+        assert!(
+            explained[prefix.len()..].starts_with(",\"explain\":{\"reps\":["),
+            "workers={workers}: {explained}"
+        );
+        per_worker.push((explained, v1));
+        handle.shutdown();
+        runner.join().unwrap().unwrap();
+    }
+    // The tentpole invariant: explain reports are worker-count-
+    // invariant, byte for byte, for both backends.
+    assert_eq!(per_worker[0], per_worker[1], "explain must not depend on workers");
+    // The payload is valid JSON with one rep per aggregate seed, and
+    // the shard-backed rep carries the out-of-core section.
+    let in_memory = parse_response(&per_worker[0].0).unwrap();
+    let reps = in_memory
+        .json
+        .get("explain")
+        .and_then(|e| e.get("reps"))
+        .and_then(Json::as_array)
+        .expect("explain carries a reps array");
+    let seeds: Vec<i64> = reps
+        .iter()
+        .filter_map(|r| r.get("seed").and_then(Json::as_i64))
+        .collect();
+    assert_eq!(seeds, vec![1, 2], "one rep per aggregate seed, in seed order");
+    assert!(
+        reps.iter().all(|r| {
+            r.get("cycles")
+                .and_then(Json::as_array)
+                .is_some_and(|c| !c.is_empty())
+        }),
+        "in-memory reps narrate their V-cycles"
+    );
+    let external = parse_response(&per_worker[0].1).unwrap();
+    let ext = external
+        .json
+        .get("explain")
+        .and_then(|e| e.get("reps"))
+        .and_then(Json::as_array)
+        .and_then(|arr| arr.first())
+        .and_then(|r| r.get("external"))
+        .expect("shard-backed rep carries the external section");
+    assert!(
+        ext.get("external_levels").and_then(Json::as_i64).unwrap() >= 1,
+        "budget-1 run must report external levels"
+    );
+    std::fs::remove_dir_all(&dir_v1).ok();
+    std::fs::remove_dir_all(&dir_v2).ok();
+}
+
+#[test]
+fn journal_records_the_lifecycle_and_reconciles_with_stats() {
+    let journal_path = temp_path("journal.jsonl");
+    std::fs::remove_file(&journal_path).ok();
+    let (handle, runner, addr) = spawn_server(NetServerConfig {
+        workers: 1,
+        max_pending: 1,
+        cache_entries: 8,
+        timing: false,
+        trace: None,
+        journal: Some(JournalConfig::new(&journal_path)),
+    });
+    // The same scripted session as the !stats test: "first" leads,
+    // "second" bounces off the full 1-slot queue, "firstdup" joins.
+    handle.pause();
+    let mut client = NetClient::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    client
+        .send_line("id=first instance=tiny-ba k=2 preset=CFast seeds=1")
+        .unwrap();
+    let busy = parse_response(
+        &client
+            .request("id=second instance=tiny-ba k=2 preset=CFast seeds=2")
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(busy.status, "busy");
+    client
+        .send_line("id=firstdup instance=tiny-ba k=2 preset=CFast seeds=1")
+        .unwrap();
+    handle.resume();
+    client.finish_sending().unwrap();
+    let mut lines = HashMap::new();
+    while let Some(line) = client.recv_line().unwrap() {
+        let r = parse_response(&line).unwrap();
+        lines.insert(r.id.clone().expect("request responses carry ids"), line);
+    }
+    // Journaling is observation-only: the leader's response is still
+    // byte-identical to the offline rendering.
+    let tiny_ba = Arc::new(
+        sclap::generators::instances::by_name("tiny-ba")
+            .unwrap()
+            .build(),
+    );
+    let agg = Coordinator::new(2).partition_repeated(
+        tiny_ba,
+        &PartitionConfig::preset(Preset::CFast, 2),
+        &[1],
+    );
+    assert_eq!(lines["first"], render_result_line("first", &agg, false));
+    let leader_cut = parse_response(&lines["first"]).unwrap().best_cut();
+
+    // Snapshot the live counters and the Prometheus block before
+    // shutdown, over a fresh probe connection.
+    let mut probe = NetClient::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    let stats = parse_response(&probe.request("!stats").unwrap()).unwrap();
+    assert_eq!(stats.status, "stats");
+    let counters = stats.json.get("counters").expect("counters section");
+    let counter = |name: &str| counters.get(name).and_then(Json::as_i64).unwrap_or(0);
+    // The queue-wait histogram surfaces the derived quantiles and its
+    // raw `[bucket_index, count]` pairs in !stats.
+    let wait = stats
+        .json
+        .get("histograms")
+        .and_then(|h| h.get("queue_wait_us"))
+        .expect("queue-wait histogram");
+    assert_eq!(wait.get("count").and_then(Json::as_i64), Some(1));
+    for key in ["p50", "p99"] {
+        assert!(
+            wait.get(key).and_then(Json::as_i64).is_some(),
+            "!stats histograms carry {key}"
+        );
+    }
+    let buckets = wait.get("buckets").and_then(Json::as_array).expect("buckets");
+    assert_eq!(buckets.len(), 1, "one observation, one non-empty bucket");
+    let pair = buckets[0].as_array().expect("bucket pairs are arrays");
+    assert_eq!(pair.len(), 2, "[bucket_index, count]");
+    assert_eq!(pair[1].as_i64(), Some(1));
+    // `!metrics` arrives as one framed block: sentinel first line,
+    // Prometheus text, `# EOF` terminator.
+    probe.send_line("!metrics").unwrap();
+    let mut metrics = Vec::new();
+    loop {
+        let line = probe.recv_line().unwrap().expect("unterminated metrics block");
+        let done = line == "# EOF";
+        metrics.push(line);
+        if done {
+            break;
+        }
+    }
+    assert_eq!(metrics.first().map(String::as_str), Some("# sclap metrics"));
+    assert!(
+        metrics.iter().any(|l| l == "# TYPE sclap_net_requests_total counter"),
+        "{metrics:?}"
+    );
+    assert!(
+        metrics.iter().any(|l| l.starts_with("sclap_queue_wait_us_bucket{le=")),
+        "histogram bucket series must surface on the wire"
+    );
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+
+    // Replay the journal: every line parses, seqs strictly increase,
+    // and the per-id lifecycle is ordered and complete.
+    let text = std::fs::read_to_string(&journal_path).unwrap();
+    let mut events = Vec::new();
+    let mut last_seq = -1i64;
+    for line in text.lines() {
+        let json = parse_json(line).unwrap_or_else(|e| panic!("{e}: {line}"));
+        let seq = json.get("seq").and_then(Json::as_i64).expect("seq field");
+        assert!(seq > last_seq, "seqs must strictly increase: {line}");
+        last_seq = seq;
+        assert!(json.get("ts_ms").and_then(Json::as_i64).unwrap() > 0, "{line}");
+        events.push(json);
+    }
+    let tags: Vec<(String, Option<String>)> = events
+        .iter()
+        .map(|e| {
+            (
+                e.get("event").and_then(Json::as_str).unwrap().to_string(),
+                e.get("id").and_then(Json::as_str).map(str::to_string),
+            )
+        })
+        .collect();
+    let pos = |event: &str, id: &str| {
+        tags.iter()
+            .position(|(e, i)| e == event && i.as_deref() == Some(id))
+            .unwrap_or_else(|| panic!("missing {event} for {id}: {tags:?}"))
+    };
+    assert!(pos("admitted", "first") < pos("started", "first"));
+    assert!(pos("started", "first") < pos("completed", "first"));
+    assert!(pos("admitted", "firstdup") < pos("cache_hit", "firstdup"));
+    assert!(pos("cache_hit", "firstdup") < pos("completed", "firstdup"));
+    pos("busy", "second");
+    assert_eq!(tags.last().map(|(e, _)| e.as_str()), Some("shutdown"));
+    // Event counts reconcile with the snapshotted !stats counters.
+    let count = |event: &str| tags.iter().filter(|(e, _)| e == event).count() as i64;
+    assert_eq!(count("admitted"), 2, "first and firstdup; busy is not an admission");
+    assert_eq!(count("started"), counter("requests_activated"));
+    assert_eq!(count("busy"), counter("queue_busy_rejections"));
+    assert_eq!(count("cache_hit"), counter("cache_hits") + counter("cache_joined"));
+    assert_eq!(count("completed"), 2);
+    assert_eq!(count("cancelled") + count("error"), 0);
+    // Completion events carry the outcome: cache marker and best cut.
+    let completed = |id: &str| {
+        events
+            .iter()
+            .find(|e| {
+                e.get("event").and_then(Json::as_str) == Some("completed")
+                    && e.get("id").and_then(Json::as_str) == Some(id)
+            })
+            .unwrap()
+    };
+    let lead = completed("first");
+    assert_eq!(lead.get("cached").and_then(Json::as_bool), Some(false));
+    assert_eq!(lead.get("cut").and_then(Json::as_i64), leader_cut);
+    assert!(lead.get("seconds").and_then(Json::as_f64).unwrap() >= 0.0);
+    let dup = completed("firstdup");
+    assert_eq!(dup.get("cached").and_then(Json::as_bool), Some(true));
+    assert_eq!(dup.get("cut").and_then(Json::as_i64), leader_cut);
+    // Listen-mode admissions carry their connection id.
+    let admitted = events
+        .iter()
+        .find(|e| e.get("event").and_then(Json::as_str) == Some("admitted"))
+        .unwrap();
+    assert!(admitted.get("connection").and_then(Json::as_i64).unwrap() >= 1);
+    std::fs::remove_file(&journal_path).ok();
+}
+
+#[test]
+fn prometheus_exposition_is_structured_and_escapes_hostile_labels() {
+    let registry = MetricsRegistry::new();
+    registry.counter("requests").inc();
+    registry.counter("requests").inc();
+    registry.gauge("depth").set(7);
+    let lat = registry.histogram("lat");
+    for v in [0u64, 1, 5, 5, 300] {
+        lat.observe(v);
+    }
+    // A hostile phase name: quotes, backslashes and a newline must not
+    // break the line-oriented text format.
+    const HOSTILE: &str = "lpa \"inner\"\\\n2";
+    registry.record_phase(HOSTILE, Some(3), 0.25);
+    let out = registry.render_prometheus();
+    // Line discipline survives the hostile label: every line is a TYPE
+    // comment or a sclap_-prefixed sample.
+    for line in out.lines() {
+        assert!(
+            line.starts_with("# TYPE sclap_") || line.starts_with("sclap_"),
+            "unexpected exposition line: {line:?}"
+        );
+    }
+    assert_eq!(escape_label_value(HOSTILE), "lpa \\\"inner\\\"\\\\\\n2");
+    let label = format!("phase=\"{}\",level=\"3\"", escape_label_value(HOSTILE));
+    assert!(out.contains(&format!("sclap_phase_calls_total{{{label}}} 1\n")));
+    assert!(out.contains(&format!("sclap_phase_seconds_total{{{label}}} 0.250000\n")));
+    // Counter / gauge shapes, TYPE line immediately before the sample.
+    assert!(out.contains("# TYPE sclap_requests_total counter\nsclap_requests_total 2\n"));
+    assert!(out.contains("# TYPE sclap_depth gauge\nsclap_depth 7\n"));
+    // Histogram: cumulative buckets, mandatory +Inf == _count, derived
+    // quantile gauges declared with their own TYPE lines.
+    let bucket_lines: Vec<&str> = out
+        .lines()
+        .filter(|l| l.starts_with("sclap_lat_bucket{le="))
+        .collect();
+    let counts: Vec<u64> = bucket_lines
+        .iter()
+        .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+        .collect();
+    assert!(counts.windows(2).all(|w| w[0] <= w[1]), "cumulative: {counts:?}");
+    assert_eq!(bucket_lines.last().unwrap().split('"').nth(1), Some("+Inf"));
+    assert_eq!(counts.last(), Some(&5));
+    assert!(out.contains("sclap_lat_sum 311\n"));
+    assert!(out.contains("sclap_lat_count 5\n"));
+    assert!(out.contains("# TYPE sclap_lat_p50 gauge\nsclap_lat_p50 "));
+    assert!(out.contains("# TYPE sclap_lat_p99 gauge\nsclap_lat_p99 "));
+    let type_pos = out.find("# TYPE sclap_lat histogram").unwrap();
+    assert!(type_pos < out.find("sclap_lat_bucket").unwrap());
 }
 
 #[test]

@@ -1,0 +1,194 @@
+#!/usr/bin/env python3
+"""Replay a sclap `serve --journal FILE` event journal and reconcile it.
+
+Usage:
+    journal_replay.py [--stats STATS.json] [--expect-shutdown] JOURNAL
+
+Reads JOURNAL (and ``JOURNAL.1``, the rotation predecessor, first if it
+exists) and replays the request lifecycle it records.  With ``--stats``
+pointing at a captured one-line ``!stats`` response from the same
+server run, the replayed event counts are reconciled against the live
+counters.
+
+Checks (writer documented in `rust/src/obs/journal.rs`, emission sites
+in `rust/src/coordinator/net/server.rs`):
+
+  * every line is a JSON object with integer ``seq``/``ts_ms`` and a
+    known ``event`` (admitted / started / completed / cancelled / busy /
+    cache_hit / error / shutdown), carrying that event's documented
+    fields (``id`` everywhere but shutdown; ``connection`` on listen-
+    mode admissions; ``seconds``+``cut`` on completions; ``reason`` on
+    cancellations);
+  * ``seq`` is strictly monotonic across the rotation boundary;
+  * lifecycle order per id: started / completed / cancelled / cache_hit
+    never precede an admission of that id (busy and error may — they
+    also cover refusals and parse failures that were never admitted);
+  * ``shutdown``, when present, is the final event, and every admitted
+    id has reached a terminal outcome (completed / cancelled / busy /
+    error) by then — the server journals terminals before its
+    drain-then-close shutdown line;
+  * with ``--stats``: ``started`` count == ``requests_activated``,
+    non-cached ``completed`` count == ``requests_completed``,
+    ``cancelled`` count == ``requests_cancelled``, ``cache_hit`` count
+    == ``cache_hits + cache_joined``, and ``busy`` count >=
+    ``queue_busy_rejections`` (joiners inherit their leader's refusal
+    without taking a queue slot of their own).
+
+Standard library only; exit 0 on success, 1 with a report otherwise.
+"""
+
+import json
+import os
+import sys
+
+EVENTS = {
+    "admitted",
+    "started",
+    "completed",
+    "cancelled",
+    "busy",
+    "cache_hit",
+    "error",
+    "shutdown",
+}
+TERMINAL = {"completed", "cancelled", "busy", "error"}
+NEEDS_ADMISSION = {"started", "completed", "cancelled", "cache_hit"}
+
+
+def fail(errors):
+    for line in errors:
+        print(f"FAIL: {line}")
+    print(f"{len(errors)} journal validation error(s)")
+    return 1
+
+
+def load_events(path):
+    """All journal lines, rotation predecessor first, parse errors noted."""
+    errors, events = [], []
+    files = [p for p in (path + ".1", path) if os.path.exists(p)]
+    if not files:
+        return [f"journal {path!r} does not exist"], []
+    for file in files:
+        with open(file) as f:
+            for n, raw in enumerate(f, start=1):
+                where = f"{os.path.basename(file)}:{n}"
+                line = raw.rstrip("\n")
+                try:
+                    record = json.loads(line)
+                except ValueError as e:
+                    errors.append(f"{where}: not JSON ({e}): {line!r}")
+                    continue
+                if not isinstance(record, dict):
+                    errors.append(f"{where}: not a JSON object")
+                    continue
+                events.append((where, record))
+    return errors, events
+
+
+def validate(events, stats, expect_shutdown):
+    errors = []
+    counts = {name: 0 for name in EVENTS}
+    completed_fresh = 0  # completions not served from the cache
+    admitted = {}  # id -> admissions seen
+    terminals = {}  # id -> terminal outcomes seen
+    last_seq = None
+    shutdown_at = None
+
+    for where, e in events:
+        seq, ts_ms, event = e.get("seq"), e.get("ts_ms"), e.get("event")
+        if not isinstance(seq, int):
+            errors.append(f"{where}: seq missing or not an integer")
+        elif last_seq is not None and seq <= last_seq:
+            errors.append(f"{where}: seq {seq} not above predecessor {last_seq}")
+        if isinstance(seq, int):
+            last_seq = seq
+        if not isinstance(ts_ms, int) or ts_ms <= 0:
+            errors.append(f"{where}: ts_ms missing or not a positive integer")
+        if event not in EVENTS:
+            errors.append(f"{where}: unknown event {event!r}")
+            continue
+        counts[event] += 1
+        if shutdown_at is not None:
+            errors.append(f"{where}: {event!r} after the shutdown event")
+        if event == "shutdown":
+            shutdown_at = where
+            continue
+        rid = e.get("id")
+        if not isinstance(rid, str) or not rid:
+            errors.append(f"{where}: {event} without an id")
+            continue
+        if event == "admitted":
+            admitted[rid] = admitted.get(rid, 0) + 1
+        elif event in NEEDS_ADMISSION and rid not in admitted:
+            errors.append(f"{where}: {event} for {rid!r} before any admission")
+        if event == "completed":
+            if not isinstance(e.get("seconds"), (int, float)):
+                errors.append(f"{where}: completed without numeric seconds")
+            if not isinstance(e.get("cut"), int):
+                errors.append(f"{where}: completed without an integer cut")
+            if e.get("cached") is not True:
+                completed_fresh += 1
+        if event == "cancelled" and not e.get("reason"):
+            errors.append(f"{where}: cancelled without a reason")
+        if event in TERMINAL:
+            terminals[rid] = terminals.get(rid, 0) + 1
+
+    if expect_shutdown and shutdown_at is None:
+        errors.append("no shutdown event (journal truncated?)")
+    if shutdown_at is not None:
+        for rid, n in sorted(admitted.items()):
+            if terminals.get(rid, 0) < n:
+                errors.append(
+                    f"id {rid!r}: {n} admission(s) but only "
+                    f"{terminals.get(rid, 0)} terminal outcome(s) at shutdown"
+                )
+
+    if stats is not None:
+        counters = stats.get("counters", {})
+
+        def reconcile(label, got, counter_names, exact=True):
+            want = sum(counters.get(c, 0) for c in counter_names)
+            if (got != want) if exact else (got < want):
+                op = "!=" if exact else "<"
+                errors.append(
+                    f"journal {label} count {got} {op} "
+                    f"{'+'.join(counter_names)} {want}"
+                )
+
+        reconcile("started", counts["started"], ["requests_activated"])
+        reconcile("completed (fresh)", completed_fresh, ["requests_completed"])
+        reconcile("cancelled", counts["cancelled"], ["requests_cancelled"])
+        reconcile("cache_hit", counts["cache_hit"], ["cache_hits", "cache_joined"])
+        reconcile("busy", counts["busy"], ["queue_busy_rejections"], exact=False)
+
+    if not errors:
+        summary = " ".join(
+            f"{name}={counts[name]}" for name in sorted(EVENTS) if counts[name]
+        )
+        against = " (reconciled against !stats)" if stats is not None else ""
+        print(f"ok: {len(events)} events, {len(admitted)} id(s){against}: {summary}")
+    return errors
+
+
+def main(argv):
+    args = list(argv[1:])
+    stats, expect_shutdown = None, False
+    if "--stats" in args:
+        i = args.index("--stats")
+        with open(args[i + 1]) as f:
+            stats = json.load(f)
+        if stats.get("status") != "stats":
+            raise SystemExit(f"--stats file is not a !stats response: {stats}")
+        del args[i : i + 2]
+    if "--expect-shutdown" in args:
+        expect_shutdown = True
+        args.remove("--expect-shutdown")
+    if len(args) != 1:
+        raise SystemExit(__doc__)
+    errors, events = load_events(args[0])
+    errors += validate(events, stats, expect_shutdown)
+    return fail(errors) if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

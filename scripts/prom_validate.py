@@ -1,0 +1,225 @@
+#!/usr/bin/env python3
+"""Validate a sclap `!metrics` Prometheus text-format exposition.
+
+Usage:
+    prom_validate.py [--expect-metric NAME]... [--min-samples N] [FILE]
+
+Reads the exposition from FILE (or stdin), tolerating the wire framing
+`sclap client` prints around it (a leading ``# sclap metrics`` line and
+a trailing ``# EOF`` line are stripped; JSON response lines from the
+same client stream are ignored).
+
+Checks (renderer documented in `rust/src/obs/metrics.rs`):
+
+  * every line is a comment (``# TYPE``/``# HELP``), blank, or a sample
+    ``name{labels} value`` with a legal metric name
+    (``[a-zA-Z_:][a-zA-Z0-9_:]*``), legal label names, properly escaped
+    label values (only ``\\\\``, ``\\"`` and ``\\n`` escapes) and a
+    parseable value (floats, ``+Inf``/``-Inf``/``NaN`` accepted);
+  * a ``# TYPE`` line precedes the first sample of its family, each
+    family is declared once, and no (name, labels) sample repeats;
+  * counter families end in ``_total`` and carry finite, non-negative
+    values;
+  * every histogram family has cumulative, monotone non-decreasing
+    ``_bucket`` samples ending in ``le="+Inf"``, plus ``_sum`` and
+    ``_count`` samples with ``_count`` equal to the ``+Inf`` bucket.
+
+``--expect-metric NAME`` (repeatable) requires a sample of that exact
+name; ``--min-samples N`` requires at least N samples in total.  CI
+(`obs-smoke`) scrapes a live server and pipes the block through here.
+
+Standard library only; exit 0 on success, 1 with a report otherwise.
+"""
+
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABEL_NAME_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+SAMPLE_RE = re.compile(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})?\s+(\S+)$")
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+TYPES = {"counter", "gauge", "histogram", "summary", "untyped"}
+
+
+def fail(errors):
+    for line in errors:
+        print(f"FAIL: {line}")
+    print(f"{len(errors)} metrics validation error(s)")
+    return 1
+
+
+def parse_value(text):
+    if text in ("+Inf", "-Inf", "NaN"):
+        return float(text.replace("Inf", "inf").replace("NaN", "nan"))
+    try:
+        return float(text)
+    except ValueError:
+        return None
+
+
+def unescape_ok(value):
+    """True iff every backslash starts a legal \\\\, \\" or \\n escape."""
+    i = 0
+    while i < len(value):
+        if value[i] == "\\":
+            if i + 1 >= len(value) or value[i + 1] not in ('\\', '"', "n"):
+                return False
+            i += 2
+        else:
+            i += 1
+    return True
+
+
+def family_of(name):
+    """Map a sample name to its TYPE-declared family name."""
+    for suffix in ("_bucket", "_sum", "_count"):
+        if name.endswith(suffix):
+            return name[: -len(suffix)]
+    return name
+
+
+def validate(lines, expect_metrics, min_samples):
+    errors = []
+    types = {}  # family -> declared type
+    seen_samples = set()  # (name, labels) uniqueness
+    sample_names = set()
+    samples = []  # (line_no, name, labels dict, value)
+    total = 0
+
+    for n, raw in enumerate(lines, start=1):
+        line = raw.rstrip("\n")
+        where = f"line {n}"
+        if not line.strip():
+            continue
+        if line in ("# sclap metrics", "# EOF"):
+            continue  # client wire framing
+        if line.startswith('{"'):
+            continue  # a JSON response line from the same client stream
+        if line.startswith("#"):
+            parts = line.split()
+            if len(parts) >= 2 and parts[1] == "TYPE":
+                if len(parts) != 4 or parts[3] not in TYPES:
+                    errors.append(f"{where}: malformed TYPE line: {line!r}")
+                    continue
+                family = parts[2]
+                if not NAME_RE.match(family):
+                    errors.append(f"{where}: bad family name {family!r}")
+                elif family in types:
+                    errors.append(f"{where}: family {family!r} declared twice")
+                else:
+                    types[family] = parts[3]
+            # HELP and other comments pass through unchecked
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"{where}: not a comment or sample: {line!r}")
+            continue
+        name, labels_text, value_text = m.group(1), m.group(2), m.group(3)
+        labels = {}
+        if labels_text:
+            body = labels_text[1:-1]
+            matched = LABEL_RE.findall(body)
+            rebuilt = ",".join(f'{k}="{v}"' for k, v in matched)
+            if rebuilt != body:
+                errors.append(f"{where}: malformed labels {labels_text!r}")
+                continue
+            for key, val in matched:
+                if not LABEL_NAME_RE.match(key):
+                    errors.append(f"{where}: bad label name {key!r}")
+                if not unescape_ok(val):
+                    errors.append(f"{where}: bad escape in label value {val!r}")
+                labels[key] = val
+        value = parse_value(value_text)
+        if value is None:
+            errors.append(f"{where}: unparseable value {value_text!r}")
+            continue
+        family = family_of(name)
+        if family not in types and name not in types:
+            errors.append(f"{where}: sample {name!r} precedes its TYPE line")
+        key = (name, tuple(sorted(labels.items())))
+        if key in seen_samples:
+            errors.append(f"{where}: duplicate sample {name}{labels_text or ''}")
+        seen_samples.add(key)
+        sample_names.add(name)
+        samples.append((n, name, labels, value))
+        total += 1
+        declared = types.get(name, types.get(family))
+        if declared == "counter":
+            if not name.endswith("_total"):
+                errors.append(f"{where}: counter {name!r} does not end in _total")
+            if not (value >= 0 and value != float("inf")):
+                errors.append(f"{where}: counter {name!r} value {value} invalid")
+
+    # Histogram structure: cumulative buckets ending in +Inf == _count.
+    for family, kind in sorted(types.items()):
+        if kind != "histogram":
+            continue
+        buckets = [
+            (n, labels.get("le"), value)
+            for n, name, labels, value in samples
+            if name == f"{family}_bucket"
+        ]
+        if not buckets:
+            errors.append(f"histogram {family!r} has no _bucket samples")
+            continue
+        prev = 0.0
+        for n, le, value in buckets:
+            if le is None:
+                errors.append(f"line {n}: {family}_bucket without le label")
+            if value < prev:
+                errors.append(
+                    f"line {n}: {family}_bucket le={le!r} count {value} "
+                    f"below previous bucket {prev}"
+                )
+            prev = value
+        if buckets[-1][1] != "+Inf":
+            errors.append(f"histogram {family!r} does not end in le=\"+Inf\"")
+        counts = [v for _, name, _, v in samples if name == f"{family}_count"]
+        sums = [v for _, name, _, v in samples if name == f"{family}_sum"]
+        if len(counts) != 1 or len(sums) != 1:
+            errors.append(f"histogram {family!r} needs exactly one _count and _sum")
+        elif counts[0] != buckets[-1][2]:
+            errors.append(
+                f"histogram {family!r}: _count {counts[0]} != "
+                f"+Inf bucket {buckets[-1][2]}"
+            )
+
+    for name in expect_metrics:
+        if name not in sample_names:
+            errors.append(f"expected metric {name!r} has no samples")
+    if total < min_samples:
+        errors.append(f"only {total} sample(s), expected at least {min_samples}")
+
+    if not errors:
+        histograms = sum(1 for t in types.values() if t == "histogram")
+        print(
+            f"ok: {total} samples across {len(types)} families "
+            f"({histograms} histogram(s))"
+        )
+    return errors
+
+
+def main(argv):
+    args = list(argv[1:])
+    expect_metrics, min_samples = [], 0
+    while "--expect-metric" in args:
+        i = args.index("--expect-metric")
+        expect_metrics.append(args[i + 1])
+        del args[i : i + 2]
+    if "--min-samples" in args:
+        i = args.index("--min-samples")
+        min_samples = int(args[i + 1])
+        del args[i : i + 2]
+    if len(args) > 1:
+        raise SystemExit(__doc__)
+    if args:
+        with open(args[0]) as f:
+            lines = f.readlines()
+    else:
+        lines = sys.stdin.readlines()
+    errors = validate(lines, expect_metrics, min_samples)
+    return fail(errors) if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
